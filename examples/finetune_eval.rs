@@ -1,0 +1,40 @@
+//! Pretrain -> finetune -> EM/F1 pipeline on one benchmark task —
+//! the paper's Sec. 5 recipe end to end at micro scale.
+//!
+//!     cargo run --release --example finetune_eval -- [--task squad]
+//!                [--artifact micro-altup] [--pretrain 150] [--finetune 80]
+
+use altup::coordinator::pipeline::{finetune_task, pretrain, PipelineOptions};
+use altup::data::tasks::TaskKind;
+use altup::runtime::artifact::load_named;
+use altup::runtime::client::Client;
+use altup::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let name = args.str_or("artifact", "micro-altup");
+    let kind = TaskKind::from_str(&args.str_or("task", "squad"))
+        .ok_or_else(|| anyhow::anyhow!("--task glue|superglue|squad|triviaqa"))?;
+
+    let client = Client::cpu()?;
+    let opts = PipelineOptions {
+        pretrain_steps: args.u64_or("pretrain", 150),
+        finetune_steps: args.u64_or("finetune", 80),
+        warmup: 1000,
+        verbose: true,
+        ..Default::default()
+    };
+
+    println!("== pretraining {name} for {} steps ==", opts.pretrain_steps);
+    let artifact = load_named(&name)?;
+    let (session, pre_ev, sps) = pretrain(&client, artifact, &opts)?;
+    println!("pretrain done ({sps:.2} steps/s): {}", pre_ev.summary());
+
+    println!("\n== finetuning on {} for {} steps ==", kind.name(), opts.finetune_steps);
+    let ev = finetune_task(&client, &session, kind, &opts)?;
+    println!("\n{} result: {}", kind.name(), ev.summary());
+    if kind.is_generative() {
+        println!("(EM/F1 from greedy decode over {} held-out examples)", ev.examples);
+    }
+    Ok(())
+}

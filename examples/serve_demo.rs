@@ -1,0 +1,73 @@
+//! Serving demo: the dynamic-batching inference server under a bursty
+//! multi-client load, reporting latency percentiles, throughput, and
+//! achieved batch fill — the "serving" face of the L3 coordinator.
+//!
+//!     cargo run --release --example serve_demo -- [--clients 4]
+//!                [--requests 32] [--artifact micro-altup]
+
+use altup::coordinator::server::{ServerHandle, ServerOptions};
+use altup::data::tasks::{Task, TaskKind};
+use altup::runtime::artifact::load_named;
+use altup::util::bench;
+use altup::util::cli::Args;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let name = args.str_or("artifact", "micro-altup");
+    let clients = args.usize_or("clients", 4);
+    let per_client = args.usize_or("requests", 32);
+
+    let artifact = load_named(&name)?;
+    let cfg = artifact.config;
+    println!(
+        "serving {name} (batch {} x enc {}), {clients} clients x {per_client} requests",
+        cfg.batch_size, cfg.enc_len
+    );
+
+    let server = ServerHandle::spawn(
+        &name,
+        ServerOptions { batch_window: Duration::from_millis(args.u64_or("window-ms", 10)), ..Default::default() },
+    );
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let sender = server.sender.clone();
+        let enc_len = cfg.enc_len;
+        let vocab = cfg.vocab_size;
+        handles.push(std::thread::spawn(move || {
+            let task = Task::new(TaskKind::Squad, vocab, c as u64 + 1);
+            let mut latencies = Vec::new();
+            for i in 0..per_client {
+                let ex = task.example(i as u64, enc_len - 2);
+                let (tx, rx) = std::sync::mpsc::channel();
+                sender
+                    .send(altup::coordinator::server::Request { enc_tokens: ex.enc, reply: tx })
+                    .unwrap();
+                let resp = rx.recv().unwrap();
+                latencies.push(resp.latency);
+            }
+            latencies
+        }));
+    }
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown()?;
+    let s = bench::stats_from("request latency", all);
+
+    let total = clients * per_client;
+    println!("\n=== serve_demo summary ===");
+    println!("throughput:  {:.1} req/s ({total} requests in {wall:.2}s)", total as f64 / wall);
+    println!("latency:     {}", s.report());
+    println!(
+        "batching:    {} batches, mean fill {:.2}/{}",
+        stats.batches,
+        stats.mean_fill(),
+        cfg.batch_size
+    );
+    Ok(())
+}

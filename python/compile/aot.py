@@ -1,0 +1,181 @@
+"""AOT pipeline: lower the L2 step functions to HLO *text* + meta.json.
+
+HLO text (not ``.serialize()``) is the interchange format — the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction ids;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --suite standard --out ../artifacts
+    python -m compile.aot --size micro --variant altup --k 2 --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import suite as S
+from . import train as T
+from .configs import Config, make_config
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_specs(cfg: Config):
+    f32 = jnp.float32
+    i32 = jnp.int32
+    u32 = jnp.uint32
+    b, te, td = cfg.batch_size, cfg.enc_len, cfg.dec_len
+    pspecs = sorted(M.param_specs(cfg), key=lambda s: s.name)
+    params = [jax.ShapeDtypeStruct(tuple(s.shape), f32) for s in pspecs]
+    opt = [jax.ShapeDtypeStruct(tuple(s["shape"]), f32) for s in T.opt_state_specs(cfg)]
+    scalars = [
+        jax.ShapeDtypeStruct((), f32),  # step
+        jax.ShapeDtypeStruct((), f32),  # lr
+        jax.ShapeDtypeStruct((), u32),  # dropout seed
+    ]
+    batch = [
+        jax.ShapeDtypeStruct((b, te), i32),  # enc tokens
+        jax.ShapeDtypeStruct((b, td), i32),  # dec input
+        jax.ShapeDtypeStruct((b, td), i32),  # dec targets
+    ]
+    return pspecs, params, opt, scalars, batch
+
+
+def lower_config(cfg: Config, out_dir: str, *, with_decode: bool = True,
+                 with_forward: bool = False) -> dict:
+    """Lower train/eval(/decode/forward) for one config; write artifacts."""
+    os.makedirs(out_dir, exist_ok=True)
+    pspecs, params, opt, scalars, batch = _shape_specs(cfg)
+
+    t0 = time.time()
+    artifacts: dict[str, str] = {}
+
+    train_fn = T.make_train_step(cfg)
+    lowered = jax.jit(train_fn, keep_unused=True).lower(*params, *opt, *scalars, *batch)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "train_step.hlo.txt"), "w") as f:
+        f.write(text)
+    artifacts["train_step"] = "train_step.hlo.txt"
+
+    eval_fn = T.make_eval_step(cfg)
+    lowered = jax.jit(eval_fn, keep_unused=True).lower(*params, *batch)
+    with open(os.path.join(out_dir, "eval_step.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    artifacts["eval_step"] = "eval_step.hlo.txt"
+
+    if with_decode:
+        dec_fn = T.make_decode_step(cfg)
+        lowered = jax.jit(dec_fn, keep_unused=True).lower(*params, batch[0])
+        with open(os.path.join(out_dir, "decode_step.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        artifacts["decode_step"] = "decode_step.hlo.txt"
+
+    if with_forward:
+        fwd_fn = T.make_forward(cfg)
+        lowered = jax.jit(fwd_fn, keep_unused=True).lower(*params, batch[0], batch[1])
+        with open(os.path.join(out_dir, "forward.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        artifacts["forward"] = "forward.hlo.txt"
+
+    counts = M.count_params(cfg)
+    meta = {
+        "name": cfg.name,
+        "config": cfg.to_dict(),
+        "params": [s.to_dict() for s in pspecs],
+        "opt_state": T.opt_state_specs(cfg),
+        "scalars": [
+            {"name": "step", "dtype": "f32"},
+            {"name": "lr", "dtype": "f32"},
+            {"name": "seed", "dtype": "u32"},
+        ],
+        "batch_inputs": [
+            {"name": "enc_tokens", "shape": [cfg.batch_size, cfg.enc_len], "dtype": "i32"},
+            {"name": "dec_input", "shape": [cfg.batch_size, cfg.dec_len], "dtype": "i32"},
+            {"name": "dec_targets", "shape": [cfg.batch_size, cfg.dec_len], "dtype": "i32"},
+        ],
+        "train_outputs": ["params...", "opt_state...", "loss", "correct", "ntok"],
+        "eval_outputs": ["loss_sum", "correct", "ntok"],
+        "artifacts": artifacts,
+        "param_count": counts,
+        "flops_per_token": M.flops_per_token(cfg),
+        "lowering_seconds": round(time.time() - t0, 2),
+        "jax_version": jax.__version__,
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1, sort_keys=True)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--suite", default=None, help="named suite from suite.py")
+    ap.add_argument("--size", default=None)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--k", type=int, default=2)
+    ap.add_argument("--kernels", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--moe", action="store_true")
+    ap.add_argument("--no-decode", action="store_true")
+    ap.add_argument("--forward", action="store_true")
+    args = ap.parse_args()
+
+    configs: list[Config]
+    if args.suite:
+        configs = S.suite(args.suite)
+    else:
+        assert args.size, "--size or --suite required"
+        configs = [
+            make_config(
+                args.size, args.variant, k=args.k, kernels=args.kernels, moe=args.moe
+            )
+        ]
+
+    for cfg in configs:
+        out_dir = os.path.join(args.out, cfg.name)
+        marker = os.path.join(out_dir, "meta.json")
+        cfg_hash = hashlib.sha256(cfg.to_json().encode()).hexdigest()[:16]
+        if os.path.exists(marker):
+            try:
+                with open(marker) as f:
+                    old = json.load(f)
+                old_hash = hashlib.sha256(
+                    Config.from_dict(old["config"]).to_json().encode()
+                ).hexdigest()[:16]
+                if old_hash == cfg_hash and all(
+                    os.path.exists(os.path.join(out_dir, p))
+                    for p in old.get("artifacts", {}).values()
+                ):
+                    print(f"[aot] {cfg.name}: up to date, skipping")
+                    continue
+            except Exception:
+                pass
+        print(f"[aot] lowering {cfg.name} ...", flush=True)
+        meta = lower_config(
+            cfg, out_dir,
+            with_decode=not args.no_decode,
+            with_forward=args.forward or S.wants_forward(cfg.name),
+        )
+        print(
+            f"[aot] {cfg.name}: {meta['param_count']['total']:,} params, "
+            f"{meta['lowering_seconds']}s"
+        )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,149 @@
+"""Model / variant / training configuration for the L2 JAX model.
+
+A single ``Config`` drives every paper variant. The rust coordinator
+consumes the same JSON (mirrored in ``rust/src/config``): ``aot.py``
+embeds the full config dict in each artifact's ``meta.json`` so the two
+sides can never drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+# Paper variants (Secs. 3-4, Tables 1-8).
+VARIANTS = (
+    "baseline",        # dense T5 at width d
+    "dense_wide",      # dense T5 at width K*d  (Table 4 Dense2X/4X)
+    "altup",           # Alg. 1, alternating block selection (default)
+    "sameup",          # Alg. 1, same block selection       (Table 7)
+    "sum",             # widened embedding summed into d     (Table 7)
+    "recycled",        # Recycled-AltUp (Sec. 4.1)
+    "seq_altup",       # Sequence-AltUp (Sec. 4.2, Alg. 2)
+    "stride_skip",     # stride-and-skip baseline (Fig. 3 left)
+    "avg_pool",        # average pooling baseline (Table 2)
+)
+
+
+@dataclasses.dataclass
+class Config:
+    """Everything needed to build + lower one model."""
+
+    name: str = "micro-baseline"
+    # -- architecture (T5 v1.1 style: pre-LN, gated GELU, RMSNorm) --
+    d_model: int = 64
+    d_ff: int = 128
+    num_heads: int = 4
+    d_head: int = 16
+    enc_layers: int = 2
+    dec_layers: int = 2
+    vocab_size: int = 2048
+    rel_pos_buckets: int = 32
+    rel_pos_max_dist: int = 128
+    # -- sequence geometry (static for AOT) --
+    enc_len: int = 64
+    dec_len: int = 32
+    batch_size: int = 8
+    # -- variant --
+    variant: str = "baseline"
+    k: int = 2                  # AltUp expansion factor K (or dense widening)
+    seq_stride: int = 4         # Sequence-AltUp / stride-skip / avg-pool stride
+    seq_first_layer: int = 1    # apply seq reduction to enc layers [first, L-1)
+    # -- MoE partial experts (App. C) --
+    moe: bool = False
+    moe_experts: int = 16
+    moe_hidden: int = 16
+    # -- kernels --
+    kernels: str = "jnp"        # "jnp" (fused reference) | "pallas" (L1 kernels)
+    # -- training --
+    dropout: float = 0.0
+    label_smoothing: float = 0.0
+    tie_embeddings: bool = False  # v1.1: input table shared enc/dec, head untied
+
+    def __post_init__(self) -> None:
+        self.validate()
+
+    # - helpers -------------------------------------------------------
+    def validate(self) -> None:
+        assert self.variant in VARIANTS, self.variant
+        assert self.num_heads * self.d_head > 0
+        if self.variant in ("altup", "sameup", "recycled", "sum", "dense_wide"):
+            assert self.k >= 2, "widened variants need K >= 2"
+        if self.variant in ("seq_altup", "stride_skip", "avg_pool"):
+            assert self.enc_len % self.seq_stride == 0
+        assert self.kernels in ("jnp", "pallas")
+
+    @property
+    def repr_width(self) -> int:
+        """Width of the token representation carried between layers."""
+        if self.variant in ("altup", "sameup", "recycled"):
+            return self.k * self.d_model
+        if self.variant == "dense_wide":
+            return self.k * self.d_model
+        return self.d_model
+
+    @property
+    def layer_width(self) -> int:
+        """Width of each transformer layer (d_model in the paper)."""
+        if self.variant == "dense_wide":
+            return self.k * self.d_model
+        return self.d_model
+
+    @property
+    def embed_width(self) -> int:
+        """Width of the embedding table rows."""
+        if self.variant in ("altup", "sameup", "sum", "dense_wide"):
+            return self.repr_width if self.variant != "sum" else self.k * self.d_model
+        return self.d_model  # baseline, recycled, sequence variants
+
+    @property
+    def altup_blocks(self) -> int:
+        return self.k if self.variant in ("altup", "sameup", "recycled") else 1
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict[str, Any]) -> "Config":
+        return Config(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=1, sort_keys=True)
+
+
+# Named size presets (scaled for the single-core CPU testbed; the
+# paper-scale presets exist for analytic parameter counting only).
+SIZES: dict[str, dict[str, int]] = {
+    # testbed scales
+    "micro": dict(d_model=64, d_ff=128, num_heads=4, d_head=16,
+                  enc_layers=2, dec_layers=2, vocab_size=2048,
+                  enc_len=64, dec_len=32, batch_size=8),
+    "tiny": dict(d_model=128, d_ff=256, num_heads=4, d_head=32,
+                 enc_layers=3, dec_layers=3, vocab_size=4096,
+                 enc_len=64, dec_len=32, batch_size=8),
+    "mini": dict(d_model=256, d_ff=512, num_heads=8, d_head=32,
+                 enc_layers=4, dec_layers=4, vocab_size=8192,
+                 enc_len=64, dec_len=32, batch_size=8),
+    # the paper's "S" (T5 v1.1 small, 4+4 layers): e2e example scale
+    "small": dict(d_model=512, d_ff=1024, num_heads=6, d_head=64,
+                  enc_layers=4, dec_layers=4, vocab_size=32128,
+                  enc_len=64, dec_len=32, batch_size=8),
+    # paper-scale presets — analytic counting only (Tables 3-5)
+    "base": dict(d_model=768, d_ff=2048, num_heads=12, d_head=64,
+                 enc_layers=12, dec_layers=12, vocab_size=32128,
+                 enc_len=512, dec_len=114, batch_size=256),
+    "large": dict(d_model=1024, d_ff=2816, num_heads=16, d_head=64,
+                  enc_layers=24, dec_layers=24, vocab_size=32128,
+                  enc_len=512, dec_len=114, batch_size=256),
+    "xl": dict(d_model=2048, d_ff=5120, num_heads=32, d_head=64,
+               enc_layers=24, dec_layers=24, vocab_size=32128,
+               enc_len=512, dec_len=114, batch_size=256),
+}
+
+
+def make_config(size: str, variant: str = "baseline", **overrides: Any) -> Config:
+    base = dict(SIZES[size])
+    base.update(variant=variant, name=f"{size}-{variant}")
+    base.update(overrides)
+    return Config(**base)

@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (interpret=True on CPU) and their jnp oracles."""
+
+from . import altup, attention, ffn, ref, seq_altup  # noqa: F401

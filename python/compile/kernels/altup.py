@@ -1,0 +1,190 @@
+"""Pallas kernels for the AltUp predict/compute/correct steps.
+
+Hardware adaptation (paper -> TPU -> this CPU testbed): the AltUp
+predict/correct math is pure vector work — ``O(d * K^2)`` per token, no
+matmuls large enough to engage the MXU. On a real TPU the natural
+schedule streams ``(bt, d)`` row-tiles of each of the K blocks from HBM
+into VMEM, applies the K x K scalar mixture on the VPU, and streams the
+result back; the BlockSpecs below express exactly that HBM<->VMEM
+schedule. On this testbed the kernels run under ``interpret=True``
+(Mosaic custom-calls cannot execute on the CPU PJRT plugin), so we
+validate structure + numerics here and estimate VMEM/roofline in
+``rust/src/sim`` (see DESIGN.md).
+
+All kernels operate on ``(K, T, d)`` activations where ``T`` is a
+flattened ``batch * seq`` dimension and ``K`` is the AltUp expansion
+factor (typically 2 or 4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _row_block(t: int, bt: int) -> int:
+    """Largest block size <= bt that divides t."""
+    bt = min(bt, t)
+    while t % bt != 0:
+        bt -= 1
+    return bt
+
+
+def _predict_kernel(p_ref, x_ref, o_ref, *, k: int):
+    """o[i, :, :] = sum_j p[i, j] * x[j, :, :] for one (bt, d) row tile.
+
+    VMEM footprint per grid step: (K * bt * d) in + (K * bt * d) out
+    + K*K scalars — double-buffered on TPU this is 2*(2*K*bt*d + K*K)
+    floats.
+    """
+    x = x_ref[...]  # (k, bt, d)
+    p = p_ref[...]  # (k, k)
+    # K is tiny (2 or 4): unrolled scalar-vector mixture; stays on the VPU.
+    for i in range(k):
+        acc = p[i, 0] * x[0]
+        for j in range(1, k):
+            acc = acc + p[i, j] * x[j]
+        o_ref[i, :, :] = acc
+
+
+def altup_predict(x: jax.Array, p: jax.Array, *, block_rows: int = 256) -> jax.Array:
+    """Pallas AltUp predict: x (K, T, d), p (K, K) -> (K, T, d)."""
+    k, t, d = x.shape
+    assert p.shape == (k, k), (p.shape, k)
+    bt = _row_block(t, block_rows)
+    grid = (t // bt,)
+    return pl.pallas_call(
+        functools.partial(_predict_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, k), lambda r: (0, 0)),
+            pl.BlockSpec((k, bt, d), lambda r: (0, r, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, bt, d), lambda r: (0, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, t, d), x.dtype),
+        interpret=True,
+    )(p, x)
+
+
+def _correct_kernel(g_ref, xhat_ref, xtilde_ref, o_ref, *, k: int, jstar: int):
+    """o[i] = xhat[i] + g[i] * (xtilde - xhat[jstar]) for one row tile."""
+    xhat = xhat_ref[...]  # (k, bt, d)
+    delta = xtilde_ref[...][0] - xhat[jstar]  # (bt, d)
+    g = g_ref[...]
+    for i in range(k):
+        o_ref[i, :, :] = xhat[i] + g[i] * delta
+
+
+def altup_correct(
+    xhat: jax.Array,
+    xtilde: jax.Array,
+    g: jax.Array,
+    jstar: int,
+    *,
+    block_rows: int = 256,
+) -> jax.Array:
+    """Pallas AltUp correct: xhat (K, T, d), xtilde (T, d), g (K,) -> (K, T, d).
+
+    ``jstar`` is static: block selection is a compile-time schedule
+    (alternating or same), exactly as in the paper.
+    """
+    k, t, d = xhat.shape
+    assert xtilde.shape == (t, d)
+    assert g.shape == (k,)
+    assert 0 <= jstar < k
+    bt = _row_block(t, block_rows)
+    grid = (t // bt,)
+    return pl.pallas_call(
+        functools.partial(_correct_kernel, k=k, jstar=jstar),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k,), lambda r: (0,)),
+            pl.BlockSpec((k, bt, d), lambda r: (0, r, 0)),
+            pl.BlockSpec((1, bt, d), lambda r: (0, r, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, bt, d), lambda r: (0, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, t, d), xhat.dtype),
+        interpret=True,
+    )(g, xhat, xtilde[None])
+
+
+def _predict_correct_kernel(
+    p_ref, g_ref, x_ref, xtilde_ref, o_ref, *, k: int, jstar: int
+):
+    """Fused predict+correct: one pass over the row tile.
+
+    Reads each x[j] tile once and never materializes xhat in HBM —
+    this is the §Perf-optimized form (halves HBM traffic vs running
+    predict and correct as separate kernels).
+    """
+    x = x_ref[...]  # (k, bt, d)
+    p = p_ref[...]
+    g = g_ref[...]
+    xhat_jstar = p[jstar, 0] * x[0]
+    for j in range(1, k):
+        xhat_jstar = xhat_jstar + p[jstar, j] * x[j]
+    delta = xtilde_ref[...][0] - xhat_jstar
+    for i in range(k):
+        acc = p[i, 0] * x[0]
+        for j in range(1, k):
+            acc = acc + p[i, j] * x[j]
+        o_ref[i, :, :] = acc + g[i] * delta
+
+
+def altup_predict_correct(
+    x: jax.Array,
+    xtilde: jax.Array,
+    p: jax.Array,
+    g: jax.Array,
+    jstar: int,
+    *,
+    block_rows: int = 256,
+) -> jax.Array:
+    """Fused AltUp predict+correct (given the computed block's output).
+
+    Note: the *compute* step (the transformer layer itself) happens
+    between predict and correct in Alg. 1, but only the j* prediction
+    feeds the correction, so predict-for-i!=j* commutes past the layer
+    and the two steps fuse into one kernel around it.
+    """
+    k, t, d = x.shape
+    bt = _row_block(t, block_rows)
+    grid = (t // bt,)
+    return pl.pallas_call(
+        functools.partial(_predict_correct_kernel, k=k, jstar=jstar),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, k), lambda r: (0, 0)),
+            pl.BlockSpec((k,), lambda r: (0,)),
+            pl.BlockSpec((k, bt, d), lambda r: (0, r, 0)),
+            pl.BlockSpec((1, bt, d), lambda r: (0, r, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, bt, d), lambda r: (0, r, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, t, d), x.dtype),
+        interpret=True,
+    )(p, g, x, xtilde[None])
+
+
+def _downproject_kernel(x_ref, o_ref, *, k: int):
+    x = x_ref[...]
+    acc = x[0]
+    for i in range(1, k):
+        acc = acc + x[i]
+    o_ref[...] = acc
+
+
+def recycled_downproject(x: jax.Array, *, block_rows: int = 256) -> jax.Array:
+    """Recycled-AltUp down-projection: (K, T, d) -> (T, d) block sum."""
+    k, t, d = x.shape
+    bt = _row_block(t, block_rows)
+    return pl.pallas_call(
+        functools.partial(_downproject_kernel, k=k),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((k, bt, d), lambda r: (0, r, 0))],
+        out_specs=pl.BlockSpec((bt, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,86 @@
+"""Pallas flash-style attention kernel (single head, online softmax).
+
+TPU mapping: grid over query row tiles; for each (bq, dh) query tile the
+kernel streams (bk, dh) key/value tiles through VMEM, maintaining the
+running max / normalizer / weighted accumulator of the online-softmax
+recurrence. This is the standard FlashAttention schedule re-expressed
+with BlockSpecs instead of CUDA threadblocks (DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, bk: int, tk: int, scale):
+    q = q_ref[...].astype(jnp.float32) * scale  # (bq, dh)
+    bq, dh = q.shape
+    nkb = tk // bk
+
+    def body(i, carry):
+        m, l, acc = carry
+        kblk = pl.load(k_ref, (pl.ds(i * bk, bk), slice(None))).astype(jnp.float32)
+        vblk = pl.load(v_ref, (pl.ds(i * bk, bk), slice(None))).astype(jnp.float32)
+        mblk = pl.load(mask_ref, (slice(None), pl.ds(i * bk, bk)))
+        s = q @ kblk.T + mblk  # (bq, bk)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ vblk
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nkb, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def _block(n: int, b: int) -> int:
+    b = min(b, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: jax.Array,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Single-head attention with additive mask.
+
+    q: (Tq, dh), k/v: (Tk, dh), mask: (Tq, Tk) additive. -> (Tq, dh).
+    """
+    tq, dh = q.shape
+    tk = k.shape[0]
+    assert k.shape == (tk, dh) and v.shape == (tk, dh)
+    assert mask.shape == (tq, tk)
+    bq = _block(tq, block_q)
+    bk = _block(tk, block_k)
+    scale = 1.0 / (dh ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, bk=bk, tk=tk, scale=scale),
+        grid=(tq // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, dh), lambda r: (r, 0)),
+            pl.BlockSpec((tk, dh), lambda r: (0, 0)),
+            pl.BlockSpec((tk, dh), lambda r: (0, 0)),
+            pl.BlockSpec((bq, tk), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, dh), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((tq, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, mask)

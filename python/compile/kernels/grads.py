@@ -1,0 +1,121 @@
+"""custom_vjp wrappers for the Pallas kernels.
+
+Pallas calls (like any hand-written fused kernel) do not get reverse-mode
+AD for free. Each forward kernel is paired with a backward derived from
+its pure-jnp oracle via ``jax.vjp`` — mathematically exact, and the
+oracle itself XLA-fuses on the backward pass. This is the same contract
+FlashAttention et al. use: custom forward schedule, analytically-derived
+backward.
+
+The wrappers are what ``model.py`` calls when ``cfg.kernels ==
+"pallas"``, making the full train step differentiable end-to-end through
+the L1 kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+
+from . import altup as kaltup
+from . import attention as kattn
+from . import ffn as kffn
+from . import ref as kref
+from . import seq_altup as kseq
+
+
+def _with_ref_vjp(
+    pallas_fn: Callable, ref_fn: Callable, ndiff: int, nstatic: int = 0
+) -> Callable:
+    """Pair a Pallas forward with a ref-derived backward.
+
+    Args are ``(*diff_arrays[ndiff], *static[nstatic])``; statics must be
+    hashable (they select the compiled kernel, e.g. jstar or stride).
+    """
+    if nstatic == 0:
+
+        @jax.custom_vjp
+        def wrapped(*args):
+            return pallas_fn(*args)
+
+        def fwd(*args):
+            return pallas_fn(*args), args
+
+        def bwd(residuals, ct):
+            _, vjp = jax.vjp(ref_fn, *residuals)
+            return vjp(ct)
+
+    else:
+        statics = tuple(range(ndiff, ndiff + nstatic))
+
+        @functools.partial(jax.custom_vjp, nondiff_argnums=statics)
+        def wrapped(*args):
+            return pallas_fn(*args)
+
+        def fwd(*args):
+            return pallas_fn(*args), args[:ndiff]
+
+        def bwd(*args):
+            static = args[:nstatic]
+            residuals, ct = args[nstatic], args[nstatic + 1]
+            _, vjp = jax.vjp(lambda *xs: ref_fn(*xs, *static), *residuals)
+            return vjp(ct)
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped
+
+
+def _pc_ref(x, xtilde, p, g, jstar):
+    xhat = kref.altup_predict_ref(x, p)
+    return kref.altup_correct_ref(xhat, xtilde, g, jstar)
+
+
+# (x, xtilde, p, g | jstar)
+altup_predict_correct = _with_ref_vjp(
+    lambda x, xt, p, g, jstar: kaltup.altup_predict_correct(x, xt, p, g, jstar),
+    _pc_ref,
+    ndiff=4,
+    nstatic=1,
+)
+
+# (x, p)
+altup_predict = _with_ref_vjp(
+    lambda x, p: kaltup.altup_predict(x, p), kref.altup_predict_ref, ndiff=2
+)
+
+# (x,)
+recycled_downproject = _with_ref_vjp(
+    lambda x: kaltup.recycled_downproject(x), kref.recycled_downproject_ref, ndiff=1
+)
+
+# (x, wi0, wi1, wo)
+gated_ffn = _with_ref_vjp(
+    lambda x, wi0, wi1, wo: kffn.gated_ffn(x, wi0, wi1, wo),
+    kref.gated_ffn_ref,
+    ndiff=4,
+)
+
+# (q, k, v, mask)
+flash_attention = _with_ref_vjp(
+    lambda q, k, v, mask: kattn.flash_attention(q, k, v, mask),
+    kref.attention_ref,
+    ndiff=4,
+)
+
+# (x, a1, a2 | stride)
+seq_altup_predict = _with_ref_vjp(
+    lambda x, a1, a2, stride: kseq.seq_altup_predict(x, a1, a2, stride),
+    kref.seq_altup_predict_ref,
+    ndiff=3,
+    nstatic=1,
+)
+
+# (yhat, ytilde, b | stride)
+seq_altup_correct = _with_ref_vjp(
+    lambda yhat, yt, b, stride: kseq.seq_altup_correct(yhat, yt, b, stride),
+    kref.seq_altup_correct_ref,
+    ndiff=3,
+    nstatic=1,
+)

@@ -1,0 +1,109 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: ``python/tests/test_kernels.py``
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these to float tolerance. The L2 model can also be
+configured to run entirely on these references (``kernels="jnp"``), which
+is what the latency-oriented artifacts use (interpret-mode Pallas blocks
+XLA fusion on CPU; see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def altup_predict_ref(x: jax.Array, p: jax.Array) -> jax.Array:
+    """AltUp predict step (Alg. 1, line 1).
+
+    Args:
+      x: ``(K, T, d)`` — the K sub-blocks of the widened representation
+         (T is any flattened batch*sequence dimension).
+      p: ``(K, K)`` — trainable mixing scalars ``p[i, j]``.
+
+    Returns:
+      ``(K, T, d)`` — predictions ``xhat[i] = sum_j p[i, j] * x[j]``.
+    """
+    return jnp.einsum("ij,jtd->itd", p, x)
+
+
+def altup_correct_ref(
+    xhat: jax.Array, xtilde: jax.Array, g: jax.Array, jstar: int
+) -> jax.Array:
+    """AltUp correct step (Alg. 1, line 3).
+
+    Args:
+      xhat: ``(K, T, d)`` predictions from the predict step.
+      xtilde: ``(T, d)`` the computed (layer-transformed) block ``j*``.
+      g: ``(K,)`` trainable correction gains.
+      jstar: static index of the computed block.
+
+    Returns:
+      ``(K, T, d)`` — ``xnew[i] = xhat[i] + g[i] * (xtilde - xhat[jstar])``.
+    """
+    delta = xtilde[None, :, :] - xhat[jstar][None, :, :]
+    return xhat + g[:, None, None] * delta
+
+
+def gated_ffn_ref(
+    x: jax.Array, wi0: jax.Array, wi1: jax.Array, wo: jax.Array
+) -> jax.Array:
+    """T5-v1.1 gated-GELU feed-forward block.
+
+    ``y = (gelu(x @ wi0) * (x @ wi1)) @ wo`` with x: (T, d),
+    wi0/wi1: (d, f), wo: (f, d).
+    """
+    h = jax.nn.gelu(x @ wi0, approximate=True) * (x @ wi1)
+    return h @ wo
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array | None
+) -> jax.Array:
+    """Single-head scaled dot-product attention.
+
+    q: (Tq, dh), k/v: (Tk, dh), mask: (Tq, Tk) additive (0 / -inf-ish)
+    or None. Returns (Tq, dh).
+    """
+    dh = q.shape[-1]
+    logits = (q @ k.T) / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    if mask is not None:
+        logits = logits + mask
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return w @ v
+
+
+def seq_altup_predict_ref(
+    x: jax.Array, a1: jax.Array, a2: jax.Array, stride: int
+) -> jax.Array:
+    """Sequence-AltUp predict (Alg. 2, line 1).
+
+    x: (T, d). ``yhat_i = a1 * x_i + a2 * x_{floor(i/k)*k}``.
+    """
+    t = x.shape[0]
+    anchor = (jnp.arange(t) // stride) * stride
+    return a1 * x + a2 * x[anchor]
+
+
+def seq_altup_correct_ref(
+    yhat: jax.Array, ytilde: jax.Array, b: jax.Array, stride: int
+) -> jax.Array:
+    """Sequence-AltUp correct (Alg. 2, line 3).
+
+    yhat: (T, d) predictions; ytilde: (ceil(T/k), d) outputs of the layer
+    on the strided subsequence; ``y_i = yhat_i + b * (ytilde_{i//k} -
+    yhat_{floor(i/k)*k})``.
+    """
+    t = yhat.shape[0]
+    idx = jnp.arange(t) // stride
+    anchor = idx * stride
+    return yhat + b * (ytilde[idx] - yhat[anchor])
+
+
+def recycled_downproject_ref(x: jax.Array) -> jax.Array:
+    """Recycled-AltUp output down-projection: elementwise block sum.
+
+    x: (K, T, d) -> (T, d).
+    """
+    return jnp.sum(x, axis=0)

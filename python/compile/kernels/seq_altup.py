@@ -1,0 +1,96 @@
+"""Pallas kernels for Sequence-AltUp (Alg. 2): predict/correct along the
+sequence axis with stride k.
+
+The row-tile size is forced to a multiple of the stride so every token's
+anchor ``floor(i/k)*k`` lives in the same VMEM tile — the kernel then
+needs no cross-tile gathers (the TPU-friendly layout).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile(t: int, bt: int, stride: int) -> int:
+    """Largest multiple of stride <= bt that divides t (t % stride == 0)."""
+    assert t % stride == 0, (t, stride)
+    bt = max(stride, (min(bt, t) // stride) * stride)
+    while t % bt != 0:
+        bt -= stride
+    return bt
+
+
+def _predict_kernel(ab_ref, x_ref, o_ref, *, stride: int):
+    x = x_ref[...]  # (bt, d)
+    bt, d = x.shape
+    a1 = ab_ref[0]
+    a2 = ab_ref[1]
+    # Anchor of token i within the tile: (i // stride) * stride. Realized
+    # as a reshape to (bt/stride, stride, d) and a broadcast of lane 0.
+    xg = x.reshape(bt // stride, stride, d)
+    anchors = jnp.broadcast_to(xg[:, :1, :], xg.shape).reshape(bt, d)
+    o_ref[...] = a1 * x + a2 * anchors
+
+
+def seq_altup_predict(
+    x: jax.Array, a1: jax.Array, a2: jax.Array, stride: int, *, block_rows: int = 256
+) -> jax.Array:
+    """yhat_i = a1 * x_i + a2 * x_{floor(i/stride)*stride}; x: (T, d)."""
+    t, d = x.shape
+    bt = _tile(t, block_rows, stride)
+    ab = jnp.stack([a1.astype(x.dtype), a2.astype(x.dtype)])
+    return pl.pallas_call(
+        functools.partial(_predict_kernel, stride=stride),
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda r: (0,)),
+            pl.BlockSpec((bt, d), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(ab, x)
+
+
+def _correct_kernel(b_ref, yhat_ref, ytilde_ref, o_ref, *, stride: int):
+    yhat = yhat_ref[...]  # (bt, d)
+    ytilde = ytilde_ref[...]  # (bt/stride, d)
+    bt, d = yhat.shape
+    b = b_ref[0]
+    yg = yhat.reshape(bt // stride, stride, d)
+    anchors = jnp.broadcast_to(yg[:, :1, :], yg.shape).reshape(bt, d)
+    ytile = jnp.broadcast_to(ytilde[:, None, :], yg.shape).reshape(bt, d)
+    o_ref[...] = yhat + b * (ytile - anchors)
+
+
+def seq_altup_correct(
+    yhat: jax.Array,
+    ytilde: jax.Array,
+    b: jax.Array,
+    stride: int,
+    *,
+    block_rows: int = 256,
+) -> jax.Array:
+    """y_i = yhat_i + b*(ytilde_{i//k} - yhat_{floor(i/k)*k}).
+
+    yhat: (T, d) with T % stride == 0; ytilde: (T/stride, d).
+    """
+    t, d = yhat.shape
+    assert ytilde.shape == (t // stride, d), (ytilde.shape, t, stride)
+    bt = _tile(t, block_rows, stride)
+    return pl.pallas_call(
+        functools.partial(_correct_kernel, stride=stride),
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda r: (0,)),
+            pl.BlockSpec((bt, d), lambda r: (r, 0)),
+            pl.BlockSpec((bt // stride, d), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), yhat.dtype),
+        interpret=True,
+    )(b.reshape(1).astype(yhat.dtype), yhat, ytilde)

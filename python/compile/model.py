@@ -1,0 +1,605 @@
+"""Layer-2: config-driven T5-v1.1-style encoder-decoder in JAX with every
+paper variant (baseline / dense-wide / AltUp / SameUp / Sum / Recycled /
+Sequence-AltUp / stride-and-skip / average-pooling, each optionally with
+partial-experts MoE).
+
+Parameters live in a flat ``{name: array}`` dict; the AOT pipeline
+(``aot.py``) serializes the *sorted* name order into ``meta.json`` so the
+rust coordinator can initialize/marshal buffers positionally.
+
+Widened variants carry activations as ``(K, B, T, d)`` — leading block
+axis — and run the transformer layer on one ``d``-wide block per layer
+(Alg. 1). Cross-attention wiring for widened models (underspecified in
+the paper): the decoder layer computing block ``j*`` cross-attends to the
+encoder's final representation of the *same* block ``j*``; this keeps
+every layer at width d and preserves the alternating structure
+(DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .configs import Config
+from .kernels import grads as kgrad
+from .kernels import ref as kref
+
+Params = dict[str, jax.Array]
+
+NEG = -1e9
+
+
+# ----------------------------------------------------------------------
+# Parameter spec + init
+# ----------------------------------------------------------------------
+
+class ParamSpec:
+    """Shape + init recipe for one parameter (mirrored into meta.json)."""
+
+    def __init__(self, name: str, shape: tuple[int, ...], init: str, scale: float = 1.0):
+        self.name = name
+        self.shape = shape
+        self.init = init  # "normal" | "zeros" | "ones" | "eye"
+        self.scale = scale
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "dtype": "f32",
+            "init": self.init,
+            "scale": self.scale,
+        }
+
+    def instantiate(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, jnp.float32)
+        if self.init == "ones":
+            return jnp.ones(self.shape, jnp.float32)
+        if self.init == "eye":
+            assert len(self.shape) == 2 and self.shape[0] == self.shape[1]
+            return jnp.eye(self.shape[0], dtype=jnp.float32) * self.scale
+        return jax.random.normal(key, self.shape, jnp.float32) * self.scale
+
+
+def param_specs(cfg: Config) -> list[ParamSpec]:
+    """Every parameter of the model, in declaration order."""
+    specs: list[ParamSpec] = []
+    d = cfg.layer_width
+    f = cfg.d_ff * (cfg.k if cfg.variant == "dense_wide" else 1)
+    h = cfg.num_heads
+    dh = cfg.d_head * (cfg.k if cfg.variant == "dense_wide" else 1)
+    inner = h * dh
+
+    def add(name: str, shape: tuple[int, ...], init: str = "normal", scale: float | None = None):
+        if scale is None:
+            scale = (1.0 / shape[0] ** 0.5) if init == "normal" and len(shape) >= 2 else 1.0
+        specs.append(ParamSpec(name, shape, init, scale))
+
+    # Embedding (input table shared between encoder and decoder).
+    add("embed/table", (cfg.vocab_size, cfg.embed_width), "normal", 1.0)
+    # Output head reads the final representation.
+    head_in = cfg.repr_width if cfg.variant != "sum" else cfg.d_model
+    if cfg.variant == "recycled":
+        head_in = cfg.d_model
+    add("head/w", (head_in, cfg.vocab_size))
+
+    # Relative position bias tables (shared across layers, per stack).
+    add("enc/relpos", (cfg.rel_pos_buckets, h), "normal", 0.1)
+    add("dec/relpos", (cfg.rel_pos_buckets, h), "normal", 0.1)
+
+    def layer(prefix: str, cross: bool):
+        add(f"{prefix}/ln_attn", (d,), "ones")
+        add(f"{prefix}/attn/q", (d, inner))
+        add(f"{prefix}/attn/k", (d, inner))
+        add(f"{prefix}/attn/v", (d, inner))
+        add(f"{prefix}/attn/o", (inner, d))
+        if cross:
+            add(f"{prefix}/ln_cross", (d,), "ones")
+            add(f"{prefix}/cross/q", (d, inner))
+            add(f"{prefix}/cross/k", (d, inner))
+            add(f"{prefix}/cross/v", (d, inner))
+            add(f"{prefix}/cross/o", (inner, d))
+        add(f"{prefix}/ln_ffn", (d,), "ones")
+        add(f"{prefix}/ffn/wi0", (d, f))
+        add(f"{prefix}/ffn/wi1", (d, f))
+        add(f"{prefix}/ffn/wo", (f, d))
+        if cfg.moe:
+            add(f"{prefix}/moe/router", (d, cfg.moe_experts), "normal", 2e-2)
+            add(f"{prefix}/moe/w1", (cfg.moe_experts, d, cfg.moe_hidden))
+            add(f"{prefix}/moe/w2", (cfg.moe_experts, cfg.moe_hidden, d))
+        if cfg.altup_blocks > 1:
+            add(f"{prefix}/altup/p", (cfg.k, cfg.k), "eye")
+            add(f"{prefix}/altup/g", (cfg.k,), "ones")
+        if cfg.variant == "seq_altup":
+            add(f"{prefix}/seqalt/a", (2,), "ones", 0.5)
+            add(f"{prefix}/seqalt/b", (1,), "ones")
+
+    for i in range(cfg.enc_layers):
+        layer(f"enc/l{i}", cross=False)
+    add("enc/ln_final", (d,), "ones")
+    for i in range(cfg.dec_layers):
+        layer(f"dec/l{i}", cross=True)
+    add("dec/ln_final", (d,), "ones")
+    return specs
+
+
+def init_params(cfg: Config, seed: int = 0) -> Params:
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    for spec in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        params[spec.name] = spec.instantiate(sub)
+    return params
+
+
+# ----------------------------------------------------------------------
+# Building blocks
+# ----------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _relpos_bucket(rel: jax.Array, num_buckets: int, max_dist: int, bidirectional: bool) -> jax.Array:
+    """T5 relative-position bucketing."""
+    ret = jnp.zeros_like(rel)
+    n = -rel
+    if bidirectional:
+        num_buckets //= 2
+        ret = ret + (n < 0).astype(jnp.int32) * num_buckets
+        n = jnp.abs(n)
+    else:
+        n = jnp.maximum(n, 0)
+    max_exact = num_buckets // 2
+    is_small = n < max_exact
+    val_large = max_exact + (
+        jnp.log(n.astype(jnp.float32) / max_exact + 1e-6)
+        / jnp.log(max_dist / max_exact)
+        * (num_buckets - max_exact)
+    ).astype(jnp.int32)
+    val_large = jnp.minimum(val_large, num_buckets - 1)
+    return ret + jnp.where(is_small, n, val_large)
+
+
+def relpos_bias(table: jax.Array, tq: int, tk: int, cfg: Config, bidirectional: bool) -> jax.Array:
+    """(heads, tq, tk) additive attention bias from a bucket table."""
+    rel = jnp.arange(tk)[None, :] - jnp.arange(tq)[:, None]
+    buckets = _relpos_bucket(rel, cfg.rel_pos_buckets, cfg.rel_pos_max_dist, bidirectional)
+    return jnp.transpose(table[buckets], (2, 0, 1))
+
+
+def multihead_attention(
+    params: Params,
+    prefix: str,
+    x: jax.Array,
+    mem: jax.Array,
+    mask: jax.Array,
+    cfg: Config,
+    bias: jax.Array | None,
+) -> jax.Array:
+    """x: (B, Tq, d), mem: (B, Tk, d), mask: (B, Tq, Tk) additive."""
+    b, tq, d = x.shape
+    tk = mem.shape[1]
+    h = cfg.num_heads
+    dh = (params[f"{prefix}/q"].shape[1]) // h
+    q = (x @ params[f"{prefix}/q"]).reshape(b, tq, h, dh)
+    k = (mem @ params[f"{prefix}/k"]).reshape(b, tk, h, dh)
+    v = (mem @ params[f"{prefix}/v"]).reshape(b, tk, h, dh)
+    full_mask = mask[:, None, :, :]
+    if bias is not None:
+        full_mask = full_mask + bias[None, :, :, :]
+    if cfg.kernels == "pallas":
+        qh = jnp.transpose(q, (0, 2, 1, 3))
+        kh = jnp.transpose(k, (0, 2, 1, 3))
+        vh = jnp.transpose(v, (0, 2, 1, 3))
+        m = jnp.broadcast_to(full_mask, (b, h, tq, tk))
+        out = jax.vmap(jax.vmap(kgrad.flash_attention))(qh, kh, vh, m)
+        out = jnp.transpose(out, (0, 2, 1, 3)).reshape(b, tq, h * dh)
+    else:
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+        logits = logits + full_mask
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, tq, h * dh)
+    return out @ params[f"{prefix}/o"]
+
+
+def gated_ffn(params: Params, prefix: str, x: jax.Array, cfg: Config) -> jax.Array:
+    b, t, d = x.shape
+    if cfg.kernels == "pallas":
+        y = kgrad.gated_ffn(
+            x.reshape(b * t, d),
+            params[f"{prefix}/wi0"],
+            params[f"{prefix}/wi1"],
+            params[f"{prefix}/wo"],
+        )
+        return y.reshape(b, t, d)
+    return kref.gated_ffn_ref(
+        x.reshape(b * t, d),
+        params[f"{prefix}/wi0"],
+        params[f"{prefix}/wi1"],
+        params[f"{prefix}/wo"],
+    ).reshape(b, t, d)
+
+
+def moe_partial_experts(params: Params, prefix: str, x: jax.Array) -> jax.Array:
+    """Partial-experts MoE (App. C): top-1 softmax routing to small experts.
+
+    Dense dispatch (computes every expert, masks by the routing one-hot);
+    at our expert sizes this is cheaper than gather/scatter on CPU and is
+    numerically identical to top-1 routing with probability weighting.
+    """
+    b, t, d = x.shape
+    xf = x.reshape(b * t, d)
+    logits = xf @ params[f"{prefix}/router"]  # (T, n)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top = jnp.argmax(probs, axis=-1)  # (T,)
+    onehot = jax.nn.one_hot(top, logits.shape[-1], dtype=xf.dtype)
+    gate = jnp.sum(probs * onehot, axis=-1, keepdims=True)  # p_i(x) of the top expert
+    hidden = jax.nn.relu(jnp.einsum("td,ndh->tnh", xf, params[f"{prefix}/w1"]))
+    outs = jnp.einsum("tnh,nhd->tnd", hidden, params[f"{prefix}/w2"])
+    y = jnp.einsum("tnd,tn->td", outs, onehot) * gate
+    return y.reshape(b, t, d)
+
+
+def dropout(x: jax.Array, rate: float, seed: jax.Array, salt: int) -> jax.Array:
+    if rate <= 0.0:
+        return x
+    key = jax.random.fold_in(jax.random.PRNGKey(0), seed + jnp.uint32(salt))
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+def transformer_layer(
+    params: Params,
+    prefix: str,
+    x: jax.Array,
+    self_mask: jax.Array,
+    self_bias: jax.Array | None,
+    cfg: Config,
+    seed: jax.Array,
+    salt: int,
+    mem: jax.Array | None = None,
+    cross_mask: jax.Array | None = None,
+) -> jax.Array:
+    """One pre-LN transformer layer of width d (the paper's L)."""
+    y = rms_norm(x, params[f"{prefix}/ln_attn"])
+    y = multihead_attention(params, f"{prefix}/attn", y, y, self_mask, cfg, self_bias)
+    x = x + dropout(y, cfg.dropout, seed, salt)
+    if mem is not None:
+        y = rms_norm(x, params[f"{prefix}/ln_cross"])
+        y = multihead_attention(params, f"{prefix}/cross", y, mem, cross_mask, cfg, None)
+        x = x + dropout(y, cfg.dropout, seed, salt + 1)
+    y = rms_norm(x, params[f"{prefix}/ln_ffn"])
+    out = gated_ffn(params, f"{prefix}/ffn", y, cfg)
+    if cfg.moe:
+        out = out + moe_partial_experts(params, f"{prefix}/moe", y)
+    x = x + dropout(out, cfg.dropout, seed, salt + 2)
+    return x
+
+
+# ----------------------------------------------------------------------
+# AltUp wrapping (Alg. 1)
+# ----------------------------------------------------------------------
+
+def altup_step(
+    params: Params,
+    prefix: str,
+    x: jax.Array,  # (K, B, T, d)
+    layer_fn: Callable[[jax.Array], jax.Array],
+    jstar: int,
+    cfg: Config,
+) -> jax.Array:
+    """Predict -> compute(L on block j*) -> correct."""
+    k, b, t, d = x.shape
+    p = params[f"{prefix}/altup/p"]
+    g = params[f"{prefix}/altup/g"]
+    xtilde = layer_fn(x[jstar])  # (B, T, d)
+    if cfg.kernels == "pallas":
+        flat = x.reshape(k, b * t, d)
+        out = kgrad.altup_predict_correct(flat, xtilde.reshape(b * t, d), p, g, jstar)
+        return out.reshape(k, b, t, d)
+    xhat = jnp.einsum("ij,jbtd->ibtd", p, x)
+    delta = xtilde[None] - xhat[jstar][None]
+    return xhat + g[:, None, None, None] * delta
+
+
+def select_block(layer_idx: int, cfg: Config) -> int:
+    """Paper's two deterministic schedules: alternating (default) / same."""
+    if cfg.variant == "sameup":
+        return 0
+    return layer_idx % cfg.k
+
+
+# ----------------------------------------------------------------------
+# Sequence-reduction variants (Sec. 4.2 / Table 2)
+# ----------------------------------------------------------------------
+
+def _seq_window(cfg: Config, num_layers: int, layer_idx: int) -> bool:
+    """True if sequence reduction applies at this encoder layer."""
+    return cfg.seq_first_layer <= layer_idx < num_layers - 1
+
+
+def seq_reduced_layer(
+    params: Params,
+    prefix: str,
+    x: jax.Array,
+    mask_sub: jax.Array,
+    bias_sub: jax.Array | None,
+    cfg: Config,
+    seed: jax.Array,
+    salt: int,
+) -> jax.Array:
+    """Apply L to the strided subsequence; combine per the variant."""
+    b, t, d = x.shape
+    s = cfg.seq_stride
+    xs = x[:, ::s, :]
+    layer_out = transformer_layer(
+        params, prefix, xs, mask_sub, bias_sub, cfg, seed, salt
+    )  # (B, T/s, d)
+    if cfg.variant == "stride_skip":
+        # Skipped tokens pass through unchanged (Fig. 3 left).
+        y = jnp.repeat(layer_out, s, axis=1)
+        keep = (jnp.arange(t) % s == 0)[None, :, None]
+        return jnp.where(keep, y, x)
+    # Sequence-AltUp (Alg. 2).
+    a = params[f"{prefix}/seqalt/a"]
+    bb = params[f"{prefix}/seqalt/b"]
+    if cfg.kernels == "pallas":
+        def one(xb, yb):
+            yhat = kgrad.seq_altup_predict(xb, a[0], a[1], s)
+            return kgrad.seq_altup_correct(yhat, yb, bb[0], s)
+        return jax.vmap(one)(x, layer_out)
+    anchor = (jnp.arange(t) // s) * s
+    yhat = a[0] * x + a[1] * x[:, anchor, :]
+    idx = jnp.arange(t) // s
+    return yhat + bb[0] * (layer_out[:, idx, :] - yhat[:, anchor, :])
+
+
+# ----------------------------------------------------------------------
+# Encoder / decoder stacks
+# ----------------------------------------------------------------------
+
+def _pad_mask(tokens: jax.Array) -> jax.Array:
+    """(B, T) bool: True where a real (non-pad) token sits. pad id = 0."""
+    return tokens != 0
+
+
+def _attn_mask(q_valid: jax.Array, k_valid: jax.Array, causal: bool) -> jax.Array:
+    """(B, Tq, Tk) additive mask."""
+    m = q_valid[:, :, None] & k_valid[:, None, :]
+    if causal:
+        tq = q_valid.shape[1]
+        tk = k_valid.shape[1]
+        tri = jnp.tril(jnp.ones((tq, tk), bool))
+        m = m & tri[None]
+    return jnp.where(m, 0.0, NEG).astype(jnp.float32)
+
+
+def embed(params: Params, tokens: jax.Array, cfg: Config) -> jax.Array:
+    """Token embedding, shaped per variant.
+
+    Returns (K, B, T, d) for block variants, else (B, T, width).
+    """
+    e = params["embed/table"][tokens]  # (B, T, embed_width)
+    b, t, _ = e.shape
+    if cfg.variant in ("altup", "sameup"):
+        return jnp.transpose(e.reshape(b, t, cfg.k, cfg.d_model), (2, 0, 1, 3))
+    if cfg.variant == "recycled":
+        # Recycle: replicate the d-wide lookup K times (Fig. 2).
+        return jnp.broadcast_to(e[None], (cfg.k, b, t, cfg.d_model))
+    if cfg.variant == "sum":
+        return jnp.sum(e.reshape(b, t, cfg.k, cfg.d_model), axis=2)
+    return e
+
+
+def encode(params: Params, enc_tokens: jax.Array, cfg: Config, seed: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (memory, enc_valid). memory is (K,B,T,d) or (B,T,d)."""
+    valid = _pad_mask(enc_tokens)
+    x = embed(params, enc_tokens, cfg)
+    wide = cfg.altup_blocks > 1
+    nl = cfg.enc_layers
+    if cfg.variant == "avg_pool":
+        s = cfg.seq_stride
+        b, t, d = x.shape
+        xg = x.reshape(b, t // s, s, d)
+        vg = valid.reshape(b, t // s, s)
+        cnt = jnp.maximum(jnp.sum(vg, axis=-1, keepdims=True), 1).astype(x.dtype)
+        x = jnp.sum(xg * vg[..., None], axis=2) / cnt
+        valid = jnp.any(vg, axis=-1)
+
+    t_full = x.shape[-2]
+    bias_full = relpos_bias(params["enc/relpos"], t_full, t_full, cfg, True)
+    mask_full = _attn_mask(valid, valid, causal=False)
+    if cfg.variant in ("seq_altup", "stride_skip"):
+        s = cfg.seq_stride
+        valid_sub = valid[:, ::s]
+        mask_sub = _attn_mask(valid_sub, valid_sub, causal=False)
+        ts = t_full // s
+        rel = (jnp.arange(ts)[None, :] - jnp.arange(ts)[:, None]) * s
+        buckets = _relpos_bucket(rel, cfg.rel_pos_buckets, cfg.rel_pos_max_dist, True)
+        bias_sub = jnp.transpose(params["enc/relpos"][buckets], (2, 0, 1))
+
+    for i in range(nl):
+        prefix = f"enc/l{i}"
+        if wide:
+            fn = functools.partial(
+                transformer_layer, params, prefix,
+                self_mask=mask_full, self_bias=bias_full, cfg=cfg,
+                seed=seed, salt=1000 + 10 * i,
+            )
+            x = altup_step(params, prefix, x, lambda blk: fn(blk), select_block(i, cfg), cfg)
+        elif cfg.variant in ("seq_altup", "stride_skip") and _seq_window(cfg, nl, i):
+            x = seq_reduced_layer(params, prefix, x, mask_sub, bias_sub, cfg, seed, 1000 + 10 * i)
+        else:
+            x = transformer_layer(
+                params, prefix, x, mask_full, bias_full, cfg, seed, 1000 + 10 * i
+            )
+    x = rms_norm(x, params["enc/ln_final"])
+    return x, valid
+
+
+def decode(
+    params: Params,
+    memory: jax.Array,
+    enc_valid: jax.Array,
+    dec_tokens: jax.Array,
+    cfg: Config,
+    seed: jax.Array,
+) -> jax.Array:
+    """Decoder stack -> logits (B, Td, vocab)."""
+    valid = _pad_mask(dec_tokens) | (jnp.arange(dec_tokens.shape[1]) == 0)[None]
+    x = embed(params, dec_tokens, cfg)
+    wide = cfg.altup_blocks > 1
+    td = dec_tokens.shape[1]
+    bias = relpos_bias(params["dec/relpos"], td, td, cfg, False)
+    self_mask = _attn_mask(valid, valid, causal=True)
+    cross_mask = _attn_mask(valid, enc_valid, causal=False)
+
+    for i in range(cfg.dec_layers):
+        prefix = f"dec/l{i}"
+        if wide:
+            jstar = select_block(cfg.enc_layers + i, cfg)
+            mem_blk = memory[jstar]
+            fn = functools.partial(
+                transformer_layer, params, prefix,
+                self_mask=self_mask, self_bias=bias, cfg=cfg,
+                seed=seed, salt=2000 + 10 * i,
+                mem=mem_blk, cross_mask=cross_mask,
+            )
+            x = altup_step(params, prefix, x, lambda blk: fn(blk), jstar, cfg)
+        else:
+            mem = memory
+            x = transformer_layer(
+                params, prefix, x, self_mask, bias, cfg, seed, 2000 + 10 * i,
+                mem=mem, cross_mask=cross_mask,
+            )
+    x = rms_norm(x, params["dec/ln_final"])
+
+    # Output head.
+    if wide:
+        k, b, t, d = x.shape
+        if cfg.variant == "recycled":
+            if cfg.kernels == "pallas":
+                flat = kgrad.recycled_downproject(x.reshape(k, b * t, d))
+                x = flat.reshape(b, t, d)
+            else:
+                x = jnp.sum(x, axis=0)
+        else:
+            x = jnp.transpose(x, (1, 2, 0, 3)).reshape(b, t, k * d)
+    return x @ params["head/w"]
+
+
+def forward(
+    params: Params,
+    enc_tokens: jax.Array,
+    dec_tokens: jax.Array,
+    cfg: Config,
+    seed: jax.Array | None = None,
+) -> jax.Array:
+    """Full model: token ids -> logits (B, Td, vocab)."""
+    if seed is None:
+        seed = jnp.uint32(0)
+    memory, enc_valid = encode(params, enc_tokens, cfg, seed)
+    return decode(params, memory, enc_valid, dec_tokens, cfg, seed)
+
+
+# ----------------------------------------------------------------------
+# Loss / metrics
+# ----------------------------------------------------------------------
+
+def loss_and_metrics(
+    logits: jax.Array, targets: jax.Array, label_smoothing: float = 0.0
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Cross-entropy over non-pad targets.
+
+    Returns (mean_loss, num_correct, num_tokens) — the latter two as f32
+    sums so they aggregate across batches on the rust side.
+    """
+    vocab = logits.shape[-1]
+    mask = (targets != 0).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    if label_smoothing > 0.0:
+        onehot = jax.nn.one_hot(targets, vocab)
+        soft = onehot * (1 - label_smoothing) + label_smoothing / vocab
+        nll = -jnp.sum(soft * logp, axis=-1)
+    else:
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    ntok = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / ntok
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.sum((pred == targets).astype(jnp.float32) * mask)
+    return loss, correct, jnp.sum(mask)
+
+
+# ----------------------------------------------------------------------
+# Greedy decode (for EM/F1 finetune metrics)
+# ----------------------------------------------------------------------
+
+def greedy_decode(
+    params: Params, enc_tokens: jax.Array, cfg: Config
+) -> jax.Array:
+    """Greedy autoregressive decode of cfg.dec_len tokens.
+
+    Naive full-recompute per position (no KV cache): exactly the
+    numerics of incremental decoding, acceptable at testbed scale. The
+    rust server batches requests into (B, enc_len) calls of this
+    executable.
+    """
+    b = enc_tokens.shape[0]
+    memory, enc_valid = encode(params, enc_tokens, cfg, jnp.uint32(0))
+    dec = jnp.zeros((b, cfg.dec_len), jnp.int32)  # BOS = pad id 0
+
+    def body(t, dec):
+        logits = decode(params, memory, enc_valid, dec, cfg, jnp.uint32(0))
+        nxt = jnp.argmax(logits[:, t, :], axis=-1).astype(jnp.int32)
+        return jax.lax.cond(
+            t + 1 < cfg.dec_len,
+            lambda d: jax.lax.dynamic_update_slice(d, nxt[:, None], (0, t + 1)),
+            lambda d: d,
+            dec,
+        )
+
+    dec = jax.lax.fori_loop(0, cfg.dec_len, body, dec)
+    # Shift left: position t holds the token predicted *at* t.
+    logits = decode(params, memory, enc_valid, dec, cfg, jnp.uint32(0))
+    preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return preds
+
+
+# ----------------------------------------------------------------------
+# Analytic accounting (mirrored in rust/src/model/counting.rs)
+# ----------------------------------------------------------------------
+
+def count_params(cfg: Config) -> dict[str, int]:
+    emb = 0
+    non_emb = 0
+    for spec in param_specs(cfg):
+        n = 1
+        for s in spec.shape:
+            n *= s
+        if spec.name.startswith(("embed/", "head/")):
+            emb += n
+        else:
+            non_emb += n
+    return {"embedding": emb, "non_embedding": non_emb, "total": emb + non_emb}
+
+
+def flops_per_token(cfg: Config) -> float:
+    """Rough forward FLOPs per (encoder) token — for the roofline model."""
+    d = cfg.layer_width
+    f = cfg.d_ff * (cfg.k if cfg.variant == "dense_wide" else 1)
+    inner = cfg.num_heads * cfg.d_head * (cfg.k if cfg.variant == "dense_wide" else 1)
+    n = cfg.enc_len
+    attn = 2 * (4 * d * inner) + 2 * 2 * n * inner
+    ffn = 2 * 3 * d * f
+    per_layer = attn + ffn
+    if cfg.altup_blocks > 1:
+        per_layer += 2 * d * (cfg.k * cfg.k + cfg.k)  # predict+correct vector work
+    layers = cfg.enc_layers + cfg.dec_layers
+    return per_layer * layers

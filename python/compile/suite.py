@@ -1,0 +1,92 @@
+"""Named artifact suites — the standard set `make artifacts` builds.
+
+Experiment harnesses on the rust side reference configs by name
+(`artifacts/<name>/`); this module is the single source of truth for
+which configs exist. Keep it in sync with rust/src/experiments/.
+"""
+
+from __future__ import annotations
+
+from .configs import Config, make_config
+
+# Configs whose latency we benchmark get a `forward` artifact too.
+_FORWARD = {
+    "micro-baseline", "micro-altup", "micro-altup-k4", "micro-dense2x",
+    "micro-dense4x", "micro-recycled", "micro-seqaltup", "micro-strideskip",
+    "micro-avgpool", "micro-pallas-altup", "tiny-baseline", "tiny-altup",
+    "tiny-dense2x", "mini-baseline", "mini-altup", "mini-recycled",
+    "mini-dense2x", "small-baseline", "small-altup",
+}
+
+
+def wants_forward(name: str) -> bool:
+    return name in _FORWARD
+
+
+def _quality_suite() -> list[Config]:
+    """Micro-scale configs for the quality experiments (Tables 1,2,6,7,8)."""
+    cfgs = [
+        # Table 7 / Table 1 / Fig 4 core variants at micro scale
+        make_config("micro", "baseline", name="micro-baseline"),
+        make_config("micro", "altup", k=2, name="micro-altup"),
+        make_config("micro", "altup", k=4, name="micro-altup-k4"),
+        make_config("micro", "sameup", k=2, name="micro-sameup"),
+        make_config("micro", "sum", k=2, name="micro-sum"),
+        make_config("micro", "recycled", k=2, name="micro-recycled"),
+        # Table 4 dense scaling
+        make_config("micro", "dense_wide", k=2, name="micro-dense2x"),
+        make_config("micro", "dense_wide", k=4, name="micro-dense4x"),
+        # Table 2 sequence-length reduction
+        make_config("micro", "seq_altup", name="micro-seqaltup"),
+        make_config("micro", "stride_skip", name="micro-strideskip"),
+        make_config("micro", "avg_pool", name="micro-avgpool"),
+        # Table 6 MoE synergy
+        make_config("micro", "baseline", moe=True, name="micro-moe"),
+        make_config("micro", "altup", k=2, moe=True, name="micro-altup-moe"),
+        # L1 kernels exercised end-to-end (correctness artifact)
+        make_config("micro", "altup", k=2, kernels="pallas",
+                    name="micro-pallas-altup"),
+    ]
+    return cfgs
+
+
+def _scale_suite() -> list[Config]:
+    """Larger testbed scales for Fig 4's size axis and the e2e example."""
+    return [
+        make_config("tiny", "baseline", name="tiny-baseline"),
+        make_config("tiny", "altup", k=2, name="tiny-altup"),
+        make_config("tiny", "dense_wide", k=2, name="tiny-dense2x"),
+        make_config("mini", "baseline", name="mini-baseline"),
+        make_config("mini", "altup", k=2, name="mini-altup"),
+        make_config("mini", "recycled", k=2, name="mini-recycled"),
+        make_config("mini", "dense_wide", k=2, name="mini-dense2x"),
+    ]
+
+
+def _e2e_suite() -> list[Config]:
+    """The paper's T5-small shape (~70M params) for the e2e example."""
+    return [
+        make_config("small", "baseline", name="small-baseline", dec_len=16,
+                    batch_size=4),
+        make_config("small", "altup", k=2, name="small-altup", dec_len=16,
+                    batch_size=4),
+    ]
+
+
+def suite(name: str) -> list[Config]:
+    if name == "quality":
+        return _quality_suite()
+    if name == "scale":
+        return _scale_suite()
+    if name == "e2e":
+        return _e2e_suite()
+    if name == "standard":
+        return _quality_suite() + _scale_suite()
+    if name == "all":
+        return _quality_suite() + _scale_suite() + _e2e_suite()
+    if name == "quickstart":
+        return [
+            make_config("micro", "baseline", name="micro-baseline"),
+            make_config("micro", "altup", k=2, name="micro-altup"),
+        ]
+    raise ValueError(f"unknown suite: {name}")

@@ -1,0 +1,184 @@
+"""Layer-2 training step: loss, Adafactor, and the flat-signature
+``train_step`` / ``eval_step`` functions that get AOT-lowered.
+
+Adafactor follows Shazeer & Stern (2018) as used by T5X: factored second
+moments for matrices, update clipping at RMS 1.0, parameter-RMS scaling,
+``beta2_t = 1 - t^-0.8``, no momentum. The learning-rate schedule
+(reciprocal square-root with warmup, base LR 1.0 — the paper's recipe)
+lives on the *host* (rust coordinator) and is passed in as a scalar, so
+schedule changes never require re-lowering.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .configs import Config
+
+EPS1 = 1e-30
+EPS2 = 1e-3
+CLIP = 1.0
+
+
+def _factored(shape: tuple[int, ...]) -> bool:
+    return len(shape) == 2 and min(shape) >= 8
+
+
+def opt_state_specs(cfg: Config) -> list[dict[str, Any]]:
+    """Flat opt-state slots, aligned with sorted param order."""
+    slots: list[dict[str, Any]] = []
+    for spec in sorted(M.param_specs(cfg), key=lambda s: s.name):
+        shape = tuple(spec.shape)
+        if _factored(shape):
+            slots.append({"name": f"{spec.name}@vr", "shape": [shape[0]], "dtype": "f32"})
+            slots.append({"name": f"{spec.name}@vc", "shape": [shape[1]], "dtype": "f32"})
+        else:
+            slots.append({"name": f"{spec.name}@v", "shape": list(shape), "dtype": "f32"})
+    return slots
+
+
+def init_opt_state(params: M.Params) -> dict[str, jax.Array]:
+    state: dict[str, jax.Array] = {}
+    for name in sorted(params):
+        shape = params[name].shape
+        if _factored(shape):
+            state[f"{name}@vr"] = jnp.zeros((shape[0],), jnp.float32)
+            state[f"{name}@vc"] = jnp.zeros((shape[1],), jnp.float32)
+        else:
+            state[f"{name}@v"] = jnp.zeros(shape, jnp.float32)
+    return state
+
+
+def _rms(x: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-30)
+
+
+def adafactor_update(
+    param: jax.Array,
+    grad: jax.Array,
+    state: dict[str, jax.Array],
+    name: str,
+    step: jax.Array,
+    lr: jax.Array,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """One Adafactor update; returns (new_param, new_state_slots)."""
+    beta2 = 1.0 - jnp.power(step, -0.8)
+    g2 = jnp.square(grad) + EPS1
+    if _factored(param.shape):
+        vr = beta2 * state[f"{name}@vr"] + (1 - beta2) * jnp.mean(g2, axis=1)
+        vc = beta2 * state[f"{name}@vc"] + (1 - beta2) * jnp.mean(g2, axis=0)
+        denom = jnp.maximum(jnp.mean(vr), EPS1)
+        vhat = (vr[:, None] * vc[None, :]) / denom
+        u = grad * jax.lax.rsqrt(vhat + EPS1)
+        new_state = {f"{name}@vr": vr, f"{name}@vc": vc}
+    else:
+        v = beta2 * state[f"{name}@v"] + (1 - beta2) * g2
+        u = grad * jax.lax.rsqrt(v + EPS1)
+        new_state = {f"{name}@v": v}
+    u = u / jnp.maximum(1.0, _rms(u) / CLIP)
+    scale = jnp.maximum(EPS2, _rms(param))
+    return param - lr * scale * u, new_state
+
+
+# ----------------------------------------------------------------------
+# Flat-signature step functions (AOT surface)
+# ----------------------------------------------------------------------
+
+def param_order(cfg: Config) -> list[str]:
+    return sorted(s.name for s in M.param_specs(cfg))
+
+
+def opt_order(cfg: Config) -> list[str]:
+    return [s["name"] for s in opt_state_specs(cfg)]
+
+
+def make_train_step(cfg: Config):
+    """Returns fn(*params, *opt, step, lr, seed, enc, dec_in, dec_tgt)
+    -> (*new_params, *new_opt, loss, correct, ntok)."""
+    pnames = param_order(cfg)
+    onames = opt_order(cfg)
+    np_, no_ = len(pnames), len(onames)
+
+    def train_step(*args):
+        params = dict(zip(pnames, args[:np_]))
+        opt = dict(zip(onames, args[np_:np_ + no_]))
+        step, lr, seed, enc, dec_in, dec_tgt = args[np_ + no_:]
+
+        def loss_fn(p):
+            logits = M.forward(p, enc, dec_in, cfg, seed=seed)
+            loss, correct, ntok = M.loss_and_metrics(
+                logits, dec_tgt, cfg.label_smoothing
+            )
+            return loss, (correct, ntok)
+
+        (loss, (correct, ntok)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params: dict[str, jax.Array] = {}
+        new_opt: dict[str, jax.Array] = {}
+        for name in pnames:
+            newp, slots = adafactor_update(
+                params[name], grads[name], opt, name, step, lr
+            )
+            new_params[name] = newp
+            new_opt.update(slots)
+        outs = [new_params[n] for n in pnames]
+        outs += [new_opt[n] for n in onames]
+        outs += [loss, correct, ntok]
+        return tuple(outs)
+
+    return train_step
+
+
+def make_eval_step(cfg: Config):
+    """fn(*params, enc, dec_in, dec_tgt) -> (loss_sum, correct, ntok).
+
+    Teacher-forced; sums (not means) so batches aggregate exactly.
+    """
+    pnames = param_order(cfg)
+    np_ = len(pnames)
+
+    def eval_step(*args):
+        params = dict(zip(pnames, args[:np_]))
+        enc, dec_in, dec_tgt = args[np_:]
+        logits = M.forward(params, enc, dec_in, cfg)
+        loss, correct, ntok = M.loss_and_metrics(logits, dec_tgt)
+        return (loss * ntok, correct, ntok)
+
+    return eval_step
+
+
+def make_decode_step(cfg: Config):
+    """fn(*params, enc) -> (B, dec_len) greedy token ids."""
+    pnames = param_order(cfg)
+    np_ = len(pnames)
+
+    def decode_step(*args):
+        params = dict(zip(pnames, args[:np_]))
+        (enc,) = args[np_:]
+        return (M.greedy_decode(params, enc, cfg),)
+
+    return decode_step
+
+
+def make_forward(cfg: Config):
+    """fn(*params, enc, dec_in) -> logits — latency-bench surface."""
+    pnames = param_order(cfg)
+    np_ = len(pnames)
+
+    def fwd(*args):
+        params = dict(zip(pnames, args[:np_]))
+        enc, dec_in = args[np_:]
+        return (M.forward(params, enc, dec_in, cfg),)
+
+    return fwd
+
+
+def lr_schedule(step: int, warmup: int = 10_000, base: float = 1.0) -> float:
+    """Reciprocal square-root decay with warmup (paper Sec. A).
+
+    Host-side reference implementation; the rust coordinator mirrors it.
+    """
+    return base / max(step, warmup) ** 0.5

@@ -1,0 +1,296 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/block sizes; assert_allclose against
+ref.py. This is the CORE correctness signal for the kernel layer.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import altup as kaltup
+from compile.kernels import attention as kattn
+from compile.kernels import ffn as kffn
+from compile.kernels import grads as kgrad
+from compile.kernels import ref as kref
+from compile.kernels import seq_altup as kseq
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(rng, shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+dtypes = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def _tol(dtype):
+    # bf16: the kernel accumulates the K-term mixture in bf16 (as a TPU
+    # VPU would), while the jnp oracle's einsum accumulates in f32 — the
+    # bound must cover K bf16 roundings (~0.8% each) of O(K)-magnitude
+    # sums, so use a generous 8e-2.
+    return dict(rtol=8e-2, atol=8e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.sampled_from([2, 3, 4]),
+    t=st.integers(1, 9).map(lambda x: x * 16),
+    d=st.sampled_from([8, 32, 64]),
+    bt=st.sampled_from([16, 64, 256]),
+    dtype=dtypes,
+    seed=st.integers(0, 2**16),
+)
+def test_altup_predict(k, t, d, bt, dtype, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (k, t, d), dtype)
+    p = _arr(rng, (k, k), dtype)
+    got = kaltup.altup_predict(x, p, block_rows=bt)
+    want = kref.altup_predict_ref(x, p)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.sampled_from([2, 4]),
+    t=st.integers(1, 6).map(lambda x: x * 16),
+    d=st.sampled_from([8, 64]),
+    jstar=st.integers(0, 3),
+    dtype=dtypes,
+    seed=st.integers(0, 2**16),
+)
+def test_altup_correct(k, t, d, jstar, dtype, seed):
+    jstar = jstar % k
+    rng = np.random.default_rng(seed)
+    xhat = _arr(rng, (k, t, d), dtype)
+    xtilde = _arr(rng, (t, d), dtype)
+    g = _arr(rng, (k,), dtype)
+    got = kaltup.altup_correct(xhat, xtilde, g, jstar, block_rows=32)
+    want = kref.altup_correct_ref(xhat, xtilde, g, jstar)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.sampled_from([2, 4]),
+    t=st.integers(1, 6).map(lambda x: x * 16),
+    d=st.sampled_from([16, 64]),
+    jstar=st.integers(0, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_altup_fused_predict_correct(k, t, d, jstar, seed):
+    jstar = jstar % k
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (k, t, d))
+    xtilde = _arr(rng, (t, d))
+    p = _arr(rng, (k, k))
+    g = _arr(rng, (k,))
+    got = kaltup.altup_predict_correct(x, xtilde, p, g, jstar, block_rows=48)
+    xhat = kref.altup_predict_ref(x, p)
+    want = kref.altup_correct_ref(xhat, xtilde, g, jstar)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.sampled_from([2, 3, 4]),
+    t=st.integers(1, 5).map(lambda x: x * 16),
+    d=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_recycled_downproject(k, t, d, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (k, t, d))
+    got = kaltup.recycled_downproject(x, block_rows=32)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(kref.recycled_downproject_ref(x)), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 4).map(lambda x: x * 32),
+    d=st.sampled_from([16, 48]),
+    f=st.sampled_from([64, 160]),
+    bt=st.sampled_from([16, 64]),
+    bf=st.sampled_from([32, 512]),
+    seed=st.integers(0, 2**16),
+)
+def test_gated_ffn(t, d, f, bt, bf, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (t, d))
+    wi0 = _arr(rng, (d, f), scale=0.1)
+    wi1 = _arr(rng, (d, f), scale=0.1)
+    wo = _arr(rng, (f, d), scale=0.1)
+    got = kffn.gated_ffn(x, wi0, wi1, wo, block_rows=bt, block_hidden=bf)
+    want = kref.gated_ffn_ref(x, wi0, wi1, wo)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    tq=st.sampled_from([16, 48, 64]),
+    tk=st.sampled_from([16, 64, 96]),
+    dh=st.sampled_from([8, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_attention(tq, tk, dh, causal, seed):
+    rng = np.random.default_rng(seed)
+    q = _arr(rng, (tq, dh))
+    k = _arr(rng, (tk, dh))
+    v = _arr(rng, (tk, dh))
+    if causal and tq == tk:
+        mask = np.where(np.tril(np.ones((tq, tk))) > 0, 0.0, -1e9).astype(np.float32)
+    else:
+        mask = np.where(rng.random((tq, tk)) < 0.15, -1e9, 0.0).astype(np.float32)
+        mask[:, 0] = 0.0  # at least one attendable key per row
+    mask = jnp.asarray(mask)
+    got = kattn.flash_attention(q, k, v, mask, block_q=16, block_k=16)
+    want = kref.attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(1, 6).map(lambda x: x * 16),
+    d=st.sampled_from([8, 32]),
+    stride=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_seq_altup(t, d, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (t, d))
+    a1 = jnp.float32(rng.normal())
+    a2 = jnp.float32(rng.normal())
+    b = jnp.float32(rng.normal())
+    yhat = kseq.seq_altup_predict(x, a1, a2, stride, block_rows=32)
+    np.testing.assert_allclose(
+        np.asarray(yhat),
+        np.asarray(kref.seq_altup_predict_ref(x, a1, a2, stride)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+    yt = _arr(rng, (t // stride, d))
+    got = kseq.seq_altup_correct(yhat, yt, b, stride, block_rows=32)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(kref.seq_altup_correct_ref(yhat, yt, b, stride)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------
+# custom_vjp wrappers: gradients must match the differentiated oracle
+# ---------------------------------------------------------------------
+
+def test_grad_altup_predict_correct_matches_ref():
+    rng = np.random.default_rng(0)
+    k, t, d, jstar = 4, 32, 16, 2
+    x = _arr(rng, (k, t, d))
+    xt = _arr(rng, (t, d))
+    p = _arr(rng, (k, k))
+    g = _arr(rng, (k,))
+
+    def f_pal(x, xt, p, g):
+        return jnp.sum(jnp.sin(kgrad.altup_predict_correct(x, xt, p, g, jstar)))
+
+    def f_ref(x, xt, p, g):
+        xhat = kref.altup_predict_ref(x, p)
+        return jnp.sum(jnp.sin(kref.altup_correct_ref(xhat, xt, g, jstar)))
+
+    gp = jax.grad(f_pal, argnums=(0, 1, 2, 3))(x, xt, p, g)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2, 3))(x, xt, p, g)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_grad_ffn_matches_ref():
+    rng = np.random.default_rng(1)
+    t, d, f = 32, 16, 64
+    x, wi0, wi1, wo = (
+        _arr(rng, (t, d)),
+        _arr(rng, (d, f), scale=0.1),
+        _arr(rng, (d, f), scale=0.1),
+        _arr(rng, (f, d), scale=0.1),
+    )
+    gp = jax.grad(lambda *a: jnp.sum(jnp.tanh(kgrad.gated_ffn(*a))), argnums=(0, 1, 2, 3))(
+        x, wi0, wi1, wo
+    )
+    gr = jax.grad(
+        lambda *a: jnp.sum(jnp.tanh(kref.gated_ffn_ref(*a))), argnums=(0, 1, 2, 3)
+    )(x, wi0, wi1, wo)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+def test_grad_attention_matches_ref():
+    rng = np.random.default_rng(2)
+    tq, tk, dh = 16, 32, 8
+    q, k, v = _arr(rng, (tq, dh)), _arr(rng, (tk, dh)), _arr(rng, (tk, dh))
+    mask = jnp.zeros((tq, tk), jnp.float32)
+    gp = jax.grad(lambda *a: jnp.sum(jnp.tanh(kgrad.flash_attention(*a, mask))), argnums=(0, 1, 2))(
+        q, k, v
+    )
+    gr = jax.grad(
+        lambda *a: jnp.sum(jnp.tanh(kref.attention_ref(*a, mask))), argnums=(0, 1, 2)
+    )(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------
+# Kernel edge cases
+# ---------------------------------------------------------------------
+
+def test_predict_identity_mixing_is_identity():
+    """p = I must reproduce the input exactly (paper init)."""
+    rng = np.random.default_rng(3)
+    x = _arr(rng, (4, 32, 16))
+    got = kaltup.altup_predict(x, jnp.eye(4))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x), rtol=0, atol=0)
+
+
+def test_correct_zero_gain_keeps_prediction():
+    rng = np.random.default_rng(4)
+    xhat = _arr(rng, (2, 16, 8))
+    xt = _arr(rng, (16, 8))
+    got = kaltup.altup_correct(xhat, xt, jnp.zeros(2), 0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(xhat), rtol=0, atol=0)
+
+
+def test_correct_unit_gain_computed_block_gets_layer_output():
+    """With g[j*]=1 the computed block becomes exactly L(x_j*)."""
+    rng = np.random.default_rng(5)
+    k, t, d, jstar = 3, 16, 8, 1
+    xhat = _arr(rng, (k, t, d))
+    xt = _arr(rng, (t, d))
+    g = jnp.ones(k)
+    got = kaltup.altup_correct(xhat, xt, g, jstar)
+    np.testing.assert_allclose(np.asarray(got[jstar]), np.asarray(xt), rtol=1e-6, atol=1e-6)
+
+
+def test_seq_altup_stride_1_predict_is_affine():
+    """stride=1: every token is its own anchor -> yhat = (a1+a2) x."""
+    rng = np.random.default_rng(6)
+    x = _arr(rng, (16, 8))
+    got = kseq.seq_altup_predict(x, jnp.float32(0.3), jnp.float32(0.5), 1)
+    np.testing.assert_allclose(np.asarray(got), 0.8 * np.asarray(x), rtol=1e-5, atol=1e-6)
+
+
+def test_attention_fully_masked_rows_are_finite():
+    rng = np.random.default_rng(7)
+    q, k, v = _arr(rng, (8, 8)), _arr(rng, (16, 8)), _arr(rng, (16, 8))
+    mask = jnp.full((8, 16), -1e9, jnp.float32)
+    got = kattn.flash_attention(q, k, v, mask, block_q=8, block_k=8)
+    assert np.isfinite(np.asarray(got)).all()

@@ -1,0 +1,262 @@
+"""L2 model correctness: shapes, variant semantics, analytic counts."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import train as T
+from compile.configs import Config, make_config, SIZES, VARIANTS
+
+RNG = np.random.default_rng(0)
+
+
+def toks(b, t, v, rng=RNG):
+    return jnp.asarray(rng.integers(1, v, size=(b, t)), jnp.int32)
+
+
+def small_cfg(variant, **kw):
+    return make_config("micro", variant, enc_len=16, dec_len=8, batch_size=2, **kw)
+
+
+ALL = [
+    ("baseline", {}),
+    ("altup", {"k": 2}),
+    ("altup", {"k": 4}),
+    ("sameup", {"k": 2}),
+    ("sum", {"k": 2}),
+    ("recycled", {"k": 2}),
+    ("dense_wide", {"k": 2}),
+    ("seq_altup", {}),
+    ("stride_skip", {}),
+    ("avg_pool", {}),
+    ("baseline", {"moe": True}),
+    ("altup", {"k": 2, "moe": True}),
+]
+
+
+@pytest.mark.parametrize("variant,kw", ALL)
+def test_forward_shapes_and_finite(variant, kw):
+    cfg = small_cfg(variant, **kw)
+    params = M.init_params(cfg, 0)
+    logits = M.forward(params, toks(2, 16, cfg.vocab_size), toks(2, 8, cfg.vocab_size), cfg)
+    assert logits.shape == (2, 8, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("variant,kw", ALL)
+def test_param_specs_match_init(variant, kw):
+    cfg = small_cfg(variant, **kw)
+    params = M.init_params(cfg, 0)
+    specs = {s.name: tuple(s.shape) for s in M.param_specs(cfg)}
+    assert set(specs) == set(params)
+    for name, shape in specs.items():
+        assert params[name].shape == shape, name
+
+
+def test_padding_invariance():
+    """Extending the encoder input with pad tokens must not change logits."""
+    cfg = small_cfg("altup")
+    params = M.init_params(cfg, 0)
+    enc = np.asarray(toks(2, 16, cfg.vocab_size))
+    enc_padded = enc.copy()
+    enc_padded[:, 10:] = 0
+    dec = toks(2, 8, cfg.vocab_size)
+    l1 = M.forward(params, jnp.asarray(enc_padded), dec, cfg)
+    # Same content in a physically identical buffer -> identical
+    l2 = M.forward(params, jnp.asarray(enc_padded.copy()), dec, cfg)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=0, atol=0)
+
+
+def test_decoder_causality():
+    """Changing a later decoder token must not affect earlier logits."""
+    cfg = small_cfg("baseline")
+    params = M.init_params(cfg, 0)
+    enc = toks(2, 16, cfg.vocab_size)
+    dec = np.asarray(toks(2, 8, cfg.vocab_size))
+    l1 = M.forward(params, enc, jnp.asarray(dec), cfg)
+    dec2 = dec.copy()
+    dec2[:, 5:] = (dec2[:, 5:] % (cfg.vocab_size - 1)) + 1
+    l2 = M.forward(params, enc, jnp.asarray(dec2), cfg)
+    np.testing.assert_allclose(
+        np.asarray(l1)[:, :5], np.asarray(l2)[:, :5], rtol=1e-5, atol=1e-5
+    )
+    assert np.abs(np.asarray(l1)[:, 5:] - np.asarray(l2)[:, 5:]).max() > 1e-4
+
+
+def test_altup_causality():
+    cfg = small_cfg("altup")
+    params = M.init_params(cfg, 0)
+    enc = toks(2, 16, cfg.vocab_size)
+    dec = np.asarray(toks(2, 8, cfg.vocab_size))
+    l1 = M.forward(params, enc, jnp.asarray(dec), cfg)
+    dec2 = dec.copy()
+    dec2[:, -1] = (dec2[:, -1] % (cfg.vocab_size - 1)) + 1
+    l2 = M.forward(params, enc, jnp.asarray(dec2), cfg)
+    np.testing.assert_allclose(
+        np.asarray(l1)[:, :-1], np.asarray(l2)[:, :-1], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_recycled_embeds_replicated():
+    cfg = small_cfg("recycled")
+    params = M.init_params(cfg, 0)
+    e = M.embed(params, toks(2, 16, cfg.vocab_size), cfg)
+    assert e.shape == (cfg.k, 2, 16, cfg.d_model)
+    np.testing.assert_allclose(np.asarray(e[0]), np.asarray(e[1]), rtol=0, atol=0)
+
+
+def test_recycled_adds_virtually_no_params():
+    base = M.count_params(small_cfg("baseline"))
+    rec = M.count_params(small_cfg("recycled"))
+    # only the K^2+K scalars per layer
+    cfg = small_cfg("recycled")
+    layers = cfg.enc_layers + cfg.dec_layers
+    assert rec["total"] - base["total"] == layers * (cfg.k**2 + cfg.k)
+
+
+def test_altup_param_overhead_matches_paper_formula():
+    """AltUp adds (K-1)*|V|*d embedding params + K^2+K scalars/layer
+    + the widened output head."""
+    cfg = small_cfg("altup")
+    base = small_cfg("baseline")
+    pa = M.count_params(cfg)
+    pb = M.count_params(base)
+    layers = cfg.enc_layers + cfg.dec_layers
+    emb_extra = (cfg.k - 1) * cfg.vocab_size * cfg.d_model  # input table
+    head_extra = (cfg.k - 1) * cfg.d_model * cfg.vocab_size  # output head
+    assert pa["embedding"] - pb["embedding"] == emb_extra + head_extra
+    assert pa["non_embedding"] - pb["non_embedding"] == layers * (cfg.k**2 + cfg.k)
+
+
+def test_sum_variant_only_widens_embedding():
+    pa = M.count_params(small_cfg("sum"))
+    pb = M.count_params(small_cfg("baseline"))
+    cfg = small_cfg("sum")
+    assert pa["non_embedding"] == pb["non_embedding"]
+    assert pa["embedding"] - pb["embedding"] == (cfg.k - 1) * cfg.vocab_size * cfg.d_model
+
+
+def test_altup_init_is_identity_schedule():
+    """At init (p=I, g=1) the computed block equals L(x_j*) exactly."""
+    cfg = small_cfg("altup")
+    params = M.init_params(cfg, 0)
+    k, b, t, d = cfg.k, 2, 4, cfg.d_model
+    x = jnp.asarray(RNG.normal(size=(k, b, t, d)), jnp.float32)
+    layer_out = jnp.asarray(RNG.normal(size=(b, t, d)), jnp.float32)
+    got = M.altup_step(params, "enc/l0", x, lambda blk: layer_out, 1, cfg)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(layer_out), rtol=1e-6, atol=1e-6)
+    # non-computed blocks get x_i + (L(x_1) - x_1)
+    want0 = x[0] + (layer_out - x[1])
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want0), rtol=1e-5, atol=1e-5)
+
+
+def test_block_selection_schedules():
+    cfg_alt = small_cfg("altup", k=2)
+    assert [M.select_block(i, cfg_alt) for i in range(4)] == [0, 1, 0, 1]
+    cfg_same = small_cfg("sameup", k=2)
+    assert [M.select_block(i, cfg_same) for i in range(4)] == [0, 0, 0, 0]
+    cfg4 = small_cfg("altup", k=4)
+    assert [M.select_block(i, cfg4) for i in range(6)] == [0, 1, 2, 3, 0, 1]
+
+
+def test_loss_ignores_padding():
+    cfg = small_cfg("baseline")
+    params = M.init_params(cfg, 0)
+    enc = toks(2, 16, cfg.vocab_size)
+    dec = np.asarray(toks(2, 8, cfg.vocab_size))
+    logits = M.forward(params, enc, jnp.asarray(dec), cfg)
+    tgt = dec.copy()
+    tgt[:, 6:] = 0
+    l1, c1, n1 = M.loss_and_metrics(logits, jnp.asarray(tgt))
+    assert float(n1) == 2 * 6
+    # scaling logits at padded positions must not change the loss
+    logits2 = np.asarray(logits).copy()
+    logits2[:, 6:] *= 3.0
+    l2, _, _ = M.loss_and_metrics(jnp.asarray(logits2), jnp.asarray(tgt))
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_greedy_decode_shape_and_determinism():
+    cfg = small_cfg("altup")
+    params = M.init_params(cfg, 0)
+    enc = toks(2, 16, cfg.vocab_size)
+    out1 = M.greedy_decode(params, enc, cfg)
+    out2 = M.greedy_decode(params, enc, cfg)
+    assert out1.shape == (2, cfg.dec_len)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_avg_pool_reduces_memory_length():
+    cfg = small_cfg("avg_pool")
+    params = M.init_params(cfg, 0)
+    mem, valid = M.encode(params, toks(2, 16, cfg.vocab_size), cfg, jnp.uint32(0))
+    assert mem.shape == (2, 16 // cfg.seq_stride, cfg.d_model)
+    assert valid.shape == (2, 16 // cfg.seq_stride)
+
+
+def test_seq_variants_preserve_length():
+    for v in ("seq_altup", "stride_skip"):
+        cfg = small_cfg(v)
+        params = M.init_params(cfg, 0)
+        mem, valid = M.encode(params, toks(2, 16, cfg.vocab_size), cfg, jnp.uint32(0))
+        assert mem.shape == (2, 16, cfg.d_model), v
+
+
+def test_stride_skip_identity_on_skipped_tokens_single_layer():
+    """In the reduced window, non-anchor tokens pass through unchanged
+    (Fig. 3 left) — check at the level of one seq_reduced_layer call."""
+    cfg = small_cfg("stride_skip")
+    params = M.init_params(cfg, 0)
+    b, t, d, s = 2, 16, cfg.d_model, cfg.seq_stride
+    x = jnp.asarray(RNG.normal(size=(b, t, d)), jnp.float32)
+    valid = jnp.ones((b, t // s), bool)
+    mask_sub = M._attn_mask(valid, valid, causal=False)
+    y = M.seq_reduced_layer(params, "enc/l1", x, mask_sub, None, cfg, jnp.uint32(0), 0)
+    keep = np.arange(t) % s != 0
+    np.testing.assert_allclose(
+        np.asarray(y)[:, keep], np.asarray(x)[:, keep], rtol=0, atol=0
+    )
+    assert np.abs(np.asarray(y)[:, ~keep] - np.asarray(x)[:, ~keep]).max() > 1e-4
+
+
+def test_dropout_zero_is_deterministic():
+    cfg = small_cfg("altup", dropout=0.0)
+    params = M.init_params(cfg, 0)
+    enc, dec = toks(2, 16, cfg.vocab_size), toks(2, 8, cfg.vocab_size)
+    l1 = M.forward(params, enc, dec, cfg, seed=jnp.uint32(1))
+    l2 = M.forward(params, enc, dec, cfg, seed=jnp.uint32(2))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=0, atol=0)
+
+
+def test_dropout_seed_changes_output():
+    cfg = small_cfg("baseline", dropout=0.5)
+    params = M.init_params(cfg, 0)
+    enc, dec = toks(2, 16, cfg.vocab_size), toks(2, 8, cfg.vocab_size)
+    l1 = M.forward(params, enc, dec, cfg, seed=jnp.uint32(1))
+    l2 = M.forward(params, enc, dec, cfg, seed=jnp.uint32(2))
+    assert np.abs(np.asarray(l1) - np.asarray(l2)).max() > 1e-3
+
+
+def test_moe_adds_capacity_params():
+    pa = M.count_params(small_cfg("baseline", moe=True))
+    pb = M.count_params(small_cfg("baseline"))
+    cfg = small_cfg("baseline", moe=True)
+    layers = cfg.enc_layers + cfg.dec_layers
+    per_layer = (
+        cfg.d_model * cfg.moe_experts
+        + cfg.moe_experts * cfg.d_model * cfg.moe_hidden * 2
+    )
+    assert pa["total"] - pb["total"] == layers * per_layer
+
+
+def test_flops_ordering():
+    """Dense widening must cost ~K^2 more FLOPs; AltUp ~= baseline."""
+    f_base = M.flops_per_token(small_cfg("baseline"))
+    f_alt = M.flops_per_token(small_cfg("altup"))
+    f_d2 = M.flops_per_token(small_cfg("dense_wide", k=2))
+    assert f_alt < 1.05 * f_base
+    assert f_d2 > 2.5 * f_base

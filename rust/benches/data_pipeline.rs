@@ -1,0 +1,57 @@
+//! Bench: data pipeline throughput — corpus generation, span
+//! corruption, task generation, and batch assembly must never be the
+//! training bottleneck (§Perf target: >= 1M tokens/s/core).
+
+use altup::data::batcher::{PretrainBatcher, TaskBatcher};
+use altup::data::corpus::Corpus;
+use altup::data::span::{corrupt, SpanConfig};
+use altup::data::tasks::{Task, TaskKind};
+use altup::data::tokenizer::Tokenizer;
+use altup::util::bench;
+use altup::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    println!("== data_pipeline throughput ==");
+
+    let corpus = Corpus::new(2000, 1);
+    let mut idx = 0u64;
+    let s = bench::bench("corpus.document (48-192 words)", 10, 200, Duration::from_millis(400), || {
+        std::hint::black_box(corpus.document(idx, 48, 192));
+        idx += 1;
+    });
+    println!("{}", s.report());
+
+    let tk = Tokenizer::new(2048).unwrap();
+    let doc: Vec<i32> = corpus.document(0, 150, 192).iter().map(|&w| tk.encode_word(w)).collect();
+    let mut rng = Rng::new(2);
+    let s = bench::bench("span.corrupt (~160 tokens)", 10, 200, Duration::from_millis(400), || {
+        std::hint::black_box(corrupt(&doc, SpanConfig::default(), &tk, &mut rng));
+    });
+    println!("{}", s.report());
+    let tokens_per_sec = 160.0 / s.mean.as_secs_f64();
+    println!("  -> {:.2}M corrupted tokens/s", tokens_per_sec / 1e6);
+
+    let mut pb = PretrainBatcher::new(2048, 8, 64, 32, 3);
+    let s = bench::bench("pretrain batch (8x(64+32))", 5, 100, Duration::from_millis(400), || {
+        std::hint::black_box(pb.next_batch());
+    });
+    println!("{}", s.report());
+    let batch_tokens = 8.0 * 96.0;
+    println!("  -> {:.2}M batch tokens/s", batch_tokens / s.mean.as_secs_f64() / 1e6);
+
+    for kind in [TaskKind::Glue, TaskKind::SuperGlue, TaskKind::Squad, TaskKind::TriviaQa] {
+        let task = Task::new(kind, 2048, 4);
+        let mut tb = TaskBatcher::new(task, 8, 64, 32);
+        let s = bench::bench(
+            &format!("task batch: {}", kind.name()),
+            5,
+            100,
+            Duration::from_millis(300),
+            || {
+                std::hint::black_box(tb.next_batch());
+            },
+        );
+        println!("{}", s.report());
+    }
+}

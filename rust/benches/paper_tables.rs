@@ -1,0 +1,42 @@
+//! Bench: regenerate every paper table/figure in quick mode.
+//!
+//! `cargo bench --offline --bench paper_tables` runs the full
+//! experiment suite with a reduced step budget (fast, CI-friendly);
+//! `altup bench-table all` (binary) runs the full budget. Each harness
+//! prints the paper's reference rows next to measured values and writes
+//! CSV under results/.
+
+use altup::coordinator::pipeline::PipelineOptions;
+use altup::experiments;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("ALTUP_FULL").is_err();
+    let opts = if quick {
+        PipelineOptions {
+            pretrain_steps: 40,
+            finetune_steps: 20,
+            warmup: 1000,
+            eval_batches: 3,
+            ..Default::default()
+        }
+    } else {
+        PipelineOptions::default()
+    };
+    println!(
+        "== paper_tables ({} mode: pretrain {} / finetune {} steps) ==",
+        if quick { "quick — set ALTUP_FULL=1 for full budget" } else { "full" },
+        opts.pretrain_steps,
+        opts.finetune_steps
+    );
+    if quick {
+        // Bounded subset for `cargo bench`: the analytic Tables 3/4/5
+        // (instant) plus the measured micro-scale speed shape. The full
+        // quality sweep (fig4/tab1/tab2/tab6/tab7/fig5/tab8/bert) runs
+        // via `altup bench-table all` or ALTUP_FULL=1 (takes ~1h on one
+        // core; results recorded in EXPERIMENTS.md).
+        experiments::table3_params::print_table()?;
+        experiments::table3_params::measured_speed(&opts)
+    } else {
+        experiments::run("all", &opts)
+    }
+}

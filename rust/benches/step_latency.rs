@@ -1,0 +1,60 @@
+//! Bench: per-variant train/forward step latency (the measured basis of
+//! Fig. 1/4 and Tables 3-4's speed columns). `cargo bench --offline`.
+
+use altup::experiments::latency;
+use altup::runtime::client::Client;
+
+fn main() -> anyhow::Result<()> {
+    println!("== step_latency: measured CPU step time per artifact ==");
+    println!("(quick mode measures micro-*; set ALTUP_BENCH_FULL=1 for all sizes)");
+    let full = std::env::var("ALTUP_BENCH_FULL").is_ok();
+    let client = Client::cpu()?;
+    let names = [
+        "micro-baseline",
+        "micro-altup",
+        "micro-altup-k4",
+        "micro-sameup",
+        "micro-sum",
+        "micro-recycled",
+        "micro-dense2x",
+        "micro-dense4x",
+        "micro-seqaltup",
+        "micro-strideskip",
+        "micro-avgpool",
+        "micro-moe",
+        "micro-altup-moe",
+        "tiny-baseline",
+        "tiny-altup",
+        "tiny-dense2x",
+        "mini-baseline",
+        "mini-altup",
+        "mini-recycled",
+        "mini-dense2x",
+    ];
+    println!(
+        "{:<20} {:>12} {:>12} {:>14}",
+        "artifact", "fwd ms", "train ms", "train ex/s"
+    );
+    let mut base: Option<f64> = None;
+    for name in names {
+        if !latency::available(name) || (!full && !name.starts_with("micro")) {
+            continue;
+        }
+        let l = latency::measure(&client, name)?;
+        if name == "micro-baseline" {
+            base = Some(l.train_s);
+        }
+        let rel = base
+            .map(|b| format!(" ({:.2}x micro-base)", l.train_s / b))
+            .unwrap_or_default();
+        println!(
+            "{:<20} {:>12} {:>12.2} {:>14.1}{}",
+            name,
+            l.forward_s.map(|f| format!("{:.2}", f * 1e3)).unwrap_or_else(|| "-".into()),
+            l.train_s * 1e3,
+            l.train_examples_per_sec,
+            rel
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! Model / experiment configuration, mirroring `python/compile/configs.py`.
+//!
+//! The rust side never *constructs* model configs from scratch for the
+//! runtime — it reads the authoritative copy out of each artifact's
+//! `meta.json` — but experiments use these structs for analytic
+//! accounting (param counts, FLOPs, roofline) including at paper scale
+//! where no artifact exists.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Variant {
+    Baseline,
+    DenseWide,
+    AltUp,
+    SameUp,
+    Sum,
+    Recycled,
+    SeqAltUp,
+    StrideSkip,
+    AvgPool,
+}
+
+impl Variant {
+    pub fn from_str(s: &str) -> Result<Variant> {
+        Ok(match s {
+            "baseline" => Variant::Baseline,
+            "dense_wide" => Variant::DenseWide,
+            "altup" => Variant::AltUp,
+            "sameup" => Variant::SameUp,
+            "sum" => Variant::Sum,
+            "recycled" => Variant::Recycled,
+            "seq_altup" => Variant::SeqAltUp,
+            "stride_skip" => Variant::StrideSkip,
+            "avg_pool" => Variant::AvgPool,
+            _ => bail!("unknown variant: {s}"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Baseline => "baseline",
+            Variant::DenseWide => "dense_wide",
+            Variant::AltUp => "altup",
+            Variant::SameUp => "sameup",
+            Variant::Sum => "sum",
+            Variant::Recycled => "recycled",
+            Variant::SeqAltUp => "seq_altup",
+            Variant::StrideSkip => "stride_skip",
+            Variant::AvgPool => "avg_pool",
+        }
+    }
+
+    /// Does the representation carry K blocks between layers?
+    pub fn is_block_widened(&self) -> bool {
+        matches!(self, Variant::AltUp | Variant::SameUp | Variant::Recycled)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub num_heads: usize,
+    pub d_head: usize,
+    pub enc_layers: usize,
+    pub dec_layers: usize,
+    pub vocab_size: usize,
+    pub rel_pos_buckets: usize,
+    pub enc_len: usize,
+    pub dec_len: usize,
+    pub batch_size: usize,
+    pub variant: Variant,
+    pub k: usize,
+    pub seq_stride: usize,
+    pub moe: bool,
+    pub moe_experts: usize,
+    pub moe_hidden: usize,
+    pub dropout: f64,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        let g = |k: &str| -> Result<usize> {
+            j.get(k).as_usize().with_context(|| format!("config field {k}"))
+        };
+        Ok(ModelConfig {
+            name: j.get("name").as_str().unwrap_or("unnamed").to_string(),
+            d_model: g("d_model")?,
+            d_ff: g("d_ff")?,
+            num_heads: g("num_heads")?,
+            d_head: g("d_head")?,
+            enc_layers: g("enc_layers")?,
+            dec_layers: g("dec_layers")?,
+            vocab_size: g("vocab_size")?,
+            rel_pos_buckets: g("rel_pos_buckets")?,
+            enc_len: g("enc_len")?,
+            dec_len: g("dec_len")?,
+            batch_size: g("batch_size")?,
+            variant: Variant::from_str(j.get("variant").as_str().context("variant")?)?,
+            k: g("k")?,
+            seq_stride: g("seq_stride")?,
+            moe: j.get("moe").as_bool().unwrap_or(false),
+            moe_experts: g("moe_experts").unwrap_or(16),
+            moe_hidden: g("moe_hidden").unwrap_or(16),
+            dropout: j.get("dropout").as_f64().unwrap_or(0.0),
+        })
+    }
+
+    /// Width of each transformer layer (paper's d_model).
+    pub fn layer_width(&self) -> usize {
+        match self.variant {
+            Variant::DenseWide => self.k * self.d_model,
+            _ => self.d_model,
+        }
+    }
+
+    /// Width of the carried token representation.
+    pub fn repr_width(&self) -> usize {
+        match self.variant {
+            Variant::AltUp | Variant::SameUp | Variant::Recycled | Variant::DenseWide => {
+                self.k * self.d_model
+            }
+            _ => self.d_model,
+        }
+    }
+
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch_size * (self.enc_len + self.dec_len)
+    }
+}
+
+/// Paper-scale T5 presets, mirroring `python/compile/configs.py::SIZES`
+/// with the paper's layer counts (S is 4+4 per App. A).
+pub fn paper_preset(size: &str, variant: Variant, k: usize) -> ModelConfig {
+    let (d_model, d_ff, num_heads, d_head, enc_layers, dec_layers) = match size {
+        "S" => (512, 1024, 6, 64, 4, 4),
+        "B" => (768, 2048, 12, 64, 12, 12),
+        "L" => (1024, 2816, 16, 64, 24, 24),
+        "XL" => (2048, 5120, 32, 64, 24, 24),
+        _ => panic!("unknown paper size {size}"),
+    };
+    ModelConfig {
+        name: format!("paper-{size}-{}", variant.as_str()),
+        d_model,
+        d_ff,
+        num_heads,
+        d_head,
+        enc_layers,
+        dec_layers,
+        vocab_size: 32128,
+        rel_pos_buckets: 32,
+        enc_len: 512,
+        dec_len: 114,
+        batch_size: 256,
+        variant,
+        k,
+        seq_stride: 4,
+        moe: false,
+        moe_experts: 128,
+        moe_hidden: 16,
+        dropout: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_roundtrip() {
+        for s in [
+            "baseline", "dense_wide", "altup", "sameup", "sum", "recycled",
+            "seq_altup", "stride_skip", "avg_pool",
+        ] {
+            assert_eq!(Variant::from_str(s).unwrap().as_str(), s);
+        }
+        assert!(Variant::from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn widths() {
+        let mut c = paper_preset("S", Variant::AltUp, 2);
+        assert_eq!(c.layer_width(), 512);
+        assert_eq!(c.repr_width(), 1024);
+        c.variant = Variant::DenseWide;
+        assert_eq!(c.layer_width(), 1024);
+        c.variant = Variant::Baseline;
+        assert_eq!(c.repr_width(), 512);
+    }
+
+    #[test]
+    fn from_json_parses_meta_config() {
+        let j = Json::parse(
+            r#"{"name":"x","d_model":64,"d_ff":128,"num_heads":4,"d_head":16,
+                "enc_layers":2,"dec_layers":2,"vocab_size":2048,
+                "rel_pos_buckets":32,"rel_pos_max_dist":128,"enc_len":64,
+                "dec_len":32,"batch_size":8,"variant":"altup","k":2,
+                "seq_stride":4,"seq_first_layer":1,"moe":false,
+                "moe_experts":16,"moe_hidden":16,"kernels":"jnp",
+                "dropout":0.0,"label_smoothing":0.0,"tie_embeddings":false}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c.d_model, 64);
+        assert_eq!(c.variant, Variant::AltUp);
+        assert_eq!(c.repr_width(), 128);
+    }
+}

@@ -1,0 +1,158 @@
+//! Training/eval metrics: loss curves, accuracies, EM/F1, latency, with
+//! JSONL logging for post-hoc analysis.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+/// A single logged record: step + named scalar values.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub step: u64,
+    pub values: BTreeMap<String, f64>,
+}
+
+/// Accumulates records, keeps moving averages, writes JSONL.
+pub struct MetricsLog {
+    pub records: Vec<Record>,
+    file: Option<std::io::BufWriter<std::fs::File>>,
+    started: Instant,
+}
+
+impl MetricsLog {
+    pub fn in_memory() -> MetricsLog {
+        MetricsLog { records: Vec::new(), file: None, started: Instant::now() }
+    }
+
+    pub fn to_file(path: impl AsRef<Path>) -> anyhow::Result<MetricsLog> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = std::fs::File::create(path)?;
+        Ok(MetricsLog {
+            records: Vec::new(),
+            file: Some(std::io::BufWriter::new(file)),
+            started: Instant::now(),
+        })
+    }
+
+    pub fn log(&mut self, step: u64, pairs: &[(&str, f64)]) {
+        let mut values = BTreeMap::new();
+        for (k, v) in pairs {
+            values.insert(k.to_string(), *v);
+        }
+        values.insert("wall_seconds".into(), self.started.elapsed().as_secs_f64());
+        let rec = Record { step, values };
+        if let Some(f) = &mut self.file {
+            let mut obj = BTreeMap::new();
+            obj.insert("step".to_string(), Json::Num(step as f64));
+            for (k, v) in &rec.values {
+                obj.insert(k.clone(), Json::Num(*v));
+            }
+            let _ = writeln!(f, "{}", Json::Obj(obj));
+            let _ = f.flush();
+        }
+        self.records.push(rec);
+    }
+
+    /// Mean of a metric over the last `n` records that contain it.
+    pub fn recent_mean(&self, key: &str, n: usize) -> Option<f64> {
+        let vals: Vec<f64> = self
+            .records
+            .iter()
+            .rev()
+            .filter_map(|r| r.values.get(key).copied())
+            .take(n)
+            .collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f64>() / vals.len() as f64)
+        }
+    }
+
+    pub fn last(&self, key: &str) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.values.get(key).copied())
+    }
+
+    /// (step, value) series for plotting/reporting.
+    pub fn series(&self, key: &str) -> Vec<(u64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.values.get(key).map(|v| (r.step, *v)))
+            .collect()
+    }
+}
+
+/// Aggregated evaluation result.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub em: f64,
+    pub f1: f64,
+    pub examples: usize,
+}
+
+impl EvalResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "loss={:.4} acc={:.2}% em={:.2} f1={:.2} (n={})",
+            self.loss,
+            self.accuracy * 100.0,
+            self.em * 100.0,
+            self.f1 * 100.0,
+            self.examples
+        )
+    }
+}
+
+/// Reciprocal square-root LR schedule with warmup (paper App. A),
+/// mirroring `python/compile/train.py::lr_schedule`.
+pub fn rsqrt_lr(step: u64, warmup: u64, base: f64) -> f64 {
+    base / (step.max(warmup) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_and_query() {
+        let mut m = MetricsLog::in_memory();
+        for s in 1..=10 {
+            m.log(s, &[("loss", 10.0 / s as f64)]);
+        }
+        assert_eq!(m.records.len(), 10);
+        assert!((m.last("loss").unwrap() - 1.0).abs() < 1e-9);
+        let mean5 = m.recent_mean("loss", 5).unwrap();
+        assert!(mean5 < 2.0);
+        assert_eq!(m.series("loss").len(), 10);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let path = std::env::temp_dir().join(format!("altup-metrics-{}.jsonl", std::process::id()));
+        {
+            let mut m = MetricsLog::to_file(&path).unwrap();
+            m.log(1, &[("loss", 3.5), ("acc", 0.25)]);
+            m.log(2, &[("loss", 3.0)]);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let rec = Json::parse(lines[0]).unwrap();
+        assert_eq!(rec.get("loss").as_f64(), Some(3.5));
+        assert_eq!(rec.get("step").as_i64(), Some(1));
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn lr_schedule_matches_python() {
+        assert!((rsqrt_lr(1, 100, 1.0) - 0.1).abs() < 1e-12);
+        assert!((rsqrt_lr(100, 100, 1.0) - 0.1).abs() < 1e-12);
+        assert!((rsqrt_lr(400, 100, 1.0) - 0.05).abs() < 1e-12);
+    }
+}

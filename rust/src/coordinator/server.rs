@@ -1,0 +1,148 @@
+//! Threaded inference server with dynamic batching.
+//!
+//! The PJRT session is !Send (Rc-backed FFI handles), so the server owns
+//! client + session on a dedicated model thread; callers submit requests
+//! over an mpsc channel and get replies over per-request channels. The
+//! batcher groups up to `batch_size` requests within `batch_window`,
+//! pads partial batches, and runs one `decode_step` per group — the
+//! standard dynamic-batching pattern (vLLM-router-like, scaled to one
+//! replica).
+
+use crate::runtime::artifact::load_named;
+use crate::runtime::client::Client;
+use crate::runtime::session::Session;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+pub struct Request {
+    pub enc_tokens: Vec<i32>,
+    pub reply: mpsc::Sender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub tokens: Vec<i32>,
+    /// Time spent queued + executing, for latency accounting.
+    pub latency: Duration,
+    pub batch_fill: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    pub batch_window: Duration,
+    pub seed: u64,
+    /// Optional checkpoint to load weights from.
+    pub checkpoint: Option<std::path::PathBuf>,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions { batch_window: Duration::from_millis(5), seed: 0, checkpoint: None }
+    }
+}
+
+pub struct ServerHandle {
+    pub sender: mpsc::Sender<Request>,
+    join: Option<std::thread::JoinHandle<Result<ServerStats>>>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub total_fill: usize,
+}
+
+impl ServerStats {
+    pub fn mean_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.total_fill as f64 / self.batches as f64
+        }
+    }
+}
+
+impl ServerHandle {
+    /// Spawn the model thread; resolves the artifact by suite name.
+    pub fn spawn(artifact_name: &str, opts: ServerOptions) -> ServerHandle {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let name = artifact_name.to_string();
+        let join = std::thread::Builder::new()
+            .name("altup-server".into())
+            .spawn(move || serve(&name, rx, opts))
+            .expect("spawn server");
+        ServerHandle { sender: tx, join: Some(join) }
+    }
+
+    /// Submit a request and block for the response.
+    pub fn infer(&self, enc_tokens: Vec<i32>) -> Result<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.sender.send(Request { enc_tokens, reply: tx })?;
+        Ok(rx.recv()?)
+    }
+
+    /// Shut down (drop sender) and collect stats.
+    pub fn shutdown(mut self) -> Result<ServerStats> {
+        let join = self.join.take().unwrap();
+        drop(self.sender);
+        join.join().expect("server thread panicked")
+    }
+}
+
+fn serve(artifact_name: &str, rx: mpsc::Receiver<Request>, opts: ServerOptions) -> Result<ServerStats> {
+    let client = Client::cpu()?;
+    let artifact = load_named(artifact_name)?;
+    let mut session = Session::open_eval(&client, artifact, opts.seed)?;
+    if let Some(ckpt) = &opts.checkpoint {
+        session.store = crate::runtime::params::ParamStore::load(ckpt, &session.artifact)?;
+        session.invalidate_state();
+    }
+    session.ensure_decode(&client)?;
+    let cfg = session.artifact.config.clone();
+    let mut stats = ServerStats::default();
+
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break, // all senders dropped -> shutdown
+        };
+        let t0 = Instant::now();
+        let mut pending = vec![first];
+        let deadline = Instant::now() + opts.batch_window;
+        while pending.len() < cfg.batch_size {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Pad the batch geometry: fixed (B, enc_len).
+        let fill = pending.len();
+        let mut enc = vec![0i32; cfg.batch_size * cfg.enc_len];
+        for (i, req) in pending.iter().enumerate() {
+            let n = req.enc_tokens.len().min(cfg.enc_len);
+            enc[i * cfg.enc_len..i * cfg.enc_len + n].copy_from_slice(&req.enc_tokens[..n]);
+        }
+        let decoded = session.decode(&client, &enc)?;
+        let latency = t0.elapsed();
+        for (i, req) in pending.into_iter().enumerate() {
+            let _ = req.reply.send(Response {
+                tokens: decoded[i].clone(),
+                latency,
+                batch_fill: fill,
+            });
+        }
+        stats.requests += fill;
+        stats.batches += 1;
+        stats.total_fill += fill;
+    }
+    Ok(stats)
+}

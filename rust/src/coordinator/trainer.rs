@@ -1,0 +1,213 @@
+//! Training coordinator: owns the step loop over a `Session`, the LR
+//! schedule, metrics logging, periodic eval, and checkpoints.
+
+use crate::coordinator::metrics::{rsqrt_lr, EvalResult, MetricsLog};
+use crate::data::batcher::{Batch, PretrainBatcher, TaskBatcher};
+use crate::data::tasks::{exact_match, f1_score};
+use crate::runtime::client::Client;
+use crate::runtime::session::Session;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Which data source feeds the trainer.
+pub enum DataSource {
+    Pretrain(PretrainBatcher),
+    Task(TaskBatcher),
+}
+
+impl DataSource {
+    pub fn next_batch(&mut self) -> Batch {
+        match self {
+            DataSource::Pretrain(b) => b.next_batch(),
+            DataSource::Task(b) => b.next_batch(),
+        }
+    }
+}
+
+pub struct TrainOptions {
+    pub steps: u64,
+    pub warmup: u64,
+    pub base_lr: f64,
+    /// Constant LR (finetune recipe) if set — overrides rsqrt.
+    pub constant_lr: Option<f64>,
+    pub log_every: u64,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub checkpoint_path: Option<std::path::PathBuf>,
+    pub verbose: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            steps: 100,
+            warmup: 1000,
+            base_lr: 1.0,
+            constant_lr: None,
+            log_every: 10,
+            eval_every: 0,
+            eval_batches: 4,
+            checkpoint_path: None,
+            verbose: true,
+        }
+    }
+}
+
+pub struct Trainer {
+    pub session: Session,
+    pub source: DataSource,
+    pub log: MetricsLog,
+}
+
+impl Trainer {
+    pub fn new(session: Session, source: DataSource, log: MetricsLog) -> Trainer {
+        Trainer { session, source, log }
+    }
+
+    pub fn lr_at(&self, step: u64, opts: &TrainOptions) -> f64 {
+        match opts.constant_lr {
+            Some(lr) => lr,
+            None => rsqrt_lr(step, opts.warmup, opts.base_lr),
+        }
+    }
+
+    /// Run the training loop; returns (final train loss EMA, steps/sec).
+    pub fn run(&mut self, client: &Client, opts: &TrainOptions) -> Result<(f64, f64)> {
+        let t0 = Instant::now();
+        let mut ema: Option<f64> = None;
+        for _ in 0..opts.steps {
+            let step = self.session.store.step + 1;
+            let lr = self.lr_at(step, opts) as f32;
+            let batch = self.source.next_batch();
+            let m = self.session.train_step(lr, step as u32, &batch)?;
+            let loss = m.loss as f64;
+            ema = Some(match ema {
+                None => loss,
+                Some(e) => 0.95 * e + 0.05 * loss,
+            });
+            if step % opts.log_every == 0 || step == 1 {
+                self.log.log(
+                    step,
+                    &[
+                        ("loss", loss),
+                        ("loss_ema", ema.unwrap()),
+                        ("acc", m.accuracy() as f64),
+                        ("lr", lr as f64),
+                    ],
+                );
+                if opts.verbose {
+                    println!(
+                        "step {:>6}  loss {:>7.4}  ema {:>7.4}  acc {:>5.1}%  lr {:.2e}",
+                        step,
+                        loss,
+                        ema.unwrap(),
+                        m.accuracy() * 100.0,
+                        lr
+                    );
+                }
+            }
+            if opts.eval_every > 0 && step % opts.eval_every == 0 {
+                let ev = self.eval(client, opts.eval_batches)?;
+                self.log.log(step, &[("eval_loss", ev.loss), ("eval_acc", ev.accuracy)]);
+                if opts.verbose {
+                    println!("  eval @{step}: {}", ev.summary());
+                }
+            }
+            if let Some(path) = &opts.checkpoint_path {
+                if step % 1000 == 0 || step == opts.steps {
+                    self.session.checkpoint(path)?;
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let sps = opts.steps as f64 / wall;
+        Ok((ema.unwrap_or(f64::NAN), sps))
+    }
+
+    /// Teacher-forced eval on a held-out stream.
+    pub fn eval(&mut self, client: &Client, batches: usize) -> Result<EvalResult> {
+        let mut source = match &self.source {
+            DataSource::Pretrain(b) => DataSource::Pretrain(b.validation()),
+            DataSource::Task(b) => {
+                // Same task distribution (same seed), held-out indices.
+                let mut tb =
+                    TaskBatcher::new(b.task.eval_twin(), b.batch_size, b.enc_len, b.dec_len);
+                tb.eval_split();
+                DataSource::Task(tb)
+            }
+        };
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut ntok = 0.0f64;
+        let mut examples = 0usize;
+        for _ in 0..batches {
+            let batch = source.next_batch();
+            let m = self.session.eval_step(client, &batch)?;
+            loss_sum += m.loss as f64;
+            correct += m.correct as f64;
+            ntok += m.ntok as f64;
+            examples += batch.batch_size;
+        }
+        Ok(EvalResult {
+            loss: loss_sum / ntok.max(1.0),
+            accuracy: correct / ntok.max(1.0),
+            em: 0.0,
+            f1: 0.0,
+            examples,
+        })
+    }
+
+    /// Generative eval: greedy decode + EM/F1 against task answers.
+    pub fn eval_generative(&mut self, client: &Client, batches: usize) -> Result<EvalResult> {
+        let DataSource::Task(b) = &self.source else {
+            anyhow::bail!("generative eval needs a task source");
+        };
+        let mut tb = TaskBatcher::new(b.task.eval_twin(), b.batch_size, b.enc_len, b.dec_len);
+        tb.eval_split();
+
+        let tk =
+            crate::data::tokenizer::Tokenizer::new(self.session.artifact.config.vocab_size)?;
+        let mut em_sum = 0.0;
+        let mut f1_sum = 0.0;
+        let mut n = 0usize;
+        for _ in 0..batches {
+            let batch = tb.next_batch();
+            let decoded = self.session.decode(client, &batch.enc_tokens)?;
+            for (row, gold) in decoded.iter().zip(batch.answers.iter()) {
+                let pred = tk.content_of(tk.until_eos(row));
+                em_sum += exact_match(&pred, gold);
+                f1_sum += f1_score(&pred, gold);
+                n += 1;
+            }
+        }
+        Ok(EvalResult {
+            loss: 0.0,
+            accuracy: 0.0,
+            em: em_sum / n.max(1) as f64,
+            f1: f1_sum / n.max(1) as f64,
+            examples: n,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_modes() {
+        let log = MetricsLog::in_memory();
+        let _ = log;
+        let opts = TrainOptions { constant_lr: Some(1e-3), ..Default::default() };
+        // schedule math only (no session required)
+        assert_eq!(
+            match opts.constant_lr {
+                Some(lr) => lr,
+                None => 0.0,
+            },
+            1e-3
+        );
+        let opts2 = TrainOptions { warmup: 100, base_lr: 1.0, ..Default::default() };
+        assert!((rsqrt_lr(1, opts2.warmup, opts2.base_lr) - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,226 @@
+//! Batcher: pads/truncates examples into the fixed (B, enc_len) /
+//! (B, dec_len) geometry the AOT executables were lowered with.
+
+use crate::data::corpus::Corpus;
+use crate::data::span::{corrupt, SpanConfig};
+use crate::data::tasks::{Example, Task};
+use crate::data::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+/// A dense, padded batch matching the artifact geometry.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub batch_size: usize,
+    pub enc_len: usize,
+    pub dec_len: usize,
+    pub enc_tokens: Vec<i32>,
+    pub dec_input: Vec<i32>,
+    pub dec_targets: Vec<i32>,
+    /// Reference answers for EM/F1 (empty for pretrain batches).
+    pub answers: Vec<Vec<u32>>,
+}
+
+fn pad_into(dst: &mut Vec<i32>, src: &[i32], len: usize) {
+    let n = src.len().min(len);
+    dst.extend_from_slice(&src[..n]);
+    dst.resize(dst.len() + (len - n), 0);
+}
+
+impl Batch {
+    pub fn from_examples(examples: &[Example], b: usize, enc_len: usize, dec_len: usize) -> Batch {
+        assert_eq!(examples.len(), b);
+        let mut enc = Vec::with_capacity(b * enc_len);
+        let mut di = Vec::with_capacity(b * dec_len);
+        let mut dt = Vec::with_capacity(b * dec_len);
+        let mut answers = Vec::with_capacity(b);
+        for ex in examples {
+            pad_into(&mut enc, &ex.enc, enc_len);
+            pad_into(&mut di, &ex.dec_input, dec_len);
+            pad_into(&mut dt, &ex.dec_targets, dec_len);
+            answers.push(ex.answer.clone());
+        }
+        Batch {
+            batch_size: b,
+            enc_len,
+            dec_len,
+            enc_tokens: enc,
+            dec_input: di,
+            dec_targets: dt,
+            answers,
+        }
+    }
+
+    /// Row `i`'s encoder tokens.
+    pub fn enc_row(&self, i: usize) -> &[i32] {
+        &self.enc_tokens[i * self.enc_len..(i + 1) * self.enc_len]
+    }
+}
+
+/// Streaming pretrain batch source: corpus -> span corruption -> pad.
+pub struct PretrainBatcher {
+    corpus: Corpus,
+    tk: Tokenizer,
+    span_cfg: SpanConfig,
+    rng: Rng,
+    next_doc: u64,
+    seed: u64,
+    pub batch_size: usize,
+    pub enc_len: usize,
+    pub dec_len: usize,
+}
+
+impl PretrainBatcher {
+    pub fn new(
+        vocab_size: usize,
+        batch_size: usize,
+        enc_len: usize,
+        dec_len: usize,
+        seed: u64,
+    ) -> PretrainBatcher {
+        let tk = Tokenizer::new(vocab_size).expect("vocab");
+        PretrainBatcher {
+            corpus: Corpus::new(tk.content_slots().saturating_sub(8), seed),
+            tk,
+            span_cfg: SpanConfig::default(),
+            rng: Rng::new(seed ^ 0xBA7C_4E5),
+            next_doc: 0,
+            seed,
+            batch_size,
+            enc_len,
+            dec_len,
+        }
+    }
+
+    /// Held-out stream: the *same* corpus distribution (same seed), but
+    /// document indices from a disjoint high range the trainer never
+    /// reaches — a proper validation split.
+    pub fn validation(&self) -> PretrainBatcher {
+        let mut v = PretrainBatcher::new(
+            self.tk.vocab_size,
+            self.batch_size,
+            self.enc_len,
+            self.dec_len,
+            self.seed,
+        );
+        v.next_doc = 1 << 40;
+        v
+    }
+
+    /// Override the span-corruption parameters (e.g. mean_span=1.0
+    /// turns the objective into BERT-style single-token MLM — used by
+    /// the Appendix-E experiment).
+    pub fn set_span_config(&mut self, cfg: SpanConfig) {
+        self.span_cfg = cfg;
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        // Documents sized to roughly fill enc_len after corruption.
+        let doc_len_max = self.enc_len.saturating_sub(6).max(12);
+        let doc_len_min = (doc_len_max * 3 / 4).max(8);
+        let mut examples = Vec::with_capacity(self.batch_size);
+        for _ in 0..self.batch_size {
+            let doc = self.corpus.document(self.next_doc, doc_len_min, doc_len_max);
+            self.next_doc += 1;
+            let tokens = self.tk.encode_doc(&doc);
+            let ex = corrupt(&tokens, self.span_cfg, &self.tk, &mut self.rng);
+            examples.push(Example {
+                enc: ex.enc,
+                dec_input: ex.dec_input,
+                dec_targets: ex.dec_targets,
+                answer: Vec::new(),
+            });
+        }
+        Batch::from_examples(&examples, self.batch_size, self.enc_len, self.dec_len)
+    }
+}
+
+/// Finetune batch source over a synthetic benchmark task.
+pub struct TaskBatcher {
+    pub task: Task,
+    next_index: u64,
+    pub batch_size: usize,
+    pub enc_len: usize,
+    pub dec_len: usize,
+}
+
+impl TaskBatcher {
+    pub fn new(task: Task, batch_size: usize, enc_len: usize, dec_len: usize) -> TaskBatcher {
+        TaskBatcher { task, next_index: 0, batch_size, enc_len, dec_len }
+    }
+
+    /// Eval split: indices from a disjoint high range.
+    pub fn eval_split(&mut self) {
+        self.next_index = 1 << 40;
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let mut examples = Vec::with_capacity(self.batch_size);
+        for _ in 0..self.batch_size {
+            examples.push(self.task.example(self.next_index, self.enc_len.saturating_sub(2)));
+            self.next_index += 1;
+        }
+        Batch::from_examples(&examples, self.batch_size, self.enc_len, self.dec_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::TaskKind;
+
+    #[test]
+    fn batch_geometry() {
+        let mut b = PretrainBatcher::new(2048, 4, 64, 32, 1);
+        let batch = b.next_batch();
+        assert_eq!(batch.enc_tokens.len(), 4 * 64);
+        assert_eq!(batch.dec_input.len(), 4 * 32);
+        assert_eq!(batch.dec_targets.len(), 4 * 32);
+    }
+
+    #[test]
+    fn batches_advance() {
+        let mut b = PretrainBatcher::new(2048, 4, 64, 32, 1);
+        let b1 = b.next_batch();
+        let b2 = b.next_batch();
+        assert_ne!(b1.enc_tokens, b2.enc_tokens);
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = PretrainBatcher::new(2048, 4, 64, 32, 9);
+        let mut b = PretrainBatcher::new(2048, 4, 64, 32, 9);
+        assert_eq!(a.next_batch().enc_tokens, b.next_batch().enc_tokens);
+    }
+
+    #[test]
+    fn validation_disjoint() {
+        let mut train = PretrainBatcher::new(2048, 4, 64, 32, 9);
+        let mut val = train.validation();
+        assert_ne!(train.next_batch().enc_tokens, val.next_batch().enc_tokens);
+    }
+
+    #[test]
+    fn task_batches_carry_answers() {
+        let task = Task::new(TaskKind::Squad, 2048, 5);
+        let mut tb = TaskBatcher::new(task, 4, 64, 32);
+        let batch = tb.next_batch();
+        assert_eq!(batch.answers.len(), 4);
+        assert!(batch.answers.iter().all(|a| !a.is_empty()));
+    }
+
+    #[test]
+    fn truncation_is_safe() {
+        // Examples longer than enc_len are truncated, not panicking.
+        let task = Task::new(TaskKind::Glue, 2048, 5);
+        let mut tb = TaskBatcher::new(task, 2, 8, 4);
+        let batch = tb.next_batch();
+        assert_eq!(batch.enc_tokens.len(), 16);
+    }
+
+    #[test]
+    fn enc_row_slices() {
+        let mut b = PretrainBatcher::new(2048, 3, 16, 8, 2);
+        let batch = b.next_batch();
+        assert_eq!(batch.enc_row(1), &batch.enc_tokens[16..32]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Data pipeline: synthetic corpus -> tokenizer -> span corruption /
+//! benchmark tasks -> padded batches (DESIGN.md S9-S11).
+
+pub mod batcher;
+pub mod corpus;
+pub mod span;
+pub mod tasks;
+pub mod tokenizer;

@@ -1,0 +1,177 @@
+//! T5 span corruption: the pretraining objective.
+//!
+//! Given a token sequence, sample spans (mean length 3, 15% corruption
+//! rate as in T5), replace each span in the input with a fresh sentinel,
+//! and build the target as `<s0> span0 <s1> span1 ... EOS`. Pretrain
+//! "span prediction accuracy" (the paper's metric) is token accuracy on
+//! these targets.
+
+use crate::data::tokenizer::{Tokenizer, EOS};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SpanExample {
+    pub enc: Vec<i32>,
+    /// Decoder input (BOS-shifted) and targets, aligned.
+    pub dec_input: Vec<i32>,
+    pub dec_targets: Vec<i32>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SpanConfig {
+    pub corrupt_rate: f64,
+    pub mean_span: f64,
+}
+
+impl Default for SpanConfig {
+    fn default() -> Self {
+        SpanConfig { corrupt_rate: 0.15, mean_span: 3.0 }
+    }
+}
+
+/// Corrupt one tokenized document into an (encoder, decoder) pair.
+pub fn corrupt(tokens: &[i32], cfg: SpanConfig, tk: &Tokenizer, rng: &mut Rng) -> SpanExample {
+    let n = tokens.len();
+    // Decide span starts: expected corrupted tokens = rate * n, spans of
+    // geometric-ish length around mean_span.
+    let target_corrupt = ((n as f64) * cfg.corrupt_rate).round().max(1.0) as usize;
+    let mut spans: Vec<(usize, usize)> = Vec::new(); // (start, len)
+    let mut corrupted = 0usize;
+    let mut guard = 0;
+    while corrupted < target_corrupt && spans.len() < crate::data::tokenizer::NUM_SENTINELS && guard < 10 * n {
+        guard += 1;
+        let len = 1 + (rng.next_f64() * (2.0 * cfg.mean_span - 1.0)) as usize;
+        if n <= len + 1 {
+            break;
+        }
+        let start = rng.range(0, n - len);
+        // Reject overlaps (with 1-token separation so sentinels don't
+        // become adjacent, mirroring T5's merging behavior).
+        if spans
+            .iter()
+            .any(|&(s, l)| start < s + l + 1 && s < start + len + 1)
+        {
+            continue;
+        }
+        spans.push((start, len));
+        corrupted += len;
+    }
+    spans.sort();
+
+    let mut enc = Vec::with_capacity(n);
+    let mut dec = Vec::new();
+    let mut pos = 0usize;
+    for (i, &(start, len)) in spans.iter().enumerate() {
+        enc.extend_from_slice(&tokens[pos..start]);
+        enc.push(tk.sentinel(i));
+        dec.push(tk.sentinel(i));
+        dec.extend_from_slice(&tokens[start..start + len]);
+        pos = start + len;
+    }
+    enc.extend_from_slice(&tokens[pos..]);
+    enc.push(EOS);
+    dec.push(EOS);
+
+    let mut dec_input = Vec::with_capacity(dec.len());
+    dec_input.push(crate::data::tokenizer::PAD); // BOS
+    dec_input.extend_from_slice(&dec[..dec.len() - 1]);
+    SpanExample { enc, dec_input, dec_targets: dec }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer::{FIRST_CONTENT, PAD};
+
+    fn tk() -> Tokenizer {
+        Tokenizer::new(2048).unwrap()
+    }
+
+    fn doc(n: usize) -> Vec<i32> {
+        (0..n).map(|i| FIRST_CONTENT + (i % 100) as i32).collect()
+    }
+
+    #[test]
+    fn reconstruction_invariant() {
+        // Replacing sentinels in enc by their target spans reconstructs
+        // the original document.
+        let tk = tk();
+        let tokens = doc(120);
+        let mut rng = Rng::new(1);
+        let ex = corrupt(&tokens, SpanConfig::default(), &tk, &mut rng);
+
+        // Parse target spans.
+        let mut spans: Vec<(i32, Vec<i32>)> = Vec::new();
+        let body = tk.until_eos(&ex.dec_targets);
+        for &t in body {
+            if tk.is_sentinel(t) {
+                spans.push((t, Vec::new()));
+            } else {
+                spans.last_mut().expect("target starts with sentinel").1.push(t);
+            }
+        }
+        let mut rebuilt = Vec::new();
+        for &t in tk.until_eos(&ex.enc) {
+            if tk.is_sentinel(t) {
+                let (_, ref span) = spans.iter().find(|(s, _)| *s == t).expect("sentinel in target");
+                rebuilt.extend_from_slice(span);
+            } else {
+                rebuilt.push(t);
+            }
+        }
+        assert_eq!(rebuilt, tokens);
+    }
+
+    #[test]
+    fn corruption_rate_respected() {
+        let tk = tk();
+        let tokens = doc(160);
+        let mut rng = Rng::new(2);
+        let mut total_corrupted = 0usize;
+        let trials = 50;
+        for _ in 0..trials {
+            let ex = corrupt(&tokens, SpanConfig::default(), &tk, &mut rng);
+            let corrupted: usize = tk
+                .until_eos(&ex.dec_targets)
+                .iter()
+                .filter(|&&t| !tk.is_sentinel(t))
+                .count();
+            total_corrupted += corrupted;
+        }
+        let rate = total_corrupted as f64 / (trials * 160) as f64;
+        assert!((0.10..=0.20).contains(&rate), "rate={rate}");
+    }
+
+    #[test]
+    fn dec_input_is_shifted_targets() {
+        let tk = tk();
+        let mut rng = Rng::new(3);
+        let ex = corrupt(&doc(80), SpanConfig::default(), &tk, &mut rng);
+        assert_eq!(ex.dec_input[0], PAD);
+        assert_eq!(&ex.dec_input[1..], &ex.dec_targets[..ex.dec_targets.len() - 1]);
+        assert_eq!(*ex.dec_targets.last().unwrap(), EOS);
+    }
+
+    #[test]
+    fn sentinels_ordered_in_encoder() {
+        let tk = tk();
+        let mut rng = Rng::new(4);
+        let ex = corrupt(&doc(150), SpanConfig::default(), &tk, &mut rng);
+        let sentinels: Vec<i32> = ex.enc.iter().copied().filter(|&t| tk.is_sentinel(t)).collect();
+        let mut sorted = sentinels.clone();
+        sorted.sort();
+        assert_eq!(sentinels, sorted);
+        assert!(!sentinels.is_empty());
+    }
+
+    #[test]
+    fn tiny_docs_dont_panic() {
+        let tk = tk();
+        let mut rng = Rng::new(5);
+        for n in 2..12 {
+            let ex = corrupt(&doc(n), SpanConfig::default(), &tk, &mut rng);
+            assert!(!ex.enc.is_empty());
+            assert_eq!(*ex.enc.last().unwrap(), EOS);
+        }
+    }
+}

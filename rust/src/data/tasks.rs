@@ -1,0 +1,327 @@
+//! Synthetic finetune benchmark tasks, recast text-to-text (paper Sec. 5
+//! setting). Substitutes for GLUE / SuperGLUE / SQuAD / TriviaQA with
+//! tasks of matching I/O shape and increasing difficulty (DESIGN.md §4):
+//!
+//!  - `glue`:      single-sentence classification — does the sequence
+//!                 contain more "positive"-lexicon words than negative?
+//!  - `superglue`: entailment-like — given a premise and a query pair
+//!                 (a, b), answer whether `b` ever directly follows `a`
+//!                 in the premise (relational, harder).
+//!  - `squad`:     extractive QA — given a context and a query word,
+//!                 produce the two words that follow its first
+//!                 occurrence (span extraction; EM/F1).
+//!  - `triviaqa`:  closed-book QA — a fixed seeded key->value map; the
+//!                 input is only the key (memorization; EM/F1).
+//!
+//! All tasks emit the same Example shape as pretraining, so the
+//! trainer/eval/decode paths are identical across benchmarks.
+
+use crate::data::corpus::Corpus;
+use crate::data::tokenizer::{Tokenizer, EOS, PAD};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub enc: Vec<i32>,
+    pub dec_input: Vec<i32>,
+    pub dec_targets: Vec<i32>,
+    /// Reference answer (content word ids) for EM/F1 via greedy decode.
+    pub answer: Vec<u32>,
+}
+
+fn finish(enc: Vec<i32>, mut dec: Vec<i32>, answer: Vec<u32>) -> Example {
+    dec.push(EOS);
+    let mut dec_input = Vec::with_capacity(dec.len());
+    dec_input.push(PAD);
+    dec_input.extend_from_slice(&dec[..dec.len() - 1]);
+    Example { enc, dec_input, dec_targets: dec, answer }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Glue,
+    SuperGlue,
+    Squad,
+    TriviaQa,
+}
+
+impl TaskKind {
+    pub fn from_str(s: &str) -> Option<TaskKind> {
+        Some(match s {
+            "glue" => TaskKind::Glue,
+            "superglue" | "sg" => TaskKind::SuperGlue,
+            "squad" => TaskKind::Squad,
+            "triviaqa" | "trivia" => TaskKind::TriviaQa,
+            _ => return None,
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Glue => "glue",
+            TaskKind::SuperGlue => "superglue",
+            TaskKind::Squad => "squad",
+            TaskKind::TriviaQa => "triviaqa",
+        }
+    }
+    /// Is the headline metric EM/F1 (vs accuracy)?
+    pub fn is_generative(&self) -> bool {
+        matches!(self, TaskKind::Squad | TaskKind::TriviaQa)
+    }
+}
+
+/// Generator for one benchmark task over a corpus + tokenizer.
+pub struct Task {
+    pub kind: TaskKind,
+    corpus: Corpus,
+    tk: Tokenizer,
+    seed: u64,
+    /// Class-label words (content ids) for classification tasks.
+    label_words: [u32; 2],
+    /// Query-marker word separating context from question.
+    marker: u32,
+}
+
+impl Task {
+    pub fn new(kind: TaskKind, vocab_size: usize, seed: u64) -> Task {
+        let tk = Tokenizer::new(vocab_size).expect("vocab");
+        let slots = tk.content_slots();
+        // Reserve the last few content words as labels/markers.
+        let label_words = [(slots - 1) as u32, (slots - 2) as u32];
+        let marker = (slots - 3) as u32;
+        let corpus = Corpus::new(slots.saturating_sub(8).min(slots), seed ^ 0x7A5C);
+        Task { kind, corpus, tk, seed, label_words, marker }
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tk
+    }
+
+    /// The task's generation seed (eval twins must share it: the glue
+    /// lexicon and the triviaqa key->value map are seed-derived).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// A twin task with identical distribution (same seed); pair with
+    /// `TaskBatcher::eval_split()` for held-out example indices.
+    pub fn eval_twin(&self) -> Task {
+        Task::new(self.kind, self.tk.vocab_size, self.seed)
+    }
+
+    /// Deterministic example `index` (train/eval split by index range).
+    pub fn example(&self, index: u64, max_ctx: usize) -> Example {
+        let mut rng = Rng::new(self.seed ^ index.wrapping_mul(0xD1B5_4A32_D192_ED03));
+        match self.kind {
+            TaskKind::Glue => self.glue(&mut rng, index, max_ctx),
+            TaskKind::SuperGlue => self.superglue(&mut rng, index, max_ctx),
+            TaskKind::Squad => self.squad(&mut rng, index, max_ctx),
+            TaskKind::TriviaQa => self.triviaqa(&mut rng),
+        }
+    }
+
+    /// "Positive lexicon": words whose (seeded) hash is even.
+    fn is_positive(&self, w: u32) -> bool {
+        (w.wrapping_mul(0x9E37_79B9) ^ (self.seed as u32)).count_ones() % 2 == 0
+    }
+
+    fn glue(&self, rng: &mut Rng, index: u64, max_ctx: usize) -> Example {
+        let doc = self.corpus.document(index, 16, max_ctx.saturating_sub(2).max(17));
+        let pos = doc.iter().filter(|&&w| self.is_positive(w)).count();
+        let label = if 2 * pos > doc.len() { 0 } else { 1 };
+        let _ = rng;
+        let mut enc = self.tk.encode_doc(&doc);
+        enc.push(EOS);
+        let ans = self.label_words[label];
+        finish(enc, vec![self.tk.encode_word(ans)], vec![ans])
+    }
+
+    fn superglue(&self, rng: &mut Rng, index: u64, max_ctx: usize) -> Example {
+        let doc = self.corpus.document(index, 16, max_ctx.saturating_sub(5).max(17));
+        // Pick the query pair: 50% a real adjacent pair, 50% a random one.
+        let (a, b, label) = if rng.next_f64() < 0.5 {
+            let i = rng.range(0, doc.len() - 1);
+            (doc[i], doc[i + 1], 0usize)
+        } else {
+            let a = doc[rng.range(0, doc.len())];
+            let b = doc[rng.range(0, doc.len())];
+            let holds = doc.windows(2).any(|w| w[0] == a && w[1] == b);
+            (a, b, if holds { 0 } else { 1 })
+        };
+        let mut enc = self.tk.encode_doc(&doc);
+        enc.push(self.tk.encode_word(self.marker));
+        enc.push(self.tk.encode_word(a));
+        enc.push(self.tk.encode_word(b));
+        enc.push(EOS);
+        let ans = self.label_words[label];
+        finish(enc, vec![self.tk.encode_word(ans)], vec![ans])
+    }
+
+    fn squad(&self, rng: &mut Rng, index: u64, max_ctx: usize) -> Example {
+        let doc = self.corpus.document(index, 20, max_ctx.saturating_sub(4).max(21));
+        // Query: a word with at least 2 successors; answer = next 2 words
+        // after its FIRST occurrence.
+        let qpos = rng.range(0, doc.len() - 2);
+        let q = doc[qpos];
+        let first = doc.iter().position(|&w| w == q).unwrap();
+        let mut answer = Vec::new();
+        for off in 1..=2 {
+            if first + off < doc.len() {
+                answer.push(doc[first + off]);
+            }
+        }
+        let mut enc = self.tk.encode_doc(&doc);
+        enc.push(self.tk.encode_word(self.marker));
+        enc.push(self.tk.encode_word(q));
+        enc.push(EOS);
+        let dec: Vec<i32> = answer.iter().map(|&w| self.tk.encode_word(w)).collect();
+        finish(enc, dec, answer)
+    }
+
+    fn triviaqa(&self, rng: &mut Rng) -> Example {
+        // Closed-book: key in [0, 512), value pair derived by seeded hash.
+        let nkeys = 512.min(self.tk.content_slots() as u64 / 4);
+        let key = rng.next_below(nkeys) as u32;
+        let v1 = ((key as u64).wrapping_mul(self.seed | 1) >> 7) as u32 % (nkeys as u32);
+        let v2 = ((key as u64).wrapping_mul((self.seed | 1).rotate_left(17)) >> 9) as u32
+            % (nkeys as u32);
+        let answer = vec![v1, v2];
+        let enc = vec![
+            self.tk.encode_word(self.marker),
+            self.tk.encode_word(key),
+            EOS,
+        ];
+        let dec: Vec<i32> = answer.iter().map(|&w| self.tk.encode_word(w)).collect();
+        finish(enc, dec, answer)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Metrics: EM / F1 over content words (SQuAD-style)
+// ---------------------------------------------------------------------
+
+pub fn exact_match(pred: &[u32], gold: &[u32]) -> f64 {
+    if pred == gold {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+pub fn f1_score(pred: &[u32], gold: &[u32]) -> f64 {
+    if pred.is_empty() && gold.is_empty() {
+        return 1.0;
+    }
+    if pred.is_empty() || gold.is_empty() {
+        return 0.0;
+    }
+    let mut gold_counts = std::collections::HashMap::new();
+    for &g in gold {
+        *gold_counts.entry(g).or_insert(0usize) += 1;
+    }
+    let mut overlap = 0usize;
+    for &p in pred {
+        if let Some(c) = gold_counts.get_mut(&p) {
+            if *c > 0 {
+                *c -= 1;
+                overlap += 1;
+            }
+        }
+    }
+    if overlap == 0 {
+        return 0.0;
+    }
+    let precision = overlap as f64 / pred.len() as f64;
+    let recall = overlap as f64 / gold.len() as f64;
+    2.0 * precision * recall / (precision + recall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn examples_deterministic() {
+        let t = Task::new(TaskKind::Glue, 2048, 1);
+        let a = t.example(5, 48);
+        let b = t.example(5, 48);
+        assert_eq!(a.enc, b.enc);
+        assert_eq!(a.dec_targets, b.dec_targets);
+    }
+
+    #[test]
+    fn all_tasks_wellformed() {
+        for kind in [TaskKind::Glue, TaskKind::SuperGlue, TaskKind::Squad, TaskKind::TriviaQa] {
+            let t = Task::new(kind, 2048, 3);
+            for i in 0..20 {
+                let ex = t.example(i, 48);
+                assert!(!ex.enc.is_empty(), "{kind:?}");
+                assert_eq!(*ex.dec_targets.last().unwrap(), EOS);
+                assert_eq!(ex.dec_input[0], PAD);
+                assert_eq!(
+                    &ex.dec_input[1..],
+                    &ex.dec_targets[..ex.dec_targets.len() - 1]
+                );
+                assert!(!ex.answer.is_empty(), "{kind:?}");
+                // answer words appear in the decoder targets
+                let tk = t.tokenizer();
+                let content = tk.content_of(tk.until_eos(&ex.dec_targets));
+                assert_eq!(content, ex.answer, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn glue_labels_balancedish() {
+        let t = Task::new(TaskKind::Glue, 2048, 7);
+        let mut counts = [0usize; 2];
+        for i in 0..200 {
+            let ex = t.example(i, 48);
+            let w = ex.answer[0];
+            if w == t.label_words[0] {
+                counts[0] += 1;
+            } else {
+                counts[1] += 1;
+            }
+        }
+        assert!(counts[0] > 30 && counts[1] > 30, "{counts:?}");
+    }
+
+    #[test]
+    fn squad_answer_follows_query() {
+        let t = Task::new(TaskKind::Squad, 2048, 9);
+        for i in 0..30 {
+            let ex = t.example(i, 48);
+            let tk = t.tokenizer();
+            // last content word before EOS in enc (after marker) is the query
+            let body = tk.until_eos(&ex.enc);
+            let q = tk.decode_token(body[body.len() - 1]).unwrap();
+            let ctx: Vec<u32> = tk.content_of(&body[..body.len() - 2]);
+            let first = ctx.iter().position(|&w| w == q).unwrap();
+            assert_eq!(ex.answer[0], ctx[first + 1]);
+        }
+    }
+
+    #[test]
+    fn triviaqa_is_functional() {
+        // same key -> same answer
+        let t = Task::new(TaskKind::TriviaQa, 2048, 11);
+        let mut map = std::collections::HashMap::new();
+        for i in 0..300 {
+            let ex = t.example(i, 48);
+            let key = ex.enc[1];
+            if let Some(prev) = map.insert(key, ex.answer.clone()) {
+                assert_eq!(prev, ex.answer);
+            }
+        }
+    }
+
+    #[test]
+    fn metrics() {
+        assert_eq!(exact_match(&[1, 2], &[1, 2]), 1.0);
+        assert_eq!(exact_match(&[1], &[1, 2]), 0.0);
+        assert_eq!(f1_score(&[1, 2], &[1, 2]), 1.0);
+        assert_eq!(f1_score(&[1, 3], &[1, 2]), 0.5);
+        assert_eq!(f1_score(&[], &[]), 1.0);
+        assert_eq!(f1_score(&[], &[1]), 0.0);
+    }
+}

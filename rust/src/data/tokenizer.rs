@@ -1,0 +1,126 @@
+//! Tokenizer: maps corpus word ids / task strings onto the model's
+//! vocabulary, reserving the special ids T5-style span corruption needs.
+//!
+//! Vocabulary layout (model vocab of size V):
+//!   0              PAD (also decoder BOS)
+//!   1              EOS
+//!   2              UNK
+//!   3..3+S         sentinels <extra_id_0> .. <extra_id_{S-1}> (S = 32)
+//!   3+S..V         content ids (corpus words / task symbols)
+
+use anyhow::{bail, Result};
+
+pub const PAD: i32 = 0;
+pub const EOS: i32 = 1;
+pub const UNK: i32 = 2;
+pub const NUM_SENTINELS: usize = 32;
+pub const FIRST_SENTINEL: i32 = 3;
+pub const FIRST_CONTENT: i32 = FIRST_SENTINEL + NUM_SENTINELS as i32;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: usize) -> Result<Tokenizer> {
+        if vocab_size <= FIRST_CONTENT as usize + 16 {
+            bail!("vocab too small: {vocab_size}");
+        }
+        Ok(Tokenizer { vocab_size })
+    }
+
+    /// Number of content slots available for corpus words.
+    pub fn content_slots(&self) -> usize {
+        self.vocab_size - FIRST_CONTENT as usize
+    }
+
+    /// Sentinel id for span i (T5's <extra_id_i>).
+    pub fn sentinel(&self, i: usize) -> i32 {
+        assert!(i < NUM_SENTINELS, "sentinel overflow");
+        FIRST_SENTINEL + i as i32
+    }
+
+    pub fn is_sentinel(&self, id: i32) -> bool {
+        (FIRST_SENTINEL..FIRST_CONTENT).contains(&id)
+    }
+
+    /// Encode a corpus word id to a token id (UNK if out of range).
+    pub fn encode_word(&self, word: u32) -> i32 {
+        let id = FIRST_CONTENT as i64 + word as i64;
+        if (id as usize) < self.vocab_size {
+            id as i32
+        } else {
+            UNK
+        }
+    }
+
+    pub fn encode_doc(&self, doc: &[u32]) -> Vec<i32> {
+        doc.iter().map(|&w| self.encode_word(w)).collect()
+    }
+
+    /// Decode a token id back to a word id (None for specials).
+    pub fn decode_token(&self, id: i32) -> Option<u32> {
+        if id >= FIRST_CONTENT && (id as usize) < self.vocab_size {
+            Some((id - FIRST_CONTENT) as u32)
+        } else {
+            None
+        }
+    }
+
+    /// Strip specials and return content word ids (used by EM/F1).
+    pub fn content_of(&self, ids: &[i32]) -> Vec<u32> {
+        ids.iter().filter_map(|&t| self.decode_token(t)).collect()
+    }
+
+    /// Truncate at the first EOS (exclusive).
+    pub fn until_eos<'a>(&self, ids: &'a [i32]) -> &'a [i32] {
+        match ids.iter().position(|&t| t == EOS) {
+            Some(p) => &ids[..p],
+            None => ids,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_words() {
+        let tk = Tokenizer::new(2048).unwrap();
+        for w in [0u32, 1, 100, 2000] {
+            let id = tk.encode_word(w);
+            if (w as usize) < tk.content_slots() {
+                assert_eq!(tk.decode_token(id), Some(w));
+            } else {
+                assert_eq!(id, UNK);
+            }
+        }
+    }
+
+    #[test]
+    fn sentinels_distinct_and_flagged() {
+        let tk = Tokenizer::new(2048).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..NUM_SENTINELS {
+            let s = tk.sentinel(i);
+            assert!(tk.is_sentinel(s));
+            assert!(seen.insert(s));
+        }
+        assert!(!tk.is_sentinel(PAD));
+        assert!(!tk.is_sentinel(FIRST_CONTENT));
+    }
+
+    #[test]
+    fn until_eos_truncates() {
+        let tk = Tokenizer::new(2048).unwrap();
+        assert_eq!(tk.until_eos(&[5, 6, EOS, 7]), &[5, 6]);
+        assert_eq!(tk.until_eos(&[5, 6]), &[5, 6]);
+    }
+
+    #[test]
+    fn vocab_too_small_rejected() {
+        assert!(Tokenizer::new(30).is_err());
+    }
+}

@@ -1,0 +1,59 @@
+//! Appendix E: the lightweight-BERT MLM probe.
+//!
+//! The paper reports 54.7 -> 56.2 MLM accuracy from adding AltUp to a
+//! small BERT. We reproduce the *objective* shape by switching span
+//! corruption to single-token spans (mean_span=1), which is masked-token
+//! prediction re-expressed text-to-text; the claim under test is the
+//! same — AltUp's widened representation lifts masked-prediction
+//! accuracy at matched compute.
+
+use crate::coordinator::metrics::MetricsLog;
+use crate::coordinator::pipeline::PipelineOptions;
+use crate::coordinator::trainer::{DataSource, TrainOptions, Trainer};
+use crate::data::batcher::PretrainBatcher;
+use crate::data::span::SpanConfig;
+use crate::experiments::write_csv;
+use crate::runtime::artifact::load_named;
+use crate::runtime::client::Client;
+use crate::runtime::session::Session;
+use anyhow::Result;
+
+pub fn run(opts: &PipelineOptions) -> Result<()> {
+    let client = Client::cpu()?;
+    println!("\n=== Appendix E: MLM-style probe (mean_span=1) ===");
+    println!("paper: lightweight BERT 54.7 -> +AltUp 56.2 MLM accuracy");
+    let mut rows = Vec::new();
+    let mut accs = Vec::new();
+    for name in ["micro-baseline", "micro-altup"] {
+        let artifact = load_named(name)?;
+        let cfg = artifact.config.clone();
+        let session = Session::open(&client, artifact, opts.seed)?;
+        let mut batcher = PretrainBatcher::new(
+            cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, opts.seed ^ 0xB42,
+        );
+        batcher.set_span_config(SpanConfig { corrupt_rate: 0.15, mean_span: 1.0 });
+        let mut trainer =
+            Trainer::new(session, DataSource::Pretrain(batcher), MetricsLog::in_memory());
+        let topts = TrainOptions {
+            steps: opts.pretrain_steps,
+            warmup: opts.warmup,
+            log_every: 100,
+            verbose: opts.verbose,
+            ..Default::default()
+        };
+        trainer.run(&client, &topts)?;
+        let ev = trainer.eval(&client, opts.eval_batches)?;
+        println!("  {name:<16} MLM-style acc {:.2}%", ev.accuracy * 100.0);
+        rows.push(format!("{name},{:.4}", ev.accuracy));
+        accs.push(ev.accuracy);
+    }
+    write_csv("appE_mlm", "model,mlm_acc", &rows)?;
+    if accs.len() == 2 {
+        println!(
+            "  shape: AltUp {} baseline ({:+.2}pp; paper +1.5pp)",
+            if accs[1] >= accs[0] { ">=" } else { "<" },
+            (accs[1] - accs[0]) * 100.0
+        );
+    }
+    Ok(())
+}

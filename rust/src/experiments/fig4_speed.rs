@@ -1,0 +1,133 @@
+//! Figure 4 (and Figure 1's premise): accuracy-vs-latency frontier
+//! across model sizes, baseline vs AltUp, on all four benchmark tasks.
+//!
+//! Scaled reproduction: sizes micro/tiny/mini stand in for B/L/XL; each
+//! (size, variant) is pretrained on the synthetic corpus and finetuned
+//! per task; latency is measured on the compiled forward HLO. The
+//! paper's claim has two parts we verify in shape:
+//!   1. AltUp adds little latency at each size;
+//!   2. at matched accuracy, AltUp models are faster than the dense
+//!      frontier (speedup computed by interpolating the dense
+//!      size-frontier at the AltUp model's accuracy, as in the paper).
+
+use crate::coordinator::pipeline::{run_pipeline, PipelineOptions};
+use crate::data::tasks::TaskKind;
+use crate::experiments::{latency, write_csv};
+use crate::runtime::client::Client;
+use anyhow::Result;
+
+const SIZES: &[&str] = &["micro", "tiny", "mini"];
+const TASKS: &[TaskKind] =
+    &[TaskKind::Glue, TaskKind::SuperGlue, TaskKind::Squad, TaskKind::TriviaQa];
+
+#[derive(Debug, Clone)]
+struct Point {
+    name: String,
+    latency_s: f64,
+    /// metric per task (acc for cls, F1 for generative)
+    scores: Vec<(TaskKind, f64)>,
+}
+
+pub fn run(opts: &PipelineOptions) -> Result<()> {
+    let client = Client::cpu()?;
+    println!("\n=== Figure 4: accuracy vs latency (scaled sizes, 4 tasks) ===");
+    let mut dense: Vec<Point> = Vec::new();
+    let mut altup: Vec<Point> = Vec::new();
+
+    for size in SIZES {
+        for (variant, bucket) in [("baseline", 0), ("altup", 1)] {
+            let name = format!("{size}-{variant}");
+            if !latency::available(&name) {
+                println!("  (skipping {name}: artifact missing)");
+                continue;
+            }
+            let lat = latency::measure(&client, &name)?;
+            let res = run_pipeline(&client, &name, TASKS, opts)?;
+            let scores: Vec<(TaskKind, f64)> = res
+                .task_results
+                .iter()
+                .map(|(k, ev)| {
+                    let v = if k.is_generative() { ev.f1 } else { ev.accuracy };
+                    (*k, v)
+                })
+                .collect();
+            let fwd = lat.forward_s.unwrap_or(lat.train_s / 3.0);
+            println!(
+                "  {name:<16} fwd {:>8.2} ms  pretrain acc {:>5.1}%  {}",
+                fwd * 1e3,
+                res.pretrain_accuracy * 100.0,
+                scores
+                    .iter()
+                    .map(|(k, v)| format!("{}={:.1}", k.name(), v * 100.0))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+            let p = Point { name: name.clone(), latency_s: fwd, scores };
+            if bucket == 0 {
+                dense.push(p);
+            } else {
+                altup.push(p);
+            }
+        }
+    }
+
+    // Speedup at matched accuracy, per task: interpolate the dense
+    // frontier (latency as a function of score) at each AltUp score.
+    println!("\n  speedup at same accuracy (paper: +27%..+87% on L):");
+    let mut rows = Vec::new();
+    for (ti, task) in TASKS.iter().enumerate() {
+        for p in &altup {
+            let score = p.scores.get(ti).map(|(_, v)| *v).unwrap_or(0.0);
+            if let Some(dense_lat) = interpolate_latency(&dense, ti, score) {
+                let speedup = (dense_lat - p.latency_s) / p.latency_s;
+                println!(
+                    "    {:<10} {:<14} speedup {:>6.1}%",
+                    task.name(),
+                    p.name,
+                    speedup * 100.0
+                );
+                rows.push(format!("{},{},{:.4}", task.name(), p.name, speedup));
+            }
+        }
+    }
+    write_csv("fig4_speedup", "task,model,speedup_at_same_accuracy", &rows)?;
+
+    let mut rows2 = Vec::new();
+    for p in dense.iter().chain(altup.iter()) {
+        let scores = p
+            .scores
+            .iter()
+            .map(|(_, v)| format!("{v:.4}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        rows2.push(format!("{},{:.6},{scores}", p.name, p.latency_s));
+    }
+    write_csv("fig4_points", "model,forward_s,glue,superglue,squad_f1,triviaqa_f1", &rows2)?;
+    Ok(())
+}
+
+/// Latency of the dense frontier at `score`, by linear interpolation
+/// over (score, latency) pairs; extrapolates the last segment like the
+/// paper's "extrapolated dense baselines".
+fn interpolate_latency(dense: &[Point], task_idx: usize, score: f64) -> Option<f64> {
+    let mut pts: Vec<(f64, f64)> = dense
+        .iter()
+        .filter_map(|p| p.scores.get(task_idx).map(|(_, v)| (*v, p.latency_s)))
+        .collect();
+    if pts.len() < 2 {
+        return pts.first().map(|&(_, l)| l);
+    }
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let (lo, hi) = (pts[0], pts[pts.len() - 1]);
+    let (a, b) = if score <= pts[1].0 {
+        (pts[0], pts[1])
+    } else {
+        (pts[pts.len() - 2], hi)
+    };
+    let _ = lo;
+    if (b.0 - a.0).abs() < 1e-9 {
+        return Some(b.1);
+    }
+    let t = (score - a.0) / (b.0 - a.0);
+    Some(a.1 + t * (b.1 - a.1))
+}

@@ -1,0 +1,71 @@
+//! Figure 5 + Table 8: Recycled-AltUp.
+//!
+//! Shape: Recycled-AltUp improves pretrain accuracy over the baseline
+//! with no perceptible slowdown (latency ~= baseline, clearly faster
+//! than full AltUp's widened embedding/head path at large vocab), and
+//! (Table 8) transfers to finetune gains.
+
+use crate::coordinator::pipeline::{finetune_task, pretrain, PipelineOptions};
+use crate::data::tasks::TaskKind;
+use crate::experiments::{latency, write_csv};
+use crate::runtime::artifact::load_named;
+use crate::runtime::client::Client;
+use anyhow::Result;
+
+pub fn run(opts: &PipelineOptions, with_finetune: bool) -> Result<()> {
+    let client = Client::cpu()?;
+    println!("\n=== Figure 5: Recycled-AltUp speed + pretrain accuracy ===");
+    println!("paper: Recycled-AltUp ~= baseline speed, strictly better pretrain acc");
+    let names = ["micro-baseline", "micro-recycled", "micro-altup"];
+    let mut rows = Vec::new();
+    let mut results = Vec::new();
+    for name in names {
+        if !latency::available(name) {
+            continue;
+        }
+        let lat = latency::measure(&client, name)?;
+        let artifact = load_named(name)?;
+        let (session, ev, sps) = pretrain(&client, artifact, opts)?;
+        println!(
+            "  {name:<16} train {:>8.2} ms/step ({:>5.2} steps/s)  pretrain acc {:>5.2}%",
+            lat.train_s * 1e3,
+            sps,
+            ev.accuracy * 100.0
+        );
+        rows.push(format!("{name},{:.5},{sps:.3},{:.4}", lat.train_s, ev.accuracy));
+        results.push((name, session, ev, lat));
+    }
+    write_csv("fig5_recycled", "model,train_s,steps_per_s,pretrain_acc", &rows)?;
+
+    if results.len() == 3 {
+        let base_t = results[0].3.train_s;
+        let rec_t = results[1].3.train_s;
+        println!(
+            "  shape: recycled/base latency ratio {:.2} (paper: ~1.0); \
+             recycled acc - base acc = {:+.2}pp (paper: +0.12..+0.21)",
+            rec_t / base_t,
+            (results[1].2.accuracy - results[0].2.accuracy) * 100.0
+        );
+    }
+
+    if with_finetune {
+        println!("\n=== Table 8: Recycled-AltUp finetune ===");
+        let tasks =
+            [TaskKind::Glue, TaskKind::SuperGlue, TaskKind::Squad, TaskKind::TriviaQa];
+        let mut rows8 = Vec::new();
+        for (name, session, _, _) in &results {
+            let mut line = format!("  {name:<16}");
+            let mut csv = name.to_string();
+            for kind in tasks {
+                let ev = finetune_task(&client, session, kind, opts)?;
+                let v = if kind.is_generative() { ev.f1 } else { ev.accuracy };
+                line.push_str(&format!(" {}={:.1}", kind.name(), v * 100.0));
+                csv.push_str(&format!(",{:.4}", v));
+            }
+            println!("{line}");
+            rows8.push(csv);
+        }
+        write_csv("table8_recycled_finetune", "model,glue,superglue,squad_f1,triviaqa_f1", &rows8)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Shared latency rig: measured CPU step time per artifact (forward and
+//! train), used by Fig. 1/4/5 and Tables 2-4.
+
+use crate::data::batcher::PretrainBatcher;
+use crate::runtime::artifact::{artifacts_root, load_named};
+use crate::runtime::client::Client;
+use crate::runtime::session::Session;
+use crate::util::bench;
+use anyhow::Result;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct Latency {
+    pub artifact: String,
+    /// Mean forward-pass seconds per batch (None if no forward HLO).
+    pub forward_s: Option<f64>,
+    /// Mean train-step seconds per batch.
+    pub train_s: f64,
+    /// Examples per second per core during training (paper's speed unit).
+    pub train_examples_per_sec: f64,
+}
+
+pub fn available(name: &str) -> bool {
+    artifacts_root().join(name).join("meta.json").exists()
+}
+
+/// Measure one artifact's latencies (compiles on first use, cached).
+pub fn measure(client: &Client, name: &str) -> Result<Latency> {
+    let artifact = load_named(name)?;
+    let cfg = artifact.config.clone();
+    let mut b = PretrainBatcher::new(cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, 3);
+    let batch = b.next_batch();
+
+    let forward_s = if artifact.has("forward") {
+        let mut s = Session::open_eval(client, artifact.clone(), 0)?;
+        let st = bench::bench(
+            &format!("{name}:fwd"),
+            2,
+            5,
+            Duration::from_millis(400),
+            || s.forward_step(client, &batch).unwrap(),
+        );
+        Some(st.mean.as_secs_f64())
+    } else {
+        None
+    };
+
+    let mut s = Session::open(client, artifact, 0)?;
+    let st = bench::bench(
+        &format!("{name}:train"),
+        2,
+        5,
+        Duration::from_millis(600),
+        || {
+            s.train_step(1e-3, 1, &batch).unwrap();
+        },
+    );
+    let train_s = st.mean.as_secs_f64();
+    Ok(Latency {
+        artifact: name.to_string(),
+        forward_s,
+        train_s,
+        train_examples_per_sec: cfg.batch_size as f64 / train_s,
+    })
+}

@@ -1,0 +1,78 @@
+//! Experiment harnesses — one per paper table/figure (DESIGN.md §5).
+//!
+//! Every harness prints the paper's reference rows next to our measured
+//! (or analytically estimated, for paper-scale rows) values, and writes
+//! CSV under `results/`. Absolute numbers will differ (synthetic data,
+//! 1-core CPU); the *shape* — who wins, by what factor, where the
+//! crossovers fall — is what each harness asserts in its summary line.
+
+pub mod bert_mlm;
+pub mod fig4_speed;
+pub mod fig5_recycled;
+pub mod latency;
+pub mod table1_k;
+pub mod table2_seq;
+pub mod table3_params;
+pub mod table6_moe;
+pub mod table7_selection;
+
+use crate::coordinator::pipeline::PipelineOptions;
+use anyhow::Result;
+
+/// Dispatch an experiment by id ("all" runs the full set).
+pub fn run(which: &str, opts: &PipelineOptions) -> Result<()> {
+    let all = which == "all";
+    let mut ran = false;
+    if all || which == "tab3" || which == "tab4" || which == "tab5" || which == "params" {
+        table3_params::print_table()?;
+        table3_params::measured_speed(opts)?;
+        ran = true;
+    }
+    if all || which == "fig4" || which == "fig1" {
+        fig4_speed::run(opts)?;
+        ran = true;
+    }
+    if all || which == "tab1" {
+        table1_k::run(opts)?;
+        ran = true;
+    }
+    if all || which == "fig5" || which == "tab8" {
+        fig5_recycled::run(opts, which == "tab8" || all)?;
+        ran = true;
+    }
+    if all || which == "tab2" {
+        table2_seq::run(opts)?;
+        ran = true;
+    }
+    if all || which == "tab6" {
+        table6_moe::run(opts)?;
+        ran = true;
+    }
+    if all || which == "tab7" {
+        table7_selection::run(opts)?;
+        ran = true;
+    }
+    if all || which == "bert" || which == "appE" {
+        bert_mlm::run(opts)?;
+        ran = true;
+    }
+    if !ran {
+        anyhow::bail!(
+            "unknown experiment '{which}' (try: fig4 tab1 tab2 tab3 tab6 tab7 fig5 tab8 bert all)"
+        );
+    }
+    Ok(())
+}
+
+/// Write a CSV table under results/.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> Result<()> {
+    std::fs::create_dir_all("results")?;
+    let mut text = String::from(header);
+    text.push('\n');
+    for r in rows {
+        text.push_str(r);
+        text.push('\n');
+    }
+    std::fs::write(format!("results/{name}.csv"), text)?;
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Table 6 (App. C): AltUp + partial-experts MoE synergy.
+//!
+//! Paper shape at 100k steps: MoE > baseline, AltUp > MoE, and
+//! AltUp+MoE > each in isolation (additive gains).
+
+use crate::coordinator::pipeline::{pretrain, PipelineOptions};
+use crate::experiments::write_csv;
+use crate::runtime::artifact::load_named;
+use crate::runtime::client::Client;
+use anyhow::Result;
+
+/// Paper Table 6, T5-Small column (pretrain acc @100k).
+const PAPER_S: &[(&str, f64)] = &[
+    ("Baseline", 59.10),
+    ("MoE", 59.42),
+    ("AltUp (K=2)", 59.67),
+    ("AltUp + MoE", 59.91),
+];
+
+pub fn run(opts: &PipelineOptions) -> Result<()> {
+    let client = Client::cpu()?;
+    println!("\n=== Table 6: AltUp + MoE synergy (micro scale) ===");
+    println!("paper reference (T5-S pretrain acc @100k):");
+    for (m, v) in PAPER_S {
+        println!("  {m:<14} {v:.2}");
+    }
+    println!("\nmeasured (pretrain acc, {} steps):", opts.pretrain_steps);
+    let names = [
+        ("micro-baseline", "Baseline"),
+        ("micro-moe", "MoE"),
+        ("micro-altup", "AltUp (K=2)"),
+        ("micro-altup-moe", "AltUp + MoE"),
+    ];
+    let mut rows = Vec::new();
+    let mut accs = Vec::new();
+    for (name, label) in names {
+        let artifact = load_named(name)?;
+        let (_, ev, sps) = pretrain(&client, artifact, opts)?;
+        println!("  {label:<14} acc={:.2}% ({sps:.2} steps/s)", ev.accuracy * 100.0);
+        rows.push(format!("{label},{:.4},{sps:.3}", ev.accuracy));
+        accs.push(ev.accuracy);
+    }
+    write_csv("table6_moe", "model,pretrain_acc,steps_per_s", &rows)?;
+    if accs.len() == 4 {
+        let ok = accs[3] >= accs[2] && accs[3] >= accs[1] && accs[2] >= accs[0];
+        println!(
+            "  shape: AltUp+MoE >= AltUp >= baseline and >= MoE alone ({})",
+            if ok { "OK" } else { "MISS (noise at this step budget)" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Table 7 (App. D): widening mechanisms — Sum vs SameUp vs AltUp.
+//!
+//! Paper shape: all three beat the baseline on pretrain; the
+//! predict-compute-correct variants (SameUp/AltUp) beat plain summation
+//! on finetune, with alternating selection best overall at B/L scale.
+
+use crate::coordinator::pipeline::{run_pipeline, PipelineOptions};
+use crate::data::tasks::TaskKind;
+use crate::experiments::write_csv;
+use crate::runtime::client::Client;
+use anyhow::Result;
+
+/// Paper Table 7, Base rows (pretrain / GLUE / SG / SQuAD-F1).
+const PAPER_B: &[(&str, f64, f64, f64, f64)] = &[
+    ("B (baseline)", 66.42, 84.25, 73.56, 91.19),
+    ("B + Sum", 66.82, 84.85, 75.20, 91.36),
+    ("B + SameUp", 66.82, 84.06, 74.15, 91.76),
+    ("B + AltUp", 66.96, 85.32, 75.80, 92.36),
+];
+
+const TASKS: &[TaskKind] = &[TaskKind::Glue, TaskKind::SuperGlue, TaskKind::Squad];
+
+pub fn run(opts: &PipelineOptions) -> Result<()> {
+    let client = Client::cpu()?;
+    println!("\n=== Table 7: block-selection / widening method comparison ===");
+    println!("paper reference (T5-B): pretrain / GLUE / SG / SQuAD-F1");
+    for (m, p, g, s, q) in PAPER_B {
+        println!("  {m:<14} {p:>6.2} {g:>6.2} {s:>6.2} {q:>6.2}");
+    }
+    println!("\nmeasured (micro):");
+    let names = [
+        ("micro-baseline", "baseline"),
+        ("micro-sum", "Sum"),
+        ("micro-sameup", "SameUp"),
+        ("micro-altup", "AltUp"),
+    ];
+    let mut rows = Vec::new();
+    for (name, label) in names {
+        let res = run_pipeline(&client, name, TASKS, opts)?;
+        let line = res
+            .task_results
+            .iter()
+            .map(|(k, ev)| {
+                let v = if k.is_generative() { ev.f1 } else { ev.accuracy };
+                format!("{}={:.1}", k.name(), v * 100.0)
+            })
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!("  {label:<14} pretrain={:.2}% {line}", res.pretrain_accuracy * 100.0);
+        let vals = res
+            .task_results
+            .iter()
+            .map(|(_, ev)| {
+                format!("{:.4}", if ev.f1 > 0.0 { ev.f1 } else { ev.accuracy })
+            })
+            .collect::<Vec<_>>()
+            .join(",");
+        rows.push(format!("{label},{:.4},{vals}", res.pretrain_accuracy));
+    }
+    write_csv("table7_selection", "model,pretrain_acc,glue,superglue,squad", &rows)?;
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! AltUp: Alternating Updates for Efficient Transformers (NeurIPS 2023).
+//!
+//! Three-layer reproduction stack:
+//! - Layer 1 (build-time python): Pallas kernels for the AltUp
+//!   predict/correct steps and the transformer hot paths.
+//! - Layer 2 (build-time python): config-driven T5-style encoder/decoder
+//!   in JAX with every paper variant, AOT-lowered to HLO text.
+//! - Layer 3 (this crate): the training/serving coordinator. Owns the
+//!   event loop, data pipeline, batching, metrics, checkpoints, and the
+//!   PJRT runtime that executes the AOT artifacts. Python never runs on
+//!   the request path.
+
+pub mod config;
+pub mod coordinator;
+pub mod model;
+pub mod sim;
+pub mod data;
+pub mod experiments;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,274 @@
+//! `altup` CLI — leader entrypoint for the AltUp reproduction stack.
+//!
+//! Subcommands:
+//!   pretrain    --artifact <name> --steps N [--ckpt path] [--log path]
+//!   finetune    --artifact <name> --task glue|superglue|squad|triviaqa
+//!               --ckpt <pretrained> --steps N
+//!   eval        --artifact <name> [--ckpt path] --batches N [--task t]
+//!   serve       --artifact <name> [--ckpt path] --requests N
+//!   params      [--size S|B|L|XL] — analytic parameter table
+//!   latency     --artifact <name> [--kind forward|train_step]
+//!   bench-table <fig4|tab1|tab2|tab3|tab4|tab6|tab7|fig5|bert> [--quick]
+
+use altup::coordinator::metrics::MetricsLog;
+use altup::coordinator::pipeline::{self, PipelineOptions};
+use altup::coordinator::server::{ServerHandle, ServerOptions};
+use altup::coordinator::trainer::{DataSource, TrainOptions, Trainer};
+use altup::data::batcher::{PretrainBatcher, TaskBatcher};
+use altup::data::tasks::{Task, TaskKind};
+use altup::experiments;
+use altup::runtime::artifact::load_named;
+use altup::runtime::client::Client;
+use altup::runtime::params::ParamStore;
+use altup::runtime::session::Session;
+use altup::util::bench;
+use altup::util::cli::Args;
+use anyhow::{bail, Context, Result};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "pretrain" => cmd_pretrain(&args),
+        "finetune" => cmd_finetune(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "params" => cmd_params(&args),
+        "latency" => cmd_latency(&args),
+        "bench-table" => cmd_bench_table(&args),
+        "help" | _ => {
+            println!(
+                "altup — Alternating Updates for Efficient Transformers (NeurIPS 2023)\n\
+                 commands: pretrain finetune eval serve params latency bench-table\n\
+                 see README.md for usage"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn open_session(args: &Args, client: &Client, train: bool) -> Result<Session> {
+    let name = args.get("artifact").context("--artifact <name> required")?;
+    let artifact = load_named(name)?;
+    let seed = args.u64_or("seed", 0);
+    let mut session = if train {
+        Session::open(client, artifact, seed)?
+    } else {
+        Session::open_eval(client, artifact, seed)?
+    };
+    if let Some(ckpt) = args.get("ckpt") {
+        if std::path::Path::new(ckpt).exists() {
+            session.store = ParamStore::load(ckpt, &session.artifact)?;
+            session.invalidate_state();
+            println!("loaded checkpoint {ckpt} @ step {}", session.store.step);
+        }
+    }
+    Ok(session)
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let client = Client::cpu()?;
+    let session = open_session(args, &client, true)?;
+    let cfg = session.artifact.config.clone();
+    println!(
+        "pretraining {} ({} params, variant={}, K={})",
+        session.artifact.name,
+        session.store.num_params(),
+        cfg.variant.as_str(),
+        cfg.k
+    );
+    let batcher = PretrainBatcher::new(
+        cfg.vocab_size,
+        cfg.batch_size,
+        cfg.enc_len,
+        cfg.dec_len,
+        args.u64_or("data-seed", 1),
+    );
+    let log = match args.get("log") {
+        Some(p) => MetricsLog::to_file(p)?,
+        None => MetricsLog::in_memory(),
+    };
+    let mut trainer = Trainer::new(session, DataSource::Pretrain(batcher), log);
+    let opts = TrainOptions {
+        steps: args.u64_or("steps", 200),
+        warmup: args.u64_or("warmup", 1000),
+        base_lr: args.f64_or("lr", 1.0),
+        log_every: args.u64_or("log-every", 10),
+        eval_every: args.u64_or("eval-every", 0),
+        checkpoint_path: args.get("ckpt").map(Into::into),
+        verbose: true,
+        ..Default::default()
+    };
+    let (ema, sps) = trainer.run(&client, &opts)?;
+    let ev = trainer.eval(&client, args.usize_or("eval-batches", 8))?;
+    println!("done: loss_ema={ema:.4} steps/sec={sps:.3} | validation {}", ev.summary());
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let client = Client::cpu()?;
+    let session = open_session(args, &client, true)?;
+    let cfg = session.artifact.config.clone();
+    let kind = TaskKind::from_str(&args.str_or("task", "glue")).context("bad --task")?;
+    let task = Task::new(kind, cfg.vocab_size, args.u64_or("task-seed", 0x7A58));
+    let batcher = TaskBatcher::new(task, cfg.batch_size, cfg.enc_len, cfg.dec_len);
+    let mut trainer = Trainer::new(session, DataSource::Task(batcher), MetricsLog::in_memory());
+    let opts = TrainOptions {
+        steps: args.u64_or("steps", 100),
+        constant_lr: Some(args.f64_or("lr", 1e-3)),
+        log_every: args.u64_or("log-every", 10),
+        verbose: true,
+        ..Default::default()
+    };
+    trainer.run(&client, &opts)?;
+    let mut ev = trainer.eval(&client, args.usize_or("eval-batches", 8))?;
+    if kind.is_generative() {
+        let gen = trainer.eval_generative(&client, 4)?;
+        ev.em = gen.em;
+        ev.f1 = gen.f1;
+    }
+    println!("finetune {} on {}: {}", trainer.session.artifact.name, kind.name(), ev.summary());
+    if let Some(out) = args.get("save") {
+        trainer.session.checkpoint(out)?;
+        println!("saved {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let client = Client::cpu()?;
+    let mut session = open_session(args, &client, false)?;
+    let cfg = session.artifact.config.clone();
+    let batches = args.usize_or("batches", 8);
+    match args.get("task").and_then(TaskKind::from_str) {
+        None => {
+            let mut b = PretrainBatcher::new(
+                cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, 0xE0A1,
+            );
+            let mut loss = 0.0f64;
+            let mut correct = 0.0f64;
+            let mut ntok = 0.0f64;
+            for _ in 0..batches {
+                let m = session.eval_step(&client, &b.next_batch())?;
+                loss += m.loss as f64;
+                correct += m.correct as f64;
+                ntok += m.ntok as f64;
+            }
+            println!(
+                "pretrain-style eval: loss={:.4} acc={:.2}%",
+                loss / ntok.max(1.0),
+                100.0 * correct / ntok.max(1.0)
+            );
+        }
+        Some(kind) => {
+            let task = Task::new(kind, cfg.vocab_size, args.u64_or("task-seed", 0x7A58));
+            let mut tb = TaskBatcher::new(task, cfg.batch_size, cfg.enc_len, cfg.dec_len);
+            tb.eval_split();
+            let tk = altup::data::tokenizer::Tokenizer::new(cfg.vocab_size)?;
+            let mut em = 0.0;
+            let mut f1 = 0.0;
+            let mut n = 0usize;
+            for _ in 0..batches {
+                let batch = tb.next_batch();
+                let rows = session.decode(&client, &batch.enc_tokens)?;
+                for (row, gold) in rows.iter().zip(batch.answers.iter()) {
+                    let pred = tk.content_of(tk.until_eos(row));
+                    em += altup::data::tasks::exact_match(&pred, gold);
+                    f1 += altup::data::tasks::f1_score(&pred, gold);
+                    n += 1;
+                }
+            }
+            println!(
+                "{}: EM={:.2} F1={:.2} (n={n})",
+                kind.name(),
+                100.0 * em / n as f64,
+                100.0 * f1 / n as f64
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = args.get("artifact").context("--artifact required")?.to_string();
+    let opts = ServerOptions {
+        batch_window: std::time::Duration::from_millis(args.u64_or("window-ms", 5)),
+        seed: args.u64_or("seed", 0),
+        checkpoint: args.get("ckpt").map(Into::into),
+    };
+    let n = args.usize_or("requests", 64);
+    let server = ServerHandle::spawn(&name, opts);
+    // Demo client load: send n requests from a task stream.
+    let artifact = load_named(&name)?;
+    let cfg = artifact.config;
+    let task = Task::new(TaskKind::Squad, cfg.vocab_size, 1);
+    let t0 = std::time::Instant::now();
+    let mut latencies = Vec::new();
+    for i in 0..n {
+        let ex = task.example(i as u64, cfg.enc_len - 2);
+        let resp = server.infer(ex.enc)?;
+        latencies.push(resp.latency);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown()?;
+    let s = bench::stats_from("serve", latencies);
+    println!(
+        "served {n} requests in {wall:.2}s ({:.1} req/s), mean latency {:.1} ms, \
+         mean batch fill {:.2}",
+        n as f64 / wall,
+        s.mean_ms(),
+        stats.mean_fill()
+    );
+    Ok(())
+}
+
+fn cmd_params(args: &Args) -> Result<()> {
+    let _ = args;
+    experiments::table3_params::print_table()
+}
+
+fn cmd_latency(args: &Args) -> Result<()> {
+    let client = Client::cpu()?;
+    let name = args.get("artifact").context("--artifact required")?;
+    let kind = args.str_or("kind", "forward");
+    let artifact = load_named(name)?;
+    let cfg = artifact.config.clone();
+    let mut session = Session::open_eval(&client, artifact, 0)?;
+    let mut b = PretrainBatcher::new(cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, 5);
+    let batch = b.next_batch();
+    let stats = match kind.as_str() {
+        "forward" => bench::quick(&format!("{name}:forward"), || {
+            session.forward_step(&client, &batch).unwrap()
+        }),
+        "train_step" => {
+            let mut s2 = Session::open(&client, load_named(name)?, 0)?;
+            bench::quick(&format!("{name}:train"), || {
+                s2.train_step(1e-3, 1, &batch).unwrap();
+            })
+        }
+        _ => bail!("--kind forward|train_step"),
+    };
+    println!("{}", stats.report());
+    Ok(())
+}
+
+fn cmd_bench_table(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let quick = args.has("quick");
+    let opts = if quick {
+        PipelineOptions {
+            pretrain_steps: args.u64_or("pretrain-steps", 60),
+            finetune_steps: args.u64_or("finetune-steps", 30),
+            warmup: 1000,
+            eval_batches: 4,
+            ..Default::default()
+        }
+    } else {
+        PipelineOptions {
+            pretrain_steps: args.u64_or("pretrain-steps", 300),
+            finetune_steps: args.u64_or("finetune-steps", 120),
+            ..Default::default()
+        }
+    };
+    experiments::run(which, &opts)
+}

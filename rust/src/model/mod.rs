@@ -1,0 +1,4 @@
+//! Analytic model accounting (parameter counts, FLOPs) shared by the
+//! experiment harnesses and the roofline simulator.
+
+pub mod counting;

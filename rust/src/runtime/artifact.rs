@@ -1,0 +1,234 @@
+//! Artifact loading: `artifacts/<name>/{meta.json, *.hlo.txt}`.
+//!
+//! `meta.json` is the contract between the python compile path and this
+//! runtime: flat parameter order (sorted names), shapes, init specs,
+//! opt-state slots, and the train/eval/decode input signatures.
+
+use crate::config::ModelConfig;
+use crate::runtime::tensor::DType;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub init: InitSpec,
+}
+
+#[derive(Debug, Clone)]
+pub enum InitSpec {
+    Normal { scale: f64 },
+    Zeros,
+    Ones,
+    Eye { scale: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct OptSlotSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatchInputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Parsed meta.json + paths of the HLO files.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub name: String,
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub raw_config: Json,
+    pub params: Vec<ParamSpec>,
+    pub opt_state: Vec<OptSlotSpec>,
+    pub batch_inputs: Vec<BatchInputSpec>,
+    pub hlo_files: Vec<(String, PathBuf)>,
+    pub param_count_total: usize,
+    pub param_count_embedding: usize,
+    pub flops_per_token: f64,
+}
+
+impl Artifact {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Artifact> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", meta_path.display()))?;
+        let meta = Json::parse(&text).context("parsing meta.json")?;
+
+        let mut params = Vec::new();
+        for p in meta.get("params").as_arr().context("meta.params")? {
+            let name = p.get("name").as_str().context("param name")?.to_string();
+            let shape: Vec<usize> = p
+                .get("shape")
+                .as_arr()
+                .context("param shape")?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            let scale = p.get("scale").as_f64().unwrap_or(1.0);
+            let init = match p.get("init").as_str().unwrap_or("normal") {
+                "zeros" => InitSpec::Zeros,
+                "ones" => InitSpec::Ones,
+                "eye" => InitSpec::Eye { scale },
+                _ => InitSpec::Normal { scale },
+            };
+            let dtype = DType::from_str(p.get("dtype").as_str().unwrap_or("f32"))?;
+            params.push(ParamSpec { name, shape, dtype, init });
+        }
+        // Contract: params are sorted by name (positional marshalling).
+        for w in params.windows(2) {
+            if w[0].name >= w[1].name {
+                bail!("meta.json params not sorted: {} >= {}", w[0].name, w[1].name);
+            }
+        }
+
+        let mut opt_state = Vec::new();
+        for o in meta.get("opt_state").as_arr().context("meta.opt_state")? {
+            opt_state.push(OptSlotSpec {
+                name: o.get("name").as_str().context("opt name")?.to_string(),
+                shape: o
+                    .get("shape")
+                    .as_arr()
+                    .context("opt shape")?
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect(),
+            });
+        }
+
+        let mut batch_inputs = Vec::new();
+        for b in meta.get("batch_inputs").as_arr().context("meta.batch_inputs")? {
+            batch_inputs.push(BatchInputSpec {
+                name: b.get("name").as_str().context("batch name")?.to_string(),
+                shape: b
+                    .get("shape")
+                    .as_arr()
+                    .context("batch shape")?
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect(),
+            });
+        }
+
+        let mut hlo_files = Vec::new();
+        if let Some(arts) = meta.get("artifacts").as_obj() {
+            for (k, v) in arts {
+                if let Some(rel) = v.as_str() {
+                    hlo_files.push((k.clone(), dir.join(rel)));
+                }
+            }
+        }
+
+        let raw_config = meta.get("config").clone();
+        let config = ModelConfig::from_json(&raw_config)?;
+        Ok(Artifact {
+            name: meta.get("name").as_str().unwrap_or("unnamed").to_string(),
+            dir,
+            config,
+            raw_config,
+            params,
+            opt_state,
+            batch_inputs,
+            hlo_files,
+            param_count_total: meta.get("param_count").get("total").as_usize().unwrap_or(0),
+            param_count_embedding: meta
+                .get("param_count")
+                .get("embedding")
+                .as_usize()
+                .unwrap_or(0),
+            flops_per_token: meta.get("flops_per_token").as_f64().unwrap_or(0.0),
+        })
+    }
+
+    pub fn hlo_path(&self, kind: &str) -> Result<&Path> {
+        self.hlo_files
+            .iter()
+            .find(|(k, _)| k == kind)
+            .map(|(_, p)| p.as_path())
+            .with_context(|| format!("artifact {} has no '{kind}' HLO (available: {:?})",
+                self.name, self.hlo_files.iter().map(|(k, _)| k).collect::<Vec<_>>()))
+    }
+
+    pub fn has(&self, kind: &str) -> bool {
+        self.hlo_files.iter().any(|(k, _)| k == kind)
+    }
+
+    /// Total number of f32 elements across parameters.
+    pub fn param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+}
+
+/// Locate the artifacts root: $ALTUP_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("ALTUP_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Load an artifact by suite name, e.g. "micro-altup".
+pub fn load_named(name: &str) -> Result<Artifact> {
+    Artifact::load(artifacts_root().join(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_meta() -> String {
+        r#"{
+          "name": "t", "artifacts": {"train_step": "train_step.hlo.txt"},
+          "config": {"name":"t","d_model":8,"d_ff":16,"num_heads":2,"d_head":4,
+            "enc_layers":1,"dec_layers":1,"vocab_size":32,"rel_pos_buckets":8,
+            "rel_pos_max_dist":16,"enc_len":8,"dec_len":4,"batch_size":2,
+            "variant":"altup","k":2,"seq_stride":4,"seq_first_layer":1,
+            "moe":false,"moe_experts":4,"moe_hidden":4,"kernels":"jnp",
+            "dropout":0.0,"label_smoothing":0.0,"tie_embeddings":false},
+          "params": [
+            {"name":"a/w","shape":[8,16],"dtype":"f32","init":"normal","scale":0.35},
+            {"name":"b/g","shape":[2],"dtype":"f32","init":"ones","scale":1.0}
+          ],
+          "opt_state": [
+            {"name":"a/w@vr","shape":[8],"dtype":"f32"},
+            {"name":"a/w@vc","shape":[16],"dtype":"f32"},
+            {"name":"b/g@v","shape":[2],"dtype":"f32"}
+          ],
+          "batch_inputs": [
+            {"name":"enc_tokens","shape":[2,8],"dtype":"i32"}
+          ],
+          "param_count": {"embedding": 0, "non_embedding": 130, "total": 130},
+          "flops_per_token": 100.0
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_meta() {
+        let tmp = std::env::temp_dir().join(format!("altup-test-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("meta.json"), fake_meta()).unwrap();
+        let a = Artifact::load(&tmp).unwrap();
+        assert_eq!(a.params.len(), 2);
+        assert_eq!(a.opt_state.len(), 3);
+        assert_eq!(a.param_elems(), 8 * 16 + 2);
+        assert_eq!(a.config.d_model, 8);
+        assert!(a.has("train_step"));
+        assert!(!a.has("eval_step"));
+        std::fs::remove_dir_all(&tmp).unwrap();
+    }
+
+    #[test]
+    fn unsorted_params_rejected() {
+        let tmp = std::env::temp_dir().join(format!("altup-test2-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        let bad = fake_meta().replace("a/w", "z/w");
+        std::fs::write(tmp.join("meta.json"), bad).unwrap();
+        assert!(Artifact::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).unwrap();
+    }
+}

@@ -1,0 +1,90 @@
+//! PJRT client wrapper + executable cache.
+//!
+//! One process-wide CPU client; compiled executables are cached per
+//! (artifact, kind) so experiment harnesses can hop between variants
+//! without recompiling.
+
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Wrapper around the PJRT CPU client (xla crate).
+pub struct Client {
+    inner: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+/// A compiled HLO executable plus compile-time metadata.
+pub struct Executable {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub key: String,
+    pub compile_seconds: f64,
+}
+
+impl Client {
+    pub fn cpu() -> Result<Client> {
+        let inner = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Client { inner, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.inner
+    }
+
+    /// Load HLO text from `path`, compile, cache under `key`.
+    pub fn compile_hlo(&self, key: &str, path: &Path) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(key) {
+            return Ok(Rc::clone(e));
+        }
+        let t0 = Instant::now();
+        let path_str = path.to_str().context("non-utf8 path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path_str}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .inner
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let e = Rc::new(Executable {
+            exe,
+            key: key.to_string(),
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        });
+        self.cache.borrow_mut().insert(key.to_string(), Rc::clone(&e));
+        Ok(e)
+    }
+
+    pub fn cached_keys(&self) -> Vec<String> {
+        self.cache.borrow().keys().cloned().collect()
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs (owned or borrowed); returns the
+    /// decomposed output tuple.
+    ///
+    /// All our artifacts are lowered with `return_tuple=True`, so the
+    /// root is a single tuple buffer; we pull it to host and split.
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let outs = self.exe.execute::<L>(inputs)?;
+        let lit = outs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with device-resident buffers (no input host copies).
+    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outs = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
+        let lit = outs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: load AOT HLO artifacts, compile once, execute from the
+//! coordinator's hot path (DESIGN.md S7-S8). Python never runs here.
+
+pub mod artifact;
+pub mod client;
+pub mod params;
+pub mod session;
+pub mod tensor;

@@ -1,0 +1,270 @@
+//! Parameter store: host-side model state initialized from the
+//! artifact's init specs, plus binary checkpointing.
+//!
+//! Initialization is deterministic (SplitMix64 per-parameter streams),
+//! so a (config, seed) pair always yields the same model — across runs
+//! and across experiment harnesses.
+
+use crate::runtime::artifact::{Artifact, InitSpec};
+use crate::runtime::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Host-resident parameters + optimizer state, in meta.json order.
+pub struct ParamStore {
+    pub names: Vec<String>,
+    pub params: Vec<Tensor>,
+    pub opt_names: Vec<String>,
+    pub opt: Vec<Tensor>,
+    pub step: u64,
+}
+
+impl ParamStore {
+    /// Initialize from the artifact's init specs.
+    pub fn init(artifact: &Artifact, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed ^ 0xA17A_B001);
+        let mut params = Vec::with_capacity(artifact.params.len());
+        let mut names = Vec::with_capacity(artifact.params.len());
+        for spec in &artifact.params {
+            let n: usize = spec.shape.iter().product();
+            let mut stream = rng.fork(hash_name(&spec.name));
+            let data: Vec<f32> = match &spec.init {
+                InitSpec::Zeros => vec![0.0; n],
+                InitSpec::Ones => vec![1.0; n],
+                InitSpec::Eye { scale } => {
+                    let dim = spec.shape[0];
+                    let mut v = vec![0.0f32; n];
+                    for i in 0..dim {
+                        v[i * dim + i] = *scale as f32;
+                    }
+                    v
+                }
+                InitSpec::Normal { scale } => (0..n)
+                    .map(|_| (stream.next_normal() * scale) as f32)
+                    .collect(),
+            };
+            params.push(Tensor::f32(spec.shape.clone(), data));
+            names.push(spec.name.clone());
+        }
+        let mut opt = Vec::with_capacity(artifact.opt_state.len());
+        let mut opt_names = Vec::with_capacity(artifact.opt_state.len());
+        for slot in &artifact.opt_state {
+            opt.push(Tensor::zeros_f32(slot.shape.clone()));
+            opt_names.push(slot.name.clone());
+        }
+        ParamStore { names, params, opt_names, opt, step: 0 }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|t| t.len()).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.names.iter().position(|n| n == name).map(|i| &self.params[i])
+    }
+
+    /// RMS of one parameter (diagnostics).
+    pub fn rms(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|t| t.as_f32().ok()).map(|v| {
+            (v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / v.len() as f64).sqrt()
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Checkpointing: minimal length-prefixed binary format (magic,
+    // step, then name/shape/data records for params and opt state).
+    // ------------------------------------------------------------------
+
+    const MAGIC: &'static [u8; 8] = b"ALTUPCK1";
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+        f.write_all(Self::MAGIC)?;
+        f.write_all(&self.step.to_le_bytes())?;
+        for (section, names, tensors) in [
+            (0u32, &self.names, &self.params),
+            (1u32, &self.opt_names, &self.opt),
+        ] {
+            f.write_all(&section.to_le_bytes())?;
+            f.write_all(&(names.len() as u32).to_le_bytes())?;
+            for (name, t) in names.iter().zip(tensors.iter()) {
+                let nb = name.as_bytes();
+                f.write_all(&(nb.len() as u32).to_le_bytes())?;
+                f.write_all(nb)?;
+                f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+                for &d in &t.shape {
+                    f.write_all(&(d as u64).to_le_bytes())?;
+                }
+                let data = t.as_f32()?;
+                // SAFETY: f32 slice to bytes, little-endian hosts only.
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                f.write_all(bytes)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>, artifact: &Artifact) -> Result<ParamStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let mut step_bytes = [0u8; 8];
+        f.read_exact(&mut step_bytes)?;
+        let step = u64::from_le_bytes(step_bytes);
+
+        let mut store = ParamStore::init(artifact, 0);
+        store.step = step;
+        for expected_section in 0u32..2 {
+            let mut b4 = [0u8; 4];
+            f.read_exact(&mut b4)?;
+            if u32::from_le_bytes(b4) != expected_section {
+                bail!("checkpoint section mismatch");
+            }
+            f.read_exact(&mut b4)?;
+            let count = u32::from_le_bytes(b4) as usize;
+            for _ in 0..count {
+                f.read_exact(&mut b4)?;
+                let name_len = u32::from_le_bytes(b4) as usize;
+                let mut nb = vec![0u8; name_len];
+                f.read_exact(&mut nb)?;
+                let name = String::from_utf8(nb)?;
+                f.read_exact(&mut b4)?;
+                let rank = u32::from_le_bytes(b4) as usize;
+                let mut shape = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    let mut b8 = [0u8; 8];
+                    f.read_exact(&mut b8)?;
+                    shape.push(u64::from_le_bytes(b8) as usize);
+                }
+                let n: usize = shape.iter().product();
+                let mut bytes = vec![0u8; n * 4];
+                f.read_exact(&mut bytes)?;
+                let data: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                let (names, tensors) = if expected_section == 0 {
+                    (&store.names, &mut store.params)
+                } else {
+                    (&store.opt_names, &mut store.opt)
+                };
+                let idx = names
+                    .iter()
+                    .position(|x| *x == name)
+                    .with_context(|| format!("checkpoint tensor {name} not in artifact"))?;
+                if tensors[idx].shape != shape {
+                    bail!(
+                        "checkpoint shape mismatch for {name}: {:?} vs {:?}",
+                        shape,
+                        tensors[idx].shape
+                    );
+                }
+                tensors[idx] = Tensor::f32(shape, data);
+            }
+        }
+        Ok(store)
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{BatchInputSpec, OptSlotSpec, ParamSpec};
+    use crate::runtime::tensor::DType;
+    use crate::config::{ModelConfig, Variant};
+
+    pub(crate) fn toy_artifact() -> Artifact {
+        Artifact {
+            name: "toy".into(),
+            dir: std::path::PathBuf::from("/tmp"),
+            config: ModelConfig {
+                name: "toy".into(),
+                d_model: 8, d_ff: 16, num_heads: 2, d_head: 4,
+                enc_layers: 1, dec_layers: 1, vocab_size: 32,
+                rel_pos_buckets: 8, enc_len: 8, dec_len: 4, batch_size: 2,
+                variant: Variant::AltUp, k: 2, seq_stride: 4,
+                moe: false, moe_experts: 4, moe_hidden: 4, dropout: 0.0,
+            },
+            raw_config: crate::util::json::Json::Null,
+            params: vec![
+                ParamSpec { name: "a/p".into(), shape: vec![2, 2], dtype: DType::F32, init: InitSpec::Eye { scale: 1.0 } },
+                ParamSpec { name: "a/w".into(), shape: vec![8, 16], dtype: DType::F32, init: InitSpec::Normal { scale: 0.35 } },
+                ParamSpec { name: "b/s".into(), shape: vec![8], dtype: DType::F32, init: InitSpec::Ones },
+            ],
+            opt_state: vec![
+                OptSlotSpec { name: "a/p@v".into(), shape: vec![2, 2] },
+                OptSlotSpec { name: "a/w@vr".into(), shape: vec![8] },
+                OptSlotSpec { name: "a/w@vc".into(), shape: vec![16] },
+                OptSlotSpec { name: "b/s@v".into(), shape: vec![8] },
+            ],
+            batch_inputs: vec![BatchInputSpec { name: "enc".into(), shape: vec![2, 8] }],
+            hlo_files: vec![],
+            param_count_total: 4 + 128 + 8,
+            param_count_embedding: 0,
+            flops_per_token: 1.0,
+        }
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = toy_artifact();
+        let s1 = ParamStore::init(&a, 7);
+        let s2 = ParamStore::init(&a, 7);
+        assert_eq!(s1.params[1].as_f32().unwrap(), s2.params[1].as_f32().unwrap());
+        let s3 = ParamStore::init(&a, 8);
+        assert_ne!(s1.params[1].as_f32().unwrap(), s3.params[1].as_f32().unwrap());
+    }
+
+    #[test]
+    fn init_specs_honored() {
+        let a = toy_artifact();
+        let s = ParamStore::init(&a, 0);
+        assert_eq!(s.params[0].as_f32().unwrap(), &[1.0, 0.0, 0.0, 1.0]);
+        assert!(s.params[2].as_f32().unwrap().iter().all(|&x| x == 1.0));
+        let w = s.params[1].as_f32().unwrap();
+        let rms = (w.iter().map(|&x| x * x).sum::<f32>() / w.len() as f32).sqrt();
+        assert!((rms - 0.35).abs() < 0.08, "rms={rms}");
+        assert!(s.opt.iter().all(|t| t.as_f32().unwrap().iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let a = toy_artifact();
+        let mut s = ParamStore::init(&a, 3);
+        s.step = 42;
+        let path = std::env::temp_dir().join(format!("altup-ckpt-{}", std::process::id()));
+        s.save(&path).unwrap();
+        let r = ParamStore::load(&path, &a).unwrap();
+        assert_eq!(r.step, 42);
+        for (t1, t2) in s.params.iter().zip(r.params.iter()) {
+            assert_eq!(t1.as_f32().unwrap(), t2.as_f32().unwrap());
+        }
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn num_params() {
+        let s = ParamStore::init(&toy_artifact(), 0);
+        assert_eq!(s.num_params(), 4 + 128 + 8);
+    }
+}

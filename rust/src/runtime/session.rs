@@ -1,0 +1,312 @@
+//! Typed step sessions: the bridge between the coordinator's training
+//! loop and the compiled HLO executables.
+//!
+//! A `Session` owns the param store and the compiled train/eval/decode
+//! executables for one artifact, and marshals the flat input/output
+//! signature recorded in meta.json:
+//!
+//!   train:  (params..., opt..., step, lr, seed, enc, dec_in, dec_tgt)
+//!           -> (params'..., opt'..., loss, correct, ntok)
+//!   eval:   (params..., enc, dec_in, dec_tgt) -> (loss_sum, correct, ntok)
+//!   decode: (params..., enc) -> (tokens,)
+
+use crate::data::batcher::Batch;
+use crate::runtime::artifact::Artifact;
+use crate::runtime::client::{Client, Executable};
+use crate::runtime::params::ParamStore;
+use crate::runtime::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::rc::Rc;
+use std::time::Instant;
+
+pub struct Session {
+    pub artifact: Artifact,
+    pub store: ParamStore,
+    train: Option<Rc<Executable>>,
+    eval: Option<Rc<Executable>>,
+    decode: Option<Rc<Executable>>,
+    forward: Option<Rc<Executable>>,
+    /// §Perf (L3): params/opt kept as XLA literals between train steps,
+    /// skipping the literal -> Vec<f32> -> literal round-trip that
+    /// dominated marshalling time (2 full copies of all parameters per
+    /// step). `state_step` records the store step the cache mirrors; a
+    /// mismatch (e.g. after loading a checkpoint) invalidates it.
+    state: Option<(Vec<xla::Literal>, Vec<xla::Literal>)>,
+    state_step: u64,
+    /// Wall-clock spent inside PJRT execute (per step kind).
+    pub exec_seconds: f64,
+    /// Wall-clock spent marshalling literals.
+    pub marshal_seconds: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub correct: f32,
+    pub ntok: f32,
+}
+
+impl StepMetrics {
+    pub fn accuracy(&self) -> f32 {
+        if self.ntok > 0.0 {
+            self.correct / self.ntok
+        } else {
+            0.0
+        }
+    }
+}
+
+impl Session {
+    /// Load + compile the artifact's executables (lazily per kind).
+    pub fn open(client: &Client, artifact: Artifact, seed: u64) -> Result<Session> {
+        let store = ParamStore::init(&artifact, seed);
+        let mut s = Session {
+            artifact,
+            store,
+            train: None,
+            eval: None,
+            decode: None,
+            forward: None,
+            state: None,
+            state_step: 0,
+            exec_seconds: 0.0,
+            marshal_seconds: 0.0,
+        };
+        // Compile the train step eagerly: it is the common case and we
+        // want compile failures surfaced at open().
+        s.train = Some(s.compile(client, "train_step")?);
+        Ok(s)
+    }
+
+    /// Open for inference/eval only (no train executable).
+    pub fn open_eval(_client: &Client, artifact: Artifact, seed: u64) -> Result<Session> {
+        let store = ParamStore::init(&artifact, seed);
+        Ok(Session {
+            artifact,
+            store,
+            train: None,
+            eval: None,
+            decode: None,
+            forward: None,
+            state: None,
+            state_step: 0,
+            exec_seconds: 0.0,
+            marshal_seconds: 0.0,
+        })
+    }
+
+    /// Drop the cached literal state (call after replacing `store`).
+    pub fn invalidate_state(&mut self) {
+        self.state = None;
+    }
+
+    fn state_is_fresh(&self) -> bool {
+        // ALTUP_NO_STATE_CACHE=1 disables the cache (perf A/B switch
+        // used by the §Perf log in EXPERIMENTS.md).
+        if std::env::var_os("ALTUP_NO_STATE_CACHE").is_some() {
+            return false;
+        }
+        self.state.is_some() && self.state_step == self.store.step
+    }
+
+    /// Write the cached literal state back into the host param store
+    /// (no-op if the cache is absent or stale). Must be called before
+    /// reading `store.params` after training — `checkpoint()` and the
+    /// eval paths do so automatically.
+    pub fn sync_store(&mut self) -> Result<()> {
+        if !self.state_is_fresh() {
+            return Ok(());
+        }
+        let (params, opt) = self.state.as_ref().unwrap();
+        for (i, lit) in params.iter().enumerate() {
+            self.store.params[i] = Tensor::from_literal(lit)?;
+        }
+        for (i, lit) in opt.iter().enumerate() {
+            self.store.opt[i] = Tensor::from_literal(lit)?;
+        }
+        Ok(())
+    }
+
+    /// Sync + save a checkpoint.
+    pub fn checkpoint(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.sync_store()?;
+        self.store.save(path)
+    }
+
+    /// Upload params from the host store unless the cache is fresh (in
+    /// which case the caller chains refs to the cache instead).
+    fn upload_params_if_stale(&self) -> Result<Vec<xla::Literal>> {
+        if self.state_is_fresh() {
+            Ok(Vec::new())
+        } else {
+            self.store.params.iter().map(|t| t.to_literal()).collect()
+        }
+    }
+
+    fn compile(&self, client: &Client, kind: &str) -> Result<Rc<Executable>> {
+        let key = format!("{}:{}", self.artifact.name, kind);
+        client.compile_hlo(&key, self.artifact.hlo_path(kind)?)
+    }
+
+    pub fn ensure_eval(&mut self, client: &Client) -> Result<()> {
+        if self.eval.is_none() {
+            self.eval = Some(self.compile(client, "eval_step")?);
+        }
+        Ok(())
+    }
+    pub fn ensure_decode(&mut self, client: &Client) -> Result<()> {
+        if self.decode.is_none() {
+            self.decode = Some(self.compile(client, "decode_step")?);
+        }
+        Ok(())
+    }
+    pub fn ensure_forward(&mut self, client: &Client) -> Result<()> {
+        if self.forward.is_none() {
+            self.forward = Some(self.compile(client, "forward")?);
+        }
+        Ok(())
+    }
+
+    fn batch_literals(&self, batch: &Batch) -> Result<Vec<xla::Literal>> {
+        let cfg = &self.artifact.config;
+        if batch.enc_tokens.len() != cfg.batch_size * cfg.enc_len {
+            bail!(
+                "batch enc size {} != {}x{}",
+                batch.enc_tokens.len(),
+                cfg.batch_size,
+                cfg.enc_len
+            );
+        }
+        let enc = Tensor::i32(vec![cfg.batch_size, cfg.enc_len], batch.enc_tokens.clone());
+        let dec_in = Tensor::i32(vec![cfg.batch_size, cfg.dec_len], batch.dec_input.clone());
+        let dec_tgt = Tensor::i32(vec![cfg.batch_size, cfg.dec_len], batch.dec_targets.clone());
+        Ok(vec![enc.to_literal()?, dec_in.to_literal()?, dec_tgt.to_literal()?])
+    }
+
+    /// One optimizer step. Keeps params/opt as cached literals between
+    /// steps (§Perf L3); the host store is synced lazily via
+    /// `sync_store()` / `checkpoint()`.
+    pub fn train_step(&mut self, lr: f32, seed: u32, batch: &Batch) -> Result<StepMetrics> {
+        let exe = Rc::clone(self.train.as_ref().context("train exe not compiled")?);
+        let np = self.store.params.len();
+        let no = self.store.opt.len();
+
+        let t0 = Instant::now();
+        let use_cache = self.state_is_fresh();
+        let mut scratch: Vec<xla::Literal> = Vec::with_capacity(if use_cache {
+            6
+        } else {
+            np + no + 6
+        });
+        if !use_cache {
+            for t in &self.store.params {
+                scratch.push(t.to_literal()?);
+            }
+            for t in &self.store.opt {
+                scratch.push(t.to_literal()?);
+            }
+        }
+        let step_f = (self.store.step + 1) as f32;
+        scratch.push(Tensor::scalar_f32(step_f).to_literal()?);
+        scratch.push(Tensor::scalar_f32(lr).to_literal()?);
+        scratch.push(Tensor::scalar_u32(seed).to_literal()?);
+        scratch.extend(self.batch_literals(batch)?);
+        let refs: Vec<&xla::Literal> = if use_cache {
+            let (p, o) = self.state.as_ref().unwrap();
+            p.iter().chain(o.iter()).chain(scratch.iter()).collect()
+        } else {
+            scratch.iter().collect()
+        };
+        self.marshal_seconds += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let mut outs = exe.run(&refs)?;
+        self.exec_seconds += t1.elapsed().as_secs_f64();
+
+        if outs.len() != np + no + 3 {
+            bail!("train_step returned {} outputs, expected {}", outs.len(), np + no + 3);
+        }
+        let t2 = Instant::now();
+        let metrics = outs.split_off(np + no);
+        let opt_lits = outs.split_off(np);
+        if std::env::var_os("ALTUP_NO_STATE_CACHE").is_some() {
+            // A/B mode: full host round-trip, as before the §Perf pass.
+            for (i, lit) in outs.iter().enumerate() {
+                self.store.params[i] = Tensor::from_literal(lit)?;
+            }
+            for (i, lit) in opt_lits.iter().enumerate() {
+                self.store.opt[i] = Tensor::from_literal(lit)?;
+            }
+            self.state = None;
+        } else {
+            self.state = Some((outs, opt_lits));
+        }
+        self.store.step += 1;
+        self.state_step = self.store.step;
+        self.marshal_seconds += t2.elapsed().as_secs_f64();
+        let loss = Tensor::from_literal(&metrics[0])?.as_f32()?[0];
+        let correct = Tensor::from_literal(&metrics[1])?.as_f32()?[0];
+        let ntok = Tensor::from_literal(&metrics[2])?.as_f32()?[0];
+        Ok(StepMetrics { loss, correct, ntok })
+    }
+
+    /// Run an executable with `params... + extra` inputs, reusing the
+    /// cached parameter literals when fresh.
+    fn run_with_params(
+        &mut self,
+        exe: Rc<Executable>,
+        extra: Vec<xla::Literal>,
+    ) -> Result<Vec<xla::Literal>> {
+        let scratch = self.upload_params_if_stale()?;
+        let refs: Vec<&xla::Literal> = if scratch.is_empty() {
+            let (p, _) = self.state.as_ref().unwrap();
+            p.iter().chain(extra.iter()).collect()
+        } else {
+            scratch.iter().chain(extra.iter()).collect()
+        };
+        let t1 = Instant::now();
+        let outs = exe.run(&refs)?;
+        self.exec_seconds += t1.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    /// Teacher-forced eval on one batch (sums, not means).
+    pub fn eval_step(&mut self, client: &Client, batch: &Batch) -> Result<StepMetrics> {
+        self.ensure_eval(client)?;
+        let exe = Rc::clone(self.eval.as_ref().unwrap());
+        let extra = self.batch_literals(batch)?;
+        let outs = self.run_with_params(exe, extra)?;
+        Ok(StepMetrics {
+            loss: Tensor::from_literal(&outs[0])?.as_f32()?[0],
+            correct: Tensor::from_literal(&outs[1])?.as_f32()?[0],
+            ntok: Tensor::from_literal(&outs[2])?.as_f32()?[0],
+        })
+    }
+
+    /// Greedy decode: (B, enc_len) token ids -> (B, dec_len) outputs.
+    pub fn decode(&mut self, client: &Client, enc_tokens: &[i32]) -> Result<Vec<Vec<i32>>> {
+        self.ensure_decode(client)?;
+        let cfg = self.artifact.config.clone();
+        if enc_tokens.len() != cfg.batch_size * cfg.enc_len {
+            bail!("decode batch must be exactly (batch_size, enc_len)");
+        }
+        let exe = Rc::clone(self.decode.as_ref().unwrap());
+        let extra = vec![
+            Tensor::i32(vec![cfg.batch_size, cfg.enc_len], enc_tokens.to_vec()).to_literal()?,
+        ];
+        let outs = self.run_with_params(exe, extra)?;
+        let t = Tensor::from_literal(&outs[0])?;
+        let data = t.as_i32()?;
+        Ok(data.chunks(cfg.dec_len).map(|c| c.to_vec()).collect())
+    }
+
+    /// Forward-only latency probe: logits for (enc, dec_in).
+    pub fn forward_step(&mut self, client: &Client, batch: &Batch) -> Result<()> {
+        self.ensure_forward(client)?;
+        let exe = Rc::clone(self.forward.as_ref().unwrap());
+        let lits = self.batch_literals(batch)?;
+        let extra = vec![lits[0].clone(), lits[1].clone()];
+        let _ = self.run_with_params(exe, extra)?;
+        Ok(())
+    }
+}

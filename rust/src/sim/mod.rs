@@ -1,0 +1,10 @@
+//! TPUv3 performance model (DESIGN.md S13, §Hardware-Adaptation).
+//!
+//! The paper measures latency on TPUv3-8; this testbed is a 1-core CPU.
+//! Speed *ratios* between variants are architecture-determined, but for
+//! the paper-scale rows of Tables 3-5 we additionally estimate absolute
+//! TPUv3 step time with a two-resource roofline (MXU FLOP/s vs HBM
+//! bytes/s), plus the VMEM footprint of the L1 kernels' BlockSpecs.
+
+pub mod roofline;
+pub mod vmem;

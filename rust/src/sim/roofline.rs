@@ -1,0 +1,123 @@
+//! Two-resource roofline: step latency = max(FLOPs/peak_flops,
+//! bytes/peak_bw) summed over layer-granularity phases.
+
+use crate::config::ModelConfig;
+use crate::model::counting::{count_params, forward_flops, train_flops};
+
+/// TPUv3 single-core peaks (per the public spec: 123 TFLOP/s bf16 per
+/// chip / 2 cores, ~900 GB/s HBM per chip).
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub name: &'static str,
+    pub peak_flops: f64,
+    pub peak_bw: f64,
+}
+
+pub const TPU_V3_CORE: Device =
+    Device { name: "tpuv3-core", peak_flops: 61.5e12, peak_bw: 450e9 };
+
+/// A generic single CPU core (used to sanity-check measured numbers).
+pub const CPU_CORE: Device = Device { name: "cpu-core", peak_flops: 5.0e10, peak_bw: 2.0e10 };
+
+#[derive(Debug, Clone, Copy)]
+pub struct Estimate {
+    /// Seconds per training step (fwd+bwd) for one batch.
+    pub train_step_seconds: f64,
+    /// Seconds per forward pass for one batch.
+    pub forward_seconds: f64,
+    /// Fraction of time the step is compute-bound (vs bandwidth).
+    pub compute_bound_frac: f64,
+}
+
+/// Roofline latency estimate for one batch on one device core.
+pub fn estimate(cfg: &ModelConfig, dev: &Device) -> Estimate {
+    let b = cfg.batch_size as f64;
+    let fwd_flops = forward_flops(cfg) * b;
+    let trn_flops = train_flops(cfg) * b;
+
+    // Bytes: weights read once per step + activations streamed.
+    let params = count_params(cfg).total() as f64;
+    let weight_bytes = params * 4.0;
+    let act_elems = {
+        let layers = (cfg.enc_layers + cfg.dec_layers) as f64;
+        let tokens = b * (cfg.enc_len + cfg.dec_len) as f64;
+        // repr + ffn hidden + attention heads, per layer
+        tokens * (cfg.repr_width() as f64 + cfg.d_ff as f64 + (cfg.num_heads * cfg.d_head) as f64)
+            * layers
+    };
+    let act_bytes = act_elems * 4.0;
+    // AltUp streams K blocks through predict/correct: 2 reads + 1 write.
+    let altup_bytes = if cfg.variant.is_block_widened() {
+        let tokens = b * (cfg.enc_len + cfg.dec_len) as f64;
+        3.0 * tokens * cfg.repr_width() as f64 * 4.0 * (cfg.enc_layers + cfg.dec_layers) as f64
+    } else {
+        0.0
+    };
+
+    let fwd_bytes = weight_bytes + act_bytes + altup_bytes;
+    let trn_bytes = 3.0 * weight_bytes + 2.0 * (act_bytes + altup_bytes); // params+grads+opt
+
+    let t_fwd_c = fwd_flops / dev.peak_flops;
+    let t_fwd_m = fwd_bytes / dev.peak_bw;
+    let t_trn_c = trn_flops / dev.peak_flops;
+    let t_trn_m = trn_bytes / dev.peak_bw;
+    Estimate {
+        forward_seconds: t_fwd_c.max(t_fwd_m),
+        train_step_seconds: t_trn_c.max(t_trn_m),
+        compute_bound_frac: t_trn_c / (t_trn_c + t_trn_m),
+    }
+}
+
+/// Relative speed of `a` vs `b` (a_speed / b_speed), per roofline.
+pub fn speed_ratio(a: &ModelConfig, b: &ModelConfig, dev: &Device) -> f64 {
+    estimate(b, dev).train_step_seconds / estimate(a, dev).train_step_seconds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{paper_preset, Variant};
+
+    #[test]
+    fn altup_is_nearly_free_dense_is_not() {
+        // The paper's headline shape: AltUp ~ baseline speed; Dense2X
+        // costs ~2-4x. (Table 4's measured ratios: 52.4 -> 42.3 AltUp,
+        // -> 32.9 Dense2X, -> 12.6 Dense4X examples/s.)
+        let base = paper_preset("B", Variant::Baseline, 2);
+        let alt = paper_preset("B", Variant::AltUp, 2);
+        let d2 = paper_preset("B", Variant::DenseWide, 2);
+        let d4 = paper_preset("B", Variant::DenseWide, 4);
+        let r_alt = speed_ratio(&alt, &base, &TPU_V3_CORE);
+        let r_d2 = speed_ratio(&d2, &base, &TPU_V3_CORE);
+        let r_d4 = speed_ratio(&d4, &base, &TPU_V3_CORE);
+        assert!(r_alt > 0.70, "altup ratio {r_alt}");
+        assert!(r_d2 < 0.62, "dense2x ratio {r_d2}");
+        assert!(r_d4 < 0.30, "dense4x ratio {r_d4}");
+        // Paper Table 4 measured: alt 0.81x, d2 0.63x, d4 0.24x of baseline.
+    }
+
+    #[test]
+    fn recycled_at_least_as_fast_as_altup() {
+        let alt = paper_preset("B", Variant::AltUp, 2);
+        let rec = paper_preset("B", Variant::Recycled, 2);
+        let r = speed_ratio(&rec, &alt, &TPU_V3_CORE);
+        assert!(r >= 1.0, "recycled ratio {r}");
+    }
+
+    #[test]
+    fn seq_altup_faster_than_baseline() {
+        let base = paper_preset("B", Variant::Baseline, 2);
+        let seq = paper_preset("B", Variant::SeqAltUp, 2);
+        let r = speed_ratio(&seq, &base, &TPU_V3_CORE);
+        assert!(r > 1.2, "seq ratio {r}");
+    }
+
+    #[test]
+    fn estimates_positive_and_ordered() {
+        let cfg = paper_preset("L", Variant::Baseline, 2);
+        let e = estimate(&cfg, &TPU_V3_CORE);
+        assert!(e.forward_seconds > 0.0);
+        assert!(e.train_step_seconds > e.forward_seconds);
+        assert!((0.0..=1.0).contains(&e.compute_bound_frac));
+    }
+}

@@ -1,0 +1,137 @@
+//! VMEM footprint + MXU engagement estimates for the L1 Pallas kernels'
+//! BlockSpecs (the interpret=True CPU path gives no TPU timing, so this
+//! is the §Perf evidence for the kernel layer — see DESIGN.md).
+
+/// TPUv3 VMEM per core: 16 MiB.
+pub const VMEM_BYTES: usize = 16 * 1024 * 1024;
+
+#[derive(Debug, Clone)]
+pub struct KernelFootprint {
+    pub name: String,
+    /// Resident VMEM bytes per grid step (single-buffered).
+    pub vmem_bytes: usize,
+    /// With double buffering (what Mosaic would allocate).
+    pub vmem_double_buffered: usize,
+    /// Does the kernel engage the MXU (matmuls >= 8x128ish)?
+    pub uses_mxu: bool,
+    /// Arithmetic intensity (FLOPs per HBM byte moved).
+    pub arithmetic_intensity: f64,
+}
+
+impl KernelFootprint {
+    pub fn fits(&self) -> bool {
+        self.vmem_double_buffered <= VMEM_BYTES
+    }
+}
+
+/// AltUp fused predict+correct over (K, bt, d) f32 tiles.
+///
+/// VMEM per step: x tile (K*bt*d) + xtilde (bt*d) + out (K*bt*d) +
+/// scalars. FLOPs: 2*K^2*bt*d (mixture) + 2*K*bt*d (correction);
+/// bytes: (2K+2)*bt*d*4 (read x + xtilde, write out).
+pub fn altup_predict_correct(k: usize, bt: usize, d: usize) -> KernelFootprint {
+    let tile = bt * d * 4;
+    let vmem = k * tile + tile + k * tile + (k * k + k) * 4;
+    let flops = (2 * k * k * bt * d + 2 * k * bt * d) as f64;
+    let bytes = ((2 * k + 2) * bt * d * 4) as f64;
+    KernelFootprint {
+        name: format!("altup_predict_correct(K={k},bt={bt},d={d})"),
+        vmem_bytes: vmem,
+        vmem_double_buffered: 2 * vmem,
+        uses_mxu: false, // K x K mixing stays on the VPU by design
+        arithmetic_intensity: flops / bytes,
+    }
+}
+
+/// Gated FFN kernel over (bt, d) x (d, bf) panels.
+pub fn gated_ffn(bt: usize, d: usize, f: usize, bf: usize) -> KernelFootprint {
+    let vmem = (bt * d + 2 * d * bf + bt * bf + bt * d) * 4;
+    let flops = (2 * bt * d * f * 3) as f64; // wi0, wi1, wo per full row
+    let bytes = ((bt * d + 3 * d * f.min(bf) * (f / bf.max(1)) + bt * d) * 4) as f64;
+    KernelFootprint {
+        name: format!("gated_ffn(bt={bt},d={d},f={f},bf={bf})"),
+        vmem_bytes: vmem,
+        vmem_double_buffered: 2 * vmem,
+        uses_mxu: d >= 128 && bf >= 128,
+        arithmetic_intensity: flops / bytes.max(1.0),
+    }
+}
+
+/// Flash attention kernel: (bq, dh) queries vs (bk, dh) K/V tiles.
+pub fn flash_attention(bq: usize, bk: usize, tk: usize, dh: usize) -> KernelFootprint {
+    let vmem = (bq * dh + 2 * bk * dh + bq * tk + bq * dh + 3 * bq) * 4;
+    let flops = (2 * bq * tk * dh * 2) as f64;
+    let bytes = ((bq * dh + 2 * tk * dh + bq * tk + bq * dh) * 4) as f64;
+    KernelFootprint {
+        name: format!("flash_attention(bq={bq},bk={bk},tk={tk},dh={dh})"),
+        vmem_bytes: vmem,
+        vmem_double_buffered: 2 * vmem,
+        uses_mxu: dh >= 64 && bq >= 8,
+        arithmetic_intensity: flops / bytes,
+    }
+}
+
+/// Largest power-of-two row-block for the AltUp kernel that fits VMEM
+/// double-buffered at width d, expansion K (the block the compile path
+/// should pick for a real-TPU build).
+pub fn altup_max_rows(k: usize, d: usize) -> usize {
+    let mut bt = 1024;
+    while bt > 8 && !altup_predict_correct(k, bt, d).fits() {
+        bt /= 2;
+    }
+    bt
+}
+
+/// Largest hidden-panel width for the FFN kernel that fits VMEM.
+pub fn ffn_max_panel(bt: usize, d: usize, f: usize) -> usize {
+    let mut bf = 512.min(f);
+    while bf > 16 && !gated_ffn(bt, d, f, bf).fits() {
+        bf /= 2;
+    }
+    bf
+}
+
+/// Report the standard kernel set at a given model scale, with blocks
+/// auto-shrunk to fit VMEM (what a real-TPU compile would pick).
+pub fn report(d: usize, f: usize, k: usize) -> Vec<KernelFootprint> {
+    vec![
+        altup_predict_correct(k, altup_max_rows(k, d).min(256), d),
+        gated_ffn(128, d, f, ffn_max_panel(128, d, f)),
+        flash_attention(128, 128, 512, 64),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_blocks_fit_vmem() {
+        // Even at the paper's XL width the chosen BlockSpecs fit VMEM.
+        for fp in report(2048, 5120, 4) {
+            assert!(fp.fits(), "{} = {} bytes", fp.name, fp.vmem_double_buffered);
+        }
+    }
+
+    #[test]
+    fn altup_kernel_is_vpu_work() {
+        let fp = altup_predict_correct(2, 256, 512);
+        assert!(!fp.uses_mxu);
+        // Pure vector mixing: low arithmetic intensity, bandwidth-bound.
+        assert!(fp.arithmetic_intensity < 4.0);
+    }
+
+    #[test]
+    fn ffn_kernel_is_mxu_work() {
+        let fp = gated_ffn(128, 512, 1024, 512);
+        assert!(fp.uses_mxu);
+        assert!(fp.arithmetic_intensity > 10.0);
+    }
+
+    #[test]
+    fn footprint_scales_with_block() {
+        let a = altup_predict_correct(2, 128, 512);
+        let b = altup_predict_correct(2, 256, 512);
+        assert!(b.vmem_bytes > a.vmem_bytes);
+    }
+}

@@ -1,0 +1,97 @@
+//! Micro-benchmark harness (offline build: no criterion).
+//!
+//! Measures wall-clock with warmup, reports mean/p50/p95/min and a
+//! simple throughput figure. Used by `rust/benches/*` (cargo bench with
+//! `harness = false`) and by the experiment harnesses for latency
+//! measurements.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>10.3} ms/iter  (p50 {:.3}, p95 {:.3}, min {:.3}, n={})",
+            self.name,
+            self.mean_ms(),
+            self.p50.as_secs_f64() * 1e3,
+            self.p95.as_secs_f64() * 1e3,
+            self.min.as_secs_f64() * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured iters, then until both
+/// `min_iters` and `min_time` are satisfied (bounded by `max_iters`).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize, min_time: Duration, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    let max_iters = min_iters.max(10_000);
+    while (samples.len() < min_iters || start.elapsed() < min_time) && samples.len() < max_iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    stats_from(name, samples)
+}
+
+/// Convenience: 2 warmup iters, >=5 iters, >=300ms.
+pub fn quick<F: FnMut()>(name: &str, f: F) -> Stats {
+    bench(name, 2, 5, Duration::from_millis(300), f)
+}
+
+pub fn stats_from(name: &str, mut samples: Vec<Duration>) -> Stats {
+    assert!(!samples.is_empty());
+    samples.sort();
+    let n = samples.len();
+    let sum: Duration = samples.iter().sum();
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        mean: sum / n as u32,
+        p50: samples[n / 2],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+        min: samples[0],
+        max: samples[n - 1],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench("noop", 1, 10, Duration::from_millis(1), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters >= 10);
+        assert!(s.min <= s.p50 && s.p50 <= s.max);
+    }
+
+    #[test]
+    fn stats_percentiles() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        let s = stats_from("x", samples);
+        assert_eq!(s.min, Duration::from_micros(1));
+        assert_eq!(s.p50, Duration::from_micros(51));
+        assert!(s.p95 >= Duration::from_micros(95));
+    }
+}

@@ -1,0 +1,113 @@
+//! Tiny CLI argument parser (offline build: no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args,
+//! and generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<(String, String, bool)>, // (name, help, takes_value)
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.insert(rest.to_string(), String::new());
+                }
+            } else {
+                a.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).map(|s| s.to_string()).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Register an option for usage text (purely documentary).
+    pub fn describe(&mut self, name: &str, help: &str, takes_value: bool) {
+        self.known.push((name.to_string(), help.to_string(), takes_value));
+    }
+
+    pub fn usage(&self, prog: &str, summary: &str) -> String {
+        let mut s = format!("{prog} — {summary}\n\noptions:\n");
+        for (name, help, tv) in &self.known {
+            let arg = if *tv { format!("--{name} <v>") } else { format!("--{name}") };
+            s.push_str(&format!("  {arg:24} {help}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::parse(&argv("cmd --steps 100 --quick --name=x pos2"));
+        assert_eq!(a.positional, vec!["cmd", "pos2"]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert!(a.has("quick"));
+        assert_eq!(a.get("name"), Some("x"));
+        assert_eq!(a.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = Args::parse(&argv("--quick --steps 5"));
+        assert!(a.has("quick"));
+        assert_eq!(a.usize_or("steps", 0), 5);
+    }
+
+    #[test]
+    fn numeric_defaults() {
+        let a = Args::parse(&argv("--lr 0.5"));
+        assert_eq!(a.f64_or("lr", 1.0), 0.5);
+        assert_eq!(a.u64_or("seed", 42), 42);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained substrates (offline build: no serde/clap/
+//! criterion/proptest/tokio — see DESIGN.md §4 substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;

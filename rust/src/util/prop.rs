@@ -1,0 +1,146 @@
+//! Mini property-testing harness (offline build: no proptest).
+//!
+//! `forall(seed, cases, gen, check)` draws `cases` random inputs from
+//! `gen` and asserts `check`. On failure it performs greedy shrinking
+//! via the generator's `shrink` candidates and panics with the minimal
+//! failing case. Deterministic per seed.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// A generator: draws a value and can propose smaller variants.
+pub trait Gen {
+    type Value: Clone + Debug;
+    fn draw(&self, rng: &mut Rng) -> Self::Value;
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Run the property; panics with the minimal counterexample.
+pub fn forall<G: Gen>(seed: u64, cases: usize, gen: &G, check: impl Fn(&G::Value) -> bool) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.draw(&mut rng);
+        if !check(&v) {
+            // Greedy shrink.
+            let mut cur = v.clone();
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 1000 {
+                improved = false;
+                rounds += 1;
+                for cand in gen.shrink(&cur) {
+                    if !check(&cand) {
+                        cur = cand;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  original: {v:?}\n  shrunk:   {cur:?}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Common generators
+// ---------------------------------------------------------------------
+
+/// usize in [lo, hi] inclusive; shrinks toward lo.
+pub struct UsizeIn(pub usize, pub usize);
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn draw(&self, rng: &mut Rng) -> usize {
+        rng.range(self.0, self.1 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vec of u32 token ids in [1, vocab); shrinks by halving length.
+pub struct TokenSeq {
+    pub vocab: u32,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+impl Gen for TokenSeq {
+    type Value = Vec<u32>;
+    fn draw(&self, rng: &mut Rng) -> Vec<u32> {
+        let len = rng.range(self.min_len, self.max_len + 1);
+        (0..len).map(|_| 1 + rng.next_below(self.vocab as u64 - 1) as u32).collect()
+    }
+    fn shrink(&self, v: &Vec<u32>) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..(v.len() / 2).max(self.min_len)].to_vec());
+            let mut w = v.clone();
+            w.pop();
+            out.push(w);
+        }
+        // simplify values toward 1
+        if v.iter().any(|&t| t > 1) {
+            out.push(v.iter().map(|_| 1).collect());
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn draw(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.draw(rng), self.1.draw(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(1, 200, &UsizeIn(0, 100), |&x| x <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_shrinks() {
+        forall(1, 500, &UsizeIn(0, 1000), |&x| x < 500);
+    }
+
+    #[test]
+    fn token_seq_in_range() {
+        forall(2, 100, &TokenSeq { vocab: 50, min_len: 1, max_len: 32 }, |v| {
+            !v.is_empty() && v.iter().all(|&t| t >= 1 && t < 50)
+        });
+    }
+
+    #[test]
+    fn pair_draws_both() {
+        let gen = Pair(UsizeIn(1, 5), UsizeIn(10, 20));
+        forall(3, 100, &gen, |(a, b)| *a <= 5 && *b >= 10);
+    }
+}

@@ -1,0 +1,161 @@
+//! Integration tests over the full runtime: artifacts -> PJRT -> train/
+//! eval/decode. Requires `make artifacts` (skips gracefully otherwise).
+
+use altup::coordinator::metrics::MetricsLog;
+use altup::coordinator::trainer::{DataSource, TrainOptions, Trainer};
+use altup::data::batcher::PretrainBatcher;
+use altup::runtime::artifact::{artifacts_root, load_named};
+use altup::runtime::client::Client;
+use altup::runtime::session::Session;
+
+fn have_artifacts() -> bool {
+    artifacts_root().join("micro-altup/meta.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn train_loss_decreases_micro_altup() {
+    require_artifacts!();
+    let client = Client::cpu().unwrap();
+    let artifact = load_named("micro-altup").unwrap();
+    let cfg = artifact.config.clone();
+    let session = Session::open(&client, artifact, 0).unwrap();
+    let batcher =
+        PretrainBatcher::new(cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, 1);
+    let mut trainer = Trainer::new(session, DataSource::Pretrain(batcher), MetricsLog::in_memory());
+    let opts = TrainOptions {
+        steps: 20,
+        warmup: 1000,
+        log_every: 5,
+        verbose: false,
+        ..Default::default()
+    };
+    let (ema, sps) = trainer.run(&client, &opts).unwrap();
+    let first = trainer.log.records.first().unwrap().values["loss"];
+    assert!(ema < first, "loss did not decrease: first={first} ema={ema}");
+    assert!(sps > 0.0);
+}
+
+#[test]
+fn eval_and_decode_micro_baseline() {
+    require_artifacts!();
+    let client = Client::cpu().unwrap();
+    let artifact = load_named("micro-baseline").unwrap();
+    let cfg = artifact.config.clone();
+    let mut session = Session::open_eval(&client, artifact, 0).unwrap();
+    let mut batcher =
+        PretrainBatcher::new(cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, 2);
+    let batch = batcher.next_batch();
+    let m = session.eval_step(&client, &batch).unwrap();
+    assert!(m.ntok > 0.0);
+    assert!(m.loss.is_finite());
+    // decode produces the right geometry, in-vocab ids
+    let rows = session.decode(&client, &batch.enc_tokens).unwrap();
+    assert_eq!(rows.len(), cfg.batch_size);
+    for r in &rows {
+        assert_eq!(r.len(), cfg.dec_len);
+        assert!(r.iter().all(|&t| t >= 0 && (t as usize) < cfg.vocab_size));
+    }
+}
+
+#[test]
+fn train_is_deterministic() {
+    require_artifacts!();
+    let client = Client::cpu().unwrap();
+    let run = || {
+        let artifact = load_named("micro-baseline").unwrap();
+        let cfg = artifact.config.clone();
+        let session = Session::open(&client, artifact, 7).unwrap();
+        let batcher =
+            PretrainBatcher::new(cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, 7);
+        let mut trainer =
+            Trainer::new(session, DataSource::Pretrain(batcher), MetricsLog::in_memory());
+        let opts = TrainOptions { steps: 5, log_every: 1, verbose: false, ..Default::default() };
+        trainer.run(&client, &opts).unwrap();
+        trainer.log.series("loss")
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn pallas_artifact_matches_jnp_artifact() {
+    // The pallas-kerneled model and the jnp model share identical math;
+    // with identical init + data their first-step losses must agree.
+    require_artifacts!();
+    if !artifacts_root().join("micro-pallas-altup/meta.json").exists() {
+        return;
+    }
+    let client = Client::cpu().unwrap();
+    let loss_of = |name: &str| {
+        let artifact = load_named(name).unwrap();
+        let cfg = artifact.config.clone();
+        let session = Session::open(&client, artifact, 3).unwrap();
+        let mut batcher =
+            PretrainBatcher::new(cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, 3);
+        let batch = batcher.next_batch();
+        let mut s = session;
+        s.train_step(1e-3, 1, &batch).unwrap().loss
+    };
+    let l_jnp = loss_of("micro-altup");
+    let l_pal = loss_of("micro-pallas-altup");
+    assert!(
+        (l_jnp - l_pal).abs() < 2e-3 * l_jnp.abs().max(1.0),
+        "jnp={l_jnp} pallas={l_pal}"
+    );
+}
+
+#[test]
+fn checkpoint_resume_continues_exactly() {
+    require_artifacts!();
+    let client = Client::cpu().unwrap();
+    let artifact = load_named("micro-baseline").unwrap();
+    let cfg = artifact.config.clone();
+
+    // Train 6 steps in one go.
+    let mut s1 = Session::open(&client, artifact.clone(), 11).unwrap();
+    let mut b1 = PretrainBatcher::new(cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, 11);
+    let mut losses_a = Vec::new();
+    for _ in 0..6 {
+        let b = b1.next_batch();
+        losses_a.push(s1.train_step(1e-2, s1.store.step as u32 + 1, &b).unwrap().loss);
+    }
+
+    // Train 3, checkpoint, reload, train 3 more.
+    let mut s2 = Session::open(&client, artifact.clone(), 11).unwrap();
+    let mut b2 = PretrainBatcher::new(cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, 11);
+    let mut losses_b = Vec::new();
+    for _ in 0..3 {
+        let b = b2.next_batch();
+        losses_b.push(s2.train_step(1e-2, s2.store.step as u32 + 1, &b).unwrap().loss);
+    }
+    let path = std::env::temp_dir().join(format!("altup-it-{}.ckpt", std::process::id()));
+    s2.checkpoint(&path).unwrap();
+    let mut s3 = Session::open(&client, artifact, 99).unwrap();
+    s3.store = altup::runtime::params::ParamStore::load(&path, &s3.artifact).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    for _ in 0..3 {
+        let b = b2.next_batch();
+        losses_b.push(s3.train_step(1e-2, s3.store.step as u32 + 1, &b).unwrap().loss);
+    }
+    for (a, b) in losses_a.iter().zip(losses_b.iter()) {
+        assert!((a - b).abs() < 1e-5, "{losses_a:?} vs {losses_b:?}");
+    }
+}
+
+#[test]
+fn param_count_meta_matches_store() {
+    require_artifacts!();
+    for name in ["micro-baseline", "micro-altup", "micro-recycled"] {
+        let artifact = load_named(name).unwrap();
+        let store = altup::runtime::params::ParamStore::init(&artifact, 0);
+        assert_eq!(store.num_params(), artifact.param_count_total, "{name}");
+    }
+}

@@ -1,0 +1,154 @@
+//! Pipeline-level integration: pretrain->finetune recipe, generative
+//! eval, serving, and checkpoint interop — over real artifacts (skips
+//! when `make artifacts` hasn't run).
+
+use altup::coordinator::pipeline::{finetune_task, pretrain, PipelineOptions};
+use altup::coordinator::server::{ServerHandle, ServerOptions};
+use altup::data::tasks::{Task, TaskKind};
+use altup::runtime::artifact::{artifacts_root, load_named};
+use altup::runtime::client::Client;
+
+fn have_artifacts() -> bool {
+    artifacts_root().join("micro-altup/meta.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn quick_opts() -> PipelineOptions {
+    PipelineOptions {
+        pretrain_steps: 12,
+        finetune_steps: 10,
+        warmup: 1000,
+        eval_batches: 2,
+        verbose: false,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn pretrain_then_finetune_glue() {
+    require_artifacts!();
+    let client = Client::cpu().unwrap();
+    let artifact = load_named("micro-altup").unwrap();
+    let opts = quick_opts();
+    let (session, pre_ev, sps) = pretrain(&client, artifact, &opts).unwrap();
+    assert!(pre_ev.loss.is_finite() && pre_ev.loss > 0.0);
+    assert!(sps > 0.0);
+    let ev = finetune_task(&client, &session, TaskKind::Glue, &opts).unwrap();
+    assert!(ev.accuracy >= 0.0 && ev.accuracy <= 1.0);
+    assert!(ev.examples > 0);
+}
+
+#[test]
+fn finetune_squad_reports_em_f1() {
+    require_artifacts!();
+    let client = Client::cpu().unwrap();
+    let artifact = load_named("micro-baseline").unwrap();
+    let opts = quick_opts();
+    let (session, _, _) = pretrain(&client, artifact, &opts).unwrap();
+    let ev = finetune_task(&client, &session, TaskKind::Squad, &opts).unwrap();
+    assert!((0.0..=1.0).contains(&ev.em));
+    assert!((0.0..=1.0).contains(&ev.f1));
+    assert!(ev.f1 >= ev.em - 1e-9, "F1 >= EM by construction");
+}
+
+#[test]
+fn finetune_improves_over_untrained_on_glue() {
+    // The task must be learnable: finetuned accuracy should beat the
+    // ~50% chance level of the binary label task.
+    require_artifacts!();
+    let client = Client::cpu().unwrap();
+    let artifact = load_named("micro-baseline").unwrap();
+    let opts = PipelineOptions {
+        pretrain_steps: 30,
+        finetune_steps: 60,
+        warmup: 1000,
+        eval_batches: 4,
+        verbose: false,
+        ..Default::default()
+    };
+    let (session, _, _) = pretrain(&client, artifact, &opts).unwrap();
+    let ev = finetune_task(&client, &session, TaskKind::Glue, &opts).unwrap();
+    // Token accuracy on (label, EOS) pairs; chance is well below 0.5.
+    assert!(ev.accuracy > 0.4, "accuracy {:.3} not above near-chance", ev.accuracy);
+}
+
+#[test]
+fn server_batches_and_replies() {
+    require_artifacts!();
+    let server = ServerHandle::spawn(
+        "micro-baseline",
+        ServerOptions { batch_window: std::time::Duration::from_millis(20), ..Default::default() },
+    );
+    let task = Task::new(TaskKind::Squad, 2048, 1);
+    // Submit concurrently from two client threads to exercise batching.
+    let s1 = server.sender.clone();
+    let t1 = std::thread::spawn(move || {
+        let task = Task::new(TaskKind::Squad, 2048, 2);
+        let mut out = Vec::new();
+        for i in 0..6 {
+            let (tx, rx) = std::sync::mpsc::channel();
+            s1.send(altup::coordinator::server::Request {
+                enc_tokens: task.example(i, 62).enc,
+                reply: tx,
+            })
+            .unwrap();
+            out.push(rx.recv().unwrap());
+        }
+        out
+    });
+    let mut responses = Vec::new();
+    for i in 0..6 {
+        responses.push(server.infer(task.example(i, 62).enc).unwrap());
+    }
+    responses.extend(t1.join().unwrap());
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, 12);
+    assert!(stats.batches <= 12);
+    for r in &responses {
+        assert_eq!(r.tokens.len(), 32); // micro dec_len
+        assert!(r.batch_fill >= 1);
+    }
+}
+
+#[test]
+fn variant_artifacts_all_trainable_one_step() {
+    require_artifacts!();
+    let client = Client::cpu().unwrap();
+    for name in [
+        "micro-sameup",
+        "micro-sum",
+        "micro-seqaltup",
+        "micro-strideskip",
+        "micro-avgpool",
+        "micro-moe",
+        "micro-altup-moe",
+        "micro-dense2x",
+    ] {
+        if !artifacts_root().join(name).join("meta.json").exists() {
+            continue;
+        }
+        let artifact = load_named(name).unwrap();
+        let cfg = artifact.config.clone();
+        let mut session =
+            altup::runtime::session::Session::open(&client, artifact, 0).unwrap();
+        let mut b = altup::data::batcher::PretrainBatcher::new(
+            cfg.vocab_size,
+            cfg.batch_size,
+            cfg.enc_len,
+            cfg.dec_len,
+            1,
+        );
+        let batch = b.next_batch();
+        let m = session.train_step(1e-3, 1, &batch).unwrap();
+        assert!(m.loss.is_finite() && m.loss > 0.0, "{name}: loss={}", m.loss);
+        assert!(m.ntok > 0.0, "{name}");
+    }
+}

@@ -1,0 +1,189 @@
+//! Property-based tests over the coordinator's pure substrates
+//! (tokenizer, span corruption, batcher, metrics, json) using the
+//! in-repo mini property harness (`util::prop` — proptest is not
+//! available in the offline image; see DESIGN.md §4).
+
+use altup::data::span::{corrupt, SpanConfig};
+use altup::data::tasks::{exact_match, f1_score, Task, TaskKind};
+use altup::data::tokenizer::{Tokenizer, EOS, PAD};
+use altup::util::json::Json;
+use altup::util::prop::{forall, Gen, Pair, TokenSeq, UsizeIn};
+use altup::util::rng::Rng;
+
+const CASES: usize = 150;
+
+fn tk() -> Tokenizer {
+    Tokenizer::new(2048).unwrap()
+}
+
+/// Sequences of content tokens (valid span-corruption input).
+fn content_seq(min_len: usize, max_len: usize) -> TokenSeq {
+    TokenSeq { vocab: 1500, min_len, max_len }
+}
+
+fn to_tokens(tkz: &Tokenizer, words: &[u32]) -> Vec<i32> {
+    words.iter().map(|&w| tkz.encode_word(w)).collect()
+}
+
+#[test]
+fn prop_span_corruption_reconstructs_input() {
+    let tkz = tk();
+    forall(1, CASES, &Pair(content_seq(4, 160), UsizeIn(0, 1 << 30)), |(words, seed)| {
+        let tokens = to_tokens(&tkz, words);
+        let mut rng = Rng::new(*seed as u64);
+        let ex = corrupt(&tokens, SpanConfig::default(), &tkz, &mut rng);
+        // Parse spans out of the target and substitute back.
+        let mut spans: Vec<(i32, Vec<i32>)> = Vec::new();
+        for &t in tkz.until_eos(&ex.dec_targets) {
+            if tkz.is_sentinel(t) {
+                spans.push((t, Vec::new()));
+            } else if let Some(last) = spans.last_mut() {
+                last.1.push(t);
+            } else {
+                return false; // target must start with a sentinel
+            }
+        }
+        let mut rebuilt = Vec::new();
+        for &t in tkz.until_eos(&ex.enc) {
+            if tkz.is_sentinel(t) {
+                match spans.iter().find(|(s, _)| *s == t) {
+                    Some((_, span)) => rebuilt.extend_from_slice(span),
+                    None => return false,
+                }
+            } else {
+                rebuilt.push(t);
+            }
+        }
+        rebuilt == tokens
+    });
+}
+
+#[test]
+fn prop_span_corruption_targets_shifted() {
+    let tkz = tk();
+    forall(2, CASES, &Pair(content_seq(4, 120), UsizeIn(0, 1 << 30)), |(words, seed)| {
+        let tokens = to_tokens(&tkz, words);
+        let mut rng = Rng::new(*seed as u64);
+        let ex = corrupt(&tokens, SpanConfig::default(), &tkz, &mut rng);
+        ex.dec_input[0] == PAD
+            && ex.dec_input[1..] == ex.dec_targets[..ex.dec_targets.len() - 1]
+            && *ex.dec_targets.last().unwrap() == EOS
+    });
+}
+
+#[test]
+fn prop_tokenizer_roundtrip() {
+    let tkz = tk();
+    forall(3, CASES, &content_seq(1, 64), |words| {
+        let ids = tkz.encode_doc(words);
+        let back = tkz.content_of(&ids);
+        back == *words
+    });
+}
+
+#[test]
+fn prop_tokenizer_specials_never_content() {
+    let tkz = tk();
+    forall(4, CASES, &UsizeIn(0, 40), |&id| {
+        let id = id as i32;
+        // ids below FIRST_CONTENT decode to None
+        if id < altup::data::tokenizer::FIRST_CONTENT {
+            tkz.decode_token(id).is_none()
+        } else {
+            tkz.decode_token(id).is_some()
+        }
+    });
+}
+
+#[test]
+fn prop_f1_bounds_and_symmetry() {
+    let gen = Pair(content_seq(1, 12), content_seq(1, 12));
+    forall(5, CASES, &gen, |(a, b)| {
+        let f = f1_score(a, b);
+        let fr = f1_score(b, a);
+        (0.0..=1.0).contains(&f) && (f - fr).abs() < 1e-12
+    });
+}
+
+#[test]
+fn prop_em_implies_f1_one() {
+    forall(6, CASES, &content_seq(1, 12), |a| {
+        exact_match(a, a) == 1.0 && (f1_score(a, a) - 1.0).abs() < 1e-12
+    });
+}
+
+#[test]
+fn prop_task_examples_fit_geometry() {
+    // Every task example's decoder side fits dec_len after truncation
+    // and keeps input/target alignment.
+    let gen = Pair(UsizeIn(0, 3), UsizeIn(0, 5000));
+    forall(7, CASES, &gen, |&(kind_idx, index)| {
+        let kind = [TaskKind::Glue, TaskKind::SuperGlue, TaskKind::Squad, TaskKind::TriviaQa]
+            [kind_idx];
+        let task = Task::new(kind, 2048, 17);
+        let ex = task.example(index as u64, 62);
+        ex.dec_input.len() == ex.dec_targets.len()
+            && ex.dec_input[0] == PAD
+            && !ex.answer.is_empty()
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_numbers() {
+    forall(8, CASES, &UsizeIn(0, 1 << 31), |&n| {
+        let src = format!("{{\"v\": {n}, \"a\": [{n}, -{n}]}}");
+        let v = Json::parse(&src).unwrap();
+        let re = Json::parse(&v.to_string()).unwrap();
+        re.get("v").as_i64() == Some(n as i64) && re.get("a").idx(1).as_i64() == Some(-(n as i64))
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_strings() {
+    struct Ascii;
+    impl Gen for Ascii {
+        type Value = String;
+        fn draw(&self, rng: &mut Rng) -> String {
+            let len = rng.range(0, 24);
+            (0..len)
+                .map(|_| char::from_u32(rng.range(0x20, 0x7F) as u32).unwrap())
+                .collect()
+        }
+        fn shrink(&self, v: &String) -> Vec<String> {
+            if v.is_empty() {
+                vec![]
+            } else {
+                vec![v[..v.len() / 2].to_string(), String::new()]
+            }
+        }
+    }
+    forall(9, CASES, &Ascii, |s| {
+        let v = Json::Str(s.clone());
+        Json::parse(&v.to_string()).map(|r| r.as_str() == Some(s.as_str())).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_rng_range_in_bounds() {
+    forall(10, CASES, &Pair(UsizeIn(0, 1000), UsizeIn(1, 1000)), |&(lo, span)| {
+        let mut rng = Rng::new((lo * 31 + span) as u64);
+        let v = rng.range(lo, lo + span);
+        v >= lo && v < lo + span
+    });
+}
+
+#[test]
+fn prop_batch_geometry_invariant() {
+    use altup::data::batcher::Batch;
+    use altup::data::tasks::Example;
+    let gen = Pair(UsizeIn(1, 8), Pair(UsizeIn(4, 64), UsizeIn(2, 32)));
+    forall(11, 60, &gen, |&(b, (enc_len, dec_len))| {
+        let task = Task::new(TaskKind::Glue, 2048, 3);
+        let examples: Vec<Example> = (0..b).map(|i| task.example(i as u64, 60)).collect();
+        let batch = Batch::from_examples(&examples, b, enc_len, dec_len);
+        batch.enc_tokens.len() == b * enc_len
+            && batch.dec_input.len() == b * dec_len
+            && batch.dec_targets.len() == b * dec_len
+            && batch.answers.len() == b
+    });
+}
