@@ -70,8 +70,10 @@ fn main() -> anyhow::Result<()> {
     println!("throughput:   {sps:.3} steps/s ({:.1} tokens/s)",
         sps * cfg.tokens_per_batch() as f64);
     println!(
-        "runtime split: execute {:.1}s, marshal {:.1}s",
-        trainer.session.exec_seconds, trainer.session.marshal_seconds
+        "runtime split: execute {:.1}s, marshal {:.1}s, transfer {:.1}s",
+        trainer.session.exec_seconds,
+        trainer.session.marshal_seconds,
+        trainer.session.transfer_seconds
     );
     println!("loss curve:   results/e2e-{name}-loss.jsonl");
     println!("checkpoint:   {ckpt}");

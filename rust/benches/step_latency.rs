@@ -1,13 +1,32 @@
 //! Bench: per-variant train/forward step latency (the measured basis of
 //! Fig. 1/4 and Tables 3-4's speed columns). `cargo bench --offline`.
+//!
+//! Flags (after `--`):
+//!   --ab     also measure each artifact with the state cache fully
+//!            off (the host-round-trip baseline; same as running under
+//!            ALTUP_NO_STATE_CACHE=1) and print the speedup.
+//!   --json   write BENCH_step_latency.json with the per-artifact
+//!            fwd/train ms, examples/s, and the marshal/exec/transfer
+//!            split (implies --ab) — the §Perf trajectory record read
+//!            across PRs (see EXPERIMENTS.md).
+//!   --json-path <p>  override the output path.
+//!
+//! Env: ALTUP_BENCH_FULL=1 measures all sizes; ALTUP_NO_DEVICE_CACHE /
+//! ALTUP_NO_STATE_CACHE select the default measurement mode.
 
 use altup::experiments::latency;
 use altup::runtime::client::Client;
+use altup::runtime::session::CacheMode;
+use altup::util::cli::Args;
+use altup::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
     println!("== step_latency: measured CPU step time per artifact ==");
     println!("(quick mode measures micro-*; set ALTUP_BENCH_FULL=1 for all sizes)");
-    let full = std::env::var("ALTUP_BENCH_FULL").is_ok();
+    let full = std::env::var("ALTUP_BENCH_FULL").is_ok() || args.has("full");
+    let json_out = args.has("json") || args.has("json-path");
+    let ab = args.has("ab") || json_out;
     let client = Client::cpu()?;
     let names = [
         "micro-baseline",
@@ -32,10 +51,16 @@ fn main() -> anyhow::Result<()> {
         "mini-dense2x",
     ];
     println!(
-        "{:<20} {:>12} {:>12} {:>14}",
-        "artifact", "fwd ms", "train ms", "train ex/s"
+        "{:<20} {:>10} {:>10} {:>12} {:>24}{}",
+        "artifact",
+        "fwd ms",
+        "train ms",
+        "train ex/s",
+        "exec/marshal/xfer ms",
+        if ab { "   host-rt ms (speedup)" } else { "" }
     );
     let mut base: Option<f64> = None;
+    let mut rows: Vec<(String, Json)> = Vec::new();
     for name in names {
         if !latency::available(name) || (!full && !name.starts_with("micro")) {
             continue;
@@ -44,17 +69,80 @@ fn main() -> anyhow::Result<()> {
         if name == "micro-baseline" {
             base = Some(l.train_s);
         }
+        // A/B reference: the same step with the cache fully off — every
+        // param/opt literal re-marshalled and synced per step.
+        let host_rt = if ab {
+            Some(latency::measure_with_mode(&client, name, CacheMode::Off)?)
+        } else {
+            None
+        };
         let rel = base
             .map(|b| format!(" ({:.2}x micro-base)", l.train_s / b))
             .unwrap_or_default();
+        let ab_col = host_rt
+            .as_ref()
+            .map(|h| format!("   {:>8.2} ({:.2}x)", h.train_s * 1e3, h.train_s / l.train_s))
+            .unwrap_or_default();
         println!(
-            "{:<20} {:>12} {:>12.2} {:>14.1}{}",
+            "{:<20} {:>10} {:>10.2} {:>12.1} {:>8.2}/{:>6.2}/{:>6.2}{}{}",
             name,
             l.forward_s.map(|f| format!("{:.2}", f * 1e3)).unwrap_or_else(|| "-".into()),
             l.train_s * 1e3,
             l.train_examples_per_sec,
+            l.train_exec_s * 1e3,
+            l.train_marshal_s * 1e3,
+            l.train_transfer_s * 1e3,
+            ab_col,
             rel
         );
+        if json_out {
+            let mut fields: Vec<(&str, Json)> = vec![
+                ("train_ms", Json::num(l.train_s * 1e3)),
+                ("examples_per_sec", Json::num(l.train_examples_per_sec)),
+                (
+                    "split_ms",
+                    Json::obj(vec![
+                        ("exec", Json::num(l.train_exec_s * 1e3)),
+                        ("marshal", Json::num(l.train_marshal_s * 1e3)),
+                        ("transfer", Json::num(l.train_transfer_s * 1e3)),
+                    ]),
+                ),
+            ];
+            if let Some(f) = l.forward_s {
+                fields.push(("fwd_ms", Json::num(f * 1e3)));
+            }
+            if let Some(h) = &host_rt {
+                fields.push((
+                    "host_roundtrip",
+                    Json::obj(vec![
+                        ("train_ms", Json::num(h.train_s * 1e3)),
+                        ("speedup", Json::num(h.train_s / l.train_s)),
+                        (
+                            "split_ms",
+                            Json::obj(vec![
+                                ("exec", Json::num(h.train_exec_s * 1e3)),
+                                ("marshal", Json::num(h.train_marshal_s * 1e3)),
+                                ("transfer", Json::num(h.train_transfer_s * 1e3)),
+                            ]),
+                        ),
+                    ]),
+                ));
+            }
+            rows.push((name.to_string(), Json::obj(fields)));
+        }
+    }
+    if json_out {
+        let path = args.str_or("json-path", "BENCH_step_latency.json");
+        let artifacts =
+            Json::Obj(rows.into_iter().collect::<std::collections::BTreeMap<_, _>>());
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("step_latency".into())),
+            ("default_mode", Json::Str(format!("{:?}", CacheMode::from_env()))),
+            ("ab_mode", Json::Str("Off (full host round-trip)".into())),
+            ("artifacts", artifacts),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("wrote {path}");
     }
     Ok(())
 }

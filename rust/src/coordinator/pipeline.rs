@@ -48,6 +48,11 @@ pub struct PipelineResult {
     pub pretrain_accuracy: f64,
     pub pretrain_loss: f64,
     pub train_steps_per_sec: f64,
+    /// Pretrain runtime split (§Perf L4): PJRT execute, host
+    /// marshalling, and host<->device transfer wall-clock seconds.
+    pub exec_seconds: f64,
+    pub marshal_seconds: f64,
+    pub transfer_seconds: f64,
     pub task_results: Vec<(TaskKind, EvalResult)>,
 }
 
@@ -83,8 +88,9 @@ pub fn pretrain(
 }
 
 /// Finetune a pretrained session on one task; returns its eval result.
-/// The session's parameters are cloned through a checkpoint round-trip
-/// so each task starts from the same pretrained state.
+/// The pretrained `ParamStore` is cloned in memory so each task starts
+/// from the same state (the caller must have `sync_store()`d —
+/// `pretrain` does).
 pub fn finetune_task(
     client: &Client,
     base: &Session,
@@ -93,18 +99,9 @@ pub fn finetune_task(
 ) -> Result<EvalResult> {
     let artifact = base.artifact.clone();
     let cfg = artifact.config.clone();
-    // Clone pretrained weights via an in-memory checkpoint file.
-    let tmp = std::env::temp_dir().join(format!(
-        "altup-ft-{}-{}-{}.ckpt",
-        artifact.name,
-        kind.name(),
-        std::process::id()
-    ));
-    base.store.save(&tmp)?;
     let mut session = Session::open(client, artifact, opts.seed)?;
-    session.store = crate::runtime::params::ParamStore::load(&tmp, &session.artifact)?;
+    session.store = base.store.clone();
     session.invalidate_state();
-    let _ = std::fs::remove_file(&tmp);
 
     let task = Task::new(kind, cfg.vocab_size, opts.seed ^ 0x7A58);
     let batcher = TaskBatcher::new(task, cfg.batch_size, cfg.enc_len, cfg.dec_len);
@@ -135,6 +132,8 @@ pub fn run_pipeline(
 ) -> Result<PipelineResult> {
     let artifact = load_named(artifact_name)?;
     let (session, pre_ev, sps) = pretrain(client, artifact, opts)?;
+    let (exec_seconds, marshal_seconds, transfer_seconds) =
+        (session.exec_seconds, session.marshal_seconds, session.transfer_seconds);
     let mut task_results = Vec::new();
     for &kind in tasks {
         let ev = finetune_task(client, &session, kind, opts)?;
@@ -148,6 +147,9 @@ pub fn run_pipeline(
         pretrain_accuracy: pre_ev.accuracy,
         pretrain_loss: pre_ev.loss,
         train_steps_per_sec: sps,
+        exec_seconds,
+        marshal_seconds,
+        transfer_seconds,
         task_results,
     })
 }

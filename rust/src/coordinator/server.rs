@@ -26,6 +26,9 @@ pub struct Response {
     /// Time spent queued + executing, for latency accounting.
     pub latency: Duration,
     pub batch_fill: usize,
+    /// True when the request's prompt exceeded the model's `enc_len`
+    /// and was cut to fit (previously a silent truncation).
+    pub truncated: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -100,6 +103,10 @@ fn serve(artifact_name: &str, rx: mpsc::Receiver<Request>, opts: ServerOptions) 
         session.invalidate_state();
     }
     session.ensure_decode(&client)?;
+    // §Perf L4: upload the weights once; every subsequent batch reuses
+    // the device-resident buffers instead of re-marshalling the full
+    // parameter set per decode.
+    session.warm_device_cache(&client)?;
     let cfg = session.artifact.config.clone();
     let mut stats = ServerStats::default();
 
@@ -124,13 +131,10 @@ fn serve(artifact_name: &str, rx: mpsc::Receiver<Request>, opts: ServerOptions) 
             }
         }
 
-        // Pad the batch geometry: fixed (B, enc_len).
+        // Pad/truncate into the fixed (B, enc_len) geometry.
         let fill = pending.len();
-        let mut enc = vec![0i32; cfg.batch_size * cfg.enc_len];
-        for (i, req) in pending.iter().enumerate() {
-            let n = req.enc_tokens.len().min(cfg.enc_len);
-            enc[i * cfg.enc_len..i * cfg.enc_len + n].copy_from_slice(&req.enc_tokens[..n]);
-        }
+        let rows: Vec<&[i32]> = pending.iter().map(|r| r.enc_tokens.as_slice()).collect();
+        let (enc, truncated) = pack_requests(&rows, cfg.batch_size, cfg.enc_len);
         let decoded = session.decode(&client, &enc)?;
         let latency = t0.elapsed();
         for (i, req) in pending.into_iter().enumerate() {
@@ -138,6 +142,7 @@ fn serve(artifact_name: &str, rx: mpsc::Receiver<Request>, opts: ServerOptions) 
                 tokens: decoded[i].clone(),
                 latency,
                 batch_fill: fill,
+                truncated: truncated[i],
             });
         }
         stats.requests += fill;
@@ -145,4 +150,55 @@ fn serve(artifact_name: &str, rx: mpsc::Receiver<Request>, opts: ServerOptions) 
         stats.total_fill += fill;
     }
     Ok(stats)
+}
+
+/// Pack request token rows into the fixed (batch_size, enc_len)
+/// geometry: short rows are zero-padded, long rows are cut to fit.
+/// Returns the flat batch plus a per-row truncation flag.
+pub fn pack_requests(
+    rows: &[&[i32]],
+    batch_size: usize,
+    enc_len: usize,
+) -> (Vec<i32>, Vec<bool>) {
+    let mut enc = vec![0i32; batch_size * enc_len];
+    let mut truncated = vec![false; rows.len()];
+    for (i, row) in rows.iter().take(batch_size).enumerate() {
+        let n = row.len().min(enc_len);
+        enc[i * enc_len..i * enc_len + n].copy_from_slice(&row[..n]);
+        truncated[i] = row.len() > enc_len;
+    }
+    (enc, truncated)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_requests_pads_and_flags_truncation() {
+        let short = vec![1, 2, 3];
+        let exact = vec![5, 6, 7, 8];
+        let long = vec![9, 10, 11, 12, 13, 14];
+        let rows: Vec<&[i32]> = vec![&short, &exact, &long];
+        let (enc, truncated) = pack_requests(&rows, 4, 4);
+        assert_eq!(enc.len(), 16);
+        assert_eq!(&enc[0..4], &[1, 2, 3, 0], "short row zero-padded");
+        assert_eq!(&enc[4..8], &[5, 6, 7, 8], "exact row untouched");
+        assert_eq!(&enc[8..12], &[9, 10, 11, 12], "long row cut to enc_len");
+        assert_eq!(&enc[12..16], &[0, 0, 0, 0], "unfilled slot stays zero");
+        assert_eq!(truncated, vec![false, false, true]);
+    }
+
+    #[test]
+    fn pack_requests_empty_and_full() {
+        let (enc, truncated) = pack_requests(&[], 2, 3);
+        assert_eq!(enc, vec![0; 6]);
+        assert!(truncated.is_empty());
+        let a = vec![1i32; 3];
+        let b = vec![2i32; 4];
+        let rows: Vec<&[i32]> = vec![&a, &b];
+        let (enc, truncated) = pack_requests(&rows, 2, 3);
+        assert_eq!(&enc[3..6], &[2, 2, 2]);
+        assert_eq!(truncated, vec![false, true]);
+    }
 }

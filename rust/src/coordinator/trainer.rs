@@ -79,7 +79,7 @@ impl Trainer {
             let step = self.session.store.step + 1;
             let lr = self.lr_at(step, opts) as f32;
             let batch = self.source.next_batch();
-            let m = self.session.train_step(lr, step as u32, &batch)?;
+            let m = self.session.train_step(client, lr, step as u32, &batch)?;
             let loss = m.loss as f64;
             ema = Some(match ema {
                 None => loss,
@@ -121,6 +121,24 @@ impl Trainer {
         }
         let wall = t0.elapsed().as_secs_f64();
         let sps = opts.steps as f64 / wall;
+        // Runtime split (§Perf L4): where the wall-clock went —
+        // executing HLO, host marshalling, or host<->device transfers.
+        self.log.log(
+            self.session.store.step,
+            &[
+                ("exec_seconds", self.session.exec_seconds),
+                ("marshal_seconds", self.session.marshal_seconds),
+                ("transfer_seconds", self.session.transfer_seconds),
+            ],
+        );
+        if opts.verbose {
+            println!(
+                "runtime split: execute {:.2}s, marshal {:.2}s, transfer {:.2}s",
+                self.session.exec_seconds,
+                self.session.marshal_seconds,
+                self.session.transfer_seconds
+            );
+        }
         Ok((ema.unwrap_or(f64::NAN), sps))
     }
 

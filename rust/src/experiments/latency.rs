@@ -1,12 +1,19 @@
 //! Shared latency rig: measured CPU step time per artifact (forward and
 //! train), used by Fig. 1/4/5 and Tables 2-4.
+//!
+//! §Perf L4: besides the headline per-step time, the rig now reports
+//! where a train step's wall-clock goes — PJRT execute vs. host
+//! marshalling vs. host<->device transfer — and can measure under an
+//! explicit `CacheMode` for device-resident vs. host-round-trip A/Bs
+//! (`benches/step_latency.rs --ab`).
 
 use crate::data::batcher::PretrainBatcher;
 use crate::runtime::artifact::{artifacts_root, load_named};
 use crate::runtime::client::Client;
-use crate::runtime::session::Session;
+use crate::runtime::session::{CacheMode, Session};
 use crate::util::bench;
 use anyhow::Result;
+use std::cell::Cell;
 use std::time::Duration;
 
 #[derive(Debug, Clone)]
@@ -18,14 +25,27 @@ pub struct Latency {
     pub train_s: f64,
     /// Examples per second per core during training (paper's speed unit).
     pub train_examples_per_sec: f64,
+    /// Cache mode the train measurement ran under.
+    pub mode: CacheMode,
+    /// Per-train-step wall-clock split, in seconds (§Perf L4).
+    pub train_exec_s: f64,
+    pub train_marshal_s: f64,
+    pub train_transfer_s: f64,
 }
 
 pub fn available(name: &str) -> bool {
     artifacts_root().join(name).join("meta.json").exists()
 }
 
-/// Measure one artifact's latencies (compiles on first use, cached).
+/// Measure one artifact's latencies under the session's default cache
+/// mode (compiles on first use, cached).
 pub fn measure(client: &Client, name: &str) -> Result<Latency> {
+    measure_with_mode(client, name, CacheMode::from_env())
+}
+
+/// Measure under an explicit cache mode (device-resident vs. host
+/// round-trip A/B; avoids racing on process-global env vars).
+pub fn measure_with_mode(client: &Client, name: &str, mode: CacheMode) -> Result<Latency> {
     let artifact = load_named(name)?;
     let cfg = artifact.config.clone();
     let mut b = PretrainBatcher::new(cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, 3);
@@ -33,6 +53,7 @@ pub fn measure(client: &Client, name: &str) -> Result<Latency> {
 
     let forward_s = if artifact.has("forward") {
         let mut s = Session::open_eval(client, artifact.clone(), 0)?;
+        s.set_cache_mode(mode)?;
         let st = bench::bench(
             &format!("{name}:fwd"),
             2,
@@ -46,20 +67,38 @@ pub fn measure(client: &Client, name: &str) -> Result<Latency> {
     };
 
     let mut s = Session::open(client, artifact, 0)?;
+    s.set_cache_mode(mode)?;
+    // Warm up outside the harness (compile + the one-time cold param
+    // upload land here), then zero the split counters so that the
+    // exec/marshal/transfer breakdown covers exactly the measured
+    // iterations — i.e. split_ms actually decomposes train_ms.
+    for _ in 0..2 {
+        s.train_step(client, 1e-3, 1, &batch)?;
+    }
+    s.exec_seconds = 0.0;
+    s.marshal_seconds = 0.0;
+    s.transfer_seconds = 0.0;
+    let iters = Cell::new(0usize);
     let st = bench::bench(
         &format!("{name}:train"),
-        2,
+        0,
         5,
         Duration::from_millis(600),
         || {
-            s.train_step(1e-3, 1, &batch).unwrap();
+            s.train_step(client, 1e-3, 1, &batch).unwrap();
+            iters.set(iters.get() + 1);
         },
     );
     let train_s = st.mean.as_secs_f64();
+    let n = iters.get().max(1) as f64;
     Ok(Latency {
         artifact: name.to_string(),
         forward_s,
         train_s,
         train_examples_per_sec: cfg.batch_size as f64 / train_s,
+        mode,
+        train_exec_s: s.exec_seconds / n,
+        train_marshal_s: s.marshal_seconds / n,
+        train_transfer_s: s.transfer_seconds / n,
     })
 }

@@ -60,6 +60,9 @@ fn open_session(args: &Args, client: &Client, train: bool) -> Result<Session> {
         if std::path::Path::new(ckpt).exists() {
             session.store = ParamStore::load(ckpt, &session.artifact)?;
             session.invalidate_state();
+            // Re-upload once so the first step doesn't pay a cold
+            // host->device copy (§Perf L4).
+            session.warm_device_cache(client)?;
             println!("loaded checkpoint {ckpt} @ step {}", session.store.step);
         }
     }
@@ -243,7 +246,7 @@ fn cmd_latency(args: &Args) -> Result<()> {
         "train_step" => {
             let mut s2 = Session::open(&client, load_named(name)?, 0)?;
             bench::quick(&format!("{name}:train"), || {
-                s2.train_step(1e-3, 1, &batch).unwrap();
+                s2.train_step(&client, 1e-3, 1, &batch).unwrap();
             })
         }
         _ => bail!("--kind forward|train_step"),

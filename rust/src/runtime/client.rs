@@ -64,6 +64,12 @@ impl Client {
     pub fn cached_keys(&self) -> Vec<String> {
         self.cache.borrow().keys().cloned().collect()
     }
+
+    /// Copy a host literal into a device buffer (§Perf L4: the upload
+    /// half of the device-resident state cache — see EXPERIMENTS.md).
+    pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.inner.buffer_from_host_literal(None, lit)?)
+    }
 }
 
 impl Executable {
@@ -81,10 +87,30 @@ impl Executable {
         Ok(lit.to_tuple()?)
     }
 
-    /// Execute with device-resident buffers (no input host copies).
+    /// Execute with device-resident buffers (no input host copies),
+    /// but still sync the whole output tuple to host. Prefer
+    /// `run_buffers` on hot paths — this remains for callers that need
+    /// every output on host anyway.
     pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
         let outs = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
         let lit = outs[0][0].to_literal_sync()?;
         Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with device-resident buffers and keep the outputs
+    /// device-resident too (§Perf L4): the root tuple is decomposed
+    /// into per-element `PjRtBuffer`s without a host sync, so callers
+    /// pull only what they actually need (e.g. the 3 scalar metrics of
+    /// a train step) via `to_literal_sync`.
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut outs = self.exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
+        let elems = outs.swap_remove(0);
+        if elems.len() == 1 {
+            // return_tuple=True artifacts: one tuple-rooted buffer.
+            Ok(elems[0].untuple()?)
+        } else {
+            // Backend already untupled (PJRT untuple_result).
+            Ok(elems)
+        }
     }
 }

@@ -13,6 +13,9 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 /// Host-resident parameters + optimizer state, in meta.json order.
+/// `Clone` is the in-memory weight-fork primitive (finetune fan-out
+/// clones a pretrained store per task without a checkpoint round-trip).
+#[derive(Clone)]
 pub struct ParamStore {
     pub names: Vec<String>,
     pub params: Vec<Tensor>,
@@ -187,7 +190,7 @@ fn hash_name(name: &str) -> u64 {
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
     use crate::runtime::artifact::{BatchInputSpec, OptSlotSpec, ParamSpec};
     use crate::runtime::tensor::DType;
@@ -260,6 +263,18 @@ mod tests {
             assert_eq!(t1.as_f32().unwrap(), t2.as_f32().unwrap());
         }
         std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn clone_forks_weights_in_memory() {
+        let a = toy_artifact();
+        let base = ParamStore::init(&a, 5);
+        let mut fork = base.clone();
+        assert_eq!(fork.step, base.step);
+        let zeroed = Tensor::zeros_f32(fork.params[1].shape.clone());
+        fork.params[1] = zeroed;
+        // Deep clone: mutating the fork must not touch the base.
+        assert!(base.params[1].as_f32().unwrap().iter().any(|&x| x != 0.0));
     }
 
     #[test]

@@ -102,7 +102,7 @@ fn pallas_artifact_matches_jnp_artifact() {
             PretrainBatcher::new(cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, 3);
         let batch = batcher.next_batch();
         let mut s = session;
-        s.train_step(1e-3, 1, &batch).unwrap().loss
+        s.train_step(&client, 1e-3, 1, &batch).unwrap().loss
     };
     let l_jnp = loss_of("micro-altup");
     let l_pal = loss_of("micro-pallas-altup");
@@ -125,7 +125,7 @@ fn checkpoint_resume_continues_exactly() {
     let mut losses_a = Vec::new();
     for _ in 0..6 {
         let b = b1.next_batch();
-        losses_a.push(s1.train_step(1e-2, s1.store.step as u32 + 1, &b).unwrap().loss);
+        losses_a.push(s1.train_step(&client, 1e-2, s1.store.step as u32 + 1, &b).unwrap().loss);
     }
 
     // Train 3, checkpoint, reload, train 3 more.
@@ -134,7 +134,7 @@ fn checkpoint_resume_continues_exactly() {
     let mut losses_b = Vec::new();
     for _ in 0..3 {
         let b = b2.next_batch();
-        losses_b.push(s2.train_step(1e-2, s2.store.step as u32 + 1, &b).unwrap().loss);
+        losses_b.push(s2.train_step(&client, 1e-2, s2.store.step as u32 + 1, &b).unwrap().loss);
     }
     let path = std::env::temp_dir().join(format!("altup-it-{}.ckpt", std::process::id()));
     s2.checkpoint(&path).unwrap();
@@ -143,11 +143,68 @@ fn checkpoint_resume_continues_exactly() {
     std::fs::remove_file(&path).unwrap();
     for _ in 0..3 {
         let b = b2.next_batch();
-        losses_b.push(s3.train_step(1e-2, s3.store.step as u32 + 1, &b).unwrap().loss);
+        losses_b.push(s3.train_step(&client, 1e-2, s3.store.step as u32 + 1, &b).unwrap().loss);
     }
     for (a, b) in losses_a.iter().zip(losses_b.iter()) {
         assert!((a - b).abs() < 1e-5, "{losses_a:?} vs {losses_b:?}");
     }
+}
+
+/// §Perf L4 guard: the device-resident buffer cache must not go stale
+/// across sync/checkpoint — train N steps under the device cache,
+/// checkpoint, reload into a fresh session, and the eval metrics must
+/// match an identical run with the cache fully disabled
+/// (ALTUP_NO_STATE_CACHE semantics, set via the race-free API).
+#[test]
+fn device_cache_checkpoint_eval_parity_with_no_cache() {
+    require_artifacts!();
+    use altup::runtime::session::CacheMode;
+    let client = Client::cpu().unwrap();
+
+    let run = |mode: CacheMode, tag: &str| {
+        let artifact = load_named("micro-altup").unwrap();
+        let cfg = artifact.config.clone();
+        let mut s = Session::open(&client, artifact, 13).unwrap();
+        s.set_cache_mode(mode).unwrap();
+        let mut b =
+            PretrainBatcher::new(cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, 13);
+        let mut losses = Vec::new();
+        for _ in 0..4 {
+            let batch = b.next_batch();
+            losses.push(
+                s.train_step(&client, 1e-2, s.store.step as u32 + 1, &batch).unwrap().loss,
+            );
+        }
+        let path = std::env::temp_dir()
+            .join(format!("altup-parity-{tag}-{}.ckpt", std::process::id()));
+        s.checkpoint(&path).unwrap();
+
+        // Reload into a fresh session (different init seed on purpose)
+        // and evaluate: the checkpoint must fully determine the result.
+        let mut s2 = Session::open_eval(&client, load_named("micro-altup").unwrap(), 999).unwrap();
+        s2.set_cache_mode(mode).unwrap();
+        s2.store =
+            altup::runtime::params::ParamStore::load(&path, &s2.artifact).unwrap();
+        s2.invalidate_state();
+        std::fs::remove_file(&path).unwrap();
+        let mut eb =
+            PretrainBatcher::new(cfg.vocab_size, cfg.batch_size, cfg.enc_len, cfg.dec_len, 77);
+        let batch = eb.next_batch();
+        let m = s2.eval_step(&client, &batch).unwrap();
+        (losses, m.loss, m.correct, m.ntok)
+    };
+
+    let (losses_dev, loss_dev, corr_dev, ntok_dev) = run(CacheMode::Device, "dev");
+    let (losses_off, loss_off, corr_off, ntok_off) = run(CacheMode::Off, "off");
+    for (a, b) in losses_dev.iter().zip(losses_off.iter()) {
+        assert!((a - b).abs() < 1e-5, "train divergence: {losses_dev:?} vs {losses_off:?}");
+    }
+    assert!(
+        (loss_dev - loss_off).abs() < 1e-5,
+        "eval loss parity: device={loss_dev} off={loss_off}"
+    );
+    assert_eq!(corr_dev, corr_off, "eval correct parity");
+    assert_eq!(ntok_dev, ntok_off, "eval ntok parity");
 }
 
 #[test]

@@ -115,6 +115,7 @@ fn server_batches_and_replies() {
     for r in &responses {
         assert_eq!(r.tokens.len(), 32); // micro dec_len
         assert!(r.batch_fill >= 1);
+        assert!(!r.truncated, "in-budget prompts must not be flagged truncated");
     }
 }
 
@@ -147,7 +148,7 @@ fn variant_artifacts_all_trainable_one_step() {
             1,
         );
         let batch = b.next_batch();
-        let m = session.train_step(1e-3, 1, &batch).unwrap();
+        let m = session.train_step(&client, 1e-3, 1, &batch).unwrap();
         assert!(m.loss.is_finite() && m.loss > 0.0, "{name}: loss={}", m.loss);
         assert!(m.ntok > 0.0, "{name}");
     }

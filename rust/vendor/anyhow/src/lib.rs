@@ -1,0 +1,214 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so the workspace vendors
+//! the subset of the anyhow API it actually uses: the boxed `Error`
+//! with context frames, the `Result` alias, the `Context` extension
+//! trait on `Result`/`Option`, and the `anyhow!`/`bail!`/`ensure!`
+//! macros. Semantics mirror upstream anyhow: `Display` prints the
+//! outermost message, `Debug` prints the whole cause chain.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` (the error type defaults like upstream).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error. Like upstream anyhow, this deliberately
+/// does NOT implement `std::error::Error`, which is what allows the
+/// blanket `From<E: std::error::Error>` conversion below.
+pub struct Error {
+    /// Context frames, outermost (most recently attached) first. When
+    /// `root` is `None` the last frame is the original message.
+    frames: Vec<String>,
+    /// The original typed error, if this `Error` was converted from one.
+    root: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { frames: vec![message.to_string()], root: None }
+    }
+
+    /// Attach a higher-level context message (becomes the `Display`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The full cause chain, outermost message first.
+    pub fn chain(&self) -> Vec<String> {
+        let mut out = self.frames.clone();
+        if let Some(root) = &self.root {
+            out.push(root.to_string());
+            let mut src = root.source();
+            while let Some(s) = src {
+                out.push(s.to_string());
+                src = s.source();
+            }
+        }
+        out
+    }
+
+    /// Borrow the original typed error, if any.
+    pub fn root_cause_dyn(&self) -> Option<&(dyn StdError + Send + Sync + 'static)> {
+        self.root.as_deref()
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { frames: Vec::new(), root: Some(Box::new(e)) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.frames.first() {
+            Some(top) => f.write_str(top),
+            None => match &self.root {
+                Some(root) => write!(f, "{root}"),
+                None => f.write_str("unknown error"),
+            },
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain();
+        let mut it = chain.iter();
+        if let Some(top) = it.next() {
+            write!(f, "{top}")?;
+        }
+        let rest: Vec<&String> = it.collect();
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, msg) in rest.iter().enumerate() {
+                write!(f, "\n    {i}: {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an `Error` from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn from_and_display() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "no such file");
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening checkpoint").unwrap_err();
+        assert_eq!(e.to_string(), "opening checkpoint");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("no such file"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing field {}", "k")).unwrap_err();
+        assert_eq!(e.to_string(), "missing field k");
+        assert_eq!(Some(3).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 7 {
+                bail!("unlucky {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky 7");
+        assert_eq!(f(12).unwrap_err().to_string(), "too big: 12");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+}

@@ -1,0 +1,407 @@
+//! Offline stand-in for the xla-rs PJRT bindings.
+//!
+//! The build image cannot link the real XLA runtime, so this crate
+//! implements the xla-rs API surface the coordinator uses with
+//! host-backed storage:
+//!
+//! - `Literal` is a real host tensor container (create / read back /
+//!   tuple decompose all work).
+//! - `PjRtBuffer` is a "device" buffer backed by host memory: upload
+//!   (`PjRtClient::buffer_from_host_literal`), download
+//!   (`to_literal_sync`), and tuple decomposition (`untuple`) are
+//!   fully functional, so the runtime's device-resident state cache
+//!   and checkpoint-coherence machinery can be exercised in tests.
+//! - `PjRtClient::compile` / `PjRtLoadedExecutable::execute*` return
+//!   `Error::BackendUnavailable`: executing HLO requires the real
+//!   xla-rs bindings (repoint the `xla` path dependency in
+//!   rust/Cargo.toml; the API here is call-compatible, with `untuple`
+//!   mapping onto PJRT's untuple_result).
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+pub enum Error {
+    /// Operation needs a real PJRT backend (HLO compile/execute).
+    BackendUnavailable(String),
+    /// Shape/type misuse of a literal or buffer.
+    Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::BackendUnavailable(m) => {
+                write!(f, "xla stub: {m} (link the real xla-rs bindings to execute HLO)")
+            }
+            Error::Msg(m) => write!(f, "xla stub: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(m: impl fmt::Display) -> Result<T> {
+    Err(Error::Msg(m.to_string()))
+}
+
+// ---------------------------------------------------------------------
+// Element / primitive types
+// ---------------------------------------------------------------------
+
+/// Array element type (construction-side name, mirroring xla-rs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+/// Shape primitive type (readback-side name, mirroring xla-rs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+    U32,
+    Tuple,
+}
+
+impl ElementType {
+    pub fn primitive_type(self) -> PrimitiveType {
+        match self {
+            ElementType::F32 => PrimitiveType::F32,
+            ElementType::S32 => PrimitiveType::S32,
+            ElementType::U32 => PrimitiveType::U32,
+        }
+    }
+    pub fn element_size_in_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Rust scalar types storable in a `Literal`.
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn to_bytes(self) -> [u8; 4];
+    fn from_bytes(b: [u8; 4]) -> Self;
+}
+
+macro_rules! native {
+    ($t:ty, $et:expr) => {
+        impl NativeType for $t {
+            const ELEMENT_TYPE: ElementType = $et;
+            fn to_bytes(self) -> [u8; 4] {
+                self.to_le_bytes()
+            }
+            fn from_bytes(b: [u8; 4]) -> Self {
+                <$t>::from_le_bytes(b)
+            }
+        }
+    };
+}
+native!(f32, ElementType::F32);
+native!(i32, ElementType::S32);
+native!(u32, ElementType::U32);
+
+// ---------------------------------------------------------------------
+// Shapes
+// ---------------------------------------------------------------------
+
+/// Dense array shape: primitive type + dimensions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    prim: PrimitiveType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+    pub fn primitive_type(&self) -> PrimitiveType {
+        self.prim
+    }
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Literals (host tensors)
+// ---------------------------------------------------------------------
+
+/// A host-side XLA literal: a dense array or a tuple of literals.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    Array { prim: PrimitiveType, dims: Vec<i64>, bytes: Vec<u8> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// A rank-0 literal holding one scalar.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal::Array {
+            prim: T::ELEMENT_TYPE.primitive_type(),
+            dims: Vec::new(),
+            bytes: v.to_bytes().to_vec(),
+        }
+    }
+
+    /// Build a dense literal from raw bytes in row-major order.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        untyped_data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        let want = n * ty.element_size_in_bytes();
+        if untyped_data.len() != want {
+            return err(format!(
+                "data size {} != {} for shape {dims:?}",
+                untyped_data.len(),
+                want
+            ));
+        }
+        Ok(Literal::Array {
+            prim: ty.primitive_type(),
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            bytes: untyped_data.to_vec(),
+        })
+    }
+
+    /// Assemble a tuple literal (the stub's analogue of xla-rs
+    /// `Literal::tuple`; used by tests and the fake execute path).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal::Tuple(elements)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { prim, dims, .. } => {
+                Ok(ArrayShape { prim: *prim, dims: dims.clone() })
+            }
+            Literal::Tuple(_) => err("array_shape on a tuple literal"),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::Array { bytes, .. } => bytes.len() / 4,
+            Literal::Tuple(es) => es.iter().map(|e| e.element_count()).sum(),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Literal::Array { bytes, .. } => bytes.len(),
+            Literal::Tuple(es) => es.iter().map(|e| e.size_bytes()).sum(),
+        }
+    }
+
+    /// Read the array back as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { prim, bytes, .. } => {
+                if *prim != T::ELEMENT_TYPE.primitive_type() {
+                    return err(format!(
+                        "to_vec type mismatch: literal is {prim:?}, asked for {:?}",
+                        T::ELEMENT_TYPE
+                    ));
+                }
+                Ok(bytes
+                    .chunks_exact(4)
+                    .map(|c| T::from_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect())
+            }
+            Literal::Tuple(_) => err("to_vec on a tuple literal"),
+        }
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(es) => Ok(es),
+            Literal::Array { .. } => err("to_tuple on a non-tuple literal"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// HLO text artifacts
+// ---------------------------------------------------------------------
+
+/// Parsed-enough HLO module: the stub validates and holds the text.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(Path::new(path))
+            .map_err(|e| Error::Msg(format!("reading HLO text {path}: {e}")))?;
+        if !text.contains("HloModule") {
+            return err(format!("{path} does not look like HLO text"));
+        }
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation (opaque handle around the module).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+    pub fn module_text(&self) -> &str {
+        &self.proto.text
+    }
+}
+
+// ---------------------------------------------------------------------
+// PJRT client / executable / buffers
+// ---------------------------------------------------------------------
+
+/// PJRT client. The stub's "device" is host memory.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::BackendUnavailable("compile".to_string()))
+    }
+
+    /// Copy a host literal into a device buffer.
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { literal: literal.clone() })
+    }
+}
+
+/// A compiled executable. Unreachable in the stub (compile fails), but
+/// the API is kept call-compatible with xla-rs.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literal arguments (uploads internally).
+    /// Returns per-device output buffers.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::BackendUnavailable("execute".to_string()))
+    }
+
+    /// Execute with device-resident buffer arguments (no uploads).
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::BackendUnavailable("execute_b".to_string()))
+    }
+}
+
+/// A device buffer (host-backed in the stub).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Synchronous device -> host copy.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+
+    /// Decompose a tuple-rooted buffer into per-element device buffers
+    /// without a host round-trip (PJRT untuple_result semantics). A
+    /// non-tuple buffer comes back unchanged as a single element.
+    pub fn untuple(&self) -> Result<Vec<PjRtBuffer>> {
+        match &self.literal {
+            Literal::Tuple(es) => {
+                Ok(es.iter().map(|e| PjRtBuffer { literal: e.clone() }).collect())
+            }
+            Literal::Array { .. } => Ok(vec![self.clone()]),
+        }
+    }
+
+    pub fn on_device_size_bytes(&self) -> usize {
+        self.literal.size_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(shape.primitive_type(), PrimitiveType::F32);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_literals() {
+        assert_eq!(Literal::scalar(7i32).to_vec::<i32>().unwrap(), vec![7]);
+        assert_eq!(Literal::scalar(0.5f32).to_vec::<f32>().unwrap(), vec![0.5]);
+        assert_eq!(Literal::scalar(9u32).array_shape().unwrap().dims().len(), 0);
+    }
+
+    #[test]
+    fn bad_sizes_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 7]).is_err()
+        );
+    }
+
+    #[test]
+    fn buffer_upload_download_untuple() {
+        let client = PjRtClient::cpu().unwrap();
+        let a = Literal::scalar(1.0f32);
+        let b = Literal::scalar(2i32);
+        let tup = Literal::tuple(vec![a, b]);
+        let buf = client.buffer_from_host_literal(None, &tup).unwrap();
+        let parts = buf.untuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![1.0]);
+        assert_eq!(parts[1].to_literal_sync().unwrap().to_vec::<i32>().unwrap(), vec![2]);
+        // non-tuple untuple is identity
+        let solo = client.buffer_from_host_literal(None, &Literal::scalar(3u32)).unwrap();
+        assert_eq!(solo.untuple().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn execute_requires_backend() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu-stub");
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        assert!(matches!(client.compile(&comp), Err(Error::BackendUnavailable(_))));
+    }
+}
