@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("== pretraining {name} for {} steps ==", opts.pretrain_steps);
     let artifact = load_named(&name)?;
-    let (session, pre_ev, sps) = pretrain(&client, artifact, &opts)?;
+    let (session, pre_ev, sps, _data_wait) = pretrain(&client, artifact, &opts)?;
     println!("pretrain done ({sps:.2} steps/s): {}", pre_ev.summary());
 
     println!("\n== finetuning on {} for {} steps ==", kind.name(), opts.finetune_steps);

@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
         checkpoint_path: Some(ckpt.clone().into()),
         verbose: true,
         constant_lr: None,
+        ..Default::default()
     };
     let (ema, sps) = trainer.run(&client, &opts)?;
     trainer.session.checkpoint(&ckpt)?;

@@ -17,17 +17,23 @@ fn main() -> anyhow::Result<()> {
     let name = args.str_or("artifact", "micro-altup");
     let clients = args.usize_or("clients", 4);
     let per_client = args.usize_or("requests", 32);
+    let replicas = args.usize_or("replicas", 1);
 
     let artifact = load_named(&name)?;
     let cfg = artifact.config;
     println!(
-        "serving {name} (batch {} x enc {}), {clients} clients x {per_client} requests",
+        "serving {name} (batch {} x enc {}) on {replicas} replica(s), \
+         {clients} clients x {per_client} requests",
         cfg.batch_size, cfg.enc_len
     );
 
     let server = ServerHandle::spawn(
         &name,
-        ServerOptions { batch_window: Duration::from_millis(args.u64_or("window-ms", 10)), ..Default::default() },
+        ServerOptions {
+            batch_window: Duration::from_millis(args.u64_or("window-ms", 10)),
+            replicas,
+            ..Default::default()
+        },
     );
 
     let t0 = Instant::now();
@@ -43,7 +49,7 @@ fn main() -> anyhow::Result<()> {
                 let ex = task.example(i as u64, enc_len - 2);
                 let (tx, rx) = std::sync::mpsc::channel();
                 sender
-                    .send(altup::coordinator::server::Request { enc_tokens: ex.enc, reply: tx })
+                    .send(altup::coordinator::server::Request::new(ex.enc, tx))
                     .unwrap();
                 let resp = rx.recv().unwrap();
                 latencies.push(resp.latency);
@@ -68,6 +74,13 @@ fn main() -> anyhow::Result<()> {
         stats.batches,
         stats.mean_fill(),
         cfg.batch_size
+    );
+    println!(
+        "serving:     padded waste {:.1}%, latency p50 {:.2} / p95 {:.2} / p99 {:.2} ms",
+        stats.waste_ratio() * 100.0,
+        stats.p50_ms(),
+        stats.p95_ms(),
+        stats.p99_ms()
     );
     Ok(())
 }

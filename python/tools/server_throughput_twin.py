@@ -1,0 +1,294 @@
+"""Threaded twin of `rust/benches/server_throughput.rs`.
+
+Mirrors the Rust serving bench 1:1 — same SplitMix64 workload stream,
+same bucket ladder (`runtime::session::bucket_for`), same router policy
+(group by bucket, flush on full batch or expired window), same replica
+pool semantics, and the same sim-decode cost model (sleep proportional
+to the executed ``batch_size x bucket`` geometry) — so the serving-
+policy numbers (QPS scaling across replicas, padded-token waste,
+latency percentiles) can be measured on machines without a cargo
+toolchain or a PJRT backend. The Rust bench is the canonical producer
+of BENCH_server_throughput.json; running it overwrites this twin's
+output (the ``producer`` field records which one wrote the file).
+
+Usage: python3 python/tools/server_throughput_twin.py [out.json]
+"""
+
+import json
+import queue
+import sys
+import threading
+import time
+
+MASK = (1 << 64) - 1
+
+BATCH_SIZE = 8
+ENC_LEN = 128
+TOKEN_NS = 20000  # mirrors SimSpec::new's default
+WINDOW_S = 0.002
+REQUESTS = 384
+CLIENTS = 32
+MIN_BUCKET = 8
+
+
+class Rng:
+    """SplitMix64, matching rust/src/util/rng.rs bit-for-bit."""
+
+    def __init__(self, seed):
+        self.state = (seed + 0x9E3779B97F4A7C15) & MASK
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return (z ^ (z >> 31)) & MASK
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def range(self, lo, hi):
+        return lo + ((self.next_u64() * (hi - lo)) >> 64)
+
+
+def bucket_for(length, enc_len):
+    """Mirror of runtime::session::bucket_for."""
+    if length >= enc_len:
+        return enc_len
+    b = MIN_BUCKET
+    while b < enc_len:
+        if length <= b:
+            return b
+        b <<= 1
+    return enc_len
+
+
+def mixed_prompt_lengths(n, enc_len, seed):
+    """Mirror of the bench's mixed_prompts draw order (length draw plus
+    one RNG draw per token, so the stream stays aligned)."""
+    rng = Rng(seed)
+    lengths = []
+    for _ in range(n):
+        if rng.next_f64() < 0.7:
+            length = rng.range(4, max(enc_len // 4, 5))
+        else:
+            length = rng.range(enc_len // 2, enc_len)
+        for _ in range(length):
+            rng.next_u64()  # token draw
+        lengths.append(length)
+    return lengths
+
+
+def percentile(samples, p):
+    if not samples:
+        return 0.0
+    v = sorted(samples)
+    idx = round((p / 100.0) * (len(v) - 1))
+    return v[min(idx, len(v) - 1)]
+
+
+class Stats:
+    def __init__(self):
+        self.requests = 0
+        self.batches = 0
+        self.total_fill = 0
+        self.prompt_tokens = 0
+        self.executed_tokens = 0
+        self.latency_ms = []
+        self.lock = threading.Lock()
+
+    def waste_ratio(self):
+        if self.executed_tokens == 0:
+            return 0.0
+        return 1.0 - self.prompt_tokens / self.executed_tokens
+
+    def mean_fill(self):
+        return self.total_fill / self.batches if self.batches else 0.0
+
+
+def run_config(lengths, replicas, bucketed):
+    req_q = queue.Queue()
+    # Bounded job queue = backpressure, mirroring the Rust router: full
+    # groups ship with a blocking put; due-but-partial groups ship
+    # best-effort and otherwise keep accumulating while replicas are
+    # busy.
+    job_q = queue.Queue(maxsize=max(replicas, 1))
+    stats = Stats()
+    n_clients = CLIENTS
+
+    def router():
+        # bucket -> list of (t0, admitted, reply_q, length); latency is
+        # reported from the client-side t0, the batch-window deadline
+        # runs from admission (mirrors the Rust router).
+        groups = {}
+        live_clients = n_clients
+        disconnected = False
+        while not (disconnected and not groups):
+            # Flush pass.
+            now = time.monotonic()
+            due_unsent = False
+            for bucket in list(groups.keys()):
+                group = groups[bucket]
+                full = len(group) >= BATCH_SIZE
+                due = now >= group[0][1] + WINDOW_S
+                if full or disconnected:
+                    job_q.put((bucket, groups.pop(bucket)))
+                elif due:
+                    g = groups.pop(bucket)
+                    try:
+                        job_q.put_nowait((bucket, g))
+                    except queue.Full:
+                        groups[bucket] = g
+                        due_unsent = True
+            if disconnected:
+                continue
+            # Admit pass.
+            msg = None
+            if not groups:
+                m = req_q.get()
+                if m is None:
+                    live_clients -= 1
+                    if live_clients == 0:
+                        disconnected = True
+                else:
+                    msg = m
+            else:
+                if due_unsent:
+                    wait = WINDOW_S
+                else:
+                    oldest = min(g[0][1] for g in groups.values())
+                    wait = oldest + WINDOW_S - time.monotonic()
+                if wait > 0:
+                    try:
+                        m = req_q.get(timeout=wait)
+                        if m is None:
+                            live_clients -= 1
+                            if live_clients == 0:
+                                disconnected = True
+                        else:
+                            msg = m
+                    except queue.Empty:
+                        pass
+            if msg is not None:
+                t0, reply, length = msg
+                bucket = bucket_for(length, ENC_LEN) if bucketed else ENC_LEN
+                groups.setdefault(bucket, []).append(
+                    (t0, time.monotonic(), reply, length)
+                )
+        for _ in range(max(replicas, 1)):
+            job_q.put(None)
+
+    def replica():
+        while True:
+            job = job_q.get()
+            if job is None:
+                break
+            bucket, group = job
+            time.sleep(TOKEN_NS * BATCH_SIZE * bucket / 1e9)  # sim decode
+            now = time.monotonic()
+            with stats.lock:
+                stats.batches += 1
+                stats.total_fill += len(group)
+                stats.requests += len(group)
+                stats.executed_tokens += BATCH_SIZE * bucket
+                for t0, _admitted, _reply, length in group:
+                    stats.prompt_tokens += min(length, bucket)
+                    stats.latency_ms.append((now - t0) * 1e3)
+            for _t0, _admitted, reply, _length in group:
+                reply.put(True)
+
+    def client(c):
+        for length in lengths[c::n_clients]:
+            reply = queue.SimpleQueue()
+            req_q.put((time.monotonic(), reply, length))
+            reply.get()
+        req_q.put(None)  # this client is done
+
+    threads = [threading.Thread(target=router, name="router")]
+    threads += [
+        threading.Thread(target=replica, name=f"replica-{i}")
+        for i in range(max(replicas, 1))
+    ]
+    t_start = time.monotonic()
+    client_threads = [
+        threading.Thread(target=client, args=(c,), name=f"client-{c}")
+        for c in range(n_clients)
+    ]
+    for t in threads + client_threads:
+        t.start()
+    for t in client_threads:
+        t.join()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t_start
+    qps = len(lengths) / max(wall, 1e-9)
+    return qps, stats
+
+
+def row(qps, stats, replicas=None):
+    out = {}
+    if replicas is not None:
+        out["replicas"] = replicas
+    out.update(
+        {
+            "qps": round(qps, 1),
+            "mean_fill": round(stats.mean_fill(), 3),
+            "waste_ratio": round(stats.waste_ratio(), 4),
+            "prompt_tokens": stats.prompt_tokens,
+            "executed_tokens": stats.executed_tokens,
+            "batches": stats.batches,
+            "p50_ms": round(percentile(stats.latency_ms, 50), 2),
+            "p95_ms": round(percentile(stats.latency_ms, 95), 2),
+            "p99_ms": round(percentile(stats.latency_ms, 99), 2),
+        }
+    )
+    return out
+
+
+def main():
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_server_throughput.json"
+    lengths = mixed_prompt_lengths(REQUESTS, ENC_LEN, 0x5E0A11)
+
+    base_qps, base_stats = run_config(lengths, replicas=1, bucketed=False)
+    print(f"baseline full-length x1: {base_qps:.1f} qps, "
+          f"waste {base_stats.waste_ratio() * 100:.1f}%")
+
+    rows = []
+    qps_by = {}
+    for replicas in (1, 2, 4):
+        qps, stats = run_config(lengths, replicas=replicas, bucketed=True)
+        qps_by[replicas] = qps
+        rows.append(row(qps, stats, replicas))
+        print(f"bucketed x{replicas}: {qps:.1f} qps, fill {stats.mean_fill():.2f}, "
+              f"waste {stats.waste_ratio() * 100:.1f}%, "
+              f"p50 {percentile(stats.latency_ms, 50):.2f} ms")
+
+    scaling = qps_by[4] / qps_by[1] if qps_by[1] else 0.0
+    print(f"scaling x4/x1 = {scaling:.2f}x")
+
+    doc = {
+        "bench": "server_throughput",
+        "engine": "sim",
+        "workload": {
+            "requests": REQUESTS,
+            "clients": CLIENTS,
+            "batch_size": BATCH_SIZE,
+            "enc_len": ENC_LEN,
+            "mix": "70% short [4, enc/4), 30% long [enc/2, enc)",
+            "batch_window_ms": WINDOW_S * 1e3,
+        },
+        "baseline_full_length": row(base_qps, base_stats),
+        "replicas": rows,
+        "qps_scaling_x4_over_x1": round(scaling, 3),
+        "producer": "python/tools/server_throughput_twin.py "
+                    "(threaded twin; re-run `cargo bench --bench server_throughput -- --json` "
+                    "on a cargo-enabled machine to overwrite with the Rust measurement)",
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

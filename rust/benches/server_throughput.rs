@@ -1,0 +1,211 @@
+//! Bench: serving throughput under shape-bucketed batching and 1/2/4
+//! model replicas, on a mixed short/long prompt workload (§Perf L5).
+//!
+//! Flags (after `--`):
+//!   --json             write BENCH_server_throughput.json
+//!   --json-path <p>    override the output path
+//!   --requests <n>     total requests per configuration (default 384)
+//!   --clients <n>      concurrent closed-loop clients (default 32)
+//!   --window-ms <n>    router batch window (default 2)
+//!
+//! Backend: when `make artifacts` has run AND a real PJRT backend is
+//! linked, the bench serves the micro-altup artifact; otherwise it
+//! falls back to the deterministic sim engine (decode cost proportional
+//! to the executed `batch_size x bucket` geometry, see
+//! `coordinator::server::SimSpec`), which exercises the identical
+//! router/bucketing/replica machinery.
+//!
+//! Reported per configuration: QPS, mean batch fill, padded-token
+//! waste ratio, and p50/p95/p99 latency; the `baseline_full_length` row
+//! is the same workload forced to always pad to `enc_len` on one
+//! replica — the pre-L5 serving path.
+
+use altup::coordinator::server::{
+    EngineSpec, Request, ServerHandle, ServerOptions, ServerStats, SimSpec,
+};
+use altup::runtime::artifact::load_named;
+use altup::runtime::client::Client;
+use altup::util::cli::Args;
+use altup::util::json::Json;
+use altup::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+/// 70% short prompts (uniform in [4, enc_len/4)) / 30% long (uniform in
+/// [enc_len/2, enc_len)): the mixed workload where always-full padding
+/// hurts most.
+fn mixed_prompts(n: usize, enc_len: usize, vocab: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = if rng.next_f64() < 0.7 {
+                rng.range(4, (enc_len / 4).max(5))
+            } else {
+                rng.range(enc_len / 2, enc_len)
+            };
+            (0..len).map(|_| rng.range(1, vocab) as i32).collect()
+        })
+        .collect()
+}
+
+fn drive(
+    engine: &EngineSpec,
+    opts: ServerOptions,
+    prompts: &[Vec<i32>],
+    clients: usize,
+) -> anyhow::Result<(f64, ServerStats)> {
+    let server = ServerHandle::spawn_engine(engine.clone(), opts);
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let sender = server.sender.clone();
+        let mine: Vec<Vec<i32>> =
+            prompts.iter().skip(c).step_by(clients).cloned().collect();
+        joins.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            for p in mine {
+                let (tx, rx) = std::sync::mpsc::channel();
+                sender
+                    .send(Request::new(p, tx))
+                    .map_err(|_| anyhow::anyhow!("router down"))?;
+                rx.recv().map_err(|_| anyhow::anyhow!("no reply"))?;
+            }
+            Ok(())
+        }));
+    }
+    for j in joins {
+        j.join().expect("client thread panicked")?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown()?;
+    Ok((prompts.len() as f64 / wall.max(1e-9), stats))
+}
+
+fn row_json(replicas: Option<usize>, qps: f64, stats: &ServerStats) -> Json {
+    let mut pairs: Vec<(&str, Json)> = Vec::new();
+    if let Some(r) = replicas {
+        pairs.push(("replicas", Json::num(r as f64)));
+    }
+    pairs.extend([
+        ("qps", Json::num(qps)),
+        ("mean_fill", Json::num(stats.mean_fill())),
+        ("waste_ratio", Json::num(stats.waste_ratio())),
+        ("prompt_tokens", Json::num(stats.prompt_tokens as f64)),
+        ("executed_tokens", Json::num(stats.executed_tokens as f64)),
+        ("batches", Json::num(stats.batches as f64)),
+        ("p50_ms", Json::num(stats.p50_ms())),
+        ("p95_ms", Json::num(stats.p95_ms())),
+        ("p99_ms", Json::num(stats.p99_ms())),
+    ]);
+    Json::obj(pairs)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let requests = args.usize_or("requests", 384);
+    let clients = args.usize_or("clients", 32);
+    let window = Duration::from_millis(args.u64_or("window-ms", 2));
+    let json_out = args.has("json") || args.has("json-path");
+
+    // Pick the backend: real artifact when present and executable,
+    // else the deterministic sim engine.
+    let client = Client::cpu()?;
+    let stub = client.platform() == "cpu-stub";
+    let (engine, engine_name, batch_size, enc_len, vocab) =
+        match (!stub).then(|| load_named("micro-altup")) {
+            Some(Ok(a)) => {
+                let cfg = a.config.clone();
+                (
+                    EngineSpec::Artifact { name: "micro-altup".into() },
+                    "artifact:micro-altup".to_string(),
+                    cfg.batch_size,
+                    cfg.enc_len,
+                    cfg.vocab_size,
+                )
+            }
+            _ => {
+                let spec = SimSpec::new(8, 128, 16);
+                let (b, e, v) = (spec.batch_size, spec.enc_len, spec.vocab_size);
+                (EngineSpec::Sim(spec), "sim".to_string(), b, e, v)
+            }
+        };
+    println!(
+        "== server_throughput: engine={engine_name} batch={batch_size} enc_len={enc_len} \
+         requests={requests} clients={clients} =="
+    );
+    let prompts = mixed_prompts(requests, enc_len, vocab, 0x5E_0A11);
+    let opts = |replicas: usize, bucketed: bool| ServerOptions {
+        batch_window: window,
+        replicas,
+        bucketed,
+        ..Default::default()
+    };
+
+    println!(
+        "{:<26} {:>9} {:>10} {:>8} {:>9} {:>9} {:>9}",
+        "config", "qps", "mean fill", "waste", "p50 ms", "p95 ms", "p99 ms"
+    );
+    let report = |label: &str, qps: f64, stats: &ServerStats| {
+        println!(
+            "{:<26} {:>9.1} {:>10.2} {:>7.1}% {:>9.2} {:>9.2} {:>9.2}",
+            label,
+            qps,
+            stats.mean_fill(),
+            stats.waste_ratio() * 100.0,
+            stats.p50_ms(),
+            stats.p95_ms(),
+            stats.p99_ms()
+        );
+    };
+
+    // Pre-L5 baseline: one replica, everything padded to enc_len.
+    let (base_qps, base_stats) = drive(&engine, opts(1, false), &prompts, clients)?;
+    report("baseline full-length x1", base_qps, &base_stats);
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut qps_by_replicas: Vec<(usize, f64)> = Vec::new();
+    for replicas in [1usize, 2, 4] {
+        let (qps, stats) = drive(&engine, opts(replicas, true), &prompts, clients)?;
+        report(&format!("bucketed x{replicas}"), qps, &stats);
+        qps_by_replicas.push((replicas, qps));
+        rows.push(row_json(Some(replicas), qps, &stats));
+    }
+
+    let q1 = qps_by_replicas.iter().find(|(r, _)| *r == 1).map(|(_, q)| *q).unwrap_or(0.0);
+    let q4 = qps_by_replicas.iter().find(|(r, _)| *r == 4).map(|(_, q)| *q).unwrap_or(0.0);
+    let bucketed_waste =
+        rows.first().and_then(|r| r.get("waste_ratio").as_f64()).unwrap_or(1.0);
+    println!(
+        "scaling: x4/x1 = {:.2}x  |  waste: baseline {:.1}% -> bucketed {:.1}%",
+        if q1 > 0.0 { q4 / q1 } else { 0.0 },
+        base_stats.waste_ratio() * 100.0,
+        bucketed_waste * 100.0
+    );
+
+    if json_out {
+        let path = args.str_or("json-path", "BENCH_server_throughput.json");
+        let doc = Json::obj(vec![
+            ("bench", Json::str("server_throughput")),
+            ("engine", Json::str(&engine_name)),
+            (
+                "workload",
+                Json::obj(vec![
+                    ("requests", Json::num(requests as f64)),
+                    ("clients", Json::num(clients as f64)),
+                    ("batch_size", Json::num(batch_size as f64)),
+                    ("enc_len", Json::num(enc_len as f64)),
+                    ("mix", Json::str("70% short [4, enc/4), 30% long [enc/2, enc)")),
+                    ("batch_window_ms", Json::num(window.as_secs_f64() * 1e3)),
+                ]),
+            ),
+            ("baseline_full_length", row_json(None, base_qps, &base_stats)),
+            ("replicas", Json::Arr(rows)),
+            ("qps_scaling_x4_over_x1", Json::num(if q1 > 0.0 { q4 / q1 } else { 0.0 })),
+            (
+                "producer",
+                Json::str("cargo bench --bench server_throughput -- --json"),
+            ),
+        ]);
+        std::fs::write(&path, format!("{doc}\n"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

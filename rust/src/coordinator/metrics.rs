@@ -115,6 +115,78 @@ pub fn rsqrt_lr(step: u64, warmup: u64, base: f64) -> f64 {
     base / (step.max(warmup) as f64).sqrt()
 }
 
+const LAT_SUB: usize = 8; // sub-buckets per octave (~9% relative error)
+const LAT_BUCKETS: usize = 8 * 30; // 1 us .. ~18 min
+const LAT_MIN_MS: f64 = 0.001;
+
+/// Fixed-size log-bucketed latency histogram: O(1) memory no matter
+/// how many requests a server lives through, mergeable across
+/// replicas, with p50/p95/p99 read off the cumulative counts (bucket
+/// width 2^(1/8), so estimates carry <~9% relative error — plenty for
+/// serving percentiles).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { counts: vec![0; LAT_BUCKETS], total: 0 }
+    }
+
+    fn bucket(ms: f64) -> usize {
+        if !(ms > LAT_MIN_MS) {
+            return 0; // also catches NaN / negatives
+        }
+        let idx = ((ms / LAT_MIN_MS).log2() * LAT_SUB as f64).floor() as usize;
+        idx.min(LAT_BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of a bucket, in ms.
+    fn value(idx: usize) -> f64 {
+        LAT_MIN_MS * 2f64.powf((idx as f64 + 0.5) / LAT_SUB as f64)
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        self.counts[Self::bucket(ms)] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.total += other.total;
+    }
+
+    /// Nearest-rank percentile (0..=100) over the bucketed samples.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0).clamp(0.0, 1.0) * (self.total as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Self::value(i);
+            }
+        }
+        Self::value(LAT_BUCKETS - 1)
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +219,42 @@ mod tests {
         assert_eq!(rec.get("loss").as_f64(), Some(3.5));
         assert_eq!(rec.get("step").as_i64(), Some(1));
         std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn latency_histogram_percentiles_and_merge() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.percentile_ms(50.0), 0.0, "empty histogram");
+        for ms in [1.0f64; 90] {
+            h.record(ms);
+        }
+        for ms in [100.0f64; 10] {
+            h.record(ms);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile_ms(50.0);
+        assert!((p50 - 1.0).abs() / 1.0 < 0.10, "p50={p50}");
+        let p99 = h.percentile_ms(99.0);
+        assert!((p99 - 100.0).abs() / 100.0 < 0.10, "p99={p99}");
+        assert!(h.percentile_ms(95.0) >= p50);
+
+        let mut other = LatencyHistogram::new();
+        for _ in 0..900 {
+            other.record(0.5);
+        }
+        other.merge(&h);
+        assert_eq!(other.count(), 1000);
+        let p50m = other.percentile_ms(50.0);
+        assert!((p50m - 0.5).abs() / 0.5 < 0.10, "merged p50={p50m}");
+
+        // Degenerate inputs land in the floor bucket instead of panicking.
+        let mut d = LatencyHistogram::new();
+        d.record(0.0);
+        d.record(-3.0);
+        d.record(f64::NAN);
+        d.record(1e12);
+        assert_eq!(d.count(), 4);
+        assert!(d.percentile_ms(0.0) > 0.0);
     }
 
     #[test]

@@ -21,6 +21,8 @@ pub struct PipelineOptions {
     pub eval_batches: usize,
     pub seed: u64,
     pub verbose: bool,
+    /// Overlap batch preparation with device execution (§Perf L5).
+    pub prefetch: bool,
 }
 
 impl Default for PipelineOptions {
@@ -37,6 +39,7 @@ impl Default for PipelineOptions {
             eval_batches: 8,
             seed: 0,
             verbose: false,
+            prefetch: crate::data::prefetch::enabled_from_env(),
         }
     }
 }
@@ -53,15 +56,19 @@ pub struct PipelineResult {
     pub exec_seconds: f64,
     pub marshal_seconds: f64,
     pub transfer_seconds: f64,
+    /// Pretrain seconds blocked waiting for batch data (§Perf L5 —
+    /// ~0 when the prefetcher hides preparation behind execution).
+    pub data_wait_seconds: f64,
     pub task_results: Vec<(TaskKind, EvalResult)>,
 }
 
-/// Pretrain an artifact and return (session, pretrain eval, steps/sec).
+/// Pretrain an artifact and return (session, pretrain eval, steps/sec,
+/// data-wait seconds).
 pub fn pretrain(
     client: &Client,
     artifact: Artifact,
     opts: &PipelineOptions,
-) -> Result<(Session, EvalResult, f64)> {
+) -> Result<(Session, EvalResult, f64, f64)> {
     let cfg = artifact.config.clone();
     let session = Session::open(client, artifact, opts.seed)?;
     let batcher = PretrainBatcher::new(
@@ -78,13 +85,15 @@ pub fn pretrain(
         base_lr: 1.0,
         log_every: 50,
         verbose: opts.verbose,
+        prefetch: opts.prefetch,
         ..Default::default()
     };
     let (_, sps) = trainer.run(client, &topts)?;
+    let data_wait = trainer.data_wait_seconds;
     let ev = trainer.eval(client, opts.eval_batches)?;
     let mut session = trainer.session;
     session.sync_store()?; // finetune_task clones weights via store
-    Ok((session, ev, sps))
+    Ok((session, ev, sps, data_wait))
 }
 
 /// Finetune a pretrained session on one task; returns its eval result.
@@ -111,6 +120,7 @@ pub fn finetune_task(
         constant_lr: Some(opts.finetune_lr),
         log_every: 50,
         verbose: opts.verbose,
+        prefetch: opts.prefetch,
         ..Default::default()
     };
     trainer.run(client, &topts)?;
@@ -131,7 +141,7 @@ pub fn run_pipeline(
     opts: &PipelineOptions,
 ) -> Result<PipelineResult> {
     let artifact = load_named(artifact_name)?;
-    let (session, pre_ev, sps) = pretrain(client, artifact, opts)?;
+    let (session, pre_ev, sps, data_wait_seconds) = pretrain(client, artifact, opts)?;
     let (exec_seconds, marshal_seconds, transfer_seconds) =
         (session.exec_seconds, session.marshal_seconds, session.transfer_seconds);
     let mut task_results = Vec::new();
@@ -150,6 +160,7 @@ pub fn run_pipeline(
         exec_seconds,
         marshal_seconds,
         transfer_seconds,
+        data_wait_seconds,
         task_results,
     })
 }

@@ -1,23 +1,46 @@
-//! Threaded inference server with dynamic batching.
+//! Multi-replica inference server with shape-bucketed dynamic batching
+//! (§Perf L5).
 //!
-//! The PJRT session is !Send (Rc-backed FFI handles), so the server owns
-//! client + session on a dedicated model thread; callers submit requests
-//! over an mpsc channel and get replies over per-request channels. The
-//! batcher groups up to `batch_size` requests within `batch_window`,
-//! pads partial batches, and runs one `decode_step` per group — the
-//! standard dynamic-batching pattern (vLLM-router-like, scaled to one
-//! replica).
+//! The PJRT session is !Send (Rc-backed FFI handles), so each replica
+//! owns its client + session on a dedicated model thread. A router
+//! thread admits requests continuously, groups them by sequence-length
+//! bucket (`runtime::session::bucket_for`), and emits full-or-expired
+//! batches onto a shared job queue; the first idle replica picks each
+//! job up — the standard continuous-batching layout (vLLM-router-like),
+//! scaled to N replicas. A batch of short prompts runs the smallest
+//! bucket that fits instead of always padding to `enc_len`, so padded-
+//! token waste drops with the workload's length mix.
+//!
+//! Backends: `EngineSpec::Artifact` serves a compiled artifact through
+//! a warmed device cache (§Perf L4); `EngineSpec::Sim` is a
+//! deterministic backend-free decode (cost proportional to the executed
+//! `batch_size x bucket` geometry) so the scheduler, bucketing, and
+//! replica machinery can be exercised and benchmarked without linking
+//! the real xla-rs bindings.
 
+use crate::coordinator::metrics::LatencyHistogram;
 use crate::runtime::artifact::load_named;
 use crate::runtime::client::Client;
-use crate::runtime::session::Session;
-use anyhow::Result;
+use crate::runtime::session::{bucket_for, Session};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 pub struct Request {
     pub enc_tokens: Vec<i32>,
     pub reply: mpsc::Sender<Response>,
+    /// When the request was created (client side), so reported latency
+    /// includes time queued in the request channel, not just time after
+    /// router admission. `Request::new` stamps it.
+    pub t0: Instant,
+}
+
+impl Request {
+    pub fn new(enc_tokens: Vec<i32>, reply: mpsc::Sender<Response>) -> Request {
+        Request { enc_tokens, reply, t0: Instant::now() }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -29,6 +52,10 @@ pub struct Response {
     /// True when the request's prompt exceeded the model's `enc_len`
     /// and was cut to fit (previously a silent truncation).
     pub truncated: bool,
+    /// Sequence-length bucket the request actually executed at.
+    pub bucket: usize,
+    /// Which model replica served the request.
+    pub replica: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -37,24 +64,88 @@ pub struct ServerOptions {
     pub seed: u64,
     /// Optional checkpoint to load weights from.
     pub checkpoint: Option<std::path::PathBuf>,
+    /// Number of model threads behind the shared router queue.
+    /// `ALTUP_SERVER_REPLICAS` sets the default (else 1); 0 means 1.
+    pub replicas: usize,
+    /// Shape-bucketed batching (default on; `ALTUP_NO_BUCKETS=1` pads
+    /// every batch to the full `enc_len` — the A/B baseline).
+    pub bucketed: bool,
 }
 
 impl Default for ServerOptions {
     fn default() -> Self {
-        ServerOptions { batch_window: Duration::from_millis(5), seed: 0, checkpoint: None }
+        ServerOptions {
+            batch_window: Duration::from_millis(5),
+            seed: 0,
+            checkpoint: None,
+            replicas: replicas_from_env(),
+            bucketed: std::env::var_os("ALTUP_NO_BUCKETS").is_none(),
+        }
     }
 }
 
-pub struct ServerHandle {
-    pub sender: mpsc::Sender<Request>,
-    join: Option<std::thread::JoinHandle<Result<ServerStats>>>,
+fn replicas_from_env() -> usize {
+    std::env::var("ALTUP_SERVER_REPLICAS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
 }
 
+/// Which decode backend the replicas run.
+#[derive(Debug, Clone)]
+pub enum EngineSpec {
+    /// A compiled artifact by suite name (requires a real PJRT backend).
+    Artifact { name: String },
+    /// Deterministic backend-free decode with a token-proportional cost
+    /// model — for scheduler tests/benches on machines without the
+    /// xla-rs bindings.
+    Sim(SimSpec),
+}
+
+#[derive(Debug, Clone)]
+pub struct SimSpec {
+    pub batch_size: usize,
+    pub enc_len: usize,
+    pub dec_len: usize,
+    pub vocab_size: usize,
+    /// Simulated device nanoseconds per executed token
+    /// (`batch_size * bucket` tokens per batch). `ALTUP_SIM_TOKEN_NS`
+    /// sets the default (else 20000 — ~20 ms per full (8,128) batch,
+    /// in the ballpark of a micro-model CPU decode — so service time,
+    /// not router/scheduler overhead, dominates benches even on small
+    /// shared machines).
+    pub token_ns: u64,
+}
+
+impl SimSpec {
+    pub fn new(batch_size: usize, enc_len: usize, dec_len: usize) -> SimSpec {
+        let token_ns = std::env::var("ALTUP_SIM_TOKEN_NS")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(20000);
+        SimSpec { batch_size, enc_len, dec_len, vocab_size: 512, token_ns }
+    }
+}
+
+/// Aggregate serving counters; per-replica stats are merged by
+/// `ServerHandle::shutdown`.
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
     pub requests: usize,
     pub batches: usize,
     pub total_fill: usize,
+    /// How many replica stat sets were merged in.
+    pub replicas: usize,
+    /// Real prompt tokens submitted (post-truncation).
+    pub prompt_tokens: usize,
+    /// Tokens actually executed (`batch_size * effective bucket` per
+    /// batch) — the denominator of the padded-waste ratio.
+    pub executed_tokens: usize,
+    pub truncated: usize,
+    /// Per-request queued+executed latency, log-bucketed (O(1) memory
+    /// over a server's lifetime, mergeable across replicas).
+    pub latency: LatencyHistogram,
 }
 
 impl ServerStats {
@@ -65,107 +156,439 @@ impl ServerStats {
             self.total_fill as f64 / self.batches as f64
         }
     }
+
+    /// Fraction of executed tokens that were padding: 1 - prompt/executed.
+    pub fn waste_ratio(&self) -> f64 {
+        if self.executed_tokens == 0 {
+            0.0
+        } else {
+            1.0 - self.prompt_tokens as f64 / self.executed_tokens as f64
+        }
+    }
+
+    /// Number of latency samples recorded (== requests served).
+    pub fn latency_count(&self) -> u64 {
+        self.latency.count()
+    }
+
+    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
+        self.latency.percentile_ms(p)
+    }
+    pub fn p50_ms(&self) -> f64 {
+        self.latency_percentile_ms(50.0)
+    }
+    pub fn p95_ms(&self) -> f64 {
+        self.latency_percentile_ms(95.0)
+    }
+    pub fn p99_ms(&self) -> f64 {
+        self.latency_percentile_ms(99.0)
+    }
+
+    /// Fold another replica's counters into this aggregate.
+    pub fn merge(&mut self, other: &ServerStats) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.total_fill += other.total_fill;
+        self.replicas += other.replicas;
+        self.prompt_tokens += other.prompt_tokens;
+        self.executed_tokens += other.executed_tokens;
+        self.truncated += other.truncated;
+        self.latency.merge(&other.latency);
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests / {} batches on {} replica(s), mean fill {:.2}, \
+             padded waste {:.1}%, latency p50 {:.2} / p95 {:.2} / p99 {:.2} ms",
+            self.requests,
+            self.batches,
+            self.replicas.max(1),
+            self.mean_fill(),
+            self.waste_ratio() * 100.0,
+            self.p50_ms(),
+            self.p95_ms(),
+            self.p99_ms()
+        )
+    }
+}
+
+/// A request the router has accepted into a bucket group. Latency is
+/// reported from the client-side `Request::t0`; the batch-window
+/// deadline runs from `admitted`, so a request that sat in the request
+/// channel does not count that wait against its group's window (which
+/// would ship burst arrivals as tiny immediately-due batches).
+struct Admitted {
+    req: Request,
+    admitted: Instant,
+}
+
+/// A bucket-homogeneous batch ready for a replica.
+struct BatchJob {
+    bucket: usize,
+    requests: Vec<Admitted>,
+}
+
+pub struct ServerHandle {
+    pub sender: mpsc::Sender<Request>,
+    router: Option<std::thread::JoinHandle<Result<()>>>,
+    replicas: Vec<std::thread::JoinHandle<Result<ServerStats>>>,
 }
 
 impl ServerHandle {
-    /// Spawn the model thread; resolves the artifact by suite name.
+    /// Spawn router + replicas serving the named artifact.
     pub fn spawn(artifact_name: &str, opts: ServerOptions) -> ServerHandle {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let name = artifact_name.to_string();
-        let join = std::thread::Builder::new()
-            .name("altup-server".into())
-            .spawn(move || serve(&name, rx, opts))
-            .expect("spawn server");
-        ServerHandle { sender: tx, join: Some(join) }
+        ServerHandle::spawn_engine(
+            EngineSpec::Artifact { name: artifact_name.to_string() },
+            opts,
+        )
     }
 
-    /// Submit a request and block for the response.
+    /// Spawn router + replicas over an explicit decode backend.
+    pub fn spawn_engine(engine: EngineSpec, opts: ServerOptions) -> ServerHandle {
+        let n = opts.replicas.max(1);
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        // Bounded job queue = backpressure: when every replica is busy
+        // and the queue is full, the router keeps accumulating instead
+        // of window-flushing tiny partial batches at a wall of busy
+        // replicas (which craters fill and wastes executed tokens).
+        let (job_tx, job_rx) = mpsc::sync_channel::<BatchJob>(n);
+        let job_rx = Arc::new(Mutex::new(job_rx));
+
+        let router = {
+            let spec = engine.clone();
+            let ropts = opts.clone();
+            std::thread::Builder::new()
+                .name("altup-router".into())
+                .spawn(move || route(&spec, req_rx, job_tx, &ropts))
+                .expect("spawn router")
+        };
+        let replicas = (0..n)
+            .map(|i| {
+                let spec = engine.clone();
+                let jobs = Arc::clone(&job_rx);
+                let sopts = opts.clone();
+                std::thread::Builder::new()
+                    .name(format!("altup-replica-{i}"))
+                    .spawn(move || serve_replica(i, &spec, &jobs, &sopts))
+                    .expect("spawn replica")
+            })
+            .collect();
+        ServerHandle { sender: req_tx, router: Some(router), replicas }
+    }
+
+    /// Submit a request and block for the response. Returns an error
+    /// (rather than hanging) when the router or the serving replica has
+    /// died — the reply channel is dropped with the request.
     pub fn infer(&self, enc_tokens: Vec<i32>) -> Result<Response> {
         let (tx, rx) = mpsc::channel();
-        self.sender.send(Request { enc_tokens, reply: tx })?;
-        Ok(rx.recv()?)
+        self.sender
+            .send(Request::new(enc_tokens, tx))
+            .map_err(|_| anyhow!("server router is down; request not admitted"))?;
+        rx.recv().map_err(|_| {
+            anyhow!("model replica died before replying (shutdown() reports the cause)")
+        })
     }
 
-    /// Shut down (drop sender) and collect stats.
+    /// Shut down (drop sender, drain, join) and return merged stats
+    /// from every replica.
     pub fn shutdown(mut self) -> Result<ServerStats> {
-        let join = self.join.take().unwrap();
+        let router = self.router.take().expect("router handle");
+        let replicas = std::mem::take(&mut self.replicas);
         drop(self.sender);
-        join.join().expect("server thread panicked")
+        let mut first_err: Option<anyhow::Error> = None;
+        match router.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => first_err = Some(e),
+            Err(_) => first_err = Some(anyhow!("router thread panicked")),
+        }
+        let mut merged = ServerStats::default();
+        for handle in replicas {
+            match handle.join() {
+                Ok(Ok(stats)) => merged.merge(&stats),
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!("replica thread panicked"));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(merged),
+        }
     }
 }
 
-fn serve(artifact_name: &str, rx: mpsc::Receiver<Request>, opts: ServerOptions) -> Result<ServerStats> {
-    let client = Client::cpu()?;
-    let artifact = load_named(artifact_name)?;
-    let mut session = Session::open_eval(&client, artifact, opts.seed)?;
-    if let Some(ckpt) = &opts.checkpoint {
-        session.store = crate::runtime::params::ParamStore::load(ckpt, &session.artifact)?;
-        session.invalidate_state();
-    }
-    session.ensure_decode(&client)?;
-    // §Perf L4: upload the weights once; every subsequent batch reuses
-    // the device-resident buffers instead of re-marshalling the full
-    // parameter set per decode.
-    session.warm_device_cache(&client)?;
-    let cfg = session.artifact.config.clone();
-    let mut stats = ServerStats::default();
-
-    loop {
-        // Block for the first request of a batch.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break, // all senders dropped -> shutdown
-        };
-        let t0 = Instant::now();
-        let mut pending = vec![first];
-        let deadline = Instant::now() + opts.batch_window;
-        while pending.len() < cfg.batch_size {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+/// Router loop: admit continuously, group by bucket, and hand batches
+/// to the replicas. A group ships as soon as it fills (blocking send —
+/// genuine backpressure once the bounded job queue is full). A group
+/// whose oldest request has waited out the batch window ships
+/// best-effort (`try_send`): if every replica is busy and the queue is
+/// full it simply keeps accumulating — arriving requests top it up
+/// toward a full batch instead of the router spraying tiny partial
+/// batches at a wall of busy replicas.
+fn route(
+    spec: &EngineSpec,
+    rx: mpsc::Receiver<Request>,
+    tx: mpsc::SyncSender<BatchJob>,
+    opts: &ServerOptions,
+) -> Result<()> {
+    let (batch_size, enc_len) = match spec {
+        EngineSpec::Artifact { name } => {
+            let artifact = load_named(name)?;
+            (artifact.config.batch_size, artifact.config.enc_len)
+        }
+        EngineSpec::Sim(s) => (s.batch_size, s.enc_len),
+    };
+    let mut groups: BTreeMap<usize, Vec<Admitted>> = BTreeMap::new();
+    let mut disconnected = false;
+    while !(disconnected && groups.is_empty()) {
+        // Flush pass. In drain mode (clients gone) everything ships
+        // with a blocking send.
+        let now = Instant::now();
+        let mut due_unsent = false;
+        let buckets: Vec<usize> = groups.keys().copied().collect();
+        for bucket in buckets {
+            let group = groups.get(&bucket).expect("group present");
+            let full = group.len() >= batch_size;
+            let due =
+                group.first().map_or(false, |a| now >= a.admitted + opts.batch_window);
+            if full || disconnected {
+                let requests = groups.remove(&bucket).expect("group present");
+                if tx.send(BatchJob { bucket, requests }).is_err() {
+                    return Ok(()); // every replica is gone
+                }
+            } else if due {
+                let requests = groups.remove(&bucket).expect("group present");
+                match tx.try_send(BatchJob { bucket, requests }) {
+                    Ok(()) => {}
+                    Err(mpsc::TrySendError::Full(job)) => {
+                        groups.insert(bucket, job.requests);
+                        due_unsent = true;
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => return Ok(()),
+                }
             }
         }
+        if disconnected {
+            continue; // drain until groups run dry
+        }
 
-        // Pad/truncate into the fixed (B, enc_len) geometry.
-        let fill = pending.len();
-        let rows: Vec<&[i32]> = pending.iter().map(|r| r.enc_tokens.as_slice()).collect();
-        let (enc, truncated) = pack_requests(&rows, cfg.batch_size, cfg.enc_len);
-        let decoded = session.decode(&client, &enc)?;
-        let latency = t0.elapsed();
-        for (i, req) in pending.into_iter().enumerate() {
+        // Admit pass: block until the next request, the next group
+        // deadline, or (when a due group couldn't ship) a short park so
+        // the flush retries once a replica frees up.
+        let message = if groups.is_empty() {
+            match rx.recv() {
+                Ok(r) => Some(r),
+                Err(_) => {
+                    disconnected = true;
+                    None
+                }
+            }
+        } else {
+            let wait = if due_unsent {
+                // Floor the park so a zero batch window cannot busy-spin
+                // while replicas are saturated and the job queue is full.
+                opts.batch_window.max(Duration::from_micros(200))
+            } else {
+                let oldest = groups
+                    .values()
+                    .filter_map(|g| g.first())
+                    .map(|a| a.admitted)
+                    .min()
+                    .expect("non-empty groups");
+                (oldest + opts.batch_window).saturating_duration_since(Instant::now())
+            };
+            if wait.is_zero() {
+                None // a group came due during the flush pass
+            } else {
+                match rx.recv_timeout(wait) {
+                    Ok(r) => Some(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        disconnected = true;
+                        None
+                    }
+                }
+            }
+        };
+        if let Some(req) = message {
+            let bucket = if opts.bucketed {
+                bucket_for(req.enc_tokens.len(), enc_len)
+            } else {
+                enc_len
+            };
+            groups
+                .entry(bucket)
+                .or_default()
+                .push(Admitted { req, admitted: Instant::now() });
+        }
+    }
+    Ok(())
+}
+
+/// The per-replica decode backend (built inside the replica thread:
+/// `Session` is !Send).
+enum Engine {
+    Real { client: Client, session: Session },
+    Sim(SimSpec),
+}
+
+impl Engine {
+    fn build(spec: &EngineSpec, opts: &ServerOptions) -> Result<Engine> {
+        match spec {
+            EngineSpec::Artifact { name } => {
+                let client = Client::cpu()?;
+                let artifact = load_named(name)?;
+                let mut session = Session::open_eval(&client, artifact, opts.seed)?;
+                if let Some(ckpt) = &opts.checkpoint {
+                    session.store =
+                        crate::runtime::params::ParamStore::load(ckpt, &session.artifact)?;
+                    session.invalidate_state();
+                }
+                session.ensure_decode(&client)?;
+                // §Perf L4: upload the weights once; every batch reuses
+                // the device-resident buffers.
+                session.warm_device_cache(&client)?;
+                Ok(Engine::Real { client, session })
+            }
+            EngineSpec::Sim(s) => Ok(Engine::Sim(s.clone())),
+        }
+    }
+
+    /// (batch_size, enc_len) of the serving geometry.
+    fn dims(&self) -> (usize, usize) {
+        match self {
+            Engine::Real { session, .. } => {
+                (session.artifact.config.batch_size, session.artifact.config.enc_len)
+            }
+            Engine::Sim(s) => (s.batch_size, s.enc_len),
+        }
+    }
+
+    /// The sequence length a job at `bucket` actually executes at (the
+    /// real backend falls back to `enc_len` when the artifact has no
+    /// shape-specialized HLO for the bucket).
+    fn effective_bucket(&self, bucket: usize) -> usize {
+        match self {
+            Engine::Real { session, .. } => session.effective_bucket(bucket),
+            Engine::Sim(s) => bucket.min(s.enc_len),
+        }
+    }
+
+    /// Decode a (batch_size, bucket) packed batch.
+    fn decode(&mut self, enc: &[i32], bucket: usize) -> Result<Vec<Vec<i32>>> {
+        match self {
+            Engine::Real { client, session } => session.decode_bucketed(client, enc, bucket),
+            Engine::Sim(s) => Ok(sim_decode(s, enc, bucket)),
+        }
+    }
+}
+
+/// Deterministic stand-in decode: each output row is a hash function of
+/// the row's non-padding prompt tokens only, so results are identical
+/// no matter which bucket executed them (the parity contract real
+/// bucketed decode must also satisfy). Costs a simulated
+/// `token_ns * batch_size * bucket` of device time.
+fn sim_decode(spec: &SimSpec, enc: &[i32], bucket: usize) -> Vec<Vec<i32>> {
+    let mut out = Vec::with_capacity(spec.batch_size);
+    for row in enc.chunks(bucket) {
+        let used = row.iter().rposition(|&t| t != 0).map_or(0, |i| i + 1);
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &t in &row[..used] {
+            h = (h ^ t as u32 as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        let mut tokens = Vec::with_capacity(spec.dec_len);
+        for j in 0..spec.dec_len {
+            let mut x = h.wrapping_mul(j as u64 + 1).wrapping_add(0x9E37_79B9_7F4A_7C15);
+            x ^= x >> 29;
+            tokens.push((x % (spec.vocab_size.max(2) as u64 - 1)) as i32 + 1);
+        }
+        out.push(tokens);
+    }
+    let ns = spec.token_ns.saturating_mul((spec.batch_size * bucket) as u64);
+    if ns > 0 {
+        std::thread::sleep(Duration::from_nanos(ns));
+    }
+    out
+}
+
+/// Replica loop: pop bucket-homogeneous jobs off the shared queue, pack
+/// at the (effective) bucket geometry, decode, and move each output row
+/// into its reply (no per-row clone).
+fn serve_replica(
+    id: usize,
+    spec: &EngineSpec,
+    jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    opts: &ServerOptions,
+) -> Result<ServerStats> {
+    let mut engine = Engine::build(spec, opts)?;
+    let (batch_size, _enc_len) = engine.dims();
+    let mut stats = ServerStats { replicas: 1, ..Default::default() };
+    loop {
+        // Hold the queue lock only for the pop; decode runs unlocked so
+        // other replicas pull the next job meanwhile.
+        let job = {
+            let queue = jobs.lock().map_err(|_| anyhow!("job queue poisoned"))?;
+            match queue.recv() {
+                Ok(job) => job,
+                Err(_) => break, // router gone and queue drained
+            }
+        };
+        let fill = job.requests.len();
+        let bucket = engine.effective_bucket(job.bucket);
+        let (enc, truncated) = {
+            let rows: Vec<&[i32]> =
+                job.requests.iter().map(|a| a.req.enc_tokens.as_slice()).collect();
+            pack_requests(&rows, batch_size, bucket)
+        };
+        let decoded = engine.decode(&enc, bucket)?;
+        let mut decoded = decoded.into_iter();
+        for (i, admitted) in job.requests.into_iter().enumerate() {
+            let req = admitted.req;
+            let latency = req.t0.elapsed();
+            stats.prompt_tokens += req.enc_tokens.len().min(bucket);
+            stats.latency.record(latency.as_secs_f64() * 1e3);
+            if truncated[i] {
+                stats.truncated += 1;
+            }
             let _ = req.reply.send(Response {
-                tokens: decoded[i].clone(),
+                tokens: decoded.next().unwrap_or_default(),
                 latency,
                 batch_fill: fill,
                 truncated: truncated[i],
+                bucket,
+                replica: id,
             });
         }
         stats.requests += fill;
         stats.batches += 1;
         stats.total_fill += fill;
+        stats.executed_tokens += batch_size * bucket;
     }
     Ok(stats)
 }
 
-/// Pack request token rows into the fixed (batch_size, enc_len)
-/// geometry: short rows are zero-padded, long rows are cut to fit.
+/// Pack request token rows into a fixed (batch_size, len) geometry:
+/// short rows are zero-padded, long rows are cut to fit. `len` is the
+/// full `enc_len` or any smaller bucket the group was routed to.
 /// Returns the flat batch plus a per-row truncation flag.
 pub fn pack_requests(
     rows: &[&[i32]],
     batch_size: usize,
-    enc_len: usize,
+    len: usize,
 ) -> (Vec<i32>, Vec<bool>) {
-    let mut enc = vec![0i32; batch_size * enc_len];
+    let mut enc = vec![0i32; batch_size * len];
     let mut truncated = vec![false; rows.len()];
     for (i, row) in rows.iter().take(batch_size).enumerate() {
-        let n = row.len().min(enc_len);
-        enc[i * enc_len..i * enc_len + n].copy_from_slice(&row[..n]);
-        truncated[i] = row.len() > enc_len;
+        let n = row.len().min(len);
+        enc[i * len..i * len + n].copy_from_slice(&row[..n]);
+        truncated[i] = row.len() > len;
     }
     (enc, truncated)
 }
@@ -200,5 +623,82 @@ mod tests {
         let (enc, truncated) = pack_requests(&rows, 2, 3);
         assert_eq!(&enc[3..6], &[2, 2, 2]);
         assert_eq!(truncated, vec![false, true]);
+    }
+
+    #[test]
+    fn pack_requests_at_smaller_bucket() {
+        let a = vec![1, 2, 3];
+        let rows: Vec<&[i32]> = vec![&a];
+        let (enc, truncated) = pack_requests(&rows, 2, 8);
+        assert_eq!(enc.len(), 16, "bucket stride, not enc_len stride");
+        assert_eq!(&enc[0..4], &[1, 2, 3, 0]);
+        assert_eq!(truncated, vec![false]);
+    }
+
+    #[test]
+    fn sim_decode_is_bucket_invariant_and_deterministic() {
+        let spec = SimSpec { batch_size: 2, enc_len: 32, dec_len: 6, vocab_size: 97, token_ns: 0 };
+        let prompt: Vec<i32> = vec![4, 9, 1, 7];
+        let pad_to = |len: usize| {
+            let mut v = prompt.clone();
+            v.resize(len, 0);
+            v
+        };
+        let mut small = pad_to(8);
+        small.extend(pad_to(8));
+        let mut full = pad_to(32);
+        full.extend(pad_to(32));
+        let a = sim_decode(&spec, &small, 8);
+        let b = sim_decode(&spec, &full, 32);
+        assert_eq!(a, b, "output depends only on the unpadded prompt");
+        assert_eq!(a[0].len(), 6);
+        assert!(a[0].iter().all(|&t| t >= 1 && (t as usize) < 97));
+        // Different prompts decode differently (not a constant).
+        let mut other = vec![5i32, 5, 5, 0, 0, 0, 0, 0];
+        other.extend(pad_to(8));
+        assert_ne!(sim_decode(&spec, &other, 8)[0], a[0]);
+    }
+
+    #[test]
+    fn server_stats_merge_waste_and_percentiles() {
+        let mut a = ServerStats {
+            requests: 4,
+            batches: 2,
+            total_fill: 4,
+            replicas: 1,
+            prompt_tokens: 40,
+            executed_tokens: 64,
+            truncated: 1,
+            ..Default::default()
+        };
+        for ms in [1.0, 2.0, 3.0, 4.0] {
+            a.latency.record(ms);
+        }
+        let mut b = ServerStats {
+            requests: 2,
+            batches: 1,
+            total_fill: 2,
+            replicas: 1,
+            prompt_tokens: 10,
+            executed_tokens: 36,
+            truncated: 0,
+            ..Default::default()
+        };
+        b.latency.record(10.0);
+        b.latency.record(20.0);
+        a.merge(&b);
+        assert_eq!(a.requests, 6);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.replicas, 2);
+        assert_eq!(a.truncated, 1);
+        assert_eq!(a.latency_count(), 6);
+        assert!((a.waste_ratio() - 0.5).abs() < 1e-12, "50/100 executed tokens were padding");
+        // Log-bucketed estimates: within the histogram's ~9% error.
+        let p50 = a.p50_ms();
+        assert!((p50 - 3.0).abs() / 3.0 < 0.10, "p50={p50}");
+        let p100 = a.latency_percentile_ms(100.0);
+        assert!((p100 - 20.0).abs() / 20.0 < 0.10, "p100={p100}");
+        assert_eq!(ServerStats::default().waste_ratio(), 0.0);
+        assert_eq!(ServerStats::default().p99_ms(), 0.0);
     }
 }

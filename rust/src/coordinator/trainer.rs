@@ -1,8 +1,16 @@
 //! Training coordinator: owns the step loop over a `Session`, the LR
 //! schedule, metrics logging, periodic eval, and checkpoints.
+//!
+//! §Perf L5: the step loop is double-buffered — batch N+1 is prepared
+//! (corpus sampling, span corruption, padding) on a background worker
+//! (`data::prefetch`) while batch N executes, so host data preparation
+//! hides behind `exec_seconds`. `ALTUP_NO_PREFETCH=1` restores the
+//! synchronous baseline; the residual blocked time is reported as
+//! `data_wait_seconds`.
 
 use crate::coordinator::metrics::{rsqrt_lr, EvalResult, MetricsLog};
-use crate::data::batcher::{Batch, PretrainBatcher, TaskBatcher};
+use crate::data::batcher::{Batch, BatchSource, PretrainBatcher, TaskBatcher};
+use crate::data::prefetch::{self, Prefetcher};
 use crate::data::tasks::{exact_match, f1_score};
 use crate::runtime::client::Client;
 use crate::runtime::session::Session;
@@ -13,6 +21,9 @@ use std::time::Instant;
 pub enum DataSource {
     Pretrain(PretrainBatcher),
     Task(TaskBatcher),
+    /// Placeholder left behind while the real source is loaned to the
+    /// prefetch worker (`Trainer::run`); never produces batches.
+    Loaned,
 }
 
 impl DataSource {
@@ -20,7 +31,30 @@ impl DataSource {
         match self {
             DataSource::Pretrain(b) => b.next_batch(),
             DataSource::Task(b) => b.next_batch(),
+            DataSource::Loaned => panic!("data source is loaned to the prefetcher"),
         }
+    }
+
+    /// A fresh held-out twin of this source: same distribution, indices
+    /// from a disjoint range. Repeated calls yield identical streams,
+    /// so periodic evals always score the same held-out data.
+    pub fn eval_twin(&self) -> DataSource {
+        match self {
+            DataSource::Pretrain(b) => DataSource::Pretrain(b.validation()),
+            DataSource::Task(b) => {
+                let mut tb =
+                    TaskBatcher::new(b.task.eval_twin(), b.batch_size, b.enc_len, b.dec_len);
+                tb.eval_split();
+                DataSource::Task(tb)
+            }
+            DataSource::Loaned => panic!("data source is loaned to the prefetcher"),
+        }
+    }
+}
+
+impl BatchSource for DataSource {
+    fn next_batch(&mut self) -> Batch {
+        DataSource::next_batch(self)
     }
 }
 
@@ -35,6 +69,8 @@ pub struct TrainOptions {
     pub eval_batches: usize,
     pub checkpoint_path: Option<std::path::PathBuf>,
     pub verbose: bool,
+    /// Overlap batch preparation with execution (§Perf L5).
+    pub prefetch: bool,
 }
 
 impl Default for TrainOptions {
@@ -49,6 +85,7 @@ impl Default for TrainOptions {
             eval_batches: 4,
             checkpoint_path: None,
             verbose: true,
+            prefetch: prefetch::enabled_from_env(),
         }
     }
 }
@@ -57,11 +94,14 @@ pub struct Trainer {
     pub session: Session,
     pub source: DataSource,
     pub log: MetricsLog,
+    /// Seconds the last `run` spent blocked waiting for batch data
+    /// (≈0 when prefetch hides preparation behind execution).
+    pub data_wait_seconds: f64,
 }
 
 impl Trainer {
     pub fn new(session: Session, source: DataSource, log: MetricsLog) -> Trainer {
-        Trainer { session, source, log }
+        Trainer { session, source, log, data_wait_seconds: 0.0 }
     }
 
     pub fn lr_at(&self, step: u64, opts: &TrainOptions) -> f64 {
@@ -75,11 +115,42 @@ impl Trainer {
     pub fn run(&mut self, client: &Client, opts: &TrainOptions) -> Result<(f64, f64)> {
         let t0 = Instant::now();
         let mut ema: Option<f64> = None;
+        // The prefetcher takes the source; keep a twin factory around
+        // for periodic evals while it is loaned out.
+        let eval_twin = if opts.eval_every > 0 { Some(self.source.eval_twin()) } else { None };
+        let mut prefetcher = if opts.prefetch && opts.steps > 0 {
+            let source = std::mem::replace(&mut self.source, DataSource::Loaned);
+            Some(Prefetcher::spawn(source, opts.steps as usize, prefetch::depth_from_env()))
+        } else {
+            None
+        };
+        let mut data_wait_direct = 0.0f64;
+        let mut run_err: Option<anyhow::Error> = None;
         for _ in 0..opts.steps {
             let step = self.session.store.step + 1;
             let lr = self.lr_at(step, opts) as f32;
-            let batch = self.source.next_batch();
-            let m = self.session.train_step(client, lr, step as u32, &batch)?;
+            let batch = match prefetcher.as_mut() {
+                Some(p) => match p.next() {
+                    Some(b) => b,
+                    None => {
+                        run_err = Some(anyhow::anyhow!("prefetch worker ended early"));
+                        break;
+                    }
+                },
+                None => {
+                    let tb = Instant::now();
+                    let b = self.source.next_batch();
+                    data_wait_direct += tb.elapsed().as_secs_f64();
+                    b
+                }
+            };
+            let m = match self.session.train_step(client, lr, step as u32, &batch) {
+                Ok(m) => m,
+                Err(e) => {
+                    run_err = Some(e);
+                    break;
+                }
+            };
             let loss = m.loss as f64;
             ema = Some(match ema {
                 None => loss,
@@ -107,36 +178,75 @@ impl Trainer {
                 }
             }
             if opts.eval_every > 0 && step % opts.eval_every == 0 {
-                let ev = self.eval(client, opts.eval_batches)?;
-                self.log.log(step, &[("eval_loss", ev.loss), ("eval_acc", ev.accuracy)]);
-                if opts.verbose {
-                    println!("  eval @{step}: {}", ev.summary());
+                let twin = eval_twin.as_ref().expect("eval twin").eval_twin();
+                match self.eval_on(client, opts.eval_batches, twin) {
+                    Ok(ev) => {
+                        self.log
+                            .log(step, &[("eval_loss", ev.loss), ("eval_acc", ev.accuracy)]);
+                        if opts.verbose {
+                            println!("  eval @{step}: {}", ev.summary());
+                        }
+                    }
+                    Err(e) => {
+                        run_err = Some(e);
+                        break;
+                    }
                 }
             }
             if let Some(path) = &opts.checkpoint_path {
                 if step % 1000 == 0 || step == opts.steps {
-                    self.session.checkpoint(path)?;
+                    if let Err(e) = self.session.checkpoint(path) {
+                        run_err = Some(e);
+                        break;
+                    }
                 }
             }
         }
+        // Reclaim the source from the worker (also on error paths, so
+        // the trainer stays usable for eval afterwards).
+        self.data_wait_seconds = match prefetcher.take() {
+            Some(p) => {
+                let (source, wait) = p.finish();
+                match source {
+                    Some(source) => self.source = source,
+                    // Worker panicked: leave the source Loaned and make
+                    // sure the run reports an error instead of panicking
+                    // on this cleanup path.
+                    None => {
+                        if run_err.is_none() {
+                            run_err =
+                                Some(anyhow::anyhow!("prefetch worker panicked mid-run"));
+                        }
+                    }
+                }
+                wait
+            }
+            None => data_wait_direct,
+        };
+        if let Some(e) = run_err {
+            return Err(e);
+        }
         let wall = t0.elapsed().as_secs_f64();
         let sps = opts.steps as f64 / wall;
-        // Runtime split (§Perf L4): where the wall-clock went —
-        // executing HLO, host marshalling, or host<->device transfers.
+        // Runtime split (§Perf L4/L5): where the wall-clock went —
+        // executing HLO, host marshalling, host<->device transfers, and
+        // waiting on batch data.
         self.log.log(
             self.session.store.step,
             &[
                 ("exec_seconds", self.session.exec_seconds),
                 ("marshal_seconds", self.session.marshal_seconds),
                 ("transfer_seconds", self.session.transfer_seconds),
+                ("data_wait_seconds", self.data_wait_seconds),
             ],
         );
         if opts.verbose {
             println!(
-                "runtime split: execute {:.2}s, marshal {:.2}s, transfer {:.2}s",
+                "runtime split: execute {:.2}s, marshal {:.2}s, transfer {:.2}s, data wait {:.2}s",
                 self.session.exec_seconds,
                 self.session.marshal_seconds,
-                self.session.transfer_seconds
+                self.session.transfer_seconds,
+                self.data_wait_seconds
             );
         }
         Ok((ema.unwrap_or(f64::NAN), sps))
@@ -144,16 +254,19 @@ impl Trainer {
 
     /// Teacher-forced eval on a held-out stream.
     pub fn eval(&mut self, client: &Client, batches: usize) -> Result<EvalResult> {
-        let mut source = match &self.source {
-            DataSource::Pretrain(b) => DataSource::Pretrain(b.validation()),
-            DataSource::Task(b) => {
-                // Same task distribution (same seed), held-out indices.
-                let mut tb =
-                    TaskBatcher::new(b.task.eval_twin(), b.batch_size, b.enc_len, b.dec_len);
-                tb.eval_split();
-                DataSource::Task(tb)
-            }
-        };
+        let twin = self.source.eval_twin();
+        self.eval_on(client, batches, twin)
+    }
+
+    /// Teacher-forced eval over an explicit source (used directly for
+    /// periodic evals while the main source is loaned to the prefetch
+    /// worker).
+    fn eval_on(
+        &mut self,
+        client: &Client,
+        batches: usize,
+        mut source: DataSource,
+    ) -> Result<EvalResult> {
         let mut loss_sum = 0.0f64;
         let mut correct = 0.0f64;
         let mut ntok = 0.0f64;
@@ -227,5 +340,17 @@ mod tests {
         );
         let opts2 = TrainOptions { warmup: 100, base_lr: 1.0, ..Default::default() };
         assert!((rsqrt_lr(1, opts2.warmup, opts2.base_lr) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_twin_streams_are_repeatable() {
+        let mut a = DataSource::Pretrain(PretrainBatcher::new(2048, 2, 32, 16, 5));
+        // Twin-of-twin must equal twin: periodic evals during a
+        // prefetched run re-derive the twin each time.
+        let mut t1 = a.eval_twin();
+        let mut t2 = a.eval_twin().eval_twin();
+        assert_eq!(t1.next_batch().enc_tokens, t2.next_batch().enc_tokens);
+        // And the twin is disjoint from the training stream.
+        assert_ne!(a.next_batch().enc_tokens, a.eval_twin().next_batch().enc_tokens);
     }
 }

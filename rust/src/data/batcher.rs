@@ -56,6 +56,25 @@ impl Batch {
     }
 }
 
+/// Anything that can produce the next dense batch. Implemented by the
+/// concrete batchers and the trainer's `DataSource`, and what the
+/// overlapped prefetcher (`data::prefetch`) is generic over.
+pub trait BatchSource {
+    fn next_batch(&mut self) -> Batch;
+}
+
+impl BatchSource for PretrainBatcher {
+    fn next_batch(&mut self) -> Batch {
+        PretrainBatcher::next_batch(self)
+    }
+}
+
+impl BatchSource for TaskBatcher {
+    fn next_batch(&mut self) -> Batch {
+        TaskBatcher::next_batch(self)
+    }
+}
+
 /// Streaming pretrain batch source: corpus -> span corruption -> pad.
 pub struct PretrainBatcher {
     corpus: Corpus,

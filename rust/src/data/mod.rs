@@ -3,6 +3,7 @@
 
 pub mod batcher;
 pub mod corpus;
+pub mod prefetch;
 pub mod span;
 pub mod tasks;
 pub mod tokenizer;

@@ -1,0 +1,128 @@
+//! Overlapped batch prefetch (§Perf L5): a background worker prepares
+//! batch N+1 (corpus sampling, span corruption, padding) while batch N
+//! executes on the device, hiding host data-preparation time behind
+//! `exec_seconds`. Double-buffered by default via a bounded channel.
+//!
+//! The worker produces a fixed number of batches and then hands the
+//! source back, so the consumer can reclaim it (stream position intact)
+//! and resume direct iteration — e.g. for eval after a training run.
+
+use crate::data::batcher::{Batch, BatchSource};
+use crate::util::threadpool::ThreadPool;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// How many prepared batches may sit ready ahead of the consumer.
+/// `ALTUP_PREFETCH_DEPTH` overrides (min 1); default 2 = double buffer.
+pub fn depth_from_env() -> usize {
+    std::env::var("ALTUP_PREFETCH_DEPTH")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&d| d >= 1)
+        .unwrap_or(2)
+}
+
+/// Whether the trainer should prefetch at all (`ALTUP_NO_PREFETCH=1`
+/// restores the synchronous prepare-then-execute baseline for A/Bs).
+pub fn enabled_from_env() -> bool {
+    std::env::var_os("ALTUP_NO_PREFETCH").is_none()
+}
+
+pub struct Prefetcher<S: BatchSource + Send + 'static> {
+    rx: mpsc::Receiver<Batch>,
+    done: mpsc::Receiver<S>,
+    _pool: ThreadPool,
+    /// Seconds the consumer spent blocked waiting on the worker — the
+    /// residual data-preparation time prefetch could not hide.
+    pub wait_seconds: f64,
+}
+
+impl<S: BatchSource + Send + 'static> Prefetcher<S> {
+    /// Move `source` onto a background worker that produces exactly
+    /// `steps` batches, keeping at most `depth` ready at a time.
+    pub fn spawn(mut source: S, steps: usize, depth: usize) -> Prefetcher<S> {
+        let (tx, rx) = mpsc::sync_channel::<Batch>(depth.max(1));
+        let (done_tx, done) = mpsc::channel::<S>();
+        let pool = ThreadPool::named("altup-prefetch", 1);
+        pool.execute(move || {
+            for _ in 0..steps {
+                let batch = source.next_batch();
+                if tx.send(batch).is_err() {
+                    break; // consumer went away early
+                }
+            }
+            let _ = done_tx.send(source);
+        });
+        Prefetcher { rx, done, _pool: pool, wait_seconds: 0.0 }
+    }
+
+    /// The next prepared batch; `None` once all `steps` batches have
+    /// been consumed.
+    pub fn next(&mut self) -> Option<Batch> {
+        let t0 = Instant::now();
+        let batch = self.rx.recv().ok();
+        self.wait_seconds += t0.elapsed().as_secs_f64();
+        batch
+    }
+
+    /// Stop consuming and reclaim the source plus the accumulated wait
+    /// time. Safe to call mid-stream (the worker unblocks and exits).
+    /// Returns `None` for the source if the worker thread panicked
+    /// mid-production — callers should surface their own error rather
+    /// than panic on the cleanup path.
+    pub fn finish(self) -> (Option<S>, f64) {
+        let wait = self.wait_seconds;
+        drop(self.rx); // unblock a worker parked on a full buffer
+        let source = self.done.recv().ok();
+        (source, wait)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::batcher::PretrainBatcher;
+
+    fn batcher(seed: u64) -> PretrainBatcher {
+        PretrainBatcher::new(2048, 2, 32, 16, seed)
+    }
+
+    #[test]
+    fn prefetched_stream_matches_direct_iteration() {
+        let mut direct = batcher(11);
+        let expected: Vec<Vec<i32>> = (0..6).map(|_| direct.next_batch().enc_tokens).collect();
+        let mut p = Prefetcher::spawn(batcher(11), 6, 2);
+        for exp in &expected {
+            assert_eq!(&p.next().unwrap().enc_tokens, exp);
+        }
+        assert!(p.next().is_none(), "exactly `steps` batches are produced");
+    }
+
+    #[test]
+    fn finish_returns_source_at_produced_position() {
+        // The worker produces all 4 batches; the reclaimed source must
+        // continue where the worker left off.
+        let mut p = Prefetcher::spawn(batcher(7), 4, 2);
+        for _ in 0..4 {
+            assert!(p.next().is_some());
+        }
+        let (source, wait) = p.finish();
+        let mut source = source.expect("worker healthy");
+        assert!(wait >= 0.0);
+        let mut reference = batcher(7);
+        for _ in 0..4 {
+            reference.next_batch();
+        }
+        assert_eq!(source.next_batch().enc_tokens, reference.next_batch().enc_tokens);
+    }
+
+    #[test]
+    fn early_finish_does_not_deadlock() {
+        // Consumer takes one batch of many, then bails; the worker may
+        // be parked on the bounded buffer and must still shut down.
+        let mut p = Prefetcher::spawn(batcher(3), 100, 1);
+        let _ = p.next();
+        let (source, _wait) = p.finish();
+        assert!(source.is_some());
+    }
+}

@@ -25,7 +25,7 @@ pub fn run(opts: &PipelineOptions, with_finetune: bool) -> Result<()> {
         }
         let lat = latency::measure(&client, name)?;
         let artifact = load_named(name)?;
-        let (session, ev, sps) = pretrain(&client, artifact, opts)?;
+        let (session, ev, sps, _data_wait) = pretrain(&client, artifact, opts)?;
         println!(
             "  {name:<16} train {:>8.2} ms/step ({:>5.2} steps/s)  pretrain acc {:>5.2}%",
             lat.train_s * 1e3,

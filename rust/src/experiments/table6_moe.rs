@@ -35,7 +35,7 @@ pub fn run(opts: &PipelineOptions) -> Result<()> {
     let mut accs = Vec::new();
     for (name, label) in names {
         let artifact = load_named(name)?;
-        let (_, ev, sps) = pretrain(&client, artifact, opts)?;
+        let (_, ev, sps, _) = pretrain(&client, artifact, opts)?;
         println!("  {label:<14} acc={:.2}% ({sps:.2} steps/s)", ev.accuracy * 100.0);
         rows.push(format!("{label},{:.4},{sps:.3}", ev.accuracy));
         accs.push(ev.accuracy);

@@ -198,6 +198,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_window: std::time::Duration::from_millis(args.u64_or("window-ms", 5)),
         seed: args.u64_or("seed", 0),
         checkpoint: args.get("ckpt").map(Into::into),
+        replicas: args.usize_or("replicas", ServerOptions::default().replicas),
+        bucketed: !args.has("no-buckets") && ServerOptions::default().bucketed,
     };
     let n = args.usize_or("requests", 64);
     let server = ServerHandle::spawn(&name, opts);
@@ -216,12 +218,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let stats = server.shutdown()?;
     let s = bench::stats_from("serve", latencies);
     println!(
-        "served {n} requests in {wall:.2}s ({:.1} req/s), mean latency {:.1} ms, \
-         mean batch fill {:.2}",
+        "served {n} requests in {wall:.2}s ({:.1} req/s), mean latency {:.1} ms",
         n as f64 / wall,
         s.mean_ms(),
-        stats.mean_fill()
     );
+    println!("{}", stats.summary());
     Ok(())
 }
 

@@ -65,6 +65,13 @@ impl Client {
         self.cache.borrow().keys().cloned().collect()
     }
 
+    /// Drop one cached executable (the session's bucketed-decode LRU
+    /// calls this on eviction so the memory is actually released; the
+    /// executable frees once the last `Rc` clone drops).
+    pub fn evict(&self, key: &str) {
+        self.cache.borrow_mut().remove(key);
+    }
+
     /// Copy a host literal into a device buffer (§Perf L4: the upload
     /// half of the device-resident state cache — see EXPERIMENTS.md).
     pub fn upload(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {

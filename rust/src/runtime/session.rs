@@ -57,6 +57,49 @@ impl CacheMode {
     }
 }
 
+/// Smallest sequence-length bucket the serving path will execute.
+pub const MIN_BUCKET: usize = 8;
+
+/// The bucket ladder for a model with encoder length `enc_len`: powers
+/// of two from `MIN_BUCKET` up, capped by (and always including) the
+/// full `enc_len`. Short prompts run the smallest bucket that fits
+/// instead of paying full-length compute (§Perf L5).
+pub fn bucket_lengths(enc_len: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut b = MIN_BUCKET;
+    while b < enc_len {
+        out.push(b);
+        b <<= 1;
+    }
+    out.push(enc_len);
+    out
+}
+
+/// The bucket a prompt of `len` tokens lands in: the smallest ladder
+/// entry >= `len`. Prompts at or beyond `enc_len` map to `enc_len`
+/// (the caller flags the truncation).
+pub fn bucket_for(len: usize, enc_len: usize) -> usize {
+    if len >= enc_len {
+        return enc_len;
+    }
+    let mut b = MIN_BUCKET;
+    while b < enc_len {
+        if len <= b {
+            return b;
+        }
+        b <<= 1;
+    }
+    enc_len
+}
+
+fn bucket_cache_cap_from_env() -> usize {
+    std::env::var("ALTUP_BUCKET_CACHE")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(8)
+}
+
 /// Cached step state, in meta.json order.
 enum CachedState {
     /// Device-resident buffers (§Perf L4). `opt` may be empty for
@@ -75,6 +118,12 @@ pub struct Session {
     eval: Option<Rc<Executable>>,
     decode: Option<Rc<Executable>>,
     forward: Option<Rc<Executable>>,
+    /// Shape-specialized decode executables keyed by sequence-length
+    /// bucket, most-recently-used last (§Perf L5). Compiled lazily
+    /// from the artifact's `decode_step@<bucket>` HLO; bounded by
+    /// `ALTUP_BUCKET_CACHE` (default 8) with LRU eviction.
+    decode_buckets: Vec<(usize, Rc<Executable>)>,
+    bucket_cache_cap: usize,
     /// Params/opt cache between steps. `state_step` records the store
     /// step the cache mirrors; a mismatch (e.g. after loading a
     /// checkpoint) invalidates it.
@@ -120,6 +169,8 @@ impl Session {
             eval: None,
             decode: None,
             forward: None,
+            decode_buckets: Vec::new(),
+            bucket_cache_cap: bucket_cache_cap_from_env(),
             state: None,
             state_step: 0,
             dirty: false,
@@ -549,6 +600,90 @@ impl Session {
         Ok(data.chunks(cfg.dec_len).map(|c| c.to_vec()).collect())
     }
 
+    /// The sequence length a `decode_bucketed(bucket)` call actually
+    /// executes at: `bucket` itself when the artifact ships a
+    /// shape-specialized `decode_step@<bucket>` HLO (or `bucket` is
+    /// already the full length), else the full `enc_len` fallback.
+    /// Serving-side padded-token accounting must use this value.
+    pub fn effective_bucket(&self, bucket: usize) -> usize {
+        let enc_len = self.artifact.config.enc_len;
+        if bucket >= enc_len {
+            enc_len
+        } else if self.artifact.has(&format!("decode_step@{bucket}")) {
+            bucket
+        } else {
+            enc_len
+        }
+    }
+
+    /// Look up (or lazily compile) the decode executable for one
+    /// sequence-length bucket, LRU-bounded by `ALTUP_BUCKET_CACHE`.
+    fn bucket_exe(&mut self, client: &Client, bucket: usize) -> Result<Rc<Executable>> {
+        if let Some(pos) = self.decode_buckets.iter().position(|(b, _)| *b == bucket) {
+            let entry = self.decode_buckets.remove(pos);
+            let exe = Rc::clone(&entry.1);
+            self.decode_buckets.push(entry);
+            return Ok(exe);
+        }
+        let exe = self.compile(client, &format!("decode_step@{bucket}"))?;
+        self.decode_buckets.push((bucket, Rc::clone(&exe)));
+        while self.decode_buckets.len() > self.bucket_cache_cap {
+            let (evicted, _) = self.decode_buckets.remove(0);
+            client.evict(&format!("{}:decode_step@{evicted}", self.artifact.name));
+        }
+        Ok(exe)
+    }
+
+    /// Number of bucketed decode executables currently cached.
+    pub fn bucket_cache_len(&self) -> usize {
+        self.decode_buckets.len()
+    }
+
+    /// Greedy decode of a batch packed at `bucket` stride: `enc_tokens`
+    /// is (batch_size, bucket) row-major. Runs the bucket's
+    /// shape-specialized executable when the artifact provides one;
+    /// otherwise re-pads to the full (batch_size, enc_len) geometry and
+    /// runs the full-length decode, so results are identical either
+    /// way (zero right-padding is the decode contract).
+    pub fn decode_bucketed(
+        &mut self,
+        client: &Client,
+        enc_tokens: &[i32],
+        bucket: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let cfg = self.artifact.config.clone();
+        if bucket == cfg.enc_len {
+            return self.decode(client, enc_tokens);
+        }
+        if bucket > cfg.enc_len {
+            bail!("bucket {bucket} exceeds enc_len {}", cfg.enc_len);
+        }
+        if enc_tokens.len() != cfg.batch_size * bucket {
+            bail!(
+                "bucketed decode batch size {} != {}x{bucket}",
+                enc_tokens.len(),
+                cfg.batch_size
+            );
+        }
+        if self.effective_bucket(bucket) != bucket {
+            // No shape-specialized HLO for this bucket: re-pad each row
+            // out to the full length and run the full-geometry decode.
+            let mut full = vec![0i32; cfg.batch_size * cfg.enc_len];
+            for (i, row) in enc_tokens.chunks(bucket).enumerate() {
+                full[i * cfg.enc_len..i * cfg.enc_len + bucket].copy_from_slice(row);
+            }
+            return self.decode(client, &full);
+        }
+        let exe = self.bucket_exe(client, bucket)?;
+        let extra = vec![
+            Tensor::i32(vec![cfg.batch_size, bucket], enc_tokens.to_vec()).to_literal()?,
+        ];
+        let outs = self.run_with_params(client, exe, extra)?;
+        let t = Tensor::from_literal(&outs[0])?;
+        let data = t.as_i32()?;
+        Ok(data.chunks(cfg.dec_len).map(|c| c.to_vec()).collect())
+    }
+
     /// Forward-only latency probe: logits for (enc, dec_in).
     pub fn forward_step(&mut self, client: &Client, batch: &Batch) -> Result<()> {
         self.ensure_forward(client)?;
@@ -629,6 +764,60 @@ mod tests {
             s.set_cache_mode(m).unwrap();
             assert_eq!(s.cache_mode(), m);
         }
+    }
+
+    #[test]
+    fn bucket_ladder_and_selection() {
+        assert_eq!(bucket_lengths(64), vec![8, 16, 32, 64]);
+        assert_eq!(bucket_lengths(8), vec![8]);
+        assert_eq!(bucket_lengths(4), vec![4]);
+        // Non-power-of-two enc_len: ladder tops out at the full length.
+        assert_eq!(bucket_lengths(48), vec![8, 16, 32, 48]);
+
+        // Boundary lengths land on the smallest bucket that fits.
+        assert_eq!(bucket_for(0, 64), 8);
+        assert_eq!(bucket_for(1, 64), 8);
+        assert_eq!(bucket_for(8, 64), 8);
+        assert_eq!(bucket_for(9, 64), 16);
+        assert_eq!(bucket_for(16, 64), 16);
+        assert_eq!(bucket_for(17, 64), 32);
+        assert_eq!(bucket_for(33, 64), 64);
+        assert_eq!(bucket_for(64, 64), 64);
+        // Over-length prompts map to the full bucket (truncation is
+        // flagged by the packer, not here).
+        assert_eq!(bucket_for(65, 64), 64);
+        assert_eq!(bucket_for(1000, 64), 64);
+        // Gap between the last power of two and a non-pow2 enc_len.
+        assert_eq!(bucket_for(33, 48), 48);
+        assert_eq!(bucket_for(3, 6), 6);
+    }
+
+    #[test]
+    fn every_bucket_choice_is_on_the_ladder() {
+        for enc_len in [6usize, 8, 13, 32, 48, 100, 128] {
+            let ladder = bucket_lengths(enc_len);
+            assert_eq!(*ladder.last().unwrap(), enc_len);
+            for len in 0..enc_len + 10 {
+                let b = bucket_for(len, enc_len);
+                assert!(ladder.contains(&b), "len={len} enc={enc_len} b={b}");
+                assert!(b >= len.min(enc_len), "bucket must fit the prompt");
+            }
+        }
+    }
+
+    #[test]
+    fn effective_bucket_falls_back_without_bucket_hlo() {
+        let client = Client::cpu().unwrap();
+        let s = Session::open_eval(&client, toy_artifact(), 0).unwrap();
+        let enc_len = s.artifact.config.enc_len;
+        // toy artifact has no decode_step@N HLOs: everything below the
+        // full length falls back to enc_len.
+        for b in bucket_lengths(enc_len) {
+            assert_eq!(s.effective_bucket(b), enc_len, "bucket {b}");
+        }
+        assert_eq!(s.effective_bucket(4), enc_len, "sub-ladder bucket falls back");
+        assert_eq!(s.effective_bucket(enc_len + 99), enc_len, "over-length clamps");
+        assert_eq!(s.bucket_cache_len(), 0);
     }
 
     #[test]

@@ -17,6 +17,12 @@ pub struct ThreadPool {
 
 impl ThreadPool {
     pub fn new(size: usize) -> Self {
+        Self::named("altup-worker", size)
+    }
+
+    /// Pool whose worker threads carry `prefix-<i>` names (the batch
+    /// prefetcher and server use this so thread dumps stay readable).
+    pub fn named(prefix: &str, size: usize) -> Self {
         let size = size.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -24,7 +30,7 @@ impl ThreadPool {
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 thread::Builder::new()
-                    .name(format!("altup-worker-{i}"))
+                    .name(format!("{prefix}-{i}"))
                     .spawn(move || loop {
                         let job = { rx.lock().unwrap().recv() };
                         match job {

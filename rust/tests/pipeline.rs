@@ -38,9 +38,10 @@ fn pretrain_then_finetune_glue() {
     let client = Client::cpu().unwrap();
     let artifact = load_named("micro-altup").unwrap();
     let opts = quick_opts();
-    let (session, pre_ev, sps) = pretrain(&client, artifact, &opts).unwrap();
+    let (session, pre_ev, sps, data_wait) = pretrain(&client, artifact, &opts).unwrap();
     assert!(pre_ev.loss.is_finite() && pre_ev.loss > 0.0);
     assert!(sps > 0.0);
+    assert!(data_wait >= 0.0);
     let ev = finetune_task(&client, &session, TaskKind::Glue, &opts).unwrap();
     assert!(ev.accuracy >= 0.0 && ev.accuracy <= 1.0);
     assert!(ev.examples > 0);
@@ -52,7 +53,7 @@ fn finetune_squad_reports_em_f1() {
     let client = Client::cpu().unwrap();
     let artifact = load_named("micro-baseline").unwrap();
     let opts = quick_opts();
-    let (session, _, _) = pretrain(&client, artifact, &opts).unwrap();
+    let (session, _, _, _) = pretrain(&client, artifact, &opts).unwrap();
     let ev = finetune_task(&client, &session, TaskKind::Squad, &opts).unwrap();
     assert!((0.0..=1.0).contains(&ev.em));
     assert!((0.0..=1.0).contains(&ev.f1));
@@ -74,7 +75,7 @@ fn finetune_improves_over_untrained_on_glue() {
         verbose: false,
         ..Default::default()
     };
-    let (session, _, _) = pretrain(&client, artifact, &opts).unwrap();
+    let (session, _, _, _) = pretrain(&client, artifact, &opts).unwrap();
     let ev = finetune_task(&client, &session, TaskKind::Glue, &opts).unwrap();
     // Token accuracy on (label, EOS) pairs; chance is well below 0.5.
     assert!(ev.accuracy > 0.4, "accuracy {:.3} not above near-chance", ev.accuracy);
@@ -95,11 +96,8 @@ fn server_batches_and_replies() {
         let mut out = Vec::new();
         for i in 0..6 {
             let (tx, rx) = std::sync::mpsc::channel();
-            s1.send(altup::coordinator::server::Request {
-                enc_tokens: task.example(i, 62).enc,
-                reply: tx,
-            })
-            .unwrap();
+            s1.send(altup::coordinator::server::Request::new(task.example(i, 62).enc, tx))
+                .unwrap();
             out.push(rx.recv().unwrap());
         }
         out

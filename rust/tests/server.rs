@@ -1,0 +1,190 @@
+//! Serving-stack integration tests that need no PJRT backend: the
+//! multi-replica router + shape-bucketed batching run against the
+//! deterministic sim engine, so scheduling, bucket parity, stats
+//! merging, and failure modes are exercised in every build. A
+//! real-artifact parity test rides along and skips gracefully when
+//! `make artifacts` hasn't run (or the backend cannot execute HLO).
+
+use altup::coordinator::server::{
+    EngineSpec, Request, ServerHandle, ServerOptions, SimSpec,
+};
+use altup::runtime::session::{bucket_for, bucket_lengths};
+use std::time::Duration;
+
+fn sim_spec() -> SimSpec {
+    // token_ns=0 keeps the scheduler tests fast; throughput behavior is
+    // covered by benches/server_throughput.rs.
+    SimSpec { batch_size: 4, enc_len: 64, dec_len: 8, vocab_size: 211, token_ns: 0 }
+}
+
+fn opts(replicas: usize, bucketed: bool) -> ServerOptions {
+    ServerOptions {
+        batch_window: Duration::from_millis(2),
+        replicas,
+        bucketed,
+        ..Default::default()
+    }
+}
+
+fn prompt(len: usize) -> Vec<i32> {
+    (0..len).map(|i| (i % 200) as i32 + 1).collect()
+}
+
+/// Decode the same prompts through bucketed serving and through
+/// always-full-length serving: output tokens must be identical no
+/// matter which bucket executed them.
+#[test]
+fn bucket_vs_full_length_decode_parity() {
+    let lens = [1usize, 3, 8, 9, 15, 16, 17, 31, 32, 40, 63, 64, 80];
+    let run = |bucketed: bool| -> Vec<Vec<i32>> {
+        let server = ServerHandle::spawn_engine(EngineSpec::Sim(sim_spec()), opts(1, bucketed));
+        let out: Vec<Vec<i32>> =
+            lens.iter().map(|&l| server.infer(prompt(l)).unwrap().tokens).collect();
+        server.shutdown().unwrap();
+        out
+    };
+    let bucketed = run(true);
+    let full = run(false);
+    assert_eq!(bucketed, full, "tokens must not depend on the executed bucket");
+}
+
+#[test]
+fn bucketed_serving_reduces_executed_tokens() {
+    let spec = sim_spec();
+    let lens = [4usize, 5, 6, 7, 20, 21, 40, 64];
+    let run = |bucketed: bool| {
+        let server =
+            ServerHandle::spawn_engine(EngineSpec::Sim(spec.clone()), opts(1, bucketed));
+        for &l in &lens {
+            let r = server.infer(prompt(l)).unwrap();
+            assert!(!r.truncated);
+            if bucketed {
+                assert_eq!(r.bucket, bucket_for(l, spec.enc_len), "len {l}");
+            } else {
+                assert_eq!(r.bucket, spec.enc_len);
+            }
+        }
+        server.shutdown().unwrap()
+    };
+    let b = run(true);
+    let f = run(false);
+    assert_eq!(b.requests, lens.len());
+    assert_eq!(f.requests, lens.len());
+    assert_eq!(b.prompt_tokens, f.prompt_tokens);
+    assert!(
+        b.executed_tokens < f.executed_tokens,
+        "bucketed {} vs full {}",
+        b.executed_tokens,
+        f.executed_tokens
+    );
+    assert!(b.waste_ratio() < f.waste_ratio());
+}
+
+#[test]
+fn over_length_prompts_still_flagged_truncated() {
+    let spec = sim_spec();
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec.clone()), opts(1, true));
+    let r = server.infer(prompt(spec.enc_len + 13)).unwrap();
+    assert!(r.truncated, "over-enc_len prompt must be flagged");
+    assert_eq!(r.bucket, spec.enc_len, "truncated prompts run the full bucket");
+    let ok = server.infer(prompt(spec.enc_len)).unwrap();
+    assert!(!ok.truncated);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.truncated, 1);
+}
+
+/// N replicas must produce exactly the same tokens as 1 replica for the
+/// same prompts (determinism), and shutdown must merge every replica's
+/// counters (sample count == request count, fills sum up).
+#[test]
+fn multi_replica_determinism_and_stats_merge() {
+    let spec = sim_spec();
+    let prompts: Vec<Vec<i32>> = (0..32).map(|i| prompt(1 + (i * 7) % 70)).collect();
+
+    let run = |replicas: usize| -> (Vec<Vec<i32>>, altup::coordinator::server::ServerStats) {
+        let server =
+            ServerHandle::spawn_engine(EngineSpec::Sim(spec.clone()), opts(replicas, true));
+        // Submit from 4 concurrent client threads to exercise batching
+        // across replicas, then collect in a stable order.
+        let mut joins = Vec::new();
+        for c in 0..4 {
+            let sender = server.sender.clone();
+            let mine: Vec<(usize, Vec<i32>)> = prompts
+                .iter()
+                .cloned()
+                .enumerate()
+                .skip(c)
+                .step_by(4)
+                .collect();
+            joins.push(std::thread::spawn(move || {
+                let mut out = Vec::new();
+                for (idx, p) in mine {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    sender.send(Request::new(p, tx)).unwrap();
+                    out.push((idx, rx.recv().unwrap()));
+                }
+                out
+            }));
+        }
+        let mut responses: Vec<Option<Vec<i32>>> = vec![None; prompts.len()];
+        let mut max_replica = 0usize;
+        for j in joins {
+            for (idx, resp) in j.join().unwrap() {
+                max_replica = max_replica.max(resp.replica);
+                responses[idx] = Some(resp.tokens);
+            }
+        }
+        assert!(max_replica < replicas.max(1));
+        let stats = server.shutdown().unwrap();
+        (responses.into_iter().map(|r| r.unwrap()).collect(), stats)
+    };
+
+    let (tokens_one, stats_one) = run(1);
+    let (tokens_three, stats_three) = run(3);
+    assert_eq!(tokens_one, tokens_three, "replica count must not change outputs");
+
+    for stats in [&stats_one, &stats_three] {
+        assert_eq!(stats.requests, prompts.len());
+        assert_eq!(stats.total_fill, prompts.len(), "fills sum to total requests");
+        assert_eq!(
+            stats.latency_count() as usize,
+            prompts.len(),
+            "one latency sample per request"
+        );
+        assert!(stats.batches >= 1 && stats.batches <= prompts.len());
+        assert!(stats.p95_ms() >= stats.p50_ms());
+        assert!(stats.executed_tokens >= stats.prompt_tokens);
+    }
+    assert_eq!(stats_one.replicas, 1);
+    assert_eq!(stats_three.replicas, 3);
+}
+
+/// A dead model thread must surface as an error from `infer`, not a
+/// hang: spawning against a nonexistent artifact kills router+replicas
+/// at startup.
+#[test]
+fn infer_errors_when_model_thread_dead() {
+    let server = ServerHandle::spawn(
+        "definitely-not-an-artifact",
+        ServerOptions { batch_window: Duration::from_millis(1), ..Default::default() },
+    );
+    let err = server.infer(vec![1, 2, 3]);
+    assert!(err.is_err(), "infer against a dead server must error, not hang");
+    assert!(server.shutdown().is_err(), "shutdown reports the startup failure");
+}
+
+#[test]
+fn bucket_ladder_is_monotone_per_request() {
+    // Response buckets from a bucketed server always come off the
+    // ladder and always fit the prompt.
+    let spec = sim_spec();
+    let ladder = bucket_lengths(spec.enc_len);
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec.clone()), opts(2, true));
+    for len in [1usize, 7, 8, 9, 30, 33, 64, 100] {
+        let r = server.infer(prompt(len)).unwrap();
+        assert!(ladder.contains(&r.bucket), "bucket {} for len {len}", r.bucket);
+        assert!(r.bucket >= len.min(spec.enc_len));
+        assert_eq!(r.tokens.len(), spec.dec_len);
+    }
+    server.shutdown().unwrap();
+}
