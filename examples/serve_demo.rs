@@ -32,6 +32,10 @@ fn main() -> anyhow::Result<()> {
         ServerOptions {
             batch_window: Duration::from_millis(args.u64_or("window-ms", 10)),
             replicas,
+            slots: args.usize_or("slots", 0),
+            // Compose with the ALTUP_NO_CONT_BATCH env default, same
+            // as `altup serve`.
+            continuous: !args.has("no-cont") && ServerOptions::default().continuous,
             ..Default::default()
         },
     );
@@ -82,5 +86,22 @@ fn main() -> anyhow::Result<()> {
         stats.p95_ms(),
         stats.p99_ms()
     );
+    if stats.decode_steps > 0 {
+        println!(
+            "decode:      continuous — {} tokens out over {} fused steps, \
+             mean occupancy {:.2}, early exit saved {:.1}%, {:.3} ms/token",
+            stats.tokens_generated,
+            stats.decode_steps,
+            stats.occupancy.mean(),
+            stats.early_exit_ratio() * 100.0,
+            stats.token_ms()
+        );
+    } else {
+        println!(
+            "decode:      batch-level — {} tokens out, {:.3} ms/token",
+            stats.tokens_generated,
+            stats.token_ms()
+        );
+    }
     Ok(())
 }

@@ -1,12 +1,21 @@
 """Threaded twin of `rust/benches/server_throughput.rs`.
 
-Mirrors the Rust serving bench 1:1 — same SplitMix64 workload stream,
-same bucket ladder (`runtime::session::bucket_for`), same router policy
-(group by bucket, flush on full batch or expired window), same replica
-pool semantics, and the same sim-decode cost model (sleep proportional
-to the executed ``batch_size x bucket`` geometry) — so the serving-
-policy numbers (QPS scaling across replicas, padded-token waste,
-latency percentiles) can be measured on machines without a cargo
+Mirrors the Rust serving bench 1:1 — same SplitMix64 workload stream
+(prompt lengths AND token values, so the hash-sampled EOS positions
+match bit-for-bit), same bucket ladder (`runtime::session::bucket_for`),
+same router policy (group by bucket, flush on full batch or expired
+window), same replica-pool semantics, and the same sim cost model:
+
+- monolithic `decode_step` batch: ``token_ns * batch_size * bucket``
+  prefill plus ``dec_len * (dstep_ns + dtoken_ns * batch_size)`` decode
+  (every row pays the full dec_len — no early exit);
+- split path: per admission group ``dstep_ns + token_ns * rows *
+  bucket`` (varlen-style prefill), per fused decode iteration
+  ``dstep_ns + dtoken_ns * slots`` over the static slot geometry, rows
+  retiring at their sampled EOS.
+
+This lets the serving-policy numbers (continuous vs batch QPS, p95,
+early-exit savings, occupancy) be measured on machines without a cargo
 toolchain or a PJRT backend. The Rust bench is the canonical producer
 of BENCH_server_throughput.json; running it overwrites this twin's
 output (the ``producer`` field records which one wrote the file).
@@ -19,12 +28,17 @@ import queue
 import sys
 import threading
 import time
+from collections import deque
 
 MASK = (1 << 64) - 1
 
 BATCH_SIZE = 8
 ENC_LEN = 128
-TOKEN_NS = 20000  # mirrors SimSpec::new's default
+DEC_LEN = 48
+VOCAB = 512
+TOKEN_NS = 20000   # mirrors SimSpec::new's ALTUP_SIM_TOKEN_NS default
+DTOKEN_NS = 20000  # ALTUP_SIM_DTOKEN_NS default (= token_ns)
+DSTEP_NS = 50000   # ALTUP_SIM_DSTEP_NS default
 WINDOW_S = 0.002
 REQUESTS = 384
 CLIENTS = 32
@@ -63,20 +77,52 @@ def bucket_for(length, enc_len):
     return enc_len
 
 
-def mixed_prompt_lengths(n, enc_len, seed):
-    """Mirror of the bench's mixed_prompts draw order (length draw plus
-    one RNG draw per token, so the stream stays aligned)."""
+def sim_row_hash(tokens):
+    """FNV-1a over the prompt tokens (coordinator::server::sim_row_hash)."""
+    h = 0xCBF29CE484222325
+    for t in tokens:
+        h = ((h ^ (t & 0xFFFFFFFF)) * 0x00000100000001B3) & MASK
+    return h
+
+
+def sim_gen_len(h, dec_len):
+    """Hash-sampled generation length in [1, dec_len] (sim_gen_len)."""
+    x = h ^ (h >> 33)
+    x = (x * 0xFF51AFD7ED558CCD) & MASK
+    x ^= x >> 29
+    return 1 + (x % max(dec_len, 1))
+
+
+def mixed_prompts(n, enc_len, vocab, seed):
+    """Mirror of the bench's mixed_prompts draws: (length, gen_len)."""
     rng = Rng(seed)
-    lengths = []
+    out = []
     for _ in range(n):
         if rng.next_f64() < 0.7:
             length = rng.range(4, max(enc_len // 4, 5))
         else:
             length = rng.range(enc_len // 2, enc_len)
-        for _ in range(length):
-            rng.next_u64()  # token draw
-        lengths.append(length)
-    return lengths
+        tokens = [rng.range(1, vocab) for _ in range(length)]
+        out.append((length, sim_gen_len(sim_row_hash(tokens), DEC_LEN)))
+    return out
+
+
+def nsleep(ns):
+    """Precise simulated-device wait. This container's kernel rounds
+    every ``time.sleep`` up to ~1 ms, which would tax the continuous
+    path's many sub-ms fused decode steps 5x while leaving the batch
+    path's few ~20 ms sleeps untouched — so coarse-sleep the bulk and
+    yield-spin the final stretch instead (``time.sleep(0)`` releases
+    the GIL each probe)."""
+    end = time.perf_counter_ns() + ns
+    while True:
+        rem = end - time.perf_counter_ns()
+        if rem <= 0:
+            return
+        if rem > 1_500_000:
+            time.sleep((rem - 1_200_000) / 1e9)
+        else:
+            time.sleep(0)
 
 
 def percentile(samples, p):
@@ -94,7 +140,12 @@ class Stats:
         self.total_fill = 0
         self.prompt_tokens = 0
         self.executed_tokens = 0
+        self.tokens_generated = 0
+        self.tokens_saved = 0
+        self.decode_steps = 0
+        self.occupancy_sum = 0
         self.latency_ms = []
+        self.token_ms = []
         self.lock = threading.Lock()
 
     def waste_ratio(self):
@@ -105,8 +156,23 @@ class Stats:
     def mean_fill(self):
         return self.total_fill / self.batches if self.batches else 0.0
 
+    def early_exit_ratio(self):
+        budget = self.tokens_saved + self.tokens_generated
+        return self.tokens_saved / budget if budget else 0.0
 
-def run_config(lengths, replicas, bucketed):
+    def mean_occupancy(self):
+        return self.occupancy_sum / self.decode_steps if self.decode_steps else 0.0
+
+    def note_response(self, latency_s, generated, saved, prompt):
+        self.latency_ms.append(latency_s * 1e3)
+        self.token_ms.append(latency_s * 1e3 / max(generated, 1))
+        self.tokens_generated += generated
+        self.tokens_saved += saved
+        self.prompt_tokens += prompt
+        self.requests += 1
+
+
+def run_config(workload, replicas, bucketed, continuous, slots=0):
     req_q = queue.Queue()
     # Bounded job queue = backpressure, mirroring the Rust router: full
     # groups ship with a blocking put; due-but-partial groups ship
@@ -115,16 +181,16 @@ def run_config(lengths, replicas, bucketed):
     job_q = queue.Queue(maxsize=max(replicas, 1))
     stats = Stats()
     n_clients = CLIENTS
+    slots_n = slots if slots > 0 else BATCH_SIZE
 
     def router():
-        # bucket -> list of (t0, admitted, reply_q, length); latency is
-        # reported from the client-side t0, the batch-window deadline
-        # runs from admission (mirrors the Rust router).
+        # bucket -> list of (t0, admitted, reply_q, length, gen_len);
+        # latency is reported from the client-side t0, the batch-window
+        # deadline runs from admission (mirrors the Rust router).
         groups = {}
         live_clients = n_clients
         disconnected = False
         while not (disconnected and not groups):
-            # Flush pass.
             now = time.monotonic()
             due_unsent = False
             for bucket in list(groups.keys()):
@@ -142,7 +208,6 @@ def run_config(lengths, replicas, bucketed):
                         due_unsent = True
             if disconnected:
                 continue
-            # Admit pass.
             msg = None
             if not groups:
                 m = req_q.get()
@@ -170,43 +235,127 @@ def run_config(lengths, replicas, bucketed):
                     except queue.Empty:
                         pass
             if msg is not None:
-                t0, reply, length = msg
+                t0, reply, length, gen_len = msg
                 bucket = bucket_for(length, ENC_LEN) if bucketed else ENC_LEN
                 groups.setdefault(bucket, []).append(
-                    (t0, time.monotonic(), reply, length)
+                    (t0, time.monotonic(), reply, length, gen_len)
                 )
         for _ in range(max(replicas, 1)):
             job_q.put(None)
 
-    def replica():
+    def replica_batch():
+        # Run-to-completion decode_step loop: full-geometry prefill plus
+        # every decode step for every row, early exit or not.
         while True:
             job = job_q.get()
             if job is None:
                 break
             bucket, group = job
-            time.sleep(TOKEN_NS * BATCH_SIZE * bucket / 1e9)  # sim decode
+            ns = TOKEN_NS * BATCH_SIZE * bucket + DEC_LEN * (
+                DSTEP_NS + DTOKEN_NS * BATCH_SIZE
+            )
+            nsleep(ns)
             now = time.monotonic()
             with stats.lock:
                 stats.batches += 1
                 stats.total_fill += len(group)
-                stats.requests += len(group)
                 stats.executed_tokens += BATCH_SIZE * bucket
-                for t0, _admitted, _reply, length in group:
-                    stats.prompt_tokens += min(length, bucket)
-                    stats.latency_ms.append((now - t0) * 1e3)
-            for _t0, _admitted, reply, _length in group:
+                for t0, _adm, _reply, length, gen_len in group:
+                    stats.note_response(now - t0, gen_len, 0, min(length, bucket))
+            for _t0, _adm, reply, _length, _gen in group:
                 reply.put(True)
 
+    def replica_cont():
+        # Slot-based continuous batching, mirroring serve_continuous:
+        # admit pending requests into free slots (one varlen prefill per
+        # same-bucket group), one fused decode iteration over the slot
+        # geometry, retire rows at their sampled EOS.
+        pending = deque()  # (bucket, t0, reply, length, gen_len)
+        active = [None] * slots_n  # (t0, reply, length, gen_len, emitted, bucket)
+        router_gone = False
+
+        def stash(job):
+            bucket, group = job
+            for t0, _adm, reply, length, gen_len in group:
+                pending.append((bucket, t0, reply, length, gen_len))
+
+        while True:
+            n_live = sum(1 for a in active if a is not None)
+            if not router_gone:
+                if n_live == 0 and not pending:
+                    job = job_q.get()
+                    if job is None:
+                        router_gone = True
+                    else:
+                        stash(job)
+                while len(pending) < slots_n and not router_gone:
+                    try:
+                        job = job_q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if job is None:
+                        router_gone = True
+                    else:
+                        stash(job)
+            # Admit same-bucket runs into free slots.
+            free = deque(i for i, a in enumerate(active) if a is None)
+            while free and pending:
+                bucket = pending[0][0]
+                group = []
+                ids = []
+                while (
+                    pending
+                    and pending[0][0] == bucket
+                    and free
+                    and len(group) < BATCH_SIZE
+                ):
+                    _b, t0, reply, length, gen_len = pending.popleft()
+                    sid = free.popleft()
+                    active[sid] = [t0, reply, length, gen_len, 0, bucket]
+                    group.append(sid)
+                    ids.append(sid)
+                if not group:
+                    break
+                nsleep(DSTEP_NS + TOKEN_NS * len(group) * bucket)
+                with stats.lock:
+                    stats.batches += 1
+                    stats.total_fill += len(group)
+                    stats.executed_tokens += len(group) * bucket
+            n_live = sum(1 for a in active if a is not None)
+            if n_live == 0:
+                if router_gone and not pending:
+                    break
+                continue
+            # One fused decode iteration over the whole slot geometry.
+            nsleep(DSTEP_NS + DTOKEN_NS * slots_n)
+            now = time.monotonic()
+            with stats.lock:
+                stats.decode_steps += 1
+                stats.occupancy_sum += n_live
+            for s, act in enumerate(active):
+                if act is None:
+                    continue
+                act[4] += 1
+                if act[4] >= act[3] or act[4] >= DEC_LEN:
+                    t0, reply, length, gen_len, emitted, bucket = act
+                    active[s] = None
+                    with stats.lock:
+                        stats.note_response(
+                            now - t0, emitted, DEC_LEN - emitted, min(length, bucket)
+                        )
+                    reply.put(True)
+
     def client(c):
-        for length in lengths[c::n_clients]:
+        for length, gen_len in workload[c::n_clients]:
             reply = queue.SimpleQueue()
-            req_q.put((time.monotonic(), reply, length))
+            req_q.put((time.monotonic(), reply, length, gen_len))
             reply.get()
         req_q.put(None)  # this client is done
 
+    target = replica_cont if continuous else replica_batch
     threads = [threading.Thread(target=router, name="router")]
     threads += [
-        threading.Thread(target=replica, name=f"replica-{i}")
+        threading.Thread(target=target, name=f"replica-{i}")
         for i in range(max(replicas, 1))
     ]
     t_start = time.monotonic()
@@ -221,50 +370,72 @@ def run_config(lengths, replicas, bucketed):
     for t in threads:
         t.join()
     wall = time.monotonic() - t_start
-    qps = len(lengths) / max(wall, 1e-9)
+    qps = len(workload) / max(wall, 1e-9)
+    # Batch-mode note_response runs under the batch's `now`; requests
+    # counted there. Continuous counts at retire. Either way requests ==
+    # workload size when every reply arrived.
+    assert stats.requests == len(workload), (stats.requests, len(workload))
     return qps, stats
 
 
-def row(qps, stats, replicas=None):
-    out = {}
-    if replicas is not None:
-        out["replicas"] = replicas
-    out.update(
-        {
-            "qps": round(qps, 1),
-            "mean_fill": round(stats.mean_fill(), 3),
-            "waste_ratio": round(stats.waste_ratio(), 4),
-            "prompt_tokens": stats.prompt_tokens,
-            "executed_tokens": stats.executed_tokens,
-            "batches": stats.batches,
-            "p50_ms": round(percentile(stats.latency_ms, 50), 2),
-            "p95_ms": round(percentile(stats.latency_ms, 95), 2),
-            "p99_ms": round(percentile(stats.latency_ms, 99), 2),
-        }
-    )
-    return out
+def row(mode, replicas, qps, stats):
+    return {
+        "mode": mode,
+        "replicas": replicas,
+        "qps": round(qps, 1),
+        "mean_fill": round(stats.mean_fill(), 3),
+        "waste_ratio": round(stats.waste_ratio(), 4),
+        "prompt_tokens": stats.prompt_tokens,
+        "executed_tokens": stats.executed_tokens,
+        "batches": stats.batches,
+        "tokens_generated": stats.tokens_generated,
+        "early_exit_saved_ratio": round(stats.early_exit_ratio(), 4),
+        "decode_steps": stats.decode_steps,
+        "mean_occupancy": round(stats.mean_occupancy(), 3),
+        "token_ms": round(
+            sum(stats.token_ms) / len(stats.token_ms) if stats.token_ms else 0.0, 3
+        ),
+        "p50_ms": round(percentile(stats.latency_ms, 50), 2),
+        "p95_ms": round(percentile(stats.latency_ms, 95), 2),
+        "p99_ms": round(percentile(stats.latency_ms, 99), 2),
+    }
 
 
 def main():
     out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_server_throughput.json"
-    lengths = mixed_prompt_lengths(REQUESTS, ENC_LEN, 0x5E0A11)
+    workload = mixed_prompts(REQUESTS, ENC_LEN, VOCAB, 0x5E0A11)
 
-    base_qps, base_stats = run_config(lengths, replicas=1, bucketed=False)
+    base_qps, base_stats = run_config(workload, 1, bucketed=False, continuous=False)
     print(f"baseline full-length x1: {base_qps:.1f} qps, "
-          f"waste {base_stats.waste_ratio() * 100:.1f}%")
+          f"waste {base_stats.waste_ratio() * 100:.1f}%, "
+          f"p95 {percentile(base_stats.latency_ms, 95):.2f} ms")
 
     rows = []
-    qps_by = {}
+    by = {}
     for replicas in (1, 2, 4):
-        qps, stats = run_config(lengths, replicas=replicas, bucketed=True)
-        qps_by[replicas] = qps
-        rows.append(row(qps, stats, replicas))
-        print(f"bucketed x{replicas}: {qps:.1f} qps, fill {stats.mean_fill():.2f}, "
-              f"waste {stats.waste_ratio() * 100:.1f}%, "
-              f"p50 {percentile(stats.latency_ms, 50):.2f} ms")
+        for mode, continuous in (("batch", False), ("cont", True)):
+            qps, stats = run_config(
+                workload, replicas, bucketed=True, continuous=continuous
+            )
+            by[(mode, replicas)] = (qps, percentile(stats.latency_ms, 95))
+            rows.append(row(mode, replicas, qps, stats))
+            print(
+                f"{mode} x{replicas}: {qps:.1f} qps, fill {stats.mean_fill():.2f}, "
+                f"waste {stats.waste_ratio() * 100:.1f}%, "
+                f"occup {stats.mean_occupancy():.2f}, "
+                f"saved {stats.early_exit_ratio() * 100:.1f}%, "
+                f"p50 {percentile(stats.latency_ms, 50):.2f} ms, "
+                f"p95 {percentile(stats.latency_ms, 95):.2f} ms"
+            )
 
-    scaling = qps_by[4] / qps_by[1] if qps_by[1] else 0.0
-    print(f"scaling x4/x1 = {scaling:.2f}x")
+    bq1, bp1 = by[("batch", 1)]
+    cq1, cp1 = by[("cont", 1)]
+    cq4, _ = by[("cont", 4)]
+    qps_ratio = cq1 / bq1 if bq1 else 0.0
+    p95_red = 1.0 - cp1 / bp1 if bp1 else 0.0
+    print(f"continuous vs batch @x1: {qps_ratio:.2f}x qps, "
+          f"p95 {bp1:.2f} -> {cp1:.2f} ms ({p95_red * 100:.1f}% lower), "
+          f"cont scaling x4/x1 = {cq4 / cq1 if cq1 else 0.0:.2f}x")
 
     doc = {
         "bench": "server_throughput",
@@ -274,12 +445,19 @@ def main():
             "clients": CLIENTS,
             "batch_size": BATCH_SIZE,
             "enc_len": ENC_LEN,
+            "dec_len": DEC_LEN,
+            "slots": 0,
             "mix": "70% short [4, enc/4), 30% long [enc/2, enc)",
+            "eos": "generation length hash-sampled uniform in [1, dec_len]",
             "batch_window_ms": WINDOW_S * 1e3,
         },
-        "baseline_full_length": row(base_qps, base_stats),
-        "replicas": rows,
-        "qps_scaling_x4_over_x1": round(scaling, 3),
+        "baseline_full_length": row("batch-unbucketed", 1, base_qps, base_stats),
+        "configs": rows,
+        "cont_over_batch_x1": {
+            "qps_ratio": round(qps_ratio, 3),
+            "p95_reduction": round(p95_red, 3),
+        },
+        "qps_scaling_x4_over_x1": round(cq4 / cq1 if cq1 else 0.0, 3),
         "producer": "python/tools/server_throughput_twin.py "
                     "(threaded twin; re-run `cargo bench --bench server_throughput -- --json` "
                     "on a cargo-enabled machine to overwrite with the Rust measurement)",

@@ -1,5 +1,6 @@
-//! Bench: serving throughput under shape-bucketed batching and 1/2/4
-//! model replicas, on a mixed short/long prompt workload (§Perf L5).
+//! Bench: serving throughput under batch-level vs continuous (slot)
+//! scheduling at 1/2/4 replicas, on a mixed short/long prompt workload
+//! with EOS-distributed decode lengths (§Perf L5 + L6).
 //!
 //! Flags (after `--`):
 //!   --json             write BENCH_server_throughput.json
@@ -7,18 +8,20 @@
 //!   --requests <n>     total requests per configuration (default 384)
 //!   --clients <n>      concurrent closed-loop clients (default 32)
 //!   --window-ms <n>    router batch window (default 2)
+//!   --slots <n>        decode slots per replica (default 0 = batch_size)
 //!
 //! Backend: when `make artifacts` has run AND a real PJRT backend is
 //! linked, the bench serves the micro-altup artifact; otherwise it
-//! falls back to the deterministic sim engine (decode cost proportional
-//! to the executed `batch_size x bucket` geometry, see
-//! `coordinator::server::SimSpec`), which exercises the identical
-//! router/bucketing/replica machinery.
+//! falls back to the deterministic sim engine (prefill cost
+//! proportional to executed prompt tokens, fused decode-step cost
+//! proportional to the slot geometry, generation lengths hash-sampled
+//! in [1, dec_len] — see `coordinator::server::SimSpec`), which
+//! exercises the identical router/bucketing/slot-scheduler machinery.
 //!
-//! Reported per configuration: QPS, mean batch fill, padded-token
-//! waste ratio, and p50/p95/p99 latency; the `baseline_full_length` row
-//! is the same workload forced to always pad to `enc_len` on one
-//! replica — the pre-L5 serving path.
+//! The A/B the acceptance gate reads: `batch xN` runs run-to-completion
+//! `decode_step` batches (every row pays the full `dec_len`); `cont xN`
+//! runs the §Perf L6 slot scheduler (prefill/decode_token split, EOS
+//! early-exit, iteration-level admission) at the same replica count.
 
 use altup::coordinator::server::{
     EngineSpec, Request, ServerHandle, ServerOptions, ServerStats, SimSpec,
@@ -32,7 +35,9 @@ use std::time::{Duration, Instant};
 
 /// 70% short prompts (uniform in [4, enc_len/4)) / 30% long (uniform in
 /// [enc_len/2, enc_len)): the mixed workload where always-full padding
-/// hurts most.
+/// hurts most. Decode lengths ride along for free: the sim engine
+/// samples each row's EOS position from the prompt hash, so the same
+/// stream is also a mixed-generation-length workload.
 fn mixed_prompts(n: usize, enc_len: usize, vocab: usize, seed: u64) -> Vec<Vec<i32>> {
     let mut rng = Rng::new(seed);
     (0..n)
@@ -79,23 +84,25 @@ fn drive(
     Ok((prompts.len() as f64 / wall.max(1e-9), stats))
 }
 
-fn row_json(replicas: Option<usize>, qps: f64, stats: &ServerStats) -> Json {
-    let mut pairs: Vec<(&str, Json)> = Vec::new();
-    if let Some(r) = replicas {
-        pairs.push(("replicas", Json::num(r as f64)));
-    }
-    pairs.extend([
+fn row_json(mode: &str, replicas: usize, qps: f64, stats: &ServerStats) -> Json {
+    Json::obj(vec![
+        ("mode", Json::str(mode)),
+        ("replicas", Json::num(replicas as f64)),
         ("qps", Json::num(qps)),
         ("mean_fill", Json::num(stats.mean_fill())),
         ("waste_ratio", Json::num(stats.waste_ratio())),
         ("prompt_tokens", Json::num(stats.prompt_tokens as f64)),
         ("executed_tokens", Json::num(stats.executed_tokens as f64)),
         ("batches", Json::num(stats.batches as f64)),
+        ("tokens_generated", Json::num(stats.tokens_generated as f64)),
+        ("early_exit_saved_ratio", Json::num(stats.early_exit_ratio())),
+        ("decode_steps", Json::num(stats.decode_steps as f64)),
+        ("mean_occupancy", Json::num(stats.occupancy.mean())),
+        ("token_ms", Json::num(stats.token_ms())),
         ("p50_ms", Json::num(stats.p50_ms())),
         ("p95_ms", Json::num(stats.p95_ms())),
         ("p99_ms", Json::num(stats.p99_ms())),
-    ]);
-    Json::obj(pairs)
+    ])
 }
 
 fn main() -> anyhow::Result<()> {
@@ -103,13 +110,15 @@ fn main() -> anyhow::Result<()> {
     let requests = args.usize_or("requests", 384);
     let clients = args.usize_or("clients", 32);
     let window = Duration::from_millis(args.u64_or("window-ms", 2));
+    let slots = args.usize_or("slots", 0);
     let json_out = args.has("json") || args.has("json-path");
 
     // Pick the backend: real artifact when present and executable,
-    // else the deterministic sim engine.
+    // else the deterministic sim engine. dec_len 48 makes generation
+    // (not prefill) the dominant cost, mirroring serving reality.
     let client = Client::cpu()?;
     let stub = client.platform() == "cpu-stub";
-    let (engine, engine_name, batch_size, enc_len, vocab) =
+    let (engine, engine_name, batch_size, enc_len, dec_len, vocab) =
         match (!stub).then(|| load_named("micro-altup")) {
             Some(Ok(a)) => {
                 let cfg = a.config.clone();
@@ -118,66 +127,86 @@ fn main() -> anyhow::Result<()> {
                     "artifact:micro-altup".to_string(),
                     cfg.batch_size,
                     cfg.enc_len,
+                    cfg.dec_len,
                     cfg.vocab_size,
                 )
             }
             _ => {
-                let spec = SimSpec::new(8, 128, 16);
-                let (b, e, v) = (spec.batch_size, spec.enc_len, spec.vocab_size);
-                (EngineSpec::Sim(spec), "sim".to_string(), b, e, v)
+                let spec = SimSpec::new(8, 128, 48);
+                let (b, e, d, v) =
+                    (spec.batch_size, spec.enc_len, spec.dec_len, spec.vocab_size);
+                (EngineSpec::Sim(spec), "sim".to_string(), b, e, d, v)
             }
         };
     println!(
         "== server_throughput: engine={engine_name} batch={batch_size} enc_len={enc_len} \
-         requests={requests} clients={clients} =="
+         dec_len={dec_len} requests={requests} clients={clients} =="
     );
     let prompts = mixed_prompts(requests, enc_len, vocab, 0x5E_0A11);
-    let opts = |replicas: usize, bucketed: bool| ServerOptions {
+    let opts = |replicas: usize, bucketed: bool, continuous: bool| ServerOptions {
         batch_window: window,
         replicas,
         bucketed,
+        continuous,
+        slots,
         ..Default::default()
     };
 
     println!(
-        "{:<26} {:>9} {:>10} {:>8} {:>9} {:>9} {:>9}",
-        "config", "qps", "mean fill", "waste", "p50 ms", "p95 ms", "p99 ms"
+        "{:<26} {:>9} {:>10} {:>8} {:>7} {:>7} {:>9} {:>9} {:>9}",
+        "config", "qps", "mean fill", "waste", "occup", "saved", "p50 ms", "p95 ms", "p99 ms"
     );
     let report = |label: &str, qps: f64, stats: &ServerStats| {
         println!(
-            "{:<26} {:>9.1} {:>10.2} {:>7.1}% {:>9.2} {:>9.2} {:>9.2}",
+            "{:<26} {:>9.1} {:>10.2} {:>7.1}% {:>7.2} {:>6.1}% {:>9.2} {:>9.2} {:>9.2}",
             label,
             qps,
             stats.mean_fill(),
             stats.waste_ratio() * 100.0,
+            stats.occupancy.mean(),
+            stats.early_exit_ratio() * 100.0,
             stats.p50_ms(),
             stats.p95_ms(),
             stats.p99_ms()
         );
     };
 
-    // Pre-L5 baseline: one replica, everything padded to enc_len.
-    let (base_qps, base_stats) = drive(&engine, opts(1, false), &prompts, clients)?;
+    // Pre-L5 baseline: one replica, batch-level, everything padded to
+    // enc_len.
+    let (base_qps, base_stats) = drive(&engine, opts(1, false, false), &prompts, clients)?;
     report("baseline full-length x1", base_qps, &base_stats);
 
+    // The L6 A/B: batch-level vs continuous at equal replica counts.
     let mut rows: Vec<Json> = Vec::new();
-    let mut qps_by_replicas: Vec<(usize, f64)> = Vec::new();
+    let mut qps_by: Vec<(String, usize, f64, f64)> = Vec::new(); // (mode, replicas, qps, p95)
     for replicas in [1usize, 2, 4] {
-        let (qps, stats) = drive(&engine, opts(replicas, true), &prompts, clients)?;
-        report(&format!("bucketed x{replicas}"), qps, &stats);
-        qps_by_replicas.push((replicas, qps));
-        rows.push(row_json(Some(replicas), qps, &stats));
+        for (mode, continuous) in [("batch", false), ("cont", true)] {
+            let (qps, stats) =
+                drive(&engine, opts(replicas, true, continuous), &prompts, clients)?;
+            report(&format!("{mode} x{replicas}"), qps, &stats);
+            qps_by.push((mode.to_string(), replicas, qps, stats.p95_ms()));
+            rows.push(row_json(mode, replicas, qps, &stats));
+        }
     }
 
-    let q1 = qps_by_replicas.iter().find(|(r, _)| *r == 1).map(|(_, q)| *q).unwrap_or(0.0);
-    let q4 = qps_by_replicas.iter().find(|(r, _)| *r == 4).map(|(_, q)| *q).unwrap_or(0.0);
-    let bucketed_waste =
-        rows.first().and_then(|r| r.get("waste_ratio").as_f64()).unwrap_or(1.0);
+    let find = |mode: &str, replicas: usize| {
+        qps_by
+            .iter()
+            .find(|(m, r, _, _)| m == mode && *r == replicas)
+            .map(|(_, _, q, p)| (*q, *p))
+            .unwrap_or((0.0, 0.0))
+    };
+    let (bq1, bp1) = find("batch", 1);
+    let (cq1, cp1) = find("cont", 1);
+    let (bq4, _) = find("batch", 4);
+    let (cq4, _) = find("cont", 4);
+    let qps_ratio_x1 = if bq1 > 0.0 { cq1 / bq1 } else { 0.0 };
+    let p95_reduction_x1 = if bp1 > 0.0 { 1.0 - cp1 / bp1 } else { 0.0 };
     println!(
-        "scaling: x4/x1 = {:.2}x  |  waste: baseline {:.1}% -> bucketed {:.1}%",
-        if q1 > 0.0 { q4 / q1 } else { 0.0 },
-        base_stats.waste_ratio() * 100.0,
-        bucketed_waste * 100.0
+        "continuous vs batch @x1: {qps_ratio_x1:.2}x QPS, p95 {bp1:.2} -> {cp1:.2} ms \
+         ({:.1}% lower) | cont scaling x4/x1 = {:.2}x",
+        p95_reduction_x1 * 100.0,
+        if cq1 > 0.0 { cq4 / cq1 } else { 0.0 }
     );
 
     if json_out {
@@ -192,13 +221,32 @@ fn main() -> anyhow::Result<()> {
                     ("clients", Json::num(clients as f64)),
                     ("batch_size", Json::num(batch_size as f64)),
                     ("enc_len", Json::num(enc_len as f64)),
+                    ("dec_len", Json::num(dec_len as f64)),
+                    ("slots", Json::num(slots as f64)),
                     ("mix", Json::str("70% short [4, enc/4), 30% long [enc/2, enc)")),
+                    (
+                        "eos",
+                        Json::str("generation length hash-sampled uniform in [1, dec_len]"),
+                    ),
                     ("batch_window_ms", Json::num(window.as_secs_f64() * 1e3)),
                 ]),
             ),
-            ("baseline_full_length", row_json(None, base_qps, &base_stats)),
-            ("replicas", Json::Arr(rows)),
-            ("qps_scaling_x4_over_x1", Json::num(if q1 > 0.0 { q4 / q1 } else { 0.0 })),
+            (
+                "baseline_full_length",
+                row_json("batch-unbucketed", 1, base_qps, &base_stats),
+            ),
+            ("configs", Json::Arr(rows)),
+            (
+                "cont_over_batch_x1",
+                Json::obj(vec![
+                    ("qps_ratio", Json::num(qps_ratio_x1)),
+                    ("p95_reduction", Json::num(p95_reduction_x1)),
+                ]),
+            ),
+            (
+                "qps_scaling_x4_over_x1",
+                Json::num(if cq1 > 0.0 { cq4 / cq1 } else { 0.0 }),
+            ),
             (
                 "producer",
                 Json::str("cargo bench --bench server_throughput -- --json"),

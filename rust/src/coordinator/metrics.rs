@@ -164,6 +164,21 @@ impl LatencyHistogram {
         self.total += other.total;
     }
 
+    /// Mean over the bucketed samples (bucket-midpoint approximation,
+    /// same <~9% relative error as the percentiles).
+    pub fn mean_ms(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| c as f64 * Self::value(i))
+            .sum();
+        sum / self.total as f64
+    }
+
     /// Nearest-rank percentile (0..=100) over the bucketed samples.
     pub fn percentile_ms(&self, p: f64) -> f64 {
         if self.total == 0 {
@@ -184,6 +199,55 @@ impl LatencyHistogram {
 impl Default for LatencyHistogram {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Slot-occupancy meter for the continuous-batching decode loop: one
+/// sample per fused `decode_token` iteration recording how many of the
+/// replica's slots held a live request. Mean occupancy is the
+/// scheduler-health number (occupancy near the slot count means the
+/// admission path keeps the device fed; low occupancy means decode
+/// iterations run mostly-empty geometry). Mergeable across replicas
+/// like `LatencyHistogram`.
+#[derive(Debug, Clone, Default)]
+pub struct OccupancyMeter {
+    live_sum: u64,
+    steps: u64,
+}
+
+impl OccupancyMeter {
+    /// Record one decode iteration that ran with `live` occupied slots.
+    pub fn record(&mut self, live: usize) {
+        self.live_sum += live as u64;
+        self.steps += 1;
+    }
+
+    /// Number of decode iterations recorded.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Mean live slots per decode iteration.
+    pub fn mean(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.live_sum as f64 / self.steps as f64
+        }
+    }
+
+    /// Mean occupancy as a fraction of `slots`.
+    pub fn utilization(&self, slots: usize) -> f64 {
+        if slots == 0 {
+            0.0
+        } else {
+            self.mean() / slots as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &OccupancyMeter) {
+        self.live_sum += other.live_sum;
+        self.steps += other.steps;
     }
 }
 
@@ -255,6 +319,38 @@ mod tests {
         d.record(1e12);
         assert_eq!(d.count(), 4);
         assert!(d.percentile_ms(0.0) > 0.0);
+    }
+
+    #[test]
+    fn latency_histogram_mean() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.mean_ms(), 0.0);
+        for _ in 0..50 {
+            h.record(2.0);
+        }
+        for _ in 0..50 {
+            h.record(4.0);
+        }
+        let mean = h.mean_ms();
+        assert!((mean - 3.0).abs() / 3.0 < 0.10, "mean={mean}");
+    }
+
+    #[test]
+    fn occupancy_meter_records_and_merges() {
+        let mut o = OccupancyMeter::default();
+        assert_eq!(o.mean(), 0.0);
+        assert_eq!(o.utilization(8), 0.0);
+        o.record(8);
+        o.record(4);
+        assert_eq!(o.steps(), 2);
+        assert!((o.mean() - 6.0).abs() < 1e-12);
+        assert!((o.utilization(8) - 0.75).abs() < 1e-12);
+        let mut other = OccupancyMeter::default();
+        other.record(2);
+        other.merge(&o);
+        assert_eq!(other.steps(), 3);
+        assert!((other.mean() - 14.0 / 3.0).abs() < 1e-12);
+        assert_eq!(other.utilization(0), 0.0);
     }
 
     #[test]

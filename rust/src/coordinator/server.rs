@@ -1,29 +1,47 @@
-//! Multi-replica inference server with shape-bucketed dynamic batching
-//! (§Perf L5).
+//! Multi-replica inference server: shape-bucketed batching (§Perf L5)
+//! plus slot-based **continuous batching** (§Perf L6).
 //!
 //! The PJRT session is !Send (Rc-backed FFI handles), so each replica
 //! owns its client + session on a dedicated model thread. A router
 //! thread admits requests continuously, groups them by sequence-length
 //! bucket (`runtime::session::bucket_for`), and emits full-or-expired
-//! batches onto a shared job queue; the first idle replica picks each
-//! job up — the standard continuous-batching layout (vLLM-router-like),
-//! scaled to N replicas. A batch of short prompts runs the smallest
-//! bucket that fits instead of always padding to `enc_len`, so padded-
-//! token waste drops with the workload's length mix.
+//! batches onto a shared job queue; the first replica with capacity
+//! picks each job up.
+//!
+//! Replicas run one of two decode disciplines:
+//!
+//! - **Continuous (default, §Perf L6):** the replica owns `S` decode
+//!   slots, each holding a request's device-resident KV-cache buffers
+//!   (`Session::init_decode_slots` — the same PJRT-residency pattern
+//!   as the §Perf L4 param cache). Between decode iterations the slot
+//!   scheduler admits pending requests into free slots (one
+//!   `prefill@<bucket>` per same-bucket admission group), runs one
+//!   fused `decode_token` over every live slot, and retires slots the
+//!   moment they emit EOS or hit `dec_len` — short generations stop
+//!   paying for long ones, and new requests enter mid-flight instead
+//!   of waiting for a whole batch to finish. Requires the artifact to
+//!   ship the split HLO pair (`Session::has_split_decode`).
+//! - **Batch-level (fallback / `ALTUP_NO_CONT_BATCH=1`):** the §Perf
+//!   L5 run-to-completion loop over the monolithic `decode_step`.
+//!   Replicas fall back automatically when the artifact has no split
+//!   HLO, so the server works against every artifact either way.
 //!
 //! Backends: `EngineSpec::Artifact` serves a compiled artifact through
 //! a warmed device cache (§Perf L4); `EngineSpec::Sim` is a
-//! deterministic backend-free decode (cost proportional to the executed
-//! `batch_size x bucket` geometry) so the scheduler, bucketing, and
+//! deterministic backend-free decode with a per-token cost model and
+//! hash-sampled EOS lengths, so the slot scheduler, bucketing, and
 //! replica machinery can be exercised and benchmarked without linking
-//! the real xla-rs bindings.
+//! the real xla-rs bindings. Both disciplines produce identical token
+//! rows for the same prompts (EOS-truncated) — the parity contract
+//! `tests/server.rs` pins down.
 
-use crate::coordinator::metrics::LatencyHistogram;
+use crate::coordinator::metrics::{LatencyHistogram, OccupancyMeter};
+use crate::data::tokenizer::EOS;
 use crate::runtime::artifact::load_named;
 use crate::runtime::client::Client;
-use crate::runtime::session::{bucket_for, Session};
-use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
+use crate::runtime::session::{bucket_for, DecodeSlots, Session};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -32,8 +50,9 @@ pub struct Request {
     pub enc_tokens: Vec<i32>,
     pub reply: mpsc::Sender<Response>,
     /// When the request was created (client side), so reported latency
-    /// includes time queued in the request channel, not just time after
-    /// router admission. `Request::new` stamps it.
+    /// includes time spent blocked in the bounded request channel and
+    /// queued at the router — not just time after admission.
+    /// `Request::new` stamps it; construct requests through it.
     pub t0: Instant,
 }
 
@@ -45,8 +64,12 @@ impl Request {
 
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Decoded tokens, truncated at the first EOS (inclusive) — under
+    /// continuous batching the decode actually stopped there (early
+    /// exit); under batch-level decode the full row ran and the tail
+    /// past EOS is dropped for parity.
     pub tokens: Vec<i32>,
-    /// Time spent queued + executing, for latency accounting.
+    /// Time from `Request::new` (includes channel/router queueing).
     pub latency: Duration,
     pub batch_fill: usize,
     /// True when the request's prompt exceeded the model's `enc_len`
@@ -70,6 +93,19 @@ pub struct ServerOptions {
     /// Shape-bucketed batching (default on; `ALTUP_NO_BUCKETS=1` pads
     /// every batch to the full `enc_len` — the A/B baseline).
     pub bucketed: bool,
+    /// Decode slots per replica for continuous batching; 0 = auto (the
+    /// engine's `batch_size`). `ALTUP_SERVER_SLOTS` sets the default.
+    pub slots: usize,
+    /// Iteration-level (continuous) scheduling (default on;
+    /// `ALTUP_NO_CONT_BATCH=1` forces run-to-completion batches — the
+    /// A/B baseline). Replicas also fall back per-engine when the
+    /// artifact ships no split HLO.
+    pub continuous: bool,
+    /// Capacity of the bounded request channel (admission
+    /// backpressure); 0 means 1. Senders block once it fills; that
+    /// blocked time still counts toward reported latency because the
+    /// clock starts at `Request::new`.
+    pub queue_cap: usize,
 }
 
 impl Default for ServerOptions {
@@ -80,6 +116,9 @@ impl Default for ServerOptions {
             checkpoint: None,
             replicas: replicas_from_env(),
             bucketed: std::env::var_os("ALTUP_NO_BUCKETS").is_none(),
+            slots: slots_from_env(),
+            continuous: std::env::var_os("ALTUP_NO_CONT_BATCH").is_none(),
+            queue_cap: 1024,
         }
     }
 }
@@ -90,6 +129,13 @@ fn replicas_from_env() -> usize {
         .and_then(|s| s.parse::<usize>().ok())
         .filter(|&n| n >= 1)
         .unwrap_or(1)
+}
+
+fn slots_from_env() -> usize {
+    std::env::var("ALTUP_SERVER_SLOTS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(0)
 }
 
 /// Which decode backend the replicas run.
@@ -109,22 +155,43 @@ pub struct SimSpec {
     pub enc_len: usize,
     pub dec_len: usize,
     pub vocab_size: usize,
-    /// Simulated device nanoseconds per executed token
-    /// (`batch_size * bucket` tokens per batch). `ALTUP_SIM_TOKEN_NS`
-    /// sets the default (else 20000 — ~20 ms per full (8,128) batch,
-    /// in the ballpark of a micro-model CPU decode — so service time,
-    /// not router/scheduler overhead, dominates benches even on small
+    /// Simulated device nanoseconds per prefill token. A monolithic
+    /// `decode_step` batch prefills the full `batch_size x bucket`
+    /// geometry; a split `prefill` runs varlen-style over only the
+    /// admitted `rows x bucket`. `ALTUP_SIM_TOKEN_NS` sets the default
+    /// (else 20000 — ~20 ms per full (8,128) prefill, in the ballpark
+    /// of a micro-model CPU decode — so service time, not
+    /// router/scheduler overhead, dominates benches even on small
     /// shared machines).
     pub token_ns: u64,
+    /// Simulated ns per slot-row per fused decode step (the decoder
+    /// reads one token's worth of weights per live row).
+    /// `ALTUP_SIM_DTOKEN_NS` sets the default (else `token_ns`).
+    pub dtoken_ns: u64,
+    /// Fixed dispatch overhead per prefill/decode-step execute.
+    /// `ALTUP_SIM_DSTEP_NS` sets the default (else 50000).
+    pub dstep_ns: u64,
+    /// Pretend the artifact ships the split prefill/decode_token HLO
+    /// pair. `false` exercises the batch-level fallback path.
+    pub split_decode: bool,
 }
 
 impl SimSpec {
     pub fn new(batch_size: usize, enc_len: usize, dec_len: usize) -> SimSpec {
-        let token_ns = std::env::var("ALTUP_SIM_TOKEN_NS")
-            .ok()
-            .and_then(|s| s.parse::<u64>().ok())
-            .unwrap_or(20000);
-        SimSpec { batch_size, enc_len, dec_len, vocab_size: 512, token_ns }
+        let env_ns = |key: &str, default: u64| {
+            std::env::var(key).ok().and_then(|s| s.parse::<u64>().ok()).unwrap_or(default)
+        };
+        let token_ns = env_ns("ALTUP_SIM_TOKEN_NS", 20000);
+        SimSpec {
+            batch_size,
+            enc_len,
+            dec_len,
+            vocab_size: 512,
+            token_ns,
+            dtoken_ns: env_ns("ALTUP_SIM_DTOKEN_NS", token_ns),
+            dstep_ns: env_ns("ALTUP_SIM_DSTEP_NS", 50000),
+            split_decode: true,
+        }
     }
 }
 
@@ -133,19 +200,36 @@ impl SimSpec {
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
     pub requests: usize,
+    /// Decode batches (batch-level) or prefill admission groups
+    /// (continuous) — the unit `mean_fill` averages over.
     pub batches: usize,
     pub total_fill: usize,
     /// How many replica stat sets were merged in.
     pub replicas: usize,
     /// Real prompt tokens submitted (post-truncation).
     pub prompt_tokens: usize,
-    /// Tokens actually executed (`batch_size * effective bucket` per
-    /// batch) — the denominator of the padded-waste ratio.
+    /// Prefill tokens actually executed — `batch_size * bucket` per
+    /// monolithic batch, `rows * bucket` per split prefill — the
+    /// denominator of the padded-waste ratio.
     pub executed_tokens: usize,
     pub truncated: usize,
+    /// Decoded tokens delivered to clients (EOS-truncated rows).
+    pub tokens_generated: usize,
+    /// Decode tokens the continuous path did NOT run because slots
+    /// retired at EOS (`dec_len - row len`, summed). Zero under
+    /// batch-level decode — the monolithic step always runs `dec_len`.
+    pub tokens_saved: usize,
+    /// Fused `decode_token` iterations (continuous path only).
+    pub decode_steps: usize,
+    /// Split-prefill executions (continuous path only).
+    pub prefills: usize,
+    /// Live-slots-per-decode-iteration meter (continuous path only).
+    pub occupancy: OccupancyMeter,
     /// Per-request queued+executed latency, log-bucketed (O(1) memory
     /// over a server's lifetime, mergeable across replicas).
     pub latency: LatencyHistogram,
+    /// Per-token latency (request latency / tokens delivered).
+    pub token_latency: LatencyHistogram,
 }
 
 impl ServerStats {
@@ -166,6 +250,17 @@ impl ServerStats {
         }
     }
 
+    /// Fraction of the monolithic decode budget the early exit saved:
+    /// saved / (saved + generated).
+    pub fn early_exit_ratio(&self) -> f64 {
+        let budget = self.tokens_saved + self.tokens_generated;
+        if budget == 0 {
+            0.0
+        } else {
+            self.tokens_saved as f64 / budget as f64
+        }
+    }
+
     /// Number of latency samples recorded (== requests served).
     pub fn latency_count(&self) -> u64 {
         self.latency.count()
@@ -183,6 +278,31 @@ impl ServerStats {
     pub fn p99_ms(&self) -> f64 {
         self.latency_percentile_ms(99.0)
     }
+    /// Mean per-token latency in ms (histogram approximation).
+    pub fn token_ms(&self) -> f64 {
+        self.token_latency.mean_ms()
+    }
+
+    /// Record one finished request's bookkeeping (shared by both
+    /// decode disciplines).
+    fn note_response(
+        &mut self,
+        latency: Duration,
+        generated: usize,
+        saved: usize,
+        prompt: usize,
+        truncated: bool,
+    ) {
+        let ms = latency.as_secs_f64() * 1e3;
+        self.latency.record(ms);
+        self.token_latency.record(ms / generated.max(1) as f64);
+        self.tokens_generated += generated;
+        self.tokens_saved += saved;
+        self.prompt_tokens += prompt;
+        if truncated {
+            self.truncated += 1;
+        }
+    }
 
     /// Fold another replica's counters into this aggregate.
     pub fn merge(&mut self, other: &ServerStats) {
@@ -193,18 +313,30 @@ impl ServerStats {
         self.prompt_tokens += other.prompt_tokens;
         self.executed_tokens += other.executed_tokens;
         self.truncated += other.truncated;
+        self.tokens_generated += other.tokens_generated;
+        self.tokens_saved += other.tokens_saved;
+        self.decode_steps += other.decode_steps;
+        self.prefills += other.prefills;
+        self.occupancy.merge(&other.occupancy);
         self.latency.merge(&other.latency);
+        self.token_latency.merge(&other.token_latency);
     }
 
     pub fn summary(&self) -> String {
         format!(
             "{} requests / {} batches on {} replica(s), mean fill {:.2}, \
-             padded waste {:.1}%, latency p50 {:.2} / p95 {:.2} / p99 {:.2} ms",
+             padded waste {:.1}%, {} tokens out (early exit saved {:.1}%), \
+             mean occupancy {:.2} over {} decode steps, \
+             latency p50 {:.2} / p95 {:.2} / p99 {:.2} ms",
             self.requests,
             self.batches,
             self.replicas.max(1),
             self.mean_fill(),
             self.waste_ratio() * 100.0,
+            self.tokens_generated,
+            self.early_exit_ratio() * 100.0,
+            self.occupancy.mean(),
+            self.decode_steps,
             self.p50_ms(),
             self.p95_ms(),
             self.p99_ms()
@@ -229,7 +361,9 @@ struct BatchJob {
 }
 
 pub struct ServerHandle {
-    pub sender: mpsc::Sender<Request>,
+    /// Bounded: `send` blocks once `ServerOptions::queue_cap` requests
+    /// are in flight ahead of the router (admission backpressure).
+    pub sender: mpsc::SyncSender<Request>,
     router: Option<std::thread::JoinHandle<Result<()>>>,
     replicas: Vec<std::thread::JoinHandle<Result<ServerStats>>>,
 }
@@ -246,7 +380,7 @@ impl ServerHandle {
     /// Spawn router + replicas over an explicit decode backend.
     pub fn spawn_engine(engine: EngineSpec, opts: ServerOptions) -> ServerHandle {
         let n = opts.replicas.max(1);
-        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (req_tx, req_rx) = mpsc::sync_channel::<Request>(opts.queue_cap.max(1));
         // Bounded job queue = backpressure: when every replica is busy
         // and the queue is full, the router keeps accumulating instead
         // of window-flushing tiny partial batches at a wall of busy
@@ -276,9 +410,12 @@ impl ServerHandle {
         ServerHandle { sender: req_tx, router: Some(router), replicas }
     }
 
-    /// Submit a request and block for the response. Returns an error
-    /// (rather than hanging) when the router or the serving replica has
-    /// died — the reply channel is dropped with the request.
+    /// Submit a request and block for the response. The latency clock
+    /// starts before the (possibly blocking) send into the bounded
+    /// request channel, so backpressured requests report their queueing
+    /// time. Returns an error (rather than hanging) when the router or
+    /// the serving replica has died — the reply channel is dropped with
+    /// the request.
     pub fn infer(&self, enc_tokens: Vec<i32>) -> Result<Response> {
         let (tx, rx) = mpsc::channel();
         self.sender
@@ -439,6 +576,24 @@ enum Engine {
     Sim(SimSpec),
 }
 
+/// Per-replica slot state for the continuous path: device-resident KV
+/// buffers for the real backend, per-slot decode cursors for the sim.
+enum SlotState {
+    /// `Option` so the `DecodeSlots` can be moved through the donating
+    /// `Session::prefill`/`decode_token` calls and put back.
+    Real(Option<DecodeSlots>),
+    Sim(Vec<Option<SimSlot>>),
+}
+
+/// One live sim request: prompt hash (the whole decode stream derives
+/// from it), next position, and the hash-sampled generation length.
+#[derive(Clone, Copy)]
+struct SimSlot {
+    h: u64,
+    pos: usize,
+    gen_len: usize,
+}
+
 impl Engine {
     fn build(spec: &EngineSpec, opts: &ServerOptions) -> Result<Engine> {
         match spec {
@@ -471,9 +626,27 @@ impl Engine {
         }
     }
 
-    /// The sequence length a job at `bucket` actually executes at (the
-    /// real backend falls back to `enc_len` when the artifact has no
-    /// shape-specialized HLO for the bucket).
+    /// Maximum tokens a request may generate.
+    fn dec_len(&self) -> usize {
+        match self {
+            Engine::Real { session, .. } => session.artifact.config.dec_len,
+            Engine::Sim(s) => s.dec_len,
+        }
+    }
+
+    /// Whether this engine can run the split prefill/decode_token
+    /// discipline (the artifact ships the HLO pair; the sim can opt
+    /// out to exercise the fallback).
+    fn supports_continuous(&self) -> bool {
+        match self {
+            Engine::Real { session, .. } => session.has_split_decode(),
+            Engine::Sim(s) => s.split_decode,
+        }
+    }
+
+    /// The sequence length a monolithic job at `bucket` actually
+    /// executes at (the real backend falls back to `enc_len` when the
+    /// artifact has no shape-specialized HLO for the bucket).
     fn effective_bucket(&self, bucket: usize) -> usize {
         match self {
             Engine::Real { session, .. } => session.effective_bucket(bucket),
@@ -481,46 +654,195 @@ impl Engine {
         }
     }
 
-    /// Decode a (batch_size, bucket) packed batch.
+    /// Same, for the split prefill family.
+    fn effective_prefill_bucket(&self, bucket: usize) -> usize {
+        match self {
+            Engine::Real { session, .. } => session.effective_prefill_bucket(bucket),
+            Engine::Sim(s) => bucket.min(s.enc_len),
+        }
+    }
+
+    /// Monolithic decode of a (batch_size, bucket) packed batch.
     fn decode(&mut self, enc: &[i32], bucket: usize) -> Result<Vec<Vec<i32>>> {
         match self {
             Engine::Real { client, session } => session.decode_bucketed(client, enc, bucket),
             Engine::Sim(s) => Ok(sim_decode(s, enc, bucket)),
         }
     }
+
+    /// Allocate the per-replica slot state for `n` concurrent requests.
+    fn init_slots(&mut self, n: usize) -> Result<SlotState> {
+        match self {
+            Engine::Real { client, session } => {
+                Ok(SlotState::Real(Some(session.init_decode_slots(client, n)?)))
+            }
+            Engine::Sim(_) => Ok(SlotState::Sim(vec![None; n])),
+        }
+    }
+
+    /// Prefill a same-bucket admission group, `enc` packed row-major at
+    /// (slot_ids.len(), bucket), into slot rows `slot_ids`.
+    fn prefill(
+        &mut self,
+        state: &mut SlotState,
+        enc: &[i32],
+        bucket: usize,
+        slot_ids: &[usize],
+    ) -> Result<()> {
+        match (self, state) {
+            (Engine::Real { client, session }, SlotState::Real(slots)) => {
+                let held = slots
+                    .take()
+                    .context("slot state lost after an earlier prefill/decode error")?;
+                let ids: Vec<i32> = slot_ids.iter().map(|&s| s as i32).collect();
+                *slots = Some(session.prefill(client, held, enc, bucket, &ids)?);
+                Ok(())
+            }
+            (Engine::Sim(spec), SlotState::Sim(slots)) => {
+                for (row, &sid) in enc.chunks(bucket).zip(slot_ids.iter()) {
+                    let h = sim_row_hash(row);
+                    slots[sid] =
+                        Some(SimSlot { h, pos: 0, gen_len: sim_gen_len(h, spec.dec_len) });
+                }
+                // Varlen-style split prefill: dispatch overhead + cost
+                // over the admitted rows only (no dead padding rows).
+                sim_sleep(
+                    spec.dstep_ns
+                        + spec.token_ns.saturating_mul((slot_ids.len() * bucket) as u64),
+                );
+                Ok(())
+            }
+            _ => bail!("engine/slot-state backend mismatch"),
+        }
+    }
+
+    /// One fused decode iteration over the whole slot geometry:
+    /// advances every slot with `live[s] == true` by one token and
+    /// returns the (slots,) token row (dead rows carry garbage).
+    fn decode_token(&mut self, state: &mut SlotState, live: &[bool]) -> Result<Vec<i32>> {
+        match (self, state) {
+            (Engine::Real { client, session }, SlotState::Real(slots)) => {
+                let held = slots
+                    .take()
+                    .context("slot state lost after an earlier prefill/decode error")?;
+                let (held, tokens) = session.decode_token(client, held, live)?;
+                *slots = Some(held);
+                Ok(tokens)
+            }
+            (Engine::Sim(spec), SlotState::Sim(slots)) => {
+                let mut out = vec![0i32; slots.len()];
+                for (s, slot) in slots.iter_mut().enumerate() {
+                    if !live[s] {
+                        continue;
+                    }
+                    let sl = slot.as_mut().context("live mask set on an empty sim slot")?;
+                    out[s] = if sl.pos + 1 == sl.gen_len {
+                        EOS
+                    } else {
+                        sim_token(sl.h, sl.pos, spec.vocab_size)
+                    };
+                    sl.pos += 1;
+                }
+                // Fused step over the full static slot geometry.
+                sim_sleep(
+                    spec.dstep_ns + spec.dtoken_ns.saturating_mul(slots.len() as u64),
+                );
+                Ok(out)
+            }
+            _ => bail!("engine/slot-state backend mismatch"),
+        }
+    }
 }
 
-/// Deterministic stand-in decode: each output row is a hash function of
-/// the row's non-padding prompt tokens only, so results are identical
-/// no matter which bucket executed them (the parity contract real
-/// bucketed decode must also satisfy). Costs a simulated
-/// `token_ns * batch_size * bucket` of device time.
+/// FNV-1a over a row's non-padding prompt tokens only, so decode
+/// streams are identical no matter which bucket executed the prompt
+/// (the parity contract real bucketed decode must also satisfy).
+fn sim_row_hash(row: &[i32]) -> u64 {
+    let used = row.iter().rposition(|&t| t != 0).map_or(0, |i| i + 1);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in &row[..used] {
+        h = (h ^ t as u32 as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Hash-sampled generation length in [1, dec_len] — the "EOS
+/// distribution" of the sim workload. The row's final token is EOS.
+fn sim_gen_len(h: u64, dec_len: usize) -> usize {
+    let mut x = h ^ (h >> 33);
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^= x >> 29;
+    1 + (x % dec_len.max(1) as u64) as usize
+}
+
+/// Deterministic non-EOS token for decode position `j`: in
+/// [2, vocab) — ids 0 (PAD) and 1 (EOS) stay reserved.
+fn sim_token(h: u64, j: usize, vocab: usize) -> i32 {
+    let mut x = h.wrapping_mul(j as u64 + 1).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 29;
+    2 + (x % (vocab.max(3) as u64 - 2)) as i32
+}
+
+/// Precise simulated-device wait. Kernels round `thread::sleep` up to
+/// their timer quantum (~1 ms on some hosts), which would tax the
+/// continuous path's many sub-ms fused decode steps while leaving the
+/// batch path's few ~20 ms sleeps untouched — so coarse-sleep the bulk
+/// and yield-spin the final stretch.
+fn sim_sleep(ns: u64) {
+    if ns == 0 {
+        return;
+    }
+    let end = Instant::now() + Duration::from_nanos(ns);
+    loop {
+        let now = Instant::now();
+        if now >= end {
+            return;
+        }
+        let rem = end - now;
+        if rem > Duration::from_micros(1500) {
+            std::thread::sleep(rem - Duration::from_micros(1200));
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Deterministic stand-in monolithic decode: each output row derives
+/// from the row's non-padding prompt tokens only and ends at its
+/// hash-sampled EOS. Costs the full geometry — `batch_size x bucket`
+/// prefill plus all `dec_len` decode steps for every row, early exit
+/// or not — which is exactly what the split path's A/B measures
+/// against.
 fn sim_decode(spec: &SimSpec, enc: &[i32], bucket: usize) -> Vec<Vec<i32>> {
     let mut out = Vec::with_capacity(spec.batch_size);
     for row in enc.chunks(bucket) {
-        let used = row.iter().rposition(|&t| t != 0).map_or(0, |i| i + 1);
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for &t in &row[..used] {
-            h = (h ^ t as u32 as u64).wrapping_mul(0x0000_0100_0000_01b3);
-        }
-        let mut tokens = Vec::with_capacity(spec.dec_len);
-        for j in 0..spec.dec_len {
-            let mut x = h.wrapping_mul(j as u64 + 1).wrapping_add(0x9E37_79B9_7F4A_7C15);
-            x ^= x >> 29;
-            tokens.push((x % (spec.vocab_size.max(2) as u64 - 1)) as i32 + 1);
+        let h = sim_row_hash(row);
+        let gen_len = sim_gen_len(h, spec.dec_len);
+        let mut tokens = Vec::with_capacity(gen_len);
+        for j in 0..gen_len {
+            tokens.push(if j + 1 == gen_len { EOS } else { sim_token(h, j, spec.vocab_size) });
         }
         out.push(tokens);
     }
-    let ns = spec.token_ns.saturating_mul((spec.batch_size * bucket) as u64);
-    if ns > 0 {
-        std::thread::sleep(Duration::from_nanos(ns));
-    }
+    let prefill = spec.token_ns.saturating_mul((spec.batch_size * bucket) as u64);
+    let decode = (spec.dec_len as u64)
+        .saturating_mul(spec.dstep_ns + spec.dtoken_ns.saturating_mul(spec.batch_size as u64));
+    sim_sleep(prefill + decode);
     out
 }
 
-/// Replica loop: pop bucket-homogeneous jobs off the shared queue, pack
-/// at the (effective) bucket geometry, decode, and move each output row
-/// into its reply (no per-row clone).
+/// Truncate a decoded row at its first EOS (inclusive), aligning the
+/// monolithic path's output with what the continuous path actually
+/// generated before retiring the slot.
+fn truncate_at_eos(tokens: &mut Vec<i32>) {
+    if let Some(p) = tokens.iter().position(|&t| t == EOS) {
+        tokens.truncate(p + 1);
+    }
+}
+
+/// Replica entry: build the engine, then run whichever decode
+/// discipline it supports (continuous wants the split HLO pair; the
+/// batch-level loop works against every artifact).
 fn serve_replica(
     id: usize,
     spec: &EngineSpec,
@@ -528,40 +850,102 @@ fn serve_replica(
     opts: &ServerOptions,
 ) -> Result<ServerStats> {
     let mut engine = Engine::build(spec, opts)?;
-    let (batch_size, _enc_len) = engine.dims();
     let mut stats = ServerStats { replicas: 1, ..Default::default() };
-    loop {
-        // Hold the queue lock only for the pop; decode runs unlocked so
-        // other replicas pull the next job meanwhile.
-        let job = {
-            let queue = jobs.lock().map_err(|_| anyhow!("job queue poisoned"))?;
-            match queue.recv() {
-                Ok(job) => job,
-                Err(_) => break, // router gone and queue drained
+    if opts.continuous && engine.supports_continuous() {
+        serve_continuous(id, &mut engine, jobs, opts, &mut stats)?;
+    } else {
+        serve_batches(id, &mut engine, jobs, &mut stats)?;
+    }
+    Ok(stats)
+}
+
+/// Non-blocking / blocking pop off the shared job queue.
+enum Popped {
+    Job(BatchJob),
+    Empty,
+    Gone,
+}
+
+fn pop_job(
+    jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    block: bool,
+) -> Result<Popped> {
+    // Hold the queue lock only for the pop; decode runs unlocked so
+    // other replicas pull the next job meanwhile. (A blocking pop only
+    // happens when this replica is idle.)
+    if block {
+        let queue = jobs.lock().map_err(|_| anyhow!("job queue poisoned"))?;
+        match queue.recv() {
+            Ok(job) => Ok(Popped::Job(job)),
+            Err(_) => Ok(Popped::Gone),
+        }
+    } else {
+        // try_lock, not lock: an idle replica parks inside `recv`
+        // holding the mutex, and a replica with live slots must keep
+        // decoding rather than stall on that hold until the next job
+        // arrives.
+        let queue = match jobs.try_lock() {
+            Ok(q) => q,
+            Err(std::sync::TryLockError::WouldBlock) => return Ok(Popped::Empty),
+            Err(std::sync::TryLockError::Poisoned(_)) => {
+                return Err(anyhow!("job queue poisoned"))
             }
+        };
+        match queue.try_recv() {
+            Ok(job) => Ok(Popped::Job(job)),
+            Err(mpsc::TryRecvError::Empty) => Ok(Popped::Empty),
+            Err(mpsc::TryRecvError::Disconnected) => Ok(Popped::Gone),
+        }
+    }
+}
+
+/// Run-to-completion batch loop (§Perf L5, and the fallback when the
+/// artifact ships no split HLO): pop bucket-homogeneous jobs, pack at
+/// the (effective) bucket geometry into a reused scratch buffer,
+/// decode to full `dec_len`, and move each output row into its reply.
+fn serve_batches(
+    id: usize,
+    engine: &mut Engine,
+    jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    stats: &mut ServerStats,
+) -> Result<()> {
+    let (batch_size, _enc_len) = engine.dims();
+    // Packing scratch reused across every batch on this hot path: the
+    // fresh-allocation-per-batch version showed up in router/replica
+    // profiles once decode itself got cheap.
+    let mut enc_scratch: Vec<i32> = Vec::new();
+    let mut trunc_scratch: Vec<bool> = Vec::new();
+    loop {
+        let job = match pop_job(jobs, true)? {
+            Popped::Job(job) => job,
+            _ => break, // router gone and queue drained
         };
         let fill = job.requests.len();
         let bucket = engine.effective_bucket(job.bucket);
-        let (enc, truncated) = {
+        {
             let rows: Vec<&[i32]> =
                 job.requests.iter().map(|a| a.req.enc_tokens.as_slice()).collect();
-            pack_requests(&rows, batch_size, bucket)
-        };
-        let decoded = engine.decode(&enc, bucket)?;
+            pack_requests_into(&rows, batch_size, bucket, &mut enc_scratch, &mut trunc_scratch);
+        }
+        let decoded = engine.decode(&enc_scratch, bucket)?;
         let mut decoded = decoded.into_iter();
         for (i, admitted) in job.requests.into_iter().enumerate() {
             let req = admitted.req;
             let latency = req.t0.elapsed();
-            stats.prompt_tokens += req.enc_tokens.len().min(bucket);
-            stats.latency.record(latency.as_secs_f64() * 1e3);
-            if truncated[i] {
-                stats.truncated += 1;
-            }
+            let mut tokens = decoded.next().unwrap_or_default();
+            truncate_at_eos(&mut tokens);
+            stats.note_response(
+                latency,
+                tokens.len(),
+                0, // monolithic decode ran the full dec_len regardless
+                req.enc_tokens.len().min(bucket),
+                trunc_scratch[i],
+            );
             let _ = req.reply.send(Response {
-                tokens: decoded.next().unwrap_or_default(),
+                tokens,
                 latency,
                 batch_fill: fill,
-                truncated: truncated[i],
+                truncated: trunc_scratch[i],
                 bucket,
                 replica: id,
             });
@@ -571,7 +955,158 @@ fn serve_replica(
         stats.total_fill += fill;
         stats.executed_tokens += batch_size * bucket;
     }
-    Ok(stats)
+    Ok(())
+}
+
+/// A request occupying a decode slot.
+struct Active {
+    req: Request,
+    tokens: Vec<i32>,
+    bucket: usize,
+    fill: usize,
+    truncated: bool,
+    prompt_len: usize,
+}
+
+/// Slot-based continuous batching (§Perf L6): between fused
+/// `decode_token` iterations the scheduler admits pending requests
+/// into free slots (one batched prefill per same-bucket group) and
+/// retires slots the moment they emit EOS or hit `dec_len`.
+fn serve_continuous(
+    id: usize,
+    engine: &mut Engine,
+    jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    opts: &ServerOptions,
+    stats: &mut ServerStats,
+) -> Result<()> {
+    let (batch_size, _enc_len) = engine.dims();
+    let dec_len = engine.dec_len();
+    let slots_n = if opts.slots > 0 { opts.slots } else { batch_size };
+    let mut state = engine.init_slots(slots_n)?;
+    let mut active: Vec<Option<Active>> = (0..slots_n).map(|_| None).collect();
+    let mut pending: VecDeque<(usize, Admitted)> = VecDeque::new();
+    let mut router_gone = false;
+    let mut enc_scratch: Vec<i32> = Vec::new();
+    let mut trunc_scratch: Vec<bool> = Vec::new();
+    loop {
+        let n_live = active.iter().filter(|s| s.is_some()).count();
+
+        // Pull new work: block when fully idle (nothing to decode),
+        // poll otherwise so in-flight slots keep stepping.
+        if !router_gone {
+            if n_live == 0 && pending.is_empty() {
+                match pop_job(jobs, true)? {
+                    Popped::Job(job) => stash(&mut pending, job),
+                    _ => router_gone = true,
+                }
+            }
+            while pending.len() < slots_n && !router_gone {
+                match pop_job(jobs, false)? {
+                    Popped::Job(job) => stash(&mut pending, job),
+                    Popped::Empty => break,
+                    Popped::Gone => router_gone = true,
+                }
+            }
+        }
+
+        // Admit pending requests into free slots, one batched prefill
+        // per same-bucket run (bounded by the prefill geometry).
+        let mut free: VecDeque<usize> = active
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| i)
+            .collect();
+        while !free.is_empty() && !pending.is_empty() {
+            let bucket = pending.front().expect("non-empty pending").0;
+            let eff = engine.effective_prefill_bucket(bucket);
+            let mut group: Vec<Admitted> = Vec::new();
+            let mut slot_ids: Vec<usize> = Vec::new();
+            while group.len() < batch_size.min(free.len() + group.len()) {
+                match pending.front() {
+                    Some((b, _)) if *b == bucket => {}
+                    _ => break,
+                }
+                let (_, admitted) = pending.pop_front().expect("front present");
+                slot_ids.push(free.pop_front().expect("free slot"));
+                group.push(admitted);
+            }
+            if group.is_empty() {
+                break; // no free capacity for this bucket run
+            }
+            {
+                let rows: Vec<&[i32]> =
+                    group.iter().map(|a| a.req.enc_tokens.as_slice()).collect();
+                pack_requests_into(&rows, rows.len(), eff, &mut enc_scratch, &mut trunc_scratch);
+            }
+            engine.prefill(&mut state, &enc_scratch, eff, &slot_ids)?;
+            stats.prefills += 1;
+            stats.batches += 1;
+            stats.total_fill += group.len();
+            stats.executed_tokens += group.len() * eff;
+            for (i, admitted) in group.into_iter().enumerate() {
+                let prompt_len = admitted.req.enc_tokens.len().min(eff);
+                active[slot_ids[i]] = Some(Active {
+                    req: admitted.req,
+                    tokens: Vec::with_capacity(dec_len),
+                    bucket: eff,
+                    fill: slot_ids.len(),
+                    truncated: trunc_scratch[i],
+                    prompt_len,
+                });
+            }
+        }
+
+        let n_live = active.iter().filter(|s| s.is_some()).count();
+        if n_live == 0 {
+            if router_gone && pending.is_empty() {
+                break; // drained
+            }
+            continue;
+        }
+
+        // One fused decode iteration over the whole slot geometry.
+        let live: Vec<bool> = active.iter().map(|s| s.is_some()).collect();
+        let tokens = engine.decode_token(&mut state, &live)?;
+        stats.decode_steps += 1;
+        stats.occupancy.record(n_live);
+        for (s, slot) in active.iter_mut().enumerate() {
+            let Some(act) = slot.as_mut() else { continue };
+            act.tokens.push(tokens[s]);
+            let done = tokens[s] == EOS || act.tokens.len() >= dec_len;
+            if !done {
+                continue;
+            }
+            let act = slot.take().expect("live slot");
+            let latency = act.req.t0.elapsed();
+            stats.note_response(
+                latency,
+                act.tokens.len(),
+                dec_len - act.tokens.len(), // early-exit savings
+                act.prompt_len,
+                act.truncated,
+            );
+            stats.requests += 1;
+            let _ = act.req.reply.send(Response {
+                tokens: act.tokens,
+                latency,
+                batch_fill: act.fill,
+                truncated: act.truncated,
+                bucket: act.bucket,
+                replica: id,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Unpack a router job into the replica's pending queue, keeping the
+/// job's bucket tag per request (admission regroups by bucket).
+fn stash(pending: &mut VecDeque<(usize, Admitted)>, job: BatchJob) {
+    let BatchJob { bucket, requests } = job;
+    for admitted in requests {
+        pending.push_back((bucket, admitted));
+    }
 }
 
 /// Pack request token rows into a fixed (batch_size, len) geometry:
@@ -583,19 +1118,51 @@ pub fn pack_requests(
     batch_size: usize,
     len: usize,
 ) -> (Vec<i32>, Vec<bool>) {
-    let mut enc = vec![0i32; batch_size * len];
-    let mut truncated = vec![false; rows.len()];
+    let mut enc = Vec::new();
+    let mut truncated = Vec::new();
+    pack_requests_into(rows, batch_size, len, &mut enc, &mut truncated);
+    (enc, truncated)
+}
+
+/// `pack_requests` into caller-provided scratch buffers, so the
+/// replica hot loop reuses one allocation across every batch instead
+/// of building a fresh padded matrix per job. The scratch is cleared
+/// and zero-filled to the new geometry on every call — no stale tokens
+/// survive a reuse at a different shape.
+pub fn pack_requests_into(
+    rows: &[&[i32]],
+    batch_size: usize,
+    len: usize,
+    enc: &mut Vec<i32>,
+    truncated: &mut Vec<bool>,
+) {
+    enc.clear();
+    enc.resize(batch_size * len, 0);
+    truncated.clear();
+    truncated.resize(rows.len(), false);
     for (i, row) in rows.iter().take(batch_size).enumerate() {
         let n = row.len().min(len);
         enc[i * len..i * len + n].copy_from_slice(&row[..n]);
         truncated[i] = row.len() > len;
     }
-    (enc, truncated)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn quiet_spec() -> SimSpec {
+        SimSpec {
+            batch_size: 2,
+            enc_len: 32,
+            dec_len: 6,
+            vocab_size: 97,
+            token_ns: 0,
+            dtoken_ns: 0,
+            dstep_ns: 0,
+            split_decode: true,
+        }
+    }
 
     #[test]
     fn pack_requests_pads_and_flags_truncation() {
@@ -635,9 +1202,35 @@ mod tests {
         assert_eq!(truncated, vec![false]);
     }
 
+    /// Reusing one scratch across geometry changes must behave exactly
+    /// like a fresh allocation: no stale tokens from a previous (and
+    /// larger) batch may leak into the next packing.
+    #[test]
+    fn pack_scratch_reuse_leaves_no_stale_data() {
+        let mut enc = Vec::new();
+        let mut trunc = Vec::new();
+        let big = vec![7i32; 8];
+        let rows: Vec<&[i32]> = vec![&big, &big, &big];
+        pack_requests_into(&rows, 3, 8, &mut enc, &mut trunc);
+        assert_eq!(enc.len(), 24);
+        assert!(enc.iter().all(|&t| t == 7));
+
+        let small = vec![1i32, 2];
+        let rows: Vec<&[i32]> = vec![&small];
+        pack_requests_into(&rows, 2, 4, &mut enc, &mut trunc);
+        let (fresh, fresh_trunc) = pack_requests(&rows, 2, 4);
+        assert_eq!(enc, fresh, "reused scratch == fresh allocation");
+        assert_eq!(trunc, fresh_trunc);
+        assert_eq!(&enc[2..8], &[0, 0, 0, 0, 0, 0], "old 7s cleared");
+        // Growing again after shrinking also matches.
+        let rows: Vec<&[i32]> = vec![&big];
+        pack_requests_into(&rows, 2, 8, &mut enc, &mut trunc);
+        assert_eq!(enc, pack_requests(&rows, 2, 8).0);
+    }
+
     #[test]
     fn sim_decode_is_bucket_invariant_and_deterministic() {
-        let spec = SimSpec { batch_size: 2, enc_len: 32, dec_len: 6, vocab_size: 97, token_ns: 0 };
+        let spec = quiet_spec();
         let prompt: Vec<i32> = vec![4, 9, 1, 7];
         let pad_to = |len: usize| {
             let mut v = prompt.clone();
@@ -651,12 +1244,68 @@ mod tests {
         let a = sim_decode(&spec, &small, 8);
         let b = sim_decode(&spec, &full, 32);
         assert_eq!(a, b, "output depends only on the unpadded prompt");
-        assert_eq!(a[0].len(), 6);
-        assert!(a[0].iter().all(|&t| t >= 1 && (t as usize) < 97));
+        assert!(!a[0].is_empty() && a[0].len() <= spec.dec_len);
+        assert_eq!(*a[0].last().unwrap(), EOS, "rows end at their sampled EOS");
+        assert!(a[0][..a[0].len() - 1]
+            .iter()
+            .all(|&t| t >= 2 && (t as usize) < 97), "non-final tokens stay off PAD/EOS");
         // Different prompts decode differently (not a constant).
         let mut other = vec![5i32, 5, 5, 0, 0, 0, 0, 0];
         other.extend(pad_to(8));
         assert_ne!(sim_decode(&spec, &other, 8)[0], a[0]);
+    }
+
+    /// The slot-based stream must equal the monolithic row token for
+    /// token: prefill one row, step `decode_token` to EOS, compare.
+    #[test]
+    fn sim_slot_stream_matches_monolithic_rows() {
+        let spec = quiet_spec();
+        let mut engine = Engine::Sim(spec.clone());
+        let mut state = engine.init_slots(3).unwrap();
+        let prompt = vec![11i32, 3, 5, 0, 0, 0, 0, 0];
+        engine.prefill(&mut state, &prompt, 8, &[1]).unwrap();
+        let mut live = vec![false, true, false];
+        let mut stream = Vec::new();
+        for _ in 0..spec.dec_len {
+            let toks = engine.decode_token(&mut state, &live).unwrap();
+            stream.push(toks[1]);
+            if toks[1] == EOS {
+                live[1] = false;
+                break;
+            }
+        }
+        let mut batch = prompt.clone();
+        batch.extend(vec![0i32; 8]);
+        let rows = sim_decode(&spec, &batch, 8);
+        assert_eq!(stream, rows[0], "per-token stream == monolithic row");
+        assert_eq!(*stream.last().unwrap(), EOS);
+    }
+
+    #[test]
+    fn sim_gen_lengths_cover_the_range() {
+        // EOS-distributed lengths: over many prompts the sampled
+        // generation lengths must span [1, dec_len], not collapse.
+        let dec_len = 8;
+        let mut seen = std::collections::BTreeSet::new();
+        for p in 0..200u64 {
+            let h = sim_row_hash(&[(p as i32) + 1, 7, 9]);
+            let g = sim_gen_len(h, dec_len);
+            assert!((1..=dec_len).contains(&g));
+            seen.insert(g);
+        }
+        assert!(seen.len() >= dec_len / 2, "lengths too concentrated: {seen:?}");
+    }
+
+    #[test]
+    fn truncate_at_eos_is_inclusive_and_idempotent() {
+        let mut row = vec![5, 9, EOS, 7, 8];
+        truncate_at_eos(&mut row);
+        assert_eq!(row, vec![5, 9, EOS]);
+        truncate_at_eos(&mut row);
+        assert_eq!(row, vec![5, 9, EOS]);
+        let mut none = vec![5, 9, 7];
+        truncate_at_eos(&mut none);
+        assert_eq!(none, vec![5, 9, 7], "no EOS: row untouched");
     }
 
     #[test]
@@ -682,15 +1331,26 @@ mod tests {
             prompt_tokens: 10,
             executed_tokens: 36,
             truncated: 0,
+            tokens_generated: 30,
+            tokens_saved: 10,
+            decode_steps: 5,
+            prefills: 2,
             ..Default::default()
         };
         b.latency.record(10.0);
         b.latency.record(20.0);
+        b.occupancy.record(4);
         a.merge(&b);
         assert_eq!(a.requests, 6);
         assert_eq!(a.batches, 3);
         assert_eq!(a.replicas, 2);
         assert_eq!(a.truncated, 1);
+        assert_eq!(a.tokens_generated, 30);
+        assert_eq!(a.tokens_saved, 10);
+        assert_eq!(a.decode_steps, 5);
+        assert_eq!(a.prefills, 2);
+        assert!((a.early_exit_ratio() - 0.25).abs() < 1e-12);
+        assert_eq!(a.occupancy.steps(), 1);
         assert_eq!(a.latency_count(), 6);
         assert!((a.waste_ratio() - 0.5).abs() < 1e-12, "50/100 executed tokens were padding");
         // Log-bucketed estimates: within the histogram's ~9% error.
@@ -700,5 +1360,23 @@ mod tests {
         assert!((p100 - 20.0).abs() / 20.0 < 0.10, "p100={p100}");
         assert_eq!(ServerStats::default().waste_ratio(), 0.0);
         assert_eq!(ServerStats::default().p99_ms(), 0.0);
+        assert_eq!(ServerStats::default().early_exit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn note_response_accounting() {
+        let mut s = ServerStats::default();
+        s.note_response(Duration::from_millis(10), 5, 3, 7, true);
+        assert_eq!(s.tokens_generated, 5);
+        assert_eq!(s.tokens_saved, 3);
+        assert_eq!(s.prompt_tokens, 7);
+        assert_eq!(s.truncated, 1);
+        assert_eq!(s.latency_count(), 1);
+        assert_eq!(s.token_latency.count(), 1);
+        let per_tok = s.token_ms();
+        assert!((per_tok - 2.0).abs() / 2.0 < 0.10, "10ms/5tok ~ 2ms: {per_tok}");
+        // Zero generated tokens must not divide by zero.
+        s.note_response(Duration::from_millis(1), 0, 0, 0, false);
+        assert_eq!(s.token_latency.count(), 2);
     }
 }

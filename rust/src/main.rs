@@ -5,7 +5,8 @@
 //!   finetune    --artifact <name> --task glue|superglue|squad|triviaqa
 //!               --ckpt <pretrained> --steps N
 //!   eval        --artifact <name> [--ckpt path] --batches N [--task t]
-//!   serve       --artifact <name> [--ckpt path] --requests N
+//!   serve       --artifact <name> [--ckpt path] [--slots S] [--no-cont]
+//!               [--queue-cap N] --requests N
 //!   params      [--size S|B|L|XL] — analytic parameter table
 //!   latency     --artifact <name> [--kind forward|train_step]
 //!   bench-table <fig4|tab1|tab2|tab3|tab4|tab6|tab7|fig5|bert> [--quick]
@@ -194,12 +195,16 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.get("artifact").context("--artifact required")?.to_string();
+    let defaults = ServerOptions::default();
     let opts = ServerOptions {
         batch_window: std::time::Duration::from_millis(args.u64_or("window-ms", 5)),
         seed: args.u64_or("seed", 0),
         checkpoint: args.get("ckpt").map(Into::into),
-        replicas: args.usize_or("replicas", ServerOptions::default().replicas),
-        bucketed: !args.has("no-buckets") && ServerOptions::default().bucketed,
+        replicas: args.usize_or("replicas", defaults.replicas),
+        bucketed: !args.has("no-buckets") && defaults.bucketed,
+        slots: args.usize_or("slots", defaults.slots),
+        continuous: !args.has("no-cont") && defaults.continuous,
+        queue_cap: args.usize_or("queue-cap", defaults.queue_cap),
     };
     let n = args.usize_or("requests", 64);
     let server = ServerHandle::spawn(&name, opts);

@@ -38,6 +38,17 @@ pub struct BatchInputSpec {
     pub shape: Vec<usize>,
 }
 
+/// A decode-state slot for the split-decode serving path: like an opt
+/// slot but dtype-carrying — KV caches are f32 while decoder position
+/// / last-token slots are i32, and the runtime must allocate each
+/// buffer with the dtype the HLO expects.
+#[derive(Debug, Clone)]
+pub struct DecodeStateSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
 /// Parsed meta.json + paths of the HLO files.
 #[derive(Debug, Clone)]
 pub struct Artifact {
@@ -47,6 +58,12 @@ pub struct Artifact {
     pub raw_config: Json,
     pub params: Vec<ParamSpec>,
     pub opt_state: Vec<OptSlotSpec>,
+    /// Per-slot decode-state slots (KV caches, decoder position, last
+    /// token) for the split `prefill@<bucket>` / `decode_token`
+    /// serving path. Shapes are per-request; the runtime prepends the
+    /// slot dimension. Optional — absent from artifacts that only ship
+    /// the monolithic `decode_step`.
+    pub decode_state: Vec<DecodeStateSpec>,
     pub batch_inputs: Vec<BatchInputSpec>,
     pub hlo_files: Vec<(String, PathBuf)>,
     pub param_count_total: usize,
@@ -103,6 +120,23 @@ impl Artifact {
             });
         }
 
+        let mut decode_state = Vec::new();
+        if let Some(slots) = meta.get("decode_state").as_arr() {
+            for o in slots {
+                decode_state.push(DecodeStateSpec {
+                    name: o.get("name").as_str().context("decode_state name")?.to_string(),
+                    shape: o
+                        .get("shape")
+                        .as_arr()
+                        .context("decode_state shape")?
+                        .iter()
+                        .map(|v| v.as_usize().unwrap_or(0))
+                        .collect(),
+                    dtype: DType::from_str(o.get("dtype").as_str().unwrap_or("f32"))?,
+                });
+            }
+        }
+
         let mut batch_inputs = Vec::new();
         for b in meta.get("batch_inputs").as_arr().context("meta.batch_inputs")? {
             batch_inputs.push(BatchInputSpec {
@@ -135,6 +169,7 @@ impl Artifact {
             raw_config,
             params,
             opt_state,
+            decode_state,
             batch_inputs,
             hlo_files,
             param_count_total: meta.get("param_count").get("total").as_usize().unwrap_or(0),
@@ -198,6 +233,10 @@ mod tests {
             {"name":"a/w@vc","shape":[16],"dtype":"f32"},
             {"name":"b/g@v","shape":[2],"dtype":"f32"}
           ],
+          "decode_state": [
+            {"name":"enc_kv","shape":[8,8],"dtype":"f32"},
+            {"name":"pos","shape":[],"dtype":"i32"}
+          ],
           "batch_inputs": [
             {"name":"enc_tokens","shape":[2,8],"dtype":"i32"}
           ],
@@ -215,6 +254,10 @@ mod tests {
         let a = Artifact::load(&tmp).unwrap();
         assert_eq!(a.params.len(), 2);
         assert_eq!(a.opt_state.len(), 3);
+        assert_eq!(a.decode_state.len(), 2);
+        assert_eq!(a.decode_state[0].shape, vec![8, 8]);
+        assert_eq!(a.decode_state[0].dtype, DType::F32);
+        assert_eq!(a.decode_state[1].dtype, DType::I32, "dtype honored, not assumed f32");
         assert_eq!(a.param_elems(), 8 * 16 + 2);
         assert_eq!(a.config.d_model, 8);
         assert!(a.has("train_step"));

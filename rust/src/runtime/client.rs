@@ -120,4 +120,28 @@ impl Executable {
             Ok(elems)
         }
     }
+
+    /// Execute with a borrowed prefix (`shared`, e.g. the device-
+    /// resident parameter cache) followed by consumed inputs
+    /// (`donated`), in that argument order. The donated buffers are the
+    /// step's state operands (KV caches, per-token scratch): the HLO is
+    /// lowered with input/output aliasing on them, so a real PJRT
+    /// backend reuses their device memory for the matching outputs
+    /// instead of allocating a second copy per token — the iteration-
+    /// level decode loop would otherwise double its cache footprint
+    /// every step. Host-side the contract is enforced by moving the
+    /// buffers in: they are dropped (freed) when the call returns and
+    /// cannot be reused by the caller.
+    pub fn run_buffers_donating(
+        &self,
+        shared: &[&xla::PjRtBuffer],
+        donated: Vec<xla::PjRtBuffer>,
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let refs: Vec<&xla::PjRtBuffer> =
+            shared.iter().copied().chain(donated.iter()).collect();
+        let out = self.run_buffers(&refs);
+        drop(refs);
+        drop(donated); // aliased memory is owned by the outputs now
+        out
+    }
 }

@@ -220,6 +220,7 @@ pub(crate) mod tests {
                 OptSlotSpec { name: "a/w@vc".into(), shape: vec![16] },
                 OptSlotSpec { name: "b/s@v".into(), shape: vec![8] },
             ],
+            decode_state: vec![],
             batch_inputs: vec![BatchInputSpec { name: "enc".into(), shape: vec![2, 8] }],
             hlo_files: vec![],
             param_count_total: 4 + 128 + 8,

@@ -111,7 +111,9 @@ fn server_batches_and_replies() {
     assert_eq!(stats.requests, 12);
     assert!(stats.batches <= 12);
     for r in &responses {
-        assert_eq!(r.tokens.len(), 32); // micro dec_len
+        // Rows are EOS-truncated (inclusive) since §Perf L6; 32 is the
+        // micro dec_len ceiling.
+        assert!(!r.tokens.is_empty() && r.tokens.len() <= 32);
         assert!(r.batch_fill >= 1);
         assert!(!r.truncated, "in-budget prompts must not be flagged truncated");
     }

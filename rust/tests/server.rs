@@ -1,33 +1,56 @@
 //! Serving-stack integration tests that need no PJRT backend: the
-//! multi-replica router + shape-bucketed batching run against the
-//! deterministic sim engine, so scheduling, bucket parity, stats
-//! merging, and failure modes are exercised in every build. A
-//! real-artifact parity test rides along and skips gracefully when
-//! `make artifacts` hasn't run (or the backend cannot execute HLO).
+//! multi-replica router, shape-bucketed batching, and the slot-based
+//! continuous-batching scheduler run against the deterministic sim
+//! engine, so scheduling, bucket/split parity, EOS early-exit, stats
+//! merging, and failure modes are exercised in every build.
 
 use altup::coordinator::server::{
-    EngineSpec, Request, ServerHandle, ServerOptions, SimSpec,
+    EngineSpec, Request, ServerHandle, ServerOptions, ServerStats, SimSpec,
 };
+use altup::data::tokenizer::EOS;
 use altup::runtime::session::{bucket_for, bucket_lengths};
 use std::time::Duration;
 
 fn sim_spec() -> SimSpec {
-    // token_ns=0 keeps the scheduler tests fast; throughput behavior is
-    // covered by benches/server_throughput.rs.
-    SimSpec { batch_size: 4, enc_len: 64, dec_len: 8, vocab_size: 211, token_ns: 0 }
-}
-
-fn opts(replicas: usize, bucketed: bool) -> ServerOptions {
-    ServerOptions {
-        batch_window: Duration::from_millis(2),
-        replicas,
-        bucketed,
-        ..Default::default()
+    // Zero cost knobs keep the scheduler tests fast; throughput
+    // behavior is covered by benches/server_throughput.rs.
+    SimSpec {
+        batch_size: 4,
+        enc_len: 64,
+        dec_len: 8,
+        vocab_size: 211,
+        token_ns: 0,
+        dtoken_ns: 0,
+        dstep_ns: 0,
+        split_decode: true,
     }
 }
 
+/// Batch-level (run-to-completion) options — the §Perf L5 discipline.
+fn opts(replicas: usize, bucketed: bool) -> ServerOptions {
+    ServerOptions {
+        batch_window: Duration::from_millis(2),
+        seed: 0,
+        checkpoint: None,
+        replicas,
+        bucketed,
+        slots: 0,
+        continuous: false,
+        queue_cap: 1024,
+    }
+}
+
+/// Continuous-batching options (§Perf L6).
+fn copts(replicas: usize, slots: usize) -> ServerOptions {
+    ServerOptions { continuous: true, slots, ..opts(replicas, true) }
+}
+
 fn prompt(len: usize) -> Vec<i32> {
-    (0..len).map(|i| (i % 200) as i32 + 1).collect()
+    (0..len).map(|i| (i % 200) as i32 + 2).collect()
+}
+
+fn collect(server: &ServerHandle, lens: &[usize]) -> Vec<Vec<i32>> {
+    lens.iter().map(|&l| server.infer(prompt(l)).unwrap().tokens).collect()
 }
 
 /// Decode the same prompts through bucketed serving and through
@@ -38,14 +61,78 @@ fn bucket_vs_full_length_decode_parity() {
     let lens = [1usize, 3, 8, 9, 15, 16, 17, 31, 32, 40, 63, 64, 80];
     let run = |bucketed: bool| -> Vec<Vec<i32>> {
         let server = ServerHandle::spawn_engine(EngineSpec::Sim(sim_spec()), opts(1, bucketed));
-        let out: Vec<Vec<i32>> =
-            lens.iter().map(|&l| server.infer(prompt(l)).unwrap().tokens).collect();
+        let out = collect(&server, &lens);
         server.shutdown().unwrap();
         out
     };
     let bucketed = run(true);
     let full = run(false);
     assert_eq!(bucketed, full, "tokens must not depend on the executed bucket");
+}
+
+/// The §Perf L6 acceptance contract: the split prefill + decode_token
+/// path produces exactly the rows the monolithic decode_step path
+/// produces, while actually early-exiting at EOS (fewer decode tokens
+/// executed) and reporting the new scheduler metrics.
+#[test]
+fn continuous_vs_batch_decode_parity_and_early_exit() {
+    let lens = [1usize, 3, 5, 8, 9, 15, 17, 21, 31, 33, 40, 63, 64, 80];
+    let run = |options: ServerOptions| -> (Vec<Vec<i32>>, ServerStats) {
+        let server = ServerHandle::spawn_engine(EngineSpec::Sim(sim_spec()), options);
+        let out = collect(&server, &lens);
+        (out, server.shutdown().unwrap())
+    };
+    let (cont_rows, cont) = run(copts(1, 4));
+    let (batch_rows, batch) = run(opts(1, true));
+    assert_eq!(cont_rows, batch_rows, "split and monolithic paths must emit identical rows");
+    for row in &cont_rows {
+        assert_eq!(*row.last().unwrap(), EOS, "every sim row ends at its EOS");
+        assert!(row.len() <= sim_spec().dec_len);
+    }
+    assert_eq!(cont.requests, lens.len());
+    assert_eq!(batch.requests, lens.len());
+    assert_eq!(cont.tokens_generated, batch.tokens_generated, "same tokens delivered");
+
+    // The continuous path actually scheduled at token granularity...
+    assert!(cont.decode_steps > 0, "fused decode iterations recorded");
+    assert!(cont.prefills > 0, "prefill groups recorded");
+    assert!(cont.occupancy.steps() as usize == cont.decode_steps);
+    assert!(cont.occupancy.mean() > 0.0 && cont.occupancy.mean() <= 4.0);
+    // ...and stopped paying for retired rows (EOS-sampled lengths make
+    // at least some rows shorter than dec_len).
+    assert!(cont.tokens_saved > 0, "early exit must save decode tokens");
+    assert!(cont.early_exit_ratio() > 0.0 && cont.early_exit_ratio() < 1.0);
+
+    // The batch-level path ran no fused iterations and saved nothing.
+    assert_eq!(batch.decode_steps, 0);
+    assert_eq!(batch.prefills, 0);
+    assert_eq!(batch.tokens_saved, 0);
+    // Per-token latency is recorded per request on both paths.
+    assert_eq!(cont.token_latency.count() as usize, lens.len());
+    assert_eq!(batch.token_latency.count() as usize, lens.len());
+}
+
+/// An engine without the split HLO pair must fall back cleanly to the
+/// batch-level loop even when continuous scheduling is requested —
+/// same outputs, no fused-step metrics.
+#[test]
+fn continuous_falls_back_without_split_hlo() {
+    let lens = [2usize, 9, 17, 40, 64];
+    let split = sim_spec();
+    let unsplit = SimSpec { split_decode: false, ..sim_spec() };
+    let run = |spec: SimSpec| -> (Vec<Vec<i32>>, ServerStats) {
+        let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), copts(1, 4));
+        let out = collect(&server, &lens);
+        (out, server.shutdown().unwrap())
+    };
+    let (rows_split, stats_split) = run(split);
+    let (rows_fallback, stats_fallback) = run(unsplit);
+    assert_eq!(rows_split, rows_fallback, "fallback must not change outputs");
+    assert!(stats_split.decode_steps > 0);
+    assert_eq!(stats_fallback.decode_steps, 0, "fallback ran the monolithic loop");
+    assert_eq!(stats_fallback.prefills, 0);
+    assert_eq!(stats_fallback.tokens_saved, 0);
+    assert_eq!(stats_fallback.requests, lens.len());
 }
 
 #[test]
@@ -95,15 +182,16 @@ fn over_length_prompts_still_flagged_truncated() {
 
 /// N replicas must produce exactly the same tokens as 1 replica for the
 /// same prompts (determinism), and shutdown must merge every replica's
-/// counters (sample count == request count, fills sum up).
+/// counters (sample count == request count, fills sum up). Runs the
+/// continuous scheduler — the default serving discipline.
 #[test]
 fn multi_replica_determinism_and_stats_merge() {
     let spec = sim_spec();
     let prompts: Vec<Vec<i32>> = (0..32).map(|i| prompt(1 + (i * 7) % 70)).collect();
 
-    let run = |replicas: usize| -> (Vec<Vec<i32>>, altup::coordinator::server::ServerStats) {
+    let run = |replicas: usize| -> (Vec<Vec<i32>>, ServerStats) {
         let server =
-            ServerHandle::spawn_engine(EngineSpec::Sim(spec.clone()), opts(replicas, true));
+            ServerHandle::spawn_engine(EngineSpec::Sim(spec.clone()), copts(replicas, 4));
         // Submit from 4 concurrent client threads to exercise batching
         // across replicas, then collect in a stable order.
         let mut joins = Vec::new();
@@ -154,6 +242,7 @@ fn multi_replica_determinism_and_stats_merge() {
         assert!(stats.batches >= 1 && stats.batches <= prompts.len());
         assert!(stats.p95_ms() >= stats.p50_ms());
         assert!(stats.executed_tokens >= stats.prompt_tokens);
+        assert!(stats.decode_steps > 0, "continuous path exercised");
     }
     assert_eq!(stats_one.replicas, 1);
     assert_eq!(stats_three.replicas, 3);
@@ -179,12 +268,99 @@ fn bucket_ladder_is_monotone_per_request() {
     // ladder and always fit the prompt.
     let spec = sim_spec();
     let ladder = bucket_lengths(spec.enc_len);
-    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec.clone()), opts(2, true));
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec.clone()), copts(2, 4));
     for len in [1usize, 7, 8, 9, 30, 33, 64, 100] {
         let r = server.infer(prompt(len)).unwrap();
         assert!(ladder.contains(&r.bucket), "bucket {} for len {len}", r.bucket);
         assert!(r.bucket >= len.min(spec.enc_len));
-        assert_eq!(r.tokens.len(), spec.dec_len);
+        assert!(!r.tokens.is_empty() && r.tokens.len() <= spec.dec_len);
+        assert_eq!(*r.tokens.last().unwrap(), EOS);
     }
     server.shutdown().unwrap();
+}
+
+/// Satellite: reported latency must include time a backpressured
+/// request spends blocked in the bounded request channel. With
+/// batch_size=1, one replica, a 1-deep request channel, and a ~20 ms
+/// decode, six concurrent requests serialize over ~120 ms; most of a
+/// late request's life is spent blocked in `send`. Because the latency
+/// clock starts at `Request::new` (before the blocking send), the
+/// slowest observed latency must reflect several decode rounds — if
+/// the clock started at router admission it would only ever see
+/// roughly one round's worth.
+#[test]
+fn backpressured_infer_latency_includes_queue_time() {
+    let spec = SimSpec {
+        batch_size: 1,
+        enc_len: 16,
+        dec_len: 4,
+        vocab_size: 211,
+        token_ns: 0,
+        dtoken_ns: 0,
+        dstep_ns: 5_000_000, // 4 steps x 5 ms = 20 ms per monolithic batch
+        split_decode: false,
+    };
+    let options = ServerOptions {
+        batch_window: Duration::from_millis(0),
+        queue_cap: 1,
+        ..opts(1, true)
+    };
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), options);
+    let n = 6;
+    let mut joins = Vec::new();
+    for i in 0..n {
+        let sender = server.sender.clone();
+        joins.push(std::thread::spawn(move || {
+            let (tx, rx) = std::sync::mpsc::channel();
+            sender.send(Request::new(prompt(4 + i), tx)).unwrap();
+            rx.recv().unwrap().latency
+        }));
+    }
+    let latencies: Vec<Duration> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.latency_count() as usize, n);
+    let max = latencies.iter().max().unwrap();
+    assert!(
+        *max >= Duration::from_millis(50),
+        "queueing time missing from latency: max {max:?} over {latencies:?}"
+    );
+}
+
+/// Continuous scheduling keeps admitting while slots decode: with slow
+/// per-step decode and fast prefill, a server with more slots than
+/// batch_size reaches occupancy above one batch's fill.
+#[test]
+fn continuous_scheduler_overlaps_admission_and_decode() {
+    let spec = SimSpec {
+        batch_size: 2,
+        enc_len: 32,
+        dec_len: 16,
+        vocab_size: 211,
+        token_ns: 0,
+        dtoken_ns: 50_000,
+        dstep_ns: 200_000,
+        split_decode: true,
+    };
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), copts(1, 6));
+    let mut joins = Vec::new();
+    for i in 0..18 {
+        let sender = server.sender.clone();
+        joins.push(std::thread::spawn(move || {
+            let (tx, rx) = std::sync::mpsc::channel();
+            sender.send(Request::new(prompt(3 + (i * 5) % 28), tx)).unwrap();
+            rx.recv().unwrap()
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, 18);
+    assert!(stats.decode_steps > 0);
+    assert!(
+        stats.occupancy.mean() > 1.0,
+        "slots should host multiple concurrent requests: {:.2}",
+        stats.occupancy.mean()
+    );
+    assert!(stats.occupancy.mean() <= 6.0);
 }
