@@ -4,6 +4,7 @@
 //!
 //!     cargo run --release --example serve_demo -- [--clients 4]
 //!                [--requests 32] [--artifact micro-altup]
+//!                [--timeout-ms T] [--restarts N]
 
 use altup::coordinator::server::{ServerHandle, ServerOptions};
 use altup::data::tasks::{Task, TaskKind};
@@ -27,6 +28,7 @@ fn main() -> anyhow::Result<()> {
         cfg.batch_size, cfg.enc_len
     );
 
+    let defaults = ServerOptions::default();
     let server = ServerHandle::spawn(
         &name,
         ServerOptions {
@@ -35,8 +37,14 @@ fn main() -> anyhow::Result<()> {
             slots: args.usize_or("slots", 0),
             // Compose with the ALTUP_NO_CONT_BATCH env default, same
             // as `altup serve`.
-            continuous: !args.has("no-cont") && ServerOptions::default().continuous,
-            ..Default::default()
+            continuous: !args.has("no-cont") && defaults.continuous,
+            // 0 falls through to the ALTUP_REQUEST_TIMEOUT_MS default.
+            request_timeout_ms: match args.u64_or("timeout-ms", 0) {
+                0 => defaults.request_timeout_ms,
+                ms => Some(ms),
+            },
+            replica_restarts: args.usize_or("restarts", defaults.replica_restarts),
+            ..defaults
         },
     );
 
@@ -49,21 +57,31 @@ fn main() -> anyhow::Result<()> {
         handles.push(std::thread::spawn(move || {
             let task = Task::new(TaskKind::Squad, vocab, c as u64 + 1);
             let mut latencies = Vec::new();
+            let mut failed = 0usize;
             for i in 0..per_client {
                 let ex = task.example(i as u64, enc_len - 2);
                 let (tx, rx) = std::sync::mpsc::channel();
                 sender
                     .send(altup::coordinator::server::Request::new(ex.enc, tx))
                     .unwrap();
+                // §L7: every admitted request gets a terminal response
+                // — tokens, or an explicit failure (deadline shed /
+                // retries exhausted).
                 let resp = rx.recv().unwrap();
-                latencies.push(resp.latency);
+                match resp.failure {
+                    Some(_) => failed += 1,
+                    None => latencies.push(resp.latency),
+                }
             }
-            latencies
+            (latencies, failed)
         }));
     }
     let mut all = Vec::new();
+    let mut failed = 0usize;
     for h in handles {
-        all.extend(h.join().unwrap());
+        let (lat, f) = h.join().unwrap();
+        all.extend(lat);
+        failed += f;
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.shutdown()?;
@@ -71,7 +89,10 @@ fn main() -> anyhow::Result<()> {
 
     let total = clients * per_client;
     println!("\n=== serve_demo summary ===");
-    println!("throughput:  {:.1} req/s ({total} requests in {wall:.2}s)", total as f64 / wall);
+    println!(
+        "throughput:  {:.1} req/s ({total} requests, {failed} failed, in {wall:.2}s)",
+        total as f64 / wall
+    );
     println!("latency:     {}", s.report());
     println!(
         "batching:    {} batches, mean fill {:.2}/{}",
@@ -103,5 +124,9 @@ fn main() -> anyhow::Result<()> {
             stats.token_ms()
         );
     }
+    println!(
+        "lifecycle:   {} shed / {} retried / {} restarts / {} failed / {} drained",
+        stats.sheds, stats.retries, stats.restarts, stats.failed, stats.drained
+    );
     Ok(())
 }

@@ -4,7 +4,11 @@ Mirrors the Rust serving bench 1:1 — same SplitMix64 workload stream
 (prompt lengths AND token values, so the hash-sampled EOS positions
 match bit-for-bit), same bucket ladder (`runtime::session::bucket_for`),
 same router policy (group by bucket, flush on full batch or expired
-window), same replica-pool semantics, and the same sim cost model:
+window), same replica-pool semantics, the same sim cost model, and the
+same §L7 fault model (deterministic replica kill by engine-call count,
+supervisor requeue of the crashed replica's in-flight requests with a
+bounded per-request retry budget, replacement respawn within a restart
+budget, terminal responses for every request):
 
 - monolithic `decode_step` batch: ``token_ns * batch_size * bucket``
   prefill plus ``dec_len * (dstep_ns + dtoken_ns * batch_size)`` decode
@@ -12,13 +16,16 @@ window), same replica-pool semantics, and the same sim cost model:
 - split path: per admission group ``dstep_ns + token_ns * rows *
   bucket`` (varlen-style prefill), per fused decode iteration
   ``dstep_ns + dtoken_ns * slots`` over the static slot geometry, rows
-  retiring at their sampled EOS.
+  retiring at their sampled EOS;
+- degraded A/B: cont x4 with one replica killed mid-run vs the healthy
+  cont x4 — the acceptance bar is degraded QPS >= 65% of healthy.
 
 This lets the serving-policy numbers (continuous vs batch QPS, p95,
-early-exit savings, occupancy) be measured on machines without a cargo
-toolchain or a PJRT backend. The Rust bench is the canonical producer
-of BENCH_server_throughput.json; running it overwrites this twin's
-output (the ``producer`` field records which one wrote the file).
+early-exit savings, occupancy, degraded-mode QPS) be measured on
+machines without a cargo toolchain or a PJRT backend. The Rust bench is
+the canonical producer of BENCH_server_throughput.json; running it
+overwrites this twin's output (the ``producer`` field records which one
+wrote the file).
 
 Usage: python3 python/tools/server_throughput_twin.py [out.json]
 """
@@ -43,6 +50,10 @@ WINDOW_S = 0.002
 REQUESTS = 384
 CLIENTS = 32
 MIN_BUCKET = 8
+MAX_RETRIES = 2    # ServerOptions::max_retries default
+RESTARTS = 2       # ALTUP_REPLICA_RESTARTS default
+KILL_REPLICA = 1   # degraded A/B: which replica the fault kills
+KILL_AFTER = 40    # ...on which engine call (mirrors bench --kill-after)
 
 
 class Rng:
@@ -133,6 +144,11 @@ def percentile(samples, p):
     return v[min(idx, len(v) - 1)]
 
 
+class InjectedKill(Exception):
+    """The deterministic replica-kill fault (mirrors the sim engine's
+    injected panic)."""
+
+
 class Stats:
     def __init__(self):
         self.requests = 0
@@ -144,6 +160,10 @@ class Stats:
         self.tokens_saved = 0
         self.decode_steps = 0
         self.occupancy_sum = 0
+        self.sheds = 0
+        self.retries = 0
+        self.restarts = 0
+        self.failed = 0
         self.latency_ms = []
         self.token_ms = []
         self.lock = threading.Lock()
@@ -171,191 +191,327 @@ class Stats:
         self.prompt_tokens += prompt
         self.requests += 1
 
+    def note_failure(self):
+        self.failed += 1
 
-def run_config(workload, replicas, bucketed, continuous, slots=0):
+
+def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None):
+    """One serving configuration. Request record (mirrors the Rust
+    Admitted/ledger entry): (t0, admitted, reply, length, gen_len,
+    attempts). ``fault`` mirrors FaultSpec: {"kill_replica": id,
+    "kill_after_calls": n} — the matching replica raises InjectedKill on
+    that engine call; the router requeues its in-flight requests
+    (bounded by MAX_RETRIES) and respawns a replacement (bounded by
+    RESTARTS). Every request gets a terminal reply: True (tokens) or
+    False (explicit failure)."""
     req_q = queue.Queue()
-    # Bounded job queue = backpressure, mirroring the Rust router: full
-    # groups ship with a blocking put; due-but-partial groups ship
-    # best-effort and otherwise keep accumulating while replicas are
-    # busy.
+    # Bounded job queue = backpressure, mirroring the Rust router: every
+    # ship is a try-put; a full queue parks the router briefly so the
+    # supervision pass is never starved.
     job_q = queue.Queue(maxsize=max(replicas, 1))
+    exit_q = queue.Queue()
     stats = Stats()
     n_clients = CLIENTS
     slots_n = slots if slots > 0 else BATCH_SIZE
+    state = {
+        "live": set(range(max(replicas, 1))),
+        "restarts_left": RESTARTS,
+        "next_id": max(replicas, 1),
+        "threads": [],
+        "stops_sent": False,
+    }
+
+    def make_bump(rid, calls_box):
+        def bump():
+            calls_box[0] += 1
+            if (
+                fault
+                and fault["kill_replica"] == rid
+                and calls_box[0] >= max(fault["kill_after_calls"], 1)
+            ):
+                raise InjectedKill(f"replica {rid} killed at engine call {calls_box[0]}")
+        return bump
+
+    def replica_batch(rid):
+        # Run-to-completion decode_step loop: full-geometry prefill plus
+        # every decode step for every row, early exit or not.
+        calls = [0]
+        bump = make_bump(rid, calls)
+        while True:
+            job = job_q.get()
+            if job is None:
+                exit_q.put(("exit", rid, []))
+                return
+            bucket, group = job
+            try:
+                bump()
+            except InjectedKill:
+                exit_q.put(("crash", rid, [(bucket, r) for r in group]))
+                return
+            nsleep(TOKEN_NS * BATCH_SIZE * bucket + DEC_LEN * (
+                DSTEP_NS + DTOKEN_NS * BATCH_SIZE
+            ))
+            now = time.monotonic()
+            with stats.lock:
+                stats.batches += 1
+                stats.total_fill += len(group)
+                stats.executed_tokens += BATCH_SIZE * bucket
+                for req in group:
+                    stats.note_response(now - req[0], req[4], 0, min(req[3], bucket))
+            for req in group:
+                req[2].put(True)
+
+    def replica_cont(rid):
+        # Slot-based continuous batching, mirroring serve_continuous;
+        # on an injected kill the in-flight ledger (pending + the group
+        # mid-prefill + active slots) is reported back for requeue.
+        calls = [0]
+        bump = make_bump(rid, calls)
+        pending = deque()          # (bucket, req)
+        active = [None] * slots_n  # [req, emitted, bucket]
+        admitting = []             # (bucket, req) group mid-prefill
+        router_gone = False
+
+        def stash(job):
+            bucket, group = job
+            for req in group:
+                pending.append((bucket, req))
+
+        try:
+            while True:
+                n_live = sum(1 for a in active if a is not None)
+                if not router_gone:
+                    if n_live == 0 and not pending:
+                        job = job_q.get()
+                        if job is None:
+                            router_gone = True
+                        else:
+                            stash(job)
+                    while len(pending) < slots_n and not router_gone:
+                        try:
+                            job = job_q.get_nowait()
+                        except queue.Empty:
+                            break
+                        if job is None:
+                            router_gone = True
+                        else:
+                            stash(job)
+                # Admit same-bucket runs into free slots.
+                free = deque(i for i, a in enumerate(active) if a is None)
+                while free and pending:
+                    bucket = pending[0][0]
+                    admitting = []
+                    ids = []
+                    while (
+                        pending
+                        and pending[0][0] == bucket
+                        and free
+                        and len(admitting) < BATCH_SIZE
+                    ):
+                        admitting.append(pending.popleft())
+                        ids.append(free.popleft())
+                    if not admitting:
+                        break
+                    bump()
+                    nsleep(DSTEP_NS + TOKEN_NS * len(admitting) * bucket)
+                    with stats.lock:
+                        stats.batches += 1
+                        stats.total_fill += len(admitting)
+                        stats.executed_tokens += len(admitting) * bucket
+                    for (b, req), sid in zip(admitting, ids):
+                        active[sid] = [req, 0, b]
+                    admitting = []
+                n_live = sum(1 for a in active if a is not None)
+                if n_live == 0:
+                    if router_gone and not pending:
+                        exit_q.put(("exit", rid, []))
+                        return
+                    continue
+                # One fused decode iteration over the whole slot geometry.
+                bump()
+                nsleep(DSTEP_NS + DTOKEN_NS * slots_n)
+                now = time.monotonic()
+                with stats.lock:
+                    stats.decode_steps += 1
+                    stats.occupancy_sum += n_live
+                for s, act in enumerate(active):
+                    if act is None:
+                        continue
+                    act[1] += 1
+                    req, emitted, bucket = act[0], act[1], act[2]
+                    if emitted >= req[4] or emitted >= DEC_LEN:
+                        active[s] = None
+                        with stats.lock:
+                            stats.note_response(
+                                now - req[0], emitted, DEC_LEN - emitted,
+                                min(req[3], bucket),
+                            )
+                        req[2].put(True)
+        except InjectedKill:
+            unfinished = list(pending) + list(admitting)
+            unfinished += [(act[2], act[0]) for act in active if act is not None]
+            exit_q.put(("crash", rid, unfinished))
+
+    target = replica_cont if continuous else replica_batch
+
+    def handle_exit(ev, groups):
+        kind, rid, unfinished = ev
+        state["live"].discard(rid)
+        if kind == "exit":
+            return
+        # Crash: requeue in-flight requests (bounded retries) unless the
+        # drain already closed the job queue, then respawn within budget.
+        for bucket, req in unfinished:
+            attempts = req[5] + 1
+            if state["stops_sent"] or attempts > MAX_RETRIES:
+                with stats.lock:
+                    stats.note_failure()
+                req[2].put(False)
+            else:
+                with stats.lock:
+                    stats.retries += 1
+                groups.setdefault(bucket, []).append(
+                    (req[0], time.monotonic(), req[2], req[3], req[4], attempts)
+                )
+        if not state["stops_sent"] and state["restarts_left"] > 0:
+            state["restarts_left"] -= 1
+            with stats.lock:
+                stats.restarts += 1
+            nid = state["next_id"]
+            state["next_id"] += 1
+            state["live"].add(nid)
+            t = threading.Thread(target=target, args=(nid,), name=f"replica-{nid}")
+            state["threads"].append(t)
+            t.start()
 
     def router():
-        # bucket -> list of (t0, admitted, reply_q, length, gen_len);
-        # latency is reported from the client-side t0, the batch-window
-        # deadline runs from admission (mirrors the Rust router).
+        # bucket -> list of request records; latency is reported from
+        # the client-side t0, the batch-window deadline runs from
+        # admission (mirrors the Rust router/supervisor).
         groups = {}
         live_clients = n_clients
         disconnected = False
-        while not (disconnected and not groups):
+        while True:
+            # Supervision pass.
+            while True:
+                try:
+                    ev = exit_q.get_nowait()
+                except queue.Empty:
+                    break
+                handle_exit(ev, groups)
+            dead = not state["live"] and state["restarts_left"] == 0
+            if dead:
+                for bucket in list(groups):
+                    for req in groups.pop(bucket):
+                        with stats.lock:
+                            stats.note_failure()
+                        req[2].put(False)
+                # Strand recovery: jobs already queued when the last
+                # replica died have no consumer left — fail them
+                # explicitly instead of leaving their clients blocked.
+                while True:
+                    try:
+                        job = job_q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if job is None:
+                        continue
+                    for req in job[1]:
+                        with stats.lock:
+                            stats.note_failure()
+                        req[2].put(False)
+                if disconnected:
+                    return
+            # Flush pass (mirrors the Rust router): every ship is a
+            # try-put, but full groups ship first — fullest bucket
+            # first, chunked to batch size — and while a full group
+            # cannot ship, admission pauses below (the pre-L7 blocking
+            # send's backpressure) and due partials wait their turn.
             now = time.monotonic()
+            full_unsent = False
             due_unsent = False
-            for bucket in list(groups.keys()):
-                group = groups[bucket]
-                full = len(group) >= BATCH_SIZE
-                due = now >= group[0][1] + WINDOW_S
-                if full or disconnected:
-                    job_q.put((bucket, groups.pop(bucket)))
-                elif due:
+            order = [] if dead else sorted(groups, key=lambda b: -len(groups[b]))
+            for bucket in order:
+                if len(groups[bucket]) < BATCH_SIZE and not disconnected:
+                    continue
+                g = groups.pop(bucket)
+                while g:
+                    chunk, g = g[:BATCH_SIZE], g[BATCH_SIZE:]
+                    try:
+                        job_q.put_nowait((bucket, chunk))
+                    except queue.Full:
+                        groups[bucket] = chunk + g
+                        full_unsent = True
+                        break
+                if full_unsent:
+                    break
+            if not full_unsent and not dead:
+                for bucket in list(groups.keys()):
+                    group = groups[bucket]
+                    if now < group[0][1] + WINDOW_S:
+                        continue
                     g = groups.pop(bucket)
                     try:
                         job_q.put_nowait((bucket, g))
                     except queue.Full:
                         groups[bucket] = g
                         due_unsent = True
+                        break
+            # Drain: stop admissions, flush, close the queue, collect
+            # replica exits.
             if disconnected:
+                if not groups and not state["stops_sent"]:
+                    for _ in range(len(state["live"])):
+                        job_q.put(None)
+                    state["stops_sent"] = True
+                if state["stops_sent"] and not state["live"]:
+                    return
+                try:
+                    handle_exit(exit_q.get(timeout=0.05), groups)
+                except queue.Empty:
+                    pass
                 continue
+            # Admit pass, capped at the supervision tick. While a full
+            # group waits for queue capacity, admission pauses (no
+            # req_q drain) so clients feel the backpressure.
             msg = None
-            if not groups:
-                m = req_q.get()
-                if m is None:
-                    live_clients -= 1
-                    if live_clients == 0:
-                        disconnected = True
-                else:
-                    msg = m
+            if full_unsent or due_unsent:
+                wait = max(WINDOW_S, 0.0002)
+            elif not groups:
+                wait = 0.025
             else:
-                if due_unsent:
-                    wait = WINDOW_S
-                else:
-                    oldest = min(g[0][1] for g in groups.values())
-                    wait = oldest + WINDOW_S - time.monotonic()
-                if wait > 0:
-                    try:
-                        m = req_q.get(timeout=wait)
-                        if m is None:
-                            live_clients -= 1
-                            if live_clients == 0:
-                                disconnected = True
-                        else:
-                            msg = m
-                    except queue.Empty:
-                        pass
+                oldest = min(g[0][1] for g in groups.values())
+                wait = oldest + WINDOW_S - time.monotonic()
+            if full_unsent:
+                time.sleep(min(wait, 0.025))
+            elif wait > 0:
+                try:
+                    m = req_q.get(timeout=min(wait, 0.025))
+                    if m is None:
+                        live_clients -= 1
+                        if live_clients == 0:
+                            disconnected = True
+                    else:
+                        msg = m
+                except queue.Empty:
+                    pass
             if msg is not None:
                 t0, reply, length, gen_len = msg
                 bucket = bucket_for(length, ENC_LEN) if bucketed else ENC_LEN
                 groups.setdefault(bucket, []).append(
-                    (t0, time.monotonic(), reply, length, gen_len)
+                    (t0, time.monotonic(), reply, length, gen_len, 0)
                 )
-        for _ in range(max(replicas, 1)):
-            job_q.put(None)
-
-    def replica_batch():
-        # Run-to-completion decode_step loop: full-geometry prefill plus
-        # every decode step for every row, early exit or not.
-        while True:
-            job = job_q.get()
-            if job is None:
-                break
-            bucket, group = job
-            ns = TOKEN_NS * BATCH_SIZE * bucket + DEC_LEN * (
-                DSTEP_NS + DTOKEN_NS * BATCH_SIZE
-            )
-            nsleep(ns)
-            now = time.monotonic()
-            with stats.lock:
-                stats.batches += 1
-                stats.total_fill += len(group)
-                stats.executed_tokens += BATCH_SIZE * bucket
-                for t0, _adm, _reply, length, gen_len in group:
-                    stats.note_response(now - t0, gen_len, 0, min(length, bucket))
-            for _t0, _adm, reply, _length, _gen in group:
-                reply.put(True)
-
-    def replica_cont():
-        # Slot-based continuous batching, mirroring serve_continuous:
-        # admit pending requests into free slots (one varlen prefill per
-        # same-bucket group), one fused decode iteration over the slot
-        # geometry, retire rows at their sampled EOS.
-        pending = deque()  # (bucket, t0, reply, length, gen_len)
-        active = [None] * slots_n  # (t0, reply, length, gen_len, emitted, bucket)
-        router_gone = False
-
-        def stash(job):
-            bucket, group = job
-            for t0, _adm, reply, length, gen_len in group:
-                pending.append((bucket, t0, reply, length, gen_len))
-
-        while True:
-            n_live = sum(1 for a in active if a is not None)
-            if not router_gone:
-                if n_live == 0 and not pending:
-                    job = job_q.get()
-                    if job is None:
-                        router_gone = True
-                    else:
-                        stash(job)
-                while len(pending) < slots_n and not router_gone:
-                    try:
-                        job = job_q.get_nowait()
-                    except queue.Empty:
-                        break
-                    if job is None:
-                        router_gone = True
-                    else:
-                        stash(job)
-            # Admit same-bucket runs into free slots.
-            free = deque(i for i, a in enumerate(active) if a is None)
-            while free and pending:
-                bucket = pending[0][0]
-                group = []
-                ids = []
-                while (
-                    pending
-                    and pending[0][0] == bucket
-                    and free
-                    and len(group) < BATCH_SIZE
-                ):
-                    _b, t0, reply, length, gen_len = pending.popleft()
-                    sid = free.popleft()
-                    active[sid] = [t0, reply, length, gen_len, 0, bucket]
-                    group.append(sid)
-                    ids.append(sid)
-                if not group:
-                    break
-                nsleep(DSTEP_NS + TOKEN_NS * len(group) * bucket)
-                with stats.lock:
-                    stats.batches += 1
-                    stats.total_fill += len(group)
-                    stats.executed_tokens += len(group) * bucket
-            n_live = sum(1 for a in active if a is not None)
-            if n_live == 0:
-                if router_gone and not pending:
-                    break
-                continue
-            # One fused decode iteration over the whole slot geometry.
-            nsleep(DSTEP_NS + DTOKEN_NS * slots_n)
-            now = time.monotonic()
-            with stats.lock:
-                stats.decode_steps += 1
-                stats.occupancy_sum += n_live
-            for s, act in enumerate(active):
-                if act is None:
-                    continue
-                act[4] += 1
-                if act[4] >= act[3] or act[4] >= DEC_LEN:
-                    t0, reply, length, gen_len, emitted, bucket = act
-                    active[s] = None
-                    with stats.lock:
-                        stats.note_response(
-                            now - t0, emitted, DEC_LEN - emitted, min(length, bucket)
-                        )
-                    reply.put(True)
 
     def client(c):
         for length, gen_len in workload[c::n_clients]:
             reply = queue.SimpleQueue()
             req_q.put((time.monotonic(), reply, length, gen_len))
-            reply.get()
+            reply.get()  # terminal: True (tokens) or False (failure)
         req_q.put(None)  # this client is done
 
-    target = replica_cont if continuous else replica_batch
-    threads = [threading.Thread(target=router, name="router")]
-    threads += [
-        threading.Thread(target=target, name=f"replica-{i}")
+    router_thread = threading.Thread(target=router, name="router")
+    state["threads"] = [
+        threading.Thread(target=target, args=(i,), name=f"replica-{i}")
         for i in range(max(replicas, 1))
     ]
     t_start = time.monotonic()
@@ -363,18 +519,22 @@ def run_config(workload, replicas, bucketed, continuous, slots=0):
         threading.Thread(target=client, args=(c,), name=f"client-{c}")
         for c in range(n_clients)
     ]
-    for t in threads + client_threads:
+    for t in [router_thread] + state["threads"] + client_threads:
         t.start()
     for t in client_threads:
         t.join()
-    for t in threads:
+    router_thread.join()
+    for t in state["threads"]:
         t.join()
     wall = time.monotonic() - t_start
     qps = len(workload) / max(wall, 1e-9)
-    # Batch-mode note_response runs under the batch's `now`; requests
-    # counted there. Continuous counts at retire. Either way requests ==
-    # workload size when every reply arrived.
-    assert stats.requests == len(workload), (stats.requests, len(workload))
+    # §L7 terminal accounting: every submitted request resolved, with
+    # tokens or an explicit failure — none dropped or hung.
+    assert stats.requests + stats.failed == len(workload), (
+        stats.requests, stats.failed, len(workload),
+    )
+    if fault is None:
+        assert stats.failed == 0, stats.failed
     return qps, stats
 
 
@@ -437,6 +597,20 @@ def main():
           f"p95 {bp1:.2f} -> {cp1:.2f} ms ({p95_red * 100:.1f}% lower), "
           f"cont scaling x4/x1 = {cq4 / cq1 if cq1 else 0.0:.2f}x")
 
+    # §L7 degraded-mode A/B: cont x4 with replica KILL_REPLICA killed at
+    # engine call KILL_AFTER, vs the healthy cont x4 just measured. The
+    # supervisor requeues the in-flight work, respawns a replacement,
+    # and every request stays terminal; acceptance bar: ratio >= 0.65.
+    fault = {"kill_replica": KILL_REPLICA, "kill_after_calls": KILL_AFTER}
+    dq, dstats = run_config(workload, 4, bucketed=True, continuous=True, fault=fault)
+    dratio = dq / cq4 if cq4 else 0.0
+    print(
+        f"degraded cont x4 (replica {KILL_REPLICA} killed at call {KILL_AFTER}): "
+        f"{dq:.1f} qps = {dratio:.2f}x of healthy, {dstats.retries} retried, "
+        f"{dstats.restarts} restarts, {dstats.failed} failed, "
+        f"terminal {dstats.requests + dstats.failed}/{len(workload)}"
+    )
+
     doc = {
         "bench": "server_throughput",
         "engine": "sim",
@@ -458,6 +632,19 @@ def main():
             "p95_reduction": round(p95_red, 3),
         },
         "qps_scaling_x4_over_x1": round(cq4 / cq1 if cq1 else 0.0, 3),
+        "degraded": {
+            "kill_replica": KILL_REPLICA,
+            "kill_after_calls": KILL_AFTER,
+            "healthy_qps": round(cq4, 1),
+            "qps": round(dq, 1),
+            "qps_ratio": round(dratio, 3),
+            "retries": dstats.retries,
+            "restarts": dstats.restarts,
+            "sheds": dstats.sheds,
+            "failed": dstats.failed,
+            "terminal": dstats.requests + dstats.failed,
+            "requests": REQUESTS,
+        },
         "producer": "python/tools/server_throughput_twin.py "
                     "(threaded twin; re-run `cargo bench --bench server_throughput -- --json` "
                     "on a cargo-enabled machine to overwrite with the Rust measurement)",

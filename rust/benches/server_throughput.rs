@@ -9,6 +9,17 @@
 //!   --clients <n>      concurrent closed-loop clients (default 32)
 //!   --window-ms <n>    router batch window (default 2)
 //!   --slots <n>        decode slots per replica (default 0 = batch_size)
+//!   --timeout-ms <n>   per-request deadline (default 0 = none)
+//!   --kill-replica <r> degraded A/B: replica id to kill (default 1)
+//!   --kill-after <c>   degraded A/B: engine call that triggers the
+//!                      kill (default 40)
+//!
+//! Besides the L5/L6 grid, the bench runs a §L7 **degraded-mode A/B**
+//! (sim engine only): `cont x4` healthy vs `cont x4` with one replica
+//! killed mid-run. The supervisor must requeue the crashed replica's
+//! in-flight requests, respawn a replacement, and deliver a terminal
+//! response for every request; the acceptance bar is degraded QPS >=
+//! 65% of healthy QPS.
 //!
 //! Backend: when `make artifacts` has run AND a real PJRT backend is
 //! linked, the bench serves the micro-altup artifact; otherwise it
@@ -71,7 +82,9 @@ fn drive(
                 sender
                     .send(Request::new(p, tx))
                     .map_err(|_| anyhow::anyhow!("router down"))?;
-                rx.recv().map_err(|_| anyhow::anyhow!("no reply"))?;
+                // §L7 contract: always a terminal response (tokens or
+                // an explicit failure) — a dropped channel is a bug.
+                rx.recv().map_err(|_| anyhow::anyhow!("reply channel dropped"))?;
             }
             Ok(())
         }));
@@ -81,6 +94,13 @@ fn drive(
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.shutdown()?;
+    anyhow::ensure!(
+        stats.requests + stats.failed == prompts.len(),
+        "terminal accounting: {} ok + {} failed != {} submitted",
+        stats.requests,
+        stats.failed,
+        prompts.len()
+    );
     Ok((prompts.len() as f64 / wall.max(1e-9), stats))
 }
 
@@ -111,6 +131,9 @@ fn main() -> anyhow::Result<()> {
     let clients = args.usize_or("clients", 32);
     let window = Duration::from_millis(args.u64_or("window-ms", 2));
     let slots = args.usize_or("slots", 0);
+    let timeout_ms = args.u64_or("timeout-ms", 0);
+    let kill_replica = args.usize_or("kill-replica", 1);
+    let kill_after = args.u64_or("kill-after", 40);
     let json_out = args.has("json") || args.has("json-path");
 
     // Pick the backend: real artifact when present and executable,
@@ -149,6 +172,7 @@ fn main() -> anyhow::Result<()> {
         bucketed,
         continuous,
         slots,
+        request_timeout_ms: (timeout_ms > 0).then_some(timeout_ms),
         ..Default::default()
     };
 
@@ -196,9 +220,46 @@ fn main() -> anyhow::Result<()> {
             .map(|(_, _, q, p)| (*q, *p))
             .unwrap_or((0.0, 0.0))
     };
+
+    // §L7 degraded-mode A/B (sim engine only — the fault injector lives
+    // in SimSpec): cont x4 with one replica killed mid-run, against the
+    // healthy cont x4 just measured. The expected panic prints to
+    // stderr — that is the fault firing, not the bench failing.
+    let mut degraded_row: Option<Json> = None;
+    if let EngineSpec::Sim(base) = &engine {
+        let mut spec = base.clone();
+        spec.fault.kill_replica = Some(kill_replica);
+        spec.fault.kill_after_calls = kill_after;
+        let (dq, dstats) =
+            drive(&EngineSpec::Sim(spec), opts(4, true, true), &prompts, clients)?;
+        report("cont x4 degraded", dq, &dstats);
+        let (hq, _) = find("cont", 4);
+        let ratio = if hq > 0.0 { dq / hq } else { 0.0 };
+        println!(
+            "degraded (replica {kill_replica} killed at call {kill_after}): \
+             {ratio:.2}x of healthy cont x4 QPS | {} retried, {} restarts, \
+             {} failed, terminal {}/{requests}",
+            dstats.retries,
+            dstats.restarts,
+            dstats.failed,
+            dstats.requests + dstats.failed
+        );
+        degraded_row = Some(Json::obj(vec![
+            ("kill_replica", Json::num(kill_replica as f64)),
+            ("kill_after_calls", Json::num(kill_after as f64)),
+            ("healthy_qps", Json::num(hq)),
+            ("qps", Json::num(dq)),
+            ("qps_ratio", Json::num(ratio)),
+            ("retries", Json::num(dstats.retries as f64)),
+            ("restarts", Json::num(dstats.restarts as f64)),
+            ("sheds", Json::num(dstats.sheds as f64)),
+            ("failed", Json::num(dstats.failed as f64)),
+            ("terminal", Json::num((dstats.requests + dstats.failed) as f64)),
+            ("requests", Json::num(requests as f64)),
+        ]));
+    }
     let (bq1, bp1) = find("batch", 1);
     let (cq1, cp1) = find("cont", 1);
-    let (bq4, _) = find("batch", 4);
     let (cq4, _) = find("cont", 4);
     let qps_ratio_x1 = if bq1 > 0.0 { cq1 / bq1 } else { 0.0 };
     let p95_reduction_x1 = if bp1 > 0.0 { 1.0 - cp1 / bp1 } else { 0.0 };
@@ -211,7 +272,7 @@ fn main() -> anyhow::Result<()> {
 
     if json_out {
         let path = args.str_or("json-path", "BENCH_server_throughput.json");
-        let doc = Json::obj(vec![
+        let mut top = vec![
             ("bench", Json::str("server_throughput")),
             ("engine", Json::str(&engine_name)),
             (
@@ -251,7 +312,11 @@ fn main() -> anyhow::Result<()> {
                 "producer",
                 Json::str("cargo bench --bench server_throughput -- --json"),
             ),
-        ]);
+        ];
+        if let Some(d) = degraded_row {
+            top.push(("degraded", d));
+        }
+        let doc = Json::obj(top);
         std::fs::write(&path, format!("{doc}\n"))?;
         println!("wrote {path}");
     }

@@ -180,10 +180,13 @@ impl LatencyHistogram {
     }
 
     /// Nearest-rank percentile (0..=100) over the bucketed samples.
+    /// Empty histograms report 0.0 (never NaN); a non-finite `p` is
+    /// treated as 0.
     pub fn percentile_ms(&self, p: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
         }
+        let p = if p.is_finite() { p } else { 0.0 };
         let rank = ((p / 100.0).clamp(0.0, 1.0) * (self.total as f64 - 1.0)).round() as u64;
         let mut seen = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
@@ -319,6 +322,57 @@ mod tests {
         d.record(1e12);
         assert_eq!(d.count(), 4);
         assert!(d.percentile_ms(0.0) > 0.0);
+    }
+
+    /// Empty histograms must report 0.0 everywhere (never NaN), and
+    /// `merge` must be idempotent-safe on disjoint stats: merge order
+    /// doesn't matter, merging an empty histogram is a no-op, and
+    /// counts/percentiles stay consistent across repeated merges.
+    #[test]
+    fn latency_histogram_empty_and_disjoint_merge_safety() {
+        let empty = LatencyHistogram::new();
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0, f64::NAN, f64::INFINITY] {
+            let v = empty.percentile_ms(p);
+            assert_eq!(v, 0.0, "empty percentile({p}) must be 0.0, got {v}");
+            assert!(!v.is_nan());
+        }
+        assert_eq!(empty.mean_ms(), 0.0);
+        // NaN p on a non-empty histogram degrades to p=0, not NaN.
+        let mut one = LatencyHistogram::new();
+        one.record(5.0);
+        assert!(!one.percentile_ms(f64::NAN).is_nan());
+
+        // Disjoint stats: a holds only ~1ms samples, b only ~64ms.
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for _ in 0..10 {
+            a.record(1.0);
+            b.record(64.0);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.count(), 20);
+        assert_eq!(ba.count(), 20);
+        for p in [0.0, 50.0, 100.0] {
+            assert_eq!(ab.percentile_ms(p), ba.percentile_ms(p), "merge order at p={p}");
+        }
+        // The merged extremes are the original populations' values.
+        assert!((ab.percentile_ms(0.0) - 1.0).abs() / 1.0 < 0.10);
+        assert!((ab.percentile_ms(100.0) - 64.0).abs() / 64.0 < 0.10);
+
+        // Merging an empty histogram is a no-op.
+        let before = (ab.count(), ab.percentile_ms(50.0), ab.mean_ms());
+        ab.merge(&LatencyHistogram::new());
+        assert_eq!(before, (ab.count(), ab.percentile_ms(50.0), ab.mean_ms()));
+
+        // Repeated disjoint merges keep counts exact and percentiles
+        // inside the union's range (no drift, no NaN).
+        ab.merge(&b);
+        assert_eq!(ab.count(), 30);
+        let p50 = ab.percentile_ms(50.0);
+        assert!((0.9..=70.4).contains(&p50), "p50={p50}");
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Multi-replica inference server: shape-bucketed batching (§Perf L5)
-//! plus slot-based **continuous batching** (§Perf L6).
+//! Multi-replica inference server: shape-bucketed batching (§Perf L5),
+//! slot-based **continuous batching** (§Perf L6), and a **supervised,
+//! fault-tolerant serving lifecycle** (§L7).
 //!
 //! The PJRT session is !Send (Rc-backed FFI handles), so each replica
 //! owns its client + session on a dedicated model thread. A router
@@ -12,28 +13,44 @@
 //!
 //! - **Continuous (default, §Perf L6):** the replica owns `S` decode
 //!   slots, each holding a request's device-resident KV-cache buffers
-//!   (`Session::init_decode_slots` — the same PJRT-residency pattern
-//!   as the §Perf L4 param cache). Between decode iterations the slot
+//!   (`Session::init_decode_slots`). Between decode iterations the slot
 //!   scheduler admits pending requests into free slots (one
 //!   `prefill@<bucket>` per same-bucket admission group), runs one
 //!   fused `decode_token` over every live slot, and retires slots the
-//!   moment they emit EOS or hit `dec_len` — short generations stop
-//!   paying for long ones, and new requests enter mid-flight instead
-//!   of waiting for a whole batch to finish. Requires the artifact to
-//!   ship the split HLO pair (`Session::has_split_decode`).
+//!   moment they emit EOS or hit `dec_len`.
 //! - **Batch-level (fallback / `ALTUP_NO_CONT_BATCH=1`):** the §Perf
 //!   L5 run-to-completion loop over the monolithic `decode_step`.
-//!   Replicas fall back automatically when the artifact has no split
-//!   HLO, so the server works against every artifact either way.
+//!
+//! §L7 — the serving lifecycle is supervised (cf. Pope et al. 2022,
+//! where replica failure and load shedding are scheduler states, not
+//! fatal errors):
+//!
+//! - Every replica runs inside a panic boundary (`catch_unwind`). Each
+//!   request a replica accepts lives in a per-replica in-flight
+//!   [`Ledger`] until its terminal [`Response`] is sent; when a replica
+//!   crashes, the supervisor (the router thread) requeues whatever the
+//!   ledger still held to surviving replicas — bounded by
+//!   `ServerOptions::max_retries` per request, after which the client
+//!   receives an explicit `Response::failed` instead of a dropped
+//!   channel — and respawns a replacement replica from the shared
+//!   `EngineSpec` up to `ServerOptions::replica_restarts`.
+//! - Requests carry an optional deadline (`ServerOptions::
+//!   request_timeout_ms` / `ALTUP_REQUEST_TIMEOUT_MS`). The router
+//!   sheds expired requests before dispatch and the continuous decode
+//!   loop retires expired slots between iterations, so one stuck
+//!   generation cannot hold a slot forever.
+//! - `shutdown()` is a drain, not an abort: admissions stop, partial
+//!   groups flush, replicas retire their in-flight slots naturally,
+//!   and only then are threads joined. Every admitted request gets a
+//!   terminal response — tokens, or an explicit failure.
 //!
 //! Backends: `EngineSpec::Artifact` serves a compiled artifact through
 //! a warmed device cache (§Perf L4); `EngineSpec::Sim` is a
-//! deterministic backend-free decode with a per-token cost model and
-//! hash-sampled EOS lengths, so the slot scheduler, bucketing, and
-//! replica machinery can be exercised and benchmarked without linking
-//! the real xla-rs bindings. Both disciplines produce identical token
-//! rows for the same prompts (EOS-truncated) — the parity contract
-//! `tests/server.rs` pins down.
+//! deterministic backend-free decode with a per-token cost model,
+//! hash-sampled EOS lengths, and an injectable [`FaultSpec`]
+//! (deterministic replica kills, hash-sampled panics, stuck
+//! generations), so supervision, retry, shedding, and drain are all
+//! testable and benchable without a PJRT backend.
 
 use crate::coordinator::metrics::{LatencyHistogram, OccupancyMeter};
 use crate::data::tokenizer::EOS;
@@ -41,10 +58,22 @@ use crate::runtime::artifact::load_named;
 use crate::runtime::client::Client;
 use crate::runtime::session::{bucket_for, DecodeSlots, Session};
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// `Response::replica` value for router-side failures (deadline sheds,
+/// drain aborts, dead-server rejections) that never reached a model
+/// replica.
+pub const ROUTER_ID: usize = usize::MAX;
+
+/// How long the router parks at most between supervision passes, so
+/// replica crash events are noticed promptly even while admission is
+/// idle or mid-batch-window.
+const SUPERVISE_TICK: Duration = Duration::from_millis(25);
 
 pub struct Request {
     pub enc_tokens: Vec<i32>,
@@ -54,11 +83,59 @@ pub struct Request {
     /// queued at the router — not just time after admission.
     /// `Request::new` stamps it; construct requests through it.
     pub t0: Instant,
+    /// Optional absolute deadline. Left `None` by `Request::new`, the
+    /// router stamps `t0 + ServerOptions::request_timeout_ms` at
+    /// admission; a request past its deadline is shed with an explicit
+    /// `FailReason::DeadlineExceeded` response instead of occupying a
+    /// batch row or decode slot.
+    pub deadline: Option<Instant>,
 }
 
 impl Request {
     pub fn new(enc_tokens: Vec<i32>, reply: mpsc::Sender<Response>) -> Request {
-        Request { enc_tokens, reply, t0: Instant::now() }
+        Request { enc_tokens, reply, t0: Instant::now(), deadline: None }
+    }
+
+    /// A request with an explicit client-chosen deadline (overrides the
+    /// server-wide `request_timeout_ms` default).
+    pub fn with_deadline(
+        enc_tokens: Vec<i32>,
+        reply: mpsc::Sender<Response>,
+        deadline: Instant,
+    ) -> Request {
+        Request { enc_tokens, reply, t0: Instant::now(), deadline: Some(deadline) }
+    }
+
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// Why a request received an explicit terminal failure instead of
+/// decoded tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    /// The request sat past its deadline and was shed before or during
+    /// decode.
+    DeadlineExceeded,
+    /// Every permitted retry landed on a dying replica.
+    RetriesExhausted,
+    /// The server has no live replicas (startup failure or restart
+    /// budget exhausted).
+    NoReplicas,
+    /// A replica failed during drain, after the job queue closed, so
+    /// there was no requeue path left.
+    AbortedOnDrain,
+}
+
+impl std::fmt::Display for FailReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FailReason::DeadlineExceeded => "deadline exceeded before completion",
+            FailReason::RetriesExhausted => "retry budget exhausted after replica failures",
+            FailReason::NoReplicas => "no live replicas (startup failure or restart budget exhausted)",
+            FailReason::AbortedOnDrain => "replica failed during drain with no requeue path left",
+        })
     }
 }
 
@@ -67,7 +144,7 @@ pub struct Response {
     /// Decoded tokens, truncated at the first EOS (inclusive) — under
     /// continuous batching the decode actually stopped there (early
     /// exit); under batch-level decode the full row ran and the tail
-    /// past EOS is dropped for parity.
+    /// past EOS is dropped for parity. Empty on explicit failures.
     pub tokens: Vec<i32>,
     /// Time from `Request::new` (includes channel/router queueing).
     pub latency: Duration,
@@ -77,8 +154,33 @@ pub struct Response {
     pub truncated: bool,
     /// Sequence-length bucket the request actually executed at.
     pub bucket: usize,
-    /// Which model replica served the request.
+    /// Which model replica served the request (`ROUTER_ID` for
+    /// router-side failures that never reached a replica).
     pub replica: usize,
+    /// `Some(reason)` marks an explicit terminal failure (deadline
+    /// shed, retry-budget exhaustion, drain abort, dead server). §L7:
+    /// every admitted request gets a terminal response — this, or
+    /// tokens — never a silently dropped reply channel.
+    pub failure: Option<FailReason>,
+}
+
+impl Response {
+    /// An explicit terminal failure (no tokens).
+    pub fn failed(reason: FailReason, t0: Instant, replica: usize) -> Response {
+        Response {
+            tokens: Vec::new(),
+            latency: t0.elapsed(),
+            batch_fill: 0,
+            truncated: false,
+            bucket: 0,
+            replica,
+            failure: Some(reason),
+        }
+    }
+
+    pub fn is_failure(&self) -> bool {
+        self.failure.is_some()
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -106,6 +208,19 @@ pub struct ServerOptions {
     /// blocked time still counts toward reported latency because the
     /// clock starts at `Request::new`.
     pub queue_cap: usize,
+    /// Per-request deadline in ms from `Request::new`; requests past it
+    /// are shed with an explicit failure instead of occupying a batch
+    /// row or decode slot. `ALTUP_REQUEST_TIMEOUT_MS` sets the default
+    /// (unset or 0 = no deadline).
+    pub request_timeout_ms: Option<u64>,
+    /// How many times a request may be requeued to another replica
+    /// after a crash before it fails explicitly with
+    /// `FailReason::RetriesExhausted`.
+    pub max_retries: u32,
+    /// How many replacement replicas the supervisor may spawn over the
+    /// server's lifetime after crashes. `ALTUP_REPLICA_RESTARTS` sets
+    /// the default (else 2).
+    pub replica_restarts: usize,
 }
 
 impl Default for ServerOptions {
@@ -119,6 +234,9 @@ impl Default for ServerOptions {
             slots: slots_from_env(),
             continuous: std::env::var_os("ALTUP_NO_CONT_BATCH").is_none(),
             queue_cap: 1024,
+            request_timeout_ms: timeout_ms_from_env(),
+            max_retries: 2,
+            replica_restarts: restarts_from_env(),
         }
     }
 }
@@ -138,6 +256,20 @@ fn slots_from_env() -> usize {
         .unwrap_or(0)
 }
 
+fn timeout_ms_from_env() -> Option<u64> {
+    std::env::var("ALTUP_REQUEST_TIMEOUT_MS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+}
+
+fn restarts_from_env() -> usize {
+    std::env::var("ALTUP_REPLICA_RESTARTS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(2)
+}
+
 /// Which decode backend the replicas run.
 #[derive(Debug, Clone)]
 pub enum EngineSpec {
@@ -147,6 +279,37 @@ pub enum EngineSpec {
     /// model — for scheduler tests/benches on machines without the
     /// xla-rs bindings.
     Sim(SimSpec),
+}
+
+/// Injectable faults for the sim engine (§L7). Everything is
+/// deterministic — keyed by replica id, engine-call index, or prompt
+/// hash — so supervision, retry, shedding, and drain behavior can be
+/// pinned by tests and A/B-benched without a real backend.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSpec {
+    /// Kill this replica id: its serving thread panics on engine call
+    /// number `kill_after_calls`. Respawned replacements get fresh ids
+    /// and therefore serve cleanly.
+    pub kill_replica: Option<usize>,
+    /// Which engine call (prefill / decode_token / monolithic decode,
+    /// 1-based) triggers `kill_replica`; 0 behaves like 1.
+    pub kill_after_calls: u64,
+    /// Probability that any engine call panics, hash-sampled from
+    /// (replica id, call index). 0.0 = never.
+    pub panic_rate: f64,
+    /// Stuck-generation injection: prompts whose hash falls in the
+    /// 1-in-`stuck_every` class never emit EOS (decode runs the full
+    /// `dec_len`) — the workload deadlines exist to shed. 0 = off.
+    pub stuck_every: u64,
+    /// Extra simulated ns per decode step per live stuck row (a stuck
+    /// generation is also a slow one).
+    pub stuck_step_ns: u64,
+}
+
+impl FaultSpec {
+    fn stuck(&self, row_hash: u64) -> bool {
+        self.stuck_every > 0 && row_hash % self.stuck_every == 0
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -174,6 +337,8 @@ pub struct SimSpec {
     /// Pretend the artifact ships the split prefill/decode_token HLO
     /// pair. `false` exercises the batch-level fallback path.
     pub split_decode: bool,
+    /// Injected faults (default: none).
+    pub fault: FaultSpec,
 }
 
 impl SimSpec {
@@ -191,20 +356,25 @@ impl SimSpec {
             dtoken_ns: env_ns("ALTUP_SIM_DTOKEN_NS", token_ns),
             dstep_ns: env_ns("ALTUP_SIM_DSTEP_NS", 50000),
             split_decode: true,
+            fault: FaultSpec::default(),
         }
     }
 }
 
-/// Aggregate serving counters; per-replica stats are merged by
-/// `ServerHandle::shutdown`.
+/// Aggregate serving counters; per-replica stats are merged by the
+/// supervisor as replicas exit (including crashed incarnations — their
+/// partial counters are recovered through the panic boundary).
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
+    /// Requests answered with tokens (explicit failures count in
+    /// `failed`, not here).
     pub requests: usize,
     /// Decode batches (batch-level) or prefill admission groups
     /// (continuous) — the unit `mean_fill` averages over.
     pub batches: usize,
     pub total_fill: usize,
-    /// How many replica stat sets were merged in.
+    /// How many replica stat sets were merged in (crashed incarnations
+    /// and their replacements each count once).
     pub replicas: usize,
     /// Real prompt tokens submitted (post-truncation).
     pub prompt_tokens: usize,
@@ -223,6 +393,22 @@ pub struct ServerStats {
     pub decode_steps: usize,
     /// Split-prefill executions (continuous path only).
     pub prefills: usize,
+    /// §L7: requests shed past their deadline (router or replica side).
+    /// Subset of `failed`.
+    pub sheds: usize,
+    /// §L7: requests requeued to another replica after a crash.
+    pub retries: usize,
+    /// §L7: replacement replicas the supervisor spawned.
+    pub restarts: usize,
+    /// §L7: explicit terminal failures delivered (deadline sheds,
+    /// retry exhaustion, drain aborts, dead-server rejections).
+    pub failed: usize,
+    /// §L7: requests completed after admissions closed (the drain
+    /// window of `shutdown()`). Counted on the continuous path — the
+    /// default discipline; the batch-level loop cannot observe
+    /// admission closure (it only ever sees the job queue end) and
+    /// reports 0 here.
+    pub drained: usize,
     /// Live-slots-per-decode-iteration meter (continuous path only).
     pub occupancy: OccupancyMeter,
     /// Per-request queued+executed latency, log-bucketed (O(1) memory
@@ -317,13 +503,18 @@ impl ServerStats {
         self.tokens_saved += other.tokens_saved;
         self.decode_steps += other.decode_steps;
         self.prefills += other.prefills;
+        self.sheds += other.sheds;
+        self.retries += other.retries;
+        self.restarts += other.restarts;
+        self.failed += other.failed;
+        self.drained += other.drained;
         self.occupancy.merge(&other.occupancy);
         self.latency.merge(&other.latency);
         self.token_latency.merge(&other.token_latency);
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} requests / {} batches on {} replica(s), mean fill {:.2}, \
              padded waste {:.1}%, {} tokens out (early exit saved {:.1}%), \
              mean occupancy {:.2} over {} decode steps, \
@@ -340,8 +531,25 @@ impl ServerStats {
             self.p50_ms(),
             self.p95_ms(),
             self.p99_ms()
-        )
+        );
+        if self.failed + self.retries + self.restarts + self.drained > 0 {
+            s.push_str(&format!(
+                " | faults: {} shed / {} retried / {} restarts / {} failed / {} drained",
+                self.sheds, self.retries, self.restarts, self.failed, self.drained
+            ));
+        }
+        s
     }
+}
+
+/// Send an explicit terminal failure for `req` and count it. The send
+/// is best-effort: a client that already gave up dropped its receiver.
+fn fail_request(stats: &mut ServerStats, req: &Request, reason: FailReason, replica: usize) {
+    stats.failed += 1;
+    if reason == FailReason::DeadlineExceeded {
+        stats.sheds += 1;
+    }
+    let _ = req.reply.send(Response::failed(reason, req.t0, replica));
 }
 
 /// A request the router has accepted into a bucket group. Latency is
@@ -352,6 +560,9 @@ impl ServerStats {
 struct Admitted {
     req: Request,
     admitted: Instant,
+    /// How many times a crashed replica already held this request (the
+    /// supervisor's retry counter).
+    attempts: u32,
 }
 
 /// A bucket-homogeneous batch ready for a replica.
@@ -360,12 +571,151 @@ struct BatchJob {
     requests: Vec<Admitted>,
 }
 
+/// §L7: every request a replica has accepted but not yet terminally
+/// answered, keyed by ticket. The ledger lives outside the panic
+/// boundary, so the supervisor can requeue or explicitly fail whatever
+/// a crashed replica was holding — no reply channel is ever silently
+/// dropped with a dying thread.
+struct Ledger {
+    inner: Mutex<LedgerInner>,
+}
+
+struct LedgerInner {
+    next_ticket: u64,
+    held: HashMap<u64, Held>,
+}
+
+/// A ledger entry: the original request plus the routing state needed
+/// to requeue it (bucket) and cap its retries (attempts).
+struct Held {
+    bucket: usize,
+    attempts: u32,
+    req: Request,
+}
+
+impl Ledger {
+    fn new() -> Ledger {
+        Ledger { inner: Mutex::new(LedgerInner { next_ticket: 0, held: HashMap::new() }) }
+    }
+
+    /// Poison-proof lock: the ledger is read after a replica panic by
+    /// design, and entries are plain data — a poisoned guard is safe to
+    /// recover.
+    fn lock(&self) -> std::sync::MutexGuard<'_, LedgerInner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    fn admit(&self, bucket: usize, attempts: u32, req: Request) -> u64 {
+        let mut inner = self.lock();
+        let ticket = inner.next_ticket;
+        inner.next_ticket += 1;
+        inner.held.insert(ticket, Held { bucket, attempts, req });
+        ticket
+    }
+
+    fn take(&self, ticket: u64) -> Option<Held> {
+        self.lock().held.remove(&ticket)
+    }
+
+    fn drain(&self) -> Vec<Held> {
+        self.lock().held.drain().map(|(_, h)| h).collect()
+    }
+
+    /// Pack the held requests behind `tickets` into the (batch_size,
+    /// len) geometry, borrowing their prompt rows in place — the hot
+    /// path never clones a prompt just because ownership sits in the
+    /// ledger. Row order follows `tickets`; a ticket already taken
+    /// packs as an empty row (cannot happen on the owning replica).
+    fn pack_rows(
+        &self,
+        tickets: &[u64],
+        batch_size: usize,
+        len: usize,
+        enc: &mut Vec<i32>,
+        truncated: &mut Vec<bool>,
+    ) {
+        let inner = self.lock();
+        let rows: Vec<&[i32]> = tickets
+            .iter()
+            .map(|t| inner.held.get(t).map_or(&[][..], |h| h.req.enc_tokens.as_slice()))
+            .collect();
+        pack_requests_into(&rows, batch_size, len, enc, truncated);
+    }
+}
+
+/// What a replica thread reports to the supervisor as its last act —
+/// its stats (partial if it crashed), the crash cause if any, and every
+/// in-flight request its ledger still held.
+struct ReplicaExit {
+    id: usize,
+    stats: ServerStats,
+    /// `Some` when the replica crashed (panic or error) rather than
+    /// drained cleanly.
+    error: Option<String>,
+    unfinished: Vec<Held>,
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic: <non-string payload>".to_string()
+    }
+}
+
+/// Spawn one replica thread behind the §L7 panic boundary. The thread's
+/// terminal `ReplicaExit` event — stats, crash cause, unfinished
+/// ledger — always reaches the supervisor, panic or not.
+fn spawn_replica(
+    id: usize,
+    spec: &EngineSpec,
+    jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    opts: &ServerOptions,
+    events: &mpsc::Sender<ReplicaExit>,
+) -> std::thread::JoinHandle<()> {
+    let spec = spec.clone();
+    let jobs = Arc::clone(jobs);
+    let opts = opts.clone();
+    let events = events.clone();
+    std::thread::Builder::new()
+        .name(format!("altup-replica-{id}"))
+        .spawn(move || {
+            let ledger = Ledger::new();
+            let mut stats = ServerStats { replicas: 1, ..Default::default() };
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                serve_replica(id, &spec, &jobs, &opts, &ledger, &mut stats)
+            }));
+            let error = match outcome {
+                Ok(Ok(())) => None,
+                Ok(Err(e)) => Some(format!("{e:#}")),
+                Err(payload) => Some(panic_message(payload.as_ref())),
+            };
+            let unfinished = ledger.drain();
+            let _ = events.send(ReplicaExit { id, stats, error, unfinished });
+        })
+        .expect("spawn replica")
+}
+
 pub struct ServerHandle {
     /// Bounded: `send` blocks once `ServerOptions::queue_cap` requests
     /// are in flight ahead of the router (admission backpressure).
     pub sender: mpsc::SyncSender<Request>,
-    router: Option<std::thread::JoinHandle<Result<()>>>,
-    replicas: Vec<std::thread::JoinHandle<Result<ServerStats>>>,
+    router: Option<std::thread::JoinHandle<Result<ServerStats>>>,
+    /// Cleared the moment the router thread exits (even by panic), so
+    /// `infer` can reject new work immediately instead of touching a
+    /// channel whose receiver is gone.
+    router_up: Arc<AtomicBool>,
+}
+
+/// Clears the router-liveness flag on drop — including on unwind.
+struct RouterGuard(Arc<AtomicBool>);
+
+impl Drop for RouterGuard {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::Release);
+    }
 }
 
 impl ServerHandle {
@@ -377,7 +727,8 @@ impl ServerHandle {
         )
     }
 
-    /// Spawn router + replicas over an explicit decode backend.
+    /// Spawn supervisor/router + replicas over an explicit decode
+    /// backend.
     pub fn spawn_engine(engine: EngineSpec, opts: ServerOptions) -> ServerHandle {
         let n = opts.replicas.max(1);
         let (req_tx, req_rx) = mpsc::sync_channel::<Request>(opts.queue_cap.max(1));
@@ -387,193 +738,477 @@ impl ServerHandle {
         // replicas (which craters fill and wastes executed tokens).
         let (job_tx, job_rx) = mpsc::sync_channel::<BatchJob>(n);
         let job_rx = Arc::new(Mutex::new(job_rx));
+        let (events_tx, events_rx) = mpsc::channel::<ReplicaExit>();
 
+        let handles: Vec<_> =
+            (0..n).map(|i| spawn_replica(i, &engine, &job_rx, &opts, &events_tx)).collect();
+        let router_up = Arc::new(AtomicBool::new(true));
         let router = {
             let spec = engine.clone();
             let ropts = opts.clone();
+            let flag = Arc::clone(&router_up);
             std::thread::Builder::new()
                 .name("altup-router".into())
-                .spawn(move || route(&spec, req_rx, job_tx, &ropts))
+                .spawn(move || {
+                    let _guard = RouterGuard(flag);
+                    route(&spec, req_rx, job_tx, job_rx, events_rx, events_tx, &ropts, handles)
+                })
                 .expect("spawn router")
         };
-        let replicas = (0..n)
-            .map(|i| {
-                let spec = engine.clone();
-                let jobs = Arc::clone(&job_rx);
-                let sopts = opts.clone();
-                std::thread::Builder::new()
-                    .name(format!("altup-replica-{i}"))
-                    .spawn(move || serve_replica(i, &spec, &jobs, &sopts))
-                    .expect("spawn replica")
-            })
-            .collect();
-        ServerHandle { sender: req_tx, router: Some(router), replicas }
+        ServerHandle { sender: req_tx, router: Some(router), router_up }
     }
 
-    /// Submit a request and block for the response. The latency clock
-    /// starts before the (possibly blocking) send into the bounded
-    /// request channel, so backpressured requests report their queueing
-    /// time. Returns an error (rather than hanging) when the router or
-    /// the serving replica has died — the reply channel is dropped with
-    /// the request.
+    /// Submit a request and block for the response; explicit failure
+    /// responses are mapped to `Err`. The latency clock starts before
+    /// the (possibly blocking) send into the bounded request channel,
+    /// so backpressured requests report their queueing time.
     pub fn infer(&self, enc_tokens: Vec<i32>) -> Result<Response> {
+        let resp = self.infer_response(enc_tokens)?;
+        match resp.failure {
+            Some(reason) => Err(anyhow!("request failed: {reason}")),
+            None => Ok(resp),
+        }
+    }
+
+    /// Like `infer`, but returns explicit-failure responses as
+    /// `Ok(Response)` so callers can inspect `Response::failure`.
+    /// Errors only when the server machinery itself is gone (router
+    /// dead before admission, reply channel dropped).
+    pub fn infer_response(&self, enc_tokens: Vec<i32>) -> Result<Response> {
+        if !self.router_up.load(Ordering::Acquire) {
+            bail!("server router is down; request not admitted");
+        }
         let (tx, rx) = mpsc::channel();
         self.sender
             .send(Request::new(enc_tokens, tx))
             .map_err(|_| anyhow!("server router is down; request not admitted"))?;
         rx.recv().map_err(|_| {
-            anyhow!("model replica died before replying (shutdown() reports the cause)")
+            anyhow!("server dropped the reply channel (shutdown() reports the cause)")
         })
     }
 
-    /// Shut down (drop sender, drain, join) and return merged stats
-    /// from every replica.
-    pub fn shutdown(mut self) -> Result<ServerStats> {
-        let router = self.router.take().expect("router handle");
-        let replicas = std::mem::take(&mut self.replicas);
-        drop(self.sender);
-        let mut first_err: Option<anyhow::Error> = None;
+    /// Drain and shut down: stop admissions, flush partial groups, let
+    /// replicas retire their in-flight slots naturally, join every
+    /// thread, and return the merged stats. Every admitted request gets
+    /// a terminal response before this returns.
+    pub fn shutdown(self) -> Result<ServerStats> {
+        let ServerHandle { sender, router, router_up: _ } = self;
+        let router = router.expect("router handle");
+        drop(sender); // stop admissions; the router begins its drain
         match router.join() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => first_err = Some(e),
-            Err(_) => first_err = Some(anyhow!("router thread panicked")),
-        }
-        let mut merged = ServerStats::default();
-        for handle in replicas {
-            match handle.join() {
-                Ok(Ok(stats)) => merged.merge(&stats),
-                Ok(Err(e)) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
-                Err(_) => {
-                    if first_err.is_none() {
-                        first_err = Some(anyhow!("replica thread panicked"));
-                    }
-                }
-            }
-        }
-        match first_err {
-            Some(e) => Err(e),
-            None => Ok(merged),
+            Ok(result) => result,
+            Err(_) => Err(anyhow!("router thread panicked")),
         }
     }
 }
 
-/// Router loop: admit continuously, group by bucket, and hand batches
-/// to the replicas. A group ships as soon as it fills (blocking send —
-/// genuine backpressure once the bounded job queue is full). A group
-/// whose oldest request has waited out the batch window ships
-/// best-effort (`try_send`): if every replica is busy and the queue is
-/// full it simply keeps accumulating — arriving requests top it up
-/// toward a full batch instead of the router spraying tiny partial
-/// batches at a wall of busy replicas.
+/// (batch_size, enc_len) of the serving geometry.
+fn engine_dims(spec: &EngineSpec) -> Result<(usize, usize)> {
+    match spec {
+        EngineSpec::Artifact { name } => {
+            let artifact = load_named(name)?;
+            Ok((artifact.config.batch_size, artifact.config.enc_len))
+        }
+        EngineSpec::Sim(s) => Ok((s.batch_size, s.enc_len)),
+    }
+}
+
+/// The supervisor's replica bookkeeping: what it needs to respawn a
+/// replacement (spec, options, the shared job queue, the event channel)
+/// plus the live count and restart budget.
+struct Supervisor {
+    spec: EngineSpec,
+    opts: ServerOptions,
+    jobs: Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    events_tx: mpsc::Sender<ReplicaExit>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    live: usize,
+    restarts_left: usize,
+    next_id: usize,
+    last_error: Option<String>,
+    /// Set when the fleet died while admissions were still open (last
+    /// crash with the job queue open and no restart budget left) —
+    /// recorded at event-processing time, so `shutdown()` reports it
+    /// deterministically no matter how the client disconnect races
+    /// the exit events.
+    died: Option<String>,
+}
+
+impl Supervisor {
+    /// Fold a replica exit into the aggregate: merge its stats, requeue
+    /// or explicitly fail its in-flight requests, and respawn a
+    /// replacement when it crashed and the budget allows. `job_open`
+    /// is whether the job queue can still carry requeued work (false
+    /// once the drain has closed it).
+    fn on_exit(
+        &mut self,
+        ev: ReplicaExit,
+        stats: &mut ServerStats,
+        groups: &mut BTreeMap<usize, Vec<Admitted>>,
+        job_open: bool,
+    ) {
+        self.live = self.live.saturating_sub(1);
+        stats.merge(&ev.stats);
+        let crashed = ev.error.is_some();
+        if let Some(err) = ev.error {
+            self.last_error = Some(format!("replica {}: {}", ev.id, err));
+        }
+        for held in ev.unfinished {
+            let attempts = held.attempts + 1;
+            if !job_open {
+                fail_request(stats, &held.req, FailReason::AbortedOnDrain, ROUTER_ID);
+            } else if attempts > self.opts.max_retries {
+                fail_request(stats, &held.req, FailReason::RetriesExhausted, ROUTER_ID);
+            } else {
+                stats.retries += 1;
+                groups.entry(held.bucket).or_default().push(Admitted {
+                    req: held.req,
+                    admitted: Instant::now(),
+                    attempts,
+                });
+            }
+        }
+        if crashed && job_open && self.restarts_left > 0 {
+            self.restarts_left -= 1;
+            stats.restarts += 1;
+            let id = self.next_id;
+            self.next_id += 1;
+            self.handles.push(spawn_replica(
+                id,
+                &self.spec,
+                &self.jobs,
+                &self.opts,
+                &self.events_tx,
+            ));
+            self.live += 1;
+        }
+        if crashed && job_open && self.live == 0 && self.died.is_none() {
+            self.died = Some(
+                self.last_error.clone().unwrap_or_else(|| "replica crash".to_string()),
+            );
+        }
+    }
+}
+
+/// Shed every request already past its deadline out of the router's
+/// bucket groups, answering each with an explicit failure.
+fn shed_expired(groups: &mut BTreeMap<usize, Vec<Admitted>>, stats: &mut ServerStats) {
+    let now = Instant::now();
+    for group in groups.values_mut() {
+        group.retain(|a| {
+            if a.req.expired(now) {
+                fail_request(stats, &a.req, FailReason::DeadlineExceeded, ROUTER_ID);
+                false
+            } else {
+                true
+            }
+        });
+    }
+    groups.retain(|_, g| !g.is_empty());
+}
+
+/// Router + supervisor loop (§L5 admission/bucketing + §L7 lifecycle).
+///
+/// Admission: group requests by bucket, ship full groups immediately
+/// and window-expired partial groups best-effort, shedding anything
+/// past its deadline before dispatch. Every send is a `try_send` — a
+/// full queue parks the router briefly instead of blocking it, so
+/// supervision (replica exits, requeues, respawns) is never starved.
+///
+/// Supervision: replica exit events are folded in every pass; crashed
+/// replicas' in-flight requests are requeued (bounded per-request
+/// retries) and replacements respawned within the restart budget. With
+/// no live replicas and no budget left the router answers every
+/// request with an explicit failure until clients hang up, then
+/// reports the crash from `shutdown()`.
+///
+/// Drain: once every client sender is gone, remaining groups flush,
+/// the job queue closes (replicas retire in-flight slots and exit),
+/// exit events are collected, and all threads are joined.
+#[allow(clippy::too_many_arguments)]
 fn route(
     spec: &EngineSpec,
     rx: mpsc::Receiver<Request>,
-    tx: mpsc::SyncSender<BatchJob>,
+    job_tx: mpsc::SyncSender<BatchJob>,
+    job_rx: Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    events_rx: mpsc::Receiver<ReplicaExit>,
+    events_tx: mpsc::Sender<ReplicaExit>,
     opts: &ServerOptions,
-) -> Result<()> {
-    let (batch_size, enc_len) = match spec {
-        EngineSpec::Artifact { name } => {
-            let artifact = load_named(name)?;
-            (artifact.config.batch_size, artifact.config.enc_len)
-        }
-        EngineSpec::Sim(s) => (s.batch_size, s.enc_len),
+    handles: Vec<std::thread::JoinHandle<()>>,
+) -> Result<ServerStats> {
+    let mut sup = Supervisor {
+        spec: spec.clone(),
+        opts: opts.clone(),
+        jobs: job_rx,
+        events_tx,
+        live: handles.len(),
+        next_id: handles.len(),
+        restarts_left: opts.replica_restarts,
+        last_error: None,
+        died: None,
+        handles,
     };
+    let mut stats = ServerStats::default();
+    let mut fatal: Option<anyhow::Error> = None;
+
+    let (batch_size, enc_len) = match engine_dims(spec) {
+        Ok(dims) => dims,
+        Err(e) => {
+            // Without the serving geometry nothing can be dispatched:
+            // stop restarts and fail every request until clients hang
+            // up. The replicas hit the same load error and exit on
+            // their own.
+            fatal = Some(e);
+            sup.restarts_left = 0;
+            (1, 1)
+        }
+    };
+    let mut job_tx = if fatal.is_none() { Some(job_tx) } else { None };
+    let timeout = opts.request_timeout_ms.map(Duration::from_millis);
     let mut groups: BTreeMap<usize, Vec<Admitted>> = BTreeMap::new();
     let mut disconnected = false;
-    while !(disconnected && groups.is_empty()) {
-        // Flush pass. In drain mode (clients gone) everything ships
-        // with a blocking send.
-        let now = Instant::now();
-        let mut due_unsent = false;
-        let buckets: Vec<usize> = groups.keys().copied().collect();
-        for bucket in buckets {
-            let group = groups.get(&bucket).expect("group present");
-            let full = group.len() >= batch_size;
-            let due =
-                group.first().map_or(false, |a| now >= a.admitted + opts.batch_window);
-            if full || disconnected {
-                let requests = groups.remove(&bucket).expect("group present");
-                if tx.send(BatchJob { bucket, requests }).is_err() {
-                    return Ok(()); // every replica is gone
+
+    loop {
+        // Supervision pass: fold in replica exits (requeue/fail their
+        // in-flight work, respawn within budget).
+        while let Ok(ev) = events_rx.try_recv() {
+            sup.on_exit(ev, &mut stats, &mut groups, job_tx.is_some());
+        }
+        if sup.live == 0 {
+            if fatal.is_none() {
+                if let Some(err) = sup.died.take() {
+                    fatal = Some(anyhow!(
+                        "serving stopped: no live replicas and restart budget exhausted ({err})"
+                    ));
                 }
-            } else if due {
-                let requests = groups.remove(&bucket).expect("group present");
-                match tx.try_send(BatchJob { bucket, requests }) {
-                    Ok(()) => {}
-                    Err(mpsc::TrySendError::Full(job)) => {
-                        groups.insert(bucket, job.requests);
-                        due_unsent = true;
+            }
+            job_tx = None;
+            for (_, group) in std::mem::take(&mut groups) {
+                for a in group {
+                    fail_request(&mut stats, &a.req, FailReason::NoReplicas, ROUTER_ID);
+                }
+            }
+            // Strand recovery: jobs already sitting in the queue when
+            // the last replica died have no consumer left — fail them
+            // explicitly instead of leaving their clients blocked.
+            while let Ok(Popped::Job(job)) = pop_job(&sup.jobs, false) {
+                for a in job.requests {
+                    fail_request(&mut stats, &a.req, FailReason::NoReplicas, ROUTER_ID);
+                }
+            }
+            if disconnected {
+                break;
+            }
+        }
+
+        // Deadline pass: shed expired requests before dispatch.
+        shed_expired(&mut groups, &mut stats);
+
+        // Flush pass. Every ship is a `try_send` (a blocking send here
+        // could deadlock the supervisor against a dead replica set and
+        // would starve crash handling), but the pre-L7 backpressure
+        // semantics are preserved: full groups ship first — fullest
+        // bucket first, in batch_size chunks — and while a full group
+        // cannot ship, admission pauses (below) so clients stack up in
+        // the bounded request channel exactly as the old blocking send
+        // made them, and due partial groups do not steal the next
+        // freed queue slot.
+        let mut full_unsent = false;
+        let mut due_unsent = false;
+        if let Some(tx) = &job_tx {
+            let now = Instant::now();
+            let mut buckets: Vec<usize> = groups.keys().copied().collect();
+            buckets.sort_by_key(|b| std::cmp::Reverse(groups[b].len()));
+            for bucket in buckets {
+                let Some(group) = groups.get(&bucket) else { continue };
+                if group.len() < batch_size && !disconnected {
+                    continue;
+                }
+                let mut requests = groups.remove(&bucket).expect("group present");
+                while !requests.is_empty() {
+                    let take = requests.len().min(batch_size);
+                    let chunk: Vec<Admitted> = requests.drain(..take).collect();
+                    match tx.try_send(BatchJob { bucket, requests: chunk }) {
+                        Ok(()) => {}
+                        Err(mpsc::TrySendError::Full(job))
+                        | Err(mpsc::TrySendError::Disconnected(job)) => {
+                            // Queue full (park and retry) or every
+                            // replica receiver gone (their exit events
+                            // are already on the way — the supervision
+                            // pass above handles them).
+                            let mut back = job.requests;
+                            back.append(&mut requests);
+                            groups.insert(bucket, back);
+                            full_unsent = true;
+                            break;
+                        }
                     }
-                    Err(mpsc::TrySendError::Disconnected(_)) => return Ok(()),
+                }
+                if full_unsent {
+                    break; // queue full: no point probing other groups
+                }
+            }
+            // Window-expired partial groups ship best-effort, and only
+            // when no full group is still waiting for capacity.
+            if !full_unsent {
+                let buckets: Vec<usize> = groups.keys().copied().collect();
+                for bucket in buckets {
+                    let Some(group) = groups.get(&bucket) else { continue };
+                    let due = group
+                        .first()
+                        .is_some_and(|a| now >= a.admitted + opts.batch_window);
+                    if !due {
+                        continue;
+                    }
+                    let requests = groups.remove(&bucket).expect("group present");
+                    match tx.try_send(BatchJob { bucket, requests }) {
+                        Ok(()) => {}
+                        Err(mpsc::TrySendError::Full(job))
+                        | Err(mpsc::TrySendError::Disconnected(job)) => {
+                            groups.insert(bucket, job.requests);
+                            due_unsent = true;
+                            break;
+                        }
+                    }
                 }
             }
         }
+
+        // Drain: admissions closed and everything flushed — close the
+        // job queue so replicas retire their slots and exit, then wait
+        // for their exit events.
         if disconnected {
-            continue; // drain until groups run dry
+            if groups.is_empty() {
+                job_tx = None;
+            }
+            if sup.live == 0 && groups.is_empty() {
+                break;
+            }
+            if let Ok(ev) = events_rx.recv_timeout(Duration::from_millis(50)) {
+                sup.on_exit(ev, &mut stats, &mut groups, job_tx.is_some());
+            }
+            continue;
         }
 
-        // Admit pass: block until the next request, the next group
-        // deadline, or (when a due group couldn't ship) a short park so
-        // the flush retries once a replica frees up.
-        let message = if groups.is_empty() {
-            match rx.recv() {
+        // Admit pass: park until the next request or group deadline,
+        // capped at the supervision tick so replica exits are noticed
+        // promptly.
+        let wait = if full_unsent || due_unsent {
+            // Floor the park so a zero batch window cannot busy-spin
+            // while replicas are saturated and the job queue is full.
+            opts.batch_window.max(Duration::from_micros(200))
+        } else if groups.is_empty() {
+            SUPERVISE_TICK
+        } else {
+            let oldest = groups
+                .values()
+                .filter_map(|g| g.first())
+                .map(|a| a.admitted)
+                .min()
+                .expect("non-empty groups");
+            (oldest + opts.batch_window).saturating_duration_since(Instant::now())
+        };
+        let message = if wait.is_zero() {
+            None // a group came due during the flush pass
+        } else if full_unsent {
+            // Admission paused: a full group is waiting for queue
+            // capacity. Park without draining the request channel so
+            // clients feel the backpressure, then retry the flush.
+            std::thread::sleep(wait.min(SUPERVISE_TICK));
+            None
+        } else {
+            match rx.recv_timeout(wait.min(SUPERVISE_TICK)) {
                 Ok(r) => Some(r),
-                Err(_) => {
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
                     disconnected = true;
                     None
                 }
             }
-        } else {
-            let wait = if due_unsent {
-                // Floor the park so a zero batch window cannot busy-spin
-                // while replicas are saturated and the job queue is full.
-                opts.batch_window.max(Duration::from_micros(200))
-            } else {
-                let oldest = groups
-                    .values()
-                    .filter_map(|g| g.first())
-                    .map(|a| a.admitted)
-                    .min()
-                    .expect("non-empty groups");
-                (oldest + opts.batch_window).saturating_duration_since(Instant::now())
-            };
-            if wait.is_zero() {
-                None // a group came due during the flush pass
-            } else {
-                match rx.recv_timeout(wait) {
-                    Ok(r) => Some(r),
-                    Err(mpsc::RecvTimeoutError::Timeout) => None,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        disconnected = true;
-                        None
-                    }
-                }
-            }
         };
-        if let Some(req) = message {
-            let bucket = if opts.bucketed {
-                bucket_for(req.enc_tokens.len(), enc_len)
+        if let Some(mut req) = message {
+            if req.deadline.is_none() {
+                req.deadline = timeout.map(|t| req.t0 + t);
+            }
+            if sup.live == 0 || job_tx.is_none() {
+                fail_request(&mut stats, &req, FailReason::NoReplicas, ROUTER_ID);
+            } else if req.expired(Instant::now()) {
+                fail_request(&mut stats, &req, FailReason::DeadlineExceeded, ROUTER_ID);
             } else {
-                enc_len
-            };
-            groups
-                .entry(bucket)
-                .or_default()
-                .push(Admitted { req, admitted: Instant::now() });
+                let bucket = if opts.bucketed {
+                    bucket_for(req.enc_tokens.len(), enc_len)
+                } else {
+                    enc_len
+                };
+                groups
+                    .entry(bucket)
+                    .or_default()
+                    .push(Admitted { req, admitted: Instant::now(), attempts: 0 });
+            }
         }
     }
-    Ok(())
+
+    // Join every replica thread (initial + respawned replacements).
+    for handle in sup.handles.drain(..) {
+        let _ = handle.join();
+    }
+    if fatal.is_none() {
+        if let Some(err) = sup.died.take() {
+            fatal = Some(anyhow!(
+                "serving stopped: no live replicas and restart budget exhausted ({err})"
+            ));
+        }
+    }
+    match fatal {
+        Some(e) => Err(e),
+        None => Ok(stats),
+    }
 }
 
 /// The per-replica decode backend (built inside the replica thread:
 /// `Session` is !Send).
 enum Engine {
     Real { client: Client, session: Session },
-    Sim(SimSpec),
+    Sim(SimEngine),
+}
+
+/// Sim backend instance: the spec plus per-replica fault bookkeeping
+/// (the engine-call counter drives deterministic kill injection).
+struct SimEngine {
+    spec: SimSpec,
+    replica: usize,
+    calls: u64,
+}
+
+impl SimEngine {
+    fn new(spec: SimSpec, replica: usize) -> SimEngine {
+        SimEngine { spec, replica, calls: 0 }
+    }
+
+    /// Count one engine execute and trigger any injected fault due at
+    /// this call. Panics deliberately — exercising the replica panic
+    /// boundary exactly the way a real backend crash would.
+    fn on_call(&mut self) {
+        self.calls += 1;
+        let f = &self.spec.fault;
+        if f.kill_replica == Some(self.replica) && self.calls >= f.kill_after_calls.max(1) {
+            panic!(
+                "injected sim fault: replica {} killed at engine call {} \
+                 (expected during fault-injection tests/benches)",
+                self.replica, self.calls
+            );
+        }
+        if f.panic_rate > 0.0 {
+            let h = sim_mix(((self.replica as u64) << 32) ^ self.calls);
+            if (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < f.panic_rate {
+                panic!(
+                    "injected sim fault: hash-sampled panic on replica {} call {} \
+                     (expected during fault-injection tests/benches)",
+                    self.replica, self.calls
+                );
+            }
+        }
+    }
 }
 
 /// Per-replica slot state for the continuous path: device-resident KV
@@ -586,16 +1221,18 @@ enum SlotState {
 }
 
 /// One live sim request: prompt hash (the whole decode stream derives
-/// from it), next position, and the hash-sampled generation length.
+/// from it), next position, the hash-sampled generation length, and
+/// whether fault injection marked it a stuck (never-EOS) generation.
 #[derive(Clone, Copy)]
 struct SimSlot {
     h: u64,
     pos: usize,
     gen_len: usize,
+    stuck: bool,
 }
 
 impl Engine {
-    fn build(spec: &EngineSpec, opts: &ServerOptions) -> Result<Engine> {
+    fn build(replica: usize, spec: &EngineSpec, opts: &ServerOptions) -> Result<Engine> {
         match spec {
             EngineSpec::Artifact { name } => {
                 let client = Client::cpu()?;
@@ -612,7 +1249,7 @@ impl Engine {
                 session.warm_device_cache(&client)?;
                 Ok(Engine::Real { client, session })
             }
-            EngineSpec::Sim(s) => Ok(Engine::Sim(s.clone())),
+            EngineSpec::Sim(s) => Ok(Engine::Sim(SimEngine::new(s.clone(), replica))),
         }
     }
 
@@ -622,7 +1259,7 @@ impl Engine {
             Engine::Real { session, .. } => {
                 (session.artifact.config.batch_size, session.artifact.config.enc_len)
             }
-            Engine::Sim(s) => (s.batch_size, s.enc_len),
+            Engine::Sim(e) => (e.spec.batch_size, e.spec.enc_len),
         }
     }
 
@@ -630,7 +1267,7 @@ impl Engine {
     fn dec_len(&self) -> usize {
         match self {
             Engine::Real { session, .. } => session.artifact.config.dec_len,
-            Engine::Sim(s) => s.dec_len,
+            Engine::Sim(e) => e.spec.dec_len,
         }
     }
 
@@ -640,7 +1277,7 @@ impl Engine {
     fn supports_continuous(&self) -> bool {
         match self {
             Engine::Real { session, .. } => session.has_split_decode(),
-            Engine::Sim(s) => s.split_decode,
+            Engine::Sim(e) => e.spec.split_decode,
         }
     }
 
@@ -650,7 +1287,7 @@ impl Engine {
     fn effective_bucket(&self, bucket: usize) -> usize {
         match self {
             Engine::Real { session, .. } => session.effective_bucket(bucket),
-            Engine::Sim(s) => bucket.min(s.enc_len),
+            Engine::Sim(e) => bucket.min(e.spec.enc_len),
         }
     }
 
@@ -658,7 +1295,7 @@ impl Engine {
     fn effective_prefill_bucket(&self, bucket: usize) -> usize {
         match self {
             Engine::Real { session, .. } => session.effective_prefill_bucket(bucket),
-            Engine::Sim(s) => bucket.min(s.enc_len),
+            Engine::Sim(e) => bucket.min(e.spec.enc_len),
         }
     }
 
@@ -666,7 +1303,10 @@ impl Engine {
     fn decode(&mut self, enc: &[i32], bucket: usize) -> Result<Vec<Vec<i32>>> {
         match self {
             Engine::Real { client, session } => session.decode_bucketed(client, enc, bucket),
-            Engine::Sim(s) => Ok(sim_decode(s, enc, bucket)),
+            Engine::Sim(e) => {
+                e.on_call();
+                Ok(sim_decode(&e.spec, enc, bucket))
+            }
         }
     }
 
@@ -698,11 +1338,17 @@ impl Engine {
                 *slots = Some(session.prefill(client, held, enc, bucket, &ids)?);
                 Ok(())
             }
-            (Engine::Sim(spec), SlotState::Sim(slots)) => {
+            (Engine::Sim(e), SlotState::Sim(slots)) => {
+                e.on_call();
+                let spec = &e.spec;
                 for (row, &sid) in enc.chunks(bucket).zip(slot_ids.iter()) {
                     let h = sim_row_hash(row);
-                    slots[sid] =
-                        Some(SimSlot { h, pos: 0, gen_len: sim_gen_len(h, spec.dec_len) });
+                    slots[sid] = Some(SimSlot {
+                        h,
+                        pos: 0,
+                        gen_len: sim_gen_len(h, spec.dec_len),
+                        stuck: spec.fault.stuck(h),
+                    });
                 }
                 // Varlen-style split prefill: dispatch overhead + cost
                 // over the admitted rows only (no dead padding rows).
@@ -729,23 +1375,32 @@ impl Engine {
                 *slots = Some(held);
                 Ok(tokens)
             }
-            (Engine::Sim(spec), SlotState::Sim(slots)) => {
+            (Engine::Sim(e), SlotState::Sim(slots)) => {
+                e.on_call();
+                let spec = &e.spec;
                 let mut out = vec![0i32; slots.len()];
+                let mut stuck_live = 0u64;
                 for (s, slot) in slots.iter_mut().enumerate() {
                     if !live[s] {
                         continue;
                     }
                     let sl = slot.as_mut().context("live mask set on an empty sim slot")?;
-                    out[s] = if sl.pos + 1 == sl.gen_len {
+                    out[s] = if !sl.stuck && sl.pos + 1 == sl.gen_len {
                         EOS
                     } else {
                         sim_token(sl.h, sl.pos, spec.vocab_size)
                     };
                     sl.pos += 1;
+                    if sl.stuck {
+                        stuck_live += 1;
+                    }
                 }
-                // Fused step over the full static slot geometry.
+                // Fused step over the full static slot geometry; stuck
+                // rows are also slow rows.
                 sim_sleep(
-                    spec.dstep_ns + spec.dtoken_ns.saturating_mul(slots.len() as u64),
+                    spec.dstep_ns
+                        + spec.dtoken_ns.saturating_mul(slots.len() as u64)
+                        + spec.fault.stuck_step_ns.saturating_mul(stuck_live),
                 );
                 Ok(out)
             }
@@ -766,13 +1421,18 @@ fn sim_row_hash(row: &[i32]) -> u64 {
     h
 }
 
+/// 64-bit finalizer (murmur3-style) shared by the gen-length sampler
+/// and the hash-sampled panic injector.
+fn sim_mix(mut x: u64) -> u64 {
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^ (x >> 29)
+}
+
 /// Hash-sampled generation length in [1, dec_len] — the "EOS
 /// distribution" of the sim workload. The row's final token is EOS.
 fn sim_gen_len(h: u64, dec_len: usize) -> usize {
-    let mut x = h ^ (h >> 33);
-    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
-    x ^= x >> 29;
-    1 + (x % dec_len.max(1) as u64) as usize
+    1 + (sim_mix(h) % dec_len.max(1) as u64) as usize
 }
 
 /// Deterministic non-EOS token for decode position `j`: in
@@ -809,14 +1469,21 @@ fn sim_sleep(ns: u64) {
 
 /// Deterministic stand-in monolithic decode: each output row derives
 /// from the row's non-padding prompt tokens only and ends at its
-/// hash-sampled EOS. Costs the full geometry — `batch_size x bucket`
-/// prefill plus all `dec_len` decode steps for every row, early exit
-/// or not — which is exactly what the split path's A/B measures
-/// against.
+/// hash-sampled EOS — except injected stuck generations, which run the
+/// full `dec_len` without ever emitting EOS. Costs the full geometry —
+/// `batch_size x bucket` prefill plus all `dec_len` decode steps for
+/// every row, early exit or not — which is exactly what the split
+/// path's A/B measures against.
 fn sim_decode(spec: &SimSpec, enc: &[i32], bucket: usize) -> Vec<Vec<i32>> {
     let mut out = Vec::with_capacity(spec.batch_size);
+    let mut stuck_rows = 0u64;
     for row in enc.chunks(bucket) {
         let h = sim_row_hash(row);
+        if spec.fault.stuck(h) {
+            stuck_rows += 1;
+            out.push((0..spec.dec_len).map(|j| sim_token(h, j, spec.vocab_size)).collect());
+            continue;
+        }
         let gen_len = sim_gen_len(h, spec.dec_len);
         let mut tokens = Vec::with_capacity(gen_len);
         for j in 0..gen_len {
@@ -827,7 +1494,9 @@ fn sim_decode(spec: &SimSpec, enc: &[i32], bucket: usize) -> Vec<Vec<i32>> {
     let prefill = spec.token_ns.saturating_mul((spec.batch_size * bucket) as u64);
     let decode = (spec.dec_len as u64)
         .saturating_mul(spec.dstep_ns + spec.dtoken_ns.saturating_mul(spec.batch_size as u64));
-    sim_sleep(prefill + decode);
+    let stuck_tax =
+        stuck_rows.saturating_mul(spec.dec_len as u64).saturating_mul(spec.fault.stuck_step_ns);
+    sim_sleep(prefill + decode + stuck_tax);
     out
 }
 
@@ -842,21 +1511,23 @@ fn truncate_at_eos(tokens: &mut Vec<i32>) {
 
 /// Replica entry: build the engine, then run whichever decode
 /// discipline it supports (continuous wants the split HLO pair; the
-/// batch-level loop works against every artifact).
+/// batch-level loop works against every artifact). Runs inside the
+/// panic boundary of `spawn_replica`; in-flight requests live in
+/// `ledger` until terminally answered.
 fn serve_replica(
     id: usize,
     spec: &EngineSpec,
     jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
     opts: &ServerOptions,
-) -> Result<ServerStats> {
-    let mut engine = Engine::build(spec, opts)?;
-    let mut stats = ServerStats { replicas: 1, ..Default::default() };
+    ledger: &Ledger,
+    stats: &mut ServerStats,
+) -> Result<()> {
+    let mut engine = Engine::build(id, spec, opts)?;
     if opts.continuous && engine.supports_continuous() {
-        serve_continuous(id, &mut engine, jobs, opts, &mut stats)?;
+        serve_continuous(id, &mut engine, jobs, opts, ledger, stats)
     } else {
-        serve_batches(id, &mut engine, jobs, &mut stats)?;
+        serve_batches(id, &mut engine, jobs, ledger, stats)
     }
-    Ok(stats)
 }
 
 /// Non-blocking / blocking pop off the shared job queue.
@@ -866,15 +1537,17 @@ enum Popped {
     Gone,
 }
 
-fn pop_job(
-    jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
-    block: bool,
-) -> Result<Popped> {
+fn pop_job(jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>, block: bool) -> Result<Popped> {
     // Hold the queue lock only for the pop; decode runs unlocked so
     // other replicas pull the next job meanwhile. (A blocking pop only
-    // happens when this replica is idle.)
+    // happens when this replica is idle.) A poisoned lock is recovered:
+    // replicas panic inside engine calls, never while holding this
+    // guard, and the receiver itself stays sound either way.
     if block {
-        let queue = jobs.lock().map_err(|_| anyhow!("job queue poisoned"))?;
+        let queue = match jobs.lock() {
+            Ok(q) => q,
+            Err(poisoned) => poisoned.into_inner(),
+        };
         match queue.recv() {
             Ok(job) => Ok(Popped::Job(job)),
             Err(_) => Ok(Popped::Gone),
@@ -887,9 +1560,7 @@ fn pop_job(
         let queue = match jobs.try_lock() {
             Ok(q) => q,
             Err(std::sync::TryLockError::WouldBlock) => return Ok(Popped::Empty),
-            Err(std::sync::TryLockError::Poisoned(_)) => {
-                return Err(anyhow!("job queue poisoned"))
-            }
+            Err(std::sync::TryLockError::Poisoned(poisoned)) => poisoned.into_inner(),
         };
         match queue.try_recv() {
             Ok(job) => Ok(Popped::Job(job)),
@@ -900,13 +1571,15 @@ fn pop_job(
 }
 
 /// Run-to-completion batch loop (§Perf L5, and the fallback when the
-/// artifact ships no split HLO): pop bucket-homogeneous jobs, pack at
+/// artifact ships no split HLO): pop bucket-homogeneous jobs, shed
+/// expired requests, admit the rest into the in-flight ledger, pack at
 /// the (effective) bucket geometry into a reused scratch buffer,
 /// decode to full `dec_len`, and move each output row into its reply.
 fn serve_batches(
     id: usize,
     engine: &mut Engine,
     jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    ledger: &Ledger,
     stats: &mut ServerStats,
 ) -> Result<()> {
     let (batch_size, _enc_len) = engine.dims();
@@ -920,37 +1593,57 @@ fn serve_batches(
             Popped::Job(job) => job,
             _ => break, // router gone and queue drained
         };
-        let fill = job.requests.len();
         let bucket = engine.effective_bucket(job.bucket);
+        let routed_bucket = job.bucket;
+        // Admission: ledger entries survive a decode panic so the
+        // supervisor can requeue them; expired requests are shed now
+        // rather than padded into the batch.
+        let now = Instant::now();
+        let mut batch: Vec<(u64, Instant, usize)> = Vec::with_capacity(job.requests.len());
+        for admitted in job.requests {
+            let Admitted { req, attempts, .. } = admitted;
+            if req.expired(now) {
+                fail_request(stats, &req, FailReason::DeadlineExceeded, id);
+                continue;
+            }
+            let t0 = req.t0;
+            let enc_len = req.enc_tokens.len();
+            let ticket = ledger.admit(routed_bucket, attempts, req);
+            batch.push((ticket, t0, enc_len));
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        let fill = batch.len();
         {
-            let rows: Vec<&[i32]> =
-                job.requests.iter().map(|a| a.req.enc_tokens.as_slice()).collect();
-            pack_requests_into(&rows, batch_size, bucket, &mut enc_scratch, &mut trunc_scratch);
+            let tickets: Vec<u64> = batch.iter().map(|(t, _, _)| *t).collect();
+            ledger.pack_rows(&tickets, batch_size, bucket, &mut enc_scratch, &mut trunc_scratch);
         }
         let decoded = engine.decode(&enc_scratch, bucket)?;
         let mut decoded = decoded.into_iter();
-        for (i, admitted) in job.requests.into_iter().enumerate() {
-            let req = admitted.req;
-            let latency = req.t0.elapsed();
+        for (i, (ticket, t0, enc_len)) in batch.into_iter().enumerate() {
+            let Some(held) = ledger.take(ticket) else { continue };
+            let latency = t0.elapsed();
             let mut tokens = decoded.next().unwrap_or_default();
             truncate_at_eos(&mut tokens);
             stats.note_response(
                 latency,
                 tokens.len(),
                 0, // monolithic decode ran the full dec_len regardless
-                req.enc_tokens.len().min(bucket),
+                enc_len.min(bucket),
                 trunc_scratch[i],
             );
-            let _ = req.reply.send(Response {
+            stats.requests += 1;
+            let _ = held.req.reply.send(Response {
                 tokens,
                 latency,
                 batch_fill: fill,
                 truncated: trunc_scratch[i],
                 bucket,
                 replica: id,
+                failure: None,
             });
         }
-        stats.requests += fill;
         stats.batches += 1;
         stats.total_fill += fill;
         stats.executed_tokens += batch_size * bucket;
@@ -958,9 +1651,20 @@ fn serve_batches(
     Ok(())
 }
 
-/// A request occupying a decode slot.
+/// A request waiting for a free decode slot (already in the ledger —
+/// which also owns the prompt tokens; see `Ledger::pack_rows`).
+struct Pend {
+    ticket: u64,
+    t0: Instant,
+    deadline: Option<Instant>,
+    enc_len: usize,
+}
+
+/// A request occupying a decode slot (already in the ledger).
 struct Active {
-    req: Request,
+    ticket: u64,
+    t0: Instant,
+    deadline: Option<Instant>,
     tokens: Vec<i32>,
     bucket: usize,
     fill: usize,
@@ -968,15 +1672,43 @@ struct Active {
     prompt_len: usize,
 }
 
+/// Unpack a router job into the replica's pending queue via the
+/// in-flight ledger, shedding anything already past its deadline.
+fn stash(
+    ledger: &Ledger,
+    pending: &mut VecDeque<(usize, Pend)>,
+    job: BatchJob,
+    stats: &mut ServerStats,
+    id: usize,
+) {
+    let BatchJob { bucket, requests } = job;
+    let now = Instant::now();
+    for admitted in requests {
+        let Admitted { req, attempts, .. } = admitted;
+        if req.expired(now) {
+            fail_request(stats, &req, FailReason::DeadlineExceeded, id);
+            continue;
+        }
+        let t0 = req.t0;
+        let deadline = req.deadline;
+        let enc_len = req.enc_tokens.len();
+        let ticket = ledger.admit(bucket, attempts, req);
+        pending.push_back((bucket, Pend { ticket, t0, deadline, enc_len }));
+    }
+}
+
 /// Slot-based continuous batching (§Perf L6): between fused
 /// `decode_token` iterations the scheduler admits pending requests
-/// into free slots (one batched prefill per same-bucket group) and
-/// retires slots the moment they emit EOS or hit `dec_len`.
+/// into free slots (one batched prefill per same-bucket group),
+/// retires slots the moment they emit EOS or hit `dec_len`, and —
+/// §L7 — sheds expired pending requests and retires expired slots so
+/// one stuck generation cannot hold a slot forever.
 fn serve_continuous(
     id: usize,
     engine: &mut Engine,
     jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
     opts: &ServerOptions,
+    ledger: &Ledger,
     stats: &mut ServerStats,
 ) -> Result<()> {
     let (batch_size, _enc_len) = engine.dims();
@@ -984,7 +1716,7 @@ fn serve_continuous(
     let slots_n = if opts.slots > 0 { opts.slots } else { batch_size };
     let mut state = engine.init_slots(slots_n)?;
     let mut active: Vec<Option<Active>> = (0..slots_n).map(|_| None).collect();
-    let mut pending: VecDeque<(usize, Admitted)> = VecDeque::new();
+    let mut pending: VecDeque<(usize, Pend)> = VecDeque::new();
     let mut router_gone = false;
     let mut enc_scratch: Vec<i32> = Vec::new();
     let mut trunc_scratch: Vec<bool> = Vec::new();
@@ -996,15 +1728,41 @@ fn serve_continuous(
         if !router_gone {
             if n_live == 0 && pending.is_empty() {
                 match pop_job(jobs, true)? {
-                    Popped::Job(job) => stash(&mut pending, job),
+                    Popped::Job(job) => stash(ledger, &mut pending, job, stats, id),
                     _ => router_gone = true,
                 }
             }
             while pending.len() < slots_n && !router_gone {
                 match pop_job(jobs, false)? {
-                    Popped::Job(job) => stash(&mut pending, job),
+                    Popped::Job(job) => stash(ledger, &mut pending, job, stats, id),
                     Popped::Empty => break,
                     Popped::Gone => router_gone = true,
+                }
+            }
+        }
+
+        // §L7 deadline pass, run between decode iterations (so a shed
+        // costs at most one fused step of extra latency): drop expired
+        // pending requests and retire expired slots with explicit
+        // failures.
+        let now = Instant::now();
+        pending.retain(|(_, p)| {
+            if p.deadline.is_some_and(|d| now >= d) {
+                if let Some(held) = ledger.take(p.ticket) {
+                    fail_request(stats, &held.req, FailReason::DeadlineExceeded, id);
+                }
+                false
+            } else {
+                true
+            }
+        });
+        for slot in active.iter_mut() {
+            let expired =
+                slot.as_ref().is_some_and(|a| a.deadline.is_some_and(|d| now >= d));
+            if expired {
+                let act = slot.take().expect("expired slot");
+                if let Some(held) = ledger.take(act.ticket) {
+                    fail_request(stats, &held.req, FailReason::DeadlineExceeded, id);
                 }
             }
         }
@@ -1020,34 +1778,35 @@ fn serve_continuous(
         while !free.is_empty() && !pending.is_empty() {
             let bucket = pending.front().expect("non-empty pending").0;
             let eff = engine.effective_prefill_bucket(bucket);
-            let mut group: Vec<Admitted> = Vec::new();
+            let mut group: Vec<Pend> = Vec::new();
             let mut slot_ids: Vec<usize> = Vec::new();
             while group.len() < batch_size.min(free.len() + group.len()) {
                 match pending.front() {
                     Some((b, _)) if *b == bucket => {}
                     _ => break,
                 }
-                let (_, admitted) = pending.pop_front().expect("front present");
+                let (_, p) = pending.pop_front().expect("front present");
                 slot_ids.push(free.pop_front().expect("free slot"));
-                group.push(admitted);
+                group.push(p);
             }
             if group.is_empty() {
                 break; // no free capacity for this bucket run
             }
             {
-                let rows: Vec<&[i32]> =
-                    group.iter().map(|a| a.req.enc_tokens.as_slice()).collect();
-                pack_requests_into(&rows, rows.len(), eff, &mut enc_scratch, &mut trunc_scratch);
+                let tickets: Vec<u64> = group.iter().map(|p| p.ticket).collect();
+                ledger.pack_rows(&tickets, group.len(), eff, &mut enc_scratch, &mut trunc_scratch);
             }
             engine.prefill(&mut state, &enc_scratch, eff, &slot_ids)?;
             stats.prefills += 1;
             stats.batches += 1;
             stats.total_fill += group.len();
             stats.executed_tokens += group.len() * eff;
-            for (i, admitted) in group.into_iter().enumerate() {
-                let prompt_len = admitted.req.enc_tokens.len().min(eff);
+            for (i, p) in group.into_iter().enumerate() {
+                let prompt_len = p.enc_len.min(eff);
                 active[slot_ids[i]] = Some(Active {
-                    req: admitted.req,
+                    ticket: p.ticket,
+                    t0: p.t0,
+                    deadline: p.deadline,
                     tokens: Vec::with_capacity(dec_len),
                     bucket: eff,
                     fill: slot_ids.len(),
@@ -1078,7 +1837,8 @@ fn serve_continuous(
                 continue;
             }
             let act = slot.take().expect("live slot");
-            let latency = act.req.t0.elapsed();
+            let Some(held) = ledger.take(act.ticket) else { continue };
+            let latency = act.t0.elapsed();
             stats.note_response(
                 latency,
                 act.tokens.len(),
@@ -1087,26 +1847,21 @@ fn serve_continuous(
                 act.truncated,
             );
             stats.requests += 1;
-            let _ = act.req.reply.send(Response {
+            if router_gone {
+                stats.drained += 1;
+            }
+            let _ = held.req.reply.send(Response {
                 tokens: act.tokens,
                 latency,
                 batch_fill: act.fill,
                 truncated: act.truncated,
                 bucket: act.bucket,
                 replica: id,
+                failure: None,
             });
         }
     }
     Ok(())
-}
-
-/// Unpack a router job into the replica's pending queue, keeping the
-/// job's bucket tag per request (admission regroups by bucket).
-fn stash(pending: &mut VecDeque<(usize, Admitted)>, job: BatchJob) {
-    let BatchJob { bucket, requests } = job;
-    for admitted in requests {
-        pending.push_back((bucket, admitted));
-    }
 }
 
 /// Pack request token rows into a fixed (batch_size, len) geometry:
@@ -1161,6 +1916,7 @@ mod tests {
             dtoken_ns: 0,
             dstep_ns: 0,
             split_decode: true,
+            fault: FaultSpec::default(),
         }
     }
 
@@ -1260,7 +2016,7 @@ mod tests {
     #[test]
     fn sim_slot_stream_matches_monolithic_rows() {
         let spec = quiet_spec();
-        let mut engine = Engine::Sim(spec.clone());
+        let mut engine = Engine::Sim(SimEngine::new(spec.clone(), 0));
         let mut state = engine.init_slots(3).unwrap();
         let prompt = vec![11i32, 3, 5, 0, 0, 0, 0, 0];
         engine.prefill(&mut state, &prompt, 8, &[1]).unwrap();
@@ -1279,6 +2035,119 @@ mod tests {
         let rows = sim_decode(&spec, &batch, 8);
         assert_eq!(stream, rows[0], "per-token stream == monolithic row");
         assert_eq!(*stream.last().unwrap(), EOS);
+    }
+
+    /// Stuck-generation injection: a stuck row never emits EOS, runs
+    /// the full dec_len on both decode paths, and produces identical
+    /// tokens on both.
+    #[test]
+    fn sim_stuck_rows_never_emit_eos_on_either_path() {
+        let mut spec = quiet_spec();
+        spec.fault.stuck_every = 1; // every prompt is stuck
+        let prompt = vec![11i32, 3, 5, 0, 0, 0, 0, 0];
+        let mut batch = prompt.clone();
+        batch.extend(vec![0i32; 8]);
+        let rows = sim_decode(&spec, &batch, 8);
+        assert_eq!(rows[0].len(), spec.dec_len, "stuck row runs the full dec_len");
+        assert!(!rows[0].contains(&EOS), "stuck row never emits EOS");
+
+        let mut engine = Engine::Sim(SimEngine::new(spec.clone(), 0));
+        let mut state = engine.init_slots(2).unwrap();
+        engine.prefill(&mut state, &prompt, 8, &[0]).unwrap();
+        let live = vec![true, false];
+        let mut stream = Vec::new();
+        for _ in 0..spec.dec_len {
+            stream.push(engine.decode_token(&mut state, &live).unwrap()[0]);
+        }
+        assert_eq!(stream, rows[0], "slot stream == monolithic stuck row");
+    }
+
+    /// The deterministic kill fault must fire as a panic on exactly the
+    /// configured engine call, and only on the configured replica id.
+    #[test]
+    fn sim_kill_fault_panics_on_configured_call() {
+        let mut spec = quiet_spec();
+        spec.fault.kill_replica = Some(3);
+        spec.fault.kill_after_calls = 2;
+        let run = |replica: usize| {
+            catch_unwind(AssertUnwindSafe(|| {
+                let mut engine = Engine::Sim(SimEngine::new(spec.clone(), replica));
+                let mut state = engine.init_slots(1).unwrap();
+                let prompt = vec![9i32, 2, 4, 0];
+                engine.prefill(&mut state, &prompt, 4, &[0]).unwrap(); // call 1
+                engine.decode_token(&mut state, &[true]).unwrap(); // call 2
+            }))
+        };
+        assert!(run(0).is_ok(), "non-matching replica id serves cleanly");
+        assert!(run(3).is_err(), "matching replica id panics at call 2");
+    }
+
+    /// The in-flight ledger: admit/take/drain, and drain returns
+    /// exactly what was never taken (the crash-recovery contract).
+    #[test]
+    fn ledger_tracks_in_flight_requests() {
+        let ledger = Ledger::new();
+        let (tx, _rx) = mpsc::channel();
+        let t1 = ledger.admit(8, 0, Request::new(vec![1, 2], tx.clone()));
+        let t2 = ledger.admit(16, 1, Request::new(vec![3], tx.clone()));
+        let t3 = ledger.admit(8, 0, Request::new(vec![4, 5, 6], tx));
+        assert_ne!(t1, t2);
+        let held = ledger.take(t2).expect("present");
+        assert_eq!(held.bucket, 16);
+        assert_eq!(held.attempts, 1);
+        assert_eq!(held.req.enc_tokens, vec![3]);
+        assert!(ledger.take(t2).is_none(), "take is exactly-once");
+        let mut rest = ledger.drain();
+        rest.sort_by_key(|h| h.req.enc_tokens.len());
+        assert_eq!(rest.len(), 2);
+        assert_eq!(rest[0].req.enc_tokens, vec![1, 2]);
+        assert_eq!(rest[1].req.enc_tokens, vec![4, 5, 6]);
+        let _ = t3;
+        assert!(ledger.drain().is_empty(), "drain empties the ledger");
+    }
+
+    /// Explicit failure responses: terminal, empty, reasoned, counted.
+    #[test]
+    fn fail_request_sends_terminal_response_and_counts() {
+        let mut stats = ServerStats::default();
+        let (tx, rx) = mpsc::channel();
+        let req = Request::new(vec![1, 2, 3], tx);
+        fail_request(&mut stats, &req, FailReason::DeadlineExceeded, ROUTER_ID);
+        let resp = rx.recv().expect("terminal response delivered");
+        assert!(resp.is_failure());
+        assert_eq!(resp.failure, Some(FailReason::DeadlineExceeded));
+        assert!(resp.tokens.is_empty());
+        assert_eq!(resp.replica, ROUTER_ID);
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.sheds, 1);
+
+        // Non-deadline failures count in failed but not sheds.
+        let (tx, rx) = mpsc::channel();
+        let req = Request::new(vec![7], tx);
+        fail_request(&mut stats, &req, FailReason::RetriesExhausted, ROUTER_ID);
+        assert_eq!(rx.recv().unwrap().failure, Some(FailReason::RetriesExhausted));
+        assert_eq!(stats.failed, 2);
+        assert_eq!(stats.sheds, 1);
+        // Every reason renders a non-empty human message.
+        for reason in [
+            FailReason::DeadlineExceeded,
+            FailReason::RetriesExhausted,
+            FailReason::NoReplicas,
+            FailReason::AbortedOnDrain,
+        ] {
+            assert!(!reason.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn request_deadline_expiry() {
+        let (tx, _rx) = mpsc::channel();
+        let now = Instant::now();
+        let req = Request::with_deadline(vec![1], tx.clone(), now + Duration::from_secs(60));
+        assert!(!req.expired(now));
+        assert!(req.expired(now + Duration::from_secs(61)));
+        let no_deadline = Request::new(vec![1], tx);
+        assert!(!no_deadline.expired(now + Duration::from_secs(3600)));
     }
 
     #[test]
@@ -1335,6 +2204,11 @@ mod tests {
             tokens_saved: 10,
             decode_steps: 5,
             prefills: 2,
+            sheds: 1,
+            retries: 2,
+            restarts: 1,
+            failed: 3,
+            drained: 4,
             ..Default::default()
         };
         b.latency.record(10.0);
@@ -1349,6 +2223,12 @@ mod tests {
         assert_eq!(a.tokens_saved, 10);
         assert_eq!(a.decode_steps, 5);
         assert_eq!(a.prefills, 2);
+        assert_eq!(a.sheds, 1);
+        assert_eq!(a.retries, 2);
+        assert_eq!(a.restarts, 1);
+        assert_eq!(a.failed, 3);
+        assert_eq!(a.drained, 4);
+        assert!(a.summary().contains("faults:"), "fault counters surface in the summary");
         assert!((a.early_exit_ratio() - 0.25).abs() < 1e-12);
         assert_eq!(a.occupancy.steps(), 1);
         assert_eq!(a.latency_count(), 6);
@@ -1361,6 +2241,10 @@ mod tests {
         assert_eq!(ServerStats::default().waste_ratio(), 0.0);
         assert_eq!(ServerStats::default().p99_ms(), 0.0);
         assert_eq!(ServerStats::default().early_exit_ratio(), 0.0);
+        assert!(
+            !ServerStats::default().summary().contains("faults:"),
+            "fault-free summary stays compact"
+        );
     }
 
     #[test]

@@ -29,9 +29,11 @@ pub fn enabled_from_env() -> bool {
 }
 
 pub struct Prefetcher<S: BatchSource + Send + 'static> {
-    rx: mpsc::Receiver<Batch>,
-    done: mpsc::Receiver<S>,
-    _pool: ThreadPool,
+    /// `Option` so `Drop`/`finish` can release the channel first — the
+    /// stop signal a worker parked on a full buffer is waiting for.
+    rx: Option<mpsc::Receiver<Batch>>,
+    done: Option<mpsc::Receiver<S>>,
+    pool: Option<ThreadPool>,
     /// Seconds the consumer spent blocked waiting on the worker — the
     /// residual data-preparation time prefetch could not hide.
     pub wait_seconds: f64,
@@ -53,14 +55,15 @@ impl<S: BatchSource + Send + 'static> Prefetcher<S> {
             }
             let _ = done_tx.send(source);
         });
-        Prefetcher { rx, done, _pool: pool, wait_seconds: 0.0 }
+        Prefetcher { rx: Some(rx), done: Some(done), pool: Some(pool), wait_seconds: 0.0 }
     }
 
     /// The next prepared batch; `None` once all `steps` batches have
     /// been consumed.
     pub fn next(&mut self) -> Option<Batch> {
+        let rx = self.rx.as_ref()?;
         let t0 = Instant::now();
-        let batch = self.rx.recv().ok();
+        let batch = rx.recv().ok();
         self.wait_seconds += t0.elapsed().as_secs_f64();
         batch
     }
@@ -70,11 +73,27 @@ impl<S: BatchSource + Send + 'static> Prefetcher<S> {
     /// Returns `None` for the source if the worker thread panicked
     /// mid-production — callers should surface their own error rather
     /// than panic on the cleanup path.
-    pub fn finish(self) -> (Option<S>, f64) {
+    pub fn finish(mut self) -> (Option<S>, f64) {
         let wait = self.wait_seconds;
-        drop(self.rx); // unblock a worker parked on a full buffer
-        let source = self.done.recv().ok();
+        self.rx.take(); // unblock a worker parked on a full buffer
+        let source = self.done.take().and_then(|done| done.recv().ok());
+        self.pool.take(); // ThreadPool::drop joins the worker
         (source, wait)
+    }
+}
+
+/// Dropping a prefetcher mid-stream must not leak its worker thread:
+/// release the batch channel (the stop signal), then join the worker
+/// via the pool. Field-order drop would do the same for `rx`/`pool`,
+/// but only by coincidence of declaration order — this makes the
+/// signal-then-join sequence explicit and keeps it ahead of any future
+/// field reshuffle. (After `finish` the fields are already `None` and
+/// this is a no-op.)
+impl<S: BatchSource + Send + 'static> Drop for Prefetcher<S> {
+    fn drop(&mut self) {
+        self.rx.take(); // signal: worker's next send fails and it exits
+        self.done.take();
+        self.pool.take(); // join
     }
 }
 
@@ -114,6 +133,46 @@ mod tests {
             reference.next_batch();
         }
         assert_eq!(source.next_batch().enc_tokens, reference.next_batch().enc_tokens);
+    }
+
+    /// Dropping the prefetcher mid-stream (without `finish`) must
+    /// promptly terminate the worker: the source comes back through
+    /// the dropped `done` channel and is destroyed by the exiting
+    /// worker, and `Drop` joins the thread before returning.
+    #[test]
+    fn drop_mid_stream_joins_worker_promptly() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        struct FlaggedSource {
+            inner: PretrainBatcher,
+            dropped: Arc<AtomicBool>,
+        }
+        impl crate::data::batcher::BatchSource for FlaggedSource {
+            fn next_batch(&mut self) -> Batch {
+                self.inner.next_batch()
+            }
+        }
+        impl Drop for FlaggedSource {
+            fn drop(&mut self) {
+                self.dropped.store(true, Ordering::SeqCst);
+            }
+        }
+
+        let dropped = Arc::new(AtomicBool::new(false));
+        let source = FlaggedSource { inner: batcher(5), dropped: Arc::clone(&dropped) };
+        // Far more steps than will ever be consumed: without the drop
+        // signal the worker would grind through all of them.
+        let mut p = Prefetcher::spawn(source, 1_000_000, 1);
+        assert!(p.next().is_some());
+        let t0 = std::time::Instant::now();
+        drop(p);
+        // Drop returned == worker joined == source destroyed.
+        assert!(dropped.load(Ordering::SeqCst), "worker exited and dropped the source");
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(30),
+            "drop must terminate the stream promptly, not run out the steps"
+        );
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //!               --ckpt <pretrained> --steps N
 //!   eval        --artifact <name> [--ckpt path] --batches N [--task t]
 //!   serve       --artifact <name> [--ckpt path] [--slots S] [--no-cont]
-//!               [--queue-cap N] --requests N
+//!               [--queue-cap N] [--timeout-ms T] [--retries R]
+//!               [--restarts N] --requests N
 //!   params      [--size S|B|L|XL] — analytic parameter table
 //!   latency     --artifact <name> [--kind forward|train_step]
 //!   bench-table <fig4|tab1|tab2|tab3|tab4|tab6|tab7|fig5|bert> [--quick]
@@ -205,25 +206,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
         slots: args.usize_or("slots", defaults.slots),
         continuous: !args.has("no-cont") && defaults.continuous,
         queue_cap: args.usize_or("queue-cap", defaults.queue_cap),
+        // 0 falls through to the ALTUP_REQUEST_TIMEOUT_MS default.
+        request_timeout_ms: match args.u64_or("timeout-ms", 0) {
+            0 => defaults.request_timeout_ms,
+            ms => Some(ms),
+        },
+        max_retries: args.usize_or("retries", defaults.max_retries as usize) as u32,
+        replica_restarts: args.usize_or("restarts", defaults.replica_restarts),
     };
     let n = args.usize_or("requests", 64);
     let server = ServerHandle::spawn(&name, opts);
-    // Demo client load: send n requests from a task stream.
+    // Demo client load: send n requests from a task stream. Explicit
+    // failures (deadline sheds, crashed-replica retries exhausted) are
+    // terminal responses, not client errors — count them.
     let artifact = load_named(&name)?;
     let cfg = artifact.config;
     let task = Task::new(TaskKind::Squad, cfg.vocab_size, 1);
     let t0 = std::time::Instant::now();
     let mut latencies = Vec::new();
+    let mut failed = 0usize;
     for i in 0..n {
         let ex = task.example(i as u64, cfg.enc_len - 2);
-        let resp = server.infer(ex.enc)?;
-        latencies.push(resp.latency);
+        let resp = server.infer_response(ex.enc)?;
+        match resp.failure {
+            Some(reason) => {
+                failed += 1;
+                eprintln!("request {i} failed: {reason}");
+            }
+            None => latencies.push(resp.latency),
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.shutdown()?;
     let s = bench::stats_from("serve", latencies);
     println!(
-        "served {n} requests in {wall:.2}s ({:.1} req/s), mean latency {:.1} ms",
+        "served {n} requests ({failed} failed) in {wall:.2}s ({:.1} req/s), \
+         mean latency {:.1} ms",
         n as f64 / wall,
         s.mean_ms(),
     );

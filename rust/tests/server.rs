@@ -1,29 +1,28 @@
 //! Serving-stack integration tests that need no PJRT backend: the
-//! multi-replica router, shape-bucketed batching, and the slot-based
-//! continuous-batching scheduler run against the deterministic sim
-//! engine, so scheduling, bucket/split parity, EOS early-exit, stats
-//! merging, and failure modes are exercised in every build.
+//! multi-replica router, shape-bucketed batching, the slot-based
+//! continuous-batching scheduler, and the §L7 fault-tolerant lifecycle
+//! (replica supervision, request deadlines, graceful drain) run
+//! against the deterministic sim engine, so scheduling, bucket/split
+//! parity, EOS early-exit, stats merging, crash recovery, shedding,
+//! and drain are exercised in every build.
 
 use altup::coordinator::server::{
-    EngineSpec, Request, ServerHandle, ServerOptions, ServerStats, SimSpec,
+    EngineSpec, FailReason, Request, Response, ServerHandle, ServerOptions, ServerStats,
+    SimSpec,
 };
 use altup::data::tokenizer::EOS;
 use altup::runtime::session::{bucket_for, bucket_lengths};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn sim_spec() -> SimSpec {
     // Zero cost knobs keep the scheduler tests fast; throughput
     // behavior is covered by benches/server_throughput.rs.
-    SimSpec {
-        batch_size: 4,
-        enc_len: 64,
-        dec_len: 8,
-        vocab_size: 211,
-        token_ns: 0,
-        dtoken_ns: 0,
-        dstep_ns: 0,
-        split_decode: true,
-    }
+    let mut spec = SimSpec::new(4, 64, 8);
+    spec.vocab_size = 211;
+    spec.token_ns = 0;
+    spec.dtoken_ns = 0;
+    spec.dstep_ns = 0;
+    spec
 }
 
 /// Batch-level (run-to-completion) options — the §Perf L5 discipline.
@@ -37,6 +36,9 @@ fn opts(replicas: usize, bucketed: bool) -> ServerOptions {
         slots: 0,
         continuous: false,
         queue_cap: 1024,
+        request_timeout_ms: None,
+        max_retries: 2,
+        replica_restarts: 2,
     }
 }
 
@@ -51,6 +53,39 @@ fn prompt(len: usize) -> Vec<i32> {
 
 fn collect(server: &ServerHandle, lens: &[usize]) -> Vec<Vec<i32>> {
     lens.iter().map(|&l| server.infer(prompt(l)).unwrap().tokens).collect()
+}
+
+/// Fire `prompts` from `clients` concurrent threads through raw reply
+/// channels and return every terminal `Response`, in submission order.
+/// Panics if any reply channel is dropped without a terminal response
+/// — the §L7 guarantee under test in the fault scenarios.
+fn drive_concurrent(
+    server: &ServerHandle,
+    prompts: &[Vec<i32>],
+    clients: usize,
+) -> Vec<Response> {
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let sender = server.sender.clone();
+        let mine: Vec<(usize, Vec<i32>)> =
+            prompts.iter().cloned().enumerate().skip(c).step_by(clients).collect();
+        joins.push(std::thread::spawn(move || {
+            let mut out = Vec::new();
+            for (idx, p) in mine {
+                let (tx, rx) = std::sync::mpsc::channel();
+                sender.send(Request::new(p, tx)).expect("router accepts");
+                out.push((idx, rx.recv().expect("terminal response (never a dropped channel)")));
+            }
+            out
+        }));
+    }
+    let mut responses: Vec<Option<Response>> = (0..prompts.len()).map(|_| None).collect();
+    for j in joins {
+        for (idx, resp) in j.join().expect("client thread") {
+            responses[idx] = Some(resp);
+        }
+    }
+    responses.into_iter().map(|r| r.expect("every prompt answered")).collect()
 }
 
 /// Decode the same prompts through bucketed serving and through
@@ -110,6 +145,53 @@ fn continuous_vs_batch_decode_parity_and_early_exit() {
     // Per-token latency is recorded per request on both paths.
     assert_eq!(cont.token_latency.count() as usize, lens.len());
     assert_eq!(batch.token_latency.count() as usize, lens.len());
+    // Healthy runs report no fault activity.
+    for stats in [&cont, &batch] {
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.retries, 0);
+        assert_eq!(stats.restarts, 0);
+        assert_eq!(stats.sheds, 0);
+    }
+}
+
+/// Satellite: EOS edge cases on both decode paths. A prompt whose
+/// hash-sampled generation length is 1 emits EOS as its very first
+/// token; an injected stuck generation never emits EOS within
+/// `dec_len`. Both must produce identical `Response.tokens` under
+/// batch-level and continuous serving. (prompt(46) samples gen_len 1;
+/// prompt(3)'s hash lands in the stuck_every=3 class — pinned by the
+/// structural asserts below, not by magic knowledge.)
+#[test]
+fn eos_first_token_and_no_eos_parity_across_decode_paths() {
+    let mut spec = sim_spec();
+    spec.fault.stuck_every = 3;
+    let lens = [1usize, 2, 3, 9, 17, 46, 64];
+    let run = |options: ServerOptions| -> Vec<Vec<i32>> {
+        let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec.clone()), options);
+        let out = collect(&server, &lens);
+        server.shutdown().unwrap();
+        out
+    };
+    let cont = run(copts(1, 4));
+    let batch = run(opts(1, true));
+    assert_eq!(cont, batch, "EOS edge cases must not split the decode paths");
+
+    // EOS as the very first emitted token: the row is exactly [EOS].
+    let eos_first: Vec<&Vec<i32>> =
+        cont.iter().filter(|r| r.len() == 1 && r[0] == EOS).collect();
+    assert!(!eos_first.is_empty(), "workload must include a gen_len==1 prompt: {cont:?}");
+
+    // No EOS within dec_len: full-length row, EOS-free.
+    let dec_len = spec.dec_len;
+    let no_eos: Vec<&Vec<i32>> =
+        cont.iter().filter(|r| r.len() == dec_len && !r.contains(&EOS)).collect();
+    assert!(!no_eos.is_empty(), "workload must include a stuck (no-EOS) prompt: {cont:?}");
+
+    // Everything else still terminates at EOS within dec_len.
+    for row in &cont {
+        assert!(row.len() <= dec_len);
+        assert!(row.contains(&EOS) || row.len() == dec_len);
+    }
 }
 
 /// An engine without the split HLO pair must fall back cleanly to the
@@ -192,39 +274,11 @@ fn multi_replica_determinism_and_stats_merge() {
     let run = |replicas: usize| -> (Vec<Vec<i32>>, ServerStats) {
         let server =
             ServerHandle::spawn_engine(EngineSpec::Sim(spec.clone()), copts(replicas, 4));
-        // Submit from 4 concurrent client threads to exercise batching
-        // across replicas, then collect in a stable order.
-        let mut joins = Vec::new();
-        for c in 0..4 {
-            let sender = server.sender.clone();
-            let mine: Vec<(usize, Vec<i32>)> = prompts
-                .iter()
-                .cloned()
-                .enumerate()
-                .skip(c)
-                .step_by(4)
-                .collect();
-            joins.push(std::thread::spawn(move || {
-                let mut out = Vec::new();
-                for (idx, p) in mine {
-                    let (tx, rx) = std::sync::mpsc::channel();
-                    sender.send(Request::new(p, tx)).unwrap();
-                    out.push((idx, rx.recv().unwrap()));
-                }
-                out
-            }));
-        }
-        let mut responses: Vec<Option<Vec<i32>>> = vec![None; prompts.len()];
-        let mut max_replica = 0usize;
-        for j in joins {
-            for (idx, resp) in j.join().unwrap() {
-                max_replica = max_replica.max(resp.replica);
-                responses[idx] = Some(resp.tokens);
-            }
-        }
+        let responses = drive_concurrent(&server, &prompts, 4);
+        let max_replica = responses.iter().map(|r| r.replica).max().unwrap();
         assert!(max_replica < replicas.max(1));
         let stats = server.shutdown().unwrap();
-        (responses.into_iter().map(|r| r.unwrap()).collect(), stats)
+        (responses.into_iter().map(|r| r.tokens).collect(), stats)
     };
 
     let (tokens_one, stats_one) = run(1);
@@ -243,9 +297,129 @@ fn multi_replica_determinism_and_stats_merge() {
         assert!(stats.p95_ms() >= stats.p50_ms());
         assert!(stats.executed_tokens >= stats.prompt_tokens);
         assert!(stats.decode_steps > 0, "continuous path exercised");
+        assert_eq!(stats.failed, 0);
     }
     assert_eq!(stats_one.replicas, 1);
     assert_eq!(stats_three.replicas, 3);
+}
+
+/// §L7 tentpole, deterministic single-replica variant: the only
+/// replica is killed mid-run; the supervisor must requeue its
+/// in-flight requests to the respawned replacement, every request must
+/// still succeed with exactly the healthy run's tokens, and shutdown
+/// must report the recovery (1 restart, >=1 retry, 2 merged stat
+/// sets) rather than an error.
+#[test]
+fn supervisor_recovers_killed_replica_and_requeues_in_flight() {
+    let prompts: Vec<Vec<i32>> = (0..16).map(|i| prompt(2 + (i * 9) % 60)).collect();
+
+    let healthy = {
+        let server = ServerHandle::spawn_engine(EngineSpec::Sim(sim_spec()), copts(1, 4));
+        let out = drive_concurrent(&server, &prompts, 4);
+        server.shutdown().unwrap();
+        out
+    };
+
+    let mut spec = sim_spec();
+    // Kill the original replica (id 0) on its second engine call: the
+    // first admission group has been prefilled, so its ledger is
+    // provably non-empty when the panic fires.
+    spec.fault.kill_replica = Some(0);
+    spec.fault.kill_after_calls = 2;
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), copts(1, 4));
+    let responses = drive_concurrent(&server, &prompts, 4);
+    let stats = server.shutdown().expect("recovered server shuts down cleanly");
+
+    for (resp, healthy_tokens) in responses.iter().zip(healthy.iter()) {
+        assert!(
+            resp.failure.is_none(),
+            "one crash within the retry budget must not fail requests: {:?}",
+            resp.failure
+        );
+        assert_eq!(&resp.tokens, &healthy_tokens.tokens, "retried decode is deterministic");
+    }
+    assert_eq!(stats.requests, prompts.len());
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.restarts, 1, "exactly one replacement spawned");
+    assert!(stats.retries >= 1, "the killed replica's in-flight work was requeued");
+    assert_eq!(stats.replicas, 2, "crashed incarnation + replacement both merged");
+}
+
+/// §L7 acceptance shape: 4 sim replicas, 1 killed mid-run — every
+/// accepted request gets a terminal response (success or explicit
+/// failure, none dropped or hung) and the server drains cleanly.
+#[test]
+fn four_replicas_one_killed_all_requests_terminal() {
+    let mut spec = sim_spec();
+    // Small but nonzero costs so the run is long enough for the kill
+    // to land mid-stream.
+    spec.dstep_ns = 100_000;
+    spec.fault.kill_replica = Some(2);
+    spec.fault.kill_after_calls = 2;
+    let prompts: Vec<Vec<i32>> = (0..48).map(|i| prompt(1 + (i * 11) % 64)).collect();
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), copts(4, 4));
+    // drive_concurrent panics on any dropped reply channel, so merely
+    // completing proves the none-dropped/none-hung half of the bar.
+    let responses = drive_concurrent(&server, &prompts, 8);
+    let stats = server.shutdown().expect("supervised crash is not a shutdown error");
+    let ok = responses.iter().filter(|r| r.failure.is_none()).count();
+    let failed = responses.iter().filter(|r| r.failure.is_some()).count();
+    assert_eq!(ok + failed, prompts.len(), "every request terminal");
+    assert_eq!(stats.requests, ok);
+    assert_eq!(stats.failed, failed);
+    assert!(stats.restarts <= 1, "at most the one killed replica is replaced");
+    // One kill within budget: everything should in fact succeed.
+    assert_eq!(failed, 0, "single crash within retry budget fails nothing");
+}
+
+/// With a zero retry budget, a crash turns the in-flight requests into
+/// explicit `RetriesExhausted` failures — terminal responses, not
+/// dropped channels — while untouched requests still succeed on the
+/// replacement replica.
+#[test]
+fn zero_retry_budget_fails_crashed_requests_explicitly() {
+    let mut spec = sim_spec();
+    spec.fault.kill_replica = Some(0);
+    spec.fault.kill_after_calls = 2;
+    let options = ServerOptions { max_retries: 0, ..copts(1, 4) };
+    let prompts: Vec<Vec<i32>> = (0..16).map(|i| prompt(2 + (i * 9) % 60)).collect();
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), options);
+    let responses = drive_concurrent(&server, &prompts, 4);
+    let stats = server.shutdown().expect("recovered server shuts down cleanly");
+    let failed: Vec<&Response> = responses.iter().filter(|r| r.failure.is_some()).collect();
+    assert!(!failed.is_empty(), "the killed replica's in-flight work must fail explicitly");
+    for resp in &failed {
+        assert_eq!(resp.failure, Some(FailReason::RetriesExhausted));
+        assert!(resp.tokens.is_empty());
+    }
+    let ok = responses.len() - failed.len();
+    assert!(ok > 0, "requests untouched by the crash still succeed");
+    assert_eq!(stats.requests, ok);
+    assert_eq!(stats.failed, failed.len());
+    assert_eq!(stats.retries, 0);
+}
+
+/// When the restart budget runs out, the server goes dead instead of
+/// hanging: every subsequent request is rejected with an explicit
+/// failure, `infer` errors promptly, and `shutdown` reports the crash.
+#[test]
+fn exhausted_restart_budget_rejects_and_reports() {
+    let mut spec = sim_spec();
+    spec.fault.panic_rate = 1.0; // every engine call panics
+    let options = ServerOptions { max_retries: 0, replica_restarts: 1, ..copts(1, 2) };
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), options);
+    let t0 = Instant::now();
+    for i in 0..6 {
+        assert!(
+            server.infer(prompt(3 + i)).is_err(),
+            "request {i} against a dying/dead server must error"
+        );
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "rejections must be prompt, not channel hangs"
+    );
+    assert!(server.shutdown().is_err(), "shutdown reports the exhausted restart budget");
 }
 
 /// A dead model thread must surface as an error from `infer`, not a
@@ -260,6 +434,30 @@ fn infer_errors_when_model_thread_dead() {
     let err = server.infer(vec![1, 2, 3]);
     assert!(err.is_err(), "infer against a dead server must error, not hang");
     assert!(server.shutdown().is_err(), "shutdown reports the startup failure");
+}
+
+/// Satellite regression: a pre-killed router/replica set must reject
+/// requests immediately even through a tiny bounded request channel —
+/// the old hang window was a blocking `send` whose consumer was gone.
+#[test]
+fn pre_killed_server_rejects_promptly_through_bounded_channel() {
+    let server = ServerHandle::spawn(
+        "definitely-not-an-artifact",
+        ServerOptions { queue_cap: 1, replica_restarts: 0, ..Default::default() },
+    );
+    let t0 = Instant::now();
+    for _ in 0..4 {
+        let resp = server.infer_response(vec![1, 2, 3]);
+        match resp {
+            Ok(r) => assert_eq!(r.failure, Some(FailReason::NoReplicas)),
+            Err(_) => {} // router already gone entirely: also fine
+        }
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "a 1-deep channel into a dead server must not block"
+    );
+    assert!(server.shutdown().is_err());
 }
 
 #[test]
@@ -283,23 +481,19 @@ fn bucket_ladder_is_monotone_per_request() {
 /// request spends blocked in the bounded request channel. With
 /// batch_size=1, one replica, a 1-deep request channel, and a ~20 ms
 /// decode, six concurrent requests serialize over ~120 ms; most of a
-/// late request's life is spent blocked in `send`. Because the latency
-/// clock starts at `Request::new` (before the blocking send), the
-/// slowest observed latency must reflect several decode rounds — if
-/// the clock started at router admission it would only ever see
-/// roughly one round's worth.
+/// late request's life is spent queued. Because the latency clock
+/// starts at `Request::new` (before the blocking send), the slowest
+/// observed latency must reflect several decode rounds — if the clock
+/// started at router admission it would only ever see roughly one
+/// round's worth.
 #[test]
 fn backpressured_infer_latency_includes_queue_time() {
-    let spec = SimSpec {
-        batch_size: 1,
-        enc_len: 16,
-        dec_len: 4,
-        vocab_size: 211,
-        token_ns: 0,
-        dtoken_ns: 0,
-        dstep_ns: 5_000_000, // 4 steps x 5 ms = 20 ms per monolithic batch
-        split_decode: false,
-    };
+    let mut spec = SimSpec::new(1, 16, 4);
+    spec.vocab_size = 211;
+    spec.token_ns = 0;
+    spec.dtoken_ns = 0;
+    spec.dstep_ns = 5_000_000; // 4 steps x 5 ms = 20 ms per monolithic batch
+    spec.split_decode = false;
     let options = ServerOptions {
         batch_window: Duration::from_millis(0),
         queue_cap: 1,
@@ -331,29 +525,15 @@ fn backpressured_infer_latency_includes_queue_time() {
 /// batch_size reaches occupancy above one batch's fill.
 #[test]
 fn continuous_scheduler_overlaps_admission_and_decode() {
-    let spec = SimSpec {
-        batch_size: 2,
-        enc_len: 32,
-        dec_len: 16,
-        vocab_size: 211,
-        token_ns: 0,
-        dtoken_ns: 50_000,
-        dstep_ns: 200_000,
-        split_decode: true,
-    };
+    let mut spec = SimSpec::new(2, 32, 16);
+    spec.vocab_size = 211;
+    spec.token_ns = 0;
+    spec.dtoken_ns = 50_000;
+    spec.dstep_ns = 200_000;
     let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), copts(1, 6));
-    let mut joins = Vec::new();
-    for i in 0..18 {
-        let sender = server.sender.clone();
-        joins.push(std::thread::spawn(move || {
-            let (tx, rx) = std::sync::mpsc::channel();
-            sender.send(Request::new(prompt(3 + (i * 5) % 28), tx)).unwrap();
-            rx.recv().unwrap()
-        }));
-    }
-    for j in joins {
-        j.join().unwrap();
-    }
+    let prompts: Vec<Vec<i32>> = (0..18).map(|i| prompt(3 + (i * 5) % 28)).collect();
+    let responses = drive_concurrent(&server, &prompts, 18);
+    assert_eq!(responses.len(), 18);
     let stats = server.shutdown().unwrap();
     assert_eq!(stats.requests, 18);
     assert!(stats.decode_steps > 0);
@@ -363,4 +543,114 @@ fn continuous_scheduler_overlaps_admission_and_decode() {
         stats.occupancy.mean()
     );
     assert!(stats.occupancy.mean() <= 6.0);
+}
+
+/// §L7 deadlines: stuck generations (injected never-EOS rows with a
+/// per-step cost) are shed with an explicit `DeadlineExceeded`
+/// response once they exceed `request_timeout_ms`, instead of holding
+/// a decode slot for the full dec_len.
+#[test]
+fn deadline_sheds_stuck_generations_mid_decode() {
+    let mut spec = sim_spec();
+    spec.fault.stuck_every = 1; // every request is a stuck generation
+    spec.fault.stuck_step_ns = 20_000_000; // 20 ms per decode step
+    let options = ServerOptions { request_timeout_ms: Some(50), ..copts(1, 2) };
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), options);
+    for i in 0..3 {
+        let resp = server.infer_response(prompt(4 + i)).expect("terminal response");
+        assert_eq!(
+            resp.failure,
+            Some(FailReason::DeadlineExceeded),
+            "a stuck generation past its deadline must be shed"
+        );
+        assert!(resp.tokens.is_empty());
+        assert!(
+            resp.latency >= Duration::from_millis(50),
+            "shed only after the deadline: {:?}",
+            resp.latency
+        );
+        assert!(
+            resp.latency < Duration::from_millis(8 * 20 + 200),
+            "shed well before the full stuck decode would finish: {:?}",
+            resp.latency
+        );
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, 0);
+    assert_eq!(stats.failed, 3);
+    assert_eq!(stats.sheds, 3, "all failures were deadline sheds");
+}
+
+/// §L7 drain acceptance: `shutdown()` with in-flight continuous
+/// batching slots completes every admitted request before joining —
+/// none dropped, none failed when no deadline is set.
+#[test]
+fn drain_completes_every_in_flight_request() {
+    let mut spec = sim_spec();
+    spec.dstep_ns = 3_000_000; // ~3 ms per fused step: decode outlives shutdown()
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), copts(1, 4));
+    let mut replies = Vec::new();
+    for i in 0..8 {
+        let (tx, rx) = std::sync::mpsc::channel();
+        server.sender.send(Request::new(prompt(3 + i * 7), tx)).unwrap();
+        replies.push(rx);
+    }
+    // Shutdown immediately: most of the 8 requests are still queued or
+    // mid-decode. Drain must finish them all.
+    let stats = server.shutdown().expect("drain is a clean shutdown");
+    for (i, rx) in replies.into_iter().enumerate() {
+        let resp = rx.recv().unwrap_or_else(|_| panic!("request {i} dropped during drain"));
+        assert!(resp.failure.is_none(), "request {i} failed during drain: {:?}", resp.failure);
+        assert!(!resp.tokens.is_empty());
+    }
+    assert_eq!(stats.requests, 8, "every admitted request completed");
+    assert_eq!(stats.failed, 0);
+    assert!(
+        stats.drained >= 1,
+        "some requests should have completed inside the drain window"
+    );
+}
+
+/// §L7 drain + deadlines: during drain, requests past their deadline
+/// are shed with explicit failures and everything else completes —
+/// sheds hit only expired requests.
+#[test]
+fn drain_sheds_only_requests_past_deadline() {
+    let mut spec = sim_spec();
+    spec.dstep_ns = 5_000_000; // 8 steps x 5 ms = 40 ms per slot wave
+    let options = ServerOptions { request_timeout_ms: Some(150), ..copts(1, 2) };
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), options);
+    let mut replies = Vec::new();
+    for i in 0..12 {
+        let (tx, rx) = std::sync::mpsc::channel();
+        server.sender.send(Request::new(prompt(3 + i), tx)).unwrap();
+        replies.push(rx);
+    }
+    let stats = server.shutdown().expect("drain is a clean shutdown");
+    let mut ok = 0;
+    let mut shed = 0;
+    for (i, rx) in replies.into_iter().enumerate() {
+        let resp = rx.recv().unwrap_or_else(|_| panic!("request {i} dropped during drain"));
+        match resp.failure {
+            None => {
+                ok += 1;
+                assert!(!resp.tokens.is_empty());
+            }
+            Some(FailReason::DeadlineExceeded) => {
+                shed += 1;
+                assert!(
+                    resp.latency >= Duration::from_millis(150),
+                    "shed before its deadline: {:?}",
+                    resp.latency
+                );
+            }
+            Some(other) => panic!("drain produced a non-deadline failure: {other:?}"),
+        }
+    }
+    assert_eq!(ok + shed, 12, "every request terminal");
+    assert!(ok >= 2, "early waves complete within their deadline");
+    assert!(shed >= 1, "late waves are shed, not left hanging");
+    assert_eq!(stats.requests, ok);
+    assert_eq!(stats.sheds, shed);
+    assert_eq!(stats.failed, shed, "only deadline sheds failed");
 }
