@@ -4,7 +4,7 @@
 //!
 //!     cargo run --release --example serve_demo -- [--clients 4]
 //!                [--requests 32] [--artifact micro-altup]
-//!                [--timeout-ms T] [--restarts N]
+//!                [--timeout-ms T] [--restarts N] [--spec-gamma G]
 
 use altup::coordinator::server::{ServerHandle, ServerOptions};
 use altup::data::tasks::{Task, TaskKind};
@@ -44,6 +44,9 @@ fn main() -> anyhow::Result<()> {
                 ms => Some(ms),
             },
             replica_restarts: args.usize_or("restarts", defaults.replica_restarts),
+            // §L8: speculative decoding (0 = off; plain-decode
+            // fallback when the artifact ships no draft model).
+            spec_gamma: args.usize_or("spec-gamma", defaults.spec_gamma),
             ..defaults
         },
     );
@@ -122,6 +125,18 @@ fn main() -> anyhow::Result<()> {
             "decode:      batch-level — {} tokens out, {:.3} ms/token",
             stats.tokens_generated,
             stats.token_ms()
+        );
+    }
+    if stats.spec.active() {
+        println!(
+            "speculative: {:.1}% acceptance ({}/{} drafted), {:.2} tokens/verify \
+             over {} verify steps ({} draft steps)",
+            stats.spec.acceptance_rate() * 100.0,
+            stats.spec.accepted,
+            stats.spec.drafted,
+            stats.spec.tokens_per_verify(),
+            stats.spec.verify_steps,
+            stats.spec.draft_steps
         );
     }
     println!(

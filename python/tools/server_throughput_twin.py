@@ -18,7 +18,15 @@ budget, terminal responses for every request):
   ``dstep_ns + dtoken_ns * slots`` over the static slot geometry, rows
   retiring at their sampled EOS;
 - degraded A/B: cont x4 with one replica killed mid-run vs the healthy
-  cont x4 — the acceptance bar is degraded QPS >= 65% of healthy.
+  cont x4 — the acceptance bar is degraded QPS >= 65% of healthy;
+- §L8 speculative decoding: per continuous iteration, γ draft-model
+  steps (``γ * (draft_step_ns + draft_token_ns * slots)``) plus ONE
+  fused full-model verify (costed like a decode_token step), each live
+  slot advancing by its hash-sampled accepted prefix + 1 correction
+  token (``sim_accept_len``, the leading run of per-position coins
+  under ``ACCEPT_RATE`` — bit-for-bit the Rust sampler). The spec A/B
+  runs cont x1 spec vs cont x1 plain on a decode-heavy dec_len=128
+  workload; the bar is >= 1.4x decode-token throughput (tokens/s).
 
 This lets the serving-policy numbers (continuous vs batch QPS, p95,
 early-exit savings, occupancy, degraded-mode QPS) be measured on
@@ -54,6 +62,13 @@ MAX_RETRIES = 2    # ServerOptions::max_retries default
 RESTARTS = 2       # ALTUP_REPLICA_RESTARTS default
 KILL_REPLICA = 1   # degraded A/B: which replica the fault kills
 KILL_AFTER = 40    # ...on which engine call (mirrors bench --kill-after)
+# §L8 draft cost/acceptance model (SimDraftSpec defaults) + the spec
+# A/B shape (bench --spec-gamma / --spec-dec-len defaults).
+DRAFT_TOKEN_NS = DTOKEN_NS // 8   # ALTUP_SIM_DRAFT_TOKEN_NS default
+DRAFT_STEP_NS = DSTEP_NS // 4     # ALTUP_SIM_DRAFT_STEP_NS default
+ACCEPT_RATE = 0.8                 # ALTUP_SIM_ACCEPT_RATE default
+SPEC_GAMMA = 4
+SPEC_DEC_LEN = 128
 
 
 class Rng:
@@ -96,16 +111,35 @@ def sim_row_hash(tokens):
     return h
 
 
+def sim_mix64(x):
+    """murmur3-style finalizer (coordinator::server::sim_mix)."""
+    x ^= x >> 33
+    x = (x * 0xFF51AFD7ED558CCD) & MASK
+    return x ^ (x >> 29)
+
+
 def sim_gen_len(h, dec_len):
     """Hash-sampled generation length in [1, dec_len] (sim_gen_len)."""
-    x = h ^ (h >> 33)
-    x = (x * 0xFF51AFD7ED558CCD) & MASK
-    x ^= x >> 29
-    return 1 + (x % max(dec_len, 1))
+    return 1 + (sim_mix64(h) % max(dec_len, 1))
+
+
+def sim_accept_len(h, pos, gamma, rate):
+    """§L8 acceptance sampler (coordinator::server::sim_accept_len,
+    bit-for-bit): the accepted prefix is the leading run of per-position
+    hash coins landing under ``rate``."""
+    n = 0
+    while n < gamma:
+        x = sim_mix64(h ^ (((pos + n) * 0xD1B54A32D192ED03) & MASK))
+        if (x >> 11) * (1.0 / (1 << 53)) >= rate:
+            break
+        n += 1
+    return n
 
 
 def mixed_prompts(n, enc_len, vocab, seed):
-    """Mirror of the bench's mixed_prompts draws: (length, gen_len)."""
+    """Mirror of the bench's mixed_prompts draws: (length, row_hash).
+    Generation lengths derive from the hash per run (`sim_gen_len(h,
+    dec_len)`), so one workload serves every dec_len variant."""
     rng = Rng(seed)
     out = []
     for _ in range(n):
@@ -114,7 +148,7 @@ def mixed_prompts(n, enc_len, vocab, seed):
         else:
             length = rng.range(enc_len // 2, enc_len)
         tokens = [rng.range(1, vocab) for _ in range(length)]
-        out.append((length, sim_gen_len(sim_row_hash(tokens), DEC_LEN)))
+        out.append((length, sim_row_hash(tokens)))
     return out
 
 
@@ -164,6 +198,12 @@ class Stats:
         self.retries = 0
         self.restarts = 0
         self.failed = 0
+        # §L8 SpecMeter mirror.
+        self.drafted = 0
+        self.accepted = 0
+        self.draft_steps = 0
+        self.verify_steps = 0
+        self.spec_tokens = 0
         self.latency_ms = []
         self.token_ms = []
         self.lock = threading.Lock()
@@ -183,6 +223,12 @@ class Stats:
     def mean_occupancy(self):
         return self.occupancy_sum / self.decode_steps if self.decode_steps else 0.0
 
+    def acceptance_rate(self):
+        return self.accepted / self.drafted if self.drafted else 0.0
+
+    def tokens_per_verify(self):
+        return self.spec_tokens / self.verify_steps if self.verify_steps else 0.0
+
     def note_response(self, latency_s, generated, saved, prompt):
         self.latency_ms.append(latency_s * 1e3)
         self.token_ms.append(latency_s * 1e3 / max(generated, 1))
@@ -195,15 +241,18 @@ class Stats:
         self.failed += 1
 
 
-def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None):
+def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
+               dec_len=DEC_LEN, gamma=0):
     """One serving configuration. Request record (mirrors the Rust
     Admitted/ledger entry): (t0, admitted, reply, length, gen_len,
-    attempts). ``fault`` mirrors FaultSpec: {"kill_replica": id,
-    "kill_after_calls": n} — the matching replica raises InjectedKill on
-    that engine call; the router requeues its in-flight requests
-    (bounded by MAX_RETRIES) and respawns a replacement (bounded by
-    RESTARTS). Every request gets a terminal reply: True (tokens) or
-    False (explicit failure)."""
+    attempts, row_hash). ``fault`` mirrors FaultSpec: {"kill_replica":
+    id, "kill_after_calls": n} — the matching replica raises
+    InjectedKill on that engine call; the router requeues its in-flight
+    requests (bounded by MAX_RETRIES) and respawns a replacement
+    (bounded by RESTARTS). ``gamma`` > 0 mirrors §L8 speculative
+    decoding on the continuous path (draft burst + fused verify per
+    iteration, hash-sampled acceptance). Every request gets a terminal
+    reply: True (tokens) or False (explicit failure)."""
     req_q = queue.Queue()
     # Bounded job queue = backpressure, mirroring the Rust router: every
     # ship is a try-put; a full queue parks the router briefly so the
@@ -248,7 +297,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None):
             except InjectedKill:
                 exit_q.put(("crash", rid, [(bucket, r) for r in group]))
                 return
-            nsleep(TOKEN_NS * BATCH_SIZE * bucket + DEC_LEN * (
+            nsleep(TOKEN_NS * BATCH_SIZE * bucket + dec_len * (
                 DSTEP_NS + DTOKEN_NS * BATCH_SIZE
             ))
             now = time.monotonic()
@@ -327,26 +376,64 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None):
                         exit_q.put(("exit", rid, []))
                         return
                     continue
-                # One fused decode iteration over the whole slot geometry.
-                bump()
-                nsleep(DSTEP_NS + DTOKEN_NS * slots_n)
-                now = time.monotonic()
-                with stats.lock:
-                    stats.decode_steps += 1
-                    stats.occupancy_sum += n_live
-                for s, act in enumerate(active):
-                    if act is None:
-                        continue
-                    act[1] += 1
-                    req, emitted, bucket = act[0], act[1], act[2]
-                    if emitted >= req[4] or emitted >= DEC_LEN:
-                        active[s] = None
+                if gamma > 0:
+                    # §L8 draft/verify round: γ draft-model steps plus
+                    # ONE fused full-model verify over the static slot
+                    # geometry; each live slot advances by its
+                    # hash-sampled accepted prefix + 1 correction
+                    # token, truncated at EOS (gen_len) / dec_len
+                    # exactly like plain decode.
+                    bump()
+                    nsleep(gamma * (DRAFT_STEP_NS + DRAFT_TOKEN_NS * slots_n))
+                    bump()
+                    nsleep(DSTEP_NS + DTOKEN_NS * slots_n)
+                    now = time.monotonic()
+                    with stats.lock:
+                        stats.decode_steps += 1
+                        stats.occupancy_sum += n_live
+                        stats.draft_steps += gamma
+                        stats.verify_steps += 1
+                    for s, act in enumerate(active):
+                        if act is None:
+                            continue
+                        req, emitted, bucket = act[0], act[1], act[2]
+                        a = sim_accept_len(req[6], emitted, gamma, ACCEPT_RATE)
+                        cap = min(req[4], dec_len)  # EOS position
+                        new_total = min(emitted + a + 1, cap)
+                        act[1] = new_total
                         with stats.lock:
-                            stats.note_response(
-                                now - req[0], emitted, DEC_LEN - emitted,
-                                min(req[3], bucket),
-                            )
-                        req[2].put(True)
+                            stats.drafted += gamma
+                            stats.accepted += a
+                            stats.spec_tokens += new_total - emitted
+                        if new_total >= cap:
+                            active[s] = None
+                            with stats.lock:
+                                stats.note_response(
+                                    now - req[0], new_total, dec_len - new_total,
+                                    min(req[3], bucket),
+                                )
+                            req[2].put(True)
+                else:
+                    # One fused decode iteration over the slot geometry.
+                    bump()
+                    nsleep(DSTEP_NS + DTOKEN_NS * slots_n)
+                    now = time.monotonic()
+                    with stats.lock:
+                        stats.decode_steps += 1
+                        stats.occupancy_sum += n_live
+                    for s, act in enumerate(active):
+                        if act is None:
+                            continue
+                        act[1] += 1
+                        req, emitted, bucket = act[0], act[1], act[2]
+                        if emitted >= req[4] or emitted >= dec_len:
+                            active[s] = None
+                            with stats.lock:
+                                stats.note_response(
+                                    now - req[0], emitted, dec_len - emitted,
+                                    min(req[3], bucket),
+                                )
+                            req[2].put(True)
         except InjectedKill:
             unfinished = list(pending) + list(admitting)
             unfinished += [(act[2], act[0]) for act in active if act is not None]
@@ -371,7 +458,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None):
                 with stats.lock:
                     stats.retries += 1
                 groups.setdefault(bucket, []).append(
-                    (req[0], time.monotonic(), req[2], req[3], req[4], attempts)
+                    (req[0], time.monotonic(), req[2], req[3], req[4], attempts, req[6])
                 )
         if not state["stops_sent"] and state["restarts_left"] > 0:
             state["restarts_left"] -= 1
@@ -496,16 +583,18 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None):
                 except queue.Empty:
                     pass
             if msg is not None:
-                t0, reply, length, gen_len = msg
+                t0, reply, length, gen_len, h = msg
                 bucket = bucket_for(length, ENC_LEN) if bucketed else ENC_LEN
                 groups.setdefault(bucket, []).append(
-                    (t0, time.monotonic(), reply, length, gen_len, 0)
+                    (t0, time.monotonic(), reply, length, gen_len, 0, h)
                 )
 
     def client(c):
-        for length, gen_len in workload[c::n_clients]:
+        for length, h in workload[c::n_clients]:
             reply = queue.SimpleQueue()
-            req_q.put((time.monotonic(), reply, length, gen_len))
+            # gen_len derives from the row hash at THIS run's dec_len,
+            # mirroring the sim engine's per-run EOS sampling.
+            req_q.put((time.monotonic(), reply, length, sim_gen_len(h, dec_len), h))
             reply.get()  # terminal: True (tokens) or False (failure)
         req_q.put(None)  # this client is done
 
@@ -611,6 +700,44 @@ def main():
         f"terminal {dstats.requests + dstats.failed}/{len(workload)}"
     )
 
+    # §L8 spec-vs-plain A/B: cont x1 with γ-draft/verify speculation vs
+    # cont x1 plain, on a decode-heavy dec_len=128 variant of the same
+    # prompt stream (generation dominates — the regime speculative
+    # decoding targets). Decode-token throughput (tokens/s) is the
+    # comparison; acceptance bar: >= 1.4x at the default accept coin.
+    # 2x the grid's request count (an A/B over ~2 s runs sits inside
+    # the scheduler-noise floor of a small shared host) and best-of-2
+    # per arm (mirrors the bench): decode is deterministic — identical
+    # tokens every trial — so trial spread is pure one-sided scheduler
+    # noise and the faster trial is the better estimate.
+    spec_requests = REQUESTS * 2
+    spec_workload = mixed_prompts(spec_requests, ENC_LEN, VOCAB, 0x5E0A11)
+
+    def best_of(n, gamma):
+        best = None
+        for _ in range(n):
+            q, s = run_config(spec_workload, 1, bucketed=True, continuous=True,
+                              dec_len=SPEC_DEC_LEN, gamma=gamma)
+            if best is None or q > best[0]:
+                best = (q, s)
+        return best
+
+    pq, pstats = best_of(2, 0)
+    sq, sstats = best_of(2, SPEC_GAMMA)
+    assert pstats.tokens_generated == sstats.tokens_generated, (
+        pstats.tokens_generated, sstats.tokens_generated)
+    plain_tps = pq * pstats.tokens_generated / spec_requests
+    spec_tps = sq * sstats.tokens_generated / spec_requests
+    tokens_ratio = spec_tps / plain_tps if plain_tps else 0.0
+    print(
+        f"speculative g={SPEC_GAMMA} (accept coin {ACCEPT_RATE}): "
+        f"{tokens_ratio:.2f}x decode-token throughput "
+        f"({spec_tps:.0f} vs {plain_tps:.0f} tok/s), "
+        f"acceptance {sstats.acceptance_rate() * 100:.1f}%, "
+        f"{sstats.tokens_per_verify():.2f} tokens/verify "
+        f"over {sstats.verify_steps} verify steps"
+    )
+
     doc = {
         "bench": "server_throughput",
         "engine": "sim",
@@ -644,6 +771,23 @@ def main():
             "failed": dstats.failed,
             "terminal": dstats.requests + dstats.failed,
             "requests": REQUESTS,
+        },
+        "speculative": {
+            "gamma": SPEC_GAMMA,
+            "requests": spec_requests,
+            "dec_len": SPEC_DEC_LEN,
+            "accept_coin": ACCEPT_RATE,
+            "plain": row("cont-plain", 1, pq, pstats),
+            "spec": row("cont-spec", 1, sq, sstats),
+            "plain_tokens_per_sec": round(plain_tps, 1),
+            "spec_tokens_per_sec": round(spec_tps, 1),
+            "tokens_ratio": round(tokens_ratio, 3),
+            "acceptance_rate": round(sstats.acceptance_rate(), 4),
+            "tokens_per_verify": round(sstats.tokens_per_verify(), 3),
+            "drafted": sstats.drafted,
+            "accepted": sstats.accepted,
+            "verify_steps": sstats.verify_steps,
+            "draft_steps": sstats.draft_steps,
         },
         "producer": "python/tools/server_throughput_twin.py "
                     "(threaded twin; re-run `cargo bench --bench server_throughput -- --json` "

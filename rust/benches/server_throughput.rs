@@ -13,6 +13,11 @@
 //!   --kill-replica <r> degraded A/B: replica id to kill (default 1)
 //!   --kill-after <c>   degraded A/B: engine call that triggers the
 //!                      kill (default 40)
+//!   --spec-gamma <g>   §L8 spec-vs-plain A/B draft length (default 4;
+//!                      0 skips the A/B)
+//!   --spec-dec-len <n> dec_len of the decode-heavy spec A/B workload
+//!                      (default 128 — generation-dominated, the
+//!                      regime speculative decoding targets)
 //!
 //! Besides the L5/L6 grid, the bench runs a §L7 **degraded-mode A/B**
 //! (sim engine only): `cont x4` healthy vs `cont x4` with one replica
@@ -20,6 +25,15 @@
 //! in-flight requests, respawn a replacement, and deliver a terminal
 //! response for every request; the acceptance bar is degraded QPS >=
 //! 65% of healthy QPS.
+//!
+//! §L8 adds a **spec-vs-plain A/B** (sim engine only): `cont x1` with
+//! γ-draft/verify speculation vs `cont x1` plain, on a decode-heavy
+//! variant of the workload (dec_len raised so generation dominates).
+//! The comparison is decode-token throughput (tokens/s) — speculation
+//! changes tokens delivered per full-model step, not request count —
+//! and the acceptance bar is >= 1.4x at the Sim default acceptance
+//! model (hash coin α = 0.8). Output parity (spec tokens == plain
+//! tokens) is `ensure!`d on every run.
 //!
 //! Backend: when `make artifacts` has run AND a real PJRT backend is
 //! linked, the bench serves the micro-altup artifact; otherwise it
@@ -134,6 +148,8 @@ fn main() -> anyhow::Result<()> {
     let timeout_ms = args.u64_or("timeout-ms", 0);
     let kill_replica = args.usize_or("kill-replica", 1);
     let kill_after = args.u64_or("kill-after", 40);
+    let spec_gamma = args.usize_or("spec-gamma", 4);
+    let spec_dec_len = args.usize_or("spec-dec-len", 128);
     let json_out = args.has("json") || args.has("json-path");
 
     // Pick the backend: real artifact when present and executable,
@@ -173,6 +189,10 @@ fn main() -> anyhow::Result<()> {
         continuous,
         slots,
         request_timeout_ms: (timeout_ms > 0).then_some(timeout_ms),
+        // Pinned off so an exported ALTUP_SPEC_GAMMA cannot silently
+        // turn speculation on in the plain grid/degraded rows; only
+        // the dedicated spec A/B (below) overrides this.
+        spec_gamma: 0,
         ..Default::default()
     };
 
@@ -258,6 +278,79 @@ fn main() -> anyhow::Result<()> {
             ("requests", Json::num(requests as f64)),
         ]));
     }
+    // §L8 spec-vs-plain A/B (sim engine only — the draft cost model
+    // lives in SimSpec): cont x1 with γ-draft/verify speculation vs
+    // cont x1 plain, on a decode-heavy workload variant (dec_len
+    // raised so generation, not prefill, dominates — the regime
+    // speculative decoding targets). Decode-token throughput is the
+    // comparison: speculation changes tokens per full-model step.
+    let mut spec_row: Option<Json> = None;
+    if let (EngineSpec::Sim(base), true) = (&engine, spec_gamma > 0) {
+        let mut sspec = base.clone();
+        sspec.dec_len = spec_dec_len;
+        // 2x the grid's request count (an A/B over ~2 s runs is inside
+        // the scheduler-noise floor of a small shared host), and
+        // best-of-2 per arm: decode is deterministic — identical
+        // tokens every trial — so trial spread is pure one-sided
+        // scheduler noise and the faster trial is the better estimate.
+        let spec_requests = requests * 2;
+        let sprompts = mixed_prompts(spec_requests, enc_len, vocab, 0x5E_0A11);
+        let run_at = |gamma: usize| -> anyhow::Result<(f64, ServerStats)> {
+            let mut best: Option<(f64, ServerStats)> = None;
+            for _ in 0..2 {
+                let mut o = opts(1, true, true);
+                o.spec_gamma = gamma;
+                let (q, stats) =
+                    drive(&EngineSpec::Sim(sspec.clone()), o, &sprompts, clients)?;
+                if best.as_ref().is_none_or(|(bq, _)| q > *bq) {
+                    best = Some((q, stats));
+                }
+            }
+            Ok(best.expect("at least one trial ran"))
+        };
+        let (pq, pstats) = run_at(0)?;
+        let (sq, sstats) = run_at(spec_gamma)?;
+        anyhow::ensure!(
+            pstats.tokens_generated == sstats.tokens_generated,
+            "spec parity: {} tokens plain vs {} spec",
+            pstats.tokens_generated,
+            sstats.tokens_generated
+        );
+        anyhow::ensure!(sstats.spec.verify_steps > 0, "speculation did not engage");
+        report(&format!("cont x1 plain dl{spec_dec_len}"), pq, &pstats);
+        report(&format!("cont x1 spec g{spec_gamma}"), sq, &sstats);
+        let plain_tps = pq * pstats.tokens_generated as f64 / spec_requests as f64;
+        let spec_tps = sq * sstats.tokens_generated as f64 / spec_requests as f64;
+        let tokens_ratio = if plain_tps > 0.0 { spec_tps / plain_tps } else { 0.0 };
+        let accept_rate = sspec.draft.as_ref().map_or(0.0, |d| d.accept_rate);
+        println!(
+            "speculative g={spec_gamma} (accept coin {accept_rate:.2}): \
+             {tokens_ratio:.2}x decode-token throughput \
+             ({spec_tps:.0} vs {plain_tps:.0} tok/s), \
+             {:.1}% acceptance, {:.2} tokens/verify over {} verify steps",
+            sstats.spec.acceptance_rate() * 100.0,
+            sstats.spec.tokens_per_verify(),
+            sstats.spec.verify_steps
+        );
+        spec_row = Some(Json::obj(vec![
+            ("gamma", Json::num(spec_gamma as f64)),
+            ("requests", Json::num(spec_requests as f64)),
+            ("dec_len", Json::num(spec_dec_len as f64)),
+            ("accept_coin", Json::num(accept_rate)),
+            ("plain", row_json("cont-plain", 1, pq, &pstats)),
+            ("spec", row_json("cont-spec", 1, sq, &sstats)),
+            ("plain_tokens_per_sec", Json::num(plain_tps)),
+            ("spec_tokens_per_sec", Json::num(spec_tps)),
+            ("tokens_ratio", Json::num(tokens_ratio)),
+            ("acceptance_rate", Json::num(sstats.spec.acceptance_rate())),
+            ("tokens_per_verify", Json::num(sstats.spec.tokens_per_verify())),
+            ("drafted", Json::num(sstats.spec.drafted as f64)),
+            ("accepted", Json::num(sstats.spec.accepted as f64)),
+            ("verify_steps", Json::num(sstats.spec.verify_steps as f64)),
+            ("draft_steps", Json::num(sstats.spec.draft_steps as f64)),
+        ]));
+    }
+
     let (bq1, bp1) = find("batch", 1);
     let (cq1, cp1) = find("cont", 1);
     let (cq4, _) = find("cont", 4);
@@ -315,6 +408,9 @@ fn main() -> anyhow::Result<()> {
         ];
         if let Some(d) = degraded_row {
             top.push(("degraded", d));
+        }
+        if let Some(s) = spec_row {
+            top.push(("speculative", s));
         }
         let doc = Json::obj(top);
         std::fs::write(&path, format!("{doc}\n"))?;

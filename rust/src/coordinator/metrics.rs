@@ -254,6 +254,79 @@ impl OccupancyMeter {
     }
 }
 
+/// Speculative-decoding counters (§L8): drafted-vs-accepted tokens,
+/// draft/verify step counts, and the tokens the spec path actually
+/// delivered. Mergeable across replicas like the other serving meters.
+///
+/// - `acceptance_rate` = accepted / drafted — the draft model's
+///   quality number (cf. the AltUp predictor's correction frequency);
+///   counts RAW accepted prefixes, before EOS/dec_len truncation.
+/// - `tokens_per_verify` = delivered tokens / fused verify steps,
+///   summed over ALL live slots per round — an occupancy-confounded
+///   aggregate. Divide by mean occupancy for the per-slot value, which
+///   is bounded by γ+1 and is what plain decode holds at exactly 1.0
+///   (so at occupancy O, plain decode's same aggregate would read O).
+#[derive(Debug, Clone, Default)]
+pub struct SpecMeter {
+    /// Draft tokens proposed (γ per live slot per verify round).
+    pub drafted: u64,
+    /// Drafted tokens the fused verify accepted (longest matching
+    /// prefix, before host-side EOS/dec_len truncation).
+    pub accepted: u64,
+    /// Draft-model decode steps executed (γ per round).
+    pub draft_steps: u64,
+    /// Fused full-model verify executions.
+    pub verify_steps: u64,
+    /// Tokens delivered to clients through the spec path (accepted
+    /// prefix + correction, EOS/dec_len-truncated).
+    pub spec_tokens: u64,
+}
+
+impl SpecMeter {
+    /// Fraction of drafted tokens the full model accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Delivered tokens per fused verify step, summed over all live
+    /// slots (per-slot value = this / mean occupancy; plain decode's
+    /// per-slot value is 1.0).
+    pub fn tokens_per_verify(&self) -> f64 {
+        if self.verify_steps == 0 {
+            0.0
+        } else {
+            self.spec_tokens as f64 / self.verify_steps as f64
+        }
+    }
+
+    /// Record `n` tokens actually delivered to a client through the
+    /// spec path. The draft/verify counters are filled by
+    /// `SpecDecoder::round`; the delivered count is the one half the
+    /// round cannot know — EOS/`dec_len` truncation happens in the
+    /// serving loop — so the caller MUST report it here (next to slot
+    /// retirement) or `tokens_per_verify` reads 0.
+    pub fn note_delivered(&mut self, n: u64) {
+        self.spec_tokens += n;
+    }
+
+    /// Whether any speculative round ran (summary/JSON gating).
+    pub fn active(&self) -> bool {
+        self.verify_steps > 0
+    }
+
+    pub fn merge(&mut self, other: &SpecMeter) {
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.draft_steps += other.draft_steps;
+        self.verify_steps += other.verify_steps;
+        self.spec_tokens += other.spec_tokens;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -405,6 +478,42 @@ mod tests {
         assert_eq!(other.steps(), 3);
         assert!((other.mean() - 14.0 / 3.0).abs() < 1e-12);
         assert_eq!(other.utilization(0), 0.0);
+    }
+
+    #[test]
+    fn spec_meter_rates_and_merge() {
+        let empty = SpecMeter::default();
+        assert!(!empty.active());
+        assert_eq!(empty.acceptance_rate(), 0.0, "no NaN on empty");
+        assert_eq!(empty.tokens_per_verify(), 0.0);
+
+        let mut a = SpecMeter {
+            drafted: 40,
+            accepted: 30,
+            draft_steps: 40,
+            verify_steps: 10,
+            spec_tokens: 38,
+        };
+        assert!(a.active());
+        assert!((a.acceptance_rate() - 0.75).abs() < 1e-12);
+        assert!((a.tokens_per_verify() - 3.8).abs() < 1e-12);
+
+        let b = SpecMeter {
+            drafted: 10,
+            accepted: 0,
+            draft_steps: 10,
+            verify_steps: 5,
+            spec_tokens: 5,
+        };
+        a.merge(&b);
+        assert_eq!(a.drafted, 50);
+        assert_eq!(a.accepted, 30);
+        assert_eq!(a.draft_steps, 50);
+        assert_eq!(a.verify_steps, 15);
+        assert_eq!(a.spec_tokens, 43);
+        assert!((a.acceptance_rate() - 0.6).abs() < 1e-12);
+        // Reject-all alone still delivers 1 correction per verify.
+        assert!((b.tokens_per_verify() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -4,4 +4,5 @@
 pub mod metrics;
 pub mod pipeline;
 pub mod server;
+pub mod spec;
 pub mod trainer;

@@ -21,6 +21,20 @@
 //! - **Batch-level (fallback / `ALTUP_NO_CONT_BATCH=1`):** the §Perf
 //!   L5 run-to-completion loop over the monolithic `decode_step`.
 //!
+//! §L8 — on the continuous path, **speculative decoding**
+//! (`ALTUP_SPEC_GAMMA` / `--spec-gamma`, via `coordinator::spec`)
+//! replaces each fused `decode_token` iteration with a draft/verify
+//! round: a cheap draft session proposes γ tokens per live slot, one
+//! fused full-model `verify@γ` accepts the longest greedy-identical
+//! prefix and supplies a correction token, and each slot's stream
+//! advances by 1..=γ+1 tokens per full-model step — token-for-token
+//! identical to plain decode (parity pinned by `tests/server.rs`).
+//! Artifacts opt in by shipping a `draft` entry in meta.json; the sim
+//! engine models the draft with `SimDraftSpec` (per-step cost + a
+//! hash-sampled per-position acceptance coin) so the subsystem tests
+//! and benches without a PJRT backend. Replicas fall back to plain
+//! decode when no draft is available.
+//!
 //! §L7 — the serving lifecycle is supervised (cf. Pope et al. 2022,
 //! where replica failure and load shedding are scheduler states, not
 //! fatal errors):
@@ -52,11 +66,13 @@
 //! generations), so supervision, retry, shedding, and drain are all
 //! testable and benchable without a PJRT backend.
 
-use crate::coordinator::metrics::{LatencyHistogram, OccupancyMeter};
+use crate::coordinator::metrics::{LatencyHistogram, OccupancyMeter, SpecMeter};
+use crate::coordinator::spec::{self, SpecDecoder};
 use crate::data::tokenizer::EOS;
 use crate::runtime::artifact::load_named;
 use crate::runtime::client::Client;
 use crate::runtime::session::{bucket_for, DecodeSlots, Session};
+use crate::util::env;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -221,53 +237,37 @@ pub struct ServerOptions {
     /// server's lifetime after crashes. `ALTUP_REPLICA_RESTARTS` sets
     /// the default (else 2).
     pub replica_restarts: usize,
+    /// Speculative-decoding draft length γ (§L8): each continuous
+    /// decode iteration drafts γ tokens per live slot and verifies
+    /// them in one fused full-model step. 0 (the default) disables
+    /// speculation; `ALTUP_SPEC_GAMMA` sets the default. An artifact
+    /// without `verify@<γ>` for this exact γ serves at its compiled
+    /// `DraftSpec::gamma` instead (`Engine::effective_spec_gamma`);
+    /// with no draft model or no runnable verify at all, replicas fall
+    /// back to plain decode.
+    pub spec_gamma: usize,
 }
 
 impl Default for ServerOptions {
+    // All knob defaults resolve through `util::env` (§L8 satellite:
+    // one typed parse-with-default helper instead of a hand-rolled
+    // chain per knob).
     fn default() -> Self {
         ServerOptions {
             batch_window: Duration::from_millis(5),
             seed: 0,
             checkpoint: None,
-            replicas: replicas_from_env(),
-            bucketed: std::env::var_os("ALTUP_NO_BUCKETS").is_none(),
-            slots: slots_from_env(),
-            continuous: std::env::var_os("ALTUP_NO_CONT_BATCH").is_none(),
+            replicas: env::usize_at_least("ALTUP_SERVER_REPLICAS", 1, 1),
+            bucketed: !env::flag("ALTUP_NO_BUCKETS"),
+            slots: env::usize_or("ALTUP_SERVER_SLOTS", 0),
+            continuous: !env::flag("ALTUP_NO_CONT_BATCH"),
             queue_cap: 1024,
-            request_timeout_ms: timeout_ms_from_env(),
+            request_timeout_ms: env::opt_u64_nonzero("ALTUP_REQUEST_TIMEOUT_MS"),
             max_retries: 2,
-            replica_restarts: restarts_from_env(),
+            replica_restarts: env::usize_or("ALTUP_REPLICA_RESTARTS", 2),
+            spec_gamma: spec::gamma_from_env(),
         }
     }
-}
-
-fn replicas_from_env() -> usize {
-    std::env::var("ALTUP_SERVER_REPLICAS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or(1)
-}
-
-fn slots_from_env() -> usize {
-    std::env::var("ALTUP_SERVER_SLOTS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .unwrap_or(0)
-}
-
-fn timeout_ms_from_env() -> Option<u64> {
-    std::env::var("ALTUP_REQUEST_TIMEOUT_MS")
-        .ok()
-        .and_then(|s| s.parse::<u64>().ok())
-        .filter(|&ms| ms > 0)
-}
-
-fn restarts_from_env() -> usize {
-    std::env::var("ALTUP_REPLICA_RESTARTS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .unwrap_or(2)
 }
 
 /// Which decode backend the replicas run.
@@ -337,25 +337,57 @@ pub struct SimSpec {
     /// Pretend the artifact ships the split prefill/decode_token HLO
     /// pair. `false` exercises the batch-level fallback path.
     pub split_decode: bool,
+    /// §L8 draft-model cost/acceptance model. `Some` means the sim
+    /// "artifact" ships a draft (speculation still needs
+    /// `ServerOptions::spec_gamma > 0` to switch on); `None` exercises
+    /// the no-draft fallback path.
+    pub draft: Option<SimDraftSpec>,
     /// Injected faults (default: none).
     pub fault: FaultSpec,
 }
 
+/// Sim cost + acceptance model for the §L8 draft model. Defaults
+/// mirror a recycled AltUp-lite draft (fig5): roughly an eighth of the
+/// full model's per-row decode cost.
+#[derive(Debug, Clone)]
+pub struct SimDraftSpec {
+    /// Simulated ns per slot-row per draft decode step.
+    /// `ALTUP_SIM_DRAFT_TOKEN_NS` sets the default (else `dtoken_ns/8`).
+    pub dtoken_ns: u64,
+    /// Fixed dispatch overhead per draft step (the draft executable is
+    /// smaller, so cheaper to launch too). `ALTUP_SIM_DRAFT_STEP_NS`
+    /// sets the default (else `dstep_ns/4`).
+    pub dstep_ns: u64,
+    /// Probability that any single drafted token matches the full
+    /// model's greedy choice, hash-sampled per (row, position) — the
+    /// accepted prefix is the leading run of matches, so the mean
+    /// accepted length is `α(1-α^γ)/(1-α)`. `ALTUP_SIM_ACCEPT_RATE`
+    /// sets the default (else 0.8 — the per-token match rate of a
+    /// well-matched draft per Leviathan et al., which the fig5
+    /// recycled draft is trained to be). 1.0 = accept-all, 0.0 =
+    /// reject-all (the parity-test extremes).
+    pub accept_rate: f64,
+}
+
 impl SimSpec {
     pub fn new(batch_size: usize, enc_len: usize, dec_len: usize) -> SimSpec {
-        let env_ns = |key: &str, default: u64| {
-            std::env::var(key).ok().and_then(|s| s.parse::<u64>().ok()).unwrap_or(default)
-        };
-        let token_ns = env_ns("ALTUP_SIM_TOKEN_NS", 20000);
+        let token_ns = env::u64_or("ALTUP_SIM_TOKEN_NS", 20000);
+        let dtoken_ns = env::u64_or("ALTUP_SIM_DTOKEN_NS", token_ns);
+        let dstep_ns = env::u64_or("ALTUP_SIM_DSTEP_NS", 50000);
         SimSpec {
             batch_size,
             enc_len,
             dec_len,
             vocab_size: 512,
             token_ns,
-            dtoken_ns: env_ns("ALTUP_SIM_DTOKEN_NS", token_ns),
-            dstep_ns: env_ns("ALTUP_SIM_DSTEP_NS", 50000),
+            dtoken_ns,
+            dstep_ns,
             split_decode: true,
+            draft: Some(SimDraftSpec {
+                dtoken_ns: env::u64_or("ALTUP_SIM_DRAFT_TOKEN_NS", dtoken_ns / 8),
+                dstep_ns: env::u64_or("ALTUP_SIM_DRAFT_STEP_NS", dstep_ns / 4),
+                accept_rate: env::f64_or("ALTUP_SIM_ACCEPT_RATE", 0.8).clamp(0.0, 1.0),
+            }),
             fault: FaultSpec::default(),
         }
     }
@@ -389,7 +421,8 @@ pub struct ServerStats {
     /// retired at EOS (`dec_len - row len`, summed). Zero under
     /// batch-level decode — the monolithic step always runs `dec_len`.
     pub tokens_saved: usize,
-    /// Fused `decode_token` iterations (continuous path only).
+    /// Fused full-model decode iterations (continuous path only):
+    /// `decode_token` executes, or §L8 verify rounds when speculating.
     pub decode_steps: usize,
     /// Split-prefill executions (continuous path only).
     pub prefills: usize,
@@ -409,6 +442,10 @@ pub struct ServerStats {
     /// admission closure (it only ever sees the job queue end) and
     /// reports 0 here.
     pub drained: usize,
+    /// §L8 speculative-decoding counters (drafted/accepted tokens,
+    /// draft/verify steps, tokens delivered per verify). All-zero when
+    /// speculation is off or unsupported.
+    pub spec: SpecMeter,
     /// Live-slots-per-decode-iteration meter (continuous path only).
     pub occupancy: OccupancyMeter,
     /// Per-request queued+executed latency, log-bucketed (O(1) memory
@@ -508,6 +545,7 @@ impl ServerStats {
         self.restarts += other.restarts;
         self.failed += other.failed;
         self.drained += other.drained;
+        self.spec.merge(&other.spec);
         self.occupancy.merge(&other.occupancy);
         self.latency.merge(&other.latency);
         self.token_latency.merge(&other.token_latency);
@@ -532,6 +570,17 @@ impl ServerStats {
             self.p95_ms(),
             self.p99_ms()
         );
+        if self.spec.active() {
+            s.push_str(&format!(
+                " | spec: {:.1}% acceptance ({}/{} drafted), {:.2} tokens/verify \
+                 over {} verify steps",
+                self.spec.acceptance_rate() * 100.0,
+                self.spec.accepted,
+                self.spec.drafted,
+                self.spec.tokens_per_verify(),
+                self.spec.verify_steps
+            ));
+        }
         if self.failed + self.retries + self.restarts + self.drained > 0 {
             s.push_str(&format!(
                 " | faults: {} shed / {} retried / {} restarts / {} failed / {} drained",
@@ -1130,10 +1179,16 @@ fn route(
             if req.deadline.is_none() {
                 req.deadline = timeout.map(|t| req.t0 + t);
             }
-            if sup.live == 0 || job_tx.is_none() {
-                fail_request(&mut stats, &req, FailReason::NoReplicas, ROUTER_ID);
-            } else if req.expired(Instant::now()) {
+            // Admission-time shed comes FIRST: a request already past
+            // its deadline (zero timeout, client clock skew, a long
+            // stall in the bounded request channel) must never enter a
+            // bucket group — and the shed is reported as the
+            // deterministic `DeadlineExceeded` even when the fleet is
+            // simultaneously dead.
+            if req.expired(Instant::now()) {
                 fail_request(&mut stats, &req, FailReason::DeadlineExceeded, ROUTER_ID);
+            } else if sup.live == 0 || job_tx.is_none() {
+                fail_request(&mut stats, &req, FailReason::NoReplicas, ROUTER_ID);
             } else {
                 let bucket = if opts.bucketed {
                     bucket_for(req.enc_tokens.len(), enc_len)
@@ -1166,15 +1221,22 @@ fn route(
 }
 
 /// The per-replica decode backend (built inside the replica thread:
-/// `Session` is !Send).
-enum Engine {
-    Real { client: Client, session: Session },
+/// `Session` is !Send). `pub(crate)` so `coordinator::spec` can drive
+/// the §L8 draft/verify round; not part of the public API.
+pub(crate) enum Engine {
+    Real {
+        client: Client,
+        session: Session,
+        /// §L8 draft-model session, loaded from the artifact's
+        /// meta.json `draft` entry when speculation is requested.
+        draft: Option<Session>,
+    },
     Sim(SimEngine),
 }
 
 /// Sim backend instance: the spec plus per-replica fault bookkeeping
 /// (the engine-call counter drives deterministic kill injection).
-struct SimEngine {
+pub(crate) struct SimEngine {
     spec: SimSpec,
     replica: usize,
     calls: u64,
@@ -1213,10 +1275,17 @@ impl SimEngine {
 
 /// Per-replica slot state for the continuous path: device-resident KV
 /// buffers for the real backend, per-slot decode cursors for the sim.
-enum SlotState {
-    /// `Option` so the `DecodeSlots` can be moved through the donating
-    /// `Session::prefill`/`decode_token` calls and put back.
-    Real(Option<DecodeSlots>),
+pub(crate) enum SlotState {
+    Real {
+        /// `Option` so the `DecodeSlots` can be moved through the
+        /// donating `Session::prefill`/`decode_token`/`verify` calls
+        /// and put back.
+        main: Option<DecodeSlots>,
+        /// §L8 draft-model slot state, kept prefix-synced with `main`
+        /// by `draft_accept` after every verify. `None` when the
+        /// engine carries no draft session.
+        draft: Option<DecodeSlots>,
+    },
     Sim(Vec<Option<SimSlot>>),
 }
 
@@ -1224,11 +1293,46 @@ enum SlotState {
 /// from it), next position, the hash-sampled generation length, and
 /// whether fault injection marked it a stuck (never-EOS) generation.
 #[derive(Clone, Copy)]
-struct SimSlot {
+pub(crate) struct SimSlot {
     h: u64,
     pos: usize,
     gen_len: usize,
     stuck: bool,
+}
+
+/// §L8 γ resolution against a (real-backend) session — the single
+/// predicate shared by the draft loader (`Engine::build`) and the
+/// serve-time activation check (`Engine::effective_spec_gamma`): the
+/// requested γ when the artifact ships `verify@<requested>`, else the
+/// artifact's compiled `DraftSpec::gamma`, else 0 (plain decode).
+fn resolve_spec_gamma(session: &Session, requested: usize) -> usize {
+    if requested == 0 {
+        return 0;
+    }
+    let Some(d) = &session.artifact.draft else { return 0 };
+    if session.has_verify(requested) {
+        requested
+    } else if session.has_verify(d.gamma) {
+        d.gamma
+    } else {
+        0
+    }
+}
+
+impl SimSlot {
+    /// The deterministic "true" (greedy full-model) token at absolute
+    /// decode position `j`: EOS exactly at the sampled generation end
+    /// (stuck rows never reach it), `sim_token` everywhere else. The
+    /// single source of truth shared by plain decode, drafting, and
+    /// verify — which is what makes sim spec decoding exact-by-
+    /// construction, mirroring the real greedy-verify guarantee.
+    fn token_at(&self, j: usize, vocab: usize) -> i32 {
+        if !self.stuck && j + 1 == self.gen_len {
+            EOS
+        } else {
+            sim_token(self.h, j, vocab)
+        }
+    }
 }
 
 impl Engine {
@@ -1247,7 +1351,49 @@ impl Engine {
                 // §Perf L4: upload the weights once; every batch reuses
                 // the device-resident buffers.
                 session.warm_device_cache(&client)?;
-                Ok(Engine::Real { client, session })
+                // §L8: load the draft session only when speculation
+                // will actually engage (`resolve_spec_gamma` — the
+                // same predicate `effective_spec_gamma` applies at
+                // serve time, so "draft loaded" and "speculation runs"
+                // cannot drift apart) — otherwise the replica serves
+                // plain decode and must not pay draft memory/prefill
+                // for nothing. A named draft that fails to load or
+                // mismatches the serving geometry is a real error.
+                let draft = match &session.artifact.draft {
+                    Some(d) if resolve_spec_gamma(&session, opts.spec_gamma) > 0 => {
+                        let dartifact = load_named(&d.artifact)?;
+                        let (mc, dc) = (&session.artifact.config, &dartifact.config);
+                        if dc.enc_len != mc.enc_len
+                            || dc.dec_len != mc.dec_len
+                            || dc.vocab_size != mc.vocab_size
+                        {
+                            bail!(
+                                "draft artifact {} geometry mismatch: enc_len {} vs {}, \
+                                 dec_len {} vs {}, vocab {} vs {} (the draft must share \
+                                 the main artifact's serving geometry)",
+                                d.artifact,
+                                dc.enc_len,
+                                mc.enc_len,
+                                dc.dec_len,
+                                mc.dec_len,
+                                dc.vocab_size,
+                                mc.vocab_size
+                            );
+                        }
+                        let mut dsession =
+                            Session::open_eval(&client, dartifact, opts.seed)?;
+                        if !dsession.has_split_decode() {
+                            bail!(
+                                "draft artifact {} ships no split-decode HLO pair",
+                                d.artifact
+                            );
+                        }
+                        dsession.warm_device_cache(&client)?;
+                        Some(dsession)
+                    }
+                    _ => None,
+                };
+                Ok(Engine::Real { client, session, draft })
             }
             EngineSpec::Sim(s) => Ok(Engine::Sim(SimEngine::new(s.clone(), replica))),
         }
@@ -1302,7 +1448,9 @@ impl Engine {
     /// Monolithic decode of a (batch_size, bucket) packed batch.
     fn decode(&mut self, enc: &[i32], bucket: usize) -> Result<Vec<Vec<i32>>> {
         match self {
-            Engine::Real { client, session } => session.decode_bucketed(client, enc, bucket),
+            Engine::Real { client, session, .. } => {
+                session.decode_bucketed(client, enc, bucket)
+            }
             Engine::Sim(e) => {
                 e.on_call();
                 Ok(sim_decode(&e.spec, enc, bucket))
@@ -1310,11 +1458,17 @@ impl Engine {
         }
     }
 
-    /// Allocate the per-replica slot state for `n` concurrent requests.
+    /// Allocate the per-replica slot state for `n` concurrent requests
+    /// (plus the mirrored draft-model slot state when speculating).
     fn init_slots(&mut self, n: usize) -> Result<SlotState> {
         match self {
-            Engine::Real { client, session } => {
-                Ok(SlotState::Real(Some(session.init_decode_slots(client, n)?)))
+            Engine::Real { client, session, draft } => {
+                let main = Some(session.init_decode_slots(client, n)?);
+                let draft = match draft {
+                    Some(ds) => Some(ds.init_decode_slots(client, n)?),
+                    None => None,
+                };
+                Ok(SlotState::Real { main, draft })
             }
             Engine::Sim(_) => Ok(SlotState::Sim(vec![None; n])),
         }
@@ -1330,12 +1484,21 @@ impl Engine {
         slot_ids: &[usize],
     ) -> Result<()> {
         match (self, state) {
-            (Engine::Real { client, session }, SlotState::Real(slots)) => {
-                let held = slots
+            (Engine::Real { client, session, draft }, SlotState::Real { main, draft: dslots }) => {
+                let held = main
                     .take()
                     .context("slot state lost after an earlier prefill/decode error")?;
                 let ids: Vec<i32> = slot_ids.iter().map(|&s| s as i32).collect();
-                *slots = Some(session.prefill(client, held, enc, bucket, &ids)?);
+                *main = Some(session.prefill(client, held, enc, bucket, &ids)?);
+                // §L8: the draft model prefills the same prompts into
+                // the same slot rows, so both KV caches start from an
+                // identical prefix.
+                if let Some(ds) = draft {
+                    let dheld = dslots
+                        .take()
+                        .context("draft slot state lost after an earlier error")?;
+                    *dslots = Some(ds.prefill(client, dheld, enc, bucket, &ids)?);
+                }
                 Ok(())
             }
             (Engine::Sim(e), SlotState::Sim(slots)) => {
@@ -1367,12 +1530,12 @@ impl Engine {
     /// returns the (slots,) token row (dead rows carry garbage).
     fn decode_token(&mut self, state: &mut SlotState, live: &[bool]) -> Result<Vec<i32>> {
         match (self, state) {
-            (Engine::Real { client, session }, SlotState::Real(slots)) => {
-                let held = slots
+            (Engine::Real { client, session, .. }, SlotState::Real { main, .. }) => {
+                let held = main
                     .take()
                     .context("slot state lost after an earlier prefill/decode error")?;
                 let (held, tokens) = session.decode_token(client, held, live)?;
-                *slots = Some(held);
+                *main = Some(held);
                 Ok(tokens)
             }
             (Engine::Sim(e), SlotState::Sim(slots)) => {
@@ -1385,11 +1548,7 @@ impl Engine {
                         continue;
                     }
                     let sl = slot.as_mut().context("live mask set on an empty sim slot")?;
-                    out[s] = if !sl.stuck && sl.pos + 1 == sl.gen_len {
-                        EOS
-                    } else {
-                        sim_token(sl.h, sl.pos, spec.vocab_size)
-                    };
+                    out[s] = sl.token_at(sl.pos, spec.vocab_size);
                     sl.pos += 1;
                     if sl.stuck {
                         stuck_live += 1;
@@ -1404,6 +1563,167 @@ impl Engine {
                 );
                 Ok(out)
             }
+            _ => bail!("engine/slot-state backend mismatch"),
+        }
+    }
+
+    /// §L8: the draft length this engine will actually speculate at
+    /// for a requested `--spec-gamma` (`resolve_spec_gamma` on the
+    /// real backend — requested γ, or the artifact's compiled
+    /// fallback). 0 means speculation is unavailable (no draft
+    /// session, no runnable verify, or not requested) and the replica
+    /// silently runs plain decode — the documented fallback.
+    fn effective_spec_gamma(&self, requested: usize) -> usize {
+        match self {
+            Engine::Real { session, draft, .. } => {
+                if draft.is_none() {
+                    0
+                } else {
+                    resolve_spec_gamma(session, requested)
+                }
+            }
+            Engine::Sim(e) => {
+                // The sim has no compiled-γ constraint: any requested
+                // length runs, given a draft cost model.
+                if requested > 0 && e.spec.draft.is_some() {
+                    requested
+                } else {
+                    0
+                }
+            }
+        }
+    }
+
+    /// §L8: draft `gamma` tokens per live slot — γ cheap draft-model
+    /// decode steps. Returns one row per slot; dead slots get empty
+    /// rows. The draft state runs ahead speculatively; `verify`
+    /// re-syncs it to what the full model accepts.
+    pub(crate) fn draft_tokens(
+        &mut self,
+        state: &mut SlotState,
+        live: &[bool],
+        gamma: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        match (self, state) {
+            (
+                Engine::Real { client, draft: Some(ds), .. },
+                SlotState::Real { draft: dslots, .. },
+            ) => {
+                let mut out: Vec<Vec<i32>> = vec![Vec::new(); live.len()];
+                for _ in 0..gamma {
+                    let held = dslots
+                        .take()
+                        .context("draft slot state lost after an earlier error")?;
+                    let (held, toks) = ds.decode_token(client, held, live)?;
+                    *dslots = Some(held);
+                    for (s, row) in out.iter_mut().enumerate() {
+                        if live[s] {
+                            row.push(toks[s]);
+                        }
+                    }
+                }
+                Ok(out)
+            }
+            (Engine::Sim(e), SlotState::Sim(slots)) => {
+                e.on_call();
+                let Some(d) = e.spec.draft.as_ref() else {
+                    bail!("sim spec ships no draft model");
+                };
+                let mut out: Vec<Vec<i32>> = vec![Vec::new(); slots.len()];
+                for (s, slot) in slots.iter().enumerate() {
+                    if !live[s] {
+                        continue;
+                    }
+                    let sl = slot.as_ref().context("live mask set on an empty sim slot")?;
+                    out[s] = (0..gamma)
+                        .map(|j| sl.token_at(sl.pos + j, e.spec.vocab_size))
+                        .collect();
+                }
+                // γ draft steps over the static slot geometry, charged
+                // as one wait. The sim drafts the TRUE greedy tokens;
+                // draft fallibility is modeled in `verify`'s acceptance
+                // sampling instead, which mirrors the real guarantee
+                // that accepted tokens are exactly the full model's.
+                sim_sleep((gamma as u64).saturating_mul(
+                    d.dstep_ns + d.dtoken_ns.saturating_mul(slots.len() as u64),
+                ));
+                Ok(out)
+            }
+            (Engine::Real { draft: None, .. }, _) => bail!("engine has no draft session"),
+            _ => bail!("engine/slot-state backend mismatch"),
+        }
+    }
+
+    /// §L8: one fused verify across all live slots — the full model
+    /// scores the drafted tokens in a single step, each live slot
+    /// advances by its accepted prefix + 1 correction token, and (real
+    /// backend) the draft state re-syncs via `draft_accept`. Returns
+    /// per-slot `(accept_len, correction)` rows.
+    pub(crate) fn verify(
+        &mut self,
+        state: &mut SlotState,
+        drafted: &[Vec<i32>],
+        live: &[bool],
+        gamma: usize,
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        match (self, state) {
+            (
+                Engine::Real { client, session, draft: Some(ds) },
+                SlotState::Real { main, draft: dslots },
+            ) => {
+                // Flatten to the (S, γ) geometry the HLO expects; dead
+                // rows pad with zeros (ignored under the live mask).
+                let mut flat = vec![0i32; live.len() * gamma];
+                for (s, row) in drafted.iter().enumerate() {
+                    let n = row.len().min(gamma);
+                    flat[s * gamma..s * gamma + n].copy_from_slice(&row[..n]);
+                }
+                let held = main
+                    .take()
+                    .context("slot state lost after an earlier prefill/decode error")?;
+                let (held, accept, correction) =
+                    session.verify(client, held, &flat, live, gamma)?;
+                *main = Some(held);
+                let dheld = dslots
+                    .take()
+                    .context("draft slot state lost after an earlier error")?;
+                *dslots = Some(ds.spec_accept(client, dheld, &accept, &correction, live)?);
+                Ok((accept, correction))
+            }
+            (Engine::Sim(e), SlotState::Sim(slots)) => {
+                e.on_call();
+                let spec = &e.spec;
+                let Some(d) = spec.draft.as_ref() else {
+                    bail!("sim spec ships no draft model");
+                };
+                let mut accept = vec![0i32; slots.len()];
+                let mut correction = vec![0i32; slots.len()];
+                let mut stuck_live = 0u64;
+                for (s, slot) in slots.iter_mut().enumerate() {
+                    if !live[s] {
+                        continue;
+                    }
+                    let sl = slot.as_mut().context("live mask set on an empty sim slot")?;
+                    let a = sim_accept_len(sl.h, sl.pos, gamma, d.accept_rate);
+                    accept[s] = a as i32;
+                    correction[s] = sl.token_at(sl.pos + a, spec.vocab_size);
+                    sl.pos += a + 1;
+                    if sl.stuck {
+                        stuck_live += 1;
+                    }
+                }
+                // One fused full-model step over the static slot
+                // geometry: decode is weight-bound, so scoring γ+1
+                // positions costs ~one `decode_token` step (and stuck
+                // rows stay slow rows).
+                sim_sleep(
+                    spec.dstep_ns
+                        + spec.dtoken_ns.saturating_mul(slots.len() as u64)
+                        + spec.fault.stuck_step_ns.saturating_mul(stuck_live),
+                );
+                Ok((accept, correction))
+            }
+            (Engine::Real { draft: None, .. }, _) => bail!("engine has no draft session"),
             _ => bail!("engine/slot-state backend mismatch"),
         }
     }
@@ -1433,6 +1753,27 @@ fn sim_mix(mut x: u64) -> u64 {
 /// distribution" of the sim workload. The row's final token is EOS.
 fn sim_gen_len(h: u64, dec_len: usize) -> usize {
     1 + (sim_mix(h) % dec_len.max(1) as u64) as usize
+}
+
+/// §L8 sim acceptance model: drafted token j (absolute decode position
+/// `pos + j`) matches the full model's greedy choice iff a hash coin
+/// keyed on (row hash, position) lands under `rate`; the accepted
+/// prefix is the leading run of matches, so the mean accepted length
+/// is `rate(1-rate^γ)/(1-rate)`. `rate` 1.0 accepts everything, 0.0
+/// rejects everything (the parity-test extremes). Deterministic in
+/// (h, pos): a retried decode accepts identically, preserving §L7
+/// crash-recovery determinism. Mirrored bit-for-bit by
+/// `python/tools/server_throughput_twin.py`.
+fn sim_accept_len(h: u64, pos: usize, gamma: usize, rate: f64) -> usize {
+    let mut n = 0;
+    while n < gamma {
+        let x = sim_mix(h ^ ((pos + n) as u64).wrapping_mul(0xD1B5_4A32_D192_ED03));
+        if (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64) >= rate {
+            break;
+        }
+        n += 1;
+    }
+    n
 }
 
 /// Deterministic non-EOS token for decode position `j`: in
@@ -1524,7 +1865,13 @@ fn serve_replica(
 ) -> Result<()> {
     let mut engine = Engine::build(id, spec, opts)?;
     if opts.continuous && engine.supports_continuous() {
-        serve_continuous(id, &mut engine, jobs, opts, ledger, stats)
+        // §L8: speculation is strictly opt-in (spec_gamma > 0) and
+        // runs at the engine's effective draft length (the requested γ
+        // or the artifact's compiled fallback); anything missing falls
+        // back to plain per-token decode.
+        let gamma = engine.effective_spec_gamma(opts.spec_gamma);
+        let spec_dec = (gamma > 0).then(|| SpecDecoder::new(gamma));
+        serve_continuous(id, &mut engine, jobs, opts, ledger, stats, spec_dec)
     } else {
         serve_batches(id, &mut engine, jobs, ledger, stats)
     }
@@ -1702,7 +2049,11 @@ fn stash(
 /// into free slots (one batched prefill per same-bucket group),
 /// retires slots the moment they emit EOS or hit `dec_len`, and —
 /// §L7 — sheds expired pending requests and retires expired slots so
-/// one stuck generation cannot hold a slot forever.
+/// one stuck generation cannot hold a slot forever. With a
+/// `SpecDecoder` (§L8) each decode iteration becomes a draft/verify
+/// round delivering 1..=γ+1 tokens per live slot; admission,
+/// deadlines, retirement, and drain are identical.
+#[allow(clippy::too_many_arguments)]
 fn serve_continuous(
     id: usize,
     engine: &mut Engine,
@@ -1710,6 +2061,7 @@ fn serve_continuous(
     opts: &ServerOptions,
     ledger: &Ledger,
     stats: &mut ServerStats,
+    mut spec_dec: Option<SpecDecoder>,
 ) -> Result<()> {
     let (batch_size, _enc_len) = engine.dims();
     let dec_len = engine.dec_len();
@@ -1824,44 +2176,89 @@ fn serve_continuous(
             continue;
         }
 
-        // One fused decode iteration over the whole slot geometry.
+        // One full-model decode iteration over the whole slot
+        // geometry: a §L8 draft/verify round (1..=γ+1 tokens per live
+        // slot) when speculating, else one fused `decode_token`.
         let live: Vec<bool> = active.iter().map(|s| s.is_some()).collect();
-        let tokens = engine.decode_token(&mut state, &live)?;
-        stats.decode_steps += 1;
-        stats.occupancy.record(n_live);
-        for (s, slot) in active.iter_mut().enumerate() {
-            let Some(act) = slot.as_mut() else { continue };
-            act.tokens.push(tokens[s]);
-            let done = tokens[s] == EOS || act.tokens.len() >= dec_len;
-            if !done {
-                continue;
+        if let Some(sd) = spec_dec.as_mut() {
+            let emissions = sd.round(engine, &mut state, &live, &mut stats.spec)?;
+            stats.decode_steps += 1;
+            stats.occupancy.record(n_live);
+            for (s, slot) in active.iter_mut().enumerate() {
+                let Some(act) = slot.as_mut() else { continue };
+                // Push the round's tokens in stream order, truncating
+                // at EOS / dec_len exactly like plain decode — tokens
+                // the verify accepted past a retirement point are
+                // discarded, never delivered.
+                let mut pushed = 0u64;
+                let mut done = false;
+                for &tok in &emissions[s] {
+                    act.tokens.push(tok);
+                    pushed += 1;
+                    if tok == EOS || act.tokens.len() >= dec_len {
+                        done = true;
+                        break;
+                    }
+                }
+                // The meter's delivered-tokens half is the serving
+                // loop's to report: only it knows the truncation.
+                stats.spec.note_delivered(pushed);
+                if done {
+                    finish_slot(slot, ledger, stats, dec_len, id, router_gone);
+                }
             }
-            let act = slot.take().expect("live slot");
-            let Some(held) = ledger.take(act.ticket) else { continue };
-            let latency = act.t0.elapsed();
-            stats.note_response(
-                latency,
-                act.tokens.len(),
-                dec_len - act.tokens.len(), // early-exit savings
-                act.prompt_len,
-                act.truncated,
-            );
-            stats.requests += 1;
-            if router_gone {
-                stats.drained += 1;
+        } else {
+            let tokens = engine.decode_token(&mut state, &live)?;
+            stats.decode_steps += 1;
+            stats.occupancy.record(n_live);
+            for (s, slot) in active.iter_mut().enumerate() {
+                let Some(act) = slot.as_mut() else { continue };
+                act.tokens.push(tokens[s]);
+                if tokens[s] == EOS || act.tokens.len() >= dec_len {
+                    finish_slot(slot, ledger, stats, dec_len, id, router_gone);
+                }
             }
-            let _ = held.req.reply.send(Response {
-                tokens: act.tokens,
-                latency,
-                batch_fill: act.fill,
-                truncated: act.truncated,
-                bucket: act.bucket,
-                replica: id,
-                failure: None,
-            });
         }
     }
     Ok(())
+}
+
+/// Retire a finished slot: move its request out of the ledger, record
+/// the response bookkeeping, and send the terminal token response.
+/// Shared by the plain and §L8 speculative decode paths — retirement
+/// semantics (early-exit accounting, drain counting, ledger removal)
+/// must not depend on which path generated the tokens.
+fn finish_slot(
+    slot: &mut Option<Active>,
+    ledger: &Ledger,
+    stats: &mut ServerStats,
+    dec_len: usize,
+    id: usize,
+    router_gone: bool,
+) {
+    let Some(act) = slot.take() else { return };
+    let Some(held) = ledger.take(act.ticket) else { return };
+    let latency = act.t0.elapsed();
+    stats.note_response(
+        latency,
+        act.tokens.len(),
+        dec_len - act.tokens.len(), // early-exit savings
+        act.prompt_len,
+        act.truncated,
+    );
+    stats.requests += 1;
+    if router_gone {
+        stats.drained += 1;
+    }
+    let _ = held.req.reply.send(Response {
+        tokens: act.tokens,
+        latency,
+        batch_fill: act.fill,
+        truncated: act.truncated,
+        bucket: act.bucket,
+        replica: id,
+        failure: None,
+    });
 }
 
 /// Pack request token rows into a fixed (batch_size, len) geometry:
@@ -1916,6 +2313,7 @@ mod tests {
             dtoken_ns: 0,
             dstep_ns: 0,
             split_decode: true,
+            draft: Some(SimDraftSpec { dtoken_ns: 0, dstep_ns: 0, accept_rate: 0.75 }),
             fault: FaultSpec::default(),
         }
     }
@@ -2060,6 +2458,134 @@ mod tests {
             stream.push(engine.decode_token(&mut state, &live).unwrap()[0]);
         }
         assert_eq!(stream, rows[0], "slot stream == monolithic stuck row");
+    }
+
+    /// §L8 core invariant at the round level: driving the sim engine
+    /// through `SpecDecoder` rounds yields exactly the plain
+    /// `decode_token` stream, at every acceptance rate — reject-all,
+    /// mixed, and accept-all.
+    #[test]
+    fn sim_spec_rounds_match_plain_stream() {
+        let prompt = vec![11i32, 3, 5, 0, 0, 0, 0, 0];
+        let plain = {
+            let spec = quiet_spec();
+            let mut engine = Engine::Sim(SimEngine::new(spec.clone(), 0));
+            let mut state = engine.init_slots(2).unwrap();
+            engine.prefill(&mut state, &prompt, 8, &[0]).unwrap();
+            let live = vec![true, false];
+            let mut stream = Vec::new();
+            for _ in 0..spec.dec_len {
+                let t = engine.decode_token(&mut state, &live).unwrap()[0];
+                stream.push(t);
+                if t == EOS {
+                    break;
+                }
+            }
+            stream
+        };
+        assert_eq!(*plain.last().unwrap(), EOS);
+
+        for rate in [0.0, 0.5, 1.0] {
+            let mut spec = quiet_spec();
+            spec.draft.as_mut().unwrap().accept_rate = rate;
+            let dec_len = spec.dec_len;
+            let mut engine = Engine::Sim(SimEngine::new(spec, 0));
+            let mut state = engine.init_slots(2).unwrap();
+            engine.prefill(&mut state, &prompt, 8, &[0]).unwrap();
+            let mut sd = SpecDecoder::new(3);
+            let mut meter = SpecMeter::default();
+            let live = vec![true, false];
+            let mut stream = Vec::new();
+            'rounds: for _ in 0..dec_len {
+                let em = sd.round(&mut engine, &mut state, &live, &mut meter).unwrap();
+                assert!(em[1].is_empty(), "dead slot must emit nothing");
+                assert!(!em[0].is_empty() && em[0].len() <= 3 + 1);
+                for &t in &em[0] {
+                    stream.push(t);
+                    if t == EOS || stream.len() >= dec_len {
+                        break 'rounds;
+                    }
+                }
+            }
+            assert_eq!(stream, plain, "spec stream != plain stream at rate {rate}");
+            assert!(meter.verify_steps > 0 && meter.draft_steps == 3 * meter.verify_steps);
+            assert_eq!(meter.drafted, 3 * meter.verify_steps);
+            if rate == 0.0 {
+                assert_eq!(meter.accepted, 0, "reject-all accepts nothing");
+            }
+            if rate == 1.0 {
+                assert!(
+                    (meter.acceptance_rate() - 1.0).abs() < 1e-12,
+                    "accept-all accepts everything"
+                );
+            }
+        }
+    }
+
+    /// §L8 acceptance sampling: exact at the extremes, bounded and
+    /// deterministic in between, with a mean near the geometric-run
+    /// expectation.
+    #[test]
+    fn sim_accept_len_sampling() {
+        for pos in 0..20 {
+            assert_eq!(sim_accept_len(0x1234, pos, 4, 1.0), 4, "rate 1.0 accepts all");
+            assert_eq!(sim_accept_len(0x1234, pos, 4, 0.0), 0, "rate 0.0 rejects all");
+        }
+        assert_eq!(sim_accept_len(7, 3, 0, 1.0), 0, "gamma 0 accepts nothing");
+        let mut seen = std::collections::BTreeSet::new();
+        for pos in 0..200 {
+            let a = sim_accept_len(0xABCDE, pos, 4, 0.75);
+            assert!(a <= 4);
+            assert_eq!(a, sim_accept_len(0xABCDE, pos, 4, 0.75), "deterministic");
+            seen.insert(a);
+        }
+        assert!(seen.len() >= 3, "acceptance lengths too concentrated: {seen:?}");
+        // Mean near α(1-α^γ)/(1-α) = 0.75(1-0.75^4)/0.25 ≈ 2.05.
+        let total: usize = (0..2000).map(|p| sim_accept_len(0x5EED, p, 4, 0.75)).sum();
+        let mean = total as f64 / 2000.0;
+        assert!((1.6..=2.5).contains(&mean), "mean accept length {mean}");
+    }
+
+    /// §L8 capability detection + the no-draft error paths.
+    #[test]
+    fn engine_spec_support_requires_draft() {
+        let with = Engine::Sim(SimEngine::new(quiet_spec(), 0));
+        assert_eq!(with.effective_spec_gamma(4), 4);
+        assert_eq!(with.effective_spec_gamma(0), 0, "gamma 0 never speculates");
+
+        let mut spec = quiet_spec();
+        spec.draft = None;
+        let mut without = Engine::Sim(SimEngine::new(spec, 0));
+        assert_eq!(without.effective_spec_gamma(4), 0);
+        let mut state = without.init_slots(1).unwrap();
+        assert!(without.draft_tokens(&mut state, &[false], 2).is_err());
+        assert!(without.verify(&mut state, &[Vec::new()], &[false], 2).is_err());
+    }
+
+    /// §L8 γ resolution on the real backend: the requested γ when its
+    /// verify HLO exists, the artifact's compiled `DraftSpec::gamma`
+    /// as the fallback, and 0 (plain decode) without a draft session.
+    #[test]
+    fn real_engine_spec_gamma_resolution() {
+        use crate::runtime::artifact::DraftSpec;
+        use crate::runtime::params::tests::toy_artifact;
+        let client = Client::cpu().unwrap();
+        let mut a = toy_artifact();
+        a.hlo_files.push(("verify@4".into(), std::path::PathBuf::from("/nonexistent")));
+        a.draft = Some(DraftSpec { artifact: "toy-lite".into(), gamma: 4 });
+        let session = Session::open_eval(&client, a, 0).unwrap();
+        let dsession = Session::open_eval(&client, toy_artifact(), 0).unwrap();
+        let engine = Engine::Real { client, session, draft: Some(dsession) };
+        assert_eq!(engine.effective_spec_gamma(4), 4, "exact verify@4 HLO wins");
+        assert_eq!(
+            engine.effective_spec_gamma(2),
+            4,
+            "no verify@2: falls back to the artifact's compiled gamma"
+        );
+        assert_eq!(engine.effective_spec_gamma(0), 0, "speculation stays opt-in");
+        let Engine::Real { client, session, .. } = engine else { unreachable!() };
+        let engine = Engine::Real { client, session, draft: None };
+        assert_eq!(engine.effective_spec_gamma(4), 0, "no draft session: plain decode");
     }
 
     /// The deterministic kill fault must fire as a panic on exactly the

@@ -1,0 +1,96 @@
+//! §L8 speculative decoding: the per-slot draft/verify state machine
+//! that rides on the continuous-batching engine (`coordinator::server`).
+//!
+//! AltUp's predict-and-correct mechanism applied to serving (PAPER.md
+//! §3; cf. Pope et al. 2022 for the serving-side framing): a cheap
+//! draft model advances every live slot by γ proposed tokens (γ cheap
+//! draft-model steps), then ONE fused full-model `verify@γ` step
+//! scores all proposals across all active slots, accepting the longest
+//! prefix greedy full-model decode would have emitted and supplying
+//! the next token (the "correction") itself. Each verify round thus
+//! delivers between 1 and γ+1 tokens per live slot for the price of
+//! one full-model step plus γ draft steps — while the emitted stream
+//! stays token-for-token identical to plain greedy decode: accepted
+//! tokens ARE the full model's greedy tokens, and the round's final
+//! token always comes from the full model.
+//!
+//! The per-round state machine, over all live slots at once:
+//!
+//! ```text
+//!   draft γ tokens ────► fused verify@γ ────► emit accepted prefix
+//!   (draft model,        (full model,          + 1 correction token
+//!    γ cheap steps)       ONE step, all slots)   per live slot
+//! ```
+//!
+//! The server (`serve_continuous`) keeps owning slot admission and
+//! retirement: it truncates each slot's emission at EOS or `dec_len`
+//! and retires the slot exactly as on the plain path, so deadlines,
+//! drain, and crash recovery are untouched by speculation. When the
+//! artifact ships no draft (or the sim spec carries no draft cost
+//! model), `Engine::effective_spec_gamma` resolves to 0 and the
+//! replica falls back to plain per-token decode.
+
+use crate::coordinator::metrics::SpecMeter;
+use crate::coordinator::server::{Engine, SlotState};
+use crate::util::env;
+use anyhow::Result;
+
+/// The serving-default draft length: `ALTUP_SPEC_GAMMA` (0 or unset =
+/// speculative decoding off).
+pub fn gamma_from_env() -> usize {
+    env::usize_or("ALTUP_SPEC_GAMMA", 0)
+}
+
+/// Per-replica speculative-decode driver: owns the draft length γ and
+/// runs one draft→verify round per decode iteration.
+pub(crate) struct SpecDecoder {
+    gamma: usize,
+}
+
+impl SpecDecoder {
+    pub(crate) fn new(gamma: usize) -> SpecDecoder {
+        SpecDecoder { gamma: gamma.max(1) }
+    }
+
+    /// One draft→verify round over every live slot. Returns the
+    /// per-slot emission — the accepted drafted prefix plus the
+    /// correction token; empty rows for dead slots. The caller pushes
+    /// tokens into each slot's stream, truncating at EOS/`dec_len`,
+    /// retires slots exactly as under plain decode, and reports the
+    /// tokens it actually delivered via `SpecMeter::note_delivered`
+    /// (the round fills every meter counter except that one — only
+    /// the serving loop knows the truncation).
+    pub(crate) fn round(
+        &mut self,
+        engine: &mut Engine,
+        state: &mut SlotState,
+        live: &[bool],
+        meter: &mut SpecMeter,
+    ) -> Result<Vec<Vec<i32>>> {
+        let drafted = engine.draft_tokens(state, live, self.gamma)?;
+        let (accept, correction) = engine.verify(state, &drafted, live, self.gamma)?;
+        meter.draft_steps += self.gamma as u64;
+        meter.verify_steps += 1;
+        let mut out: Vec<Vec<i32>> = vec![Vec::new(); live.len()];
+        for (s, emitted) in out.iter_mut().enumerate() {
+            if !live[s] {
+                continue;
+            }
+            // Clamp defensively: a buggy verify result must degrade to
+            // bad accounting, not panic the replica out of its slots.
+            let a = (accept[s].max(0) as usize).min(self.gamma).min(drafted[s].len());
+            meter.drafted += self.gamma as u64;
+            meter.accepted += a as u64;
+            emitted.reserve_exact(a + 1);
+            emitted.extend_from_slice(&drafted[s][..a]);
+            emitted.push(correction[s]);
+        }
+        Ok(out)
+    }
+}
+
+// The state machine's behavioral tests (round-level parity with plain
+// decode, acceptance extremes, meter accounting) live in
+// `coordinator::server::tests` alongside the sim engine they drive;
+// end-to-end spec-vs-plain serving parity is pinned by
+// `rust/tests/server.rs`.

@@ -15,17 +15,13 @@ use std::time::Instant;
 /// How many prepared batches may sit ready ahead of the consumer.
 /// `ALTUP_PREFETCH_DEPTH` overrides (min 1); default 2 = double buffer.
 pub fn depth_from_env() -> usize {
-    std::env::var("ALTUP_PREFETCH_DEPTH")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&d| d >= 1)
-        .unwrap_or(2)
+    crate::util::env::usize_at_least("ALTUP_PREFETCH_DEPTH", 1, 2)
 }
 
 /// Whether the trainer should prefetch at all (`ALTUP_NO_PREFETCH=1`
 /// restores the synchronous prepare-then-execute baseline for A/Bs).
 pub fn enabled_from_env() -> bool {
-    std::env::var_os("ALTUP_NO_PREFETCH").is_none()
+    !crate::util::env::flag("ALTUP_NO_PREFETCH")
 }
 
 pub struct Prefetcher<S: BatchSource + Send + 'static> {

@@ -7,7 +7,7 @@
 //!   eval        --artifact <name> [--ckpt path] --batches N [--task t]
 //!   serve       --artifact <name> [--ckpt path] [--slots S] [--no-cont]
 //!               [--queue-cap N] [--timeout-ms T] [--retries R]
-//!               [--restarts N] --requests N
+//!               [--restarts N] [--spec-gamma G] --requests N
 //!   params      [--size S|B|L|XL] — analytic parameter table
 //!   latency     --artifact <name> [--kind forward|train_step]
 //!   bench-table <fig4|tab1|tab2|tab3|tab4|tab6|tab7|fig5|bert> [--quick]
@@ -213,6 +213,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         max_retries: args.usize_or("retries", defaults.max_retries as usize) as u32,
         replica_restarts: args.usize_or("restarts", defaults.replica_restarts),
+        // §L8: draft length for speculative decoding (0 = off; falls
+        // back to plain decode when the artifact ships no draft).
+        spec_gamma: args.usize_or("spec-gamma", defaults.spec_gamma),
     };
     let n = args.usize_or("requests", 64);
     let server = ServerHandle::spawn(&name, opts);

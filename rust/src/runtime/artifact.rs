@@ -49,6 +49,31 @@ pub struct DecodeStateSpec {
     pub dtype: DType,
 }
 
+/// Optional speculative-decoding draft reference (§L8): a second,
+/// cheaper artifact (e.g. a recycled AltUp-lite model per fig5) whose
+/// session proposes tokens that this artifact's fused `verify@<gamma>`
+/// executable scores in one step. Shipped as an optional `draft`
+/// object in meta.json:
+///
+///   "draft": {"artifact": "micro-altup-lite", "gamma": 4}
+///
+/// The draft artifact must share the serving geometry (enc_len,
+/// dec_len, vocab) and ship its own split-decode HLO pair plus the
+/// `draft_accept` rollback entry point (see the `runtime::session`
+/// §L8 contract).
+#[derive(Debug, Clone)]
+pub struct DraftSpec {
+    /// Draft artifact name, resolved against the same artifacts root
+    /// (`load_named`).
+    pub artifact: String,
+    /// The draft length γ the main artifact's fused verify HLO was
+    /// compiled for. Serving speculates at the requested `--spec-gamma`
+    /// when a `verify@<requested>` HLO exists, and falls back to this
+    /// compiled γ otherwise (`Engine::effective_spec_gamma`); with
+    /// neither verify present, the replica runs plain decode.
+    pub gamma: usize,
+}
+
 /// Parsed meta.json + paths of the HLO files.
 #[derive(Debug, Clone)]
 pub struct Artifact {
@@ -64,6 +89,10 @@ pub struct Artifact {
     /// slot dimension. Optional — absent from artifacts that only ship
     /// the monolithic `decode_step`.
     pub decode_state: Vec<DecodeStateSpec>,
+    /// Optional draft-model reference for speculative decoding (§L8).
+    /// Absent from artifacts that ship no draft; serving then falls
+    /// back to plain per-token decode.
+    pub draft: Option<DraftSpec>,
     pub batch_inputs: Vec<BatchInputSpec>,
     pub hlo_files: Vec<(String, PathBuf)>,
     pub param_count_total: usize,
@@ -137,6 +166,24 @@ impl Artifact {
             }
         }
 
+        let draft = match meta.get("draft").get("artifact").as_str() {
+            Some(name) => {
+                // Absent gamma defaults to 4; a PRESENT but malformed
+                // gamma (string, negative, zero) is a hard error — it
+                // would otherwise silently change the speculation
+                // length the artifact was compiled for.
+                let gamma = match meta.get("draft").get("gamma") {
+                    Json::Null => 4,
+                    g => g
+                        .as_usize()
+                        .filter(|&v| v >= 1)
+                        .context("meta.json draft.gamma must be a positive integer")?,
+                };
+                Some(DraftSpec { artifact: name.to_string(), gamma })
+            }
+            None => None,
+        };
+
         let mut batch_inputs = Vec::new();
         for b in meta.get("batch_inputs").as_arr().context("meta.batch_inputs")? {
             batch_inputs.push(BatchInputSpec {
@@ -170,6 +217,7 @@ impl Artifact {
             params,
             opt_state,
             decode_state,
+            draft,
             batch_inputs,
             hlo_files,
             param_count_total: meta.get("param_count").get("total").as_usize().unwrap_or(0),
@@ -262,6 +310,44 @@ mod tests {
         assert_eq!(a.config.d_model, 8);
         assert!(a.has("train_step"));
         assert!(!a.has("eval_step"));
+        assert!(a.draft.is_none(), "no draft entry: spec decoding unavailable");
+        std::fs::remove_dir_all(&tmp).unwrap();
+    }
+
+    #[test]
+    fn parses_optional_draft_spec() {
+        let tmp = std::env::temp_dir().join(format!("altup-test3-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        let with_draft = fake_meta().replace(
+            "\"flops_per_token\": 100.0",
+            "\"flops_per_token\": 100.0,\n          \
+             \"draft\": {\"artifact\": \"t-lite\", \"gamma\": 3}",
+        );
+        std::fs::write(tmp.join("meta.json"), with_draft).unwrap();
+        let a = Artifact::load(&tmp).unwrap();
+        let d = a.draft.expect("draft entry parsed");
+        assert_eq!(d.artifact, "t-lite");
+        assert_eq!(d.gamma, 3);
+
+        // gamma defaults to 4 when absent; gamma 0 is rejected.
+        let no_gamma = fake_meta().replace(
+            "\"flops_per_token\": 100.0",
+            "\"flops_per_token\": 100.0, \"draft\": {\"artifact\": \"t-lite\"}",
+        );
+        std::fs::write(tmp.join("meta.json"), no_gamma).unwrap();
+        assert_eq!(Artifact::load(&tmp).unwrap().draft.unwrap().gamma, 4);
+        // Present-but-malformed gamma is a hard error, not a silent 4.
+        for bad in ["0", "-2", "\"8\""] {
+            let meta = fake_meta().replace(
+                "\"flops_per_token\": 100.0",
+                &format!(
+                    "\"flops_per_token\": 100.0, \
+                     \"draft\": {{\"artifact\": \"t-lite\", \"gamma\": {bad}}}"
+                ),
+            );
+            std::fs::write(tmp.join("meta.json"), meta).unwrap();
+            assert!(Artifact::load(&tmp).is_err(), "draft.gamma {bad} rejected");
+        }
         std::fs::remove_dir_all(&tmp).unwrap();
     }
 

@@ -221,6 +221,7 @@ pub(crate) mod tests {
                 OptSlotSpec { name: "b/s@v".into(), shape: vec![8] },
             ],
             decode_state: vec![],
+            draft: None,
             batch_inputs: vec![BatchInputSpec { name: "enc".into(), shape: vec![2, 8] }],
             hlo_files: vec![],
             param_count_total: 4 + 128 + 8,

@@ -30,6 +30,32 @@
 //! artifact ships no split HLO, `Session::has_split_decode` is false
 //! and serving falls back to the monolithic `decode_step` path.
 //!
+//! §L8 speculative-decode contract (draft/verify serving): an artifact
+//! may additionally ship a `draft` entry in meta.json naming a second,
+//! cheaper artifact (the draft model — e.g. a recycled AltUp-lite
+//! model per fig5, the serving-side analogue of AltUp's cheap
+//! predictor) plus a fused verify executable:
+//!
+//!   verify@<g>:   (params..., state..., drafted [S, g], live [S])
+//!                 -> (state'..., accept_len [S], correction [S])
+//!   draft_accept: (dparams..., dstate..., accept_len [S],
+//!                  correction [S], live [S]) -> (dstate'...)
+//!
+//! `verify@<g>` scores g drafted tokens per live slot in ONE fused
+//! full-model step with greedy accept-prefix semantics: `accept_len[s]`
+//! is the length of the longest drafted prefix identical to what
+//! greedy full-model decode would have emitted, and `correction[s]` is
+//! the full model's token at the first position past that prefix. The
+//! main decode state advances by exactly accept_len+1 positions.
+//! `draft_accept` — an executable of the DRAFT artifact — rolls the
+//! draft's own slot state back to the accepted prefix and appends the
+//! correction token, re-syncing the two sessions for the next round.
+//! Emitting `drafted[s][..accept_len[s]]` followed by `correction[s]`
+//! is therefore token-for-token identical to plain greedy decode; the
+//! server truncates at EOS/dec_len exactly as on the plain path. The
+//! draft model itself drafts through its ordinary split-decode
+//! `decode_token` (γ cheap steps per verify).
+//!
 //! §Perf L4 (EXPERIMENTS.md): parameter/optimizer state is kept
 //! device-resident as `PjRtBuffer`s across steps. Per train step, only
 //! the batch + three scalars cross the host boundary on the way in and
@@ -67,9 +93,9 @@ pub enum CacheMode {
 
 impl CacheMode {
     pub fn from_env() -> CacheMode {
-        if std::env::var_os("ALTUP_NO_STATE_CACHE").is_some() {
+        if crate::util::env::flag("ALTUP_NO_STATE_CACHE") {
             CacheMode::Off
-        } else if std::env::var_os("ALTUP_NO_DEVICE_CACHE").is_some() {
+        } else if crate::util::env::flag("ALTUP_NO_DEVICE_CACHE") {
             CacheMode::HostLiteral
         } else {
             CacheMode::Device
@@ -113,11 +139,7 @@ pub fn bucket_for(len: usize, enc_len: usize) -> usize {
 }
 
 fn bucket_cache_cap_from_env() -> usize {
-    std::env::var("ALTUP_BUCKET_CACHE")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or(8)
+    crate::util::env::usize_at_least("ALTUP_BUCKET_CACHE", 1, 8)
 }
 
 /// Bounded cache of shape-specialized executables keyed by
@@ -217,6 +239,12 @@ pub struct Session {
     prefill_buckets: BucketLru<Rc<Executable>>,
     /// The fused per-token decode executable (§Perf L6).
     decode_token: Option<Rc<Executable>>,
+    /// The fused speculative verify executable (§L8), cached for the
+    /// one draft length γ a server runs at.
+    verify_exe: Option<(usize, Rc<Executable>)>,
+    /// The draft-side accept/rollback executable (§L8; compiled from a
+    /// DRAFT artifact's `draft_accept` entry point).
+    spec_accept_exe: Option<Rc<Executable>>,
     /// Params/opt cache between steps. `state_step` records the store
     /// step the cache mirrors; a mismatch (e.g. after loading a
     /// checkpoint) invalidates it.
@@ -265,6 +293,8 @@ impl Session {
             decode_buckets: BucketLru::new(bucket_cache_cap_from_env()),
             prefill_buckets: BucketLru::new(bucket_cache_cap_from_env()),
             decode_token: None,
+            verify_exe: None,
+            spec_accept_exe: None,
             state: None,
             state_step: 0,
             dirty: false,
@@ -970,6 +1000,156 @@ impl Session {
         Ok((DecodeSlots { slots: n, state: outs }, tokens))
     }
 
+    // ----- §L8: speculative draft/verify serving path -----
+
+    /// True when the artifact ships the fused speculative verify
+    /// executable for draft length `gamma` (§L8 contract in the module
+    /// header).
+    pub fn has_verify(&self, gamma: usize) -> bool {
+        gamma >= 1 && self.artifact.has(&format!("verify@{gamma}"))
+    }
+
+    /// One fused speculative verify step (§L8): score `gamma` drafted
+    /// tokens per live slot in a single full-model execute, advance the
+    /// decode state by the accepted prefix + 1 correction token, and
+    /// return per-slot `(accept_len, correction)` rows. `drafted` is
+    /// (S, gamma) row-major; dead rows' values are ignored by the HLO.
+    pub fn verify(
+        &mut self,
+        client: &Client,
+        slots: DecodeSlots,
+        drafted: &[i32],
+        live: &[bool],
+        gamma: usize,
+    ) -> Result<(DecodeSlots, Vec<i32>, Vec<i32>)> {
+        if self.mode != CacheMode::Device {
+            bail!("split decode requires CacheMode::Device (serving default)");
+        }
+        if live.len() != slots.slots {
+            bail!("live mask len {} != slot count {}", live.len(), slots.slots);
+        }
+        if drafted.len() != slots.slots * gamma {
+            bail!(
+                "drafted len {} != {} slots x gamma {gamma}",
+                drafted.len(),
+                slots.slots
+            );
+        }
+        let exe = match &self.verify_exe {
+            Some((g, exe)) if *g == gamma => Rc::clone(exe),
+            _ => {
+                let exe = self.compile(client, &format!("verify@{gamma}"))?;
+                self.verify_exe = Some((gamma, Rc::clone(&exe)));
+                exe
+            }
+        };
+        self.ensure_device_state(client, false)?;
+        let t0 = Instant::now();
+        let drafted_buf = client
+            .upload(&Tensor::i32(vec![slots.slots, gamma], drafted.to_vec()).to_literal()?)?;
+        let mask: Vec<i32> = live.iter().map(|&l| l as i32).collect();
+        let mask_buf = client.upload(&Tensor::i32(vec![live.len()], mask).to_literal()?)?;
+        self.transfer_seconds += t0.elapsed().as_secs_f64();
+
+        let DecodeSlots { slots: n, mut state } = slots;
+        state.push(drafted_buf);
+        state.push(mask_buf);
+        let t1 = Instant::now();
+        let mut outs = {
+            let Some(CachedState::Device { params, .. }) = self.state.as_ref() else {
+                bail!("device state missing after ensure_device_state");
+            };
+            let shared: Vec<&xla::PjRtBuffer> = params.iter().collect();
+            exe.run_buffers_donating(&shared, state)?
+        };
+        self.exec_seconds += t1.elapsed().as_secs_f64();
+        let want = self.artifact.decode_state.len() + 2;
+        if outs.len() != want {
+            bail!("verify@{gamma} returned {} outputs, expected {want}", outs.len());
+        }
+        let corr_buf = outs.pop().expect("correction output");
+        let accept_buf = outs.pop().expect("accept_len output");
+        let t2 = Instant::now();
+        let accept =
+            Tensor::from_literal(&accept_buf.to_literal_sync()?)?.as_i32()?.to_vec();
+        let correction =
+            Tensor::from_literal(&corr_buf.to_literal_sync()?)?.as_i32()?.to_vec();
+        self.transfer_seconds += t2.elapsed().as_secs_f64();
+        if accept.len() != n || correction.len() != n {
+            bail!(
+                "verify@{gamma} emitted {}/{} rows for {n} slots",
+                accept.len(),
+                correction.len()
+            );
+        }
+        Ok((DecodeSlots { slots: n, state: outs }, accept, correction))
+    }
+
+    /// Roll a DRAFT session's slot state to the accepted prefix + the
+    /// correction token after a verify (§L8 `draft_accept` contract) —
+    /// the draft advanced γ speculative positions while drafting and
+    /// must re-sync to what the full model actually accepted.
+    pub fn spec_accept(
+        &mut self,
+        client: &Client,
+        slots: DecodeSlots,
+        accept_len: &[i32],
+        correction: &[i32],
+        live: &[bool],
+    ) -> Result<DecodeSlots> {
+        if self.mode != CacheMode::Device {
+            bail!("split decode requires CacheMode::Device (serving default)");
+        }
+        if accept_len.len() != slots.slots
+            || correction.len() != slots.slots
+            || live.len() != slots.slots
+        {
+            bail!(
+                "spec_accept row counts {}/{}/{} != slot count {}",
+                accept_len.len(),
+                correction.len(),
+                live.len(),
+                slots.slots
+            );
+        }
+        if self.spec_accept_exe.is_none() {
+            self.spec_accept_exe = Some(self.compile(client, "draft_accept")?);
+        }
+        let exe = Rc::clone(self.spec_accept_exe.as_ref().unwrap());
+        self.ensure_device_state(client, false)?;
+        let t0 = Instant::now();
+        let n = slots.slots;
+        let accept_buf =
+            client.upload(&Tensor::i32(vec![n], accept_len.to_vec()).to_literal()?)?;
+        let corr_buf =
+            client.upload(&Tensor::i32(vec![n], correction.to_vec()).to_literal()?)?;
+        let mask: Vec<i32> = live.iter().map(|&l| l as i32).collect();
+        let mask_buf = client.upload(&Tensor::i32(vec![n], mask).to_literal()?)?;
+        self.transfer_seconds += t0.elapsed().as_secs_f64();
+
+        let DecodeSlots { slots: n, mut state } = slots;
+        state.push(accept_buf);
+        state.push(corr_buf);
+        state.push(mask_buf);
+        let t1 = Instant::now();
+        let outs = {
+            let Some(CachedState::Device { params, .. }) = self.state.as_ref() else {
+                bail!("device state missing after ensure_device_state");
+            };
+            let shared: Vec<&xla::PjRtBuffer> = params.iter().collect();
+            exe.run_buffers_donating(&shared, state)?
+        };
+        self.exec_seconds += t1.elapsed().as_secs_f64();
+        if outs.len() != self.artifact.decode_state.len() {
+            bail!(
+                "draft_accept returned {} outputs, expected {} decode_state slots",
+                outs.len(),
+                self.artifact.decode_state.len()
+            );
+        }
+        Ok(DecodeSlots { slots: n, state: outs })
+    }
+
     /// The full-length prefill entry point: the generic `prefill` HLO
     /// when the artifact ships one, else `prefill@<enc_len>` (an
     /// artifact may name its full-length prefill either way). Cached
@@ -1208,6 +1388,43 @@ mod tests {
         // Executing still requires a real backend: prefill fails with
         // an error (missing/uncompilable HLO), never a panic.
         assert!(s.prefill(&client, slots, &[0; 2 * 8], 8, &[0, 1]).is_err());
+    }
+
+    /// §L8 detection + error paths: `has_verify` keys on the exact
+    /// `verify@<gamma>` HLO entry, shape validation fires before any
+    /// compile, and executing without a real backend errors cleanly.
+    #[test]
+    fn spec_verify_detection_and_error_paths() {
+        let client = Client::cpu().unwrap();
+        let s = Session::open_eval(&client, toy_artifact(), 0).unwrap();
+        assert!(!s.has_verify(4), "no verify HLO shipped");
+        assert!(!s.has_verify(0), "gamma 0 is never valid");
+
+        let mut a = toy_artifact();
+        a.hlo_files.push(("prefill".into(), std::path::PathBuf::from("/nonexistent")));
+        a.hlo_files.push(("decode_token".into(), std::path::PathBuf::from("/nonexistent")));
+        a.hlo_files.push(("verify@4".into(), std::path::PathBuf::from("/nonexistent")));
+        use crate::runtime::artifact::DecodeStateSpec;
+        use crate::runtime::tensor::DType;
+        a.decode_state = vec![DecodeStateSpec {
+            name: "kv".into(),
+            shape: vec![4, 2],
+            dtype: DType::F32,
+        }];
+        let mut s = Session::open_eval(&client, a, 0).unwrap();
+        assert!(s.has_verify(4));
+        assert!(!s.has_verify(2), "only the shipped gamma verifies");
+
+        // Wrong drafted geometry: rejected before any compile attempt.
+        let slots = s.init_decode_slots(&client, 2).unwrap();
+        assert!(s.verify(&client, slots, &[0; 3], &[true, true], 4).is_err());
+        // Correct shapes but no real backend: error, never a panic.
+        let slots = s.init_decode_slots(&client, 2).unwrap();
+        assert!(s.verify(&client, slots, &[0; 8], &[true, true], 4).is_err());
+        let slots = s.init_decode_slots(&client, 2).unwrap();
+        assert!(s
+            .spec_accept(&client, slots, &[1, 0], &[5, 5], &[true, true])
+            .is_err());
     }
 
     #[test]

@@ -1,0 +1,123 @@
+//! Typed `ALTUP_*` environment parsing: one parse-with-default helper
+//! instead of a hand-rolled `std::env::var(..).ok().and_then(parse)`
+//! chain per knob (the pattern had been copied into `ServerOptions`,
+//! `Session`, `SimSpec`, and the prefetcher before the §L8 knobs would
+//! have added a fourth copy).
+//!
+//! Semantics shared by every helper: an unset variable, an unparsable
+//! value, or a value outside the helper's validity filter all fall back
+//! to the default — a typo'd knob degrades to stock behavior instead of
+//! crashing a server at startup. Values are trimmed before parsing so
+//! `ALTUP_SPEC_GAMMA="4 "` (a common shell-quoting artifact) works.
+//!
+//! Each public helper is a thin env read over a pure parsing/filter
+//! function; the pure layer is what the unit tests exercise (mutating
+//! the process environment from the parallel test runner would race
+//! `getenv` on other test threads).
+
+/// Trim-then-parse, shared by every typed helper.
+fn parse_trimmed<T: std::str::FromStr>(raw: Option<String>) -> Option<T> {
+    raw.and_then(|s| s.trim().parse::<T>().ok())
+}
+
+fn parsed<T: std::str::FromStr>(key: &str) -> Option<T> {
+    parse_trimmed(std::env::var(key).ok())
+}
+
+fn at_least(v: Option<usize>, min: usize, default: usize) -> usize {
+    v.filter(|&n| n >= min).unwrap_or(default)
+}
+
+fn finite_or(v: Option<f64>, default: f64) -> f64 {
+    v.filter(|x| x.is_finite()).unwrap_or(default)
+}
+
+fn nonzero(v: Option<u64>) -> Option<u64> {
+    v.filter(|&x| x > 0)
+}
+
+/// Presence flag (`ALTUP_NO_*` style): set at all — even to the empty
+/// string — means true.
+pub fn flag(key: &str) -> bool {
+    std::env::var_os(key).is_some()
+}
+
+pub fn usize_or(key: &str, default: usize) -> usize {
+    parsed(key).unwrap_or(default)
+}
+
+/// `usize` with a validity floor: values below `min` fall back to the
+/// default (e.g. replica counts must be >= 1).
+pub fn usize_at_least(key: &str, min: usize, default: usize) -> usize {
+    at_least(parsed(key), min, default)
+}
+
+pub fn u64_or(key: &str, default: u64) -> u64 {
+    parsed(key).unwrap_or(default)
+}
+
+pub fn f64_or(key: &str, default: f64) -> f64 {
+    finite_or(parsed(key), default)
+}
+
+/// Optional knob where 0 (or unset / unparsable) means "off" — e.g.
+/// `ALTUP_REQUEST_TIMEOUT_MS`.
+pub fn opt_u64_nonzero(key: &str) -> Option<u64> {
+    nonzero(parsed(key))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The parsing/filter layer is tested as pure functions; the only
+    // real env reads are against keys guaranteed unset (reading the
+    // environment is safe — mutating it from parallel test threads is
+    // the getenv/setenv race these tests deliberately avoid).
+
+    fn s(v: &str) -> Option<String> {
+        Some(v.to_string())
+    }
+
+    #[test]
+    fn parse_with_default_and_trim() {
+        assert_eq!(parse_trimmed::<usize>(s("17")), Some(17));
+        assert_eq!(parse_trimmed::<usize>(s("  42 ")), Some(42), "whitespace trimmed");
+        assert_eq!(parse_trimmed::<usize>(s("not-a-number")), None, "garbage -> None");
+        assert_eq!(parse_trimmed::<usize>(s("")), None);
+        assert_eq!(parse_trimmed::<usize>(None), None);
+        assert_eq!(parse_trimmed::<u64>(s("9000000000")), Some(9_000_000_000));
+        assert_eq!(parse_trimmed::<f64>(s("0.5")), Some(0.5));
+        assert_eq!(parse_trimmed::<usize>(s("-3")), None, "negative usize rejected");
+    }
+
+    #[test]
+    fn validity_floor_and_nonzero_opt() {
+        assert_eq!(at_least(Some(0), 1, 2), 2, "below floor -> default");
+        assert_eq!(at_least(Some(5), 1, 2), 5);
+        assert_eq!(at_least(None, 1, 2), 2);
+        assert_eq!(nonzero(Some(0)), None, "0 means off");
+        assert_eq!(nonzero(Some(5)), Some(5));
+        assert_eq!(nonzero(None), None);
+    }
+
+    #[test]
+    fn float_knob_rejects_non_finite() {
+        assert_eq!(finite_or(parse_trimmed(s("NaN")), 0.75), 0.75, "NaN falls back");
+        assert_eq!(finite_or(parse_trimmed(s("inf")), 0.75), 0.75);
+        assert_eq!(finite_or(parse_trimmed(s("0.5")), 0.75), 0.5);
+        assert_eq!(finite_or(None, 0.8), 0.8);
+    }
+
+    #[test]
+    fn unset_keys_fall_back_to_defaults() {
+        // Read-only env access on keys nothing sets: exercises the
+        // public helpers end-to-end without mutating the environment.
+        assert_eq!(usize_or("ALTUP_ENVTEST_NEVER_SET", 3), 3);
+        assert_eq!(usize_at_least("ALTUP_ENVTEST_NEVER_SET", 1, 2), 2);
+        assert_eq!(u64_or("ALTUP_ENVTEST_NEVER_SET", 7), 7);
+        assert_eq!(f64_or("ALTUP_ENVTEST_NEVER_SET", 0.8), 0.8);
+        assert_eq!(opt_u64_nonzero("ALTUP_ENVTEST_NEVER_SET"), None);
+        assert!(!flag("ALTUP_ENVTEST_NEVER_SET"));
+    }
+}

@@ -8,7 +8,7 @@
 
 use altup::coordinator::server::{
     EngineSpec, FailReason, Request, Response, ServerHandle, ServerOptions, ServerStats,
-    SimSpec,
+    SimSpec, ROUTER_ID,
 };
 use altup::data::tokenizer::EOS;
 use altup::runtime::session::{bucket_for, bucket_lengths};
@@ -22,6 +22,10 @@ fn sim_spec() -> SimSpec {
     spec.token_ns = 0;
     spec.dtoken_ns = 0;
     spec.dstep_ns = 0;
+    if let Some(d) = spec.draft.as_mut() {
+        d.dtoken_ns = 0;
+        d.dstep_ns = 0;
+    }
     spec
 }
 
@@ -39,12 +43,18 @@ fn opts(replicas: usize, bucketed: bool) -> ServerOptions {
         request_timeout_ms: None,
         max_retries: 2,
         replica_restarts: 2,
+        spec_gamma: 0,
     }
 }
 
 /// Continuous-batching options (§Perf L6).
 fn copts(replicas: usize, slots: usize) -> ServerOptions {
     ServerOptions { continuous: true, slots, ..opts(replicas, true) }
+}
+
+/// Speculative-decoding options (§L8) on top of continuous batching.
+fn sopts(replicas: usize, slots: usize, gamma: usize) -> ServerOptions {
+    ServerOptions { spec_gamma: gamma, ..copts(replicas, slots) }
 }
 
 fn prompt(len: usize) -> Vec<i32> {
@@ -579,6 +589,158 @@ fn deadline_sheds_stuck_generations_mid_decode() {
     assert_eq!(stats.requests, 0);
     assert_eq!(stats.failed, 3);
     assert_eq!(stats.sheds, 3, "all failures were deadline sheds");
+}
+
+/// §L8 acceptance contract: greedy speculative output is
+/// token-for-token identical to plain continuous decode — on EOS-first
+/// rows (gen_len 1), no-EOS (stuck) rows, and ordinary rows — at the
+/// Sim default acceptance model and both extremes (accept-all,
+/// reject-all).
+#[test]
+fn spec_decode_parity_across_acceptance_models() {
+    let lens = [1usize, 2, 3, 5, 9, 17, 21, 31, 40, 46, 63, 64, 80];
+    let mut base = sim_spec();
+    base.fault.stuck_every = 3; // inject some never-EOS rows
+    let run = |spec: SimSpec, options: ServerOptions| -> (Vec<Vec<i32>>, ServerStats) {
+        let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), options);
+        let out = collect(&server, &lens);
+        (out, server.shutdown().unwrap())
+    };
+    let (plain_rows, plain) = run(base.clone(), copts(1, 4));
+    assert_eq!(plain.spec.verify_steps, 0, "plain run must not speculate");
+    // The workload really covers the edge rows.
+    assert!(
+        plain_rows.iter().any(|r| r.len() == 1 && r[0] == EOS),
+        "needs an EOS-first row: {plain_rows:?}"
+    );
+    let dec_len = base.dec_len;
+    assert!(
+        plain_rows.iter().any(|r| r.len() == dec_len && !r.contains(&EOS)),
+        "needs a stuck (no-EOS) row: {plain_rows:?}"
+    );
+
+    for rate in [0.0, 0.75, 1.0] {
+        let mut spec = base.clone();
+        spec.draft.as_mut().unwrap().accept_rate = rate;
+        let (rows, stats) = run(spec, sopts(1, 4, 4));
+        assert_eq!(rows, plain_rows, "spec output != plain decode at rate {rate}");
+        assert!(stats.spec.active(), "speculation actually ran at rate {rate}");
+        assert_eq!(
+            stats.spec.spec_tokens as usize, stats.tokens_generated,
+            "every delivered token went through the spec path"
+        );
+        assert_eq!(stats.spec.draft_steps, 4 * stats.spec.verify_steps);
+        assert_eq!(stats.failed, 0);
+        if rate == 0.0 {
+            assert_eq!(stats.spec.accepted, 0, "reject-all accepts nothing");
+            // tokens_per_verify sums over live slots; `collect` drives
+            // one request at a time (occupancy 1), so the aggregate
+            // equals the per-slot value here: exactly the 1 correction
+            // token per verify.
+            assert!(
+                (stats.spec.tokens_per_verify() - 1.0).abs() < 1e-9,
+                "reject-all advances exactly the correction token per verify"
+            );
+        } else if rate == 1.0 {
+            assert!((stats.spec.acceptance_rate() - 1.0).abs() < 1e-12);
+            assert!(stats.spec.tokens_per_verify() > 1.0);
+        } else {
+            let ar = stats.spec.acceptance_rate();
+            assert!(ar > 0.0 && ar < 1.0, "mixed-rate acceptance {ar}");
+            assert!(
+                stats.decode_steps < plain.decode_steps,
+                "speculation must need fewer full-model steps: {} vs {}",
+                stats.decode_steps,
+                plain.decode_steps
+            );
+        }
+    }
+}
+
+/// §L8: requesting speculation against an engine that ships no draft
+/// model falls back cleanly to plain continuous decode — identical
+/// rows, zero spec counters.
+#[test]
+fn spec_gamma_without_draft_falls_back_to_plain() {
+    let lens = [2usize, 9, 17, 40, 64];
+    let run = |spec: SimSpec, options: ServerOptions| -> (Vec<Vec<i32>>, ServerStats) {
+        let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), options);
+        let out = collect(&server, &lens);
+        (out, server.shutdown().unwrap())
+    };
+    let (plain_rows, _) = run(sim_spec(), copts(1, 4));
+    let mut no_draft = sim_spec();
+    no_draft.draft = None;
+    let (rows, stats) = run(no_draft, sopts(1, 4, 4));
+    assert_eq!(rows, plain_rows, "fallback must not change outputs");
+    assert!(!stats.spec.active(), "no draft: no speculative rounds");
+    assert_eq!(stats.spec.drafted, 0);
+    assert!(stats.decode_steps > 0, "still ran the continuous path");
+    assert_eq!(stats.requests, lens.len());
+}
+
+/// §L8 + §L7 compose: speculation with deadlines and stuck rows still
+/// sheds expired slots between rounds, and the summary surfaces the
+/// spec counters.
+#[test]
+fn spec_decode_respects_deadlines_and_reports() {
+    let mut spec = sim_spec();
+    spec.fault.stuck_every = 1; // every request is a stuck generation
+    spec.fault.stuck_step_ns = 20_000_000; // 20 ms per verify round
+    // Reject-all acceptance: each verify advances exactly one token,
+    // so the stuck row deterministically outlives its deadline instead
+    // of racing to dec_len within a couple of rounds.
+    spec.draft.as_mut().unwrap().accept_rate = 0.0;
+    let options = ServerOptions { request_timeout_ms: Some(50), ..sopts(1, 2, 4) };
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), options);
+    let resp = server.infer_response(prompt(4)).expect("terminal response");
+    assert_eq!(resp.failure, Some(FailReason::DeadlineExceeded));
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.sheds, 1);
+    assert!(stats.spec.active(), "the stuck row did run spec rounds before the shed");
+    assert!(stats.summary().contains("spec:"), "summary surfaces spec counters");
+}
+
+/// Satellite regression: a request whose deadline is already expired
+/// at `Request::new` (zero timeout / client clock skew) is shed at
+/// admission with an explicit `DeadlineExceeded` — it never enters a
+/// bucket group, batch row, or decode slot.
+#[test]
+fn pre_expired_requests_shed_at_admission() {
+    let options = ServerOptions { request_timeout_ms: Some(0), ..copts(1, 2) };
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(sim_spec()), options);
+    for i in 0..3 {
+        let resp = server.infer_response(prompt(4 + i)).expect("terminal response");
+        assert_eq!(resp.failure, Some(FailReason::DeadlineExceeded));
+        assert_eq!(resp.replica, ROUTER_ID, "shed router-side, not by a replica");
+        assert!(resp.tokens.is_empty());
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, 0);
+    assert_eq!(stats.sheds, 3);
+    assert_eq!(stats.failed, 3);
+    assert_eq!(stats.batches, 0, "expired requests never formed a batch");
+    assert_eq!(stats.prefills, 0, "...or touched a decode slot");
+}
+
+/// Same, for an explicit client-stamped deadline already in the past —
+/// and a healthy request behind it still decodes normally.
+#[test]
+fn past_client_deadline_shed_while_healthy_requests_serve() {
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(sim_spec()), copts(1, 2));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let stale =
+        Request::with_deadline(prompt(5), tx, Instant::now() - Duration::from_millis(1));
+    server.sender.send(stale).unwrap();
+    let resp = rx.recv().expect("terminal response for the expired request");
+    assert_eq!(resp.failure, Some(FailReason::DeadlineExceeded));
+    assert_eq!(resp.replica, ROUTER_ID);
+    assert!(resp.tokens.is_empty());
+    let ok = server.infer(prompt(7)).expect("healthy request unaffected");
+    assert_eq!(*ok.tokens.last().unwrap(), EOS);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.sheds, 1);
+    assert_eq!(stats.requests, 1);
 }
 
 /// §L7 drain acceptance: `shutdown()` with in-flight continuous
