@@ -26,7 +26,16 @@ budget, terminal responses for every request):
   token (``sim_accept_len``, the leading run of per-position coins
   under ``ACCEPT_RATE`` — bit-for-bit the Rust sampler). The spec A/B
   runs cont x1 spec vs cont x1 plain on a decode-heavy dec_len=128
-  workload; the bar is >= 1.4x decode-token throughput (tokens/s).
+  workload; the bar is >= 1.4x decode-token throughput (tokens/s);
+- §L9 paged decode state: each continuous replica can serve out of a
+  fixed page pool (``PagePool``/``PrefixCache`` here mirror
+  ``runtime::pages`` — LIFO free list, refcounts, chained chunk
+  hashes, LRU eviction of unpinned cache pages) with pool-aware
+  admission (shed / evict / stall, in that order) and prefill cost
+  ``dstep_ns + token_ns * (rows * bucket - prefix_tokens_saved)``.
+  Two A/Bs: equal-pool-memory slots-per-replica (paged vs monolithic,
+  bar >= 1.5x mean occupancy) and a tenant-skewed shared-prefix
+  workload (bar >= 40% prefill tokens saved at equal output tokens).
 
 This lets the serving-policy numbers (continuous vs batch QPS, p95,
 early-exit savings, occupancy, degraded-mode QPS) be measured on
@@ -69,6 +78,12 @@ DRAFT_STEP_NS = DSTEP_NS // 4     # ALTUP_SIM_DRAFT_STEP_NS default
 ACCEPT_RATE = 0.8                 # ALTUP_SIM_ACCEPT_RATE default
 SPEC_GAMMA = 4
 SPEC_DEC_LEN = 128
+# §L9 paged-pool A/B shape (bench --page-size and the prefix workload).
+PAGE_SIZE = 16                    # ALTUP_PAGE_SIZE default
+PREFIX_TENANTS = 4
+PREFIX_HEADER = 96                # 6 full pages of shared system prompt
+PREFIX_POOL_PAGES = 128
+PREFIX_SLOTS = 8
 
 
 class Rng:
@@ -136,10 +151,104 @@ def sim_accept_len(h, pos, gamma, rate):
     return n
 
 
+def pages_for(tokens, page_size):
+    """Mirror of runtime::pages::pages_for (round up)."""
+    ps = max(page_size, 1)
+    return (tokens + ps - 1) // ps
+
+
+def chunk_hashes(tokens, page_size):
+    """Chained FNV-1a page-chunk hashes, bit-for-bit
+    runtime::pages::chunk_hashes: entry k covers the first
+    (k+1)*page_size tokens; the trailing partial chunk is never
+    hashed."""
+    ps = max(page_size, 1)
+    out = []
+    h = 0xCBF29CE484222325
+    for i in range((len(tokens) // ps) * ps):
+        h = ((h ^ (tokens[i] & 0xFFFFFFFF)) * 0x00000100000001B3) & MASK
+        if (i + 1) % ps == 0:
+            out.append(h)
+    return out
+
+
+class PagePool:
+    """Mirror of runtime::pages::PagePool: refcounted pages over a
+    LIFO free list (first alloc hands out page 0)."""
+
+    def __init__(self, page_size, capacity):
+        self.page_size = max(page_size, 1)
+        self.capacity = capacity
+        self.refs = [0] * capacity
+        self.free = list(range(capacity - 1, -1, -1))
+
+    def free_pages(self):
+        return len(self.free)
+
+    def used_pages(self):
+        return self.capacity - len(self.free)
+
+    def alloc(self):
+        page = self.free.pop()
+        self.refs[page] = 1
+        return page
+
+    def retain(self, page):
+        assert self.refs[page] > 0, f"retain of free page {page}"
+        self.refs[page] += 1
+
+    def release(self, page):
+        assert self.refs[page] > 0, f"double free of page {page}"
+        self.refs[page] -= 1
+        if self.refs[page] == 0:
+            self.free.append(page)
+
+
+class PrefixCache:
+    """Mirror of runtime::pages::PrefixCache: chunk hash -> page, with
+    LRU eviction (least recent first) of unpinned entries (refcount 1 —
+    only the cache holds the page)."""
+
+    def __init__(self):
+        self.entries = {}
+        self.order = []  # recency order, least recent first
+
+    def match_len(self, hashes):
+        n = 0
+        for h in hashes:
+            if h not in self.entries:
+                break
+            n += 1
+        return n
+
+    def hit(self, h):
+        self.order.remove(h)
+        self.order.append(h)
+        return self.entries[h]
+
+    def insert(self, pool, h, page):
+        if h in self.entries:
+            return
+        pool.retain(page)
+        self.entries[h] = page
+        self.order.append(h)
+
+    def evict_lru(self, pool):
+        for h in self.order:
+            page = self.entries[h]
+            if pool.refs[page] == 1:
+                self.order.remove(h)
+                del self.entries[h]
+                pool.release(page)
+                return True
+        return False
+
+
 def mixed_prompts(n, enc_len, vocab, seed):
-    """Mirror of the bench's mixed_prompts draws: (length, row_hash).
-    Generation lengths derive from the hash per run (`sim_gen_len(h,
-    dec_len)`), so one workload serves every dec_len variant."""
+    """Mirror of the bench's mixed_prompts draws: (length, row_hash,
+    chunk_hashes). Generation lengths derive from the hash per run
+    (`sim_gen_len(h, dec_len)`), so one workload serves every dec_len
+    variant; chunk hashes (at PAGE_SIZE) feed the §L9 prefix cache."""
     rng = Rng(seed)
     out = []
     for _ in range(n):
@@ -148,7 +257,25 @@ def mixed_prompts(n, enc_len, vocab, seed):
         else:
             length = rng.range(enc_len // 2, enc_len)
         tokens = [rng.range(1, vocab) for _ in range(length)]
-        out.append((length, sim_row_hash(tokens)))
+        out.append((length, sim_row_hash(tokens), chunk_hashes(tokens, PAGE_SIZE)))
+    return out
+
+
+def shared_prefix_prompts(n, enc_len, vocab, seed, tenants, header_len):
+    """Mirror of the bench's shared_prefix_prompts draws: each request
+    is one of ``tenants`` fixed page-aligned system-prompt headers plus
+    a short distinct tail (uniform in [8, 32)) — the tenant-skewed
+    workload where cross-request prefix caching pays."""
+    rng = Rng(seed)
+    headers = [
+        [rng.range(1, vocab) for _ in range(header_len)] for _ in range(tenants)
+    ]
+    out = []
+    for _ in range(n):
+        t = rng.range(0, tenants)
+        tail = rng.range(8, 32)
+        tokens = headers[t] + [rng.range(1, vocab) for _ in range(tail)]
+        out.append((len(tokens), sim_row_hash(tokens), chunk_hashes(tokens, PAGE_SIZE)))
     return out
 
 
@@ -204,6 +331,16 @@ class Stats:
         self.draft_steps = 0
         self.verify_steps = 0
         self.spec_tokens = 0
+        # §L9 PoolMeter mirror (capacity 0 = unpaged run).
+        self.pool_capacity = 0
+        self.pool_used_sum = 0
+        self.pool_samples = 0
+        self.pool_peak = 0
+        self.prefix_hits = 0
+        self.prefix_lookups = 0
+        self.prefill_tokens_saved = 0
+        self.evictions = 0
+        self.alloc_stalls = 0
         self.latency_ms = []
         self.token_ms = []
         self.lock = threading.Lock()
@@ -229,6 +366,14 @@ class Stats:
     def tokens_per_verify(self):
         return self.spec_tokens / self.verify_steps if self.verify_steps else 0.0
 
+    def pool_utilization(self):
+        if not self.pool_samples or not self.pool_capacity:
+            return 0.0
+        return self.pool_used_sum / self.pool_samples / self.pool_capacity
+
+    def prefix_hit_rate(self):
+        return self.prefix_hits / self.prefix_lookups if self.prefix_lookups else 0.0
+
     def note_response(self, latency_s, generated, saved, prompt):
         self.latency_ms.append(latency_s * 1e3)
         self.token_ms.append(latency_s * 1e3 / max(generated, 1))
@@ -242,17 +387,21 @@ class Stats:
 
 
 def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
-               dec_len=DEC_LEN, gamma=0):
+               dec_len=DEC_LEN, gamma=0, paged=None):
     """One serving configuration. Request record (mirrors the Rust
     Admitted/ledger entry): (t0, admitted, reply, length, gen_len,
-    attempts, row_hash). ``fault`` mirrors FaultSpec: {"kill_replica":
-    id, "kill_after_calls": n} — the matching replica raises
-    InjectedKill on that engine call; the router requeues its in-flight
-    requests (bounded by MAX_RETRIES) and respawns a replacement
-    (bounded by RESTARTS). ``gamma`` > 0 mirrors §L8 speculative
-    decoding on the continuous path (draft burst + fused verify per
-    iteration, hash-sampled acceptance). Every request gets a terminal
-    reply: True (tokens) or False (explicit failure)."""
+    attempts, row_hash, chunk_hashes). ``fault`` mirrors FaultSpec:
+    {"kill_replica": id, "kill_after_calls": n} — the matching replica
+    raises InjectedKill on that engine call; the router requeues its
+    in-flight requests (bounded by MAX_RETRIES) and respawns a
+    replacement (bounded by RESTARTS). ``gamma`` > 0 mirrors §L8
+    speculative decoding on the continuous path (draft burst + fused
+    verify per iteration, hash-sampled acceptance). ``paged`` mirrors
+    SimPoolSpec: {"page_size": p, "pool_pages": n, "prefix_cache":
+    bool} switches the continuous replicas onto the §L9 paged path
+    (per-replica page pool, pool-aware admission, prefix reuse). Every
+    request gets a terminal reply: True (tokens) or False (explicit
+    failure)."""
     req_q = queue.Queue()
     # Bounded job queue = backpressure, mirroring the Rust router: every
     # ship is a try-put; a full queue parks the router briefly so the
@@ -260,6 +409,8 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
     job_q = queue.Queue(maxsize=max(replicas, 1))
     exit_q = queue.Queue()
     stats = Stats()
+    if paged is not None and continuous:
+        stats.pool_capacity = paged["pool_pages"]
     n_clients = CLIENTS
     slots_n = slots if slots > 0 else BATCH_SIZE
     state = {
@@ -320,6 +471,15 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
         active = [None] * slots_n  # [req, emitted, bucket]
         admitting = []             # (bucket, req) group mid-prefill
         router_gone = False
+        # §L9: per-replica page pool + slot page tables + prefix cache,
+        # mirroring PoolServing in serve_continuous.
+        pool = cache = None
+        tables = []
+        if paged is not None:
+            pool = PagePool(paged["page_size"], paged["pool_pages"])
+            tables = [[] for _ in range(slots_n)]
+            if paged["prefix_cache"]:
+                cache = PrefixCache()
 
         def stash(job):
             bucket, group = job
@@ -345,28 +505,86 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                             router_gone = True
                         else:
                             stash(job)
-                # Admit same-bucket runs into free slots.
+                # §L9 release pass: retired slots hand their pages back
+                # before admission sizes up the free pool.
+                if pool is not None:
+                    for s in range(slots_n):
+                        if active[s] is None and tables[s]:
+                            for page in tables[s]:
+                                pool.release(page)
+                            tables[s] = []
+                # Admit same-bucket runs into free slots. On the paged
+                # path each candidate is gated on its page footprint:
+                # impossible requests shed, pressure evicts unpinned
+                # cache pages LRU-first, a genuine shortage stalls
+                # admission until live slots retire.
                 free = deque(i for i, a in enumerate(active) if a is None)
-                while free and pending:
+                stalled = False
+                while free and pending and not stalled:
                     bucket = pending[0][0]
                     admitting = []
                     ids = []
+                    group_saved = 0
                     while (
                         pending
                         and pending[0][0] == bucket
                         and free
                         and len(admitting) < BATCH_SIZE
                     ):
-                        admitting.append(pending.popleft())
-                        ids.append(free.popleft())
+                        if pool is None:
+                            admitting.append(pending.popleft())
+                            ids.append(free.popleft())
+                            continue
+                        req = pending[0][1]
+                        total = pages_for(bucket + dec_len, pool.page_size)
+                        if total > pool.capacity:
+                            # PoolExhausted: could never fit, even with
+                            # every page free — explicit terminal shed.
+                            pending.popleft()
+                            with stats.lock:
+                                stats.note_failure()
+                            req[2].put(False)
+                            continue
+                        chunks = req[7] if cache is not None else []
+                        hits = cache.match_len(chunks) if cache is not None else 0
+                        need = total - hits
+                        while pool.free_pages() < need:
+                            if cache is None or not cache.evict_lru(pool):
+                                break
+                            with stats.lock:
+                                stats.evictions += 1
+                        if pool.free_pages() < need:
+                            with stats.lock:
+                                stats.alloc_stalls += 1
+                            stalled = True
+                            break
+                        pending.popleft()
+                        sid = free.popleft()
+                        table = tables[sid]
+                        for k in range(hits):
+                            page = cache.hit(chunks[k])
+                            pool.retain(page)
+                            table.append(page)
+                        while len(table) < total:
+                            table.append(pool.alloc())
+                        with stats.lock:
+                            stats.prefix_lookups += len(chunks)
+                            stats.prefix_hits += hits
+                        if cache is not None:
+                            for k in range(hits, len(chunks)):
+                                cache.insert(pool, chunks[k], table[k])
+                        group_saved += hits * pool.page_size
+                        admitting.append((bucket, req))
+                        ids.append(sid)
                     if not admitting:
-                        break
+                        continue
                     bump()
-                    nsleep(DSTEP_NS + TOKEN_NS * len(admitting) * bucket)
+                    nsleep(DSTEP_NS + TOKEN_NS * (len(admitting) * bucket - group_saved))
                     with stats.lock:
                         stats.batches += 1
                         stats.total_fill += len(admitting)
-                        stats.executed_tokens += len(admitting) * bucket
+                        stats.executed_tokens += len(admitting) * bucket - group_saved
+                        stats.prefill_tokens_saved += group_saved
                     for (b, req), sid in zip(admitting, ids):
                         active[sid] = [req, 0, b]
                     admitting = []
@@ -376,6 +594,14 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                         exit_q.put(("exit", rid, []))
                         return
                     continue
+                if pool is not None:
+                    # Mirror of stats.pool.record: one occupancy sample
+                    # per fused decode iteration.
+                    used = pool.used_pages()
+                    with stats.lock:
+                        stats.pool_used_sum += used
+                        stats.pool_samples += 1
+                        stats.pool_peak = max(stats.pool_peak, used)
                 if gamma > 0:
                     # §L8 draft/verify round: γ draft-model steps plus
                     # ONE fused full-model verify over the static slot
@@ -458,7 +684,8 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                 with stats.lock:
                     stats.retries += 1
                 groups.setdefault(bucket, []).append(
-                    (req[0], time.monotonic(), req[2], req[3], req[4], attempts, req[6])
+                    (req[0], time.monotonic(), req[2], req[3], req[4], attempts,
+                     req[6], req[7])
                 )
         if not state["stops_sent"] and state["restarts_left"] > 0:
             state["restarts_left"] -= 1
@@ -583,18 +810,20 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                 except queue.Empty:
                     pass
             if msg is not None:
-                t0, reply, length, gen_len, h = msg
+                t0, reply, length, gen_len, h, chunks = msg
                 bucket = bucket_for(length, ENC_LEN) if bucketed else ENC_LEN
                 groups.setdefault(bucket, []).append(
-                    (t0, time.monotonic(), reply, length, gen_len, 0, h)
+                    (t0, time.monotonic(), reply, length, gen_len, 0, h, chunks)
                 )
 
     def client(c):
-        for length, h in workload[c::n_clients]:
+        for length, h, chunks in workload[c::n_clients]:
             reply = queue.SimpleQueue()
             # gen_len derives from the row hash at THIS run's dec_len,
             # mirroring the sim engine's per-run EOS sampling.
-            req_q.put((time.monotonic(), reply, length, sim_gen_len(h, dec_len), h))
+            req_q.put(
+                (time.monotonic(), reply, length, sim_gen_len(h, dec_len), h, chunks)
+            )
             reply.get()  # terminal: True (tokens) or False (failure)
         req_q.put(None)  # this client is done
 
@@ -628,7 +857,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
 
 
 def row(mode, replicas, qps, stats):
-    return {
+    r = {
         "mode": mode,
         "replicas": replicas,
         "qps": round(qps, 1),
@@ -648,6 +877,17 @@ def row(mode, replicas, qps, stats):
         "p95_ms": round(percentile(stats.latency_ms, 95), 2),
         "p99_ms": round(percentile(stats.latency_ms, 99), 2),
     }
+    if stats.pool_capacity:
+        r.update({
+            "pool_capacity": stats.pool_capacity,
+            "pool_occupancy": round(stats.pool_utilization(), 4),
+            "pool_peak": stats.pool_peak,
+            "prefix_hit_rate": round(stats.prefix_hit_rate(), 4),
+            "prefill_tokens_saved": stats.prefill_tokens_saved,
+            "prefix_evictions": stats.evictions,
+            "alloc_stalls": stats.alloc_stalls,
+        })
+    return r
 
 
 def main():
@@ -722,6 +962,73 @@ def main():
                 best = (q, s)
         return best
 
+    # §L9 paged A/B #1: slots-per-replica at equal pool memory. A
+    # monolithic slot reserves the full enc+dec KV (pages_per_slot
+    # pages); the paged engine allocates per request's actual bucket,
+    # so the same pool hosts ~2x the concurrent slots on the mixed
+    # workload. Prefix cache off: pure paging under test. Bar: best
+    # occupancy ratio >= 1.5x.
+    pages_per_slot = pages_for(ENC_LEN + DEC_LEN, PAGE_SIZE)
+    paged_pairs = []
+    best_slots_ratio = 0.0
+    for mono_slots, paged_slots in ((2, 4), (4, 8), (8, 16)):
+        pool_pages = pages_per_slot * mono_slots
+        mq, ms = run_config(workload, 1, bucketed=True, continuous=True,
+                            slots=mono_slots)
+        pcfg = {"page_size": PAGE_SIZE, "pool_pages": pool_pages,
+                "prefix_cache": False}
+        gq, gs = run_config(workload, 1, bucketed=True, continuous=True,
+                            slots=paged_slots, paged=pcfg)
+        assert ms.tokens_generated == gs.tokens_generated, (
+            ms.tokens_generated, gs.tokens_generated)
+        ratio = gs.mean_occupancy() / ms.mean_occupancy() if ms.mean_occupancy() else 0.0
+        best_slots_ratio = max(best_slots_ratio, ratio)
+        print(
+            f"paged pool={pool_pages}p: mono x{mono_slots} slots occup "
+            f"{ms.mean_occupancy():.2f} ({mq:.1f} qps) vs paged x{paged_slots} "
+            f"slots occup {gs.mean_occupancy():.2f} ({gq:.1f} qps) "
+            f"= {ratio:.2f}x slots, {gs.alloc_stalls} stalls"
+        )
+        paged_pairs.append({
+            "pool_pages": pool_pages,
+            "monolithic_slots": mono_slots,
+            "paged_slots": paged_slots,
+            "monolithic": row("cont-mono", 1, mq, ms),
+            "paged": row("cont-paged", 1, gq, gs),
+            "slots_ratio": round(ratio, 3),
+            "qps_ratio": round(gq / mq if mq else 0.0, 3),
+        })
+    assert best_slots_ratio >= 1.5, best_slots_ratio
+
+    # §L9 paged A/B #2: tenant-skewed shared-prefix workload (4 system
+    # prompts of 96 tokens = 6 full pages + short distinct tails).
+    # Paged + prefix cache vs unpaged monolithic at the same slot
+    # count: identical generated tokens, >= 40% of prefill tokens
+    # saved by mapping cached header pages instead of re-running them.
+    prefix_workload = shared_prefix_prompts(
+        REQUESTS, ENC_LEN, VOCAB, 0x5E0A11, PREFIX_TENANTS, PREFIX_HEADER
+    )
+    uq, us = run_config(prefix_workload, 1, bucketed=True, continuous=True,
+                        slots=PREFIX_SLOTS)
+    pcfg = {"page_size": PAGE_SIZE, "pool_pages": PREFIX_POOL_PAGES,
+            "prefix_cache": True}
+    fq, fs = run_config(prefix_workload, 1, bucketed=True, continuous=True,
+                        slots=PREFIX_SLOTS, paged=pcfg)
+    assert us.tokens_generated == fs.tokens_generated, (
+        us.tokens_generated, fs.tokens_generated)
+    saved_ratio = fs.prefill_tokens_saved / max(
+        fs.prefill_tokens_saved + fs.executed_tokens, 1
+    )
+    assert saved_ratio >= 0.40, saved_ratio
+    assert fs.prefix_hit_rate() > 0.0
+    print(
+        f"prefix cache ({PREFIX_TENANTS} tenants, {PREFIX_HEADER}-token headers): "
+        f"{saved_ratio * 100:.1f}% prefill tokens saved, "
+        f"hit rate {fs.prefix_hit_rate() * 100:.1f}%, "
+        f"{fs.evictions} evictions, {fq / uq if uq else 0.0:.2f}x qps vs unpaged, "
+        f"tokens {fs.tokens_generated} == {us.tokens_generated}"
+    )
+
     pq, pstats = best_of(2, 0)
     sq, sstats = best_of(2, SPEC_GAMMA)
     assert pstats.tokens_generated == sstats.tokens_generated, (
@@ -788,6 +1095,26 @@ def main():
             "accepted": sstats.accepted,
             "verify_steps": sstats.verify_steps,
             "draft_steps": sstats.draft_steps,
+        },
+        "paged": {
+            "page_size": PAGE_SIZE,
+            "pages_per_slot": pages_per_slot,
+            "pairs": paged_pairs,
+            "slots_ratio": round(best_slots_ratio, 3),
+        },
+        "prefix": {
+            "page_size": PAGE_SIZE,
+            "tenants": PREFIX_TENANTS,
+            "header_tokens": PREFIX_HEADER,
+            "pool_pages": PREFIX_POOL_PAGES,
+            "slots": PREFIX_SLOTS,
+            "requests": REQUESTS,
+            "unpaged": row("cont-mono", 1, uq, us),
+            "paged": row("cont-prefix", 1, fq, fs),
+            "prefill_saved_ratio": round(saved_ratio, 4),
+            "prefix_hit_rate": round(fs.prefix_hit_rate(), 4),
+            "qps_ratio": round(fq / uq if uq else 0.0, 3),
+            "tokens_match": True,
         },
         "producer": "python/tools/server_throughput_twin.py "
                     "(threaded twin; re-run `cargo bench --bench server_throughput -- --json` "

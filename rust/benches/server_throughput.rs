@@ -18,6 +18,9 @@
 //!   --spec-dec-len <n> dec_len of the decode-heavy spec A/B workload
 //!                      (default 128 — generation-dominated, the
 //!                      regime speculative decoding targets)
+//!   --paged <0|1>      run the §L9 paged-pool A/Bs and their
+//!                      acceptance bars (default 1; 0 skips — small CI
+//!                      smokes use this, the bars assume a loaded run)
 //!
 //! Besides the L5/L6 grid, the bench runs a §L7 **degraded-mode A/B**
 //! (sim engine only): `cont x4` healthy vs `cont x4` with one replica
@@ -35,6 +38,19 @@
 //! model (hash coin α = 0.8). Output parity (spec tokens == plain
 //! tokens) is `ensure!`d on every run.
 //!
+//! §L9 adds two **paged-pool A/Bs** (sim engine only — `SimPoolSpec`
+//! rides on `SimSpec`). Equal-memory pairs: a pool sized to S
+//! monolithic slots' KV (`pages_for(enc_len + dec_len)` pages each)
+//! hosts 2S paged slots on the same mixed workload — paging reclaims
+//! the padded tail of every short or early-exited row, so mean slot
+//! occupancy must reach >= 1.5x at token parity. Shared-prefix: a
+//! tenant-skewed workload (4 fixed 96-token system-prompt headers plus
+//! short distinct tails) served with the cross-request prefix cache on
+//! vs unpaged monolithic at equal slots — >= 40% of prefill tokens
+//! must come from cached pages, with identical generated tokens. Both
+//! workloads and bars are mirrored draw-for-draw by the Python twin
+//! (`python/tools/server_throughput_twin.py`).
+//!
 //! Backend: when `make artifacts` has run AND a real PJRT backend is
 //! linked, the bench serves the micro-altup artifact; otherwise it
 //! falls back to the deterministic sim engine (prefill cost
@@ -49,9 +65,10 @@
 //! early-exit, iteration-level admission) at the same replica count.
 
 use altup::coordinator::server::{
-    EngineSpec, Request, ServerHandle, ServerOptions, ServerStats, SimSpec,
+    EngineSpec, Request, ServerHandle, ServerOptions, ServerStats, SimPoolSpec, SimSpec,
 };
 use altup::runtime::artifact::load_named;
+use altup::runtime::pages::pages_for;
 use altup::runtime::client::Client;
 use altup::util::cli::Args;
 use altup::util::json::Json;
@@ -73,6 +90,33 @@ fn mixed_prompts(n: usize, enc_len: usize, vocab: usize, seed: u64) -> Vec<Vec<i
                 rng.range(enc_len / 2, enc_len)
             };
             (0..len).map(|_| rng.range(1, vocab) as i32).collect()
+        })
+        .collect()
+}
+
+/// §L9 tenant-skewed shared-prefix workload: each request is one of
+/// `tenants` fixed page-aligned system-prompt headers plus a short
+/// distinct tail (uniform in [8, 32)) — the regime where cross-request
+/// prefix caching pays. The Python twin's `shared_prefix_prompts`
+/// mirrors the draw order token-for-token.
+fn shared_prefix_prompts(
+    n: usize,
+    vocab: usize,
+    seed: u64,
+    tenants: usize,
+    header_len: usize,
+) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    let headers: Vec<Vec<i32>> = (0..tenants)
+        .map(|_| (0..header_len).map(|_| rng.range(1, vocab) as i32).collect())
+        .collect();
+    (0..n)
+        .map(|_| {
+            let t = rng.range(0, tenants);
+            let tail = rng.range(8, 32);
+            let mut tokens = headers[t].clone();
+            tokens.extend((0..tail).map(|_| rng.range(1, vocab) as i32));
+            tokens
         })
         .collect()
 }
@@ -119,7 +163,7 @@ fn drive(
 }
 
 fn row_json(mode: &str, replicas: usize, qps: f64, stats: &ServerStats) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("mode", Json::str(mode)),
         ("replicas", Json::num(replicas as f64)),
         ("qps", Json::num(qps)),
@@ -136,7 +180,23 @@ fn row_json(mode: &str, replicas: usize, qps: f64, stats: &ServerStats) -> Json 
         ("p50_ms", Json::num(stats.p50_ms())),
         ("p95_ms", Json::num(stats.p95_ms())),
         ("p99_ms", Json::num(stats.p99_ms())),
-    ])
+    ];
+    // §L9: pool telemetry rides along whenever the run served paged.
+    if stats.pool.active() {
+        fields.extend([
+            ("pool_capacity", Json::num(stats.pool.capacity as f64)),
+            ("pool_occupancy", Json::num(stats.pool.utilization())),
+            ("pool_peak", Json::num(stats.pool.peak_used as f64)),
+            ("prefix_hit_rate", Json::num(stats.pool.hit_rate())),
+            (
+                "prefill_tokens_saved",
+                Json::num(stats.pool.prefill_tokens_saved as f64),
+            ),
+            ("prefix_evictions", Json::num(stats.pool.evictions as f64)),
+            ("alloc_stalls", Json::num(stats.pool.alloc_stalls as f64)),
+        ]);
+    }
+    Json::obj(fields)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -150,6 +210,7 @@ fn main() -> anyhow::Result<()> {
     let kill_after = args.u64_or("kill-after", 40);
     let spec_gamma = args.usize_or("spec-gamma", 4);
     let spec_dec_len = args.usize_or("spec-dec-len", 128);
+    let paged_ab = args.usize_or("paged", 1) != 0;
     let json_out = args.has("json") || args.has("json-path");
 
     // Pick the backend: real artifact when present and executable,
@@ -351,6 +412,144 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // §L9 paged-pool A/B #1 (sim engine only — `SimPoolSpec` rides on
+    // `SimSpec`): equal-memory monolithic-vs-paged pairs. A pool of
+    // `pages_for(enc+dec) * S` pages holds exactly S monolithic slots'
+    // worth of KV; the paged scheduler runs 2S slots against it on the
+    // same mixed workload, reclaiming every padded short-prompt tail
+    // and early-exited decode suffix. Bar: best mean-occupancy ratio
+    // >= 1.5x at token parity.
+    let mut paged_row: Option<Json> = None;
+    let mut prefix_row: Option<Json> = None;
+    if let (EngineSpec::Sim(base), true) = (&engine, paged_ab) {
+        const PAGE_SIZE: usize = 16;
+        const PREFIX_TENANTS: usize = 4;
+        const PREFIX_HEADER: usize = 96;
+        const PREFIX_POOL_PAGES: usize = 128;
+        const PREFIX_SLOTS: usize = 8;
+        let pages_per_slot = pages_for(enc_len + dec_len, PAGE_SIZE);
+        // Hermetic monolithic arm: an exported ALTUP_POOL_PAGES must
+        // not silently page the baseline side of the A/B.
+        let mono = {
+            let mut m = base.clone();
+            m.pool = None;
+            EngineSpec::Sim(m)
+        };
+        let mut pairs: Vec<Json> = Vec::new();
+        let mut best_slots_ratio = 0.0f64;
+        for (mono_slots, paged_slots) in [(2usize, 4usize), (4, 8), (8, 16)] {
+            let pool_pages = pages_per_slot * mono_slots;
+            let mut mo = opts(1, true, true);
+            mo.slots = mono_slots;
+            let (mq, ms) = drive(&mono, mo, &prompts, clients)?;
+            let mut pspec = base.clone();
+            pspec.pool = Some(SimPoolSpec {
+                page_size: PAGE_SIZE,
+                pool_pages,
+                prefix_cache: false,
+            });
+            let mut po = opts(1, true, true);
+            po.slots = paged_slots;
+            let (gq, gs) = drive(&EngineSpec::Sim(pspec), po, &prompts, clients)?;
+            anyhow::ensure!(
+                ms.tokens_generated == gs.tokens_generated,
+                "paged parity: {} tokens mono vs {} paged",
+                ms.tokens_generated,
+                gs.tokens_generated
+            );
+            let mono_occ = ms.occupancy.mean();
+            let ratio = if mono_occ > 0.0 { gs.occupancy.mean() / mono_occ } else { 0.0 };
+            best_slots_ratio = best_slots_ratio.max(ratio);
+            println!(
+                "paged pool={pool_pages}p: mono x{mono_slots} slots occup {:.2} \
+                 ({mq:.1} qps) vs paged x{paged_slots} slots occup {:.2} \
+                 ({gq:.1} qps) = {ratio:.2}x slots, {} stalls",
+                ms.occupancy.mean(),
+                gs.occupancy.mean(),
+                gs.pool.alloc_stalls
+            );
+            pairs.push(Json::obj(vec![
+                ("pool_pages", Json::num(pool_pages as f64)),
+                ("monolithic_slots", Json::num(mono_slots as f64)),
+                ("paged_slots", Json::num(paged_slots as f64)),
+                ("monolithic", row_json("cont-mono", 1, mq, &ms)),
+                ("paged", row_json("cont-paged", 1, gq, &gs)),
+                ("slots_ratio", Json::num(ratio)),
+                ("qps_ratio", Json::num(if mq > 0.0 { gq / mq } else { 0.0 })),
+            ]));
+        }
+        anyhow::ensure!(
+            best_slots_ratio >= 1.5,
+            "paged slots-per-replica bar: best {best_slots_ratio:.2}x < 1.5x"
+        );
+        paged_row = Some(Json::obj(vec![
+            ("page_size", Json::num(PAGE_SIZE as f64)),
+            ("pages_per_slot", Json::num(pages_per_slot as f64)),
+            ("pairs", Json::Arr(pairs)),
+            ("slots_ratio", Json::num(best_slots_ratio)),
+        ]));
+
+        // §L9 paged-pool A/B #2: tenant-skewed shared-prefix workload
+        // (4 fixed 96-token system-prompt headers = 6 full pages each,
+        // plus short distinct tails). Prefix cache on vs unpaged
+        // monolithic at equal slots: identical generated tokens, and
+        // >= 40% of prefill tokens served by mapping cached header
+        // pages instead of re-running them.
+        let pprompts =
+            shared_prefix_prompts(requests, vocab, 0x5E_0A11, PREFIX_TENANTS, PREFIX_HEADER);
+        let mut uo = opts(1, true, true);
+        uo.slots = PREFIX_SLOTS;
+        let (uq, us) = drive(&mono, uo, &pprompts, clients)?;
+        let mut fspec = base.clone();
+        fspec.pool = Some(SimPoolSpec {
+            page_size: PAGE_SIZE,
+            pool_pages: PREFIX_POOL_PAGES,
+            prefix_cache: true,
+        });
+        let mut fo = opts(1, true, true);
+        fo.slots = PREFIX_SLOTS;
+        let (fq, fs) = drive(&EngineSpec::Sim(fspec), fo, &pprompts, clients)?;
+        anyhow::ensure!(
+            us.tokens_generated == fs.tokens_generated,
+            "prefix parity: {} tokens unpaged vs {} paged",
+            us.tokens_generated,
+            fs.tokens_generated
+        );
+        let saved = fs.pool.prefill_tokens_saved as f64;
+        let saved_ratio = saved / (saved + fs.executed_tokens as f64).max(1.0);
+        anyhow::ensure!(
+            saved_ratio >= 0.40,
+            "prefix-cache bar: {:.1}% prefill tokens saved < 40%",
+            saved_ratio * 100.0
+        );
+        anyhow::ensure!(fs.pool.hit_rate() > 0.0, "prefix cache never hit");
+        println!(
+            "prefix cache ({PREFIX_TENANTS} tenants, {PREFIX_HEADER}-token headers): \
+             {:.1}% prefill tokens saved, hit rate {:.1}%, {} evictions, \
+             {:.2}x qps vs unpaged, tokens {} == {}",
+            saved_ratio * 100.0,
+            fs.pool.hit_rate() * 100.0,
+            fs.pool.evictions,
+            if uq > 0.0 { fq / uq } else { 0.0 },
+            fs.tokens_generated,
+            us.tokens_generated
+        );
+        prefix_row = Some(Json::obj(vec![
+            ("page_size", Json::num(PAGE_SIZE as f64)),
+            ("tenants", Json::num(PREFIX_TENANTS as f64)),
+            ("header_tokens", Json::num(PREFIX_HEADER as f64)),
+            ("pool_pages", Json::num(PREFIX_POOL_PAGES as f64)),
+            ("slots", Json::num(PREFIX_SLOTS as f64)),
+            ("requests", Json::num(requests as f64)),
+            ("unpaged", row_json("cont-mono", 1, uq, &us)),
+            ("paged", row_json("cont-prefix", 1, fq, &fs)),
+            ("prefill_saved_ratio", Json::num(saved_ratio)),
+            ("prefix_hit_rate", Json::num(fs.pool.hit_rate())),
+            ("qps_ratio", Json::num(if uq > 0.0 { fq / uq } else { 0.0 })),
+            ("tokens_match", Json::Bool(true)),
+        ]));
+    }
+
     let (bq1, bp1) = find("batch", 1);
     let (cq1, cp1) = find("cont", 1);
     let (cq4, _) = find("cont", 4);
@@ -411,6 +610,12 @@ fn main() -> anyhow::Result<()> {
         }
         if let Some(s) = spec_row {
             top.push(("speculative", s));
+        }
+        if let Some(p) = paged_row {
+            top.push(("paged", p));
+        }
+        if let Some(p) = prefix_row {
+            top.push(("prefix", p));
         }
         let doc = Json::obj(top);
         std::fs::write(&path, format!("{doc}\n"))?;

@@ -327,6 +327,94 @@ impl SpecMeter {
     }
 }
 
+/// Paged decode-state pool counters (§L9): page occupancy, prefix-
+/// cache effectiveness, and the allocator's pressure signals.
+/// Mergeable across replicas like the other serving meters — pools are
+/// per-replica, so capacities/peaks merge as max (a fleet of equal
+/// replicas reports one pool's geometry) while the occupancy samples
+/// and event counters sum.
+#[derive(Debug, Clone, Default)]
+pub struct PoolMeter {
+    /// Pages in one replica's pool (0 = paged serving inactive).
+    pub capacity: usize,
+    /// Sum of used-page samples (one per decode iteration).
+    pub used_sum: u64,
+    /// Number of occupancy samples taken.
+    pub samples: u64,
+    /// Most pages ever in use at once on any replica.
+    pub peak_used: usize,
+    /// Most live slots any replica sustained at once — the paged
+    /// path's slots-per-replica headline (monolithic slots cap this at
+    /// memory/slot_bytes; paging caps it at what the pool covers).
+    pub peak_live_slots: usize,
+    /// Full prompt chunks served from the prefix cache.
+    pub prefix_hits: u64,
+    /// Full prompt chunks probed against the prefix cache.
+    pub prefix_lookups: u64,
+    /// Prompt tokens whose prefill was skipped via prefix hits.
+    pub prefill_tokens_saved: u64,
+    /// Unpinned prefix pages evicted under pool pressure.
+    pub evictions: u64,
+    /// Admission passes that stalled because eviction could not free
+    /// enough pages (the request stays queued, not shed).
+    pub alloc_stalls: u64,
+}
+
+impl PoolMeter {
+    /// Whether a paged pool served anything (summary/JSON gating).
+    pub fn active(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Sample pool state after one decode iteration.
+    pub fn record(&mut self, used_pages: usize, live_slots: usize) {
+        self.used_sum += used_pages as u64;
+        self.samples += 1;
+        self.peak_used = self.peak_used.max(used_pages);
+        self.peak_live_slots = self.peak_live_slots.max(live_slots);
+    }
+
+    /// Mean pages in use per decode iteration.
+    pub fn mean_used(&self) -> f64 {
+        if self.samples == 0 {
+            0.0
+        } else {
+            self.used_sum as f64 / self.samples as f64
+        }
+    }
+
+    /// Mean page occupancy as a fraction of capacity.
+    pub fn utilization(&self) -> f64 {
+        if self.capacity == 0 {
+            0.0
+        } else {
+            self.mean_used() / self.capacity as f64
+        }
+    }
+
+    /// Fraction of probed prompt chunks served from the prefix cache.
+    pub fn hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &PoolMeter) {
+        self.capacity = self.capacity.max(other.capacity);
+        self.used_sum += other.used_sum;
+        self.samples += other.samples;
+        self.peak_used = self.peak_used.max(other.peak_used);
+        self.peak_live_slots = self.peak_live_slots.max(other.peak_live_slots);
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_lookups += other.prefix_lookups;
+        self.prefill_tokens_saved += other.prefill_tokens_saved;
+        self.evictions += other.evictions;
+        self.alloc_stalls += other.alloc_stalls;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -514,6 +602,45 @@ mod tests {
         assert!((a.acceptance_rate() - 0.6).abs() < 1e-12);
         // Reject-all alone still delivers 1 correction per verify.
         assert!((b.tokens_per_verify() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_meter_rates_and_merge() {
+        let empty = PoolMeter::default();
+        assert!(!empty.active());
+        assert_eq!(empty.mean_used(), 0.0, "no NaN on empty");
+        assert_eq!(empty.utilization(), 0.0);
+        assert_eq!(empty.hit_rate(), 0.0);
+
+        let mut a = PoolMeter { capacity: 40, ..PoolMeter::default() };
+        assert!(a.active());
+        a.record(10, 3);
+        a.record(30, 5);
+        a.prefix_lookups = 8;
+        a.prefix_hits = 6;
+        a.prefill_tokens_saved = 96;
+        assert!((a.mean_used() - 20.0).abs() < 1e-12);
+        assert!((a.utilization() - 0.5).abs() < 1e-12);
+        assert!((a.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(a.peak_used, 30);
+        assert_eq!(a.peak_live_slots, 5);
+
+        // Merge: per-replica geometry as max, samples/events as sums.
+        let mut b = PoolMeter { capacity: 40, ..PoolMeter::default() };
+        b.record(40, 8);
+        b.prefix_lookups = 2;
+        b.evictions = 3;
+        b.alloc_stalls = 1;
+        a.merge(&b);
+        assert_eq!(a.capacity, 40);
+        assert_eq!(a.samples, 3);
+        assert_eq!(a.peak_used, 40);
+        assert_eq!(a.peak_live_slots, 8);
+        assert_eq!(a.prefix_lookups, 10);
+        assert!((a.hit_rate() - 0.6).abs() < 1e-12);
+        assert_eq!(a.evictions, 3);
+        assert_eq!(a.alloc_stalls, 1);
+        assert!((a.mean_used() - 80.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

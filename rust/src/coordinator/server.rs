@@ -35,6 +35,23 @@
 //! and benches without a PJRT backend. Replicas fall back to plain
 //! decode when no draft is available.
 //!
+//! §Perf L9 — replicas with a **paged decode contract** serve KV state
+//! out of a fixed page pool instead of per-slot monoliths: every slot
+//! maps its KV through a page table into refcounted fixed-size pages
+//! (`runtime::pages`), admission is pool-aware (a request is admitted
+//! only when its pages fit — an impossible request is shed with
+//! `FailReason::PoolExhausted`, a transient shortage stalls admission
+//! until live slots retire), and a content-addressed **prefix cache**
+//! pins page-aligned prompt chunks so shared prefixes map one physical
+//! copy and skip their covered prefill work (LRU-evicted under pool
+//! pressure, never while any slot still maps the page). Artifacts opt
+//! in by shipping the `paged` meta entry plus the
+//! `prefill_paged`/`decode_token_paged` HLOs; the sim engine models
+//! the pool with [`SimPoolSpec`] (`ALTUP_POOL_PAGES` /
+//! `ALTUP_PAGE_SIZE` / `ALTUP_PREFIX_CACHE`). Replicas without the
+//! contract keep serving monolithic `DecodeSlots`, token-for-token
+//! identical.
+//!
 //! §L7 — the serving lifecycle is supervised (cf. Pope et al. 2022,
 //! where replica failure and load shedding are scheduler states, not
 //! fatal errors):
@@ -66,11 +83,12 @@
 //! generations), so supervision, retry, shedding, and drain are all
 //! testable and benchable without a PJRT backend.
 
-use crate::coordinator::metrics::{LatencyHistogram, OccupancyMeter, SpecMeter};
+use crate::coordinator::metrics::{LatencyHistogram, OccupancyMeter, PoolMeter, SpecMeter};
 use crate::coordinator::spec::{self, SpecDecoder};
 use crate::data::tokenizer::EOS;
 use crate::runtime::artifact::load_named;
 use crate::runtime::client::Client;
+use crate::runtime::pages::{chunk_hashes, pages_for, PagePool, PageTable, PrefixCache};
 use crate::runtime::session::{bucket_for, DecodeSlots, Session};
 use crate::util::env;
 use anyhow::{anyhow, bail, Context, Result};
@@ -142,6 +160,10 @@ pub enum FailReason {
     /// A replica failed during drain, after the job queue closed, so
     /// there was no requeue path left.
     AbortedOnDrain,
+    /// §L9: the request's KV footprint (prompt bucket + decode room)
+    /// exceeds the replica page pool's total capacity — it could never
+    /// be admitted, even with every page free.
+    PoolExhausted,
 }
 
 impl std::fmt::Display for FailReason {
@@ -151,6 +173,9 @@ impl std::fmt::Display for FailReason {
             FailReason::RetriesExhausted => "retry budget exhausted after replica failures",
             FailReason::NoReplicas => "no live replicas (startup failure or restart budget exhausted)",
             FailReason::AbortedOnDrain => "replica failed during drain with no requeue path left",
+            FailReason::PoolExhausted => {
+                "request needs more KV pages than the replica pool holds"
+            }
         })
     }
 }
@@ -342,8 +367,44 @@ pub struct SimSpec {
     /// `ServerOptions::spec_gamma > 0` to switch on); `None` exercises
     /// the no-draft fallback path.
     pub draft: Option<SimDraftSpec>,
+    /// §L9 paged decode-state pool. `Some` means the sim "artifact"
+    /// ships the paged contract and replicas serve the continuous path
+    /// out of a page pool with host-side allocation, prefix caching,
+    /// and pool-aware admission; `None` exercises the monolithic
+    /// fallback. `SimSpec::new` reads it from `ALTUP_POOL_PAGES` &
+    /// friends.
+    pub pool: Option<SimPoolSpec>,
     /// Injected faults (default: none).
     pub fault: FaultSpec,
+}
+
+/// §L9 sim page-pool geometry: mirrors the real backend's
+/// `paged` meta entry (page size) + `ALTUP_POOL_PAGES` capacity knob.
+/// The pool/table/cache machinery itself is host-side and shared with
+/// the real backend — only the per-token cost model is simulated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimPoolSpec {
+    /// Tokens of KV per page. `ALTUP_PAGE_SIZE` sets the default
+    /// (else 16).
+    pub page_size: usize,
+    /// Physical pages in the replica pool (the §L9 memory budget).
+    pub pool_pages: usize,
+    /// Cross-request prefix caching (default on;
+    /// `ALTUP_PREFIX_CACHE=0` disables — the A/B baseline).
+    pub prefix_cache: bool,
+}
+
+impl SimPoolSpec {
+    /// `Some` iff `ALTUP_POOL_PAGES` is set nonzero — the paged sim
+    /// opt-in, mirroring how a real artifact opts in via its `paged`
+    /// meta entry.
+    pub fn from_env() -> Option<SimPoolSpec> {
+        env::opt_u64_nonzero("ALTUP_POOL_PAGES").map(|pages| SimPoolSpec {
+            page_size: env::usize_at_least("ALTUP_PAGE_SIZE", 1, 16),
+            pool_pages: pages as usize,
+            prefix_cache: env::usize_or("ALTUP_PREFIX_CACHE", 1) > 0,
+        })
+    }
 }
 
 /// Sim cost + acceptance model for the §L8 draft model. Defaults
@@ -388,6 +449,7 @@ impl SimSpec {
                 dstep_ns: env::u64_or("ALTUP_SIM_DRAFT_STEP_NS", dstep_ns / 4),
                 accept_rate: env::f64_or("ALTUP_SIM_ACCEPT_RATE", 0.8).clamp(0.0, 1.0),
             }),
+            pool: SimPoolSpec::from_env(),
             fault: FaultSpec::default(),
         }
     }
@@ -446,6 +508,10 @@ pub struct ServerStats {
     /// draft/verify steps, tokens delivered per verify). All-zero when
     /// speculation is off or unsupported.
     pub spec: SpecMeter,
+    /// §L9 paged decode-state counters (pool occupancy, prefix cache
+    /// hit rate, prefill tokens saved, evictions, admission stalls).
+    /// All-zero when the replica serves monolithic slots.
+    pub pool: PoolMeter,
     /// Live-slots-per-decode-iteration meter (continuous path only).
     pub occupancy: OccupancyMeter,
     /// Per-request queued+executed latency, log-bucketed (O(1) memory
@@ -546,6 +612,7 @@ impl ServerStats {
         self.failed += other.failed;
         self.drained += other.drained;
         self.spec.merge(&other.spec);
+        self.pool.merge(&other.pool);
         self.occupancy.merge(&other.occupancy);
         self.latency.merge(&other.latency);
         self.token_latency.merge(&other.token_latency);
@@ -579,6 +646,19 @@ impl ServerStats {
                 self.spec.drafted,
                 self.spec.tokens_per_verify(),
                 self.spec.verify_steps
+            ));
+        }
+        if self.pool.active() {
+            s.push_str(&format!(
+                " | pool: {:.1}% occupancy (peak {}/{} pages), prefix hit rate {:.1}%, \
+                 {} prefill tokens saved, {} evictions, {} stalls",
+                self.pool.utilization() * 100.0,
+                self.pool.peak_used,
+                self.pool.capacity,
+                self.pool.hit_rate() * 100.0,
+                self.pool.prefill_tokens_saved,
+                self.pool.evictions,
+                self.pool.alloc_stalls
             ));
         }
         if self.failed + self.retries + self.restarts + self.drained > 0 {
@@ -664,6 +744,14 @@ impl Ledger {
 
     fn take(&self, ticket: u64) -> Option<Held> {
         self.lock().held.remove(&ticket)
+    }
+
+    /// Run `f` over a held request's prompt tokens in place (§L9
+    /// prefix-chunk hashing at admission) — no clone, same reasoning
+    /// as `pack_rows`. `None` when the ticket was already taken.
+    fn with_prompt<R>(&self, ticket: u64, f: impl FnOnce(&[i32]) -> R) -> Option<R> {
+        let inner = self.lock();
+        inner.held.get(&ticket).map(|h| f(&h.req.enc_tokens))
     }
 
     fn drain(&self) -> Vec<Held> {
@@ -1418,12 +1506,39 @@ impl Engine {
     }
 
     /// Whether this engine can run the split prefill/decode_token
-    /// discipline (the artifact ships the HLO pair; the sim can opt
-    /// out to exercise the fallback).
+    /// discipline (the artifact ships the HLO pair — monolithic-slot
+    /// or §L9 paged; the sim can opt out to exercise the fallback).
     fn supports_continuous(&self) -> bool {
         match self {
-            Engine::Real { session, .. } => session.has_split_decode(),
+            Engine::Real { session, .. } => {
+                session.has_split_decode() || session.has_paged_decode()
+            }
             Engine::Sim(e) => e.spec.split_decode,
+        }
+    }
+
+    /// §L9: the paged serving geometry — `(page_size, pool_pages,
+    /// prefix_cache)` — when this engine carries the paged decode
+    /// contract. `None` means the replica serves monolithic
+    /// `DecodeSlots` (the documented fallback). The real backend reads
+    /// pool capacity from `ALTUP_POOL_PAGES` (default: the monolithic
+    /// batch's worth of pages) and the prefix-cache switch from
+    /// `ALTUP_PREFIX_CACHE`; the sim carries both in its spec.
+    fn paged_geometry(&self) -> Option<(usize, usize, bool)> {
+        match self {
+            Engine::Real { session, .. } => {
+                if !session.has_paged_decode() {
+                    return None;
+                }
+                let page_size = session.page_size()?;
+                let max_pages = session.max_pages().ok()?;
+                let pool_pages = env::opt_u64_nonzero("ALTUP_POOL_PAGES")
+                    .map_or(session.artifact.config.batch_size * max_pages, |v| v as usize);
+                Some((page_size, pool_pages, env::usize_or("ALTUP_PREFIX_CACHE", 1) > 0))
+            }
+            Engine::Sim(e) => {
+                e.spec.pool.as_ref().map(|p| (p.page_size, p.pool_pages, p.prefix_cache))
+            }
         }
     }
 
@@ -1441,6 +1556,14 @@ impl Engine {
     fn effective_prefill_bucket(&self, bucket: usize) -> usize {
         match self {
             Engine::Real { session, .. } => session.effective_prefill_bucket(bucket),
+            Engine::Sim(e) => bucket.min(e.spec.enc_len),
+        }
+    }
+
+    /// Same, for the §L9 `prefill_paged` family.
+    fn effective_paged_prefill_bucket(&self, bucket: usize) -> usize {
+        match self {
+            Engine::Real { session, .. } => session.effective_paged_prefill_bucket(bucket),
             Engine::Sim(e) => bucket.min(e.spec.enc_len),
         }
     }
@@ -1464,6 +1587,24 @@ impl Engine {
         match self {
             Engine::Real { client, session, draft } => {
                 let main = Some(session.init_decode_slots(client, n)?);
+                let draft = match draft {
+                    Some(ds) => Some(ds.init_decode_slots(client, n)?),
+                    None => None,
+                };
+                Ok(SlotState::Real { main, draft })
+            }
+            Engine::Sim(_) => Ok(SlotState::Sim(vec![None; n])),
+        }
+    }
+
+    /// §L9: allocate the device-resident page pool (`pool_pages`
+    /// physical pages) for `n` concurrent requests. The draft-model
+    /// slot state stays monolithic — prefix reuse applies to the main
+    /// model's KV, not the draft's.
+    fn init_slots_paged(&mut self, n: usize, pool_pages: usize) -> Result<SlotState> {
+        match self {
+            Engine::Real { client, session, draft } => {
+                let main = Some(session.init_paged_slots(client, pool_pages)?);
                 let draft = match draft {
                     Some(ds) => Some(ds.init_decode_slots(client, n)?),
                     None => None,
@@ -1525,6 +1666,69 @@ impl Engine {
         }
     }
 
+    /// §L9 paged prefill: like `prefill`, plus the group's flattened
+    /// (rows, max_pages) page-table operand and the prompt tokens the
+    /// prefix cache already covers. On the real backend shared prefix
+    /// pages may be rewritten by the HLO — with bit-identical KV, since
+    /// a prefix's KV depends only on its tokens — so sharing stays
+    /// sound; the sim charges the compute saving (`saved_tokens` of
+    /// per-token work skipped), which is what the twin and benches
+    /// measure.
+    fn prefill_paged(
+        &mut self,
+        state: &mut SlotState,
+        enc: &[i32],
+        bucket: usize,
+        slot_ids: &[usize],
+        page_table: &[i32],
+        saved_tokens: usize,
+    ) -> Result<()> {
+        match (self, state) {
+            (Engine::Real { client, session, draft }, SlotState::Real { main, draft: dslots }) => {
+                let held = main
+                    .take()
+                    .context("slot state lost after an earlier prefill/decode error")?;
+                let ids: Vec<i32> = slot_ids.iter().map(|&s| s as i32).collect();
+                *main = Some(session.prefill_paged(client, held, enc, bucket, &ids, page_table)?);
+                // §L8: the draft model's KV stays monolithic — same
+                // prompts, same slot rows, no prefix sharing.
+                if let Some(ds) = draft {
+                    let dheld = dslots
+                        .take()
+                        .context("draft slot state lost after an earlier error")?;
+                    *dslots = Some(ds.prefill(client, dheld, enc, bucket, &ids)?);
+                }
+                Ok(())
+            }
+            (Engine::Sim(e), SlotState::Sim(slots)) => {
+                e.on_call();
+                let spec = &e.spec;
+                for (row, &sid) in enc.chunks(bucket).zip(slot_ids.iter()) {
+                    let h = sim_row_hash(row);
+                    slots[sid] = Some(SimSlot {
+                        h,
+                        pos: 0,
+                        gen_len: sim_gen_len(h, spec.dec_len),
+                        stuck: spec.fault.stuck(h),
+                    });
+                }
+                // Prefix hits skip their covered prompt tokens: the
+                // varlen prefill runs `rows*bucket - saved` tokens'
+                // worth of work. Tokens still derive from the full row
+                // hash — output parity with the unpaged path is by
+                // construction.
+                sim_sleep(
+                    spec.dstep_ns
+                        + spec.token_ns.saturating_mul(
+                            (slot_ids.len() * bucket).saturating_sub(saved_tokens) as u64,
+                        ),
+                );
+                Ok(())
+            }
+            _ => bail!("engine/slot-state backend mismatch"),
+        }
+    }
+
     /// One fused decode iteration over the whole slot geometry:
     /// advances every slot with `live[s] == true` by one token and
     /// returns the (slots,) token row (dead rows carry garbage).
@@ -1565,6 +1769,30 @@ impl Engine {
             }
             _ => bail!("engine/slot-state backend mismatch"),
         }
+    }
+
+    /// §L9 paged decode iteration: `decode_token` with the flattened
+    /// (slots, max_pages) page-table operand. The sim delegates to the
+    /// monolithic step — the slot-to-page mapping is host-side
+    /// bookkeeping there, and decode cost is per live row either way.
+    fn decode_token_paged(
+        &mut self,
+        state: &mut SlotState,
+        live: &[bool],
+        page_table: &[i32],
+    ) -> Result<Vec<i32>> {
+        if let Engine::Real { client, session, .. } = self {
+            let SlotState::Real { main, .. } = state else {
+                bail!("engine/slot-state backend mismatch");
+            };
+            let held = main
+                .take()
+                .context("slot state lost after an earlier prefill/decode error")?;
+            let (held, tokens) = session.decode_token_paged(client, held, live, page_table)?;
+            *main = Some(held);
+            return Ok(tokens);
+        }
+        self.decode_token(state, live)
     }
 
     /// §L8: the draft length this engine will actually speculate at
@@ -1727,6 +1955,69 @@ impl Engine {
             _ => bail!("engine/slot-state backend mismatch"),
         }
     }
+
+    /// §L9 paged verify (§L8 speculation on the paged path): `verify`
+    /// with the flattened page-table operand. The sim delegates to the
+    /// monolithic verify — acceptance sampling and cost are
+    /// page-layout-independent.
+    pub(crate) fn verify_paged(
+        &mut self,
+        state: &mut SlotState,
+        drafted: &[Vec<i32>],
+        live: &[bool],
+        gamma: usize,
+        page_table: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        if let Engine::Real { client, session, draft } = self {
+            let Some(ds) = draft else { bail!("engine has no draft session") };
+            let SlotState::Real { main, draft: dslots } = state else {
+                bail!("engine/slot-state backend mismatch");
+            };
+            let mut flat = vec![0i32; live.len() * gamma];
+            for (s, row) in drafted.iter().enumerate() {
+                let n = row.len().min(gamma);
+                flat[s * gamma..s * gamma + n].copy_from_slice(&row[..n]);
+            }
+            let held = main
+                .take()
+                .context("slot state lost after an earlier prefill/decode error")?;
+            let (held, accept, correction) =
+                session.verify_paged(client, held, &flat, live, gamma, page_table)?;
+            *main = Some(held);
+            let dheld = dslots
+                .take()
+                .context("draft slot state lost after an earlier error")?;
+            *dslots = Some(ds.spec_accept(client, dheld, &accept, &correction, live)?);
+            return Ok((accept, correction));
+        }
+        self.verify(state, drafted, live, gamma)
+    }
+}
+
+/// §L9 host-side paged-serving state: the replica's page pool, one
+/// page table per decode slot, and (when enabled) the cross-request
+/// prefix cache. Backend-agnostic — the sim and real engines share
+/// this allocator; only the device calls differ.
+struct PoolServing {
+    pool: PagePool,
+    tables: Vec<PageTable>,
+    cache: Option<PrefixCache>,
+    /// Page-table width of every paged entry point:
+    /// `ceil((enc_len + dec_len) / page_size)`.
+    max_pages: usize,
+}
+
+/// Flatten per-slot page tables (rows picked by `slot_ids`, in order)
+/// into the row-major (rows, max_pages) i32 operand the paged HLOs
+/// take; unmapped entries are -1.
+fn flatten_page_tables(tables: &[PageTable], slot_ids: &[usize], max_pages: usize) -> Vec<i32> {
+    let mut flat = vec![-1i32; slot_ids.len() * max_pages];
+    for (i, &sid) in slot_ids.iter().enumerate() {
+        for (k, &page) in tables[sid].pages().iter().enumerate().take(max_pages) {
+            flat[i * max_pages + k] = page as i32;
+        }
+    }
+    flat
 }
 
 /// FNV-1a over a row's non-padding prompt tokens only, so decode
@@ -2063,10 +2354,28 @@ fn serve_continuous(
     stats: &mut ServerStats,
     mut spec_dec: Option<SpecDecoder>,
 ) -> Result<()> {
-    let (batch_size, _enc_len) = engine.dims();
+    let (batch_size, enc_len) = engine.dims();
     let dec_len = engine.dec_len();
     let slots_n = if opts.slots > 0 { opts.slots } else { batch_size };
-    let mut state = engine.init_slots(slots_n)?;
+    // §L9: serve out of a page pool when the engine carries the paged
+    // contract; otherwise monolithic per-slot state (the fallback —
+    // token-for-token identical, pinned by tests/server.rs).
+    let mut paged: Option<PoolServing> = engine.paged_geometry().map(
+        |(page_size, pool_pages, prefix_cache)| PoolServing {
+            pool: PagePool::new(page_size, pool_pages),
+            tables: (0..slots_n).map(|_| PageTable::new()).collect(),
+            cache: prefix_cache.then(PrefixCache::new),
+            max_pages: pages_for(enc_len + dec_len, page_size),
+        },
+    );
+    let mut state = match &paged {
+        Some(ps) => {
+            stats.pool.capacity = ps.pool.capacity();
+            engine.init_slots_paged(slots_n, ps.pool.capacity())?
+        }
+        None => engine.init_slots(slots_n)?,
+    };
+    let all_slots: Vec<usize> = (0..slots_n).collect();
     let mut active: Vec<Option<Active>> = (0..slots_n).map(|_| None).collect();
     let mut pending: VecDeque<(usize, Pend)> = VecDeque::new();
     let mut router_gone = false;
@@ -2119,27 +2428,118 @@ fn serve_continuous(
             }
         }
 
+        // §L9: release retired slots' page tables before admission, so
+        // pages freed by EOS/deadline retirement are allocatable this
+        // pass. A released page drops to refcount 1 while the prefix
+        // cache still holds it (evictable, reusable) and to 0 (free)
+        // otherwise.
+        if let Some(ps) = paged.as_mut() {
+            for (s, slot) in active.iter().enumerate() {
+                if slot.is_none() && !ps.tables[s].is_empty() {
+                    ps.tables[s].release(&mut ps.pool)?;
+                }
+            }
+        }
+
         // Admit pending requests into free slots, one batched prefill
-        // per same-bucket run (bounded by the prefill geometry).
+        // per same-bucket run (bounded by the prefill geometry and —
+        // §L9 — by page-pool capacity).
         let mut free: VecDeque<usize> = active
             .iter()
             .enumerate()
             .filter(|(_, s)| s.is_none())
             .map(|(i, _)| i)
             .collect();
-        while !free.is_empty() && !pending.is_empty() {
+        let mut stalled = false;
+        while !free.is_empty() && !pending.is_empty() && !stalled {
             let bucket = pending.front().expect("non-empty pending").0;
-            let eff = engine.effective_prefill_bucket(bucket);
+            let eff = if paged.is_some() {
+                engine.effective_paged_prefill_bucket(bucket)
+            } else {
+                engine.effective_prefill_bucket(bucket)
+            };
             let mut group: Vec<Pend> = Vec::new();
             let mut slot_ids: Vec<usize> = Vec::new();
+            let mut group_saved = 0usize;
             while group.len() < batch_size.min(free.len() + group.len()) {
-                match pending.front() {
-                    Some((b, _)) if *b == bucket => {}
+                let ticket = match pending.front() {
+                    Some((b, p)) if *b == bucket => p.ticket,
                     _ => break,
+                };
+                if let Some(ps) = paged.as_mut() {
+                    // §L9 pool gate: reserve this request's pages —
+                    // shared prefix pages first, fresh pages for the
+                    // uncovered prompt tail + decode room — before
+                    // taking a slot.
+                    let page_size = ps.pool.page_size();
+                    let total = pages_for(eff + dec_len, page_size);
+                    if total > ps.pool.capacity() {
+                        // Can never fit, even with every page free:
+                        // an explicit terminal failure, not an
+                        // eternal stall.
+                        let (_, p) = pending.pop_front().expect("front present");
+                        if let Some(held) = ledger.take(p.ticket) {
+                            fail_request(stats, &held.req, FailReason::PoolExhausted, id);
+                        }
+                        continue;
+                    }
+                    let hashes = match ps.cache.as_ref() {
+                        Some(_) => ledger
+                            .with_prompt(ticket, |toks| {
+                                chunk_hashes(&toks[..toks.len().min(eff)], page_size)
+                            })
+                            .unwrap_or_default(),
+                        None => Vec::new(),
+                    };
+                    let hits = ps.cache.as_ref().map_or(0, |c| c.match_len(&hashes));
+                    let need = total - hits;
+                    if let Some(cache) = ps.cache.as_mut() {
+                        while ps.pool.free_pages() < need && cache.evict_lru(&mut ps.pool)? {
+                            stats.pool.evictions += 1;
+                        }
+                    }
+                    if ps.pool.free_pages() < need {
+                        // Pool pressure with every unpinned cache page
+                        // already evicted: wait for live slots to
+                        // retire. The request stays pending (a stall,
+                        // not a failure) — with zero live slots every
+                        // cached page is evictable, so `total <=
+                        // capacity` always unblocks eventually.
+                        stats.pool.alloc_stalls += 1;
+                        stalled = true;
+                        break;
+                    }
+                    let (_, p) = pending.pop_front().expect("front present");
+                    let sid = free.pop_front().expect("free slot");
+                    let table = &mut ps.tables[sid];
+                    for &h in &hashes[..hits] {
+                        let page = ps
+                            .cache
+                            .as_mut()
+                            .and_then(|c| c.hit(h))
+                            .context("matched prefix chunk vanished")?;
+                        table.push_shared(&mut ps.pool, page)?;
+                    }
+                    if !table.ensure(&mut ps.pool, total) {
+                        bail!("page pool exhausted after its reservation check");
+                    }
+                    if let Some(cache) = ps.cache.as_mut() {
+                        stats.pool.prefix_lookups += hashes.len() as u64;
+                        stats.pool.prefix_hits += hits as u64;
+                        // Publish this prompt's fresh chunks so later
+                        // requests share them.
+                        for k in hits..hashes.len() {
+                            cache.insert(&mut ps.pool, hashes[k], table.pages()[k])?;
+                        }
+                    }
+                    group_saved += hits * page_size;
+                    slot_ids.push(sid);
+                    group.push(p);
+                } else {
+                    let (_, p) = pending.pop_front().expect("front present");
+                    slot_ids.push(free.pop_front().expect("free slot"));
+                    group.push(p);
                 }
-                let (_, p) = pending.pop_front().expect("front present");
-                slot_ids.push(free.pop_front().expect("free slot"));
-                group.push(p);
             }
             if group.is_empty() {
                 break; // no free capacity for this bucket run
@@ -2148,11 +2548,28 @@ fn serve_continuous(
                 let tickets: Vec<u64> = group.iter().map(|p| p.ticket).collect();
                 ledger.pack_rows(&tickets, group.len(), eff, &mut enc_scratch, &mut trunc_scratch);
             }
-            engine.prefill(&mut state, &enc_scratch, eff, &slot_ids)?;
+            match paged.as_ref() {
+                Some(ps) => {
+                    let flat = flatten_page_tables(&ps.tables, &slot_ids, ps.max_pages);
+                    engine.prefill_paged(
+                        &mut state,
+                        &enc_scratch,
+                        eff,
+                        &slot_ids,
+                        &flat,
+                        group_saved,
+                    )?;
+                    stats.executed_tokens += group.len() * eff - group_saved;
+                    stats.pool.prefill_tokens_saved += group_saved as u64;
+                }
+                None => {
+                    engine.prefill(&mut state, &enc_scratch, eff, &slot_ids)?;
+                    stats.executed_tokens += group.len() * eff;
+                }
+            }
             stats.prefills += 1;
             stats.batches += 1;
             stats.total_fill += group.len();
-            stats.executed_tokens += group.len() * eff;
             for (i, p) in group.into_iter().enumerate() {
                 let prompt_len = p.enc_len.min(eff);
                 active[slot_ids[i]] = Some(Active {
@@ -2178,10 +2595,18 @@ fn serve_continuous(
 
         // One full-model decode iteration over the whole slot
         // geometry: a §L8 draft/verify round (1..=γ+1 tokens per live
-        // slot) when speculating, else one fused `decode_token`.
+        // slot) when speculating, else one fused `decode_token`. On
+        // the §L9 paged path the step takes the flattened
+        // (slots, max_pages) table and the pool meter samples
+        // occupancy once per iteration.
         let live: Vec<bool> = active.iter().map(|s| s.is_some()).collect();
+        let flat_table = paged.as_ref().map(|ps| {
+            stats.pool.record(ps.pool.used_pages(), n_live);
+            flatten_page_tables(&ps.tables, &all_slots, ps.max_pages)
+        });
         if let Some(sd) = spec_dec.as_mut() {
-            let emissions = sd.round(engine, &mut state, &live, &mut stats.spec)?;
+            let emissions =
+                sd.round(engine, &mut state, &live, flat_table.as_deref(), &mut stats.spec)?;
             stats.decode_steps += 1;
             stats.occupancy.record(n_live);
             for (s, slot) in active.iter_mut().enumerate() {
@@ -2208,7 +2633,10 @@ fn serve_continuous(
                 }
             }
         } else {
-            let tokens = engine.decode_token(&mut state, &live)?;
+            let tokens = match flat_table.as_deref() {
+                Some(flat) => engine.decode_token_paged(&mut state, &live, flat)?,
+                None => engine.decode_token(&mut state, &live)?,
+            };
             stats.decode_steps += 1;
             stats.occupancy.record(n_live);
             for (s, slot) in active.iter_mut().enumerate() {
@@ -2314,6 +2742,7 @@ mod tests {
             dstep_ns: 0,
             split_decode: true,
             draft: Some(SimDraftSpec { dtoken_ns: 0, dstep_ns: 0, accept_rate: 0.75 }),
+            pool: None,
             fault: FaultSpec::default(),
         }
     }
@@ -2497,7 +2926,7 @@ mod tests {
             let live = vec![true, false];
             let mut stream = Vec::new();
             'rounds: for _ in 0..dec_len {
-                let em = sd.round(&mut engine, &mut state, &live, &mut meter).unwrap();
+                let em = sd.round(&mut engine, &mut state, &live, None, &mut meter).unwrap();
                 assert!(em[1].is_empty(), "dead slot must emit nothing");
                 assert!(!em[0].is_empty() && em[0].len() <= 3 + 1);
                 for &t in &em[0] {
@@ -2544,6 +2973,64 @@ mod tests {
         let total: usize = (0..2000).map(|p| sim_accept_len(0x5EED, p, 4, 0.75)).sum();
         let mean = total as f64 / 2000.0;
         assert!((1.6..=2.5).contains(&mean), "mean accept length {mean}");
+    }
+
+    /// §L9 capability detection: the sim opts in through its pool
+    /// spec, and the flattened page-table operand lays out row-major
+    /// with -1 in unmapped entries.
+    #[test]
+    fn paged_geometry_and_flatten_layout() {
+        let mut spec = quiet_spec();
+        spec.pool = Some(SimPoolSpec { page_size: 4, pool_pages: 12, prefix_cache: true });
+        let engine = Engine::Sim(SimEngine::new(spec, 0));
+        assert_eq!(engine.paged_geometry(), Some((4, 12, true)));
+        let none = Engine::Sim(SimEngine::new(quiet_spec(), 0));
+        assert_eq!(none.paged_geometry(), None, "no pool spec: monolithic fallback");
+
+        let mut pool = PagePool::new(4, 8);
+        let mut t0 = PageTable::new();
+        assert!(t0.ensure(&mut pool, 2));
+        let mut t1 = PageTable::new();
+        assert!(t1.ensure(&mut pool, 1));
+        let flat = flatten_page_tables(&[t0, t1], &[0, 1], 3);
+        assert_eq!(flat, vec![0, 1, -1, 2, -1, -1]);
+        let pool_dim = pool.capacity();
+        assert!(flat.iter().all(|&p| p == -1 || (p as usize) < pool_dim));
+    }
+
+    /// §L9 sim parity at the engine level: the paged prefill (with
+    /// prefix-covered tokens skipped) and paged decode steps emit the
+    /// exact stream of the monolithic path — saved work never changes
+    /// tokens.
+    #[test]
+    fn sim_paged_prefill_stream_matches_monolithic() {
+        let spec = quiet_spec();
+        let prompt = vec![11i32, 3, 5, 0, 0, 0, 0, 0];
+        let run = |paged: bool| {
+            let mut engine = Engine::Sim(SimEngine::new(spec.clone(), 0));
+            let mut state = engine.init_slots(2).unwrap();
+            if paged {
+                // 4 of the 8 prompt tokens covered by prefix hits.
+                engine.prefill_paged(&mut state, &prompt, 8, &[0], &[0, 1, 2], 4).unwrap();
+            } else {
+                engine.prefill(&mut state, &prompt, 8, &[0]).unwrap();
+            }
+            let live = vec![true, false];
+            let mut stream = Vec::new();
+            for _ in 0..spec.dec_len {
+                let t = if paged {
+                    engine.decode_token_paged(&mut state, &live, &[0, 1, 2]).unwrap()[0]
+                } else {
+                    engine.decode_token(&mut state, &live).unwrap()[0]
+                };
+                stream.push(t);
+                if t == EOS {
+                    break;
+                }
+            }
+            stream
+        };
+        assert_eq!(run(true), run(false), "paged stream == monolithic stream");
     }
 
     /// §L8 capability detection + the no-draft error paths.
@@ -2660,6 +3147,7 @@ mod tests {
             FailReason::RetriesExhausted,
             FailReason::NoReplicas,
             FailReason::AbortedOnDrain,
+            FailReason::PoolExhausted,
         ] {
             assert!(!reason.to_string().is_empty());
         }

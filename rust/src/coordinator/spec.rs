@@ -60,15 +60,26 @@ impl SpecDecoder {
     /// tokens it actually delivered via `SpecMeter::note_delivered`
     /// (the round fills every meter counter except that one — only
     /// the serving loop knows the truncation).
+    ///
+    /// `page_table` is the flattened (S, max_pages) slot-to-pool
+    /// mapping when the replica serves on the §L9 paged path (`None`
+    /// on the monolithic path): the full-model verify then runs as
+    /// `verify_paged`, while the draft keeps its own monolithic slot
+    /// state either way — prefix reuse applies to the main model's KV,
+    /// not the draft's.
     pub(crate) fn round(
         &mut self,
         engine: &mut Engine,
         state: &mut SlotState,
         live: &[bool],
+        page_table: Option<&[i32]>,
         meter: &mut SpecMeter,
     ) -> Result<Vec<Vec<i32>>> {
         let drafted = engine.draft_tokens(state, live, self.gamma)?;
-        let (accept, correction) = engine.verify(state, &drafted, live, self.gamma)?;
+        let (accept, correction) = match page_table {
+            Some(table) => engine.verify_paged(state, &drafted, live, self.gamma, table)?,
+            None => engine.verify(state, &drafted, live, self.gamma)?,
+        };
         meter.draft_steps += self.gamma as u64;
         meter.verify_steps += 1;
         let mut out: Vec<Vec<i32>> = vec![Vec::new(); live.len()];

@@ -74,6 +74,27 @@ pub struct DraftSpec {
     pub gamma: usize,
 }
 
+/// Optional paged decode-state contract (§L9): the artifact's decode
+/// state is organized as a pool of fixed-size KV pages addressed
+/// through per-slot page tables, instead of one monolithic buffer per
+/// slot. Shipped as an optional `paged` object in meta.json:
+///
+///   "paged": {"page_size": 16}
+///
+/// An artifact declaring this must also ship the page-table-operand
+/// entry points (`prefill_paged@<bucket>`, `decode_token_paged`,
+/// optionally `verify_paged@<gamma>`) — see the `runtime::session` §L9
+/// contract. The `decode_state` slot shapes stay per-request; the
+/// runtime allocates them with a leading pool-pages dimension rather
+/// than a slot dimension.
+#[derive(Debug, Clone)]
+pub struct PagedSpec {
+    /// Tokens per KV page — the granularity of pool allocation and of
+    /// prefix sharing. Must match what the paged HLOs were compiled
+    /// for.
+    pub page_size: usize,
+}
+
 /// Parsed meta.json + paths of the HLO files.
 #[derive(Debug, Clone)]
 pub struct Artifact {
@@ -93,6 +114,10 @@ pub struct Artifact {
     /// Absent from artifacts that ship no draft; serving then falls
     /// back to plain per-token decode.
     pub draft: Option<DraftSpec>,
+    /// Optional paged decode-state contract (§L9). Absent from
+    /// artifacts whose decode state is per-slot monolithic; serving
+    /// then falls back to monolithic `DecodeSlots`.
+    pub paged: Option<PagedSpec>,
     pub batch_inputs: Vec<BatchInputSpec>,
     pub hlo_files: Vec<(String, PathBuf)>,
     pub param_count_total: usize,
@@ -184,6 +209,24 @@ impl Artifact {
             None => None,
         };
 
+        let paged = match meta.get("paged") {
+            Json::Null => None,
+            p => {
+                // Absent page_size defaults to 16; a PRESENT but
+                // malformed page_size (string, negative, zero) is a
+                // hard error — it would silently change the page
+                // granularity the paged HLOs were compiled for.
+                let page_size = match p.get("page_size") {
+                    Json::Null => 16,
+                    v => v
+                        .as_usize()
+                        .filter(|&v| v >= 1)
+                        .context("meta.json paged.page_size must be a positive integer")?,
+                };
+                Some(PagedSpec { page_size })
+            }
+        };
+
         let mut batch_inputs = Vec::new();
         for b in meta.get("batch_inputs").as_arr().context("meta.batch_inputs")? {
             batch_inputs.push(BatchInputSpec {
@@ -218,6 +261,7 @@ impl Artifact {
             opt_state,
             decode_state,
             draft,
+            paged,
             batch_inputs,
             hlo_files,
             param_count_total: meta.get("param_count").get("total").as_usize().unwrap_or(0),
@@ -311,6 +355,37 @@ mod tests {
         assert!(a.has("train_step"));
         assert!(!a.has("eval_step"));
         assert!(a.draft.is_none(), "no draft entry: spec decoding unavailable");
+        assert!(a.paged.is_none(), "no paged entry: monolithic decode state");
+        std::fs::remove_dir_all(&tmp).unwrap();
+    }
+
+    #[test]
+    fn parses_optional_paged_spec() {
+        let tmp = std::env::temp_dir().join(format!("altup-test4-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        let with_paged = fake_meta().replace(
+            "\"flops_per_token\": 100.0",
+            "\"flops_per_token\": 100.0, \"paged\": {\"page_size\": 8}",
+        );
+        std::fs::write(tmp.join("meta.json"), with_paged).unwrap();
+        assert_eq!(Artifact::load(&tmp).unwrap().paged.unwrap().page_size, 8);
+
+        // page_size defaults to 16 when the object is present but bare.
+        let bare = fake_meta().replace(
+            "\"flops_per_token\": 100.0",
+            "\"flops_per_token\": 100.0, \"paged\": {}",
+        );
+        std::fs::write(tmp.join("meta.json"), bare).unwrap();
+        assert_eq!(Artifact::load(&tmp).unwrap().paged.unwrap().page_size, 16);
+        // Present-but-malformed page_size is a hard error, not a 16.
+        for bad in ["0", "-4", "\"16\""] {
+            let meta = fake_meta().replace(
+                "\"flops_per_token\": 100.0",
+                &format!("\"flops_per_token\": 100.0, \"paged\": {{\"page_size\": {bad}}}"),
+            );
+            std::fs::write(tmp.join("meta.json"), meta).unwrap();
+            assert!(Artifact::load(&tmp).is_err(), "paged.page_size {bad} rejected");
+        }
         std::fs::remove_dir_all(&tmp).unwrap();
     }
 

@@ -3,6 +3,7 @@
 
 pub mod artifact;
 pub mod client;
+pub mod pages;
 pub mod params;
 pub mod session;
 pub mod tensor;

@@ -1,0 +1,491 @@
+//! Paged decode-state pool + cross-request prefix cache (§Perf L9).
+//!
+//! L4–L8 gave every continuous-batching slot a monolithic KV buffer
+//! sized to its bucket, so replica memory — not compute — capped
+//! slots-per-replica, and requests sharing a system prompt re-ran
+//! prefill from token zero. This module pages the decode state instead
+//! (Pope et al., "Efficiently Scaling Transformer Inference"; vLLM's
+//! PagedAttention): a replica owns one fixed-size pool of KV pages,
+//! each slot maps its logical token range onto pool pages through a
+//! page table, and page refcounts let several slots share the physical
+//! pages of a common prompt prefix.
+//!
+//! Three host-side pieces, all backend-agnostic (the Sim engine uses
+//! them for its memory model; a real artifact consumes the same tables
+//! as `prefill_paged`/`decode_token_paged` operands — see the §L9
+//! contract in `runtime::session`):
+//!
+//! - [`PagePool`]: free-list allocator over `capacity` pages of
+//!   `page_size` tokens each, with per-page refcounts. Allocation is
+//!   LIFO (last freed, first reused) so hot device memory is recycled
+//!   before cold.
+//! - [`PageTable`]: a slot's logical-page -> pool-page mapping. Grows
+//!   as decode crosses bucket/page boundaries; releases every mapped
+//!   page back to the pool when the slot retires.
+//! - [`PrefixCache`]: content-addressed index from chained page-chunk
+//!   hashes ([`chunk_hashes`]) to pool pages. A hit pins the page into
+//!   the requesting slot's table (refcount + 1) and skips that chunk of
+//!   prefill; unpinned entries (refcount back to 1, i.e. only the cache
+//!   holds them) are evicted LRU-first under pool pressure via the
+//!   shared [`EvictionPolicy`].
+//!
+//! Refcount protocol: `alloc` hands out a page at refcount 1 (the
+//! owning slot). Inserting it into the prefix cache retains it to 2; a
+//! later hit retains once per sharing slot. A slot retiring releases
+//! its whole table; a cache eviction releases the cache's reference.
+//! The page returns to the free list exactly when the count reaches 0,
+//! and a release past 0 is a hard error (double free).
+
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+
+use crate::util::lru::{EvictionPolicy, LruPolicy};
+
+/// Index of a physical page in a replica's pool.
+pub type PageId = usize;
+
+/// Pages needed to hold `tokens` positions at `page_size` tokens/page.
+pub fn pages_for(tokens: usize, page_size: usize) -> usize {
+    let ps = page_size.max(1);
+    (tokens + ps - 1) / ps
+}
+
+/// Chained FNV-1a hashes of `tokens` in full `page_size` chunks:
+/// entry `k` hashes the first `(k+1) * page_size` tokens, so equal
+/// hash `k` means equal *prefix* through page `k` — exactly the
+/// property a prefix cache needs (same constants and per-token step as
+/// the coordinator's `sim_row_hash`, so sim parity checks can reason
+/// about both). The trailing partial chunk is never hashed: a page is
+/// only shareable once every position in it is fixed by the prompt.
+pub fn chunk_hashes(tokens: &[i32], page_size: usize) -> Vec<u64> {
+    let ps = page_size.max(1);
+    let chunks = tokens.len() / ps;
+    let mut out = Vec::with_capacity(chunks);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for (i, &t) in tokens[..chunks * ps].iter().enumerate() {
+        h = (h ^ t as u32 as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        if (i + 1) % ps == 0 {
+            out.push(h);
+        }
+    }
+    out
+}
+
+/// Fixed-size pool of refcounted KV pages with a LIFO free list.
+#[derive(Debug)]
+pub struct PagePool {
+    page_size: usize,
+    /// Per-page reference count; 0 means the page is on the free list.
+    refcount: Vec<u32>,
+    /// Free pages, last-freed on top.
+    free: Vec<PageId>,
+}
+
+impl PagePool {
+    pub fn new(page_size: usize, capacity: usize) -> PagePool {
+        PagePool {
+            page_size: page_size.max(1),
+            refcount: vec![0; capacity],
+            // Reverse so the first alloc hands out page 0 — makes
+            // allocation order (and tests) readable.
+            free: (0..capacity).rev().collect(),
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.refcount.len()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.capacity() - self.free.len()
+    }
+
+    pub fn refcount(&self, page: PageId) -> u32 {
+        self.refcount[page]
+    }
+
+    /// Take a page off the free list at refcount 1, or `None` when the
+    /// pool is exhausted (the caller stalls or sheds — see the
+    /// coordinator's admission gate).
+    pub fn alloc(&mut self) -> Option<PageId> {
+        let page = self.free.pop()?;
+        debug_assert_eq!(self.refcount[page], 0, "free-listed page with live refs");
+        self.refcount[page] = 1;
+        Some(page)
+    }
+
+    /// Add a reference to an allocated page (prefix sharing).
+    pub fn retain(&mut self, page: PageId) -> Result<()> {
+        ensure!(page < self.capacity(), "retain of out-of-range page {page}");
+        ensure!(self.refcount[page] > 0, "retain of free page {page}");
+        self.refcount[page] += 1;
+        Ok(())
+    }
+
+    /// Drop a reference; returns `true` when this release freed the
+    /// page. Releasing a page that is already free is a double free and
+    /// a hard error — the bug class this would mask (two owners both
+    /// writing a recycled page) corrupts decode state silently.
+    pub fn release(&mut self, page: PageId) -> Result<bool> {
+        ensure!(page < self.capacity(), "release of out-of-range page {page}");
+        if self.refcount[page] == 0 {
+            bail!("double free of page {page}");
+        }
+        self.refcount[page] -= 1;
+        if self.refcount[page] == 0 {
+            self.free.push(page);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+}
+
+/// One slot's logical-page -> pool-page mapping. Entry `k` backs token
+/// positions `[k * page_size, (k+1) * page_size)`.
+#[derive(Debug, Default)]
+pub struct PageTable {
+    pages: Vec<PageId>,
+}
+
+impl PageTable {
+    pub fn new() -> PageTable {
+        PageTable { pages: Vec::new() }
+    }
+
+    pub fn pages(&self) -> &[PageId] {
+        &self.pages
+    }
+
+    pub fn len(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pages.is_empty()
+    }
+
+    /// Map an already-allocated page shared with another owner: takes
+    /// an extra reference and appends it (prefix-cache hits land here,
+    /// in prompt order, before `ensure` fills the private remainder).
+    pub fn push_shared(&mut self, pool: &mut PagePool, page: PageId) -> Result<()> {
+        pool.retain(page)?;
+        self.pages.push(page);
+        Ok(())
+    }
+
+    /// Grow the table to at least `pages` entries by allocating private
+    /// pages — how a slot crosses a bucket/page boundary mid-decode.
+    /// Returns `false` (leaving the partial growth mapped, so `release`
+    /// still returns everything) when the pool runs out first.
+    pub fn ensure(&mut self, pool: &mut PagePool, pages: usize) -> bool {
+        while self.pages.len() < pages {
+            match pool.alloc() {
+                Some(p) => self.pages.push(p),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Release every mapped page back to the pool (slot retirement).
+    pub fn release(&mut self, pool: &mut PagePool) -> Result<()> {
+        for page in self.pages.drain(..) {
+            pool.release(page)?;
+        }
+        Ok(())
+    }
+}
+
+/// Content-addressed prefix-page index: chained chunk hash -> pool
+/// page, with LRU eviction of unpinned entries. Counters (hits,
+/// lookups, tokens saved, evictions) live with the caller's
+/// `PoolMeter` — the cache answers queries, the serving loop accounts.
+#[derive(Debug, Default)]
+pub struct PrefixCache {
+    entries: HashMap<u64, PageId>,
+    order: LruPolicy<u64>,
+}
+
+impl PrefixCache {
+    pub fn new() -> PrefixCache {
+        PrefixCache { entries: HashMap::new(), order: LruPolicy::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Longest cached prefix: how many leading entries of `hashes` are
+    /// present. Chained hashes make a single miss terminal — hash `k`
+    /// can only match if pages `0..k` match too. Pure peek: the caller
+    /// commits hits (refcounts, recency, counters) only once admission
+    /// is certain.
+    pub fn match_len(&self, hashes: &[u64]) -> usize {
+        hashes.iter().take_while(|h| self.entries.contains_key(h)).count()
+    }
+
+    /// The page backing a chunk hash, bumping its recency (commit-side
+    /// of a hit; pair with `PageTable::push_shared`).
+    pub fn hit(&mut self, hash: u64) -> Option<PageId> {
+        let page = *self.entries.get(&hash)?;
+        self.order.note_touch(hash);
+        Some(page)
+    }
+
+    /// Index a freshly prefilled page under its chunk hash, taking the
+    /// cache's own reference (refcount 2: owner slot + cache). A hash
+    /// already present keeps its existing page — identical content, and
+    /// the first owner's sharers already point at it.
+    pub fn insert(&mut self, pool: &mut PagePool, hash: u64, page: PageId) -> Result<()> {
+        if self.entries.contains_key(&hash) {
+            return Ok(());
+        }
+        pool.retain(page)?;
+        self.entries.insert(hash, page);
+        self.order.note_insert(hash);
+        Ok(())
+    }
+
+    /// Evict the least-recently-used *unpinned* entry (refcount 1 —
+    /// only the cache holds the page; any live slot reference pins it)
+    /// and free its page. Returns `false` when everything left is
+    /// pinned, i.e. eviction cannot make more room.
+    pub fn evict_lru(&mut self, pool: &mut PagePool) -> Result<bool> {
+        let entries = &self.entries;
+        let victim = self
+            .order
+            .victim(&|h| entries.get(&h).is_some_and(|&p| pool.refcount(p) == 1));
+        let Some(hash) = victim else { return Ok(false) };
+        let page = self.entries.remove(&hash).expect("victim came from entries");
+        self.order.note_remove(hash);
+        pool.release(page)?;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_exhaustion_and_free_reuse() {
+        let mut pool = PagePool::new(16, 3);
+        assert_eq!(pool.capacity(), 3);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        let c = pool.alloc().unwrap();
+        assert_eq!((a, b, c), (0, 1, 2), "fresh pool allocates in order");
+        assert_eq!(pool.alloc(), None, "exhausted pool returns None");
+        assert_eq!(pool.free_pages(), 0);
+        assert!(pool.release(b).unwrap());
+        assert_eq!(pool.alloc(), Some(b), "freed page becomes allocatable");
+        assert_eq!(pool.used_pages(), 3);
+    }
+
+    #[test]
+    fn free_list_is_lifo() {
+        let mut pool = PagePool::new(16, 4);
+        let pages: Vec<PageId> = (0..4).map(|_| pool.alloc().unwrap()).collect();
+        pool.release(pages[1]).unwrap();
+        pool.release(pages[3]).unwrap();
+        // Last freed (3) is reused first, then 1.
+        assert_eq!(pool.alloc(), Some(pages[3]));
+        assert_eq!(pool.alloc(), Some(pages[1]));
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut pool = PagePool::new(16, 2);
+        let p = pool.alloc().unwrap();
+        assert!(pool.release(p).unwrap());
+        let err = pool.release(p).unwrap_err().to_string();
+        assert!(err.contains("double free"), "got: {err}");
+        assert!(pool.release(99).is_err(), "out-of-range release rejected");
+        assert!(pool.retain(p).is_err(), "retain of a free page rejected");
+    }
+
+    #[test]
+    fn refcounted_release_frees_on_last_owner() {
+        let mut pool = PagePool::new(16, 2);
+        let p = pool.alloc().unwrap();
+        pool.retain(p).unwrap();
+        pool.retain(p).unwrap();
+        assert_eq!(pool.refcount(p), 3);
+        assert!(!pool.release(p).unwrap());
+        assert!(!pool.release(p).unwrap());
+        assert_eq!(pool.free_pages(), 1, "still held by the last owner");
+        assert!(pool.release(p).unwrap(), "final release frees");
+        assert_eq!(pool.free_pages(), 2);
+    }
+
+    #[test]
+    fn page_table_grows_across_bucket_boundaries() {
+        // A slot prefilled at bucket 16 (2 pages of 8) decodes past the
+        // bucket edge: the table grows page-by-page, never re-mapping
+        // what's already resident.
+        let mut pool = PagePool::new(8, 8);
+        let mut table = PageTable::new();
+        assert!(table.ensure(&mut pool, pages_for(16, 8)));
+        assert_eq!(table.len(), 2);
+        let before = table.pages().to_vec();
+        assert!(table.ensure(&mut pool, pages_for(16 + 24, 8)), "grow to 5 pages");
+        assert_eq!(table.len(), 5);
+        assert_eq!(&table.pages()[..2], &before[..], "resident mapping stable");
+        assert!(table.ensure(&mut pool, 5), "no-op growth succeeds");
+        assert_eq!(pool.used_pages(), 5);
+        table.release(&mut pool).unwrap();
+        assert_eq!(pool.used_pages(), 0);
+        assert!(table.is_empty());
+    }
+
+    #[test]
+    fn page_table_partial_growth_stays_released_once() {
+        let mut pool = PagePool::new(8, 2);
+        let mut table = PageTable::new();
+        assert!(!table.ensure(&mut pool, 5), "pool too small");
+        assert_eq!(table.len(), 2, "partial growth stays mapped");
+        table.release(&mut pool).unwrap();
+        assert_eq!(pool.free_pages(), 2, "partial growth fully returned");
+    }
+
+    #[test]
+    fn deterministic_fragmentation_scenario() {
+        // Interleaved slot lifetimes fragment the pool; the free list
+        // must recycle exactly the holes, LIFO, with used/free always
+        // consistent. Fixed pattern -> fully deterministic.
+        let mut pool = PagePool::new(16, 6);
+        let mut t = Vec::new();
+        for _ in 0..3 {
+            let mut table = PageTable::new();
+            assert!(table.ensure(&mut pool, 2));
+            t.push(table);
+        }
+        assert_eq!(pool.free_pages(), 0);
+        // Retire the middle slot: pages 2,3 become the hole.
+        t[1].release(&mut pool).unwrap();
+        assert_eq!(pool.free_pages(), 2);
+        // A 3-page request cannot fit the hole...
+        let mut big = PageTable::new();
+        assert!(!big.ensure(&mut pool, 3));
+        big.release(&mut pool).unwrap();
+        // ...but after the first slot retires too (pages 0,1), it can,
+        // and it reuses the most recently freed pages first.
+        t[0].release(&mut pool).unwrap();
+        assert!(big.ensure(&mut pool, 3));
+        assert_eq!(big.pages(), &[1, 0, 3], "LIFO reuse of the freed holes");
+        assert_eq!(pool.used_pages(), 5);
+    }
+
+    #[test]
+    fn chunk_hashes_match_on_shared_prefix_only() {
+        let header: Vec<i32> = (2..18).collect(); // two full 8-token pages
+        let a: Vec<i32> = header.iter().copied().chain([100, 101, 102, 103, 104, 105, 106, 107]).collect();
+        let b: Vec<i32> = header.iter().copied().chain([200, 201, 202, 203, 204, 205, 206, 207]).collect();
+        let ha = chunk_hashes(&a, 8);
+        let hb = chunk_hashes(&b, 8);
+        assert_eq!(ha.len(), 3);
+        assert_eq!(ha[..2], hb[..2], "shared header chunks hash equal");
+        assert_ne!(ha[2], hb[2], "divergent tails hash differently");
+        // Partial trailing chunk is not hashed.
+        assert_eq!(chunk_hashes(&a[..12], 8).len(), 1);
+        assert_eq!(chunk_hashes(&[], 8).len(), 0);
+    }
+
+    #[test]
+    fn prefix_cache_hit_and_match_len() {
+        let mut pool = PagePool::new(8, 4);
+        let mut cache = PrefixCache::new();
+        let prompt: Vec<i32> = (2..26).collect(); // 3 full pages of 8
+        let hashes = chunk_hashes(&prompt, 8);
+        assert_eq!(cache.match_len(&hashes), 0);
+
+        // First request prefills all 3 pages and indexes them.
+        let mut t1 = PageTable::new();
+        assert!(t1.ensure(&mut pool, 3));
+        for (i, &h) in hashes.iter().enumerate() {
+            cache.insert(&mut pool, h, t1.pages()[i]).unwrap();
+        }
+        assert_eq!(cache.match_len(&hashes), 3);
+
+        // Second request shares all 3 pages instead of allocating.
+        let mut t2 = PageTable::new();
+        for &h in &hashes {
+            let page = cache.hit(h).unwrap();
+            t2.push_shared(&mut pool, page).unwrap();
+        }
+        assert_eq!(t2.pages(), t1.pages());
+        assert_eq!(pool.used_pages(), 3, "no new pages for the sharer");
+        assert_eq!(pool.refcount(t1.pages()[0]), 3, "slot + slot + cache");
+
+        // Retiring both slots leaves cache-only refs; pages stay resident.
+        t1.release(&mut pool).unwrap();
+        t2.release(&mut pool).unwrap();
+        assert_eq!(pool.used_pages(), 3);
+        assert!(hashes.iter().all(|&h| pool.refcount(cache.hit(h).unwrap()) == 1));
+    }
+
+    #[test]
+    fn eviction_is_lru_and_never_touches_pinned_pages() {
+        let mut pool = PagePool::new(8, 4);
+        let mut cache = PrefixCache::new();
+        let mut table = PageTable::new();
+        assert!(table.ensure(&mut pool, 3));
+        for (i, &page) in table.pages().to_vec().iter().enumerate() {
+            cache.insert(&mut pool, 1000 + i as u64, page).unwrap();
+        }
+        // All pages pinned by the live slot: nothing evictable.
+        assert!(!cache.evict_lru(&mut pool).unwrap());
+        assert_eq!(cache.len(), 3);
+
+        // Slot retires; touch entry 1000 so 1001 becomes LRU.
+        let pages = table.pages().to_vec();
+        table.release(&mut pool).unwrap();
+        cache.hit(1000).unwrap();
+        assert!(cache.evict_lru(&mut pool).unwrap());
+        assert_eq!(cache.match_len(&[1001]), 0, "LRU entry evicted first");
+        assert_eq!(pool.refcount(pages[1]), 0, "evicted page freed");
+
+        // Re-pin 1002 via a new sharer: only 1000 remains evictable.
+        let mut t2 = PageTable::new();
+        t2.push_shared(&mut pool, cache.hit(1002).unwrap()).unwrap();
+        assert!(cache.evict_lru(&mut pool).unwrap());
+        assert_eq!(cache.match_len(&[1000]), 0);
+        assert!(!cache.evict_lru(&mut pool).unwrap(), "pinned survivor stays");
+        assert_eq!(cache.match_len(&[1002]), 1);
+        t2.release(&mut pool).unwrap();
+    }
+
+    #[test]
+    fn insert_of_existing_hash_keeps_first_page() {
+        let mut pool = PagePool::new(8, 4);
+        let mut cache = PrefixCache::new();
+        let p0 = pool.alloc().unwrap();
+        let p1 = pool.alloc().unwrap();
+        cache.insert(&mut pool, 42, p0).unwrap();
+        cache.insert(&mut pool, 42, p1).unwrap();
+        assert_eq!(cache.hit(42), Some(p0), "first page wins");
+        assert_eq!(pool.refcount(p1), 1, "duplicate insert takes no extra ref");
+    }
+
+    #[test]
+    fn pages_for_rounds_up() {
+        assert_eq!(pages_for(0, 16), 0);
+        assert_eq!(pages_for(1, 16), 1);
+        assert_eq!(pages_for(16, 16), 1);
+        assert_eq!(pages_for(17, 16), 2);
+        assert_eq!(pages_for(128, 16), 8);
+        assert_eq!(pages_for(5, 0), 5, "degenerate page size clamps to 1");
+    }
+}

@@ -222,6 +222,7 @@ pub(crate) mod tests {
             ],
             decode_state: vec![],
             draft: None,
+            paged: None,
             batch_inputs: vec![BatchInputSpec { name: "enc".into(), shape: vec![2, 8] }],
             hlo_files: vec![],
             param_count_total: 4 + 128 + 8,

@@ -56,6 +56,36 @@
 //! draft model itself drafts through its ordinary split-decode
 //! `decode_token` (γ cheap steps per verify).
 //!
+//! §Perf L9 paged decode-state contract (paged KV pool + prefix
+//! cache): an artifact may declare `"paged": {"page_size": N}` in
+//! meta.json and ship page-table-operand variants of the split-decode
+//! entry points:
+//!
+//!   prefill_paged@<b>:  (params..., pstate..., enc [P, b],
+//!                        slot_ids [P], page_table [P, max_pages])
+//!                        -> (pstate'...)
+//!   decode_token_paged: (params..., pstate..., live [S],
+//!                        page_table [S, max_pages])
+//!                        -> (pstate'..., tokens [S])
+//!   verify_paged@<g>:   (params..., pstate..., drafted [S, g],
+//!                        live [S], page_table [S, max_pages])
+//!                        -> (pstate'..., accept_len [S], correction [S])
+//!
+//! `pstate...` are the same meta.json `decode_state` slots, but
+//! allocated with a leading POOL dimension (`pool_pages` physical
+//! pages of `page_size` token positions each) instead of a slot
+//! dimension (`init_paged_slots`). The page table maps each slot's
+//! logical page k to a physical pool row (-1 = unmapped); entries are
+//! refcounted host-side (`runtime::pages`), so several slots can share
+//! the physical pages of a common prompt prefix and skip the covered
+//! portion of prefill (cross-request prefix caching). `max_pages` is
+//! `ceil((enc_len + dec_len) / page_size)` — the worst-case logical
+//! length of one request. Allocation, eviction, and prefix matching
+//! are entirely host-side policy; the HLOs only ever see the resolved
+//! tables. When the artifact ships no paged contract,
+//! `Session::has_paged_decode` is false and serving falls back to the
+//! monolithic per-slot `DecodeSlots` path with identical outputs.
+//!
 //! §Perf L4 (EXPERIMENTS.md): parameter/optimizer state is kept
 //! device-resident as `PjRtBuffer`s across steps. Per train step, only
 //! the batch + three scalars cross the host boundary on the way in and
@@ -68,6 +98,7 @@ use crate::runtime::artifact::Artifact;
 use crate::runtime::client::{Client, Executable};
 use crate::runtime::params::ParamStore;
 use crate::runtime::tensor::Tensor;
+use crate::util::lru::{EvictionPolicy, LruPolicy};
 use anyhow::{bail, Context, Result};
 use std::rc::Rc;
 use std::time::Instant;
@@ -143,18 +174,26 @@ fn bucket_cache_cap_from_env() -> usize {
 }
 
 /// Bounded cache of shape-specialized executables keyed by
-/// sequence-length bucket, most-recently-used last. Used for the
-/// `decode_step@<b>` and `prefill@<b>` executable families; generic so
-/// the eviction policy is unit-testable without compiling HLO (the
-/// offline xla stub cannot produce an `Executable`).
+/// sequence-length bucket. Used for the `decode_step@<b>` and
+/// `prefill@<b>` executable families; generic so the eviction policy
+/// is unit-testable without compiling HLO (the offline xla stub cannot
+/// produce an `Executable`).
+///
+/// Since §L9 the recency bookkeeping is the shared
+/// `util::lru::LruPolicy` — the same policy ordering the prefix-page
+/// cache (`runtime::pages::PrefixCache`) — with this type adding what
+/// an executable cache needs on top: value storage and a hard entry
+/// cap (the prefix cache instead evicts on pool pressure, with
+/// refcount pinning).
 pub struct BucketLru<T> {
-    entries: Vec<(usize, T)>,
+    values: Vec<(usize, T)>,
+    order: LruPolicy<usize>,
     cap: usize,
 }
 
 impl<T> BucketLru<T> {
     pub fn new(cap: usize) -> BucketLru<T> {
-        BucketLru { entries: Vec::new(), cap: cap.max(1) }
+        BucketLru { values: Vec::new(), order: LruPolicy::new(), cap: cap.max(1) }
     }
 
     pub fn cap(&self) -> usize {
@@ -162,19 +201,18 @@ impl<T> BucketLru<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.values.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.values.is_empty()
     }
 
     /// Look up `bucket`, marking it most-recently-used on a hit.
     pub fn get(&mut self, bucket: usize) -> Option<&T> {
-        let pos = self.entries.iter().position(|(b, _)| *b == bucket)?;
-        let entry = self.entries.remove(pos);
-        self.entries.push(entry);
-        self.entries.last().map(|(_, t)| t)
+        let pos = self.values.iter().position(|(b, _)| *b == bucket)?;
+        self.order.note_touch(bucket);
+        self.values.get(pos).map(|(_, t)| t)
     }
 
     /// Insert a new entry (the key must not be present) and return
@@ -183,20 +221,29 @@ impl<T> BucketLru<T> {
     /// releasing its backing resource (e.g. `Client::evict`).
     pub fn insert(&mut self, bucket: usize, value: T) -> Vec<(usize, T)> {
         debug_assert!(
-            self.entries.iter().all(|(b, _)| *b != bucket),
+            self.values.iter().all(|(b, _)| *b != bucket),
             "BucketLru::insert on a present key {bucket}"
         );
-        self.entries.push((bucket, value));
+        self.values.push((bucket, value));
+        self.order.note_insert(bucket);
         let mut evicted = Vec::new();
-        while self.entries.len() > self.cap {
-            evicted.push(self.entries.remove(0));
+        while self.values.len() > self.cap {
+            // Executables are never pinned: the LRU key always goes.
+            let victim = self.order.victim(&|_| true).expect("non-empty over-cap cache");
+            self.order.note_remove(victim);
+            let pos = self
+                .values
+                .iter()
+                .position(|(b, _)| *b == victim)
+                .expect("policy key backed by a value");
+            evicted.push(self.values.remove(pos));
         }
         evicted
     }
 
     /// Buckets currently cached, least-recently-used first.
     pub fn keys(&self) -> Vec<usize> {
-        self.entries.iter().map(|(b, _)| *b).collect()
+        self.order.keys().copied().collect()
     }
 }
 
@@ -239,9 +286,16 @@ pub struct Session {
     prefill_buckets: BucketLru<Rc<Executable>>,
     /// The fused per-token decode executable (§Perf L6).
     decode_token: Option<Rc<Executable>>,
+    /// Same as `prefill_buckets`, for the page-table-operand
+    /// `prefill_paged@<bucket>` family (§L9).
+    prefill_paged_buckets: BucketLru<Rc<Executable>>,
+    /// The fused paged per-token decode executable (§L9).
+    decode_token_paged: Option<Rc<Executable>>,
     /// The fused speculative verify executable (§L8), cached for the
     /// one draft length γ a server runs at.
     verify_exe: Option<(usize, Rc<Executable>)>,
+    /// The paged variant of `verify_exe` (§L9).
+    verify_paged_exe: Option<(usize, Rc<Executable>)>,
     /// The draft-side accept/rollback executable (§L8; compiled from a
     /// DRAFT artifact's `draft_accept` entry point).
     spec_accept_exe: Option<Rc<Executable>>,
@@ -293,7 +347,10 @@ impl Session {
             decode_buckets: BucketLru::new(bucket_cache_cap_from_env()),
             prefill_buckets: BucketLru::new(bucket_cache_cap_from_env()),
             decode_token: None,
+            prefill_paged_buckets: BucketLru::new(bucket_cache_cap_from_env()),
+            decode_token_paged: None,
             verify_exe: None,
+            verify_paged_exe: None,
             spec_accept_exe: None,
             state: None,
             state_step: 0,
@@ -1150,6 +1207,329 @@ impl Session {
         Ok(DecodeSlots { slots: n, state: outs })
     }
 
+    // ----- §L9: paged decode-state serving path -----
+
+    /// True when the artifact ships the paged split-decode contract
+    /// (module header §L9): a `paged` meta.json entry, a
+    /// `decode_token_paged` HLO, a full-length paged prefill entry
+    /// point, and the `decode_state` specs the pool is allocated from.
+    pub fn has_paged_decode(&self) -> bool {
+        if self.artifact.paged.is_none()
+            || !self.artifact.has("decode_token_paged")
+            || self.artifact.decode_state.is_empty()
+        {
+            return false;
+        }
+        self.artifact.has("prefill_paged")
+            || self
+                .artifact
+                .has(&format!("prefill_paged@{}", self.artifact.config.enc_len))
+    }
+
+    /// The artifact's KV page size, when it ships the paged contract.
+    pub fn page_size(&self) -> Option<usize> {
+        self.artifact.paged.as_ref().map(|p| p.page_size)
+    }
+
+    /// Worst-case logical pages of one request — the page-table width
+    /// of every paged entry point: `ceil((enc_len + dec_len) /
+    /// page_size)`.
+    pub fn max_pages(&self) -> Result<usize> {
+        let p = self.artifact.paged.as_ref().with_context(|| {
+            format!("artifact {} ships no paged contract", self.artifact.name)
+        })?;
+        let cfg = &self.artifact.config;
+        Ok(crate::runtime::pages::pages_for(cfg.enc_len + cfg.dec_len, p.page_size))
+    }
+
+    /// The sequence length a `prefill_paged(bucket)` call actually
+    /// executes at (the paged twin of `effective_prefill_bucket`).
+    pub fn effective_paged_prefill_bucket(&self, bucket: usize) -> usize {
+        let enc_len = self.artifact.config.enc_len;
+        if bucket < enc_len && self.artifact.has(&format!("prefill_paged@{bucket}")) {
+            bucket
+        } else {
+            enc_len
+        }
+    }
+
+    /// Allocate the device-resident page pool: one zeroed buffer per
+    /// `decode_state` spec with a leading `pool_pages` dimension
+    /// (physical pages, not slots — which pages belong to which slot
+    /// is the page table's business). Same residency/donation
+    /// lifecycle as `init_decode_slots`.
+    pub fn init_paged_slots(&mut self, client: &Client, pool_pages: usize) -> Result<DecodeSlots> {
+        if !self.has_paged_decode() {
+            bail!(
+                "artifact {} ships no paged decode HLO (prefill_paged/decode_token_paged + paged meta)",
+                self.artifact.name
+            );
+        }
+        let t0 = Instant::now();
+        let mut state = Vec::with_capacity(self.artifact.decode_state.len());
+        for spec in &self.artifact.decode_state {
+            let mut shape = vec![pool_pages];
+            shape.extend_from_slice(&spec.shape);
+            let n: usize = shape.iter().product();
+            let zeros = match spec.dtype {
+                crate::runtime::tensor::DType::F32 => Tensor::zeros_f32(shape),
+                crate::runtime::tensor::DType::I32 => Tensor::i32(shape, vec![0; n]),
+                crate::runtime::tensor::DType::U32 => Tensor::u32(shape, vec![0; n]),
+            };
+            state.push(client.upload(&zeros.to_literal()?)?);
+        }
+        self.transfer_seconds += t0.elapsed().as_secs_f64();
+        Ok(DecodeSlots { slots: pool_pages, state })
+    }
+
+    /// Same LRU policy as `prefill_exe`, for the
+    /// `prefill_paged@<bucket>` family.
+    fn prefill_paged_exe(&mut self, client: &Client, bucket: usize) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.prefill_paged_buckets.get(bucket) {
+            return Ok(Rc::clone(exe));
+        }
+        let exe = self.compile(client, &format!("prefill_paged@{bucket}"))?;
+        for (evicted, _) in self.prefill_paged_buckets.insert(bucket, Rc::clone(&exe)) {
+            client.evict(&format!("{}:prefill_paged@{evicted}", self.artifact.name));
+        }
+        Ok(exe)
+    }
+
+    fn compile_prefill_paged_full(&mut self, client: &Client) -> Result<Rc<Executable>> {
+        if self.artifact.has("prefill_paged") {
+            return self.compile(client, "prefill_paged");
+        }
+        let at_full = format!("prefill_paged@{}", self.artifact.config.enc_len);
+        self.compile(client, &at_full)
+    }
+
+    /// Paged prefill (§L9): like `prefill`, plus the (P, max_pages)
+    /// row-major `page_table` operand mapping each prompt row's logical
+    /// pages to pool rows (-1 = unmapped). Rows whose leading pages
+    /// were satisfied by the prefix cache arrive with those entries
+    /// already mapped; the HLO skips recomputing them.
+    pub fn prefill_paged(
+        &mut self,
+        client: &Client,
+        slots: DecodeSlots,
+        enc_tokens: &[i32],
+        bucket: usize,
+        slot_ids: &[i32],
+        page_table: &[i32],
+    ) -> Result<DecodeSlots> {
+        if self.mode != CacheMode::Device {
+            bail!("split decode requires CacheMode::Device (serving default)");
+        }
+        let enc_len = self.artifact.config.enc_len;
+        if bucket > enc_len {
+            bail!("prefill_paged bucket {bucket} exceeds enc_len {enc_len}");
+        }
+        if enc_tokens.len() != slot_ids.len() * bucket {
+            bail!(
+                "prefill_paged batch size {} != {}x{bucket}",
+                enc_tokens.len(),
+                slot_ids.len()
+            );
+        }
+        let max_pages = self.max_pages()?;
+        if page_table.len() != slot_ids.len() * max_pages {
+            bail!(
+                "prefill_paged page table len {} != {}x{max_pages}",
+                page_table.len(),
+                slot_ids.len()
+            );
+        }
+        let eff = self.effective_paged_prefill_bucket(bucket);
+        let (exe, enc_owned);
+        if eff == bucket && bucket < enc_len {
+            exe = self.prefill_paged_exe(client, bucket)?;
+            enc_owned = enc_tokens.to_vec();
+        } else {
+            exe = self.compile_prefill_paged_full(client)?;
+            let rows = slot_ids.len();
+            let mut full = vec![0i32; rows * enc_len];
+            for (i, row) in enc_tokens.chunks(bucket).enumerate() {
+                full[i * enc_len..i * enc_len + bucket].copy_from_slice(row);
+            }
+            enc_owned = full;
+        }
+        let rows = slot_ids.len();
+        self.ensure_device_state(client, false)?;
+        let t0 = Instant::now();
+        let enc_buf =
+            client.upload(&Tensor::i32(vec![rows, eff], enc_owned).to_literal()?)?;
+        let ids_buf = client.upload(&Tensor::i32(vec![rows], slot_ids.to_vec()).to_literal()?)?;
+        let table_buf = client
+            .upload(&Tensor::i32(vec![rows, max_pages], page_table.to_vec()).to_literal()?)?;
+        self.transfer_seconds += t0.elapsed().as_secs_f64();
+
+        let DecodeSlots { slots: n, mut state } = slots;
+        state.push(enc_buf);
+        state.push(ids_buf);
+        state.push(table_buf);
+        let t1 = Instant::now();
+        let outs = {
+            let Some(CachedState::Device { params, .. }) = self.state.as_ref() else {
+                bail!("device state missing after ensure_device_state");
+            };
+            let shared: Vec<&xla::PjRtBuffer> = params.iter().collect();
+            exe.run_buffers_donating(&shared, state)?
+        };
+        self.exec_seconds += t1.elapsed().as_secs_f64();
+        if outs.len() != self.artifact.decode_state.len() {
+            bail!(
+                "prefill_paged returned {} outputs, expected {} decode_state slots",
+                outs.len(),
+                self.artifact.decode_state.len()
+            );
+        }
+        Ok(DecodeSlots { slots: n, state: outs })
+    }
+
+    /// Paged per-token decode (§L9): like `decode_token`, plus the
+    /// (S, max_pages) page-table operand resolving each slot's logical
+    /// pages to pool rows.
+    pub fn decode_token_paged(
+        &mut self,
+        client: &Client,
+        slots: DecodeSlots,
+        live: &[bool],
+        page_table: &[i32],
+    ) -> Result<(DecodeSlots, Vec<i32>)> {
+        if self.mode != CacheMode::Device {
+            bail!("split decode requires CacheMode::Device (serving default)");
+        }
+        let max_pages = self.max_pages()?;
+        if page_table.len() != live.len() * max_pages {
+            bail!(
+                "decode_token_paged page table len {} != {}x{max_pages}",
+                page_table.len(),
+                live.len()
+            );
+        }
+        if self.decode_token_paged.is_none() {
+            self.decode_token_paged = Some(self.compile(client, "decode_token_paged")?);
+        }
+        let exe = Rc::clone(self.decode_token_paged.as_ref().unwrap());
+        self.ensure_device_state(client, false)?;
+        let t0 = Instant::now();
+        let n_slots = live.len();
+        let mask: Vec<i32> = live.iter().map(|&l| l as i32).collect();
+        let mask_buf = client.upload(&Tensor::i32(vec![n_slots], mask).to_literal()?)?;
+        let table_buf = client
+            .upload(&Tensor::i32(vec![n_slots, max_pages], page_table.to_vec()).to_literal()?)?;
+        self.transfer_seconds += t0.elapsed().as_secs_f64();
+
+        let DecodeSlots { slots: n, mut state } = slots;
+        state.push(mask_buf);
+        state.push(table_buf);
+        let t1 = Instant::now();
+        let mut outs = {
+            let Some(CachedState::Device { params, .. }) = self.state.as_ref() else {
+                bail!("device state missing after ensure_device_state");
+            };
+            let shared: Vec<&xla::PjRtBuffer> = params.iter().collect();
+            exe.run_buffers_donating(&shared, state)?
+        };
+        self.exec_seconds += t1.elapsed().as_secs_f64();
+        let want = self.artifact.decode_state.len() + 1;
+        if outs.len() != want {
+            bail!("decode_token_paged returned {} outputs, expected {want}", outs.len());
+        }
+        let tokens_buf = outs.pop().expect("token output");
+        let t2 = Instant::now();
+        let tokens = Tensor::from_literal(&tokens_buf.to_literal_sync()?)?.as_i32()?.to_vec();
+        self.transfer_seconds += t2.elapsed().as_secs_f64();
+        if tokens.len() != n_slots {
+            bail!("decode_token_paged emitted {} tokens for {n_slots} slots", tokens.len());
+        }
+        Ok((DecodeSlots { slots: n, state: outs }, tokens))
+    }
+
+    /// True when the artifact ships the paged fused verify for draft
+    /// length `gamma` (§L9 twin of `has_verify`).
+    pub fn has_verify_paged(&self, gamma: usize) -> bool {
+        gamma >= 1 && self.artifact.has(&format!("verify_paged@{gamma}"))
+    }
+
+    /// Paged speculative verify (§L9): like `verify`, plus the
+    /// (S, max_pages) page-table operand.
+    pub fn verify_paged(
+        &mut self,
+        client: &Client,
+        slots: DecodeSlots,
+        drafted: &[i32],
+        live: &[bool],
+        gamma: usize,
+        page_table: &[i32],
+    ) -> Result<(DecodeSlots, Vec<i32>, Vec<i32>)> {
+        if self.mode != CacheMode::Device {
+            bail!("split decode requires CacheMode::Device (serving default)");
+        }
+        let n_slots = live.len();
+        if drafted.len() != n_slots * gamma {
+            bail!("drafted len {} != {n_slots} slots x gamma {gamma}", drafted.len());
+        }
+        let max_pages = self.max_pages()?;
+        if page_table.len() != n_slots * max_pages {
+            bail!(
+                "verify_paged page table len {} != {n_slots}x{max_pages}",
+                page_table.len()
+            );
+        }
+        let exe = match &self.verify_paged_exe {
+            Some((g, exe)) if *g == gamma => Rc::clone(exe),
+            _ => {
+                let exe = self.compile(client, &format!("verify_paged@{gamma}"))?;
+                self.verify_paged_exe = Some((gamma, Rc::clone(&exe)));
+                exe
+            }
+        };
+        self.ensure_device_state(client, false)?;
+        let t0 = Instant::now();
+        let drafted_buf = client
+            .upload(&Tensor::i32(vec![n_slots, gamma], drafted.to_vec()).to_literal()?)?;
+        let mask: Vec<i32> = live.iter().map(|&l| l as i32).collect();
+        let mask_buf = client.upload(&Tensor::i32(vec![n_slots], mask).to_literal()?)?;
+        let table_buf = client
+            .upload(&Tensor::i32(vec![n_slots, max_pages], page_table.to_vec()).to_literal()?)?;
+        self.transfer_seconds += t0.elapsed().as_secs_f64();
+
+        let DecodeSlots { slots: n, mut state } = slots;
+        state.push(drafted_buf);
+        state.push(mask_buf);
+        state.push(table_buf);
+        let t1 = Instant::now();
+        let mut outs = {
+            let Some(CachedState::Device { params, .. }) = self.state.as_ref() else {
+                bail!("device state missing after ensure_device_state");
+            };
+            let shared: Vec<&xla::PjRtBuffer> = params.iter().collect();
+            exe.run_buffers_donating(&shared, state)?
+        };
+        self.exec_seconds += t1.elapsed().as_secs_f64();
+        let want = self.artifact.decode_state.len() + 2;
+        if outs.len() != want {
+            bail!("verify_paged@{gamma} returned {} outputs, expected {want}", outs.len());
+        }
+        let corr_buf = outs.pop().expect("correction output");
+        let accept_buf = outs.pop().expect("accept_len output");
+        let t2 = Instant::now();
+        let accept =
+            Tensor::from_literal(&accept_buf.to_literal_sync()?)?.as_i32()?.to_vec();
+        let correction =
+            Tensor::from_literal(&corr_buf.to_literal_sync()?)?.as_i32()?.to_vec();
+        self.transfer_seconds += t2.elapsed().as_secs_f64();
+        if accept.len() != n_slots || correction.len() != n_slots {
+            bail!(
+                "verify_paged@{gamma} emitted {}/{} rows for {n_slots} slots",
+                accept.len(),
+                correction.len()
+            );
+        }
+        Ok((DecodeSlots { slots: n, state: outs }, accept, correction))
+    }
+
     /// The full-length prefill entry point: the generic `prefill` HLO
     /// when the artifact ships one, else `prefill@<enc_len>` (an
     /// artifact may name its full-length prefill either way). Cached
@@ -1388,6 +1768,68 @@ mod tests {
         // Executing still requires a real backend: prefill fails with
         // an error (missing/uncompilable HLO), never a panic.
         assert!(s.prefill(&client, slots, &[0; 2 * 8], 8, &[0, 1]).is_err());
+    }
+
+    /// §L9 detection + fallback: `has_paged_decode` requires the paged
+    /// meta entry AND the paged HLO pair, the pool allocator shapes
+    /// buffers with a leading pool-pages dimension, and everything
+    /// errors cleanly (fallback to monolithic slots) when any piece is
+    /// missing.
+    #[test]
+    fn paged_decode_detection_and_fallback() {
+        use crate::runtime::artifact::{DecodeStateSpec, PagedSpec};
+        use crate::runtime::tensor::DType;
+        let client = Client::cpu().unwrap();
+        let s = Session::open_eval(&client, toy_artifact(), 0).unwrap();
+        assert!(!s.has_paged_decode(), "toy artifact ships no paged contract");
+        assert_eq!(s.page_size(), None);
+        assert!(s.max_pages().is_err());
+
+        // Paged meta entry without the paged HLOs: still monolithic.
+        let mut a = toy_artifact();
+        a.paged = Some(PagedSpec { page_size: 4 });
+        a.decode_state = vec![
+            DecodeStateSpec { name: "kv".into(), shape: vec![4, 2], dtype: DType::F32 },
+            DecodeStateSpec { name: "fill".into(), shape: vec![], dtype: DType::I32 },
+        ];
+        let s = Session::open_eval(&client, a.clone(), 0).unwrap();
+        assert!(!s.has_paged_decode(), "paged meta without paged HLOs");
+        assert_eq!(s.page_size(), Some(4));
+        // enc_len 8 + dec_len 4 at page size 4 -> 3 logical pages max.
+        assert_eq!(s.max_pages().unwrap(), 3);
+
+        // Full contract: detection flips on, the pool allocates with a
+        // leading pool-pages dimension (not a slot dimension).
+        a.hlo_files.push(("prefill_paged".into(), std::path::PathBuf::from("/nonexistent")));
+        a.hlo_files
+            .push(("decode_token_paged".into(), std::path::PathBuf::from("/nonexistent")));
+        let mut s = Session::open_eval(&client, a, 0).unwrap();
+        assert!(s.has_paged_decode());
+        assert!(!s.has_verify_paged(4), "no verify_paged HLO shipped");
+        let pool = s.init_paged_slots(&client, 6).unwrap();
+        assert_eq!(pool.slots, 6, "leading dim is pool pages");
+        assert_eq!(pool.state.len(), 2);
+        assert_eq!(pool.state[0].to_literal_sync().unwrap().element_count(), 6 * 4 * 2);
+        let fill = pool.state[1].to_literal_sync().unwrap();
+        assert_eq!(fill.to_vec::<i32>().unwrap(), vec![0; 6], "dtype honored");
+
+        // Shape validation fires before any compile: a wrong-width
+        // page table is rejected, and with correct shapes but no real
+        // backend the call errors (missing HLO file), never panics.
+        let table = vec![-1i32; 2 * 3];
+        assert!(s
+            .prefill_paged(&client, pool, &[0; 2 * 8], 8, &[0, 1], &table[..4])
+            .is_err());
+        let pool = s.init_paged_slots(&client, 6).unwrap();
+        assert!(s.prefill_paged(&client, pool, &[0; 2 * 8], 8, &[0, 1], &table).is_err());
+        let pool = s.init_paged_slots(&client, 6).unwrap();
+        assert!(s.decode_token_paged(&client, pool, &[true, true], &table).is_err());
+
+        // The paged contract is independent of the L6 monolithic one:
+        // this artifact ships only paged HLOs, so the monolithic slot
+        // allocator still refuses (serving picks the path per session).
+        assert!(!s.has_split_decode());
+        assert!(s.init_decode_slots(&client, 2).is_err());
     }
 
     /// §L8 detection + error paths: `has_verify` keys on the exact

@@ -1,0 +1,150 @@
+//! Shared least-recently-used eviction policy (§Perf L9).
+//!
+//! Two caches need identical LRU bookkeeping: the session's bucketed
+//! executable caches (`runtime::session::BucketLru`) and the prefix-page
+//! cache over the paged decode-state pool (`runtime::pages::PrefixCache`).
+//! Before L9 the ordering logic lived inline in `BucketLru`; a second
+//! hand-rolled copy for prefix pages would have meant two subtly
+//! divergent recency implementations guarding device memory. This module
+//! extracts the ordering into one policy the two caches share.
+//!
+//! The policy tracks *keys only* — callers own the values (executables,
+//! page ids) and decide what eviction means. `victim` takes an
+//! evictability predicate so callers can pin entries (a prefix page with
+//! a live slot reference must never be evicted; see `runtime::pages`).
+//!
+//! Capacity stays out of the policy on purpose: the executable cache
+//! evicts on entry count, the prefix cache on free-page pressure.
+//! Deciding *when* to evict is the cache's job; the policy only answers
+//! *which* key goes next.
+
+/// What a cache needs from an eviction policy: recency notes on
+/// insert/touch/remove, and a victim query filtered by an
+/// evictability predicate.
+pub trait EvictionPolicy<K: Copy + PartialEq> {
+    /// Record a newly inserted key (becomes most recent).
+    fn note_insert(&mut self, key: K);
+    /// Record a use of an existing key (moves to most recent).
+    /// Unknown keys are ignored.
+    fn note_touch(&mut self, key: K);
+    /// Forget a key (e.g. the cache evicted or invalidated it).
+    fn note_remove(&mut self, key: K);
+    /// The least-desirable key for which `evictable` holds, or `None`
+    /// when every tracked key is pinned.
+    fn victim(&self, evictable: &dyn Fn(K) -> bool) -> Option<K>;
+    /// Number of tracked keys.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Least-recently-used ordering over a small key set.
+///
+/// Backed by a `Vec` kept in recency order (front = least recent), the
+/// same representation the pre-L9 `BucketLru` used: both client caches
+/// hold at most a handful of buckets / a few hundred pages, so linear
+/// scans beat pointer-chased list nodes and keep the code obviously
+/// correct.
+#[derive(Debug, Default)]
+pub struct LruPolicy<K> {
+    /// Keys in recency order: `order[0]` is the LRU candidate.
+    order: Vec<K>,
+}
+
+impl<K: Copy + PartialEq> LruPolicy<K> {
+    pub fn new() -> LruPolicy<K> {
+        LruPolicy { order: Vec::new() }
+    }
+
+    /// Keys least-recent first (the executable cache exposes this for
+    /// tests and debugging).
+    pub fn keys(&self) -> impl Iterator<Item = &K> {
+        self.order.iter()
+    }
+}
+
+impl<K: Copy + PartialEq> EvictionPolicy<K> for LruPolicy<K> {
+    fn note_insert(&mut self, key: K) {
+        debug_assert!(
+            !self.order.contains(&key),
+            "LruPolicy::note_insert on an already-tracked key"
+        );
+        self.order.push(key);
+    }
+
+    fn note_touch(&mut self, key: K) {
+        if let Some(pos) = self.order.iter().position(|k| *k == key) {
+            let k = self.order.remove(pos);
+            self.order.push(k);
+        }
+    }
+
+    fn note_remove(&mut self, key: K) {
+        if let Some(pos) = self.order.iter().position(|k| *k == key) {
+            self.order.remove(pos);
+        }
+    }
+
+    fn victim(&self, evictable: &dyn Fn(K) -> bool) -> Option<K> {
+        self.order.iter().copied().find(|&k| evictable(k))
+    }
+
+    fn len(&self) -> usize {
+        self.order.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn victim_order_is_least_recent_first() {
+        let mut p = LruPolicy::new();
+        for k in [1usize, 2, 3] {
+            p.note_insert(k);
+        }
+        assert_eq!(p.victim(&|_| true), Some(1));
+        p.note_touch(1); // 1 becomes most recent; 2 is now LRU
+        assert_eq!(p.victim(&|_| true), Some(2));
+        p.note_remove(2);
+        assert_eq!(p.victim(&|_| true), Some(3));
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn touch_on_unknown_key_is_a_noop() {
+        let mut p = LruPolicy::new();
+        p.note_insert(7usize);
+        p.note_touch(99);
+        p.note_remove(99);
+        assert_eq!(p.victim(&|_| true), Some(7));
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn pinned_keys_are_skipped_not_evicted() {
+        // The prefix cache pins pages whose refcount shows a live slot
+        // reference; the policy must pass over them to the next LRU key.
+        let mut p = LruPolicy::new();
+        for k in [10usize, 20, 30] {
+            p.note_insert(k);
+        }
+        assert_eq!(p.victim(&|k| k != 10), Some(20), "pinned LRU head skipped");
+        assert_eq!(p.victim(&|k| k == 30), Some(30));
+        assert_eq!(p.victim(&|_| false), None, "all pinned -> no victim");
+        assert_eq!(p.len(), 3, "victim() never mutates");
+    }
+
+    #[test]
+    fn keys_iterate_lru_first() {
+        let mut p = LruPolicy::new();
+        for k in [4usize, 5, 6] {
+            p.note_insert(k);
+        }
+        p.note_touch(4);
+        let keys: Vec<usize> = p.keys().copied().collect();
+        assert_eq!(keys, vec![5, 6, 4]);
+    }
+}

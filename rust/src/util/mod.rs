@@ -5,6 +5,7 @@ pub mod bench;
 pub mod cli;
 pub mod env;
 pub mod json;
+pub mod lru;
 pub mod prop;
 pub mod rng;
 pub mod threadpool;

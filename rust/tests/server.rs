@@ -8,7 +8,7 @@
 
 use altup::coordinator::server::{
     EngineSpec, FailReason, Request, Response, ServerHandle, ServerOptions, ServerStats,
-    SimSpec, ROUTER_ID,
+    SimPoolSpec, SimSpec, ROUTER_ID,
 };
 use altup::data::tokenizer::EOS;
 use altup::runtime::session::{bucket_for, bucket_lengths};
@@ -26,7 +26,19 @@ fn sim_spec() -> SimSpec {
         d.dtoken_ns = 0;
         d.dstep_ns = 0;
     }
+    // Hermetic: `SimSpec::new` reads `ALTUP_POOL_PAGES` from the
+    // environment; tests opt into paging via `paged_spec` only.
+    spec.pool = None;
     spec
+}
+
+/// §L9 paged variant of `sim_spec`: same model geometry, decode state
+/// served out of a `pool_pages`-page pool with `page_size`-token pages.
+fn paged_spec(page_size: usize, pool_pages: usize, prefix_cache: bool) -> SimSpec {
+    SimSpec {
+        pool: Some(SimPoolSpec { page_size, pool_pages, prefix_cache }),
+        ..sim_spec()
+    }
 }
 
 /// Batch-level (run-to-completion) options — the §Perf L5 discipline.
@@ -815,4 +827,174 @@ fn drain_sheds_only_requests_past_deadline() {
     assert_eq!(stats.requests, ok);
     assert_eq!(stats.sheds, shed);
     assert_eq!(stats.failed, shed, "only deadline sheds failed");
+}
+
+/// §L9 acceptance contract, satellite 1: the paged decode path emits
+/// exactly the rows the monolithic continuous path and the §L5
+/// batch-level path emit, and the fallback asymmetry holds — only the
+/// paged run reports pool metrics.
+#[test]
+fn paged_vs_monolithic_vs_batch_decode_parity() {
+    let lens = [1usize, 3, 8, 9, 15, 17, 31, 33, 40, 63, 64, 80];
+    let run = |spec: SimSpec, options: ServerOptions| -> (Vec<Vec<i32>>, ServerStats) {
+        let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), options);
+        let out = collect(&server, &lens);
+        (out, server.shutdown().unwrap())
+    };
+    // Prefix cache off: pure page-table indirection under test.
+    let (paged_rows, paged) = run(paged_spec(16, 32, false), copts(1, 4));
+    let (mono_rows, mono) = run(sim_spec(), copts(1, 4));
+    let (batch_rows, _) = run(sim_spec(), opts(1, true));
+    assert_eq!(paged_rows, mono_rows, "paging must not change emitted tokens");
+    assert_eq!(mono_rows, batch_rows, "continuous paths must match the batch loop");
+
+    assert_eq!(paged.requests, lens.len());
+    assert_eq!(paged.tokens_generated, mono.tokens_generated);
+    assert!(paged.decode_steps > 0, "paged run used the continuous scheduler");
+    assert_eq!(paged.failed, 0);
+
+    // Only the paged run carries pool accounting...
+    assert_eq!(paged.pool.capacity, 32);
+    assert!(paged.pool.samples > 0, "pool occupancy sampled every decode step");
+    assert!(paged.pool.peak_used > 0 && paged.pool.peak_used <= 32);
+    assert!(paged.summary().contains("pool:"), "summary surfaces pool metrics");
+    // ...with no cache or pressure activity at this capacity.
+    assert_eq!(paged.pool.prefix_lookups, 0, "cache off: no lookups");
+    assert_eq!(paged.pool.evictions, 0);
+    assert_eq!(paged.pool.alloc_stalls, 0);
+    // The monolithic fallback reports no pool at all.
+    assert_eq!(mono.pool.capacity, 0);
+    assert_eq!(mono.pool.samples, 0);
+    assert!(!mono.summary().contains("pool:"));
+}
+
+/// §L9 x §L8: speculative decoding on the paged path (fused
+/// `verify_paged` against pool-mapped KV) stays token-for-token
+/// identical to plain monolithic continuous decode.
+#[test]
+fn spec_decode_parity_on_paged_path() {
+    let lens = [1usize, 2, 3, 5, 9, 17, 21, 31, 40, 46, 63, 64, 80];
+    let run = |spec: SimSpec, options: ServerOptions| -> (Vec<Vec<i32>>, ServerStats) {
+        let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), options);
+        let out = collect(&server, &lens);
+        (out, server.shutdown().unwrap())
+    };
+    let (plain_rows, plain) = run(sim_spec(), copts(1, 4));
+    assert_eq!(plain.spec.verify_steps, 0);
+    let (rows, stats) = run(paged_spec(16, 32, true), sopts(1, 4, 4));
+    assert_eq!(rows, plain_rows, "paged speculation must not change outputs");
+    assert!(stats.spec.active(), "speculation ran on the paged path");
+    assert!(stats.spec.verify_steps > 0);
+    assert_eq!(
+        stats.spec.spec_tokens as usize, stats.tokens_generated,
+        "every delivered token went through the paged verify path"
+    );
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.pool.capacity, 32);
+    assert!(stats.pool.samples > 0);
+    // prompt(l) prompts share prefixes by construction, so the cache
+    // fired too — proving speculation and prefix reuse compose.
+    assert!(stats.pool.prefix_hits > 0, "shared prefixes hit under speculation");
+}
+
+/// §L9 admission: a request whose KV footprint exceeds the whole pool
+/// is shed with an explicit `PoolExhausted` — a terminal response, not
+/// a wedged scheduler — and requests that fit keep serving.
+#[test]
+fn pool_exhausted_requests_shed_explicitly() {
+    // 4 pages x 8 tokens = 32 KV tokens total; dec_len 8 leaves room
+    // for prompts bucketed up to 24 tokens. A 40-token prompt needs 9
+    // pages — impossible even with every page free.
+    let server =
+        ServerHandle::spawn_engine(EngineSpec::Sim(paged_spec(8, 4, false)), copts(1, 2));
+    let ok = server.infer_response(prompt(6)).expect("terminal response");
+    assert!(ok.failure.is_none(), "a fitting request serves normally");
+    assert_eq!(*ok.tokens.last().unwrap(), EOS);
+
+    let shed = server.infer_response(prompt(40)).expect("terminal response");
+    assert_eq!(shed.failure, Some(FailReason::PoolExhausted));
+    assert!(shed.tokens.is_empty());
+
+    let after = server.infer_response(prompt(5)).expect("terminal response");
+    assert!(after.failure.is_none(), "the shed must not wedge the scheduler");
+
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.sheds, 0, "PoolExhausted is not a deadline shed");
+    assert_eq!(stats.pool.alloc_stalls, 0, "impossible != transient shortage");
+}
+
+/// §L9 tentpole acceptance: shared prompt prefixes map one physical
+/// copy — deterministic hit/saved counters, fewer executed prefill
+/// tokens than the cache-off run, and identical output tokens.
+/// `prompt(l)` prompts share prefixes by construction (prompt(32) is a
+/// prefix of prompt(40)), so serving them sequentially pins the exact
+/// chunk-cache arithmetic.
+#[test]
+fn prefix_cache_reuses_shared_prompt_pages() {
+    let lens = [32usize, 40, 48, 64];
+    let run = |prefix_cache: bool| -> (Vec<Vec<i32>>, ServerStats) {
+        let server = ServerHandle::spawn_engine(
+            EngineSpec::Sim(paged_spec(8, 32, prefix_cache)),
+            copts(1, 4),
+        );
+        let out = collect(&server, &lens); // sequential: deterministic cache order
+        (out, server.shutdown().unwrap())
+    };
+    let (rows_on, on) = run(true);
+    let (rows_off, off) = run(false);
+    assert_eq!(rows_on, rows_off, "prefix reuse must not change emitted tokens");
+
+    // Chunk arithmetic at page_size 8, full chunks over min(len, eff):
+    // len 32 -> 4 chunks (all miss, inserted), len 40 -> 5 (4 hit),
+    // len 48 -> 6 (5 hit), len 64 -> 8 (6 hit).
+    assert_eq!(on.pool.prefix_lookups, 4 + 5 + 6 + 8);
+    assert_eq!(on.pool.prefix_hits, 4 + 5 + 6);
+    assert_eq!(on.pool.prefill_tokens_saved, (4 + 5 + 6) * 8);
+    assert!((on.pool.hit_rate() - 15.0 / 23.0).abs() < 1e-12);
+    // The saving is real compute skipped, token for token.
+    assert_eq!(
+        on.executed_tokens + on.pool.prefill_tokens_saved as usize,
+        off.executed_tokens,
+        "saved tokens must equal the executed-token reduction"
+    );
+    // The cache-off baseline did none of this.
+    assert_eq!(off.pool.prefix_lookups, 0);
+    assert_eq!(off.pool.prefill_tokens_saved, 0);
+    // Ample pool: reuse came from sharing, not from eviction churn.
+    assert_eq!(on.pool.evictions, 0);
+    assert_eq!(on.pool.alloc_stalls, 0);
+    for stats in [&on, &off] {
+        assert_eq!(stats.requests, lens.len());
+        assert_eq!(stats.failed, 0);
+    }
+}
+
+/// §L9 pool pressure: a pool too small to hold every tenant's cached
+/// prefix evicts LRU chunks instead of failing — every request still
+/// completes, and the eviction counter reports the churn.
+#[test]
+fn prefix_cache_evicts_under_pool_pressure() {
+    // Distinct 32-token prompts (no shared prefixes): each admission
+    // needs 5 pages and caches 4 chunks, so a 10-page pool must evict
+    // stale chunks from the third request on.
+    let salted = |salt: usize| -> Vec<i32> {
+        (0..32).map(|i| ((i * 7 + salt * 13) % 197) as i32 + 2).collect()
+    };
+    let server =
+        ServerHandle::spawn_engine(EngineSpec::Sim(paged_spec(8, 10, true)), copts(1, 2));
+    let n = 6;
+    for salt in 0..n {
+        let resp = server.infer_response(salted(salt)).expect("terminal response");
+        assert!(resp.failure.is_none(), "pressure must evict, not fail: {:?}", resp.failure);
+        assert_eq!(*resp.tokens.last().unwrap(), EOS);
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, n);
+    assert_eq!(stats.failed, 0);
+    assert!(stats.pool.evictions > 0, "the pool had to evict cached chunks");
+    assert!(stats.pool.peak_used <= 10, "never exceeds physical capacity");
+    assert_eq!(stats.pool.prefix_hits, 0, "distinct prompts: churn, not reuse");
+    assert!(stats.pool.prefix_lookups > 0);
 }
