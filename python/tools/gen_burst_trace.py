@@ -1,0 +1,129 @@
+"""Deterministic generator for the checked-in §L10 load traces
+(`rust/benches/traces/*.trace`).
+
+Trace format (one request per line, '#' lines are comments):
+
+    #altup-trace v1 seed=0x51C0DE
+    # arrival_us tenant prompt_len
+    0 0 12
+    410 2 57
+    ...
+
+`arrival_us` is the request's arrival offset from trace start in
+microseconds (non-decreasing), `tenant` indexes the serving config's
+tenant spec (0 = free, 1 = silver, 2 = gold for the default spec), and
+`prompt_len` is the prompt length in tokens. Prompt *tokens* are not
+stored: both loaders (the Rust bench and the Python twin) materialize
+them from one shared SplitMix64 stream seeded by the header `seed` —
+`prompt_len` draws of `rng.range(1, vocab)` per line, in file order —
+so the hash-sampled generation lengths match bit-for-bit across the
+two harnesses and the file stays small.
+
+The arrival process is deliberately hostile (§L10 chaos harness):
+
+- **bursty**: on/off square wave — `--burst-ms` of Poisson arrivals at
+  `--peak-qps`, then `--idle-ms` of silence — so queue depth whipsaws
+  instead of settling into a steady state;
+- **heavy-tailed lengths**: 70% short [4, 32), 25% medium [32, 96),
+  5% long [96, 128) — the long tail holds slots hostage;
+- **tenant-skewed**: 55% free / 30% silver / 15% gold, so the lowest
+  class dominates offered load and is the natural shed target.
+
+Everything derives from `--seed` (SplitMix64 mirror of
+`rust/src/util/rng.rs`); regenerating with the same flags reproduces
+the file byte-for-byte. The checked-in `burst_mix.trace` was produced
+with the defaults below; its peak rate is tuned to >= 2x the measured
+cont-x2 capacity of the twin on the reference container, so replaying
+it *is* an overload test, not a throughput test.
+
+Usage: python3 python/tools/gen_burst_trace.py \
+           [--out rust/benches/traces/burst_mix.trace] [--requests 1800]
+           [--peak-qps 4000] [--burst-ms 250] [--idle-ms 150]
+           [--seed 0x51C0DE]
+"""
+
+import argparse
+import math
+
+MASK = (1 << 64) - 1
+
+
+class Rng:
+    """SplitMix64, matching rust/src/util/rng.rs bit-for-bit."""
+
+    def __init__(self, seed):
+        self.state = (seed + 0x9E3779B97F4A7C15) & MASK
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return (z ^ (z >> 31)) & MASK
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def range(self, lo, hi):
+        return lo + ((self.next_u64() * (hi - lo)) >> 64)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--out", default="rust/benches/traces/burst_mix.trace")
+    ap.add_argument("--requests", type=int, default=1800)
+    ap.add_argument("--peak-qps", type=float, default=4000.0)
+    ap.add_argument("--burst-ms", type=float, default=250.0)
+    ap.add_argument("--idle-ms", type=float, default=150.0)
+    ap.add_argument("--seed", type=lambda s: int(s, 0), default=0x51C0DE)
+    args = ap.parse_args()
+
+    rng = Rng(args.seed)
+    lines = []
+    t_us = 0.0
+    burst_us = args.burst_ms * 1e3
+    idle_us = args.idle_ms * 1e3
+    phase_start = 0.0
+    counts = [0, 0, 0]
+    for _ in range(args.requests):
+        # Poisson arrivals at peak rate during the ON phase; crossing
+        # the phase boundary jumps the clock over the OFF gap.
+        t_us += -math.log(1.0 - rng.next_f64()) / args.peak_qps * 1e6
+        while t_us - phase_start >= burst_us:
+            phase_start += burst_us + idle_us
+            t_us += idle_us
+        u = rng.next_f64()
+        tenant = 0 if u < 0.55 else (1 if u < 0.85 else 2)
+        counts[tenant] += 1
+        v = rng.next_f64()
+        if v < 0.70:
+            length = rng.range(4, 32)
+        elif v < 0.95:
+            length = rng.range(32, 96)
+        else:
+            length = rng.range(96, 128)
+        lines.append(f"{int(t_us)} {tenant} {length}")
+
+    span_s = int(lines[-1].split()[0]) / 1e6 if lines else 0.0
+    mean_qps = args.requests / span_s if span_s > 0 else 0.0
+    with open(args.out, "w") as f:
+        f.write(f"#altup-trace v1 seed={args.seed:#x}\n")
+        f.write(
+            f"# {args.requests} requests over {span_s:.3f} s "
+            f"(mean {mean_qps:.0f} req/s offered; peak {args.peak_qps:.0f}), "
+            f"bursts {args.burst_ms:.0f} ms on / {args.idle_ms:.0f} ms off\n"
+        )
+        f.write(
+            f"# tenants: 0=free x{counts[0]}, 1=silver x{counts[1]}, "
+            f"2=gold x{counts[2]}; lengths 70% [4,32) / 25% [32,96) / 5% [96,128)\n"
+        )
+        f.write("# arrival_us tenant prompt_len\n")
+        f.write("\n".join(lines) + "\n")
+    print(
+        f"wrote {args.out}: {args.requests} requests, span {span_s:.3f} s, "
+        f"mean offered {mean_qps:.0f} req/s, tenants {counts}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,19 @@ budget, terminal responses for every request):
   bar >= 1.5x mean occupancy) and a tenant-skewed shared-prefix
   workload (bar >= 40% prefill tokens saved at equal output tokens).
 
+- §L10 multi-tenant QoS: a mirror of ``coordinator::admission`` (per-
+  tenant token buckets, an overload door for the lowest class, an
+  SLO-aware wait gate over an EWMA'd service rate, capped priority
+  queues with preemption, weighted priority release, and the 300/500 ms
+  pressure/calm degradation ladder driving autoscale spawns) sits in
+  front of the router when tenants are configured; the checked-in
+  burst trace (``rust/benches/traces/burst_mix.trace``) is replayed
+  open-loop — same header-seeded token stream as the Rust loader —
+  through a paged cont x2 fleet with a mid-burst replica kill plus
+  page-pool pressure, against a clean QoS run and a QoS-off chaos run.
+  Bars: every request terminal, gold p95 within SLO under chaos,
+  >= 80% of sheds on the lowest class, chaos goodput >= 0.8x clean.
+
 This lets the serving-policy numbers (continuous vs batch QPS, p95,
 early-exit savings, occupancy, degraded-mode QPS) be measured on
 machines without a cargo toolchain or a PJRT backend. The Rust bench is
@@ -84,6 +97,29 @@ PREFIX_TENANTS = 4
 PREFIX_HEADER = 96                # 6 full pages of shared system prompt
 PREFIX_POOL_PAGES = 128
 PREFIX_SLOTS = 8
+# §L10 trace-driven QoS + chaos A/B shape (mirrors the bench defaults:
+# tenant spec string, paged cont x2 fleet, replica 1 killed mid-burst
+# with 25% of the page pool withheld, autoscale budget 2).
+QOS_TRACE = "rust/benches/traces/burst_mix.trace"
+QOS_TENANT_SPEC = "free:0:1:250:40:0;silver:1:2:0:0:4000;gold:2:4:0:0:1500"
+QOS_TENANTS = [
+    {"name": "free", "priority": 0, "weight": 1, "rate": 250.0, "burst": 40.0,
+     "slo_ms": 0},
+    {"name": "silver", "priority": 1, "weight": 2, "rate": 0.0, "burst": 0.0,
+     "slo_ms": 4000},
+    {"name": "gold", "priority": 2, "weight": 4, "rate": 0.0, "burst": 0.0,
+     "slo_ms": 1500},
+]
+QOS_POOL_PAGES = 96
+QOS_POOL_RESERVE = 0.25
+QOS_KILL_CALL = 600
+QOS_QUEUE_CAP = 1024
+QOS_AUTOSCALE = 2
+# Overload-ladder clock (admission.rs constants).
+OVERLOAD_HOLD_S = 0.3
+CALM_HOLD_S = 0.5
+RATE_WINDOW_S = 0.25
+RATE_ALPHA = 0.3
 
 
 class Rng:
@@ -279,6 +315,205 @@ def shared_prefix_prompts(n, enc_len, vocab, seed, tenants, header_len):
     return out
 
 
+def load_trace(path, vocab, limit=0):
+    """Mirror of the bench's §L10 trace loader: parse an
+    ``#altup-trace v1`` file and materialize prompt tokens from the
+    header seed — one shared SplitMix64 stream, ``prompt_len`` draws
+    per line in file order, bit-identical to the Rust side. Returns
+    (arrival_us, tenant, length, row_hash, chunk_hashes) tuples."""
+    rows = []
+    seed = 0x51C0DE
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            if line.startswith("#"):
+                for tok in line[1:].split():
+                    if tok.startswith("seed="):
+                        v = tok[5:]
+                        v = v[2:] if v.startswith("0x") else v
+                        seed = int(v, 16)
+                continue
+            a, t, l = line.split()[:3]
+            rows.append((int(a), int(t), int(l)))
+    if limit:
+        rows = rows[:limit]
+    rng = Rng(seed)
+    out = []
+    for a, t, l in rows:
+        tokens = [rng.range(1, vocab) for _ in range(l)]
+        out.append((a, t, l, sim_row_hash(tokens), chunk_hashes(tokens, PAGE_SIZE)))
+    return out
+
+
+class Admission:
+    """Mirror of ``rust/src/coordinator/admission.rs``: the request
+    path is token bucket -> overload door (lowest class, level >= 1) ->
+    SLO wait gate (EWMA'd service rate) -> capped priority queues with
+    preemption of the newest lower-class entry; release drains the
+    highest priority class first, weighted within a class by accrued
+    served/weight cost. The ladder escalates one rung per 300 ms of
+    sustained backlog above 2x the fleet's capacity hint and
+    de-escalates per 500 ms of calm. Request records are the router's
+    10-tuples; index 8 is the tenant, 9 the deadline (stamped here from
+    the tenant SLO)."""
+
+    def __init__(self, tenants, cap, now):
+        self.tenants = tenants
+        self.buckets = [
+            t["burst"] if t["burst"] > 0 else max(t["rate"], 1.0) for t in tenants
+        ]
+        self.queues = [deque() for _ in tenants]
+        self.served = [0] * len(tenants)
+        self.queued = 0
+        self.cap = max(cap, 1)
+        self.lowest = min(t["priority"] for t in tenants)
+        self.last_refill = now
+        self.service_rate = 0.0
+        self.window_start = now
+        self.window_released = 0
+        self.level = 0
+        self.pressure_since = None
+        self.calm_since = None
+
+    def _refill(self, now):
+        dt = max(now - self.last_refill, 0.0)
+        self.last_refill = now
+        for i, t in enumerate(self.tenants):
+            if t["rate"] > 0:
+                cap = t["burst"] if t["burst"] > 0 else max(t["rate"], 1.0)
+                self.buckets[i] = min(self.buckets[i] + t["rate"] * dt, cap)
+
+    def wait_s(self, depth):
+        return depth / self.service_rate if self.service_rate > 0 else 0.0
+
+    def offer(self, rec, now, downstream):
+        """Returns ("queued", None) if the record was parked, or
+        ("shed", record) — the record to answer with a failure (the
+        arrival itself, or a preempted lower-class victim while the
+        arrival takes its queue slot)."""
+        self._refill(now)
+        t = min(rec[8], len(self.tenants) - 1)
+        spec = self.tenants[t]
+        prio = spec["priority"]
+        if rec[9] is None and spec["slo_ms"] > 0:
+            rec = rec[:9] + (rec[0] + spec["slo_ms"] / 1e3,)
+        if spec["rate"] > 0:
+            if self.buckets[t] < 1.0:
+                return "shed", rec
+            self.buckets[t] -= 1.0
+        depth = self.queued + downstream
+        if self.level >= 1 and prio == self.lowest and depth > self.cap // 4:
+            return "shed", rec
+        if rec[9] is not None and now + self.wait_s(depth) >= rec[9]:
+            return "shed", rec
+        if self.queued >= self.cap:
+            victim = self._preempt_below(prio)
+            if victim is not None:
+                self.queues[t].append((rec, prio))
+                self.queued += 1
+                return "shed", victim
+            return "shed", rec
+        self.queues[t].append((rec, prio))
+        self.queued += 1
+        return "queued", None
+
+    def _preempt_below(self, prio):
+        best = None  # (victim priority, tenant index)
+        for i, q in enumerate(self.queues):
+            if q and q[-1][1] < prio and (best is None or q[-1][1] < best[0]):
+                best = (q[-1][1], i)
+        if best is None:
+            return None
+        rec, _ = self.queues[best[1]].pop()
+        self.queued -= 1
+        return rec
+
+    def release(self, room):
+        out = []
+        for _ in range(room):
+            t = self._next_tenant()
+            if t is None:
+                break
+            rec, _ = self.queues[t].popleft()
+            self.queued -= 1
+            self.served[t] += 1
+            self.window_released += 1
+            out.append(rec)
+        return out
+
+    def _next_tenant(self):
+        top = None
+        for i, t in enumerate(self.tenants):
+            if self.queues[i]:
+                top = t["priority"] if top is None else max(top, t["priority"])
+        if top is None:
+            return None
+        best = None  # (cost, tenant index)
+        for i, t in enumerate(self.tenants):
+            if self.queues[i] and t["priority"] == top:
+                cost = self.served[i] / max(t["weight"], 1)
+                if best is None or cost < best[0]:
+                    best = (cost, i)
+        return best[1]
+
+    def take_expired(self, now):
+        out = []
+        for i, q in enumerate(self.queues):
+            keep = deque()
+            for rec, p in q:
+                if rec[9] is not None and now >= rec[9]:
+                    self.queued -= 1
+                    out.append(rec)
+                else:
+                    keep.append((rec, p))
+            self.queues[i] = keep
+        return out
+
+    def tick(self, now, downstream, capacity_hint):
+        """Overload-controller heartbeat; returns ladder actions. The
+        γ rung is a no-op here (the QoS runs are plain-decode), so
+        levels >= 2 ask for autoscale like the Rust controller does
+        when no draft model is configured."""
+        actions = []
+        if now - self.window_start >= RATE_WINDOW_S:
+            dt = max(now - self.window_start, 1e-9)
+            if self.window_released > 0 or self.service_rate > 0:
+                inst = self.window_released / dt
+                self.service_rate = (
+                    self.service_rate * (1 - RATE_ALPHA) + inst * RATE_ALPHA
+                    if self.service_rate > 0
+                    else inst
+                )
+            self.window_start = now
+            self.window_released = 0
+        depth = self.queued + downstream
+        hint = max(capacity_hint, 1)
+        if depth > 2 * hint:
+            self.calm_since = None
+            if self.pressure_since is None:
+                self.pressure_since = now
+            if now - self.pressure_since >= OVERLOAD_HOLD_S:
+                self.pressure_since = now
+                self.level += 1
+                if self.level >= 2:
+                    actions.append("scale_up")
+        elif depth < hint // 2 + 1:
+            self.pressure_since = None
+            if self.calm_since is None:
+                self.calm_since = now
+            if now - self.calm_since >= CALM_HOLD_S:
+                self.calm_since = now
+                if self.level == 0:
+                    actions.append("scale_down")
+                self.level = max(self.level - 1, 0)
+        else:
+            self.pressure_since = None
+            self.calm_since = None
+        return actions
+
+
 def nsleep(ns):
     """Precise simulated-device wait. This container's kernel rounds
     every ``time.sleep`` up to ~1 ms, which would tax the continuous
@@ -343,7 +578,15 @@ class Stats:
         self.alloc_stalls = 0
         self.latency_ms = []
         self.token_ms = []
+        # §L10 TenantMeter mirror: tenant index -> outcome counters.
+        self.tenant_meters = {}
         self.lock = threading.Lock()
+
+    def tmeter(self, tenant):
+        return self.tenant_meters.setdefault(tenant, {
+            "requests": 0, "failed": 0, "sheds": 0, "slo_hits": 0,
+            "tokens_generated": 0, "lat_ms": [],
+        })
 
     def waste_ratio(self):
         if self.executed_tokens == 0:
@@ -374,34 +617,59 @@ class Stats:
     def prefix_hit_rate(self):
         return self.prefix_hits / self.prefix_lookups if self.prefix_lookups else 0.0
 
-    def note_response(self, latency_s, generated, saved, prompt):
+    def note_response(self, latency_s, generated, saved, prompt,
+                      tenant=0, slo_ms=0):
         self.latency_ms.append(latency_s * 1e3)
         self.token_ms.append(latency_s * 1e3 / max(generated, 1))
         self.tokens_generated += generated
         self.tokens_saved += saved
         self.prompt_tokens += prompt
         self.requests += 1
+        m = self.tmeter(tenant)
+        m["requests"] += 1
+        m["tokens_generated"] += generated
+        m["lat_ms"].append(latency_s * 1e3)
+        # slo_ms 0 = no SLO: every completion counts as goodput
+        # (TenantMeter::note_done).
+        if slo_ms == 0 or latency_s * 1e3 <= slo_ms:
+            m["slo_hits"] += 1
 
-    def note_failure(self):
+    def note_failure(self, tenant=0, shed=False):
         self.failed += 1
+        m = self.tmeter(tenant)
+        m["failed"] += 1
+        if shed:
+            self.sheds += 1
+            m["sheds"] += 1
 
 
 def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
-               dec_len=DEC_LEN, gamma=0, paged=None):
+               dec_len=DEC_LEN, gamma=0, paged=None, trace_mode=False,
+               tenants=None, autoscale=0, queue_cap=0):
     """One serving configuration. Request record (mirrors the Rust
     Admitted/ledger entry): (t0, admitted, reply, length, gen_len,
-    attempts, row_hash, chunk_hashes). ``fault`` mirrors FaultSpec:
-    {"kill_replica": id, "kill_after_calls": n} — the matching replica
-    raises InjectedKill on that engine call; the router requeues its
+    attempts, row_hash, chunk_hashes, tenant, deadline). ``fault``
+    mirrors FaultSpec: {"kill_replica": id, "kill_after_calls": n,
+    "extra_kills": [(id, n), ...]} — a matching replica raises
+    InjectedKill on that engine call; the router requeues its
     in-flight requests (bounded by MAX_RETRIES) and respawns a
     replacement (bounded by RESTARTS). ``gamma`` > 0 mirrors §L8
     speculative decoding on the continuous path (draft burst + fused
     verify per iteration, hash-sampled acceptance). ``paged`` mirrors
     SimPoolSpec: {"page_size": p, "pool_pages": n, "prefix_cache":
     bool} switches the continuous replicas onto the §L9 paged path
-    (per-replica page pool, pool-aware admission, prefix reuse). Every
-    request gets a terminal reply: True (tokens) or False (explicit
-    failure)."""
+    (per-replica page pool, pool-aware admission, prefix reuse).
+
+    §L10: ``trace_mode`` treats ``workload`` as `load_trace` output and
+    replays it open-loop (a feeder thread paces arrivals to the trace
+    offsets — offered load comes from the trace, not from service
+    capacity). ``tenants`` (QOS_TENANTS-shaped dicts) puts an
+    `Admission` mirror in front of the router's bucket groups; SLOs
+    become hard deadlines (stamped at admission, enforced at the
+    router, the replica admit pass, and live slots — mirrors the Rust
+    §L7 deadline machinery). ``autoscale`` is the ladder's replica
+    budget; ``queue_cap`` the admission queue cap. Every request gets
+    a terminal reply: True (tokens) or False (explicit failure)."""
     req_q = queue.Queue()
     # Bounded job queue = backpressure, mirroring the Rust router: every
     # ship is a try-put; a full queue parks the router briefly so the
@@ -411,7 +679,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
     stats = Stats()
     if paged is not None and continuous:
         stats.pool_capacity = paged["pool_pages"]
-    n_clients = CLIENTS
+    n_clients = 1 if trace_mode else CLIENTS
     slots_n = slots if slots > 0 else BATCH_SIZE
     state = {
         "live": set(range(max(replicas, 1))),
@@ -421,16 +689,23 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
         "stops_sent": False,
     }
 
+    kills = []
+    if fault:
+        kills = [(fault["kill_replica"], max(fault["kill_after_calls"], 1))]
+        kills += [(r, max(c, 1)) for r, c in fault.get("extra_kills", [])]
+
     def make_bump(rid, calls_box):
         def bump():
             calls_box[0] += 1
-            if (
-                fault
-                and fault["kill_replica"] == rid
-                and calls_box[0] >= max(fault["kill_after_calls"], 1)
-            ):
-                raise InjectedKill(f"replica {rid} killed at engine call {calls_box[0]}")
+            for kr, kc in kills:
+                if kr == rid and calls_box[0] >= kc:
+                    raise InjectedKill(
+                        f"replica {rid} killed at engine call {calls_box[0]}"
+                    )
         return bump
+
+    def slo_of(t):
+        return tenants[t]["slo_ms"] if tenants and t < len(tenants) else 0
 
     def replica_batch(rid):
         # Run-to-completion decode_step loop: full-geometry prefill plus
@@ -457,7 +732,10 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                 stats.total_fill += len(group)
                 stats.executed_tokens += BATCH_SIZE * bucket
                 for req in group:
-                    stats.note_response(now - req[0], req[4], 0, min(req[3], bucket))
+                    stats.note_response(
+                        now - req[0], req[4], 0, min(req[3], bucket),
+                        req[8], slo_of(req[8]),
+                    )
             for req in group:
                 req[2].put(True)
 
@@ -531,18 +809,27 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                         and free
                         and len(admitting) < BATCH_SIZE
                     ):
+                        req = pending[0][1]
+                        # §L10 satellite: shed already-expired work at
+                        # the front of the admit queue BEFORE any pool
+                        # probes or page reservations are spent on it.
+                        if req[9] is not None and time.monotonic() > req[9]:
+                            pending.popleft()
+                            with stats.lock:
+                                stats.note_failure(req[8], shed=True)
+                            req[2].put(False)
+                            continue
                         if pool is None:
                             admitting.append(pending.popleft())
                             ids.append(free.popleft())
                             continue
-                        req = pending[0][1]
                         total = pages_for(bucket + dec_len, pool.page_size)
                         if total > pool.capacity:
                             # PoolExhausted: could never fit, even with
-                            # every page free — explicit terminal shed.
+                            # every page free — explicit terminal failure.
                             pending.popleft()
                             with stats.lock:
-                                stats.note_failure()
+                                stats.note_failure(req[8])
                             req[2].put(False)
                             continue
                         chunks = req[7] if cache is not None else []
@@ -588,6 +875,20 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                     for (b, req), sid in zip(admitting, ids):
                         active[sid] = [req, 0, b]
                     admitting = []
+                # §L10: a slot whose deadline expired mid-decode retires
+                # immediately as a shed instead of holding geometry to
+                # emit tokens nobody will wait for.
+                if tenants is not None:
+                    now = time.monotonic()
+                    for s, act in enumerate(active):
+                        if act is None:
+                            continue
+                        req = act[0]
+                        if req[9] is not None and now > req[9]:
+                            active[s] = None
+                            with stats.lock:
+                                stats.note_failure(req[8], shed=True)
+                            req[2].put(False)
                 n_live = sum(1 for a in active if a is not None)
                 if n_live == 0:
                     if router_gone and not pending:
@@ -636,7 +937,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                             with stats.lock:
                                 stats.note_response(
                                     now - req[0], new_total, dec_len - new_total,
-                                    min(req[3], bucket),
+                                    min(req[3], bucket), req[8], slo_of(req[8]),
                                 )
                             req[2].put(True)
                 else:
@@ -657,7 +958,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                             with stats.lock:
                                 stats.note_response(
                                     now - req[0], emitted, dec_len - emitted,
-                                    min(req[3], bucket),
+                                    min(req[3], bucket), req[8], slo_of(req[8]),
                                 )
                             req[2].put(True)
         except InjectedKill:
@@ -678,14 +979,14 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
             attempts = req[5] + 1
             if state["stops_sent"] or attempts > MAX_RETRIES:
                 with stats.lock:
-                    stats.note_failure()
+                    stats.note_failure(req[8])
                 req[2].put(False)
             else:
                 with stats.lock:
                     stats.retries += 1
                 groups.setdefault(bucket, []).append(
                     (req[0], time.monotonic(), req[2], req[3], req[4], attempts,
-                     req[6], req[7])
+                     req[6], req[7], req[8], req[9])
                 )
         if not state["stops_sent"] and state["restarts_left"] > 0:
             state["restarts_left"] -= 1
@@ -705,6 +1006,9 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
         groups = {}
         live_clients = n_clients
         disconnected = False
+        # §L10: admission front-end + the ladder's replica budget.
+        qos = Admission(tenants, queue_cap, time.monotonic()) if tenants else None
+        autoscale_left = [autoscale]
         while True:
             # Supervision pass.
             while True:
@@ -718,8 +1022,14 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                 for bucket in list(groups):
                     for req in groups.pop(bucket):
                         with stats.lock:
-                            stats.note_failure()
+                            stats.note_failure(req[8])
                         req[2].put(False)
+                # Parked admission records have no fleet left either.
+                if qos is not None:
+                    for rec in qos.release(qos.queued):
+                        with stats.lock:
+                            stats.note_failure(rec[8])
+                        rec[2].put(False)
                 # Strand recovery: jobs already queued when the last
                 # replica died have no consumer left — fail them
                 # explicitly instead of leaving their clients blocked.
@@ -732,10 +1042,59 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                         continue
                     for req in job[1]:
                         with stats.lock:
-                            stats.note_failure()
+                            stats.note_failure(req[8])
                         req[2].put(False)
                 if disconnected:
                     return
+            # §L10 QoS pass (mirrors Router::route): expire parked and
+            # grouped work, tick the overload ladder and execute its
+            # actions, then release by weighted priority into groups.
+            if qos is not None and not dead:
+                nowq = time.monotonic()
+                for rec in qos.take_expired(nowq):
+                    with stats.lock:
+                        stats.note_failure(rec[8], shed=True)
+                    rec[2].put(False)
+                for bucket in list(groups):
+                    kept = []
+                    for req in groups[bucket]:
+                        if req[9] is not None and nowq > req[9]:
+                            with stats.lock:
+                                stats.note_failure(req[8], shed=True)
+                            req[2].put(False)
+                        else:
+                            kept.append(req)
+                    if kept:
+                        groups[bucket] = kept
+                    else:
+                        del groups[bucket]
+                downstream = sum(len(g) for g in groups.values())
+                hint = max(len(state["live"]), 1) * BATCH_SIZE
+                for action in qos.tick(nowq, downstream, hint):
+                    if (
+                        action == "scale_up"
+                        and autoscale_left[0] > 0
+                        and not state["stops_sent"]
+                    ):
+                        autoscale_left[0] -= 1
+                        nid = state["next_id"]
+                        state["next_id"] += 1
+                        state["live"].add(nid)
+                        t = threading.Thread(
+                            target=target, args=(nid,), name=f"replica-{nid}"
+                        )
+                        state["threads"].append(t)
+                        t.start()
+                    # scale_down is a no-op here: ladder replicas simply
+                    # exit at drain (the Rust router parks one with a
+                    # SCALE_DOWN sentinel job instead).
+                room = max(len(state["live"]) * BATCH_SIZE * 2 - downstream, 0)
+                if disconnected:
+                    room = qos.queued  # drain: flush everything parked
+                for rec in qos.release(room):
+                    rec = rec[:1] + (time.monotonic(),) + rec[2:]
+                    bucket = bucket_for(rec[3], ENC_LEN) if bucketed else ENC_LEN
+                    groups.setdefault(bucket, []).append(rec)
             # Flush pass (mirrors the Rust router): every ship is a
             # try-put, but full groups ship first — fullest bucket
             # first, chunked to batch size — and while a full group
@@ -774,7 +1133,8 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
             # Drain: stop admissions, flush, close the queue, collect
             # replica exits.
             if disconnected:
-                if not groups and not state["stops_sent"]:
+                if not groups and (qos is None or qos.queued == 0) \
+                        and not state["stops_sent"]:
                     for _ in range(len(state["live"])):
                         job_q.put(None)
                     state["stops_sent"] = True
@@ -810,11 +1170,21 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                 except queue.Empty:
                     pass
             if msg is not None:
-                t0, reply, length, gen_len, h, chunks = msg
-                bucket = bucket_for(length, ENC_LEN) if bucketed else ENC_LEN
-                groups.setdefault(bucket, []).append(
-                    (t0, time.monotonic(), reply, length, gen_len, 0, h, chunks)
-                )
+                t0, reply, length, gen_len, h, chunks, tenant = msg
+                rec = (t0, time.monotonic(), reply, length, gen_len, 0, h,
+                       chunks, tenant, None)
+                if qos is None:
+                    bucket = bucket_for(length, ENC_LEN) if bucketed else ENC_LEN
+                    groups.setdefault(bucket, []).append(rec)
+                else:
+                    verdict, out = qos.offer(
+                        rec, time.monotonic(),
+                        sum(len(g) for g in groups.values()),
+                    )
+                    if verdict == "shed":
+                        with stats.lock:
+                            stats.note_failure(out[8], shed=True)
+                        out[2].put(False)
 
     def client(c):
         for length, h, chunks in workload[c::n_clients]:
@@ -822,10 +1192,31 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
             # gen_len derives from the row hash at THIS run's dec_len,
             # mirroring the sim engine's per-run EOS sampling.
             req_q.put(
-                (time.monotonic(), reply, length, sim_gen_len(h, dec_len), h, chunks)
+                (time.monotonic(), reply, length, sim_gen_len(h, dec_len), h,
+                 chunks, 0)
             )
             reply.get()  # terminal: True (tokens) or False (failure)
         req_q.put(None)  # this client is done
+
+    def feeder():
+        # §L10 open-loop trace replay: arrivals are paced by the trace,
+        # not by service completions, so overload genuinely builds queue
+        # depth instead of self-throttling like the closed-loop clients.
+        replies = []
+        start = time.monotonic()
+        for at_us, tenant, length, h, chunks in workload:
+            delay = start + at_us / 1e6 - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            reply = queue.SimpleQueue()
+            replies.append(reply)
+            req_q.put(
+                (time.monotonic(), reply, length, sim_gen_len(h, dec_len), h,
+                 chunks, tenant)
+            )
+        req_q.put(None)
+        for reply in replies:
+            reply.get()  # every trace request still gets a terminal
 
     router_thread = threading.Thread(target=router, name="router")
     state["threads"] = [
@@ -833,10 +1224,13 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
         for i in range(max(replicas, 1))
     ]
     t_start = time.monotonic()
-    client_threads = [
-        threading.Thread(target=client, args=(c,), name=f"client-{c}")
-        for c in range(n_clients)
-    ]
+    if trace_mode:
+        client_threads = [threading.Thread(target=feeder, name="feeder")]
+    else:
+        client_threads = [
+            threading.Thread(target=client, args=(c,), name=f"client-{c}")
+            for c in range(n_clients)
+        ]
     for t in [router_thread] + state["threads"] + client_threads:
         t.start()
     for t in client_threads:
@@ -851,8 +1245,14 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
     assert stats.requests + stats.failed == len(workload), (
         stats.requests, stats.failed, len(workload),
     )
-    if fault is None:
+    if fault is None and tenants is None:
         assert stats.failed == 0, stats.failed
+    # §L10: per-tenant meters partition the global counters exactly.
+    if tenants is not None:
+        per = sum(
+            m["requests"] + m["failed"] for m in stats.tenant_meters.values()
+        )
+        assert per == stats.requests + stats.failed, (per, stats.requests)
     return qps, stats
 
 
@@ -1045,6 +1445,104 @@ def main():
         f"over {sstats.verify_steps} verify steps"
     )
 
+    # §L10 QoS + chaos A/B on the checked-in burst trace. Offered load
+    # is ~4x the cont-x2 capacity just measured, so replay IS overload:
+    #   clean  — QoS on, no chaos: the baseline the goodput bar is
+    #            measured against.
+    #   chaos  — QoS on, replica 1 killed at engine call QOS_KILL_CALL
+    #            with 25% of the page pool withheld: admission sheds the
+    #            free class at the door, the ladder autoscales, gold
+    #            stays inside its 1.5 s SLO.
+    #   off    — same chaos, QoS off (FIFO admission): gold waits behind
+    #            the free flood and its p95 collapses — the contrast the
+    #            layer exists for.
+    trace = load_trace(QOS_TRACE, VOCAB)
+    trace_span = max(trace[-1][0] / 1e6, 1e-9)
+    qos_paged = {"page_size": 16, "pool_pages": QOS_POOL_PAGES,
+                 "prefix_cache": False}
+    chaos_paged = dict(qos_paged)
+    chaos_paged["pool_pages"] = max(
+        int(QOS_POOL_PAGES * (1 - QOS_POOL_RESERVE)),
+        pages_for(ENC_LEN + DEC_LEN, qos_paged["page_size"]),
+    )
+    chaos = {"kill_replica": 1, "kill_after_calls": QOS_KILL_CALL}
+    hq, hstats = run_config(trace, 2, bucketed=True, continuous=True,
+                            paged=qos_paged, trace_mode=True,
+                            tenants=QOS_TENANTS, autoscale=QOS_AUTOSCALE,
+                            queue_cap=QOS_QUEUE_CAP)
+    aq, astats = run_config(trace, 2, bucketed=True, continuous=True,
+                            paged=chaos_paged, fault=chaos, trace_mode=True,
+                            tenants=QOS_TENANTS, autoscale=QOS_AUTOSCALE,
+                            queue_cap=QOS_QUEUE_CAP)
+    oq, ostats = run_config(trace, 2, bucketed=True, continuous=True,
+                            paged=chaos_paged, fault=chaos, trace_mode=True)
+
+    def tmeter_of(stats_, t):
+        return stats_.tenant_meters.get(t, stats_.tmeter(t))
+
+    def goodput(stats_):
+        return sum(m["slo_hits"] for m in stats_.tenant_meters.values())
+
+    def tenant_rows(stats_):
+        out = []
+        for i in sorted(stats_.tenant_meters):
+            m = stats_.tenant_meters[i]
+            name = QOS_TENANTS[i]["name"] if i < len(QOS_TENANTS) else f"tenant-{i}"
+            done = m["requests"] + m["failed"]
+            out.append({
+                "tenant": name,
+                "requests": m["requests"],
+                "failed": m["failed"],
+                "sheds": m["sheds"],
+                "slo_hits": m["slo_hits"],
+                "goodput_ratio": round(m["slo_hits"] / done if done else 0.0, 4),
+                "p50_ms": round(percentile(m["lat_ms"], 50), 2),
+                "p95_ms": round(percentile(m["lat_ms"], 95), 2),
+                "tokens_generated": m["tokens_generated"],
+            })
+        return out
+
+    def qos_run_row(qps_, stats_):
+        return {
+            "qps": round(qps_, 1),
+            "requests": stats_.requests,
+            "failed": stats_.failed,
+            "sheds": stats_.sheds,
+            "retries": stats_.retries,
+            "restarts": stats_.restarts,
+            "terminal": stats_.requests + stats_.failed,
+            "goodput": goodput(stats_),
+            "tenants": tenant_rows(stats_),
+        }
+
+    gold_slo = QOS_TENANTS[2]["slo_ms"]
+    a_gold = tmeter_of(astats, 2)
+    gold_p95 = percentile(a_gold["lat_ms"], 95)
+    free_shed_share = tmeter_of(astats, 0)["sheds"] / max(astats.sheds, 1)
+    gp_ratio = goodput(astats) / max(goodput(hstats), 1)
+    o_gold = tmeter_of(ostats, 2)
+    o_gold_p95 = percentile(o_gold["lat_ms"], 95)
+    cq2 = by[("cont", 2)][0]
+    print(
+        f"qos chaos (kill r1@call {QOS_KILL_CALL}, pool -{QOS_POOL_RESERVE*100:.0f}%): "
+        f"{astats.sheds} sheds ({free_shed_share * 100:.1f}% free class), "
+        f"gold p95 {gold_p95:.0f} ms (slo {gold_slo}), "
+        f"goodput {goodput(astats)} = {gp_ratio:.2f}x clean, "
+        f"{astats.restarts} restarts, "
+        f"terminal {astats.requests + astats.failed}/{len(trace)}"
+    )
+    print(
+        f"qos off, same chaos: gold p95 {o_gold_p95:.0f} ms, "
+        f"{ostats.sheds} sheds — every class queues FIFO behind the flood"
+    )
+    # §L10 acceptance bars (mirror the bench's ensure! block).
+    assert gold_p95 <= gold_slo, (gold_p95, gold_slo)
+    assert free_shed_share >= 0.80, free_shed_share
+    assert gp_ratio >= 0.8, gp_ratio
+    assert o_gold["sheds"] > 0 or o_gold_p95 > gold_slo, (
+        o_gold["sheds"], o_gold_p95,
+    )
+
     doc = {
         "bench": "server_throughput",
         "engine": "sim",
@@ -1115,6 +1613,28 @@ def main():
             "prefix_hit_rate": round(fs.prefix_hit_rate(), 4),
             "qps_ratio": round(fq / uq if uq else 0.0, 3),
             "tokens_match": True,
+        },
+        "qos": {
+            "trace": QOS_TRACE,
+            "trace_requests": len(trace),
+            "trace_span_s": round(trace_span, 3),
+            "offered_qps": round(len(trace) / trace_span, 1),
+            "capacity_qps_cont_x2": round(cq2, 1),
+            "tenant_spec": QOS_TENANT_SPEC,
+            "chaos_schedule": {
+                "kill_replica": 1,
+                "kill_at_call": QOS_KILL_CALL,
+                "pool_reserve": QOS_POOL_RESERVE,
+            },
+            "bars_enforced": True,
+            "qos_clean": qos_run_row(hq, hstats),
+            "qos_chaos": qos_run_row(aq, astats),
+            "qos_off_chaos": qos_run_row(oq, ostats),
+            "goodput_ratio_chaos_over_clean": round(gp_ratio, 3),
+            "free_shed_share": round(free_shed_share, 4),
+            "gold_slo_ms": gold_slo,
+            "gold_p95_ms_qos": round(gold_p95, 2),
+            "gold_p95_ms_qos_off": round(o_gold_p95, 2),
         },
         "producer": "python/tools/server_throughput_twin.py "
                     "(threaded twin; re-run `cargo bench --bench server_throughput -- --json` "

@@ -21,6 +21,16 @@
 //!   --paged <0|1>      run the §L9 paged-pool A/Bs and their
 //!                      acceptance bars (default 1; 0 skips — small CI
 //!                      smokes use this, the bars assume a loaded run)
+//!   --qos <0|1>        run the §L10 trace-driven multi-tenant QoS +
+//!                      chaos A/B (default 1; 0 skips)
+//!   --trace <path>     §L10 load trace to replay (default: the
+//!                      checked-in benches/traces/burst_mix.trace)
+//!   --trace-limit <n>  replay only the first n trace requests (0 =
+//!                      all). A truncated replay keeps the invariant
+//!                      checks but skips the overload acceptance bars
+//!                      (they assume the full 2x-capacity burst).
+//!   --qos-kill-call <c> §L10 chaos schedule: engine call at which
+//!                      replica 1 is killed mid-burst (default 600)
 //!
 //! Besides the L5/L6 grid, the bench runs a §L7 **degraded-mode A/B**
 //! (sim engine only): `cont x4` healthy vs `cont x4` with one replica
@@ -51,6 +61,18 @@
 //! workloads and bars are mirrored draw-for-draw by the Python twin
 //! (`python/tools/server_throughput_twin.py`).
 //!
+//! §L10 adds a **trace-driven multi-tenant QoS + chaos A/B** (sim
+//! engine only): the checked-in burst trace (bursty arrivals at >= 2x
+//! serving capacity, heavy-tailed prompt lengths, 55/30/15 tenant
+//! skew) is replayed open-loop through a paged cont-x2 fleet three
+//! ways — QoS on (token buckets + weighted priority queues + overload
+//! ladder + autoscale budget) with a `ChaosSpec` killing replica 1
+//! mid-burst under page-pool pressure, QoS on without chaos, and QoS
+//! off with the same chaos. Bars on the full trace: every request
+//! terminal, gold p95 within its SLO despite the kill, >= 80% of
+//! sheds absorbed by the lowest class, chaos goodput >= 0.8x of the
+//! clean QoS run — while the QoS-off arm shows gold collapsing.
+//!
 //! Backend: when `make artifacts` has run AND a real PJRT backend is
 //! linked, the bench serves the micro-altup artifact; otherwise it
 //! falls back to the deterministic sim engine (prefill cost
@@ -64,8 +86,10 @@
 //! runs the §Perf L6 slot scheduler (prefill/decode_token split, EOS
 //! early-exit, iteration-level admission) at the same replica count.
 
+use altup::coordinator::admission::{parse_tenant_spec, TenantSpec};
 use altup::coordinator::server::{
-    EngineSpec, Request, ServerHandle, ServerOptions, ServerStats, SimPoolSpec, SimSpec,
+    ChaosSpec, EngineSpec, Request, ServerHandle, ServerOptions, ServerStats, SimPoolSpec,
+    SimSpec,
 };
 use altup::runtime::artifact::load_named;
 use altup::runtime::pages::pages_for;
@@ -162,6 +186,162 @@ fn drive(
     Ok((prompts.len() as f64 / wall.max(1e-9), stats))
 }
 
+/// One parsed §L10 trace request: arrival offset, tenant index, and
+/// the materialized prompt.
+struct TraceEvent {
+    arrival_us: u64,
+    tenant: usize,
+    prompt: Vec<i32>,
+}
+
+/// Parse a `#altup-trace v1` file (see `python/tools/gen_burst_trace.py`
+/// for the format) and materialize prompt tokens from the header seed:
+/// one shared SplitMix64 stream, `prompt_len` draws of `range(1,
+/// vocab)` per line in file order — bit-identical to the Python twin's
+/// loader, so the hash-sampled generation lengths match across the two
+/// harnesses. `limit` truncates the request list *before* tokens are
+/// drawn; sequential draws make the truncated stream a prefix of the
+/// full one.
+fn load_trace(path: &str, vocab: usize, limit: usize) -> anyhow::Result<Vec<TraceEvent>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("trace {path}: {e}"))?;
+    let mut seed = 0x51C0DEu64;
+    let mut rows: Vec<(u64, usize, usize)> = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            for tok in rest.split_whitespace() {
+                if let Some(v) = tok.strip_prefix("seed=") {
+                    let v = v.strip_prefix("0x").unwrap_or(v);
+                    seed = u64::from_str_radix(v, 16)
+                        .map_err(|e| anyhow::anyhow!("trace {path} seed: {e}"))?;
+                }
+            }
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(a), Some(t), Some(l)) = (it.next(), it.next(), it.next()) else {
+            anyhow::bail!("trace {path} line {line:?}: want `arrival_us tenant prompt_len`");
+        };
+        rows.push((a.parse()?, t.parse()?, l.parse()?));
+    }
+    if limit > 0 {
+        rows.truncate(limit);
+    }
+    let mut rng = Rng::new(seed);
+    Ok(rows
+        .into_iter()
+        .map(|(arrival_us, tenant, len)| TraceEvent {
+            arrival_us,
+            tenant,
+            prompt: (0..len).map(|_| rng.range(1, vocab) as i32).collect(),
+        })
+        .collect())
+}
+
+/// Open-loop trace replay: a feeder thread submits each request at its
+/// trace arrival offset (tagged with its tenant and the tenant's
+/// configured priority) instead of the closed-loop client pool `drive`
+/// uses — offered load is set by the trace, not by service capacity,
+/// which is what makes overload reachable. Latency/SLO accounting is
+/// read server-side from the per-tenant meters.
+fn drive_trace(
+    engine: &EngineSpec,
+    opts: ServerOptions,
+    trace: &[TraceEvent],
+    tenants: &[TenantSpec],
+) -> anyhow::Result<(f64, ServerStats)> {
+    let server = ServerHandle::spawn_engine(engine.clone(), opts);
+    let sender = server.sender.clone();
+    let events: Vec<(u64, usize, u8, Vec<i32>)> = trace
+        .iter()
+        .map(|e| {
+            let prio = tenants.get(e.tenant).map_or(e.tenant as u8, |t| t.priority);
+            (e.arrival_us, e.tenant, prio, e.prompt.clone())
+        })
+        .collect();
+    let t0 = Instant::now();
+    let feeder = std::thread::spawn(move || {
+        let mut replies = Vec::with_capacity(events.len());
+        for (at_us, tenant, prio, prompt) in events {
+            let due = t0 + Duration::from_micros(at_us);
+            if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                std::thread::sleep(wait);
+            }
+            let (tx, rx) = std::sync::mpsc::channel();
+            if sender.send(Request::for_tenant(prompt, tx, tenant, prio)).is_err() {
+                break;
+            }
+            replies.push(rx);
+        }
+        replies
+    });
+    let replies = feeder.join().expect("trace feeder panicked");
+    anyhow::ensure!(
+        replies.len() == trace.len(),
+        "router disconnected mid-trace: {}/{} submitted",
+        replies.len(),
+        trace.len()
+    );
+    for rx in &replies {
+        rx.recv().map_err(|_| anyhow::anyhow!("reply channel dropped"))?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown()?;
+    anyhow::ensure!(
+        stats.requests + stats.failed == trace.len(),
+        "terminal accounting: {} ok + {} failed != {} submitted",
+        stats.requests,
+        stats.failed,
+        trace.len()
+    );
+    // Per-tenant meters must partition the global outcome counts —
+    // the invariant the CI chaos smoke re-checks from the JSON.
+    let (tok, tfail): (u64, u64) = stats
+        .tenants
+        .iter()
+        .fold((0, 0), |(a, b), m| (a + m.requests, b + m.failed));
+    anyhow::ensure!(
+        tok as usize == stats.requests && tfail as usize == stats.failed,
+        "tenant meters disagree with totals: {tok}+{tfail} vs {}+{}",
+        stats.requests,
+        stats.failed
+    );
+    Ok((trace.len() as f64 / wall.max(1e-9), stats))
+}
+
+/// Per-tenant outcome rows for the §L10 JSON section. `tenants` names
+/// the rows; the QoS-off arm reuses the same spec so the two arms are
+/// comparable tenant-by-tenant.
+fn tenant_rows(stats: &ServerStats, tenants: &[TenantSpec]) -> Json {
+    Json::Arr(
+        stats
+            .tenants
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.active())
+            .map(|(i, m)| {
+                let name =
+                    tenants.get(i).map_or_else(|| format!("tenant-{i}"), |t| t.name.clone());
+                Json::obj(vec![
+                    ("tenant", Json::str(&name)),
+                    ("requests", Json::num(m.requests as f64)),
+                    ("failed", Json::num(m.failed as f64)),
+                    ("sheds", Json::num(m.sheds as f64)),
+                    ("slo_hits", Json::num(m.slo_hits as f64)),
+                    ("goodput", Json::num(m.goodput_ratio())),
+                    ("p50_ms", Json::num(m.p50_ms())),
+                    ("p95_ms", Json::num(m.p95_ms())),
+                    ("tokens_generated", Json::num(m.tokens_generated as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 fn row_json(mode: &str, replicas: usize, qps: f64, stats: &ServerStats) -> Json {
     let mut fields = vec![
         ("mode", Json::str(mode)),
@@ -211,6 +391,13 @@ fn main() -> anyhow::Result<()> {
     let spec_gamma = args.usize_or("spec-gamma", 4);
     let spec_dec_len = args.usize_or("spec-dec-len", 128);
     let paged_ab = args.usize_or("paged", 1) != 0;
+    let qos_ab = args.usize_or("qos", 1) != 0;
+    let trace_path = args.str_or(
+        "trace",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/benches/traces/burst_mix.trace"),
+    );
+    let trace_limit = args.usize_or("trace-limit", 0);
+    let qos_kill_call = args.u64_or("qos-kill-call", 600);
     let json_out = args.has("json") || args.has("json-path");
 
     // Pick the backend: real artifact when present and executable,
@@ -550,6 +737,154 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // §L10 trace-driven multi-tenant QoS + chaos A/B (sim engine only —
+    // ChaosSpec composes onto SimSpec). The checked-in burst trace is
+    // replayed open-loop through a paged cont x2 fleet three ways:
+    //   A: QoS on + chaos (replica 1 killed mid-burst, 25% of the page
+    //      pool withheld), autoscale budget 2;
+    //   B: QoS on, healthy — the goodput baseline;
+    //   C: QoS off (passthrough admission), same chaos — the contrast
+    //      arm where gold has no priority and no SLO protection.
+    let mut qos_row: Option<Json> = None;
+    if let (EngineSpec::Sim(base), true) = (&engine, qos_ab) {
+        let trace = load_trace(&trace_path, vocab, trace_limit)?;
+        anyhow::ensure!(!trace.is_empty(), "empty trace {trace_path}");
+        let full = trace_limit == 0;
+        let span_s =
+            trace.last().map_or(0.0, |e| e.arrival_us as f64 / 1e6).max(1e-9);
+        let offered_qps = trace.len() as f64 / span_s;
+        let tenant_spec = "free:0:1:250:40:0;silver:1:2:0:0:4000;gold:2:4:0:0:1500";
+        let tenants = parse_tenant_spec(tenant_spec);
+        const GOLD: usize = 2;
+        const FREE: usize = 0;
+        let gold_slo_ms = tenants[GOLD].slo_ms as f64;
+        // The QoS arms serve paged (the §L9 path is the production
+        // one); pool sized to stay tight but serviceable at 8 slots.
+        let mut qspec = base.clone();
+        qspec.pool =
+            Some(SimPoolSpec { page_size: 16, pool_pages: 96, prefix_cache: false });
+        let chaos = ChaosSpec {
+            kills: vec![(1, qos_kill_call)],
+            pool_reserve: 0.25,
+            ..ChaosSpec::default()
+        };
+        let mut cspec = qspec.clone();
+        chaos.apply(&mut cspec);
+        let qos_opts = || {
+            let mut o = opts(2, true, true);
+            o.queue_cap = 1024;
+            o.tenants = tenants.clone();
+            o.autoscale = 2;
+            o
+        };
+        let (hq, hstats) =
+            drive_trace(&EngineSpec::Sim(qspec.clone()), qos_opts(), &trace, &tenants)?;
+        let (aq, astats) =
+            drive_trace(&EngineSpec::Sim(cspec.clone()), qos_opts(), &trace, &tenants)?;
+        let off_opts = {
+            let mut o = opts(2, true, true);
+            o.queue_cap = 1024;
+            o
+        };
+        let (oq, ostats) =
+            drive_trace(&EngineSpec::Sim(cspec.clone()), off_opts, &trace, &tenants)?;
+
+        let goodput = |s: &ServerStats| s.tenants.iter().map(|m| m.slo_hits).sum::<u64>();
+        let meter = |s: &ServerStats, t: usize| s.tenants.get(t).cloned().unwrap_or_default();
+        let (hgood, agood) = (goodput(&hstats), goodput(&astats));
+        let goodput_ratio = if hgood > 0 { agood as f64 / hgood as f64 } else { 0.0 };
+        let free_shed_share = if astats.sheds > 0 {
+            meter(&astats, FREE).sheds as f64 / astats.sheds as f64
+        } else {
+            1.0
+        };
+        let (a_gold, o_gold) = (meter(&astats, GOLD), meter(&ostats, GOLD));
+        let (cq2, _) = find("cont", 2);
+        println!(
+            "qos trace ({} reqs over {span_s:.2}s, offered {offered_qps:.0}/s = \
+             {:.1}x cont x2 capacity): clean {hq:.1} qps goodput {hgood}, \
+             chaos {aq:.1} qps goodput {agood} ({goodput_ratio:.2}x), \
+             qos-off chaos {oq:.1} qps",
+            trace.len(),
+            if cq2 > 0.0 { offered_qps / cq2 } else { 0.0 },
+        );
+        println!(
+            "qos chaos arm: level sheds {} ({:.0}% from free), gold p95 \
+             {:.1} ms (slo {gold_slo_ms:.0}) goodput {:.2} | qos-off gold p95 \
+             {:.1} ms, {} gold sheds, goodput {:.2}",
+            astats.sheds,
+            free_shed_share * 100.0,
+            a_gold.p95_ms(),
+            a_gold.goodput_ratio(),
+            o_gold.p95_ms(),
+            o_gold.sheds,
+            o_gold.goodput_ratio(),
+        );
+        if full {
+            // The §L10 acceptance bars — meaningful only when the whole
+            // 2x-capacity burst is replayed (a truncated smoke still
+            // runs the invariant ensures inside drive_trace).
+            anyhow::ensure!(
+                a_gold.p95_ms() <= gold_slo_ms,
+                "gold p95 {:.1} ms blew its {gold_slo_ms:.0} ms SLO under chaos",
+                a_gold.p95_ms()
+            );
+            anyhow::ensure!(
+                free_shed_share >= 0.80,
+                "only {:.0}% of sheds landed on the lowest class",
+                free_shed_share * 100.0
+            );
+            anyhow::ensure!(
+                goodput_ratio >= 0.80,
+                "chaos goodput {agood} < 0.8x of clean {hgood}"
+            );
+            anyhow::ensure!(
+                o_gold.sheds > 0 || o_gold.p95_ms() > gold_slo_ms,
+                "qos-off contrast arm unexpectedly protected gold \
+                 (p95 {:.1} ms, 0 sheds)",
+                o_gold.p95_ms()
+            );
+        }
+        let run_row = |qps: f64, s: &ServerStats| {
+            Json::obj(vec![
+                ("qps", Json::num(qps)),
+                ("requests", Json::num(s.requests as f64)),
+                ("failed", Json::num(s.failed as f64)),
+                ("sheds", Json::num(s.sheds as f64)),
+                ("retries", Json::num(s.retries as f64)),
+                ("restarts", Json::num(s.restarts as f64)),
+                ("terminal", Json::num((s.requests + s.failed) as f64)),
+                ("goodput", Json::num(goodput(s) as f64)),
+                ("tenants", tenant_rows(s, &tenants)),
+            ])
+        };
+        qos_row = Some(Json::obj(vec![
+            ("trace", Json::str(&trace_path)),
+            ("trace_requests", Json::num(trace.len() as f64)),
+            ("trace_span_s", Json::num(span_s)),
+            ("offered_qps", Json::num(offered_qps)),
+            ("capacity_qps_cont_x2", Json::num(cq2)),
+            ("tenant_spec", Json::str(tenant_spec)),
+            (
+                "chaos_schedule",
+                Json::obj(vec![
+                    ("kill_replica", Json::num(1.0)),
+                    ("kill_at_call", Json::num(qos_kill_call as f64)),
+                    ("pool_reserve", Json::num(0.25)),
+                ]),
+            ),
+            ("bars_enforced", Json::Bool(full)),
+            ("qos_clean", run_row(hq, &hstats)),
+            ("qos_chaos", run_row(aq, &astats)),
+            ("qos_off_chaos", run_row(oq, &ostats)),
+            ("goodput_ratio_chaos_over_clean", Json::num(goodput_ratio)),
+            ("free_shed_share", Json::num(free_shed_share)),
+            ("gold_slo_ms", Json::num(gold_slo_ms)),
+            ("gold_p95_ms_qos", Json::num(a_gold.p95_ms())),
+            ("gold_p95_ms_qos_off", Json::num(o_gold.p95_ms())),
+        ]));
+    }
+
     let (bq1, bp1) = find("batch", 1);
     let (cq1, cp1) = find("cont", 1);
     let (cq4, _) = find("cont", 4);
@@ -616,6 +951,9 @@ fn main() -> anyhow::Result<()> {
         }
         if let Some(p) = prefix_row {
             top.push(("prefix", p));
+        }
+        if let Some(q) = qos_row {
+            top.push(("qos", q));
         }
         let doc = Json::obj(top);
         std::fs::write(&path, format!("{doc}\n"))?;

@@ -1,0 +1,657 @@
+//! §L10 multi-tenant QoS admission control: the layer between
+//! `ServerHandle::infer` and the router's bucket groups.
+//!
+//! The L7 supervisor survives crashed replicas and the L9 pool survives
+//! memory pressure, but nothing before this layer protected the server
+//! from *traffic itself* — a burst from one tenant starved everyone
+//! equally, and overload was absorbed as unbounded queueing latency
+//! instead of deliberate shedding. This module adds three defenses, in
+//! the order a request meets them:
+//!
+//! ```text
+//!   infer() ──► token bucket ──► SLO wait gate ──► weighted priority
+//!              (per tenant,     (estimated queue   queues (drained
+//!               QueueFull)       wait vs deadline,  high priority
+//!                                WouldMissDeadline) first, weighted
+//!                                                   within a class)
+//!                                      │
+//!                 overload controller ─┴─► degradation ladder:
+//!                 (sustained backlog)      1. shed lowest class early
+//!                                          2. shrink spec-decode γ
+//!                                          3. autoscale replicas
+//! ```
+//!
+//! Everything here is policy — the router (`coordinator::server::route`)
+//! stays the only place that touches replicas, job queues, or reply
+//! channels. The controller hands back verdicts (`offer`), release
+//! batches (`release`), and ladder actions (`tick`); with no tenants
+//! configured every call is a passthrough and the serving path is
+//! behaviorally identical to pre-L10.
+
+use crate::coordinator::server::{FailReason, Request};
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One tenant's QoS contract. Configured programmatically via
+/// `ServerOptions::tenants` or via `ALTUP_TENANT_SPEC`
+/// (`name:priority:weight:rate:burst:slo_ms` per tenant, `;`-separated;
+/// malformed fields fall back field-wise to the defaults below, in the
+/// same degrade-don't-crash spirit as `util::env`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Scheduling class: higher drains first and sheds last.
+    pub priority: u8,
+    /// Share of service within a priority class (weighted dequeue).
+    pub weight: u32,
+    /// Token-bucket refill in requests/second; 0 = unlimited.
+    pub rate: f64,
+    /// Token-bucket capacity (burst allowance); 0 = `rate.max(1)`.
+    pub burst: f64,
+    /// Latency SLO in ms. Admission stamps `t0 + slo_ms` as the
+    /// request deadline (unless the client set its own), so the whole
+    /// L7 deadline machinery enforces it downstream; 0 = none.
+    pub slo_ms: u64,
+}
+
+impl Default for TenantSpec {
+    fn default() -> Self {
+        TenantSpec {
+            name: "default".to_string(),
+            priority: 1,
+            weight: 1,
+            rate: 0.0,
+            burst: 0.0,
+            slo_ms: 0,
+        }
+    }
+}
+
+impl TenantSpec {
+    fn effective_burst(&self) -> f64 {
+        if self.burst > 0.0 {
+            self.burst
+        } else {
+            self.rate.max(1.0)
+        }
+    }
+}
+
+/// Parse one `name:priority:weight:rate:burst:slo_ms` clause. Missing
+/// or malformed fields keep their defaults — a typo'd field degrades
+/// that field, not the tenant.
+fn parse_tenant(clause: &str) -> Option<TenantSpec> {
+    let mut fields = clause.split(':');
+    let name = fields.next()?.trim();
+    if name.is_empty() {
+        return None;
+    }
+    let mut t = TenantSpec { name: name.to_string(), ..TenantSpec::default() };
+    if let Some(p) = fields.next().and_then(|f| f.trim().parse::<u8>().ok()) {
+        t.priority = p;
+    }
+    if let Some(w) = fields.next().and_then(|f| f.trim().parse::<u32>().ok()) {
+        t.weight = w.max(1);
+    }
+    if let Some(r) = fields.next().and_then(|f| f.trim().parse::<f64>().ok()) {
+        if r.is_finite() && r >= 0.0 {
+            t.rate = r;
+        }
+    }
+    if let Some(b) = fields.next().and_then(|f| f.trim().parse::<f64>().ok()) {
+        if b.is_finite() && b >= 0.0 {
+            t.burst = b;
+        }
+    }
+    if let Some(s) = fields.next().and_then(|f| f.trim().parse::<u64>().ok()) {
+        t.slo_ms = s;
+    }
+    Some(t)
+}
+
+/// Parse an `ALTUP_TENANT_SPEC`-style string into tenant specs.
+/// Unparsable clauses are dropped; an empty result means "QoS off".
+pub fn parse_tenant_spec(raw: &str) -> Vec<TenantSpec> {
+    raw.split(';').filter_map(parse_tenant).collect()
+}
+
+/// The serving-default tenant set: `ALTUP_TENANT_SPEC` (unset or
+/// unparsable = no tenants = QoS passthrough).
+pub fn tenants_from_env() -> Vec<TenantSpec> {
+    std::env::var("ALTUP_TENANT_SPEC")
+        .map(|raw| parse_tenant_spec(&raw))
+        .unwrap_or_default()
+}
+
+/// Degradation-ladder actions the router executes on the controller's
+/// behalf (the controller itself never touches replicas or channels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QosAction {
+    /// Cap the speculative draft length γ (`usize::MAX` restores).
+    GammaCap(usize),
+    /// Spawn one autoscale replica (router enforces the budget).
+    ScaleUp,
+    /// Retire one autoscale replica.
+    ScaleDown,
+}
+
+/// Sustained backlog above the high watermark for this long escalates
+/// the overload ladder one level.
+const OVERLOAD_HOLD: Duration = Duration::from_millis(300);
+/// Sustained calm below the low watermark for this long de-escalates.
+const CALM_HOLD: Duration = Duration::from_millis(500);
+/// Service-rate estimator update window.
+const RATE_WINDOW: Duration = Duration::from_millis(250);
+/// EWMA smoothing for the service-rate estimate.
+const RATE_ALPHA: f64 = 0.3;
+
+/// A request parked in a tenant queue (deadline already stamped).
+struct Queued {
+    req: Request,
+    priority: u8,
+}
+
+/// Per-tenant admission state + the overload controller. Owned by the
+/// router thread; nothing here is shared or locked.
+pub struct AdmissionController {
+    tenants: Vec<TenantSpec>,
+    /// Token-bucket fill per tenant (requests).
+    buckets: Vec<f64>,
+    queues: Vec<VecDeque<Queued>>,
+    /// Weighted-dequeue bookkeeping: served[t]/weight[t] is the cost a
+    /// tenant has accrued; the cheapest non-empty tenant in the top
+    /// priority class drains next.
+    served: Vec<u64>,
+    /// Total parked requests across all tenant queues.
+    queued: usize,
+    /// Cap on `queued`; beyond it arrivals preempt or self-shed.
+    cap: usize,
+    /// The lowest configured priority — the class overload sheds first.
+    lowest_priority: u8,
+    base_gamma: usize,
+    last_refill: Instant,
+    // SLO wait estimator: EWMA of the release (== downstream service)
+    // rate, measured over RATE_WINDOW. 0.0 until the first window with
+    // releases completes — the gate stays open while cold.
+    service_rate: f64,
+    window_start: Instant,
+    window_released: u64,
+    // Overload ladder.
+    level: u8,
+    pressure_since: Option<Instant>,
+    calm_since: Option<Instant>,
+}
+
+impl AdmissionController {
+    pub fn new(tenants: Vec<TenantSpec>, cap: usize, base_gamma: usize, now: Instant) -> Self {
+        let n = tenants.len();
+        let lowest = tenants.iter().map(|t| t.priority).min().unwrap_or(0);
+        AdmissionController {
+            buckets: tenants.iter().map(|t| t.effective_burst()).collect(),
+            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            served: vec![0; n],
+            queued: 0,
+            cap: cap.max(1),
+            lowest_priority: lowest,
+            base_gamma,
+            last_refill: now,
+            service_rate: 0.0,
+            window_start: now,
+            window_released: 0,
+            level: 0,
+            pressure_since: None,
+            calm_since: None,
+            tenants,
+        }
+    }
+
+    /// No tenants configured: every `offer` releases immediately and
+    /// the overload ladder never engages.
+    pub fn passthrough(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queued
+    }
+
+    /// Current overload-ladder level (0 = normal), for telemetry.
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Estimated queue wait for a request with `depth` requests ahead
+    /// of it, from the EWMA'd service rate. 0 while the estimator is
+    /// cold (no shedding on a guess the controller hasn't earned).
+    pub fn estimated_wait_ms(&self, depth: usize) -> f64 {
+        if self.service_rate <= 0.0 {
+            0.0
+        } else {
+            depth as f64 / self.service_rate * 1e3
+        }
+    }
+
+    fn refill(&mut self, now: Instant) {
+        let dt = now.saturating_duration_since(self.last_refill).as_secs_f64();
+        self.last_refill = now;
+        for (b, t) in self.buckets.iter_mut().zip(&self.tenants) {
+            if t.rate > 0.0 {
+                *b = (*b + t.rate * dt).min(t.effective_burst());
+            }
+        }
+    }
+
+    /// Admission verdict for one request. `downstream` is the work
+    /// already released but not yet dispatched (the router's bucket
+    /// groups) — it counts toward the wait a new arrival would see.
+    /// `Ok(Some(req))` releases the request straight through
+    /// (passthrough mode); `Ok(None)` parked it in a tenant queue;
+    /// `Err` is an explicit early shed the caller must answer.
+    #[allow(clippy::result_large_err)]
+    pub fn offer(
+        &mut self,
+        mut req: Request,
+        now: Instant,
+        downstream: usize,
+    ) -> Result<Option<Request>, (Request, FailReason)> {
+        if self.passthrough() {
+            return Ok(Some(req));
+        }
+        self.refill(now);
+        let t = req.tenant.min(self.tenants.len() - 1);
+        let spec = &self.tenants[t];
+        let priority = req.priority.min(spec.priority);
+        // SLO deadline stamp: from here on the L7 machinery (router
+        // sheds, replica sheds, slot retirement) enforces the SLO as a
+        // hard deadline; admission only adds the *early* sheds below.
+        if req.deadline.is_none() && spec.slo_ms > 0 {
+            req.deadline = Some(req.t0 + Duration::from_millis(spec.slo_ms));
+        }
+        // 1. Token bucket: the per-tenant rate limit. A tenant over
+        // its rate is the one tenant whose burst must not queue.
+        if spec.rate > 0.0 {
+            if self.buckets[t] < 1.0 {
+                return Err((req, FailReason::QueueFull));
+            }
+            self.buckets[t] -= 1.0;
+        }
+        // 2. Overload ladder level >= 1: the lowest class loses its
+        // right to queue behind a backlog — shed at the door while
+        // higher classes still park.
+        let depth = self.queued + downstream;
+        if self.level >= 1 && priority == self.lowest_priority && depth > self.cap / 4 {
+            return Err((req, FailReason::QueueFull));
+        }
+        // 3. SLO-aware early shed: if the estimated queue wait alone
+        // already overshoots the deadline, reject now instead of
+        // letting doomed work occupy a queue slot and a prefill.
+        if let Some(deadline) = req.deadline {
+            let wait = Duration::from_secs_f64(self.estimated_wait_ms(depth) / 1e3);
+            if now + wait >= deadline {
+                return Err((req, FailReason::WouldMissDeadline));
+            }
+        }
+        // 4. Queue cap with priority preemption: a full house sheds
+        // the newest lowest-priority entry below the arrival's class
+        // rather than the arrival itself. Either way the `Err` carries
+        // the one request the caller must answer with a failure.
+        if self.queued >= self.cap {
+            if let Some(victim) = self.preempt_below(priority) {
+                self.queues[t].push_back(Queued { req, priority });
+                self.queued += 1;
+                return Err((victim.req, FailReason::QueueFull));
+            }
+            return Err((req, FailReason::QueueFull));
+        }
+        self.queues[t].push_back(Queued { req, priority });
+        self.queued += 1;
+        Ok(None)
+    }
+
+    /// Drop the newest queued entry whose priority is strictly below
+    /// `priority` (lowest class first), making room for a higher-class
+    /// arrival.
+    fn preempt_below(&mut self, priority: u8) -> Option<Queued> {
+        let victim_t = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter_map(|(i, q)| q.back().map(|e| (i, e.priority)))
+            .filter(|&(_, p)| p < priority)
+            .min_by_key(|&(_, p)| p)
+            .map(|(i, _)| i)?;
+        let victim = self.queues[victim_t].pop_back()?;
+        self.queued -= 1;
+        Some(victim)
+    }
+
+    /// Release up to `room` parked requests in weighted-priority order:
+    /// strictly higher classes first; within a class, tenants drain
+    /// proportionally to their weights (cheapest accrued cost first).
+    pub fn release(&mut self, room: usize, out: &mut Vec<Request>) {
+        for _ in 0..room {
+            let Some(t) = self.next_tenant() else { break };
+            let Some(entry) = self.queues[t].pop_front() else { break };
+            self.queued -= 1;
+            self.served[t] += 1;
+            self.window_released += 1;
+            out.push(entry.req);
+        }
+    }
+
+    /// The tenant to drain next: highest non-empty priority class,
+    /// then lowest weighted cost (`served/weight`) within it, index as
+    /// the deterministic tie-break.
+    fn next_tenant(&self) -> Option<usize> {
+        let top = self
+            .tenants
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !self.queues[*i].is_empty())
+            .map(|(_, t)| t.priority)
+            .max()?;
+        self.tenants
+            .iter()
+            .enumerate()
+            .filter(|(i, t)| t.priority == top && !self.queues[*i].is_empty())
+            .min_by(|(i, a), (j, b)| {
+                let ca = self.served[*i] as f64 / a.weight.max(1) as f64;
+                let cb = self.served[*j] as f64 / b.weight.max(1) as f64;
+                ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal).then(i.cmp(j))
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Expire queued requests past their deadline (the queues live
+    /// outside the router's bucket groups, so `shed_expired` cannot
+    /// see them). Returns the expired requests for the caller to fail.
+    pub fn take_expired(&mut self, now: Instant, out: &mut Vec<Request>) {
+        for q in &mut self.queues {
+            let mut keep = VecDeque::with_capacity(q.len());
+            for e in q.drain(..) {
+                if e.req.expired(now) {
+                    self.queued -= 1;
+                    out.push(e.req);
+                } else {
+                    keep.push_back(e);
+                }
+            }
+            *q = keep;
+        }
+    }
+
+    /// Overload-controller heartbeat: update the service-rate EWMA and
+    /// walk the degradation ladder on sustained pressure/calm.
+    /// `downstream` as in `offer`; `capacity_hint` is one full wave of
+    /// work for the current fleet (live replicas x batch_size).
+    pub fn tick(
+        &mut self,
+        now: Instant,
+        downstream: usize,
+        capacity_hint: usize,
+        actions: &mut Vec<QosAction>,
+    ) {
+        if self.passthrough() {
+            return;
+        }
+        if now.saturating_duration_since(self.window_start) >= RATE_WINDOW {
+            let dt = now.saturating_duration_since(self.window_start).as_secs_f64();
+            if self.window_released > 0 || self.service_rate > 0.0 {
+                let inst = self.window_released as f64 / dt.max(1e-9);
+                self.service_rate = if self.service_rate > 0.0 {
+                    self.service_rate * (1.0 - RATE_ALPHA) + inst * RATE_ALPHA
+                } else {
+                    inst
+                };
+            }
+            self.window_start = now;
+            self.window_released = 0;
+        }
+        let depth = self.queued + downstream;
+        let hint = capacity_hint.max(1);
+        let pressured = depth > 2 * hint;
+        let calm = depth < hint / 2 + 1;
+        if pressured {
+            self.calm_since = None;
+            let since = *self.pressure_since.get_or_insert(now);
+            if now.saturating_duration_since(since) >= OVERLOAD_HOLD {
+                self.pressure_since = Some(now);
+                self.escalate(actions);
+            }
+        } else if calm {
+            self.pressure_since = None;
+            let since = *self.calm_since.get_or_insert(now);
+            if now.saturating_duration_since(since) >= CALM_HOLD {
+                self.calm_since = Some(now);
+                self.de_escalate(actions);
+            }
+        } else {
+            self.pressure_since = None;
+            self.calm_since = None;
+        }
+    }
+
+    /// The degradation ladder, one rung per sustained-pressure hold:
+    /// 1 sheds the lowest class early (enforced in `offer`), 2 halves
+    /// the speculative draft length, 3+ asks for an autoscale replica
+    /// (the router enforces the `ServerOptions::autoscale` budget).
+    fn escalate(&mut self, actions: &mut Vec<QosAction>) {
+        self.level = self.level.saturating_add(1);
+        match self.level {
+            1 => {}
+            2 if self.base_gamma > 1 => {
+                actions.push(QosAction::GammaCap((self.base_gamma / 2).max(1)));
+            }
+            _ => actions.push(QosAction::ScaleUp),
+        }
+    }
+
+    fn de_escalate(&mut self, actions: &mut Vec<QosAction>) {
+        match self.level {
+            0 => actions.push(QosAction::ScaleDown), // calm at level 0 retires extras
+            1 => {}
+            2 => {
+                if self.base_gamma > 1 {
+                    actions.push(QosAction::GammaCap(usize::MAX));
+                }
+            }
+            _ => actions.push(QosAction::ScaleDown),
+        }
+        self.level = self.level.saturating_sub(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn spec3() -> Vec<TenantSpec> {
+        parse_tenant_spec("free:0:1:100:10:0;silver:1:2:0:0:4000;gold:2:4:0:0:1500")
+    }
+
+    fn req(tenant: usize, priority: u8) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request::for_tenant(vec![1, 2, 3], tx, tenant, priority)
+    }
+
+    #[test]
+    fn tenant_spec_parsing_field_wise_defaults() {
+        let ts = spec3();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[0].name, "free");
+        assert_eq!(ts[0].priority, 0);
+        assert_eq!(ts[0].rate, 100.0);
+        assert_eq!(ts[0].burst, 10.0);
+        assert_eq!(ts[2].name, "gold");
+        assert_eq!(ts[2].priority, 2);
+        assert_eq!(ts[2].weight, 4);
+        assert_eq!(ts[2].slo_ms, 1500);
+        // Malformed fields degrade field-wise, not tenant-wise.
+        let t = parse_tenant_spec("odd:zz:-1:NaN:inf:huge");
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].priority, TenantSpec::default().priority);
+        assert_eq!(t[0].weight, TenantSpec::default().weight);
+        assert_eq!(t[0].rate, 0.0);
+        assert_eq!(t[0].burst, 0.0);
+        assert_eq!(t[0].slo_ms, 0);
+        // Short clauses keep trailing defaults; empty clauses drop.
+        assert_eq!(parse_tenant_spec("solo")[0].weight, 1);
+        assert!(parse_tenant_spec(";;").is_empty());
+        assert!(parse_tenant_spec("").is_empty());
+    }
+
+    #[test]
+    fn passthrough_releases_immediately() {
+        let now = Instant::now();
+        let mut ac = AdmissionController::new(Vec::new(), 8, 0, now);
+        assert!(ac.passthrough());
+        let r = ac.offer(req(0, 0), now, 0).expect("no shed");
+        assert!(r.is_some(), "passthrough releases straight through");
+        assert_eq!(ac.queued(), 0);
+    }
+
+    #[test]
+    fn token_bucket_rate_limits_per_tenant() {
+        let now = Instant::now();
+        let mut ac = AdmissionController::new(spec3(), 1024, 0, now);
+        // free has burst 10: the 11th immediate arrival is rate-shed.
+        for i in 0..10 {
+            assert!(ac.offer(req(0, 0), now, 0).is_ok(), "arrival {i} within burst");
+        }
+        let err = ac.offer(req(0, 0), now, 0).expect_err("over burst");
+        assert_eq!(err.1, FailReason::QueueFull);
+        // gold is unlimited: never rate-shed.
+        for _ in 0..64 {
+            assert!(ac.offer(req(2, 2), now, 0).is_ok());
+        }
+        // Refill at 100/s: 50 ms buys 5 more free tokens.
+        let later = now + Duration::from_millis(50);
+        for i in 0..5 {
+            assert!(ac.offer(req(0, 0), later, 0).is_ok(), "refilled token {i}");
+        }
+        assert!(ac.offer(req(0, 0), later, 0).is_err(), "refill is bounded");
+    }
+
+    #[test]
+    fn release_orders_by_priority_then_weight() {
+        let now = Instant::now();
+        // No rate limits so ordering is isolated.
+        let ts = parse_tenant_spec("free:0:1:0:0:0;silver:1:2:0:0:0;gold:2:4:0:0:0");
+        let mut ac = AdmissionController::new(ts, 1024, 0, now);
+        for _ in 0..3 {
+            ac.offer(req(0, 0), now, 0).unwrap();
+        }
+        for _ in 0..2 {
+            ac.offer(req(1, 1), now, 0).unwrap();
+            ac.offer(req(2, 2), now, 0).unwrap();
+        }
+        let mut out = Vec::new();
+        ac.release(16, &mut out);
+        let tenants: Vec<usize> = out.iter().map(|r| r.tenant).collect();
+        // Gold (priority 2) fully drains before silver, silver before
+        // free — weights only matter within one class.
+        assert_eq!(tenants, vec![2, 2, 1, 1, 0, 0, 0]);
+        assert_eq!(ac.queued(), 0);
+    }
+
+    #[test]
+    fn weighted_share_within_a_priority_class() {
+        let now = Instant::now();
+        let ts = parse_tenant_spec("a:1:1:0:0:0;b:1:3:0:0:0");
+        let mut ac = AdmissionController::new(ts, 1024, 0, now);
+        for _ in 0..20 {
+            ac.offer(req(0, 1), now, 0).unwrap();
+            ac.offer(req(1, 1), now, 0).unwrap();
+        }
+        let mut out = Vec::new();
+        ac.release(8, &mut out);
+        let b_share =
+            out.iter().filter(|r| r.tenant == 1).count() as f64 / out.len() as f64;
+        assert!(b_share >= 0.6, "weight-3 tenant under-served: {b_share}");
+    }
+
+    #[test]
+    fn queue_cap_preempts_lowest_class_first() {
+        let now = Instant::now();
+        let ts = parse_tenant_spec("free:0:1:0:0:0;gold:2:1:0:0:0");
+        let mut ac = AdmissionController::new(ts, 4, 0, now);
+        for _ in 0..4 {
+            ac.offer(req(0, 0), now, 0).unwrap();
+        }
+        // A gold arrival at a full house displaces a queued free
+        // request (the returned shed victim), not itself — the gold
+        // request is parked in the victim's place.
+        let (victim, reason) = ac.offer(req(2, 2), now, 0).expect_err("victim returned");
+        assert_eq!(reason, FailReason::QueueFull);
+        assert_eq!(victim.tenant, 0, "lowest class absorbed the shed");
+        assert_eq!(ac.queued(), 4);
+        // A free arrival at a full house of peers sheds itself.
+        let (victim, _) = ac.offer(req(0, 0), now, 0).expect_err("self-shed");
+        assert_eq!(victim.tenant, 0);
+    }
+
+    #[test]
+    fn slo_deadline_stamp_and_wait_gate() {
+        let now = Instant::now();
+        let mut ac = AdmissionController::new(spec3(), 1024, 0, now);
+        // Cold estimator: gold (1500 ms SLO) parks and gets a deadline.
+        ac.offer(req(2, 2), now, 0).unwrap();
+        let mut out = Vec::new();
+        ac.release(1, &mut out);
+        let d = out[0].deadline.expect("SLO stamped as deadline");
+        let slack = d.saturating_duration_since(out[0].t0);
+        assert!(slack >= Duration::from_millis(1400) && slack <= Duration::from_millis(1600));
+        // Warm the estimator to ~10 req/s, then a deep backlog makes
+        // the estimated wait overshoot the SLO: early shed.
+        ac.service_rate = 10.0;
+        assert!(ac.estimated_wait_ms(20) > 1900.0);
+        let (_, reason) = ac.offer(req(2, 2), now, 40).expect_err("doomed arrival");
+        assert_eq!(reason, FailReason::WouldMissDeadline);
+        // free has no SLO: the same backlog does not shed it.
+        assert!(ac.offer(req(0, 0), now, 40).is_ok());
+    }
+
+    #[test]
+    fn overload_ladder_escalates_and_recovers() {
+        let now = Instant::now();
+        let mut ac = AdmissionController::new(spec3(), 1024, 4, now);
+        let mut actions = Vec::new();
+        // Sustained pressure: depth 100 against a hint of 8.
+        let mut t = now;
+        for _ in 0..4 {
+            t += OVERLOAD_HOLD + Duration::from_millis(10);
+            ac.tick(t, 100, 8, &mut actions);
+        }
+        assert!(ac.level() >= 3, "ladder climbed: level {}", ac.level());
+        assert!(actions.contains(&QosAction::GammaCap(2)), "γ halved: {actions:?}");
+        assert!(actions.contains(&QosAction::ScaleUp), "autoscale asked: {actions:?}");
+        // Level >= 1 sheds lowest-class arrivals at the door once a
+        // backlog exists.
+        let (_, reason) = ac.offer(req(0, 0), t, 600).expect_err("early shed");
+        assert_eq!(reason, FailReason::QueueFull);
+        assert!(ac.offer(req(2, 2), t, 600).is_ok(), "gold still admits");
+        // Sustained calm walks back down and restores γ.
+        actions.clear();
+        for _ in 0..6 {
+            t += CALM_HOLD + Duration::from_millis(10);
+            ac.tick(t, 0, 8, &mut actions);
+        }
+        assert_eq!(ac.level(), 0);
+        assert!(actions.contains(&QosAction::GammaCap(usize::MAX)), "{actions:?}");
+        assert!(actions.contains(&QosAction::ScaleDown), "{actions:?}");
+    }
+
+    #[test]
+    fn take_expired_sheds_parked_requests() {
+        let now = Instant::now();
+        let mut ac = AdmissionController::new(spec3(), 1024, 0, now);
+        ac.offer(req(2, 2), now, 0).unwrap(); // gold: 1500 ms SLO
+        ac.offer(req(0, 0), now, 0).unwrap(); // free: no deadline
+        let mut expired = Vec::new();
+        ac.take_expired(now + Duration::from_secs(2), &mut expired);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].tenant, 2);
+        assert_eq!(ac.queued(), 1, "deadline-free request still parked");
+    }
+}

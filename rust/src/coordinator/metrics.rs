@@ -415,6 +415,74 @@ impl PoolMeter {
     }
 }
 
+/// §L10 per-tenant QoS counters: completions, sheds, SLO attainment,
+/// and a per-tenant latency histogram, indexed by `Request::tenant` in
+/// `ServerStats::tenants`. Mergeable across replicas like the other
+/// serving meters; names/SLOs live in the server config, not here.
+#[derive(Debug, Clone, Default)]
+pub struct TenantMeter {
+    /// Requests answered with tokens.
+    pub requests: u64,
+    /// Explicit terminal failures (all reasons).
+    pub failed: u64,
+    /// Subset of `failed` shed by QoS/deadline machinery
+    /// (`DeadlineExceeded`, `QueueFull`, `WouldMissDeadline`).
+    pub sheds: u64,
+    /// Completions within the tenant's SLO (== `requests` when the
+    /// tenant has no SLO) — the goodput numerator.
+    pub slo_hits: u64,
+    /// Decoded tokens delivered to this tenant.
+    pub tokens_generated: u64,
+    /// Per-request latency for this tenant's completions.
+    pub latency: LatencyHistogram,
+}
+
+impl TenantMeter {
+    /// Whether this tenant saw any traffic (summary/JSON gating).
+    pub fn active(&self) -> bool {
+        self.requests + self.failed > 0
+    }
+
+    /// Record one completion. `slo_ms` 0 means no SLO: every
+    /// completion counts as goodput.
+    pub fn note_done(&mut self, latency_ms: f64, tokens: usize, slo_ms: u64) {
+        self.requests += 1;
+        self.tokens_generated += tokens as u64;
+        self.latency.record(latency_ms);
+        if slo_ms == 0 || latency_ms <= slo_ms as f64 {
+            self.slo_hits += 1;
+        }
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.latency.percentile_ms(50.0)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.latency.percentile_ms(95.0)
+    }
+
+    /// Fraction of this tenant's terminal outcomes that met the SLO —
+    /// the per-tenant goodput ratio (sheds and failures count against).
+    pub fn goodput_ratio(&self) -> f64 {
+        let total = self.requests + self.failed;
+        if total == 0 {
+            0.0
+        } else {
+            self.slo_hits as f64 / total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &TenantMeter) {
+        self.requests += other.requests;
+        self.failed += other.failed;
+        self.sheds += other.sheds;
+        self.slo_hits += other.slo_hits;
+        self.tokens_generated += other.tokens_generated;
+        self.latency.merge(&other.latency);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

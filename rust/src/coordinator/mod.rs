@@ -1,6 +1,7 @@
 //! L3 coordinator: training loop, evaluation, experiment pipelines, and
 //! the batching eval server (DESIGN.md S12).
 
+pub mod admission;
 pub mod metrics;
 pub mod pipeline;
 pub mod server;

@@ -83,7 +83,10 @@
 //! generations), so supervision, retry, shedding, and drain are all
 //! testable and benchable without a PJRT backend.
 
-use crate::coordinator::metrics::{LatencyHistogram, OccupancyMeter, PoolMeter, SpecMeter};
+use crate::coordinator::admission::{self, AdmissionController, QosAction, TenantSpec};
+use crate::coordinator::metrics::{
+    LatencyHistogram, OccupancyMeter, PoolMeter, SpecMeter, TenantMeter,
+};
 use crate::coordinator::spec::{self, SpecDecoder};
 use crate::data::tokenizer::EOS;
 use crate::runtime::artifact::load_named;
@@ -94,7 +97,7 @@ use crate::util::env;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -108,6 +111,35 @@ pub const ROUTER_ID: usize = usize::MAX;
 /// replica crash events are noticed promptly even while admission is
 /// idle or mid-batch-window.
 const SUPERVISE_TICK: Duration = Duration::from_millis(25);
+
+/// §L10 scale-down sentinel: a `BatchJob` with this bucket and no
+/// requests asks whichever replica pops it to finish its in-flight
+/// work and exit cleanly (an autoscale retirement, not a crash — no
+/// respawn, no restart-budget spend).
+const SCALE_DOWN_BUCKET: usize = usize::MAX;
+
+fn scale_down_job() -> BatchJob {
+    BatchJob { bucket: SCALE_DOWN_BUCKET, requests: Vec::new() }
+}
+
+fn is_scale_down(job: &BatchJob) -> bool {
+    job.bucket == SCALE_DOWN_BUCKET && job.requests.is_empty()
+}
+
+/// §L10 cross-thread degradation levers, written by the router's
+/// overload controller and read by replicas between decode iterations.
+pub(crate) struct QosShared {
+    /// Ceiling on the speculative draft length γ; `usize::MAX` = no
+    /// cap (the overload controller halves γ under sustained pressure
+    /// and restores the cap when calm).
+    gamma_cap: AtomicUsize,
+}
+
+impl QosShared {
+    fn new() -> QosShared {
+        QosShared { gamma_cap: AtomicUsize::new(usize::MAX) }
+    }
+}
 
 pub struct Request {
     pub enc_tokens: Vec<i32>,
@@ -123,11 +155,19 @@ pub struct Request {
     /// `FailReason::DeadlineExceeded` response instead of occupying a
     /// batch row or decode slot.
     pub deadline: Option<Instant>,
+    /// §L10: index into `ServerOptions::tenants` for QoS accounting
+    /// (rate limit, priority queue, SLO). Out-of-range indices clamp to
+    /// the last configured tenant; 0 with no tenants configured.
+    pub tenant: usize,
+    /// §L10: scheduling class, clamped to the tenant's configured
+    /// priority at admission (a request can deprioritize itself, never
+    /// escalate past its tenant's class). Higher drains first.
+    pub priority: u8,
 }
 
 impl Request {
     pub fn new(enc_tokens: Vec<i32>, reply: mpsc::Sender<Response>) -> Request {
-        Request { enc_tokens, reply, t0: Instant::now(), deadline: None }
+        Request { enc_tokens, reply, t0: Instant::now(), deadline: None, tenant: 0, priority: 1 }
     }
 
     /// A request with an explicit client-chosen deadline (overrides the
@@ -137,7 +177,18 @@ impl Request {
         reply: mpsc::Sender<Response>,
         deadline: Instant,
     ) -> Request {
-        Request { enc_tokens, reply, t0: Instant::now(), deadline: Some(deadline) }
+        Request { deadline: Some(deadline), ..Request::new(enc_tokens, reply) }
+    }
+
+    /// §L10: a request attributed to a tenant/priority for QoS
+    /// admission (token bucket, weighted queue, SLO stamp).
+    pub fn for_tenant(
+        enc_tokens: Vec<i32>,
+        reply: mpsc::Sender<Response>,
+        tenant: usize,
+        priority: u8,
+    ) -> Request {
+        Request { tenant, priority, ..Request::new(enc_tokens, reply) }
     }
 
     pub fn expired(&self, now: Instant) -> bool {
@@ -164,6 +215,15 @@ pub enum FailReason {
     /// exceeds the replica page pool's total capacity — it could never
     /// be admitted, even with every page free.
     PoolExhausted,
+    /// §L10: shed at admission by the QoS layer — the tenant is over
+    /// its token-bucket rate, the admission queue is at capacity (or a
+    /// higher class preempted this request's slot), or the overload
+    /// controller is shedding the lowest class early.
+    QueueFull,
+    /// §L10: shed at admission because the estimated queue wait alone
+    /// already overshoots the request's deadline/SLO — rejected before
+    /// spending a queue slot or prefill on doomed work.
+    WouldMissDeadline,
 }
 
 impl std::fmt::Display for FailReason {
@@ -175,6 +235,10 @@ impl std::fmt::Display for FailReason {
             FailReason::AbortedOnDrain => "replica failed during drain with no requeue path left",
             FailReason::PoolExhausted => {
                 "request needs more KV pages than the replica pool holds"
+            }
+            FailReason::QueueFull => "admission queue full or tenant over its rate limit",
+            FailReason::WouldMissDeadline => {
+                "estimated queue wait already overshoots the deadline"
             }
         })
     }
@@ -271,6 +335,22 @@ pub struct ServerOptions {
     /// with no draft model or no runnable verify at all, replicas fall
     /// back to plain decode.
     pub spec_gamma: usize,
+    /// §L10 multi-tenant QoS contracts (token-bucket rates, weighted
+    /// priority classes, SLOs). Empty (the default) disables the QoS
+    /// layer entirely — admission is a passthrough and serving behaves
+    /// exactly as pre-L10. `ALTUP_TENANT_SPEC` sets the default
+    /// (`name:priority:weight:rate:burst:slo_ms`, `;`-separated).
+    pub tenants: Vec<TenantSpec>,
+    /// §L10: how many *extra* replicas the overload controller may
+    /// spawn beyond `replicas` under sustained queue pressure (retired
+    /// again when calm). 0 disables autoscaling; `ALTUP_AUTOSCALE`
+    /// sets the default.
+    pub autoscale: usize,
+    /// Base delay in ms for the supervisor's exponential respawn
+    /// backoff after a replica crash (doubles per consecutive crash,
+    /// ±25% deterministic jitter). `ALTUP_RESTART_BACKOFF_MS` sets the
+    /// default (else 25); 0 is clamped to 1.
+    pub restart_backoff_ms: u64,
 }
 
 impl Default for ServerOptions {
@@ -291,6 +371,9 @@ impl Default for ServerOptions {
             max_retries: 2,
             replica_restarts: env::usize_or("ALTUP_REPLICA_RESTARTS", 2),
             spec_gamma: spec::gamma_from_env(),
+            tenants: admission::tenants_from_env(),
+            autoscale: env::usize_or("ALTUP_AUTOSCALE", 0),
+            restart_backoff_ms: env::u64_or("ALTUP_RESTART_BACKOFF_MS", 25),
         }
     }
 }
@@ -319,6 +402,11 @@ pub struct FaultSpec {
     /// Which engine call (prefill / decode_token / monolithic decode,
     /// 1-based) triggers `kill_replica`; 0 behaves like 1.
     pub kill_after_calls: u64,
+    /// §L10: additional deterministic kills beyond the single
+    /// `kill_replica` — `(replica id, engine call)` pairs, so a chaos
+    /// schedule can take down several replicas at different points of
+    /// a trace replay. `ChaosSpec::apply` fills this.
+    pub extra_kills: Vec<(usize, u64)>,
     /// Probability that any engine call panics, hash-sampled from
     /// (replica id, call index). 0.0 = never.
     pub panic_rate: f64,
@@ -334,6 +422,54 @@ pub struct FaultSpec {
 impl FaultSpec {
     fn stuck(&self, row_hash: u64) -> bool {
         self.stuck_every > 0 && row_hash % self.stuck_every == 0
+    }
+}
+
+/// §L10: a composable chaos schedule for trace-driven load tests. A
+/// `ChaosSpec` bundles the failure modes the sim engine already knows
+/// how to inject — deterministic replica kills, stuck generations,
+/// page-pool pressure — into one schedule that `apply` composes onto a
+/// `SimSpec`, so the bench/CI chaos harness describes "kill replica 1
+/// mid-burst while 25% of the pool is withheld" as data, not as
+/// hand-edited spec fields.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosSpec {
+    /// Replica kills as `(replica id, engine call ordinal)` — each
+    /// listed replica panics on its Nth engine call.
+    pub kills: Vec<(usize, u64)>,
+    /// Stuck-generation class (`FaultSpec::stuck_every` semantics);
+    /// 0 leaves the spec's existing setting alone.
+    pub stuck_every: u64,
+    /// Extra ns per decode step per stuck row.
+    pub stuck_step_ns: u64,
+    /// Withhold this fraction of the page pool (simulated external
+    /// memory pressure); pool capacity never drops below one slot's
+    /// worth of pages.
+    pub pool_reserve: f64,
+}
+
+impl ChaosSpec {
+    /// Compose this schedule onto a sim spec: the first kill lands on
+    /// `FaultSpec::kill_replica` (keeping single-kill A/Bs bit-compatible
+    /// with the §L7 degraded bench), the rest on `extra_kills`.
+    pub fn apply(&self, spec: &mut SimSpec) {
+        if let Some(&(replica, after)) = self.kills.first() {
+            spec.fault.kill_replica = Some(replica);
+            spec.fault.kill_after_calls = after;
+        }
+        spec.fault.extra_kills.extend(self.kills.iter().skip(1).copied());
+        if self.stuck_every > 0 {
+            spec.fault.stuck_every = self.stuck_every;
+            spec.fault.stuck_step_ns = self.stuck_step_ns;
+        }
+        if self.pool_reserve > 0.0 {
+            if let Some(pool) = spec.pool.as_mut() {
+                let keep = (pool.pool_pages as f64 * (1.0 - self.pool_reserve.clamp(0.0, 1.0)))
+                    .floor() as usize;
+                let floor = pages_for(spec.enc_len + spec.dec_len, pool.page_size);
+                pool.pool_pages = keep.max(floor);
+            }
+        }
     }
 }
 
@@ -495,6 +631,12 @@ pub struct ServerStats {
     pub retries: usize,
     /// §L7: replacement replicas the supervisor spawned.
     pub restarts: usize,
+    /// §L10: autoscale replicas spawned on sustained queue pressure
+    /// (beyond the configured fleet; bounded by
+    /// `ServerOptions::autoscale`).
+    pub scale_ups: usize,
+    /// §L10: autoscale replicas retired once pressure subsided.
+    pub scale_downs: usize,
     /// §L7: explicit terminal failures delivered (deadline sheds,
     /// retry exhaustion, drain aborts, dead-server rejections).
     pub failed: usize,
@@ -519,6 +661,11 @@ pub struct ServerStats {
     pub latency: LatencyHistogram,
     /// Per-token latency (request latency / tokens delivered).
     pub token_latency: LatencyHistogram,
+    /// §L10 per-tenant QoS accounting, indexed by `Request::tenant`
+    /// (grown on demand; empty when no tenant ever completed or
+    /// failed). Names live in `ServerOptions::tenants` — the stats
+    /// carry only indices so replicas stay config-free.
+    pub tenants: Vec<TenantMeter>,
 }
 
 impl ServerStats {
@@ -609,6 +756,8 @@ impl ServerStats {
         self.sheds += other.sheds;
         self.retries += other.retries;
         self.restarts += other.restarts;
+        self.scale_ups += other.scale_ups;
+        self.scale_downs += other.scale_downs;
         self.failed += other.failed;
         self.drained += other.drained;
         self.spec.merge(&other.spec);
@@ -616,6 +765,18 @@ impl ServerStats {
         self.occupancy.merge(&other.occupancy);
         self.latency.merge(&other.latency);
         self.token_latency.merge(&other.token_latency);
+        for (t, m) in other.tenants.iter().enumerate() {
+            self.tenant_mut(t).merge(m);
+        }
+    }
+
+    /// The meter for tenant `t`, growing the table on first touch so
+    /// replicas need no tenant config to account correctly.
+    pub fn tenant_mut(&mut self, t: usize) -> &mut TenantMeter {
+        if self.tenants.len() <= t {
+            self.tenants.resize_with(t + 1, TenantMeter::default);
+        }
+        &mut self.tenants[t]
     }
 
     pub fn summary(&self) -> String {
@@ -675,8 +836,17 @@ impl ServerStats {
 /// is best-effort: a client that already gave up dropped its receiver.
 fn fail_request(stats: &mut ServerStats, req: &Request, reason: FailReason, replica: usize) {
     stats.failed += 1;
-    if reason == FailReason::DeadlineExceeded {
+    let shed = matches!(
+        reason,
+        FailReason::DeadlineExceeded | FailReason::QueueFull | FailReason::WouldMissDeadline
+    );
+    if shed {
         stats.sheds += 1;
+    }
+    let tm = stats.tenant_mut(req.tenant);
+    tm.failed += 1;
+    if shed {
+        tm.sheds += 1;
     }
     let _ = req.reply.send(Response::failed(reason, req.t0, replica));
 }
@@ -811,18 +981,20 @@ fn spawn_replica(
     jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
     opts: &ServerOptions,
     events: &mpsc::Sender<ReplicaExit>,
+    shared: &Arc<QosShared>,
 ) -> std::thread::JoinHandle<()> {
     let spec = spec.clone();
     let jobs = Arc::clone(jobs);
     let opts = opts.clone();
     let events = events.clone();
+    let shared = Arc::clone(shared);
     std::thread::Builder::new()
         .name(format!("altup-replica-{id}"))
         .spawn(move || {
             let ledger = Ledger::new();
             let mut stats = ServerStats { replicas: 1, ..Default::default() };
             let outcome = catch_unwind(AssertUnwindSafe(|| {
-                serve_replica(id, &spec, &jobs, &opts, &ledger, &mut stats)
+                serve_replica(id, &spec, &jobs, &opts, &ledger, &mut stats, &shared)
             }));
             let error = match outcome {
                 Ok(Ok(())) => None,
@@ -873,12 +1045,17 @@ impl ServerHandle {
         // and the queue is full, the router keeps accumulating instead
         // of window-flushing tiny partial batches at a wall of busy
         // replicas (which craters fill and wastes executed tokens).
-        let (job_tx, job_rx) = mpsc::sync_channel::<BatchJob>(n);
+        // §L10: the job queue is sized for the autoscaled fleet, so a
+        // scaled-up replica never starves the queue of slots and the
+        // scale-down sentinel always has room.
+        let (job_tx, job_rx) = mpsc::sync_channel::<BatchJob>(n + opts.autoscale);
         let job_rx = Arc::new(Mutex::new(job_rx));
         let (events_tx, events_rx) = mpsc::channel::<ReplicaExit>();
+        let shared = Arc::new(QosShared::new());
 
-        let handles: Vec<_> =
-            (0..n).map(|i| spawn_replica(i, &engine, &job_rx, &opts, &events_tx)).collect();
+        let handles: Vec<_> = (0..n)
+            .map(|i| spawn_replica(i, &engine, &job_rx, &opts, &events_tx, &shared))
+            .collect();
         let router_up = Arc::new(AtomicBool::new(true));
         let router = {
             let spec = engine.clone();
@@ -888,7 +1065,10 @@ impl ServerHandle {
                 .name("altup-router".into())
                 .spawn(move || {
                     let _guard = RouterGuard(flag);
-                    route(&spec, req_rx, job_tx, job_rx, events_rx, events_tx, &ropts, handles)
+                    route(
+                        &spec, req_rx, job_tx, job_rx, events_rx, events_tx, &ropts, handles,
+                        shared,
+                    )
                 })
                 .expect("spawn router")
         };
@@ -969,6 +1149,18 @@ struct Supervisor {
     /// deterministically no matter how the client disconnect races
     /// the exit events.
     died: Option<String>,
+    /// §L10 satellite: respawns scheduled but not yet due. Replacing
+    /// the old spawn-on-crash with a backoff queue means a poison-pill
+    /// artifact burns the restart budget over seconds, not
+    /// milliseconds — `tick_respawns` drains this from the router
+    /// loop. A non-empty queue counts as "fleet coming back" for the
+    /// died/NoReplicas checks.
+    pending_respawns: Vec<Instant>,
+    /// Crashes that consumed restart budget — the backoff exponent.
+    crashes: u32,
+    /// §L10: the γ-cap lever handed to every replica this supervisor
+    /// spawns (respawns and autoscale replicas included).
+    shared: Arc<QosShared>,
 }
 
 impl Supervisor {
@@ -1006,24 +1198,80 @@ impl Supervisor {
             }
         }
         if crashed && job_open && self.restarts_left > 0 {
+            // §L10 satellite: schedule the replacement behind an
+            // exponential backoff instead of spawning it here — a
+            // persistently-failing artifact must not crash-loop
+            // through its whole restart budget in one supervision
+            // pass.
             self.restarts_left -= 1;
-            stats.restarts += 1;
-            let id = self.next_id;
-            self.next_id += 1;
-            self.handles.push(spawn_replica(
-                id,
-                &self.spec,
-                &self.jobs,
-                &self.opts,
-                &self.events_tx,
-            ));
-            self.live += 1;
+            let delay = self.backoff_delay();
+            self.crashes += 1;
+            self.pending_respawns.push(Instant::now() + delay);
         }
-        if crashed && job_open && self.live == 0 && self.died.is_none() {
+        if crashed
+            && job_open
+            && self.live == 0
+            && self.pending_respawns.is_empty()
+            && self.died.is_none()
+        {
             self.died = Some(
                 self.last_error.clone().unwrap_or_else(|| "replica crash".to_string()),
             );
         }
+    }
+
+    /// Exponential backoff with deterministic jitter for the next
+    /// respawn: `restart_backoff_ms * 2^crashes` (exponent capped at
+    /// 6), jittered into [0.75, 1.25) of nominal so a fleet of
+    /// supervisors does not thundering-herd its restarts.
+    fn backoff_delay(&self) -> Duration {
+        let base = self.opts.restart_backoff_ms.max(1);
+        let nominal = base.saturating_mul(1u64 << self.crashes.min(6));
+        let h = sim_mix(self.opts.seed ^ 0x51C0_u64.wrapping_add(self.crashes as u64));
+        let jittered = (nominal - nominal / 4).saturating_add(h % (nominal / 2 + 1));
+        Duration::from_millis(jittered)
+    }
+
+    /// Spawn every scheduled respawn whose backoff has elapsed. With
+    /// the job queue closed (drain) pending respawns are dropped — a
+    /// replacement would only pop `Popped::Gone` and exit.
+    fn tick_respawns(&mut self, stats: &mut ServerStats, job_open: bool) {
+        if !job_open {
+            self.pending_respawns.clear();
+            return;
+        }
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.pending_respawns.len() {
+            if self.pending_respawns[i] <= now {
+                self.pending_respawns.swap_remove(i);
+                stats.restarts += 1;
+                self.spawn_one();
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Spawn one replica with a fresh id (respawn or §L10 autoscale).
+    fn spawn_one(&mut self) {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.handles.push(spawn_replica(
+            id,
+            &self.spec,
+            &self.jobs,
+            &self.opts,
+            &self.events_tx,
+            &self.shared,
+        ));
+        self.live += 1;
+    }
+
+    /// Whether the fleet can still serve or come back: live replicas
+    /// now, or a respawn already scheduled.
+    fn can_serve(&self) -> bool {
+        self.live > 0 || !self.pending_respawns.is_empty()
     }
 }
 
@@ -1072,6 +1320,7 @@ fn route(
     events_tx: mpsc::Sender<ReplicaExit>,
     opts: &ServerOptions,
     handles: Vec<std::thread::JoinHandle<()>>,
+    shared: Arc<QosShared>,
 ) -> Result<ServerStats> {
     let mut sup = Supervisor {
         spec: spec.clone(),
@@ -1083,6 +1332,9 @@ fn route(
         restarts_left: opts.replica_restarts,
         last_error: None,
         died: None,
+        pending_respawns: Vec::new(),
+        crashes: 0,
+        shared: Arc::clone(&shared),
         handles,
     };
     let mut stats = ServerStats::default();
@@ -1104,14 +1356,28 @@ fn route(
     let timeout = opts.request_timeout_ms.map(Duration::from_millis);
     let mut groups: BTreeMap<usize, Vec<Admitted>> = BTreeMap::new();
     let mut disconnected = false;
+    // §L10 QoS admission layer. With no tenants configured it is a
+    // strict passthrough: `offer` hands every request straight back
+    // and the overload controller never engages.
+    let mut qos = AdmissionController::new(
+        opts.tenants.clone(),
+        opts.queue_cap.max(1),
+        opts.spec_gamma,
+        Instant::now(),
+    );
+    // Autoscale replicas currently up (bounded by `opts.autoscale`).
+    let mut extra_live: usize = 0;
+    let mut qos_actions: Vec<QosAction> = Vec::new();
 
     loop {
         // Supervision pass: fold in replica exits (requeue/fail their
-        // in-flight work, respawn within budget).
+        // in-flight work, respawn within budget once each backoff
+        // elapses).
         while let Ok(ev) = events_rx.try_recv() {
             sup.on_exit(ev, &mut stats, &mut groups, job_tx.is_some());
         }
-        if sup.live == 0 {
+        sup.tick_respawns(&mut stats, job_tx.is_some());
+        if !sup.can_serve() {
             if fatal.is_none() {
                 if let Some(err) = sup.died.take() {
                     fatal = Some(anyhow!(
@@ -1123,6 +1389,15 @@ fn route(
             for (_, group) in std::mem::take(&mut groups) {
                 for a in group {
                     fail_request(&mut stats, &a.req, FailReason::NoReplicas, ROUTER_ID);
+                }
+            }
+            // §L10: requests still parked in tenant queues have no
+            // fleet left to wait for either.
+            if qos.queued() > 0 {
+                let mut parked = Vec::new();
+                qos.release(qos.queued(), &mut parked);
+                for req in parked {
+                    fail_request(&mut stats, &req, FailReason::NoReplicas, ROUTER_ID);
                 }
             }
             // Strand recovery: jobs already sitting in the queue when
@@ -1140,6 +1415,69 @@ fn route(
 
         // Deadline pass: shed expired requests before dispatch.
         shed_expired(&mut groups, &mut stats);
+
+        // §L10 QoS pass: expire parked requests, walk the overload
+        // ladder on sustained pressure, execute its degradation
+        // actions, and release parked work into bucket groups in
+        // weighted-priority order. No-op in passthrough mode.
+        if !qos.passthrough() {
+            let now = Instant::now();
+            let mut expired = Vec::new();
+            qos.take_expired(now, &mut expired);
+            for req in &expired {
+                fail_request(&mut stats, req, FailReason::DeadlineExceeded, ROUTER_ID);
+            }
+            let downstream: usize = groups.values().map(|g| g.len()).sum();
+            qos_actions.clear();
+            qos.tick(now, downstream, sup.live.max(1) * batch_size, &mut qos_actions);
+            for action in qos_actions.drain(..) {
+                match action {
+                    QosAction::GammaCap(cap) => {
+                        shared.gamma_cap.store(cap, Ordering::Relaxed);
+                    }
+                    QosAction::ScaleUp => {
+                        if extra_live < opts.autoscale && job_tx.is_some() {
+                            sup.spawn_one();
+                            extra_live += 1;
+                            stats.scale_ups += 1;
+                        }
+                    }
+                    QosAction::ScaleDown => {
+                        if extra_live > 0 {
+                            if let Some(tx) = &job_tx {
+                                if tx.try_send(scale_down_job()).is_ok() {
+                                    extra_live -= 1;
+                                    stats.scale_downs += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // Release bounded to ~two waves of fleet work: the backlog
+            // beyond that stays in the tenant queues, where priority
+            // and SLO decisions still apply, instead of FIFO-frozen in
+            // bucket groups.
+            if job_tx.is_some() && sup.live > 0 {
+                let room = (sup.live * batch_size * 2).saturating_sub(downstream);
+                if room > 0 {
+                    let mut released = Vec::new();
+                    qos.release(room, &mut released);
+                    let admitted = Instant::now();
+                    for req in released {
+                        let bucket = if opts.bucketed {
+                            bucket_for(req.enc_tokens.len(), enc_len)
+                        } else {
+                            enc_len
+                        };
+                        groups
+                            .entry(bucket)
+                            .or_default()
+                            .push(Admitted { req, admitted, attempts: 0 });
+                    }
+                }
+            }
+        }
 
         // Flush pass. Every ship is a `try_send` (a blocking send here
         // could deadlock the supervisor against a dead replica set and
@@ -1215,6 +1553,32 @@ fn route(
         // job queue so replicas retire their slots and exit, then wait
         // for their exit events.
         if disconnected {
+            // §L10: every parked request must still reach a terminal
+            // response — release the lot into bucket groups while a
+            // fleet exists, fail it explicitly otherwise.
+            if qos.queued() > 0 {
+                let mut parked = Vec::new();
+                qos.release(qos.queued(), &mut parked);
+                if sup.can_serve() && job_tx.is_some() {
+                    let admitted = Instant::now();
+                    for req in parked {
+                        let bucket = if opts.bucketed {
+                            bucket_for(req.enc_tokens.len(), enc_len)
+                        } else {
+                            enc_len
+                        };
+                        groups
+                            .entry(bucket)
+                            .or_default()
+                            .push(Admitted { req, admitted, attempts: 0 });
+                    }
+                } else {
+                    for req in parked {
+                        fail_request(&mut stats, &req, FailReason::NoReplicas, ROUTER_ID);
+                    }
+                }
+                continue; // flush the freshly-released groups first
+            }
             if groups.is_empty() {
                 job_tx = None;
             }
@@ -1275,18 +1639,31 @@ fn route(
             // simultaneously dead.
             if req.expired(Instant::now()) {
                 fail_request(&mut stats, &req, FailReason::DeadlineExceeded, ROUTER_ID);
-            } else if sup.live == 0 || job_tx.is_none() {
+            } else if !sup.can_serve() || job_tx.is_none() {
                 fail_request(&mut stats, &req, FailReason::NoReplicas, ROUTER_ID);
             } else {
-                let bucket = if opts.bucketed {
-                    bucket_for(req.enc_tokens.len(), enc_len)
-                } else {
-                    enc_len
-                };
-                groups
-                    .entry(bucket)
-                    .or_default()
-                    .push(Admitted { req, admitted: Instant::now(), attempts: 0 });
+                // §L10: the admission controller rules first — rate
+                // limit, early SLO shed, queue cap/preemption. In
+                // passthrough mode (no tenants) it hands the request
+                // straight back and admission is exactly pre-L10.
+                let downstream: usize = groups.values().map(|g| g.len()).sum();
+                match qos.offer(req, Instant::now(), downstream) {
+                    Ok(Some(req)) => {
+                        let bucket = if opts.bucketed {
+                            bucket_for(req.enc_tokens.len(), enc_len)
+                        } else {
+                            enc_len
+                        };
+                        groups
+                            .entry(bucket)
+                            .or_default()
+                            .push(Admitted { req, admitted: Instant::now(), attempts: 0 });
+                    }
+                    Ok(None) => {} // parked in a tenant queue
+                    Err((victim, reason)) => {
+                        fail_request(&mut stats, &victim, reason, ROUTER_ID);
+                    }
+                }
             }
         }
     }
@@ -1341,7 +1718,12 @@ impl SimEngine {
     fn on_call(&mut self) {
         self.calls += 1;
         let f = &self.spec.fault;
-        if f.kill_replica == Some(self.replica) && self.calls >= f.kill_after_calls.max(1) {
+        let killed_here = (f.kill_replica == Some(self.replica)
+            && self.calls >= f.kill_after_calls.max(1))
+            || f.extra_kills
+                .iter()
+                .any(|&(r, after)| r == self.replica && self.calls >= after.max(1));
+        if killed_here {
             panic!(
                 "injected sim fault: replica {} killed at engine call {} \
                  (expected during fault-injection tests/benches)",
@@ -2153,6 +2535,7 @@ fn serve_replica(
     opts: &ServerOptions,
     ledger: &Ledger,
     stats: &mut ServerStats,
+    shared: &Arc<QosShared>,
 ) -> Result<()> {
     let mut engine = Engine::build(id, spec, opts)?;
     if opts.continuous && engine.supports_continuous() {
@@ -2162,9 +2545,9 @@ fn serve_replica(
         // back to plain per-token decode.
         let gamma = engine.effective_spec_gamma(opts.spec_gamma);
         let spec_dec = (gamma > 0).then(|| SpecDecoder::new(gamma));
-        serve_continuous(id, &mut engine, jobs, opts, ledger, stats, spec_dec)
+        serve_continuous(id, &mut engine, jobs, opts, ledger, stats, spec_dec, shared)
     } else {
-        serve_batches(id, &mut engine, jobs, ledger, stats)
+        serve_batches(id, &mut engine, jobs, ledger, stats, &opts.tenants)
     }
 }
 
@@ -2219,6 +2602,7 @@ fn serve_batches(
     jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
     ledger: &Ledger,
     stats: &mut ServerStats,
+    tenants: &[TenantSpec],
 ) -> Result<()> {
     let (batch_size, _enc_len) = engine.dims();
     // Packing scratch reused across every batch on this hot path: the
@@ -2231,6 +2615,9 @@ fn serve_batches(
             Popped::Job(job) => job,
             _ => break, // router gone and queue drained
         };
+        if is_scale_down(&job) {
+            return Ok(()); // §L10 autoscale retirement: a clean exit
+        }
         let bucket = engine.effective_bucket(job.bucket);
         let routed_bucket = job.bucket;
         // Admission: ledger entries survive a decode panic so the
@@ -2272,6 +2659,10 @@ fn serve_batches(
                 trunc_scratch[i],
             );
             stats.requests += 1;
+            let slo_ms = tenants.get(held.req.tenant).map_or(0, |t| t.slo_ms);
+            stats
+                .tenant_mut(held.req.tenant)
+                .note_done(latency.as_secs_f64() * 1e3, tokens.len(), slo_ms);
             let _ = held.req.reply.send(Response {
                 tokens,
                 latency,
@@ -2353,6 +2744,7 @@ fn serve_continuous(
     ledger: &Ledger,
     stats: &mut ServerStats,
     mut spec_dec: Option<SpecDecoder>,
+    shared: &Arc<QosShared>,
 ) -> Result<()> {
     let (batch_size, enc_len) = engine.dims();
     let dec_len = engine.dec_len();
@@ -2379,6 +2771,12 @@ fn serve_continuous(
     let mut active: Vec<Option<Active>> = (0..slots_n).map(|_| None).collect();
     let mut pending: VecDeque<(usize, Pend)> = VecDeque::new();
     let mut router_gone = false;
+    // §L10 autoscale retirement: once this replica pops the
+    // scale-down sentinel it stops pulling work, finishes what it
+    // holds, and exits cleanly.
+    let mut retiring = false;
+    // §L8 base draft length; the §L10 γ-cap lever can only shrink it.
+    let base_gamma = spec_dec.as_ref().map_or(0, |sd| sd.gamma());
     let mut enc_scratch: Vec<i32> = Vec::new();
     let mut trunc_scratch: Vec<bool> = Vec::new();
     loop {
@@ -2386,19 +2784,30 @@ fn serve_continuous(
 
         // Pull new work: block when fully idle (nothing to decode),
         // poll otherwise so in-flight slots keep stepping.
-        if !router_gone {
+        if !router_gone && !retiring {
             if n_live == 0 && pending.is_empty() {
                 match pop_job(jobs, true)? {
+                    Popped::Job(job) if is_scale_down(&job) => retiring = true,
                     Popped::Job(job) => stash(ledger, &mut pending, job, stats, id),
                     _ => router_gone = true,
                 }
             }
-            while pending.len() < slots_n && !router_gone {
+            while pending.len() < slots_n && !router_gone && !retiring {
                 match pop_job(jobs, false)? {
+                    Popped::Job(job) if is_scale_down(&job) => retiring = true,
                     Popped::Job(job) => stash(ledger, &mut pending, job, stats, id),
                     Popped::Empty => break,
                     Popped::Gone => router_gone = true,
                 }
+            }
+        }
+
+        // §L10: apply the overload controller's current γ cap before
+        // this iteration's draft/verify round.
+        if let Some(sd) = spec_dec.as_mut() {
+            let eff = base_gamma.min(shared.gamma_cap.load(Ordering::Relaxed)).max(1);
+            if sd.gamma() != eff {
+                sd.set_gamma(eff);
             }
         }
 
@@ -2462,10 +2871,23 @@ fn serve_continuous(
             let mut slot_ids: Vec<usize> = Vec::new();
             let mut group_saved = 0usize;
             while group.len() < batch_size.min(free.len() + group.len()) {
-                let ticket = match pending.front() {
-                    Some((b, p)) if *b == bucket => p.ticket,
+                let (ticket, cand_deadline) = match pending.front() {
+                    Some((b, p)) if *b == bucket => (p.ticket, p.deadline),
                     _ => break,
                 };
+                // §L10 satellite (pre-expiry audit): a candidate can
+                // expire *during this admission pass* — an earlier
+                // group's prefill slept — so re-check against a fresh
+                // clock before the §L9 pool gate spends prefix-cache
+                // probes or page reservations on doomed work. The
+                // monolithic arm shares the check for parity.
+                if cand_deadline.is_some_and(|d| Instant::now() >= d) {
+                    let (_, p) = pending.pop_front().expect("front present");
+                    if let Some(held) = ledger.take(p.ticket) {
+                        fail_request(stats, &held.req, FailReason::DeadlineExceeded, id);
+                    }
+                    continue;
+                }
                 if let Some(ps) = paged.as_mut() {
                     // §L9 pool gate: reserve this request's pages —
                     // shared prefix pages first, fresh pages for the
@@ -2587,8 +3009,8 @@ fn serve_continuous(
 
         let n_live = active.iter().filter(|s| s.is_some()).count();
         if n_live == 0 {
-            if router_gone && pending.is_empty() {
-                break; // drained
+            if (router_gone || retiring) && pending.is_empty() {
+                break; // drained (or §L10 autoscale retirement)
             }
             continue;
         }
@@ -2629,7 +3051,7 @@ fn serve_continuous(
                 // loop's to report: only it knows the truncation.
                 stats.spec.note_delivered(pushed);
                 if done {
-                    finish_slot(slot, ledger, stats, dec_len, id, router_gone);
+                    finish_slot(slot, ledger, stats, dec_len, id, router_gone, &opts.tenants);
                 }
             }
         } else {
@@ -2643,7 +3065,7 @@ fn serve_continuous(
                 let Some(act) = slot.as_mut() else { continue };
                 act.tokens.push(tokens[s]);
                 if tokens[s] == EOS || act.tokens.len() >= dec_len {
-                    finish_slot(slot, ledger, stats, dec_len, id, router_gone);
+                    finish_slot(slot, ledger, stats, dec_len, id, router_gone, &opts.tenants);
                 }
             }
         }
@@ -2656,6 +3078,7 @@ fn serve_continuous(
 /// Shared by the plain and §L8 speculative decode paths — retirement
 /// semantics (early-exit accounting, drain counting, ledger removal)
 /// must not depend on which path generated the tokens.
+#[allow(clippy::too_many_arguments)]
 fn finish_slot(
     slot: &mut Option<Active>,
     ledger: &Ledger,
@@ -2663,6 +3086,7 @@ fn finish_slot(
     dec_len: usize,
     id: usize,
     router_gone: bool,
+    tenants: &[TenantSpec],
 ) {
     let Some(act) = slot.take() else { return };
     let Some(held) = ledger.take(act.ticket) else { return };
@@ -2675,6 +3099,10 @@ fn finish_slot(
         act.truncated,
     );
     stats.requests += 1;
+    let slo_ms = tenants.get(held.req.tenant).map_or(0, |t| t.slo_ms);
+    stats
+        .tenant_mut(held.req.tenant)
+        .note_done(latency.as_secs_f64() * 1e3, act.tokens.len(), slo_ms);
     if router_gone {
         stats.drained += 1;
     }
@@ -2745,6 +3173,78 @@ mod tests {
             pool: None,
             fault: FaultSpec::default(),
         }
+    }
+
+    /// §L10: a chaos schedule composes onto a sim spec — first kill on
+    /// the legacy single-kill fields, the rest on `extra_kills`, stuck
+    /// class passed through, pool pressure floored at one slot's pages.
+    #[test]
+    fn chaos_spec_composes_onto_sim_spec() {
+        let mut spec = quiet_spec();
+        spec.pool = Some(SimPoolSpec { page_size: 8, pool_pages: 100, prefix_cache: false });
+        let chaos = ChaosSpec {
+            kills: vec![(1, 5), (2, 9)],
+            stuck_every: 7,
+            stuck_step_ns: 11,
+            pool_reserve: 0.25,
+        };
+        chaos.apply(&mut spec);
+        assert_eq!(spec.fault.kill_replica, Some(1));
+        assert_eq!(spec.fault.kill_after_calls, 5);
+        assert_eq!(spec.fault.extra_kills, vec![(2, 9)]);
+        assert_eq!(spec.fault.stuck_every, 7);
+        assert_eq!(spec.fault.stuck_step_ns, 11);
+        assert_eq!(spec.pool.as_ref().unwrap().pool_pages, 75, "25% withheld");
+        // Extreme pressure still leaves one slot's worth of pages.
+        let mut spec = quiet_spec();
+        spec.pool = Some(SimPoolSpec { page_size: 8, pool_pages: 100, prefix_cache: false });
+        ChaosSpec { pool_reserve: 1.0, ..ChaosSpec::default() }.apply(&mut spec);
+        let floor = pages_for(spec.enc_len + spec.dec_len, 8);
+        assert_eq!(spec.pool.as_ref().unwrap().pool_pages, floor);
+        // An empty schedule is the identity.
+        let mut spec = quiet_spec();
+        ChaosSpec::default().apply(&mut spec);
+        assert_eq!(spec.fault.kill_replica, None);
+        assert!(spec.fault.extra_kills.is_empty());
+    }
+
+    /// §L10 satellite: the respawn backoff doubles per consecutive
+    /// crash with jitter bounded to [0.75, 1.25) of nominal, so delay
+    /// ranges for successive crashes never overlap.
+    #[test]
+    fn respawn_backoff_grows_exponentially_with_bounded_jitter() {
+        let (_job_tx, job_rx) = mpsc::sync_channel::<BatchJob>(1);
+        let (events_tx, _events_rx) = mpsc::channel();
+        let mut sup = Supervisor {
+            spec: EngineSpec::Sim(quiet_spec()),
+            opts: ServerOptions { restart_backoff_ms: 40, seed: 7, ..ServerOptions::default() },
+            jobs: Arc::new(Mutex::new(job_rx)),
+            events_tx,
+            handles: Vec::new(),
+            live: 1,
+            restarts_left: 3,
+            next_id: 1,
+            last_error: None,
+            died: None,
+            pending_respawns: Vec::new(),
+            crashes: 0,
+            shared: Arc::new(QosShared::new()),
+        };
+        let mut prev = 0u64;
+        for c in 0..4u32 {
+            sup.crashes = c;
+            let d = sup.backoff_delay().as_millis() as u64;
+            let nominal = 40u64 << c;
+            assert!(
+                d >= nominal - nominal / 4 && d <= nominal + nominal / 2,
+                "crash {c}: delay {d} outside jitter band of nominal {nominal}"
+            );
+            assert!(d > prev, "crash {c}: backoff must grow ({d} <= {prev})");
+            prev = d;
+        }
+        // The exponent saturates instead of overflowing the shift.
+        sup.crashes = u32::MAX;
+        assert!(sup.backoff_delay() <= Duration::from_millis(40 * 64 * 2));
     }
 
     #[test]
@@ -3141,6 +3641,16 @@ mod tests {
         assert_eq!(rx.recv().unwrap().failure, Some(FailReason::RetriesExhausted));
         assert_eq!(stats.failed, 2);
         assert_eq!(stats.sheds, 1);
+        // §L10 admission rejections are sheds too, and land on the
+        // per-tenant meter of the request's tenant.
+        let (tx, rx) = mpsc::channel();
+        let req = Request::for_tenant(vec![8], tx, 1, 0);
+        fail_request(&mut stats, &req, FailReason::QueueFull, ROUTER_ID);
+        assert_eq!(rx.recv().unwrap().failure, Some(FailReason::QueueFull));
+        assert_eq!(stats.failed, 3);
+        assert_eq!(stats.sheds, 2);
+        assert_eq!(stats.tenants[1].failed, 1);
+        assert_eq!(stats.tenants[1].sheds, 1);
         // Every reason renders a non-empty human message.
         for reason in [
             FailReason::DeadlineExceeded,
@@ -3148,6 +3658,8 @@ mod tests {
             FailReason::NoReplicas,
             FailReason::AbortedOnDrain,
             FailReason::PoolExhausted,
+            FailReason::QueueFull,
+            FailReason::WouldMissDeadline,
         ] {
             assert!(!reason.to_string().is_empty());
         }

@@ -52,6 +52,18 @@ impl SpecDecoder {
         SpecDecoder { gamma: gamma.max(1) }
     }
 
+    pub(crate) fn gamma(&self) -> usize {
+        self.gamma
+    }
+
+    /// §L10: retune the draft length mid-serve (the overload
+    /// controller halves γ under sustained pressure and restores it
+    /// when calm). Clamped to ≥ 1 — γ 0 means "speculation off", which
+    /// is a replica-startup decision, not a per-round one.
+    pub(crate) fn set_gamma(&mut self, gamma: usize) {
+        self.gamma = gamma.max(1);
+    }
+
     /// One draft→verify round over every live slot. Returns the
     /// per-slot emission — the accepted drafted prefix plus the
     /// correction token; empty rows for dead slots. The caller pushes

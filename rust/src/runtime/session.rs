@@ -98,7 +98,7 @@ use crate::runtime::artifact::Artifact;
 use crate::runtime::client::{Client, Executable};
 use crate::runtime::params::ParamStore;
 use crate::runtime::tensor::Tensor;
-use crate::util::lru::{EvictionPolicy, LruPolicy};
+use crate::util::lru::LruCache;
 use anyhow::{bail, Context, Result};
 use std::rc::Rc;
 use std::time::Instant;
@@ -179,73 +179,12 @@ fn bucket_cache_cap_from_env() -> usize {
 /// is unit-testable without compiling HLO (the offline xla stub cannot
 /// produce an `Executable`).
 ///
-/// Since §L9 the recency bookkeeping is the shared
-/// `util::lru::LruPolicy` — the same policy ordering the prefix-page
-/// cache (`runtime::pages::PrefixCache`) — with this type adding what
-/// an executable cache needs on top: value storage and a hard entry
-/// cap (the prefix cache instead evicts on pool pressure, with
-/// refcount pinning).
-pub struct BucketLru<T> {
-    values: Vec<(usize, T)>,
-    order: LruPolicy<usize>,
-    cap: usize,
-}
-
-impl<T> BucketLru<T> {
-    pub fn new(cap: usize) -> BucketLru<T> {
-        BucketLru { values: Vec::new(), order: LruPolicy::new(), cap: cap.max(1) }
-    }
-
-    pub fn cap(&self) -> usize {
-        self.cap
-    }
-
-    pub fn len(&self) -> usize {
-        self.values.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.values.is_empty()
-    }
-
-    /// Look up `bucket`, marking it most-recently-used on a hit.
-    pub fn get(&mut self, bucket: usize) -> Option<&T> {
-        let pos = self.values.iter().position(|(b, _)| *b == bucket)?;
-        self.order.note_touch(bucket);
-        self.values.get(pos).map(|(_, t)| t)
-    }
-
-    /// Insert a new entry (the key must not be present) and return
-    /// everything evicted to respect `cap`, least-recently-used first.
-    /// Each evicted entry is returned exactly once — the caller owns
-    /// releasing its backing resource (e.g. `Client::evict`).
-    pub fn insert(&mut self, bucket: usize, value: T) -> Vec<(usize, T)> {
-        debug_assert!(
-            self.values.iter().all(|(b, _)| *b != bucket),
-            "BucketLru::insert on a present key {bucket}"
-        );
-        self.values.push((bucket, value));
-        self.order.note_insert(bucket);
-        let mut evicted = Vec::new();
-        while self.values.len() > self.cap {
-            // Executables are never pinned: the LRU key always goes.
-            let victim = self.order.victim(&|_| true).expect("non-empty over-cap cache");
-            self.order.note_remove(victim);
-            let pos = self
-                .values
-                .iter()
-                .position(|(b, _)| *b == victim)
-                .expect("policy key backed by a value");
-            evicted.push(self.values.remove(pos));
-        }
-        evicted
-    }
-
-    /// Buckets currently cached, least-recently-used first.
-    pub fn keys(&self) -> Vec<usize> {
-        self.order.keys().copied().collect()
-    }
-}
+/// Since §L10 the whole cache — value storage, entry cap, and the
+/// §L9 shared recency policy — is the generic `util::lru::LruCache`;
+/// this alias pins the key type to the sequence-length bucket. (The
+/// prefix-page cache keeps composing `LruPolicy` directly: it evicts
+/// on pool pressure with refcount pinning, not on entry count.)
+pub type BucketLru<T> = LruCache<usize, T>;
 
 /// Cached step state, in meta.json order.
 enum CachedState {

@@ -20,10 +20,6 @@ fn parse_trimmed<T: std::str::FromStr>(raw: Option<String>) -> Option<T> {
     raw.and_then(|s| s.trim().parse::<T>().ok())
 }
 
-fn parsed<T: std::str::FromStr>(key: &str) -> Option<T> {
-    parse_trimmed(std::env::var(key).ok())
-}
-
 fn at_least(v: Option<usize>, min: usize, default: usize) -> usize {
     v.filter(|&n| n >= min).unwrap_or(default)
 }
@@ -43,27 +39,51 @@ pub fn flag(key: &str) -> bool {
 }
 
 pub fn usize_or(key: &str, default: usize) -> usize {
-    parsed(key).unwrap_or(default)
+    usize_or_from(std::env::var(key).ok(), default)
 }
 
 /// `usize` with a validity floor: values below `min` fall back to the
 /// default (e.g. replica counts must be >= 1).
 pub fn usize_at_least(key: &str, min: usize, default: usize) -> usize {
-    at_least(parsed(key), min, default)
+    usize_at_least_from(std::env::var(key).ok(), min, default)
 }
 
 pub fn u64_or(key: &str, default: u64) -> u64 {
-    parsed(key).unwrap_or(default)
+    u64_or_from(std::env::var(key).ok(), default)
 }
 
 pub fn f64_or(key: &str, default: f64) -> f64 {
-    finite_or(parsed(key), default)
+    f64_or_from(std::env::var(key).ok(), default)
 }
 
 /// Optional knob where 0 (or unset / unparsable) means "off" — e.g.
 /// `ALTUP_REQUEST_TIMEOUT_MS`.
 pub fn opt_u64_nonzero(key: &str) -> Option<u64> {
-    nonzero(parsed(key))
+    opt_u64_nonzero_from(std::env::var(key).ok())
+}
+
+// Pure cores behind each typed accessor: the public helpers above are
+// one env read plus one of these, so the fallback contract per
+// accessor is testable without touching the process environment.
+
+fn usize_or_from(raw: Option<String>, default: usize) -> usize {
+    parse_trimmed(raw).unwrap_or(default)
+}
+
+fn usize_at_least_from(raw: Option<String>, min: usize, default: usize) -> usize {
+    at_least(parse_trimmed(raw), min, default)
+}
+
+fn u64_or_from(raw: Option<String>, default: u64) -> u64 {
+    parse_trimmed(raw).unwrap_or(default)
+}
+
+fn f64_or_from(raw: Option<String>, default: f64) -> f64 {
+    finite_or(parse_trimmed(raw), default)
+}
+
+fn opt_u64_nonzero_from(raw: Option<String>) -> Option<u64> {
+    nonzero(parse_trimmed(raw))
 }
 
 #[cfg(test)]
@@ -107,6 +127,50 @@ mod tests {
         assert_eq!(finite_or(parse_trimmed(s("inf")), 0.75), 0.75);
         assert_eq!(finite_or(parse_trimmed(s("0.5")), 0.75), 0.5);
         assert_eq!(finite_or(None, 0.8), 0.8);
+    }
+
+    /// §L10 satellite: every malformed shape an operator can type into
+    /// an `ALTUP_*` knob — garbage text, negatives, overflow past the
+    /// integer width, scientific notation, blank values — must fall
+    /// back to the accessor's default without panicking, pinned per
+    /// typed accessor (not just for the shared parse layer).
+    #[test]
+    fn malformed_values_fall_back_per_accessor() {
+        let bad = [
+            "abc",                      // non-numeric
+            "-3",                       // negative into unsigned
+            "1e3",                      // scientific notation (ints reject)
+            "99999999999999999999999",  // overflows u64/usize
+            "",                         // set-but-empty
+            "   ",                      // whitespace only
+            "4.5",                      // fractional into an int knob
+            "0x10",                     // hex prefix (FromStr rejects)
+        ];
+        for raw in bad {
+            assert_eq!(usize_or_from(s(raw), 7), 7, "usize_or({raw:?})");
+            assert_eq!(usize_at_least_from(s(raw), 1, 8), 8, "usize_at_least({raw:?})");
+            assert_eq!(u64_or_from(s(raw), 9), 9, "u64_or({raw:?})");
+            assert_eq!(opt_u64_nonzero_from(s(raw)), None, "opt_u64_nonzero({raw:?})");
+        }
+        // f64 parses more shapes ("1e3", "4.5", "-3" are valid floats);
+        // its malformed set is the truly unparsable plus non-finite.
+        for raw in ["abc", "", "   ", "NaN", "inf", "-inf", "0x10"] {
+            assert_eq!(f64_or_from(s(raw), 0.75), 0.75, "f64_or({raw:?})");
+        }
+        assert_eq!(f64_or_from(s("1e3"), 0.75), 1000.0, "f64 accepts scientific");
+        assert_eq!(f64_or_from(s("-3"), 0.75), -3.0, "f64 accepts negatives");
+    }
+
+    /// Well-formed values survive each accessor's validity filter.
+    #[test]
+    fn well_formed_values_pass_per_accessor() {
+        assert_eq!(usize_or_from(s(" 12 "), 7), 12);
+        assert_eq!(usize_at_least_from(s("0"), 1, 8), 8, "below floor -> default");
+        assert_eq!(usize_at_least_from(s("3"), 1, 8), 3);
+        assert_eq!(u64_or_from(s("9000000000"), 9), 9_000_000_000);
+        assert_eq!(f64_or_from(s("0.5"), 0.75), 0.5);
+        assert_eq!(opt_u64_nonzero_from(s("0")), None, "0 means off");
+        assert_eq!(opt_u64_nonzero_from(s("250")), Some(250));
     }
 
     #[test]

@@ -64,6 +64,79 @@ impl<K: Copy + PartialEq> LruPolicy<K> {
     }
 }
 
+/// A bounded value-carrying cache over `LruPolicy`: the policy's key
+/// ordering plus what every capacity-evicting cache needs on top —
+/// value storage, a hard entry cap, and exactly-once hand-back of
+/// evicted entries.
+///
+/// Extracted in §L10 from `runtime::session::BucketLru` (now a type
+/// alias over this) so the next cap-bounded cache doesn't re-derive
+/// the same insert/evict loop. Callers that evict on external pressure
+/// instead of entry count (the prefix-page cache) keep composing
+/// `LruPolicy` directly.
+pub struct LruCache<K, V> {
+    values: Vec<(K, V)>,
+    order: LruPolicy<K>,
+    cap: usize,
+}
+
+impl<K: Copy + PartialEq, V> LruCache<K, V> {
+    /// A cache holding at most `cap` entries (clamped to >= 1).
+    pub fn new(cap: usize) -> LruCache<K, V> {
+        LruCache { values: Vec::new(), order: LruPolicy::new(), cap: cap.max(1) }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Look up `key`, marking it most-recently-used on a hit.
+    pub fn get(&mut self, key: K) -> Option<&V> {
+        let pos = self.values.iter().position(|(k, _)| *k == key)?;
+        self.order.note_touch(key);
+        self.values.get(pos).map(|(_, v)| v)
+    }
+
+    /// Insert a new entry (the key must not be present) and return
+    /// everything evicted to respect `cap`, least-recently-used first.
+    /// Each evicted entry is returned exactly once — the caller owns
+    /// releasing its backing resource (e.g. `Client::evict`).
+    pub fn insert(&mut self, key: K, value: V) -> Vec<(K, V)> {
+        debug_assert!(
+            self.values.iter().all(|(k, _)| *k != key),
+            "LruCache::insert on a present key"
+        );
+        self.values.push((key, value));
+        self.order.note_insert(key);
+        let mut evicted = Vec::new();
+        while self.values.len() > self.cap {
+            // Entries are never pinned here: the LRU key always goes.
+            let victim = self.order.victim(&|_| true).expect("non-empty over-cap cache");
+            self.order.note_remove(victim);
+            let pos = self
+                .values
+                .iter()
+                .position(|(k, _)| *k == victim)
+                .expect("policy key backed by a value");
+            evicted.push(self.values.remove(pos));
+        }
+        evicted
+    }
+
+    /// Keys currently cached, least-recently-used first.
+    pub fn keys(&self) -> Vec<K> {
+        self.order.keys().copied().collect()
+    }
+}
+
 impl<K: Copy + PartialEq> EvictionPolicy<K> for LruPolicy<K> {
     fn note_insert(&mut self, key: K) {
         debug_assert!(

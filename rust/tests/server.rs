@@ -6,6 +6,7 @@
 //! parity, EOS early-exit, stats merging, crash recovery, shedding,
 //! and drain are exercised in every build.
 
+use altup::coordinator::admission::parse_tenant_spec;
 use altup::coordinator::server::{
     EngineSpec, FailReason, Request, Response, ServerHandle, ServerOptions, ServerStats,
     SimPoolSpec, SimSpec, ROUTER_ID,
@@ -56,6 +57,12 @@ fn opts(replicas: usize, bucketed: bool) -> ServerOptions {
         max_retries: 2,
         replica_restarts: 2,
         spec_gamma: 0,
+        tenants: Vec::new(),
+        autoscale: 0,
+        // 1 ms base backoff keeps the recovery tests as fast as the
+        // pre-backoff spawn-on-crash behavior; the backoff test below
+        // raises it explicitly.
+        restart_backoff_ms: 1,
     }
 }
 
@@ -997,4 +1004,141 @@ fn prefix_cache_evicts_under_pool_pressure() {
     assert!(stats.pool.peak_used <= 10, "never exceeds physical capacity");
     assert_eq!(stats.pool.prefix_hits, 0, "distinct prompts: churn, not reuse");
     assert!(stats.pool.prefix_lookups > 0);
+}
+
+/// §L10 satellite regression: a poison-pill replica (every engine call
+/// panics) burns the restart budget through exponential backoff —
+/// seconds of wall clock spread over the budget, not a millisecond
+/// crash-loop — while the request still reaches an explicit terminal
+/// failure and the fleet is never reported dead prematurely.
+#[test]
+fn poison_pill_replica_burns_restart_budget_slowly() {
+    let mut spec = sim_spec();
+    spec.fault.panic_rate = 1.0;
+    let options =
+        ServerOptions { replica_restarts: 3, restart_backoff_ms: 60, ..copts(1, 2) };
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), options);
+    let t0 = Instant::now();
+    let resp = server.infer_response(prompt(5)).expect("terminal response");
+    let elapsed = t0.elapsed();
+    assert_eq!(resp.failure, Some(FailReason::RetriesExhausted));
+    // Crash 1 respawns after >= 0.75 x 60 ms, crash 2 after
+    // >= 0.75 x 120 ms; the request fails on its third attempt, so at
+    // least those two backoffs are on its clock. Without backoff the
+    // whole crash-loop resolves in single-digit milliseconds.
+    assert!(
+        elapsed >= Duration::from_millis(130),
+        "restart budget burned too fast: {elapsed:?}"
+    );
+    assert!(elapsed < Duration::from_secs(5), "backoff must stay bounded: {elapsed:?}");
+    let stats = server.shutdown().expect("budget not exhausted: clean shutdown");
+    assert!(
+        (2..=3).contains(&stats.restarts),
+        "respawns follow the backoff schedule: {}",
+        stats.restarts
+    );
+}
+
+/// §L10 satellite regression (pre-expiry audit on the §L9 paged path):
+/// a pending request whose deadline expires while an earlier group's
+/// prefill runs is shed *before* the pool gate spends prefix-cache
+/// probes or page reservations on it. Neither of B's outcomes here —
+/// shed by the between-iterations deadline pass or by the fresh-clock
+/// admission check — may cost a prefill or a cache probe.
+#[test]
+fn paged_admission_sheds_expired_before_spending_pool_work() {
+    // token_ns 6 ms: L's bucket-8 prefill holds the replica ~48 ms, so
+    // A and B are both pending when the next admission pass starts,
+    // and A's own 48 ms prefill pushes the clock past B's deadline
+    // before B's candidacy is examined.
+    let mut spec = paged_spec(8, 64, true);
+    spec.token_ns = 6_000_000;
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), copts(1, 4));
+
+    let (l_tx, l_rx) = std::sync::mpsc::channel();
+    server.sender.send(Request::new(prompt(3), l_tx)).unwrap();
+    std::thread::sleep(Duration::from_millis(10)); // L ships alone
+    let (a_tx, a_rx) = std::sync::mpsc::channel();
+    server.sender.send(Request::new(prompt(4), a_tx)).unwrap();
+    let (b_tx, b_rx) = std::sync::mpsc::channel();
+    let b = Request::with_deadline(
+        prompt(64),
+        b_tx,
+        Instant::now() + Duration::from_millis(60),
+    );
+    server.sender.send(b).unwrap();
+
+    assert!(l_rx.recv().unwrap().failure.is_none(), "L serves normally");
+    assert!(a_rx.recv().unwrap().failure.is_none(), "A serves normally");
+    let b_resp = b_rx.recv().unwrap();
+    assert_eq!(b_resp.failure, Some(FailReason::DeadlineExceeded));
+    assert!(b_resp.tokens.is_empty());
+
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.sheds, 1);
+    assert_eq!(stats.prefills, 2, "only L and A prefilled; doomed B never did");
+    // prompt(3)/prompt(4) are under one full page, so a correct shed
+    // leaves the probe counter at exactly zero — B's 8 full chunks are
+    // the only possible source of lookups.
+    assert_eq!(stats.pool.prefix_lookups, 0, "B's chunks were never probed");
+}
+
+/// §L10 tentpole end-to-end: per-tenant token buckets shed a
+/// rate-limited tenant's burst with explicit `QueueFull` failures
+/// while an unlimited higher-priority tenant is untouched, and the
+/// per-tenant meters account every terminal outcome.
+#[test]
+fn tenant_rate_limit_sheds_and_per_tenant_meters_account() {
+    let tenants = parse_tenant_spec("free:0:1:5:4:0;gold:2:4:0:0:2000");
+    let options = ServerOptions { tenants, ..copts(1, 4) };
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(sim_spec()), options);
+
+    // 12 instantaneous free-tenant arrivals against a 4-request burst
+    // allowance (refill 5/s = one token per 200 ms: even a slow CI
+    // machine refills at most ~1 extra token during the burst).
+    let mut free = Vec::new();
+    for i in 0..12 {
+        let (tx, rx) = std::sync::mpsc::channel();
+        server.sender.send(Request::for_tenant(prompt(3 + i), tx, 0, 0)).unwrap();
+        free.push(rx);
+    }
+    let mut gold = Vec::new();
+    for i in 0..6 {
+        let (tx, rx) = std::sync::mpsc::channel();
+        server.sender.send(Request::for_tenant(prompt(20 + i), tx, 1, 2)).unwrap();
+        gold.push(rx);
+    }
+
+    let free_resp: Vec<Response> = free.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let gold_resp: Vec<Response> = gold.into_iter().map(|rx| rx.recv().unwrap()).collect();
+
+    let free_ok = free_resp.iter().filter(|r| r.failure.is_none()).count();
+    let free_shed = free_resp.len() - free_ok;
+    assert!((4..=6).contains(&free_ok), "burst allowance honored: {free_ok} served");
+    assert!(free_shed >= 6, "the burst beyond the bucket is shed: {free_shed}");
+    for r in free_resp.iter().filter(|r| r.failure.is_some()) {
+        assert_eq!(r.failure, Some(FailReason::QueueFull), "rate sheds are explicit");
+        assert!(r.tokens.is_empty());
+    }
+    for r in &gold_resp {
+        assert!(r.failure.is_none(), "unlimited tenant untouched: {:?}", r.failure);
+        assert_eq!(*r.tokens.last().unwrap(), EOS);
+    }
+
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.requests, free_ok + gold_resp.len());
+    assert_eq!(stats.failed, free_shed);
+    assert_eq!(stats.sheds, free_shed, "admission rejections count as sheds");
+    // Per-tenant meters: outcomes land on the right tenant.
+    assert_eq!(stats.tenants.len(), 2);
+    assert_eq!(stats.tenants[0].requests as usize, free_ok);
+    assert_eq!(stats.tenants[0].sheds as usize, free_shed);
+    assert_eq!(stats.tenants[1].requests as usize, gold_resp.len());
+    assert_eq!(stats.tenants[1].sheds, 0);
+    // Gold's 2 s SLO is trivially met by the zero-cost sim: perfect
+    // per-tenant goodput; free (no SLO) counts completions as goodput.
+    assert_eq!(stats.tenants[1].slo_hits as usize, gold_resp.len());
+    assert!((stats.tenants[1].goodput_ratio() - 1.0).abs() < 1e-12);
+    assert_eq!(stats.tenants[0].slo_hits as usize, free_ok);
 }
