@@ -50,6 +50,23 @@ budget, terminal responses for every request):
   Bars: every request terminal, gold p95 within SLO under chaos,
   >= 80% of sheds on the lowest class, chaos goodput >= 0.8x clean.
 
+- §L11 rolling weight swap: a mirror of ``coordinator::deploy`` — one
+  replica drained at a time (the §L7 drain lever, scoped to a single
+  target), the successor rejoining as a canary that must answer a
+  pinned probe set at exact token parity with the old version before
+  it serves ANY live traffic, then survive a probation window's error
+  and p95-vs-fleet-EWMA gates; a failing canary is abandoned and the
+  drained slot reloads the old version (automatic rollback). Crash
+  respawns mid-rollout land on the DECIDED version; rollout-owned
+  exits (drains, abandoned canaries) spend no §L7 restart budget; a
+  per-version ledger partitions the global request/failure counters.
+  Four arms on the same burst trace, swap fired at 25% of the span:
+  no-swap, rolling upgrade, rolling + replica kill, and a wrong-token
+  bad version. Bars: rolling + chaos arms complete with zero failed
+  requests at >= 0.85x no-swap goodput, the bad arm rolls back with
+  zero canary passes, and every arm's response-token hash matches the
+  no-swap arm (rollback pins old-version outputs).
+
 This lets the serving-policy numbers (continuous vs batch QPS, p95,
 early-exit savings, occupancy, degraded-mode QPS) be measured on
 machines without a cargo toolchain or a PJRT backend. The Rust bench is
@@ -120,6 +137,19 @@ OVERLOAD_HOLD_S = 0.3
 CALM_HOLD_S = 0.5
 RATE_WINDOW_S = 0.25
 RATE_ALPHA = 0.3
+# §L11 rolling-swap A/B shape (mirrors the bench swap_opts: paged cont
+# x2 fleet with a pool roomy enough that §L9 pressure can never fail a
+# canary, rollout fired at 25% of the trace span, successor 0.9x cost).
+SWAP_COST_MULT = 0.9
+SWAP_KILL_CALL = 220
+SWAP_POOL_PAGES = 192
+SWAP_PROBATION = 12            # DeployOptions::probation
+SWAP_PROBATION_S = 0.3         # DeployOptions::probation_ms
+SWAP_PROBES = 2                # DeployOptions::probes
+SWAP_MAX_ERR = 0.25            # DeployOptions::max_err
+SWAP_LAT_FACTOR = 8.0          # DeployOptions::lat_factor
+SWAP_HOLD_S = 15.0             # DeployOptions::hold_ms
+BAD_VERSION_SALT = 0x0BAD5EED0BAD5EED  # coordinator::server constant
 
 
 class Rng:
@@ -1256,6 +1286,598 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
     return qps, stats
 
 
+def probe_prompts(count, enc_len):
+    """Pinned canary probe set, bit-for-bit `deploy::probe_prompts`."""
+    out = []
+    for k in range(count):
+        ln = min(max(enc_len // 2 + k + 1, 1), max(enc_len, 1))
+        out.append([2 + ((i * 7 + k * 131) % 89) for i in range(ln)])
+    return out
+
+
+def sim_token(h, j, vocab):
+    """Decode token at position j (coordinator::server::sim_token)."""
+    x = ((h * (j + 1)) + 0x9E3779B97F4A7C15) & MASK
+    x ^= x >> 29
+    return 2 + (x % (max(vocab, 3) - 2))
+
+
+def sim_row_tokens(h, dec_len, salt):
+    """EOS-truncated decode row for a weight version: EOS position and
+    generation length key off the UNSALTED hash (a wrong-token version
+    is cost-identical to the old one — only the §L11 parity probe can
+    tell them apart), token values off the salted one."""
+    g = sim_gen_len(h, dec_len)
+    return [1 if j + 1 == g else sim_token((h ^ salt) & MASK, j, VOCAB)
+            for j in range(g)]
+
+
+def probe_rows(salt):
+    """What a version answers on the pinned probes — the canary gate's
+    token-parity fingerprint."""
+    return [
+        sim_row_tokens(sim_row_hash(p), DEC_LEN, salt)
+        for p in probe_prompts(min(SWAP_PROBES, BATCH_SIZE), ENC_LEN)
+    ]
+
+
+def swap_status_str(status):
+    """DeployStatus Display mirror (the JSON stores these strings)."""
+    s, n, r = status["state"], status["swapped"], status["reason"]
+    if s == "idle":
+        return "idle"
+    if s == "in_progress":
+        return f"rolling out v1: {n}/2 replicas swapped"
+    if s == "completed":
+        return f"completed: {n} replica(s) on v1"
+    if s == "rolled_back":
+        return f"rolled back v1 after {n} swap(s): {r}"
+    return f"rollout of v1 aborted: {r}"
+
+
+def run_swap_trace(trace, swap_salt=None, fault=None):
+    """One §L11 arm: the burst trace replayed open-loop through a paged
+    cont x2 fleet (no QoS — every request runs to completion), with a
+    rollout to a version of ``swap_salt`` (None = no rollout, 0 =
+    healthy successor at SWAP_COST_MULT cost, BAD_VERSION_SALT =
+    wrong-token successor) fired once the wall clock passes 25% of the
+    trace span. Mirrors the bench's drive_trace_swap: the run does not
+    shut down until the rollout reaches a terminal verdict, wall stops
+    at the last response (a post-trace probation must not deflate
+    qps), and the response-token hash folds every reply in submission
+    order. Returns (qps, stats, deploy, status, token_hash)."""
+    span_s = max(trace[-1][0] / 1e6, 1e-9)
+    swap_at = span_s * 0.25
+    replicas, slots_n = 2, BATCH_SIZE
+    versions = {0: {"salt": 0, "mult": 1.0}}
+    if swap_salt is not None:
+        versions[1] = {"salt": swap_salt & MASK, "mult": SWAP_COST_MULT}
+
+    req_q = queue.Queue()
+    job_q = queue.Queue(maxsize=replicas)
+    exit_q = queue.Queue()
+    deploy_q = queue.Queue()       # ("probe", rid, rows) from canaries
+    stats = Stats()
+    stats.pool_capacity = SWAP_POOL_PAGES
+    state = {
+        "live": set(range(replicas)),
+        "version": {r: 0 for r in range(replicas)},
+        "decided": 0,              # crash respawns land on this version
+        "restarts_left": RESTARTS,
+        "next_id": replicas,
+        "threads": [],
+        "stops_sent": False,
+    }
+    # DeployShared mirror: a drain lever scoped to one replica, and the
+    # canary's admission gate (verdict set by the router, Event wakes
+    # the held canary).
+    drain_ev = {}
+    gates = {}
+    deploy = {"canary_pass": 0, "canary_fail": 0, "rollbacks": 0,
+              "completed": 0, "aborted": 0,
+              "versions": {0: {"requests": 0, "failed": 0, "sheds": 0,
+                               "lat_ms": []}}}
+    status = {"state": "idle", "swapped": 0, "reason": ""}
+
+    kills = []
+    if fault:
+        kills = [(fault["kill_replica"], max(fault["kill_after_calls"], 1))]
+
+    def vmeter(v):
+        return deploy["versions"].setdefault(
+            v, {"requests": 0, "failed": 0, "sheds": 0, "lat_ms": []})
+
+    def note_ok(v, latency_s, generated, saved, prompt):
+        with stats.lock:
+            stats.note_response(latency_s, generated, saved, prompt)
+            m = vmeter(v)
+            m["requests"] += 1
+            m["lat_ms"].append(latency_s * 1e3)
+
+    def note_fail(v):
+        with stats.lock:
+            stats.note_failure()
+            vmeter(v)["failed"] += 1
+
+    def replica(rid, version, canary=False):
+        vs = versions[version]
+        t_ns = int(TOKEN_NS * vs["mult"])
+        dt_ns = int(DTOKEN_NS * vs["mult"])
+        ds_ns = int(DSTEP_NS * vs["mult"])
+        calls = [0]
+
+        def bump():
+            calls[0] += 1
+            for kr, kc in kills:
+                if kr == rid and calls[0] >= kc:
+                    raise InjectedKill(f"replica {rid} @ call {calls[0]}")
+
+        if canary:
+            # Canary gate (deploy::canary_gate): decode the pinned
+            # probes BEFORE pulling any live traffic, publish the rows,
+            # hold for the router's verdict. An abandoned canary exits
+            # having served exactly zero client requests.
+            rows = probe_rows(vs["salt"])
+            for p in probe_prompts(min(SWAP_PROBES, BATCH_SIZE), ENC_LEN):
+                g = sim_gen_len(sim_row_hash(p), DEC_LEN)
+                nsleep(ds_ns + t_ns * len(p) + g * (ds_ns + dt_ns))
+            deploy_q.put(("probe", rid, rows))
+            gate = gates[rid]
+            gate["event"].wait(SWAP_HOLD_S)
+            if gate["verdict"] != "admit":
+                exit_q.put(("exit", rid, []))
+                return
+
+        pending = deque()
+        active = [None] * slots_n
+        admitting = []
+        router_gone = False
+        retiring = False
+        pool = PagePool(PAGE_SIZE, SWAP_POOL_PAGES)
+        tables = [[] for _ in range(slots_n)]
+
+        def stash(job):
+            bucket, group = job
+            for req in group:
+                pending.append((bucket, req))
+
+        try:
+            while True:
+                # take_drain: once the lever targets us, stop pulling
+                # new work; in-flight slots run to completion and
+                # untouched pending hands back to the router.
+                if not retiring and drain_ev.get(rid) is not None \
+                        and drain_ev[rid].is_set():
+                    retiring = True
+                n_live = sum(1 for a in active if a is not None)
+                if not router_gone and not retiring:
+                    if n_live == 0 and not pending:
+                        try:
+                            job = job_q.get(timeout=0.025)
+                        except queue.Empty:
+                            job = ()   # idle tick: re-check the lever
+                        if job is None:
+                            router_gone = True
+                        elif job:
+                            stash(job)
+                    while len(pending) < slots_n and not router_gone:
+                        try:
+                            job = job_q.get_nowait()
+                        except queue.Empty:
+                            break
+                        if job is None:
+                            router_gone = True
+                        else:
+                            stash(job)
+                for s in range(slots_n):
+                    if active[s] is None and tables[s]:
+                        for page in tables[s]:
+                            pool.release(page)
+                        tables[s] = []
+                free = deque(i for i, a in enumerate(active) if a is None)
+                stalled = False
+                while free and pending and not stalled and not retiring:
+                    bucket = pending[0][0]
+                    admitting = []
+                    ids = []
+                    while (pending and pending[0][0] == bucket and free
+                           and len(admitting) < BATCH_SIZE):
+                        req = pending[0][1]
+                        total = pages_for(bucket + DEC_LEN, pool.page_size)
+                        if total > pool.capacity:
+                            pending.popleft()
+                            note_fail(version)
+                            req[2].put(("fail",))
+                            continue
+                        if pool.free_pages() < total:
+                            with stats.lock:
+                                stats.alloc_stalls += 1
+                            stalled = True
+                            break
+                        pending.popleft()
+                        sid = free.popleft()
+                        while len(tables[sid]) < total:
+                            tables[sid].append(pool.alloc())
+                        admitting.append((bucket, req))
+                        ids.append(sid)
+                    if not admitting:
+                        continue
+                    bump()
+                    nsleep(ds_ns + t_ns * len(admitting) * bucket)
+                    with stats.lock:
+                        stats.batches += 1
+                        stats.total_fill += len(admitting)
+                        stats.executed_tokens += len(admitting) * bucket
+                    for (b, req), sid in zip(admitting, ids):
+                        active[sid] = [req, 0, b]
+                    admitting = []
+                n_live = sum(1 for a in active if a is not None)
+                if n_live == 0:
+                    if retiring:
+                        exit_q.put(("drained", rid, list(pending)))
+                        return
+                    if router_gone and not pending:
+                        exit_q.put(("exit", rid, []))
+                        return
+                    continue
+                used = pool.used_pages()
+                with stats.lock:
+                    stats.pool_used_sum += used
+                    stats.pool_samples += 1
+                    stats.pool_peak = max(stats.pool_peak, used)
+                bump()
+                nsleep(ds_ns + dt_ns * slots_n)
+                now = time.monotonic()
+                with stats.lock:
+                    stats.decode_steps += 1
+                    stats.occupancy_sum += n_live
+                for s, act in enumerate(active):
+                    if act is None:
+                        continue
+                    act[1] += 1
+                    req, emitted, bucket = act[0], act[1], act[2]
+                    if emitted >= req[4] or emitted >= DEC_LEN:
+                        active[s] = None
+                        note_ok(version, now - req[0], emitted,
+                                DEC_LEN - emitted, min(req[3], bucket))
+                        req[2].put(("ok", version))
+        except InjectedKill:
+            unfinished = list(pending) + list(admitting)
+            unfinished += [(a[2], a[0]) for a in active if a is not None]
+            exit_q.put(("crash", rid, unfinished))
+
+    def spawn(version, canary=False):
+        rid = state["next_id"]
+        state["next_id"] += 1
+        state["live"].add(rid)
+        state["version"][rid] = version
+        if canary:
+            gates[rid] = {"event": threading.Event(), "verdict": None}
+        t = threading.Thread(target=replica, args=(rid, version, canary),
+                             name=f"replica-{rid}")
+        state["threads"].append(t)
+        t.start()
+        return rid
+
+    # Rollout driver state, owned by the router thread.
+    ro = {"phase": None, "canary": None, "target": None, "baseline": None,
+          "admit_t": 0.0, "admit_req": 0, "admit_fail": 0,
+          "fleet_p95": 0.0, "v0_seen": 0, "started": False}
+
+    def old_target():
+        olds = [r for r in state["live"]
+                if state["version"][r] != 1 and r != ro["canary"]]
+        return min(olds) if olds else None
+
+    def abandon_canary():
+        # A failing canary is drained out (it may be mid-decode during
+        # probation); its untouched pending requeues like any drain.
+        cid = ro["canary"]
+        if cid is not None:
+            drain_ev[cid] = threading.Event()
+            drain_ev[cid].set()
+        ro["canary"] = None
+
+    def rollback(reason):
+        deploy["canary_fail"] += 1
+        deploy["rollbacks"] += 1
+        status.update(state="rolled_back", reason=reason)
+        ro["phase"] = None
+        ro["canary"] = None
+        state["decided"] = 0
+        spawn(0)  # the drained slot reloads the old version
+
+    def promote():
+        deploy["canary_pass"] += 1
+        status["swapped"] += 1
+        state["decided"] = 1
+        ro["canary"] = None
+        nxt = old_target()
+        if nxt is None:
+            status.update(state="completed")
+            deploy["completed"] += 1
+            ro["phase"] = None
+        else:
+            ro["phase"] = "draining"
+            ro["target"] = nxt
+            drain_ev[nxt] = threading.Event()
+            drain_ev[nxt].set()
+
+    def rollout_tick():
+        if ro["phase"] is None:
+            return
+        # Fleet p95 EWMA from old-version completions (0.8/0.2), the
+        # yardstick the canary's probation latency is judged against.
+        with stats.lock:
+            v0 = deploy["versions"][0]["lat_ms"]
+            if len(v0) > ro["v0_seen"]:
+                ro["v0_seen"] = len(v0)
+                p = percentile(v0, 95)
+                ro["fleet_p95"] = p if ro["fleet_p95"] == 0 \
+                    else 0.8 * ro["fleet_p95"] + 0.2 * p
+        if ro["phase"] != "probation" or ro["canary"] is None:
+            return
+        now = time.monotonic()
+        with stats.lock:
+            m = vmeter(1)
+            served = m["requests"] - ro["admit_req"]
+            failed = (m["failed"] - m["sheds"]) - ro["admit_fail"]
+            lat = list(m["lat_ms"][ro["admit_req"]:])
+        if served + failed < SWAP_PROBATION \
+                and now - ro["admit_t"] < SWAP_PROBATION_S:
+            return
+        err = failed / max(served + failed, 1)
+        if err > SWAP_MAX_ERR:
+            abandon_canary()
+            rollback(f"canary error rate {err:.2f} over {SWAP_MAX_ERR}")
+        elif ro["fleet_p95"] > 0 and lat \
+                and percentile(lat, 95) > ro["fleet_p95"] * SWAP_LAT_FACTOR:
+            abandon_canary()
+            rollback("canary p95 blew the fleet latency gate")
+        else:
+            promote()
+
+    def handle_exit(ev, groups):
+        kind, rid, unfinished = ev
+        state["live"].discard(rid)
+        was_canary = rid == ro["canary"]
+        if kind == "drained" or (kind == "crash" and rid == ro["target"]
+                                 and ro["phase"] == "draining"):
+            # Old replica gone (drained clean, or crashed mid-drain):
+            # requeue its leftovers untouched — a drain spends neither
+            # retry nor restart budget — and bring up the canary.
+            for bucket, req in unfinished:
+                groups.setdefault(bucket, []).append(req)
+            if ro["phase"] == "draining" and rid == ro["target"]:
+                ro["target"] = None
+                ro["phase"] = "probing"
+                ro["canary"] = spawn(1, canary=True)
+            return
+        if kind == "exit":
+            if was_canary and ro["phase"] in ("probing", "probation"):
+                # Gate hold expired without a verdict.
+                rollback("canary abandoned at the gate")
+            return
+        # Crash: requeue in-flight (bounded retries). Canary crashes
+        # roll back WITHOUT spending §L7 restart budget; fleet crashes
+        # respawn on the DECIDED version within budget.
+        for bucket, req in unfinished:
+            attempts = req[5] + 1
+            if state["stops_sent"] or attempts > MAX_RETRIES:
+                note_fail(state["version"].get(rid, 0))
+                req[2].put(("fail",))
+            else:
+                with stats.lock:
+                    stats.retries += 1
+                groups.setdefault(bucket, []).append(
+                    (req[0], time.monotonic(), req[2], req[3], req[4],
+                     attempts, req[6], req[7], req[8], req[9]))
+        if was_canary:
+            rollback("canary crashed before completing probation")
+            return
+        if not state["stops_sent"] and state["restarts_left"] > 0:
+            state["restarts_left"] -= 1
+            with stats.lock:
+                stats.restarts += 1
+            spawn(state["decided"])
+
+    def router():
+        groups = {}
+        disconnected = False
+        start = time.monotonic()
+        while True:
+            while True:
+                try:
+                    ev = exit_q.get_nowait()
+                except queue.Empty:
+                    break
+                handle_exit(ev, groups)
+            # RolloutDriver::tick — fire, judge probes, gate probation.
+            if swap_salt is not None and not ro["started"] \
+                    and not disconnected \
+                    and time.monotonic() - start >= swap_at:
+                ro["started"] = True
+                ro["baseline"] = probe_rows(0)
+                vmeter(1)  # ledger row exists even if v1 never serves
+                status.update(state="in_progress")
+                tgt = old_target()
+                ro["phase"] = "draining"
+                ro["target"] = tgt
+                drain_ev[tgt] = threading.Event()
+                drain_ev[tgt].set()
+            while True:
+                try:
+                    what, cid, rows = deploy_q.get_nowait()
+                except queue.Empty:
+                    break
+                if what == "probe" and cid == ro["canary"]:
+                    gate = gates[cid]
+                    if rows == ro["baseline"]:
+                        gate["verdict"] = "admit"
+                        ro["phase"] = "probation"
+                        ro["admit_t"] = time.monotonic()
+                        with stats.lock:
+                            m = vmeter(1)
+                            ro["admit_req"] = m["requests"]
+                            ro["admit_fail"] = m["failed"] - m["sheds"]
+                    else:
+                        gate["verdict"] = "abandon"
+                        rollback("canary failed the token-parity probe")
+                    gate["event"].set()
+            rollout_tick()
+            if disconnected and ro["phase"] is not None:
+                # shutdown() mid-rollout: clean abort, then the full
+                # §L7 drain below still resolves every request.
+                abandon_canary()
+                deploy["aborted"] += 1
+                status.update(state="aborted", reason="server shut down")
+                ro["phase"] = None
+            dead = not state["live"] and state["restarts_left"] == 0
+            if dead:
+                for bucket in list(groups):
+                    for req in groups.pop(bucket):
+                        note_fail(0)
+                        req[2].put(("fail",))
+                while True:
+                    try:
+                        job = job_q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if job is not None:
+                        for req in job[1]:
+                            note_fail(0)
+                            req[2].put(("fail",))
+                if disconnected:
+                    return
+            now = time.monotonic()
+            full_unsent = False
+            due_unsent = False
+            order = [] if dead else sorted(groups, key=lambda b: -len(groups[b]))
+            for bucket in order:
+                if len(groups[bucket]) < BATCH_SIZE and not disconnected:
+                    continue
+                g = groups.pop(bucket)
+                while g:
+                    chunk, g = g[:BATCH_SIZE], g[BATCH_SIZE:]
+                    try:
+                        job_q.put_nowait((bucket, chunk))
+                    except queue.Full:
+                        groups[bucket] = chunk + g
+                        full_unsent = True
+                        break
+                if full_unsent:
+                    break
+            if not full_unsent and not dead and not disconnected:
+                for bucket in list(groups.keys()):
+                    group = groups[bucket]
+                    if now < group[0][1] + WINDOW_S:
+                        continue
+                    g = groups.pop(bucket)
+                    try:
+                        job_q.put_nowait((bucket, g))
+                    except queue.Full:
+                        groups[bucket] = g
+                        due_unsent = True
+                        break
+            if disconnected:
+                if not groups and not state["stops_sent"] \
+                        and ro["phase"] is None:
+                    for _ in range(len(state["live"])):
+                        job_q.put(None)
+                    state["stops_sent"] = True
+                if state["stops_sent"] and not state["live"]:
+                    return
+                try:
+                    handle_exit(exit_q.get(timeout=0.05), groups)
+                except queue.Empty:
+                    pass
+                continue
+            msg = None
+            if full_unsent or due_unsent:
+                wait = max(WINDOW_S, 0.0002)
+            elif not groups:
+                wait = 0.025
+            else:
+                oldest = min(g[0][1] for g in groups.values())
+                wait = oldest + WINDOW_S - time.monotonic()
+            if full_unsent:
+                time.sleep(min(wait, 0.025))
+            elif wait > 0:
+                try:
+                    m = req_q.get(timeout=min(wait, 0.025))
+                    if m is None:
+                        disconnected = True
+                    else:
+                        msg = m
+                except queue.Empty:
+                    pass
+            if msg is not None:
+                t0, reply, length, gen_len, h, chunks, tenant = msg
+                rec = (t0, time.monotonic(), reply, length, gen_len, 0, h,
+                       chunks, tenant, None)
+                groups.setdefault(bucket_for(length, ENC_LEN), []).append(rec)
+
+    replies = []
+
+    def feeder():
+        start = time.monotonic()
+        for at_us, tenant, length, h, chunks in trace:
+            delay = start + at_us / 1e6 - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            reply = queue.SimpleQueue()
+            replies.append((reply, h))
+            req_q.put((time.monotonic(), reply, length,
+                       sim_gen_len(h, DEC_LEN), h, chunks, tenant))
+
+    router_thread = threading.Thread(target=router, name="router")
+    state["threads"] = [
+        threading.Thread(target=replica, args=(i, 0), name=f"replica-{i}")
+        for i in range(replicas)
+    ]
+    feed = threading.Thread(target=feeder, name="feeder")
+    t_start = time.monotonic()
+    for t in [router_thread] + state["threads"] + [feed]:
+        t.start()
+    feed.join()
+    # Response-token parity fingerprint, folded in submission order
+    # exactly like the bench (FNV over each row, then the row length
+    # mixed in; a failed request contributes nothing either way).
+    salts = {v: versions[v]["salt"] for v in versions}
+    token_hash = 0xCBF29CE484222325
+    for reply, h in replies:
+        out = reply.get()
+        if out[0] != "ok":
+            continue
+        toks = sim_row_tokens(h, DEC_LEN, salts[out[1]])
+        for t in toks:
+            token_hash = ((token_hash ^ t) * 0x00000100000001B3) & MASK
+        token_hash ^= (len(toks) << 17) & MASK
+    wall = time.monotonic() - t_start
+    # The rollout must reach a terminal verdict before the drain (the
+    # bench polls deploy_status the same way) — the swap outcome is
+    # part of the measurement, never racing shutdown.
+    if swap_salt is not None:
+        deadline = time.monotonic() + 120
+        while status["state"] in ("idle", "in_progress"):
+            assert time.monotonic() < deadline, "rollout wedged"
+            time.sleep(0.01)
+    req_q.put(None)
+    router_thread.join()
+    for t in state["threads"]:
+        t.join()
+    qps = len(trace) / max(wall, 1e-9)
+    # Terminal accounting + the per-version ledger partition invariant
+    # (ensure!d on every run in the bench).
+    assert stats.requests + stats.failed == len(trace), (
+        stats.requests, stats.failed, len(trace))
+    vr = sum(m["requests"] for m in deploy["versions"].values())
+    vf = sum(m["failed"] for m in deploy["versions"].values())
+    assert vr == stats.requests and vf == stats.failed, (
+        vr, vf, stats.requests, stats.failed)
+    return qps, stats, deploy, dict(status), token_hash
+
+
 def row(mode, replicas, qps, stats):
     r = {
         "mode": mode,
@@ -1543,6 +2165,76 @@ def main():
         o_gold["sheds"], o_gold_p95,
     )
 
+    # §L11 rolling-swap A/B on the same burst trace (mirrors the bench
+    # swap section): no-swap baseline, clean rolling upgrade, rolling
+    # upgrade + replica 1 killed mid-rollout, and a wrong-token bad
+    # version that must fail the canary's parity probe and roll back.
+    swap_at_s = trace_span * 0.25
+    sw_clean = run_swap_trace(trace)
+    sw_roll = run_swap_trace(trace, swap_salt=0)
+    sw_chaos = run_swap_trace(
+        trace, swap_salt=0,
+        fault={"kill_replica": 1, "kill_after_calls": SWAP_KILL_CALL})
+    sw_bad = run_swap_trace(trace, swap_salt=BAD_VERSION_SALT)
+
+    def sw_ratio(run):
+        return run[0] / sw_clean[0] if sw_clean[0] > 0 else 0.0
+
+    print(
+        f"swap trace ({len(trace)} reqs over {trace_span:.2f}s, rollout at "
+        f"{swap_at_s:.2f}s): no-swap {sw_clean[0]:.1f} qps | rolling "
+        f"{sw_roll[0]:.1f} qps ({sw_ratio(sw_roll):.2f}x) -> "
+        f"{swap_status_str(sw_roll[3])} | +kill@{SWAP_KILL_CALL} "
+        f"{sw_chaos[0]:.1f} qps ({sw_ratio(sw_chaos):.2f}x) -> "
+        f"{swap_status_str(sw_chaos[3])} | bad-version -> "
+        f"{swap_status_str(sw_bad[3])}"
+    )
+    print(
+        f"swap ledger: rolling v-requests "
+        f"{[sw_roll[2]['versions'][v]['requests'] for v in sorted(sw_roll[2]['versions'])]} "
+        f"({sw_roll[2]['canary_pass']} canary pass) | chaos v-requests "
+        f"{[sw_chaos[2]['versions'][v]['requests'] for v in sorted(sw_chaos[2]['versions'])]} "
+        f"({sw_chaos[1].restarts} restarts) | bad rollbacks "
+        f"{sw_bad[2]['rollbacks']} ({sw_bad[2]['canary_fail']} canary fail), "
+        f"parity {sw_bad[4] == sw_clean[4]}"
+    )
+    # §L11 acceptance bars (mirror the bench's ensure! block).
+    assert sw_roll[3]["state"] == "completed", sw_roll[3]
+    assert sw_chaos[3]["state"] == "completed", sw_chaos[3]
+    assert sw_bad[3]["state"] == "rolled_back", sw_bad[3]
+    assert sw_bad[2]["rollbacks"] >= 1 and sw_bad[2]["canary_pass"] == 0, (
+        sw_bad[2],
+    )
+    assert sw_roll[4] == sw_clean[4], (sw_roll[4], sw_clean[4])
+    assert sw_chaos[4] == sw_clean[4], (sw_chaos[4], sw_clean[4])
+    assert sw_bad[4] == sw_clean[4], (sw_bad[4], sw_clean[4])
+    assert sw_roll[1].failed == 0, sw_roll[1].failed
+    assert sw_chaos[1].failed == 0, sw_chaos[1].failed
+    assert sw_ratio(sw_roll) >= 0.85, sw_ratio(sw_roll)
+    assert sw_ratio(sw_chaos) >= 0.85, sw_ratio(sw_chaos)
+
+    def swap_arm_row(run):
+        qps_, stats_, dep, st, th = run
+        vs = sorted(dep["versions"])
+        return {
+            "qps": round(qps_, 1),
+            "requests": stats_.requests,
+            "failed": stats_.failed,
+            "sheds": stats_.sheds,
+            "retries": stats_.retries,
+            "restarts": stats_.restarts,
+            "terminal": stats_.requests + stats_.failed,
+            "status": swap_status_str(st),
+            "canary_pass": dep["canary_pass"],
+            "canary_fail": dep["canary_fail"],
+            "rollbacks": dep["rollbacks"],
+            "completed": dep["completed"],
+            "aborted": dep["aborted"],
+            "token_hash": f"{th:016x}",
+            "version_requests": [dep["versions"][v]["requests"] for v in vs],
+            "version_failed": [dep["versions"][v]["failed"] for v in vs],
+        }
+
     doc = {
         "bench": "server_throughput",
         "engine": "sim",
@@ -1635,6 +2327,29 @@ def main():
             "gold_slo_ms": gold_slo,
             "gold_p95_ms_qos": round(gold_p95, 2),
             "gold_p95_ms_qos_off": round(o_gold_p95, 2),
+        },
+        "deploy": {
+            "trace": QOS_TRACE,
+            "trace_requests": len(trace),
+            "trace_span_s": round(trace_span, 3),
+            "swap_at_s": round(swap_at_s, 3),
+            "cost_mult": SWAP_COST_MULT,
+            "chaos_schedule": {
+                "kill_replica": 1,
+                "kill_at_call": SWAP_KILL_CALL,
+            },
+            "bars_enforced": True,
+            "no_swap": swap_arm_row(sw_clean),
+            "rolling": swap_arm_row(sw_roll),
+            "rolling_chaos": swap_arm_row(sw_chaos),
+            "bad_version": swap_arm_row(sw_bad),
+            "goodput_ratio_rolling": round(sw_ratio(sw_roll), 3),
+            "goodput_ratio_chaos": round(sw_ratio(sw_chaos), 3),
+            "token_parity": {
+                "rolling": sw_roll[4] == sw_clean[4],
+                "rolling_chaos": sw_chaos[4] == sw_clean[4],
+                "bad_version_rollback": sw_bad[4] == sw_clean[4],
+            },
         },
         "producer": "python/tools/server_throughput_twin.py "
                     "(threaded twin; re-run `cargo bench --bench server_throughput -- --json` "

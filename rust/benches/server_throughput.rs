@@ -31,6 +31,10 @@
 //!                      (they assume the full 2x-capacity burst).
 //!   --qos-kill-call <c> §L10 chaos schedule: engine call at which
 //!                      replica 1 is killed mid-burst (default 600)
+//!   --swap <0|1>       run the §L11 rolling-weight-swap A/B on the
+//!                      burst trace (default 1; 0 skips)
+//!   --swap-kill-call <c> §L11 chaos arm: engine call at which replica
+//!                      1 is killed mid-rollout (default 220)
 //!
 //! Besides the L5/L6 grid, the bench runs a §L7 **degraded-mode A/B**
 //! (sim engine only): `cont x4` healthy vs `cont x4` with one replica
@@ -87,9 +91,10 @@
 //! early-exit, iteration-level admission) at the same replica count.
 
 use altup::coordinator::admission::{parse_tenant_spec, TenantSpec};
+use altup::coordinator::deploy::{DeployOptions, DeployStatus};
 use altup::coordinator::server::{
-    ChaosSpec, EngineSpec, Request, ServerHandle, ServerOptions, ServerStats, SimPoolSpec,
-    SimSpec,
+    BadVersionMode, ChaosSpec, EngineSpec, Request, ServerHandle, ServerOptions, ServerStats,
+    SimPoolSpec, SimSpec, SimSwapSpec,
 };
 use altup::runtime::artifact::load_named;
 use altup::runtime::pages::pages_for;
@@ -313,6 +318,110 @@ fn drive_trace(
     Ok((trace.len() as f64 / wall.max(1e-9), stats))
 }
 
+/// One §L11 swap-arm outcome: throughput, server stats, the rollout's
+/// terminal verdict, and an order-sensitive FNV hash over every
+/// response's token stream (the cross-arm output-parity fingerprint —
+/// trace replay answers in submission order, and the sim engine's
+/// tokens are a pure function of the prompt, so arms that serve the
+/// same versions hash identically regardless of scheduling).
+struct SwapRun {
+    qps: f64,
+    stats: ServerStats,
+    status: DeployStatus,
+    token_hash: u64,
+}
+
+/// §L11 open-loop trace replay with a rollout fired mid-burst:
+/// `swap_to` (if any) is `deploy_start`ed once the trace clock passes
+/// `swap_at`, the feeder keeps the offered load flowing throughout,
+/// and the run does not shut down until the rollout reaches a terminal
+/// `DeployStatus` — the swap outcome is part of the measurement, never
+/// racing the drain. The per-version ledger partition invariant is
+/// `ensure!`d on every run (the CI swap smoke re-checks it from JSON).
+fn drive_trace_swap(
+    engine: &EngineSpec,
+    opts: ServerOptions,
+    trace: &[TraceEvent],
+    swap_to: Option<EngineSpec>,
+    swap_at: Duration,
+) -> anyhow::Result<SwapRun> {
+    let server = ServerHandle::spawn_engine(engine.clone(), opts);
+    let sender = server.sender.clone();
+    let events: Vec<(u64, Vec<i32>)> =
+        trace.iter().map(|e| (e.arrival_us, e.prompt.clone())).collect();
+    let t0 = Instant::now();
+    let feeder = std::thread::spawn(move || {
+        let mut replies = Vec::with_capacity(events.len());
+        for (at_us, prompt) in events {
+            let due = t0 + Duration::from_micros(at_us);
+            if let Some(wait) = due.checked_duration_since(Instant::now()) {
+                std::thread::sleep(wait);
+            }
+            let (tx, rx) = std::sync::mpsc::channel();
+            if sender.send(Request::new(prompt, tx)).is_err() {
+                break;
+            }
+            replies.push(rx);
+        }
+        replies
+    });
+    // Fire the rollout from this thread mid-burst (`deploy_start` is
+    // non-blocking; the feeder keeps submitting independently).
+    let fired = swap_to.is_some();
+    if let Some(new_engine) = swap_to {
+        if let Some(wait) = (t0 + swap_at).checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        server.deploy_start(new_engine);
+    }
+    let replies = feeder.join().expect("trace feeder panicked");
+    anyhow::ensure!(
+        replies.len() == trace.len(),
+        "router disconnected mid-trace: {}/{} submitted",
+        replies.len(),
+        trace.len()
+    );
+    let mut token_hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for rx in &replies {
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("reply channel dropped"))?;
+        for &t in &resp.tokens {
+            token_hash = (token_hash ^ t as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        token_hash ^= (resp.tokens.len() as u64).rotate_left(17);
+    }
+    // Wall clock stops when the last response lands — the idle wait
+    // for a still-probating canary below must not deflate qps.
+    let wall = t0.elapsed().as_secs_f64();
+    if fired {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        while !server.deploy_status().terminal() {
+            anyhow::ensure!(Instant::now() < deadline, "rollout wedged (never terminal)");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    let status = server.deploy_status();
+    let stats = server.shutdown()?;
+    anyhow::ensure!(
+        stats.requests + stats.failed == trace.len(),
+        "terminal accounting: {} ok + {} failed != {} submitted",
+        stats.requests,
+        stats.failed,
+        trace.len()
+    );
+    let (vr, vf) = stats
+        .deploy
+        .versions
+        .iter()
+        .fold((0u64, 0u64), |(a, b), m| (a + m.requests, b + m.failed));
+    anyhow::ensure!(
+        vr as usize == stats.requests && vf as usize == stats.failed,
+        "per-version ledger disagrees with totals: {vr}+{vf} vs {}+{}",
+        stats.requests,
+        stats.failed
+    );
+    Ok(SwapRun { qps: trace.len() as f64 / wall.max(1e-9), stats, status, token_hash })
+}
+
 /// Per-tenant outcome rows for the §L10 JSON section. `tenants` names
 /// the rows; the QoS-off arm reuses the same spec so the two arms are
 /// comparable tenant-by-tenant.
@@ -398,6 +507,8 @@ fn main() -> anyhow::Result<()> {
     );
     let trace_limit = args.usize_or("trace-limit", 0);
     let qos_kill_call = args.u64_or("qos-kill-call", 600);
+    let swap_ab = args.usize_or("swap", 1) != 0;
+    let swap_kill_call = args.u64_or("swap-kill-call", 220);
     let json_out = args.has("json") || args.has("json-path");
 
     // Pick the backend: real artifact when present and executable,
@@ -885,6 +996,242 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // §L11 rolling-weight-swap A/B (sim engine only — `SimSwapSpec`
+    // derives the successor version). The burst trace is replayed
+    // open-loop through a paged cont x2 fleet four ways:
+    //   0: no swap — the goodput baseline and the token-parity oracle;
+    //   1: clean rolling swap fired at 25% of the trace span (successor
+    //      at 0.9x step cost, identical tokens) — must Complete;
+    //   2: the same swap with a ChaosSpec killing replica 1 mid-rollout
+    //      — crash supervision and the rollout must compose;
+    //   3: a wrong-token successor — the canary's pinned probe decode
+    //      must fail token parity and auto-roll back, with the fleet's
+    //      output bit-identical to the no-swap oracle.
+    // Bars on the full trace: every request terminal, zero requests
+    // failed by the swap itself, per-version ledger partitions the
+    // totals (ensure!d inside drive_trace_swap on every run), swap and
+    // swap+chaos goodput >= 0.85x the no-swap run, and arms 1-3 all at
+    // token parity with arm 0.
+    let mut swap_row: Option<Json> = None;
+    if let (EngineSpec::Sim(base), true) = (&engine, swap_ab) {
+        let trace = load_trace(&trace_path, vocab, trace_limit)?;
+        anyhow::ensure!(!trace.is_empty(), "empty trace {trace_path}");
+        let full = trace_limit == 0;
+        let span_s = trace.last().map_or(0.0, |e| e.arrival_us as f64 / 1e6).max(1e-9);
+        let swap_at = Duration::from_secs_f64(span_s * 0.25);
+        // Production path: paged decode state, pool roomy enough that
+        // the swap arms never shed on pool pressure (PoolExhausted
+        // counts as a canary failure — a §L9 capacity problem must not
+        // masquerade as a §L11 rollback).
+        let mut sspec = base.clone();
+        sspec.pool = Some(SimPoolSpec { page_size: 16, pool_pages: 192, prefix_cache: false });
+        let swap_opts = || {
+            let mut o = opts(2, true, true);
+            o.queue_cap = 1024;
+            // Explicit gates (env-free): a probation sized to resolve
+            // well inside the burst, generous latency headroom (the
+            // canary shares the overloaded router queue, so its p95 is
+            // queue-dominated like the fleet's), and an idle-promotion
+            // clock that finishes a post-trace probation quickly.
+            o.deploy = DeployOptions {
+                probation: 12,
+                probation_ms: 300,
+                probes: 2,
+                max_err: 0.25,
+                lat_factor: 8.0,
+                hold_ms: 15_000,
+            };
+            o
+        };
+        let upgrade = SimSwapSpec { cost_mult: 0.9, bad: BadVersionMode::None };
+        let bad = SimSwapSpec { cost_mult: 0.9, bad: BadVersionMode::WrongTokens };
+        let clean = drive_trace_swap(
+            &EngineSpec::Sim(sspec.clone()),
+            swap_opts(),
+            &trace,
+            None,
+            swap_at,
+        )?;
+        let swap = drive_trace_swap(
+            &EngineSpec::Sim(sspec.clone()),
+            swap_opts(),
+            &trace,
+            Some(EngineSpec::Sim(upgrade.apply(&sspec))),
+            swap_at,
+        )?;
+        let mut kspec = sspec.clone();
+        ChaosSpec { kills: vec![(1, swap_kill_call)], ..ChaosSpec::default() }
+            .apply(&mut kspec);
+        let chaos = drive_trace_swap(
+            &EngineSpec::Sim(kspec),
+            swap_opts(),
+            &trace,
+            Some(EngineSpec::Sim(upgrade.apply(&sspec))),
+            swap_at,
+        )?;
+        let rollback = drive_trace_swap(
+            &EngineSpec::Sim(sspec.clone()),
+            swap_opts(),
+            &trace,
+            Some(EngineSpec::Sim(bad.apply(&sspec))),
+            swap_at,
+        )?;
+
+        let ratio = |r: &SwapRun| if clean.qps > 0.0 { r.qps / clean.qps } else { 0.0 };
+        println!(
+            "swap trace ({} reqs over {span_s:.2}s, rollout at {:.2}s): \
+             no-swap {:.1} qps | rolling {:.1} qps ({:.2}x) -> {} | \
+             +kill@{swap_kill_call} {:.1} qps ({:.2}x) -> {} | bad-version -> {}",
+            trace.len(),
+            swap_at.as_secs_f64(),
+            clean.qps,
+            swap.qps,
+            ratio(&swap),
+            swap.status,
+            chaos.qps,
+            ratio(&chaos),
+            chaos.status,
+            rollback.status,
+        );
+        println!(
+            "swap ledger: rolling v-requests {:?} ({} canary pass) | chaos v-requests {:?} \
+             ({} restarts) | bad rollbacks {} ({} canary fail), parity {}",
+            swap.stats.deploy.versions.iter().map(|m| m.requests).collect::<Vec<_>>(),
+            swap.stats.deploy.canary_pass,
+            chaos.stats.deploy.versions.iter().map(|m| m.requests).collect::<Vec<_>>(),
+            chaos.stats.restarts,
+            rollback.stats.deploy.rollbacks,
+            rollback.stats.deploy.canary_fail,
+            rollback.token_hash == clean.token_hash,
+        );
+
+        // Invariants that hold at any trace length.
+        anyhow::ensure!(
+            matches!(swap.status, DeployStatus::Completed { .. }),
+            "clean rolling swap did not complete: {}",
+            swap.status
+        );
+        anyhow::ensure!(
+            matches!(rollback.status, DeployStatus::RolledBack { .. }),
+            "bad version was not rolled back: {}",
+            rollback.status
+        );
+        anyhow::ensure!(
+            rollback.stats.deploy.rollbacks >= 1 && rollback.stats.deploy.canary_pass == 0,
+            "bad version passed a canary gate"
+        );
+        anyhow::ensure!(
+            swap.token_hash == clean.token_hash,
+            "clean swap broke token parity: {:016x} vs {:016x}",
+            swap.token_hash,
+            clean.token_hash
+        );
+        anyhow::ensure!(
+            rollback.token_hash == clean.token_hash,
+            "rollback did not pin old-version tokens: {:016x} vs {:016x}",
+            rollback.token_hash,
+            clean.token_hash
+        );
+        anyhow::ensure!(
+            swap.stats.failed == 0,
+            "{} requests failed during the clean rolling swap",
+            swap.stats.failed
+        );
+        if full {
+            // Bars that assume the whole 2x-capacity burst.
+            anyhow::ensure!(
+                matches!(chaos.status, DeployStatus::Completed { .. }),
+                "rollout under chaos did not complete: {}",
+                chaos.status
+            );
+            anyhow::ensure!(
+                chaos.stats.failed == 0,
+                "{} requests lost to swap+kill chaos",
+                chaos.stats.failed
+            );
+            anyhow::ensure!(
+                chaos.token_hash == clean.token_hash,
+                "swap+chaos broke token parity: {:016x} vs {:016x}",
+                chaos.token_hash,
+                clean.token_hash
+            );
+            anyhow::ensure!(
+                ratio(&swap) >= 0.85,
+                "rolling swap goodput {:.2}x < 0.85x of no-swap",
+                ratio(&swap)
+            );
+            anyhow::ensure!(
+                ratio(&chaos) >= 0.85,
+                "swap+chaos goodput {:.2}x < 0.85x of no-swap",
+                ratio(&chaos)
+            );
+        }
+
+        let arm_row = |r: &SwapRun| {
+            let d = &r.stats.deploy;
+            Json::obj(vec![
+                ("qps", Json::num(r.qps)),
+                ("requests", Json::num(r.stats.requests as f64)),
+                ("failed", Json::num(r.stats.failed as f64)),
+                ("sheds", Json::num(r.stats.sheds as f64)),
+                ("retries", Json::num(r.stats.retries as f64)),
+                ("restarts", Json::num(r.stats.restarts as f64)),
+                ("terminal", Json::num((r.stats.requests + r.stats.failed) as f64)),
+                ("status", Json::str(&r.status.to_string())),
+                ("canary_pass", Json::num(d.canary_pass as f64)),
+                ("canary_fail", Json::num(d.canary_fail as f64)),
+                ("rollbacks", Json::num(d.rollbacks as f64)),
+                ("completed", Json::num(d.completed as f64)),
+                ("aborted", Json::num(d.aborted as f64)),
+                ("token_hash", Json::str(&format!("{:016x}", r.token_hash))),
+                (
+                    "version_requests",
+                    Json::Arr(
+                        d.versions
+                            .iter()
+                            .map(|m| Json::num(m.requests as f64))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "version_failed",
+                    Json::Arr(
+                        d.versions.iter().map(|m| Json::num(m.failed as f64)).collect(),
+                    ),
+                ),
+            ])
+        };
+        swap_row = Some(Json::obj(vec![
+            ("trace", Json::str(&trace_path)),
+            ("trace_requests", Json::num(trace.len() as f64)),
+            ("trace_span_s", Json::num(span_s)),
+            ("swap_at_s", Json::num(swap_at.as_secs_f64())),
+            ("cost_mult", Json::num(0.9)),
+            (
+                "chaos_schedule",
+                Json::obj(vec![
+                    ("kill_replica", Json::num(1.0)),
+                    ("kill_at_call", Json::num(swap_kill_call as f64)),
+                ]),
+            ),
+            ("bars_enforced", Json::Bool(full)),
+            ("no_swap", arm_row(&clean)),
+            ("rolling", arm_row(&swap)),
+            ("rolling_chaos", arm_row(&chaos)),
+            ("bad_version", arm_row(&rollback)),
+            ("goodput_ratio_rolling", Json::num(ratio(&swap))),
+            ("goodput_ratio_chaos", Json::num(ratio(&chaos))),
+            (
+                "token_parity",
+                Json::obj(vec![
+                    ("rolling", Json::Bool(swap.token_hash == clean.token_hash)),
+                    ("rolling_chaos", Json::Bool(chaos.token_hash == clean.token_hash)),
+                    ("bad_version_rollback", Json::Bool(rollback.token_hash == clean.token_hash)),
+                ]),
+            ),
+        ]));
+    }
+
     let (bq1, bp1) = find("batch", 1);
     let (cq1, cp1) = find("cont", 1);
     let (cq4, _) = find("cont", 4);
@@ -954,6 +1301,9 @@ fn main() -> anyhow::Result<()> {
         }
         if let Some(q) = qos_row {
             top.push(("qos", q));
+        }
+        if let Some(s) = swap_row {
+            top.push(("deploy", s));
         }
         let doc = Json::obj(top);
         std::fs::write(&path, format!("{doc}\n"))?;

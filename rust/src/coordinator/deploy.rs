@@ -1,0 +1,844 @@
+//! §L11 zero-downtime rolling weight swap with canary health gates and
+//! automatic rollback.
+//!
+//! A rollout replaces the fleet's artifact version one replica at a
+//! time behind the existing §L7 supervisor: the router drains one
+//! replica (a *targeted* drain — unlike the §L10 scale-down sentinel,
+//! which any replica may pop), lets its slots retire naturally, then
+//! spawns a replacement on the new version as a **canary**. The canary
+//! must pass two gates before the rollout promotes to the next
+//! replica:
+//!
+//! 1. **Token-parity probes** — before serving any live traffic, the
+//!    canary decodes a pinned set of deterministic probe prompts and
+//!    publishes the rows; the router compares them against a baseline
+//!    computed from the *old* version on a side thread. A mismatch
+//!    abandons the canary at the gate — it exits cleanly having served
+//!    zero requests, so a bad version never emits a single wrong token
+//!    to a client.
+//! 2. **Probation window** — once admitted, the canary serves live
+//!    traffic for N requests (or a wall-clock window on idle fleets)
+//!    while publishing its request/failure/p95 counters; the router
+//!    rolls back on excess non-shed error rate or p95 blown past a
+//!    multiple of the fleet's old-version p95 EWMA.
+//!
+//! A failing canary triggers **automatic rollback**: that replica
+//! reloads the old version and the rollout freezes with a typed
+//! [`DeployStatus`]. Crash respawns and §L10 autoscale replicas always
+//! land on the rollout's *decided* version (flipped to the new version
+//! after the first canary passes, reverted on rollback). The §L9 page
+//! pool and prefix cache are replica-local, so a swap inherently
+//! releases the drained replica's pages and starts the new version
+//! with a cold (version-clean) prefix cache.
+//!
+//! State machine (driven from the router's supervision pass, one
+//! replica at a time):
+//!
+//! ```text
+//! Idle -> Preparing -> Draining -> Probing -> Probation --pass--> (next replica | Completed)
+//!            |            |           |          |
+//!            v (load/geometry error)  |          +--fail/crash--> RollingBack -> RolledBack
+//!          Failed         +-----------+---------------crash-----> RollingBack -> RolledBack
+//! ```
+//!
+//! `shutdown()` during a rollout aborts it cleanly: a canary holding
+//! at the gate is abandoned (clean exit, nothing half-loaded), the
+//! drain target finishes the normal §L7 drain, and the rollout reports
+//! `Aborted` (counted in `DeployMeter::aborted`, surfaced in the
+//! shutdown summary).
+
+use crate::coordinator::server::{
+    engine_dims, pack_requests, truncate_at_eos, Engine, EngineSpec, FaultSpec, ServerOptions,
+    ServerStats, Supervisor,
+};
+use crate::util::env;
+use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Replica id used by the baseline probe engine (never a fleet id, so
+/// deterministic kill schedules keyed on fleet ids cannot hit it).
+const PROBE_REPLICA_ID: usize = usize::MAX - 1;
+
+/// `DeployShared` gate values, in canary-lifecycle order.
+pub(crate) const GATE_HOLD: usize = 0;
+pub(crate) const GATE_ADMIT: usize = 1;
+pub(crate) const GATE_ABANDON: usize = 2;
+
+/// Poison-proof lock: deploy state is read across the replica panic
+/// boundary and entries are plain data.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// §L11 rollout knobs. All defaults resolve through `util::env`
+/// (`ALTUP_DEPLOY_*`); tests override the struct directly instead of
+/// mutating the process environment.
+#[derive(Debug, Clone)]
+pub struct DeployOptions {
+    /// Probation window in requests: the canary must finish this many
+    /// terminal outcomes under the health gates before promotion.
+    /// `ALTUP_DEPLOY_PROBATION` sets the default (else 16).
+    pub probation: usize,
+    /// Probation wall-clock cap in ms: an idle fleet promotes a
+    /// healthy canary after this long even without traffic, so a
+    /// rollout never wedges waiting for requests.
+    /// `ALTUP_DEPLOY_PROBATION_MS` sets the default (else 1500).
+    pub probation_ms: u64,
+    /// Pinned token-parity probe prompts decoded by every canary
+    /// before it serves (clamped to the engine's batch size; 0
+    /// disables the parity gate). `ALTUP_DEPLOY_PROBES` sets the
+    /// default (else 2).
+    pub probes: usize,
+    /// Maximum non-shed failure rate (failures / terminal outcomes)
+    /// the canary may show over its probation window.
+    /// `ALTUP_DEPLOY_MAX_ERR` sets the default (else 0.1).
+    pub max_err: f64,
+    /// Latency gate: the canary's p95 must stay within this factor of
+    /// the fleet's old-version p95 EWMA. `ALTUP_DEPLOY_LAT_FACTOR`
+    /// sets the default (else 4.0).
+    pub lat_factor: f64,
+    /// How long a canary holds at the probe gate waiting for the
+    /// router's verdict before giving up (clean exit -> rollback).
+    /// `ALTUP_DEPLOY_HOLD_MS` sets the default (else 5000).
+    pub hold_ms: u64,
+}
+
+impl Default for DeployOptions {
+    fn default() -> Self {
+        DeployOptions {
+            probation: env::usize_at_least("ALTUP_DEPLOY_PROBATION", 1, 16),
+            probation_ms: env::u64_or("ALTUP_DEPLOY_PROBATION_MS", 1500),
+            probes: env::usize_or("ALTUP_DEPLOY_PROBES", 2),
+            max_err: env::f64_or("ALTUP_DEPLOY_MAX_ERR", 0.1).clamp(0.0, 1.0),
+            lat_factor: env::f64_or("ALTUP_DEPLOY_LAT_FACTOR", 4.0).max(1.0),
+            hold_ms: env::u64_or("ALTUP_DEPLOY_HOLD_MS", 5000),
+        }
+    }
+}
+
+/// Typed rollout outcome, returned by `ServerHandle::deploy` and
+/// queryable mid-flight via `ServerHandle::deploy_status`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeployStatus {
+    /// No rollout has run on this server.
+    Idle,
+    /// A rollout is mid-flight: `swapped` of `fleet` replicas promoted
+    /// to `version` so far.
+    InProgress { version: u32, swapped: usize, fleet: usize },
+    /// Every replica promoted to `version`.
+    Completed { version: u32, swapped: usize },
+    /// A canary failed a health gate (or crashed); its replica
+    /// reloaded the old version and the rollout froze. `swapped`
+    /// replicas promoted before the freeze keep serving the new
+    /// version; respawns and autoscale land back on the old version.
+    RolledBack { version: u32, swapped: usize, reason: String },
+    /// The new version never reached a canary: artifact load /
+    /// checksum / geometry validation failed (a typed load error, not
+    /// a first-execute replica panic).
+    Failed { version: u32, reason: String },
+    /// `shutdown()` (or fleet loss) interrupted the rollout; no
+    /// replica was left mid-drain or holding at the gate.
+    Aborted { version: u32, reason: String },
+}
+
+impl DeployStatus {
+    /// Whether the rollout reached a terminal state.
+    pub fn terminal(&self) -> bool {
+        !matches!(self, DeployStatus::Idle | DeployStatus::InProgress { .. })
+    }
+}
+
+impl std::fmt::Display for DeployStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeployStatus::Idle => write!(f, "idle"),
+            DeployStatus::InProgress { version, swapped, fleet } => {
+                write!(f, "rolling out v{version}: {swapped}/{fleet} replicas swapped")
+            }
+            DeployStatus::Completed { version, swapped } => {
+                write!(f, "completed: {swapped} replica(s) on v{version}")
+            }
+            DeployStatus::RolledBack { version, swapped, reason } => {
+                write!(f, "rolled back v{version} after {swapped} swap(s): {reason}")
+            }
+            DeployStatus::Failed { version, reason } => {
+                write!(f, "v{version} rejected before canary: {reason}")
+            }
+            DeployStatus::Aborted { version, reason } => {
+                write!(f, "rollout of v{version} aborted: {reason}")
+            }
+        }
+    }
+}
+
+/// Cross-thread rollout levers, owned by `QosShared` so replicas reach
+/// them without any new plumbing. Written by the router's rollout
+/// driver, read by replicas between decode iterations.
+pub(crate) struct DeployShared {
+    /// Replica id asked to drain and exit cleanly (targeted §L11
+    /// drain); `usize::MAX` = none. The targeted replica CASes it back
+    /// to `usize::MAX` as its ack — ids are never reused, so a stale
+    /// target can never hit a later replica.
+    drain_target: AtomicUsize,
+    /// Replica id that must run the canary probe + gate before
+    /// serving; `usize::MAX` = none.
+    pub(crate) canary_id: AtomicUsize,
+    /// Probe-gate verdict (`GATE_*`), polled by the holding canary.
+    pub(crate) gate: AtomicUsize,
+    /// Probe output rows published by the canary for the router's
+    /// parity check.
+    pub(crate) probe_rows: Mutex<Option<Vec<Vec<i32>>>>,
+    /// Canary live health, published once per serve-loop iteration:
+    /// completions, non-shed failures, p95 latency (f64 bits).
+    canary_requests: AtomicUsize,
+    canary_failed: AtomicUsize,
+    canary_p95_bits: AtomicU64,
+}
+
+impl DeployShared {
+    pub(crate) fn new() -> DeployShared {
+        DeployShared {
+            drain_target: AtomicUsize::new(usize::MAX),
+            canary_id: AtomicUsize::new(usize::MAX),
+            gate: AtomicUsize::new(GATE_HOLD),
+            probe_rows: Mutex::new(None),
+            canary_requests: AtomicUsize::new(0),
+            canary_failed: AtomicUsize::new(0),
+            canary_p95_bits: AtomicU64::new(0),
+        }
+    }
+
+    /// Router: ask replica `id` to drain and exit cleanly.
+    pub(crate) fn request_drain(&self, id: usize) {
+        self.drain_target.store(id, Ordering::Release);
+    }
+
+    /// Replica: claim a drain request addressed to this id (CAS ack).
+    pub(crate) fn take_drain(&self, id: usize) -> bool {
+        self.drain_target
+            .compare_exchange(id, usize::MAX, Ordering::AcqRel, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// Router: arm the probe gate for a canary about to spawn.
+    pub(crate) fn begin_probe(&self, canary: usize) {
+        *lock(&self.probe_rows) = None;
+        self.gate.store(GATE_HOLD, Ordering::Release);
+        self.reset_health();
+        self.canary_id.store(canary, Ordering::Release);
+    }
+
+    /// Router: clear every lever (rollout over or aborted). A canary
+    /// still holding at the gate reads `GATE_ABANDON` and exits
+    /// cleanly without serving.
+    pub(crate) fn clear(&self) {
+        self.canary_id.store(usize::MAX, Ordering::Release);
+        self.drain_target.store(usize::MAX, Ordering::Release);
+        self.gate.store(GATE_ABANDON, Ordering::Release);
+    }
+
+    pub(crate) fn reset_health(&self) {
+        self.canary_requests.store(0, Ordering::Relaxed);
+        self.canary_failed.store(0, Ordering::Relaxed);
+        self.canary_p95_bits.store(0, Ordering::Relaxed);
+    }
+
+    /// Replica: publish this canary's live counters. Deadline/QoS
+    /// sheds are excluded from the failure count — they are
+    /// load-driven, not version-driven.
+    pub(crate) fn publish_canary_health(&self, stats: &ServerStats) {
+        self.canary_requests.store(stats.requests, Ordering::Relaxed);
+        self.canary_failed.store(stats.failed.saturating_sub(stats.sheds), Ordering::Relaxed);
+        self.canary_p95_bits
+            .store(stats.latency.percentile_ms(95.0).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Router: (completions, non-shed failures, p95 ms).
+    pub(crate) fn health(&self) -> (usize, usize, f64) {
+        (
+            self.canary_requests.load(Ordering::Relaxed),
+            self.canary_failed.load(Ordering::Relaxed),
+            f64::from_bits(self.canary_p95_bits.load(Ordering::Relaxed)),
+        )
+    }
+}
+
+/// The pinned probe prompts: deterministic token rows shared by the
+/// canary and the baseline engine (and mirrored bit-for-bit by the
+/// Python twin). Tokens stay in [2, 91) — clear of PAD/EOS and inside
+/// every test vocabulary.
+pub(crate) fn probe_prompts(count: usize, enc_len: usize) -> Vec<Vec<i32>> {
+    (0..count)
+        .map(|k| {
+            let len = (enc_len / 2 + k + 1).clamp(1, enc_len.max(1));
+            (0..len).map(|i| 2 + ((i * 7 + k * 131) % 89) as i32).collect()
+        })
+        .collect()
+}
+
+/// Decode the pinned probe set on `engine` and return the
+/// EOS-truncated rows (the token-parity fingerprint of a version).
+pub(crate) fn probe_decode(engine: &mut Engine, probes: usize) -> Result<Vec<Vec<i32>>> {
+    let (batch_size, enc_len) = engine.dims();
+    let prompts = probe_prompts(probes.min(batch_size), enc_len);
+    if prompts.is_empty() {
+        return Ok(Vec::new());
+    }
+    let rows: Vec<&[i32]> = prompts.iter().map(|p| p.as_slice()).collect();
+    let (enc, _trunc) = pack_requests(&rows, batch_size, enc_len);
+    let mut out = engine.decode(&enc, enc_len)?;
+    out.truncate(prompts.len());
+    for row in &mut out {
+        truncate_at_eos(row);
+    }
+    Ok(out)
+}
+
+/// Canary side of the probe gate, run by `serve_replica` after the
+/// engine builds and before any live traffic: decode the pinned
+/// probes, publish the rows, and hold until the router's verdict.
+/// Returns `false` when abandoned (the replica exits cleanly having
+/// served nothing — a bad version never emits a wrong token to a
+/// client).
+pub(crate) fn canary_gate(
+    engine: &mut Engine,
+    opts: &ServerOptions,
+    shared: &DeployShared,
+) -> Result<bool> {
+    let rows = probe_decode(engine, opts.deploy.probes)?;
+    *lock(&shared.probe_rows) = Some(rows);
+    let deadline = Instant::now() + Duration::from_millis(opts.deploy.hold_ms.max(1));
+    loop {
+        match shared.gate.load(Ordering::Acquire) {
+            GATE_ADMIT => return Ok(true),
+            GATE_ABANDON => return Ok(false),
+            _ => {
+                if Instant::now() >= deadline {
+                    // Router never answered (wedged or gone): give up
+                    // cleanly; the rollout driver treats the exit as a
+                    // failed canary.
+                    return Ok(false);
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+    }
+}
+
+/// Handle-side rollout mailbox: `ServerHandle::deploy` submits specs
+/// here and blocks on the condvar; the router's rollout driver drains
+/// the queue one rollout at a time and posts terminal statuses.
+pub struct DeployControl {
+    queue: Mutex<VecDeque<(u64, EngineSpec)>>,
+    next_seq: AtomicU64,
+    done: Mutex<HashMap<u64, DeployStatus>>,
+    progress: Mutex<DeployStatus>,
+    cvar: Condvar,
+}
+
+impl DeployControl {
+    pub(crate) fn new() -> DeployControl {
+        DeployControl {
+            queue: Mutex::new(VecDeque::new()),
+            next_seq: AtomicU64::new(0),
+            done: Mutex::new(HashMap::new()),
+            progress: Mutex::new(DeployStatus::Idle),
+            cvar: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a rollout; returns the ticket to `wait` on.
+    pub(crate) fn submit(&self, spec: EngineSpec) -> u64 {
+        let seq = self.next_seq.fetch_add(1, Ordering::SeqCst) + 1;
+        lock(&self.queue).push_back((seq, spec));
+        seq
+    }
+
+    /// Block until rollout `seq` reaches a terminal status. Returns
+    /// `Aborted` if the router dies before running it.
+    pub(crate) fn wait(
+        &self,
+        seq: u64,
+        router_up: &std::sync::atomic::AtomicBool,
+    ) -> DeployStatus {
+        let mut guard = lock(&self.done);
+        loop {
+            if let Some(status) = guard.remove(&seq) {
+                return status;
+            }
+            if !router_up.load(Ordering::Acquire) {
+                return DeployStatus::Aborted {
+                    version: 0,
+                    reason: "server shut down before the rollout completed".into(),
+                };
+            }
+            guard = self
+                .cvar
+                .wait_timeout(guard, Duration::from_millis(50))
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .0;
+        }
+    }
+
+    /// Live status snapshot (most recent rollout, `Idle` before any).
+    pub(crate) fn status(&self) -> DeployStatus {
+        lock(&self.progress).clone()
+    }
+
+    fn take_next(&self) -> Option<(u64, EngineSpec)> {
+        lock(&self.queue).pop_front()
+    }
+
+    fn set_progress(&self, status: DeployStatus) {
+        *lock(&self.progress) = status;
+    }
+
+    fn finish(&self, seq: u64, status: DeployStatus) {
+        self.set_progress(status.clone());
+        lock(&self.done).insert(seq, status);
+        self.cvar.notify_all();
+    }
+}
+
+/// Validate the new version and compute the old-version probe
+/// baseline, off the router thread (artifact loads are slow). The
+/// validation half is what turns a corrupt artifact into a typed
+/// `DeployStatus::Failed` instead of a first-execute replica panic:
+/// `engine_dims` runs the full `Artifact::load`, including the §L11
+/// per-HLO checksum verification.
+fn prepare_rollout(
+    old_spec: &EngineSpec,
+    new_spec: &EngineSpec,
+    opts: &ServerOptions,
+    dims: (usize, usize),
+    probes: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let new_dims =
+        engine_dims(new_spec).context("new version failed validation at load time")?;
+    if new_dims != dims {
+        bail!(
+            "new version geometry (batch {}, enc_len {}) does not match the serving \
+             geometry (batch {}, enc_len {})",
+            new_dims.0,
+            new_dims.1,
+            dims.0,
+            dims.1
+        );
+    }
+    // Baseline = the old version with injected faults stripped: the
+    // probe fingerprint must reflect the model, not the chaos
+    // schedule.
+    let mut base_spec = old_spec.clone();
+    if let EngineSpec::Sim(s) = &mut base_spec {
+        s.fault = FaultSpec::default();
+    }
+    let mut engine = Engine::build(PROBE_REPLICA_ID, &base_spec, opts)
+        .context("old-version baseline engine failed to build")?;
+    probe_decode(&mut engine, probes).context("old-version probe baseline failed")
+}
+
+/// Rollout phases; one rollout swaps replicas strictly one at a time.
+enum Phase {
+    /// Side thread validating the new version + computing the probe
+    /// baseline.
+    Preparing { rx: mpsc::Receiver<Result<Vec<Vec<i32>>>> },
+    /// Waiting for the targeted replica's clean (§L7 drain) exit.
+    Draining { target: usize },
+    /// Canary spawned; waiting for its published probe rows.
+    Probing { canary: usize },
+    /// Canary admitted; watching its live health over the window.
+    Probation { canary: usize, since: Instant },
+    /// Failed canary draining; its exit respawns the old version.
+    RollingBack { canary: usize, reason: String },
+}
+
+/// One in-flight rollout (router-side bookkeeping).
+struct Rollout {
+    seq: u64,
+    version: u32,
+    /// Decided version when the rollout started — the rollback target.
+    old: u32,
+    swapped: usize,
+    fleet: usize,
+    /// Whether `Supervisor::decided` already flipped to `version`
+    /// (after the first canary passes).
+    promoted: bool,
+    phase: Phase,
+    baseline: Option<Vec<Vec<i32>>>,
+    /// EWMA of the fleet's old-version p95 (the latency-gate
+    /// reference), fed from the router's merged stats each tick.
+    fleet_p95_ewma: f64,
+}
+
+/// The router-side rollout driver: ticked from the supervision pass,
+/// intercepts replica exits that belong to the rollout, and owns the
+/// `DeployControl` mailbox.
+pub(crate) struct RolloutDriver {
+    ctl: Arc<DeployControl>,
+    /// Serving geometry the router dispatches at; a new version must
+    /// match it exactly.
+    dims: (usize, usize),
+    active: Option<Rollout>,
+}
+
+impl RolloutDriver {
+    pub(crate) fn new(ctl: Arc<DeployControl>, dims: (usize, usize)) -> RolloutDriver {
+        RolloutDriver { ctl, dims, active: None }
+    }
+
+    /// Advance the rollout one step (start a queued one, poll the prep
+    /// thread, check probe parity, evaluate probation gates). Called
+    /// once per router supervision pass while the server is serving.
+    pub(crate) fn tick(&mut self, sup: &mut Supervisor, stats: &mut ServerStats) {
+        if self.active.is_none() {
+            let Some((seq, spec)) = self.ctl.take_next() else { return };
+            self.start(seq, spec, sup);
+            return;
+        }
+        let r = self.active.as_mut().expect("active rollout");
+        match &r.phase {
+            Phase::Preparing { rx } => match rx.try_recv() {
+                Ok(Ok(rows)) => {
+                    r.baseline = Some(rows);
+                    self.advance_or_complete(sup, stats);
+                }
+                Ok(Err(e)) => {
+                    let (version, seq) = (r.version, r.seq);
+                    sup.specs.remove(&version);
+                    stats.deploy.canary_fail += 1;
+                    self.finish(
+                        seq,
+                        DeployStatus::Failed { version, reason: format!("{e:#}") },
+                    );
+                }
+                Err(mpsc::TryRecvError::Empty) => {}
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    let (version, seq) = (r.version, r.seq);
+                    sup.specs.remove(&version);
+                    self.finish(
+                        seq,
+                        DeployStatus::Failed {
+                            version,
+                            reason: "rollout preparation thread died".into(),
+                        },
+                    );
+                }
+            },
+            Phase::Draining { .. } | Phase::RollingBack { .. } => {
+                // Waiting on an exit event (`observe_exit`).
+            }
+            Phase::Probing { canary } => {
+                let canary = *canary;
+                let published = lock(&sup.shared.deploy.probe_rows).take();
+                if let Some(rows) = published {
+                    let want = r.baseline.as_deref().unwrap_or(&[]);
+                    if rows == want {
+                        sup.shared.deploy.reset_health();
+                        sup.shared.deploy.gate.store(GATE_ADMIT, Ordering::Release);
+                        r.phase = Phase::Probation { canary, since: Instant::now() };
+                    } else {
+                        // Abandon at the gate: the canary exits
+                        // cleanly having served nothing; its exit
+                        // event completes the rollback.
+                        stats.deploy.canary_fail += 1;
+                        sup.shared.deploy.canary_id.store(usize::MAX, Ordering::Release);
+                        sup.shared.deploy.gate.store(GATE_ABANDON, Ordering::Release);
+                        r.phase = Phase::RollingBack {
+                            canary,
+                            reason: "canary failed the token-parity probe".into(),
+                        };
+                    }
+                }
+            }
+            Phase::Probation { canary, since } => {
+                let (canary, since) = (*canary, *since);
+                // Feed the fleet p95 EWMA from the router's merged
+                // stats — at this point those are old-version
+                // completions only (swapped replicas haven't exited).
+                let fleet_p95 = stats.latency.percentile_ms(95.0);
+                if fleet_p95 > 0.0 {
+                    r.fleet_p95_ewma = if r.fleet_p95_ewma > 0.0 {
+                        0.8 * r.fleet_p95_ewma + 0.2 * fleet_p95
+                    } else {
+                        fleet_p95
+                    };
+                }
+                let (served, failed, p95) = sup.shared.deploy.health();
+                let done = served + failed;
+                let window_done = done >= sup.opts.deploy.probation
+                    || since.elapsed() >= Duration::from_millis(sup.opts.deploy.probation_ms);
+                if !window_done {
+                    return;
+                }
+                let err_rate = if done == 0 { 0.0 } else { failed as f64 / done as f64 };
+                let lat_bad = r.fleet_p95_ewma > 0.0
+                    && served >= 2
+                    && p95 > sup.opts.deploy.lat_factor * r.fleet_p95_ewma;
+                if err_rate > sup.opts.deploy.max_err || lat_bad {
+                    let reason = if lat_bad {
+                        format!(
+                            "canary p95 {p95:.1} ms blew the {:.1}x fleet-EWMA gate ({:.1} ms)",
+                            sup.opts.deploy.lat_factor, r.fleet_p95_ewma
+                        )
+                    } else {
+                        format!(
+                            "canary error rate {err_rate:.2} over {done} requests exceeds {:.2}",
+                            sup.opts.deploy.max_err
+                        )
+                    };
+                    stats.deploy.canary_fail += 1;
+                    sup.shared.deploy.canary_id.store(usize::MAX, Ordering::Release);
+                    // The canary is serving: drain it like any swap
+                    // target; its clean exit respawns the old version.
+                    sup.shared.deploy.request_drain(canary);
+                    r.phase = Phase::RollingBack { canary, reason };
+                } else {
+                    // Promotion: first pass flips the decided version,
+                    // so respawns/autoscale land on the new version
+                    // from here on.
+                    stats.deploy.canary_pass += 1;
+                    r.swapped += 1;
+                    if !r.promoted {
+                        r.promoted = true;
+                        sup.decided = r.version;
+                        stats.deploy.current = r.version;
+                    }
+                    sup.shared.deploy.canary_id.store(usize::MAX, Ordering::Release);
+                    self.advance_or_complete(sup, stats);
+                }
+            }
+        }
+    }
+
+    /// Intercept a replica exit that belongs to the rollout. Returns
+    /// whether generic §L7 respawning may handle this exit (`false`
+    /// when the rollout already spawned the replacement — no restart
+    /// budget is spent on deploy lifecycle exits).
+    pub(crate) fn observe_exit(
+        &mut self,
+        id: usize,
+        crashed: bool,
+        sup: &mut Supervisor,
+        stats: &mut ServerStats,
+    ) -> bool {
+        let Some(r) = self.active.as_mut() else { return true };
+        match &r.phase {
+            Phase::Draining { target } if *target == id => {
+                // Old replica gone (drained clean, or crashed mid-
+                // drain — §L7 requeues its work either way): spawn the
+                // canary on the new version. `canary_id` is armed
+                // before the spawn so the canary cannot race past its
+                // own gate check.
+                sup.shared.deploy.drain_target.store(usize::MAX, Ordering::Release);
+                sup.shared.deploy.begin_probe(sup.next_id);
+                let canary = sup.spawn_version(r.version);
+                r.phase = Phase::Probing { canary };
+                false
+            }
+            Phase::Probing { canary } | Phase::Probation { canary, .. } if *canary == id => {
+                // Canary died before a verdict (crash, hold timeout,
+                // or a raced §L10 scale-down): automatic rollback.
+                stats.deploy.canary_fail += 1;
+                let reason = if crashed {
+                    "canary crashed before completing probation".to_string()
+                } else {
+                    "canary exited before completing probation".to_string()
+                };
+                self.rollback(sup, stats, reason);
+                false
+            }
+            Phase::RollingBack { canary, reason } if *canary == id => {
+                let reason = reason.clone();
+                self.rollback(sup, stats, reason);
+                false
+            }
+            _ => true,
+        }
+    }
+
+    /// Complete the rollback: respawn the exited canary's slot on the
+    /// old version, un-promote the decided version, and freeze the
+    /// rollout with `RolledBack`.
+    fn rollback(&mut self, sup: &mut Supervisor, stats: &mut ServerStats, reason: String) {
+        let r = self.active.take().expect("active rollout");
+        sup.shared.deploy.clear();
+        if r.promoted {
+            sup.decided = r.old;
+            stats.deploy.current = r.old;
+        }
+        sup.spawn_version(r.old);
+        stats.deploy.rollbacks += 1;
+        self.finish(
+            r.seq,
+            DeployStatus::RolledBack { version: r.version, swapped: r.swapped, reason },
+        );
+    }
+
+    /// Abort the in-flight rollout (shutdown or fleet loss) and fail
+    /// every queued one. A canary holding at the gate is abandoned (it
+    /// exits cleanly); a mid-drain target just finishes the normal §L7
+    /// drain with the rest of the fleet.
+    pub(crate) fn abort_all(
+        &mut self,
+        sup: &mut Supervisor,
+        stats: &mut ServerStats,
+        reason: &str,
+    ) {
+        if let Some(r) = self.active.take() {
+            sup.shared.deploy.clear();
+            stats.deploy.aborted += 1;
+            self.finish(
+                r.seq,
+                DeployStatus::Aborted { version: r.version, reason: reason.into() },
+            );
+        }
+        while let Some((seq, _)) = self.ctl.take_next() {
+            self.finish(seq, DeployStatus::Aborted { version: 0, reason: reason.into() });
+        }
+    }
+
+    /// Whether a rollout is currently in flight.
+    pub(crate) fn active(&self) -> bool {
+        self.active.is_some()
+    }
+
+    fn start(&mut self, seq: u64, spec: EngineSpec, sup: &mut Supervisor) {
+        let version = sup.specs.keys().max().copied().unwrap_or(0) + 1;
+        let old = sup.decided;
+        let old_spec = sup.specs.get(&old).expect("decided version spec").clone();
+        sup.specs.insert(version, spec.clone());
+        let fleet = sup.versions.values().filter(|&&v| v != version).count();
+        let probes = sup.opts.deploy.probes;
+        let opts = sup.opts.clone();
+        let dims = self.dims;
+        let (tx, rx) = mpsc::channel();
+        // Detached prep thread: artifact validation + baseline probes
+        // must not stall the router's supervision loop.
+        let _ = std::thread::Builder::new().name("altup-deploy-prep".into()).spawn(
+            move || {
+                let _ = tx.send(prepare_rollout(&old_spec, &spec, &opts, dims, probes));
+            },
+        );
+        self.ctl.set_progress(DeployStatus::InProgress { version, swapped: 0, fleet });
+        self.active = Some(Rollout {
+            seq,
+            version,
+            old,
+            swapped: 0,
+            fleet,
+            promoted: false,
+            phase: Phase::Preparing { rx },
+            baseline: None,
+            fleet_p95_ewma: 0.0,
+        });
+    }
+
+    /// Target the next not-yet-swapped replica, or complete the
+    /// rollout when every live replica is on the new version.
+    fn advance_or_complete(&mut self, sup: &mut Supervisor, stats: &mut ServerStats) {
+        let r = self.active.as_mut().expect("active rollout");
+        self.ctl.set_progress(DeployStatus::InProgress {
+            version: r.version,
+            swapped: r.swapped,
+            fleet: r.fleet,
+        });
+        match sup.next_swap_target(r.version) {
+            Some(target) => {
+                sup.shared.deploy.request_drain(target);
+                r.phase = Phase::Draining { target };
+            }
+            None => {
+                let r = self.active.take().expect("active rollout");
+                sup.shared.deploy.clear();
+                stats.deploy.completed += 1;
+                self.finish(
+                    r.seq,
+                    DeployStatus::Completed { version: r.version, swapped: r.swapped },
+                );
+            }
+        }
+    }
+
+    fn finish(&mut self, seq: u64, status: DeployStatus) {
+        self.ctl.finish(seq, status);
+        self.active = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_prompts_are_pinned_and_in_vocab() {
+        let a = probe_prompts(3, 32);
+        let b = probe_prompts(3, 32);
+        assert_eq!(a, b, "probe prompts are deterministic");
+        assert_eq!(a.len(), 3);
+        for (k, row) in a.iter().enumerate() {
+            assert_eq!(row.len(), 32 / 2 + k + 1);
+            assert!(row.iter().all(|&t| (2..91).contains(&t)), "clear of PAD/EOS, small vocab");
+        }
+        // Distinct prompts: the parity gate must exercise more than
+        // one decode stream.
+        assert_ne!(a[0], a[1]);
+        // Degenerate geometry never panics or emits empty rows.
+        for row in probe_prompts(2, 1) {
+            assert_eq!(row.len(), 1);
+        }
+        assert!(probe_prompts(0, 32).is_empty());
+    }
+
+    #[test]
+    fn deploy_status_terminal_and_display() {
+        assert!(!DeployStatus::Idle.terminal());
+        assert!(!DeployStatus::InProgress { version: 1, swapped: 0, fleet: 2 }.terminal());
+        assert!(DeployStatus::Completed { version: 1, swapped: 2 }.terminal());
+        assert!(DeployStatus::RolledBack {
+            version: 1,
+            swapped: 0,
+            reason: "probe".into()
+        }
+        .terminal());
+        assert!(DeployStatus::Failed { version: 1, reason: "load".into() }.terminal());
+        assert!(DeployStatus::Aborted { version: 1, reason: "shutdown".into() }.terminal());
+        let s = DeployStatus::RolledBack {
+            version: 3,
+            swapped: 1,
+            reason: "canary failed the token-parity probe".into(),
+        }
+        .to_string();
+        assert!(s.contains("rolled back v3"), "{s}");
+    }
+
+    #[test]
+    fn deploy_control_submit_wait_finish() {
+        let ctl = DeployControl::new();
+        let seq = ctl.submit(EngineSpec::Sim(crate::coordinator::server::SimSpec::new(2, 8, 4)));
+        assert_eq!(seq, 1);
+        assert_eq!(ctl.status(), DeployStatus::Idle);
+        let (got_seq, _) = ctl.take_next().expect("queued");
+        assert_eq!(got_seq, seq);
+        ctl.finish(seq, DeployStatus::Completed { version: 1, swapped: 2 });
+        let up = std::sync::atomic::AtomicBool::new(true);
+        assert_eq!(ctl.wait(seq, &up), DeployStatus::Completed { version: 1, swapped: 2 });
+        // A waiter for a seq the router never ran returns Aborted once
+        // the router is down instead of blocking forever.
+        let down = std::sync::atomic::AtomicBool::new(false);
+        assert!(matches!(ctl.wait(99, &down), DeployStatus::Aborted { .. }));
+    }
+
+    #[test]
+    fn deploy_options_defaults() {
+        let d = DeployOptions::default();
+        assert_eq!(d.probation, 16);
+        assert_eq!(d.probation_ms, 1500);
+        assert_eq!(d.probes, 2);
+        assert!((d.max_err - 0.1).abs() < 1e-12);
+        assert!((d.lat_factor - 4.0).abs() < 1e-12);
+        assert_eq!(d.hold_ms, 5000);
+    }
+}

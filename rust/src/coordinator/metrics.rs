@@ -483,6 +483,90 @@ impl TenantMeter {
     }
 }
 
+/// §L11 per-version deployment accounting: one `TenantMeter` row per
+/// artifact version (index = version number, 0 = the version the
+/// server started on) plus rollout verdict counters. Like the tenant
+/// table, the version rows partition the global counters — every
+/// completion and every explicit failure lands in exactly one version
+/// row, so `sum(versions[i].requests) == ServerStats::requests` and
+/// `sum(versions[i].failed) == ServerStats::failed` hold across swaps,
+/// crashes, and rollbacks (pinned by tests and the bench harness).
+#[derive(Debug, Clone, Default)]
+pub struct DeployMeter {
+    /// Per-version completion/failure rows, indexed by version number
+    /// (grown on demand like `ServerStats::tenants`).
+    pub versions: Vec<TenantMeter>,
+    /// The version this meter's owner attributes new work to: a
+    /// replica's artifact version, or (router-side) the rollout's
+    /// decided version. A tag, not a counter — `merge` keeps the
+    /// aggregate's own value.
+    pub current: u32,
+    /// Canaries that passed their probe + probation gate.
+    pub canary_pass: u64,
+    /// Canaries that failed a gate (probe mismatch, error rate,
+    /// latency, or a crash during probation).
+    pub canary_fail: u64,
+    /// Automatic rollbacks executed (the failed replica reloaded the
+    /// old version).
+    pub rollbacks: u64,
+    /// Rollouts that promoted every replica.
+    pub completed: u64,
+    /// Rollouts aborted by `shutdown()` mid-flight.
+    pub aborted: u64,
+}
+
+impl DeployMeter {
+    /// Whether any rollout activity (or multi-version traffic) exists —
+    /// summary/JSON gating, like the other serving meters.
+    pub fn active(&self) -> bool {
+        self.canary_pass + self.canary_fail + self.rollbacks + self.completed + self.aborted > 0
+            || self.versions.len() > 1
+    }
+
+    /// The row for version `v`, growing the table on first touch.
+    pub fn version_mut(&mut self, v: u32) -> &mut TenantMeter {
+        let v = v as usize;
+        if self.versions.len() <= v {
+            self.versions.resize_with(v + 1, TenantMeter::default);
+        }
+        &mut self.versions[v]
+    }
+
+    /// Record one completion against the owner's current version.
+    /// Version rows carry no SLO — `slo_hits` mirrors `requests`.
+    pub fn note_done(&mut self, latency_ms: f64, tokens: usize) {
+        let v = self.current;
+        self.version_mut(v).note_done(latency_ms, tokens, 0);
+    }
+
+    /// Record one explicit terminal failure against the owner's
+    /// current version (`shed` mirrors the global sheds subset).
+    pub fn note_failed(&mut self, shed: bool) {
+        let v = self.current;
+        let row = self.version_mut(v);
+        row.failed += 1;
+        if shed {
+            row.sheds += 1;
+        }
+    }
+
+    /// Requests completed on version `v` (0 when the row never grew).
+    pub fn version_requests(&self, v: u32) -> u64 {
+        self.versions.get(v as usize).map_or(0, |m| m.requests)
+    }
+
+    pub fn merge(&mut self, other: &DeployMeter) {
+        for (v, row) in other.versions.iter().enumerate() {
+            self.version_mut(v as u32).merge(row);
+        }
+        self.canary_pass += other.canary_pass;
+        self.canary_fail += other.canary_fail;
+        self.rollbacks += other.rollbacks;
+        self.completed += other.completed;
+        self.aborted += other.aborted;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -716,5 +800,48 @@ mod tests {
         assert!((rsqrt_lr(1, 100, 1.0) - 0.1).abs() < 1e-12);
         assert!((rsqrt_lr(100, 100, 1.0) - 0.1).abs() < 1e-12);
         assert!((rsqrt_lr(400, 100, 1.0) - 0.05).abs() < 1e-12);
+    }
+
+    /// §L11: per-version rows grow on demand, completions/failures land
+    /// on the owner's `current` tag, and `merge` sums rows + verdict
+    /// counters while keeping the aggregate's own `current`.
+    #[test]
+    fn deploy_meter_versions_and_merge() {
+        let empty = DeployMeter::default();
+        assert!(!empty.active(), "no rollout activity yet");
+
+        // A replica still on version 0.
+        let mut old = DeployMeter::default();
+        old.note_done(10.0, 4);
+        old.note_done(20.0, 6);
+        old.note_failed(true);
+        assert_eq!(old.version_requests(0), 2);
+        assert_eq!(old.versions[0].failed, 1);
+        assert_eq!(old.versions[0].sheds, 1);
+        assert!(!old.active(), "single-version traffic alone is not a rollout");
+
+        // A swapped replica serving version 1.
+        let mut new = DeployMeter { current: 1, ..DeployMeter::default() };
+        new.note_done(15.0, 5);
+        new.note_failed(false);
+        new.canary_pass = 1;
+        assert_eq!(new.version_requests(0), 0, "row 0 grew but stayed empty");
+        assert_eq!(new.version_requests(1), 1);
+        assert!(new.active());
+
+        let mut agg = DeployMeter::default();
+        agg.merge(&old);
+        agg.merge(&new);
+        assert_eq!(agg.current, 0, "merge keeps the aggregate's tag");
+        assert_eq!(agg.version_requests(0), 2);
+        assert_eq!(agg.version_requests(1), 1);
+        assert_eq!(agg.versions[1].failed, 1);
+        assert_eq!(agg.versions[1].sheds, 0);
+        assert_eq!(agg.canary_pass, 1);
+        // Partition-of-global: version rows sum to the totals.
+        let total_req: u64 = agg.versions.iter().map(|m| m.requests).sum();
+        let total_failed: u64 = agg.versions.iter().map(|m| m.failed).sum();
+        assert_eq!(total_req, 3);
+        assert_eq!(total_failed, 2);
     }
 }

@@ -2,6 +2,7 @@
 //! the batching eval server (DESIGN.md S12).
 
 pub mod admission;
+pub mod deploy;
 pub mod metrics;
 pub mod pipeline;
 pub mod server;

@@ -84,8 +84,9 @@
 //! testable and benchable without a PJRT backend.
 
 use crate::coordinator::admission::{self, AdmissionController, QosAction, TenantSpec};
+use crate::coordinator::deploy::{self, DeployControl, DeployOptions, DeployShared, RolloutDriver};
 use crate::coordinator::metrics::{
-    LatencyHistogram, OccupancyMeter, PoolMeter, SpecMeter, TenantMeter,
+    DeployMeter, LatencyHistogram, OccupancyMeter, PoolMeter, SpecMeter, TenantMeter,
 };
 use crate::coordinator::spec::{self, SpecDecoder};
 use crate::data::tokenizer::EOS;
@@ -133,11 +134,14 @@ pub(crate) struct QosShared {
     /// cap (the overload controller halves γ under sustained pressure
     /// and restores the cap when calm).
     gamma_cap: AtomicUsize,
+    /// §L11 rollout levers (targeted drain, canary probe gate, canary
+    /// health), written by the router's rollout driver.
+    pub(crate) deploy: DeployShared,
 }
 
 impl QosShared {
     fn new() -> QosShared {
-        QosShared { gamma_cap: AtomicUsize::new(usize::MAX) }
+        QosShared { gamma_cap: AtomicUsize::new(usize::MAX), deploy: DeployShared::new() }
     }
 }
 
@@ -351,6 +355,9 @@ pub struct ServerOptions {
     /// ±25% deterministic jitter). `ALTUP_RESTART_BACKOFF_MS` sets the
     /// default (else 25); 0 is clamped to 1.
     pub restart_backoff_ms: u64,
+    /// §L11 rolling-swap knobs (probation window, probe count, canary
+    /// health gates). `ALTUP_DEPLOY_*` set the defaults.
+    pub deploy: DeployOptions,
 }
 
 impl Default for ServerOptions {
@@ -374,6 +381,7 @@ impl Default for ServerOptions {
             tenants: admission::tenants_from_env(),
             autoscale: env::usize_or("ALTUP_AUTOSCALE", 0),
             restart_backoff_ms: env::u64_or("ALTUP_RESTART_BACKOFF_MS", 25),
+            deploy: DeployOptions::default(),
         }
     }
 }
@@ -473,6 +481,68 @@ impl ChaosSpec {
     }
 }
 
+/// §L11: how a *new* sim version differs from the serving one — the
+/// deploy analogue of `ChaosSpec`. `apply` derives the successor
+/// version's `SimSpec` from the old one, so swap benches describe "the
+/// new checkpoint is 10% cheaper" or "the new checkpoint is broken" as
+/// data. Composes with `ChaosSpec`: chaos targets `fault` fields, a
+/// swap targets costs and the bad-version injections.
+#[derive(Debug, Clone, Default)]
+pub struct SimSwapSpec {
+    /// Per-token / per-step cost multiplier for the new version (a
+    /// re-distilled successor is usually cheaper). 0.0 means 1.0.
+    pub cost_mult: f64,
+    /// Deterministic bad-version injection, exercised by the rollback
+    /// arms.
+    pub bad: BadVersionMode,
+}
+
+/// What a deliberately broken successor version does. Both modes are
+/// deterministic so the rollback benches and parity assertions pin
+/// exact behavior.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum BadVersionMode {
+    /// The new version is healthy.
+    #[default]
+    None,
+    /// Every engine call panics — the canary crashes at its very first
+    /// probe decode (exercises the crash-rollback path).
+    Panic,
+    /// Decode emits wrong-but-well-formed tokens: the per-row hash is
+    /// salted so every non-EOS token differs from the old version while
+    /// stream lengths and costs stay identical (exercises the
+    /// token-parity probe gate).
+    WrongTokens,
+}
+
+/// Salt XORed into the sim row hash by `BadVersionMode::WrongTokens`.
+/// Only token *values* change — `sim_gen_len` and EOS placement key off
+/// the unsalted hash, so a wrong-token version is behaviorally
+/// identical except for what it says.
+const BAD_VERSION_SALT: u64 = 0x0BAD_5EED_0BAD_5EED;
+
+impl SimSwapSpec {
+    /// Derive the new version's spec from the serving one.
+    pub fn apply(&self, old: &SimSpec) -> SimSpec {
+        let mut spec = old.clone();
+        let m = if self.cost_mult > 0.0 { self.cost_mult } else { 1.0 };
+        let scale = |ns: u64| -> u64 { ((ns as f64) * m).round().max(0.0) as u64 };
+        spec.token_ns = scale(spec.token_ns);
+        spec.dtoken_ns = scale(spec.dtoken_ns);
+        spec.dstep_ns = scale(spec.dstep_ns);
+        if let Some(draft) = spec.draft.as_mut() {
+            draft.dtoken_ns = scale(draft.dtoken_ns);
+            draft.dstep_ns = scale(draft.dstep_ns);
+        }
+        match self.bad {
+            BadVersionMode::None => {}
+            BadVersionMode::Panic => spec.bad_panic = true,
+            BadVersionMode::WrongTokens => spec.bad_token_salt = BAD_VERSION_SALT,
+        }
+        spec
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct SimSpec {
     pub batch_size: usize,
@@ -512,6 +582,14 @@ pub struct SimSpec {
     pub pool: Option<SimPoolSpec>,
     /// Injected faults (default: none).
     pub fault: FaultSpec,
+    /// §L11 bad-version injection: XORed into every row hash at token
+    /// emission, so a "wrong weights" version emits different tokens
+    /// with identical stream lengths and costs. 0 = healthy.
+    /// `SimSwapSpec::apply` sets it; never read from env.
+    pub bad_token_salt: u64,
+    /// §L11 bad-version injection: every engine call panics (a version
+    /// broken badly enough to crash on first execute).
+    pub bad_panic: bool,
 }
 
 /// §L9 sim page-pool geometry: mirrors the real backend's
@@ -587,6 +665,8 @@ impl SimSpec {
             }),
             pool: SimPoolSpec::from_env(),
             fault: FaultSpec::default(),
+            bad_token_salt: 0,
+            bad_panic: false,
         }
     }
 }
@@ -666,6 +746,12 @@ pub struct ServerStats {
     /// failed). Names live in `ServerOptions::tenants` — the stats
     /// carry only indices so replicas stay config-free.
     pub tenants: Vec<TenantMeter>,
+    /// §L11 per-version rollout accounting (requests by artifact
+    /// version, canary verdicts, rollbacks). `current` tags which
+    /// version this stat set's completions/failures land on; the
+    /// version rows partition the global counters the same way
+    /// `tenants` does.
+    pub deploy: DeployMeter,
 }
 
 impl ServerStats {
@@ -768,6 +854,7 @@ impl ServerStats {
         for (t, m) in other.tenants.iter().enumerate() {
             self.tenant_mut(t).merge(m);
         }
+        self.deploy.merge(&other.deploy);
     }
 
     /// The meter for tenant `t`, growing the table on first touch so
@@ -828,6 +915,25 @@ impl ServerStats {
                 self.sheds, self.retries, self.restarts, self.failed, self.drained
             ));
         }
+        if self.deploy.active() {
+            let versions: Vec<String> = self
+                .deploy
+                .versions
+                .iter()
+                .enumerate()
+                .map(|(v, m)| format!("v{v}:{}", m.requests))
+                .collect();
+            s.push_str(&format!(
+                " | deploy: {} canary pass / {} fail, {} rollback(s), {} completed, \
+                 {} aborted, requests by version [{}]",
+                self.deploy.canary_pass,
+                self.deploy.canary_fail,
+                self.deploy.rollbacks,
+                self.deploy.completed,
+                self.deploy.aborted,
+                versions.join(" ")
+            ));
+        }
         s
     }
 }
@@ -848,6 +954,7 @@ fn fail_request(stats: &mut ServerStats, req: &Request, reason: FailReason, repl
     if shed {
         tm.sheds += 1;
     }
+    stats.deploy.note_failed(shed);
     let _ = req.reply.send(Response::failed(reason, req.t0, replica));
 }
 
@@ -982,6 +1089,7 @@ fn spawn_replica(
     opts: &ServerOptions,
     events: &mpsc::Sender<ReplicaExit>,
     shared: &Arc<QosShared>,
+    version: u32,
 ) -> std::thread::JoinHandle<()> {
     let spec = spec.clone();
     let jobs = Arc::clone(jobs);
@@ -993,6 +1101,9 @@ fn spawn_replica(
         .spawn(move || {
             let ledger = Ledger::new();
             let mut stats = ServerStats { replicas: 1, ..Default::default() };
+            // §L11: everything this incarnation completes or fails is
+            // accounted to its artifact version.
+            stats.deploy.current = version;
             let outcome = catch_unwind(AssertUnwindSafe(|| {
                 serve_replica(id, &spec, &jobs, &opts, &ledger, &mut stats, &shared)
             }));
@@ -1016,6 +1127,8 @@ pub struct ServerHandle {
     /// `infer` can reject new work immediately instead of touching a
     /// channel whose receiver is gone.
     router_up: Arc<AtomicBool>,
+    /// §L11 rollout mailbox shared with the router's rollout driver.
+    deploy_ctl: Arc<DeployControl>,
 }
 
 /// Clears the router-liveness flag on drop — including on unwind.
@@ -1054,25 +1167,27 @@ impl ServerHandle {
         let shared = Arc::new(QosShared::new());
 
         let handles: Vec<_> = (0..n)
-            .map(|i| spawn_replica(i, &engine, &job_rx, &opts, &events_tx, &shared))
+            .map(|i| spawn_replica(i, &engine, &job_rx, &opts, &events_tx, &shared, 0))
             .collect();
         let router_up = Arc::new(AtomicBool::new(true));
+        let deploy_ctl = Arc::new(DeployControl::new());
         let router = {
             let spec = engine.clone();
             let ropts = opts.clone();
             let flag = Arc::clone(&router_up);
+            let ctl = Arc::clone(&deploy_ctl);
             std::thread::Builder::new()
                 .name("altup-router".into())
                 .spawn(move || {
                     let _guard = RouterGuard(flag);
                     route(
                         &spec, req_rx, job_tx, job_rx, events_rx, events_tx, &ropts, handles,
-                        shared,
+                        shared, ctl,
                     )
                 })
                 .expect("spawn router")
         };
-        ServerHandle { sender: req_tx, router: Some(router), router_up }
+        ServerHandle { sender: req_tx, router: Some(router), router_up, deploy_ctl }
     }
 
     /// Submit a request and block for the response; explicit failure
@@ -1104,12 +1219,52 @@ impl ServerHandle {
         })
     }
 
+    /// §L11: roll the fleet onto a new engine version, one replica at a
+    /// time behind the canary health gates. Blocks until the rollout
+    /// reaches a terminal [`DeployStatus`] (completed, rolled back,
+    /// failed validation, or aborted by shutdown). Rollouts queue:
+    /// concurrent calls run strictly one at a time.
+    pub fn deploy(&self, engine: EngineSpec) -> DeployStatus {
+        let seq = self.deploy_start(engine);
+        self.deploy_wait(seq)
+    }
+
+    /// §L11: enqueue a rollout without blocking; returns a ticket for
+    /// `deploy_wait`. Lets a caller overlap a rollout with its own
+    /// work (or shut the server down mid-rollout — the ticket then
+    /// resolves to `Aborted`).
+    pub fn deploy_start(&self, engine: EngineSpec) -> u64 {
+        self.deploy_ctl.submit(engine)
+    }
+
+    /// §L11: block until the rollout behind `seq` reaches a terminal
+    /// [`DeployStatus`].
+    pub fn deploy_wait(&self, seq: u64) -> DeployStatus {
+        self.deploy_ctl.wait(seq, &self.router_up)
+    }
+
+    /// §L11: `deploy` for a compiled artifact by suite name — the
+    /// `Server::deploy(artifact_dir)` entry point (artifact names
+    /// resolve to directories via the suite registry, and
+    /// `Artifact::load` verifies the version fingerprint + checksums
+    /// before the fleet ever sees the new weights).
+    pub fn deploy_artifact(&self, name: &str) -> DeployStatus {
+        self.deploy(EngineSpec::Artifact { name: name.to_string() })
+    }
+
+    /// §L11: live rollout status snapshot (`Idle` before any deploy).
+    pub fn deploy_status(&self) -> DeployStatus {
+        self.deploy_ctl.status()
+    }
+
     /// Drain and shut down: stop admissions, flush partial groups, let
     /// replicas retire their in-flight slots naturally, join every
     /// thread, and return the merged stats. Every admitted request gets
-    /// a terminal response before this returns.
+    /// a terminal response before this returns. An in-flight rollout is
+    /// aborted cleanly (reported as `Aborted` to its waiter and in the
+    /// stats' deploy section).
     pub fn shutdown(self) -> Result<ServerStats> {
-        let ServerHandle { sender, router, router_up: _ } = self;
+        let ServerHandle { sender, router, router_up: _, deploy_ctl: _ } = self;
         let router = router.expect("router handle");
         drop(sender); // stop admissions; the router begins its drain
         match router.join() {
@@ -1119,8 +1274,11 @@ impl ServerHandle {
     }
 }
 
-/// (batch_size, enc_len) of the serving geometry.
-fn engine_dims(spec: &EngineSpec) -> Result<(usize, usize)> {
+/// (batch_size, enc_len) of the serving geometry. For artifacts this
+/// runs the full `Artifact::load` (including §L11 checksum
+/// verification), so the §L11 prep thread reuses it as the new
+/// version's load-time validation.
+pub(crate) fn engine_dims(spec: &EngineSpec) -> Result<(usize, usize)> {
     match spec {
         EngineSpec::Artifact { name } => {
             let artifact = load_named(name)?;
@@ -1131,17 +1289,29 @@ fn engine_dims(spec: &EngineSpec) -> Result<(usize, usize)> {
 }
 
 /// The supervisor's replica bookkeeping: what it needs to respawn a
-/// replacement (spec, options, the shared job queue, the event channel)
-/// plus the live count and restart budget.
-struct Supervisor {
-    spec: EngineSpec,
-    opts: ServerOptions,
+/// replacement (specs by version, options, the shared job queue, the
+/// event channel) plus the live count and restart budget. `pub(crate)`
+/// so the §L11 rollout driver (coordinator/deploy.rs) can drive
+/// targeted drains and version-pinned spawns through it.
+pub(crate) struct Supervisor {
+    /// Engine spec per artifact version; version 0 is the spec the
+    /// server booted on, each §L11 rollout registers the next.
+    pub(crate) specs: BTreeMap<u32, EngineSpec>,
+    /// §L11: the version every *new* spawn (crash respawn, autoscale,
+    /// rollout replacement) lands on. Starts at 0, flips to the new
+    /// version when a rollout's first canary passes, reverts on
+    /// rollback.
+    pub(crate) decided: u32,
+    /// §L11: which version each live replica id is serving (ids are
+    /// never reused; entries are removed on exit).
+    pub(crate) versions: HashMap<usize, u32>,
+    pub(crate) opts: ServerOptions,
     jobs: Arc<Mutex<mpsc::Receiver<BatchJob>>>,
     events_tx: mpsc::Sender<ReplicaExit>,
     handles: Vec<std::thread::JoinHandle<()>>,
-    live: usize,
+    pub(crate) live: usize,
     restarts_left: usize,
-    next_id: usize,
+    pub(crate) next_id: usize,
     last_error: Option<String>,
     /// Set when the fleet died while admissions were still open (last
     /// crash with the job queue open and no restart budget left) —
@@ -1158,9 +1328,10 @@ struct Supervisor {
     pending_respawns: Vec<Instant>,
     /// Crashes that consumed restart budget — the backoff exponent.
     crashes: u32,
-    /// §L10: the γ-cap lever handed to every replica this supervisor
-    /// spawns (respawns and autoscale replicas included).
-    shared: Arc<QosShared>,
+    /// §L10/§L11: the degradation + rollout levers handed to every
+    /// replica this supervisor spawns (respawns and autoscale replicas
+    /// included).
+    pub(crate) shared: Arc<QosShared>,
 }
 
 impl Supervisor {
@@ -1168,15 +1339,20 @@ impl Supervisor {
     /// or explicitly fail its in-flight requests, and respawn a
     /// replacement when it crashed and the budget allows. `job_open`
     /// is whether the job queue can still carry requeued work (false
-    /// once the drain has closed it).
+    /// once the drain has closed it). `allow_respawn` is false when the
+    /// §L11 rollout driver already owns this exit (it spawned the
+    /// replacement itself — no restart budget is spent and a rollout
+    /// lifecycle exit can never be mistaken for fleet death).
     fn on_exit(
         &mut self,
         ev: ReplicaExit,
         stats: &mut ServerStats,
         groups: &mut BTreeMap<usize, Vec<Admitted>>,
         job_open: bool,
+        allow_respawn: bool,
     ) {
         self.live = self.live.saturating_sub(1);
+        self.versions.remove(&ev.id);
         stats.merge(&ev.stats);
         let crashed = ev.error.is_some();
         if let Some(err) = ev.error {
@@ -1197,7 +1373,7 @@ impl Supervisor {
                 });
             }
         }
-        if crashed && job_open && self.restarts_left > 0 {
+        if crashed && allow_respawn && job_open && self.restarts_left > 0 {
             // §L10 satellite: schedule the replacement behind an
             // exponential backoff instead of spawning it here — a
             // persistently-failing artifact must not crash-loop
@@ -1209,6 +1385,7 @@ impl Supervisor {
             self.pending_respawns.push(Instant::now() + delay);
         }
         if crashed
+            && allow_respawn
             && job_open
             && self.live == 0
             && self.pending_respawns.is_empty()
@@ -1253,19 +1430,43 @@ impl Supervisor {
         }
     }
 
-    /// Spawn one replica with a fresh id (respawn or §L10 autoscale).
+    /// Spawn one replica with a fresh id (respawn or §L10 autoscale) on
+    /// the rollout-decided version.
     fn spawn_one(&mut self) {
+        let v = self.decided;
+        self.spawn_version(v);
+    }
+
+    /// §L11: spawn one replica with a fresh id pinned to version `v`
+    /// (canaries, rollback replacements, and — via `spawn_one` — every
+    /// respawn and autoscale spawn). Returns the new replica id.
+    pub(crate) fn spawn_version(&mut self, v: u32) -> usize {
         let id = self.next_id;
         self.next_id += 1;
+        let spec = self
+            .specs
+            .get(&v)
+            .or_else(|| self.specs.get(&self.decided))
+            .expect("version spec registered")
+            .clone();
+        self.versions.insert(id, v);
         self.handles.push(spawn_replica(
             id,
-            &self.spec,
+            &spec,
             &self.jobs,
             &self.opts,
             &self.events_tx,
             &self.shared,
+            v,
         ));
         self.live += 1;
+        id
+    }
+
+    /// §L11: the next replica a rollout to `version` should drain — the
+    /// lowest-id live replica still on a different version.
+    pub(crate) fn next_swap_target(&self, version: u32) -> Option<usize> {
+        self.versions.iter().filter(|&(_, &v)| v != version).map(|(&id, _)| id).min()
     }
 
     /// Whether the fleet can still serve or come back: live replicas
@@ -1321,9 +1522,12 @@ fn route(
     opts: &ServerOptions,
     handles: Vec<std::thread::JoinHandle<()>>,
     shared: Arc<QosShared>,
+    deploy_ctl: Arc<DeployControl>,
 ) -> Result<ServerStats> {
     let mut sup = Supervisor {
-        spec: spec.clone(),
+        specs: BTreeMap::from([(0u32, spec.clone())]),
+        decided: 0,
+        versions: (0..handles.len()).map(|i| (i, 0u32)).collect(),
         opts: opts.clone(),
         jobs: job_rx,
         events_tx,
@@ -1353,6 +1557,9 @@ fn route(
         }
     };
     let mut job_tx = if fatal.is_none() { Some(job_tx) } else { None };
+    // §L11 rollout driver: advances the swap state machine from the
+    // supervision pass and intercepts rollout-owned replica exits.
+    let mut rollout = RolloutDriver::new(deploy_ctl, (batch_size, enc_len));
     let timeout = opts.request_timeout_ms.map(Duration::from_millis);
     let mut groups: BTreeMap<usize, Vec<Admitted>> = BTreeMap::new();
     let mut disconnected = false;
@@ -1372,11 +1579,26 @@ fn route(
     loop {
         // Supervision pass: fold in replica exits (requeue/fail their
         // in-flight work, respawn within budget once each backoff
-        // elapses).
+        // elapses). §L11 rollout-owned exits (drain target gone ->
+        // spawn canary; canary gone -> rollback) are intercepted first.
         while let Ok(ev) = events_rx.try_recv() {
-            sup.on_exit(ev, &mut stats, &mut groups, job_tx.is_some());
+            let respawn =
+                rollout.observe_exit(ev.id, ev.error.is_some(), &mut sup, &mut stats);
+            sup.on_exit(ev, &mut stats, &mut groups, job_tx.is_some(), respawn);
         }
         sup.tick_respawns(&mut stats, job_tx.is_some());
+        // §L11: advance the rollout state machine; a server that is
+        // draining or has lost its fleet aborts instead.
+        if disconnected || job_tx.is_none() {
+            let reason = if disconnected {
+                "server shut down during the rollout"
+            } else {
+                "no serving fleet left for the rollout"
+            };
+            rollout.abort_all(&mut sup, &mut stats, reason);
+        } else {
+            rollout.tick(&mut sup, &mut stats);
+        }
         if !sup.can_serve() {
             if fatal.is_none() {
                 if let Some(err) = sup.died.take() {
@@ -1586,7 +1808,9 @@ fn route(
                 break;
             }
             if let Ok(ev) = events_rx.recv_timeout(Duration::from_millis(50)) {
-                sup.on_exit(ev, &mut stats, &mut groups, job_tx.is_some());
+                let respawn =
+                    rollout.observe_exit(ev.id, ev.error.is_some(), &mut sup, &mut stats);
+                sup.on_exit(ev, &mut stats, &mut groups, job_tx.is_some(), respawn);
             }
             continue;
         }
@@ -1717,6 +1941,16 @@ impl SimEngine {
     /// boundary exactly the way a real backend crash would.
     fn on_call(&mut self) {
         self.calls += 1;
+        if self.spec.bad_panic {
+            // §L11 bad-version injection: a version broken badly enough
+            // to crash on its very first execute — the canary dies at
+            // its probe decode, before any live traffic.
+            panic!(
+                "injected sim fault: bad version panics on replica {} call {} \
+                 (expected during §L11 rollback tests/benches)",
+                self.replica, self.calls
+            );
+        }
         let f = &self.spec.fault;
         let killed_here = (f.kill_replica == Some(self.replica)
             && self.calls >= f.kill_after_calls.max(1))
@@ -1796,17 +2030,20 @@ impl SimSlot {
     /// single source of truth shared by plain decode, drafting, and
     /// verify — which is what makes sim spec decoding exact-by-
     /// construction, mirroring the real greedy-verify guarantee.
-    fn token_at(&self, j: usize, vocab: usize) -> i32 {
+    /// `salt` is the §L11 bad-version salt (0 = healthy): it perturbs
+    /// token values only — EOS placement keys off the unsalted hash,
+    /// so a wrong-token version stays cost-identical.
+    fn token_at(&self, j: usize, vocab: usize, salt: u64) -> i32 {
         if !self.stuck && j + 1 == self.gen_len {
             EOS
         } else {
-            sim_token(self.h, j, vocab)
+            sim_token(self.h ^ salt, j, vocab)
         }
     }
 }
 
 impl Engine {
-    fn build(replica: usize, spec: &EngineSpec, opts: &ServerOptions) -> Result<Engine> {
+    pub(crate) fn build(replica: usize, spec: &EngineSpec, opts: &ServerOptions) -> Result<Engine> {
         match spec {
             EngineSpec::Artifact { name } => {
                 let client = Client::cpu()?;
@@ -1870,7 +2107,7 @@ impl Engine {
     }
 
     /// (batch_size, enc_len) of the serving geometry.
-    fn dims(&self) -> (usize, usize) {
+    pub(crate) fn dims(&self) -> (usize, usize) {
         match self {
             Engine::Real { session, .. } => {
                 (session.artifact.config.batch_size, session.artifact.config.enc_len)
@@ -1951,7 +2188,7 @@ impl Engine {
     }
 
     /// Monolithic decode of a (batch_size, bucket) packed batch.
-    fn decode(&mut self, enc: &[i32], bucket: usize) -> Result<Vec<Vec<i32>>> {
+    pub(crate) fn decode(&mut self, enc: &[i32], bucket: usize) -> Result<Vec<Vec<i32>>> {
         match self {
             Engine::Real { client, session, .. } => {
                 session.decode_bucketed(client, enc, bucket)
@@ -2134,7 +2371,7 @@ impl Engine {
                         continue;
                     }
                     let sl = slot.as_mut().context("live mask set on an empty sim slot")?;
-                    out[s] = sl.token_at(sl.pos, spec.vocab_size);
+                    out[s] = sl.token_at(sl.pos, spec.vocab_size, spec.bad_token_salt);
                     sl.pos += 1;
                     if sl.stuck {
                         stuck_live += 1;
@@ -2246,7 +2483,7 @@ impl Engine {
                     }
                     let sl = slot.as_ref().context("live mask set on an empty sim slot")?;
                     out[s] = (0..gamma)
-                        .map(|j| sl.token_at(sl.pos + j, e.spec.vocab_size))
+                        .map(|j| sl.token_at(sl.pos + j, e.spec.vocab_size, e.spec.bad_token_salt))
                         .collect();
                 }
                 // γ draft steps over the static slot geometry, charged
@@ -2316,7 +2553,7 @@ impl Engine {
                     let sl = slot.as_mut().context("live mask set on an empty sim slot")?;
                     let a = sim_accept_len(sl.h, sl.pos, gamma, d.accept_rate);
                     accept[s] = a as i32;
-                    correction[s] = sl.token_at(sl.pos + a, spec.vocab_size);
+                    correction[s] = sl.token_at(sl.pos + a, spec.vocab_size, spec.bad_token_salt);
                     sl.pos += a + 1;
                     if sl.stuck {
                         stuck_live += 1;
@@ -2493,15 +2730,20 @@ fn sim_decode(spec: &SimSpec, enc: &[i32], bucket: usize) -> Vec<Vec<i32>> {
     let mut stuck_rows = 0u64;
     for row in enc.chunks(bucket) {
         let h = sim_row_hash(row);
+        // §L11: the bad-version salt perturbs token values only —
+        // stuck class, generation length, and EOS placement key off
+        // the unsalted hash, so a wrong-token version is
+        // cost-identical to the healthy one.
+        let th = h ^ spec.bad_token_salt;
         if spec.fault.stuck(h) {
             stuck_rows += 1;
-            out.push((0..spec.dec_len).map(|j| sim_token(h, j, spec.vocab_size)).collect());
+            out.push((0..spec.dec_len).map(|j| sim_token(th, j, spec.vocab_size)).collect());
             continue;
         }
         let gen_len = sim_gen_len(h, spec.dec_len);
         let mut tokens = Vec::with_capacity(gen_len);
         for j in 0..gen_len {
-            tokens.push(if j + 1 == gen_len { EOS } else { sim_token(h, j, spec.vocab_size) });
+            tokens.push(if j + 1 == gen_len { EOS } else { sim_token(th, j, spec.vocab_size) });
         }
         out.push(tokens);
     }
@@ -2517,7 +2759,7 @@ fn sim_decode(spec: &SimSpec, enc: &[i32], bucket: usize) -> Vec<Vec<i32>> {
 /// Truncate a decoded row at its first EOS (inclusive), aligning the
 /// monolithic path's output with what the continuous path actually
 /// generated before retiring the slot.
-fn truncate_at_eos(tokens: &mut Vec<i32>) {
+pub(crate) fn truncate_at_eos(tokens: &mut Vec<i32>) {
     if let Some(p) = tokens.iter().position(|&t| t == EOS) {
         tokens.truncate(p + 1);
     }
@@ -2538,6 +2780,15 @@ fn serve_replica(
     shared: &Arc<QosShared>,
 ) -> Result<()> {
     let mut engine = Engine::build(id, spec, opts)?;
+    // §L11 canary gate: a rollout canary decodes the pinned probe set
+    // and holds for the router's token-parity verdict before serving
+    // any live traffic. Abandoned at the gate -> clean exit, zero
+    // requests served (a bad version never answers a client).
+    if shared.deploy.canary_id.load(Ordering::Acquire) == id
+        && !deploy::canary_gate(&mut engine, opts, &shared.deploy)?
+    {
+        return Ok(());
+    }
     if opts.continuous && engine.supports_continuous() {
         // §L8: speculation is strictly opt-in (spec_gamma > 0) and
         // runs at the engine's effective draft length (the requested γ
@@ -2547,7 +2798,7 @@ fn serve_replica(
         let spec_dec = (gamma > 0).then(|| SpecDecoder::new(gamma));
         serve_continuous(id, &mut engine, jobs, opts, ledger, stats, spec_dec, shared)
     } else {
-        serve_batches(id, &mut engine, jobs, ledger, stats, &opts.tenants)
+        serve_batches(id, &mut engine, jobs, ledger, stats, &opts.tenants, shared)
     }
 }
 
@@ -2569,9 +2820,14 @@ fn pop_job(jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>, block: bool) -> Result<P
             Ok(q) => q,
             Err(poisoned) => poisoned.into_inner(),
         };
-        match queue.recv() {
+        // Bounded wait, not `recv()`: an idle replica must resurface at
+        // the supervision cadence to notice cross-thread levers (the
+        // §L11 targeted drain), so a timed-out wait is `Empty`, not
+        // `Gone`.
+        match queue.recv_timeout(SUPERVISE_TICK) {
             Ok(job) => Ok(Popped::Job(job)),
-            Err(_) => Ok(Popped::Gone),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(Popped::Empty),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Ok(Popped::Gone),
         }
     } else {
         // try_lock, not lock: an idle replica parks inside `recv`
@@ -2603,6 +2859,7 @@ fn serve_batches(
     ledger: &Ledger,
     stats: &mut ServerStats,
     tenants: &[TenantSpec],
+    shared: &Arc<QosShared>,
 ) -> Result<()> {
     let (batch_size, _enc_len) = engine.dims();
     // Packing scratch reused across every batch on this hot path: the
@@ -2611,9 +2868,19 @@ fn serve_batches(
     let mut enc_scratch: Vec<i32> = Vec::new();
     let mut trunc_scratch: Vec<bool> = Vec::new();
     loop {
+        // §L11: a targeted rollout drain retires this replica between
+        // batches (run-to-completion means no slots to let retire);
+        // a probation canary publishes its health each pass.
+        if shared.deploy.take_drain(id) {
+            return Ok(());
+        }
+        if shared.deploy.canary_id.load(Ordering::Relaxed) == id {
+            shared.deploy.publish_canary_health(stats);
+        }
         let job = match pop_job(jobs, true)? {
             Popped::Job(job) => job,
-            _ => break, // router gone and queue drained
+            Popped::Empty => continue, // timed pop: re-check the levers
+            Popped::Gone => break,     // router gone and queue drained
         };
         if is_scale_down(&job) {
             return Ok(()); // §L10 autoscale retirement: a clean exit
@@ -2663,6 +2930,7 @@ fn serve_batches(
             stats
                 .tenant_mut(held.req.tenant)
                 .note_done(latency.as_secs_f64() * 1e3, tokens.len(), slo_ms);
+            stats.deploy.note_done(latency.as_secs_f64() * 1e3, tokens.len());
             let _ = held.req.reply.send(Response {
                 tokens,
                 latency,
@@ -2782,6 +3050,18 @@ fn serve_continuous(
     loop {
         let n_live = active.iter().filter(|s| s.is_some()).count();
 
+        // §L11: a targeted rollout drain retires this replica exactly
+        // like an autoscale retirement — stop pulling work, let the
+        // in-flight slots finish naturally (releasing their §L9 pages),
+        // exit cleanly. A probation canary publishes its live health
+        // each iteration for the router's gates.
+        if !retiring && shared.deploy.take_drain(id) {
+            retiring = true;
+        }
+        if shared.deploy.canary_id.load(Ordering::Relaxed) == id {
+            shared.deploy.publish_canary_health(stats);
+        }
+
         // Pull new work: block when fully idle (nothing to decode),
         // poll otherwise so in-flight slots keep stepping.
         if !router_gone && !retiring {
@@ -2789,7 +3069,8 @@ fn serve_continuous(
                 match pop_job(jobs, true)? {
                     Popped::Job(job) if is_scale_down(&job) => retiring = true,
                     Popped::Job(job) => stash(ledger, &mut pending, job, stats, id),
-                    _ => router_gone = true,
+                    Popped::Empty => {} // timed pop: re-check the levers
+                    Popped::Gone => router_gone = true,
                 }
             }
             while pending.len() < slots_n && !router_gone && !retiring {
@@ -3103,6 +3384,7 @@ fn finish_slot(
     stats
         .tenant_mut(held.req.tenant)
         .note_done(latency.as_secs_f64() * 1e3, act.tokens.len(), slo_ms);
+    stats.deploy.note_done(latency.as_secs_f64() * 1e3, act.tokens.len());
     if router_gone {
         stats.drained += 1;
     }
@@ -3172,6 +3454,8 @@ mod tests {
             draft: Some(SimDraftSpec { dtoken_ns: 0, dstep_ns: 0, accept_rate: 0.75 }),
             pool: None,
             fault: FaultSpec::default(),
+            bad_token_salt: 0,
+            bad_panic: false,
         }
     }
 
@@ -3216,7 +3500,9 @@ mod tests {
         let (_job_tx, job_rx) = mpsc::sync_channel::<BatchJob>(1);
         let (events_tx, _events_rx) = mpsc::channel();
         let mut sup = Supervisor {
-            spec: EngineSpec::Sim(quiet_spec()),
+            specs: BTreeMap::from([(0u32, EngineSpec::Sim(quiet_spec()))]),
+            decided: 0,
+            versions: HashMap::from([(0usize, 0u32)]),
             opts: ServerOptions { restart_backoff_ms: 40, seed: 7, ..ServerOptions::default() },
             jobs: Arc::new(Mutex::new(job_rx)),
             events_tx,

@@ -216,6 +216,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // §L8: draft length for speculative decoding (0 = off; falls
         // back to plain decode when the artifact ships no draft).
         spec_gamma: args.usize_or("spec-gamma", defaults.spec_gamma),
+        // Tenancy (§L10) and deploy gates (§L11) keep their
+        // ALTUP_*-derived defaults.
+        ..defaults
     };
     let n = args.usize_or("requests", 64);
     let server = ServerHandle::spawn(&name, opts);

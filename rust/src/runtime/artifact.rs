@@ -5,6 +5,7 @@
 //! opt-state slots, and the train/eval/decode input signatures.
 
 use crate::config::ModelConfig;
+use crate::runtime::pages::fnv1a_bytes;
 use crate::runtime::tensor::DType;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -120,6 +121,16 @@ pub struct Artifact {
     pub paged: Option<PagedSpec>,
     pub batch_inputs: Vec<BatchInputSpec>,
     pub hlo_files: Vec<(String, PathBuf)>,
+    /// Human-readable version label from the optional meta.json
+    /// `version` entry (§L11 deployments roll between these);
+    /// "unversioned" when the compile path did not stamp one.
+    pub version: String,
+    /// Load-time identity: FNV-1a of the raw meta.json text. Two
+    /// artifact dirs with byte-identical metas (which, when `checksums`
+    /// is present, pins the HLO bytes too) share a fingerprint; any
+    /// param/shape/HLO-manifest change moves it. Deployment uses this
+    /// to tell "same version reloaded" from "new version".
+    pub fingerprint: u64,
     pub param_count_total: usize,
     pub param_count_embedding: usize,
     pub flops_per_token: f64,
@@ -158,6 +169,28 @@ impl Artifact {
             if w[0].name >= w[1].name {
                 bail!("meta.json params not sorted: {} >= {}", w[0].name, w[1].name);
             }
+        }
+        // §L11 hardening: a zero dimension means the shape entry was
+        // malformed (non-integer dims parse as 0 above) — catch it
+        // here as a typed load error instead of a first-execute panic
+        // when the runtime tries to allocate the buffer.
+        for p in &params {
+            if p.shape.iter().any(|&d| d == 0) {
+                bail!("param {} has malformed shape {:?} (zero/non-integer dim)", p.name, p.shape);
+            }
+        }
+        // §L11 hardening: the compile path pins param_count.total ==
+        // sum of parameter elements (python/tests/test_aot.py), so a
+        // disagreement means the params table and the HLO it was
+        // lowered with have drifted apart — a load error, not a shape
+        // mismatch at first execute.
+        let declared_total = meta.get("param_count").get("total").as_usize().unwrap_or(0);
+        let param_elems: usize = params.iter().map(|p| p.shape.iter().product::<usize>()).sum();
+        if declared_total > 0 && declared_total != param_elems {
+            bail!(
+                "meta.json param_count.total = {declared_total} but params table sums to \
+                 {param_elems} elements: artifact params/HLO mismatch"
+            );
         }
 
         let mut opt_state = Vec::new();
@@ -250,6 +283,42 @@ impl Artifact {
             }
         }
 
+        // §L11 hardening: optional per-HLO checksums. Each entry maps
+        // an `artifacts` key to the FNV-1a of that file's bytes as a
+        // 16-hex-digit string (`fnv1a_bytes`, same constants as the
+        // §L9 prefix hashes). When present, a truncated/corrupted/
+        // swapped HLO fails HERE with a typed error the deploy gate
+        // can surface, instead of panicking a replica at first
+        // execute. Files without an entry are not verified.
+        if let Some(sums) = meta.get("checksums").as_obj() {
+            for (k, v) in sums {
+                let want = v
+                    .as_str()
+                    .and_then(|s| u64::from_str_radix(s, 16).ok())
+                    .with_context(|| {
+                        format!("meta.json checksums.{k} must be a 16-hex-digit FNV-1a string")
+                    })?;
+                let path = hlo_files
+                    .iter()
+                    .find(|(name, _)| name == k)
+                    .map(|(_, p)| p.clone())
+                    .with_context(|| {
+                        format!("meta.json checksums.{k} names no entry in `artifacts`")
+                    })?;
+                let bytes = std::fs::read(&path).with_context(|| {
+                    format!("reading {} to verify checksums.{k}", path.display())
+                })?;
+                let got = fnv1a_bytes(&bytes);
+                if got != want {
+                    bail!(
+                        "HLO checksum mismatch for '{k}' ({}): expected {want:016x}, file hashes \
+                         to {got:016x} — artifact is truncated or corrupt",
+                        path.display()
+                    );
+                }
+            }
+        }
+
         let raw_config = meta.get("config").clone();
         let config = ModelConfig::from_json(&raw_config)?;
         Ok(Artifact {
@@ -264,7 +333,9 @@ impl Artifact {
             paged,
             batch_inputs,
             hlo_files,
-            param_count_total: meta.get("param_count").get("total").as_usize().unwrap_or(0),
+            version: meta.get("version").as_str().unwrap_or("unversioned").to_string(),
+            fingerprint: fnv1a_bytes(text.as_bytes()),
+            param_count_total: declared_total,
             param_count_embedding: meta
                 .get("param_count")
                 .get("embedding")
@@ -423,6 +494,97 @@ mod tests {
             std::fs::write(tmp.join("meta.json"), meta).unwrap();
             assert!(Artifact::load(&tmp).is_err(), "draft.gamma {bad} rejected");
         }
+        std::fs::remove_dir_all(&tmp).unwrap();
+    }
+
+    #[test]
+    fn version_and_fingerprint_identity() {
+        let tmp = std::env::temp_dir().join(format!("altup-test5-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("meta.json"), fake_meta()).unwrap();
+        let a = Artifact::load(&tmp).unwrap();
+        assert_eq!(a.version, "unversioned", "absent version entry gets the default label");
+        let again = Artifact::load(&tmp).unwrap();
+        assert_eq!(a.fingerprint, again.fingerprint, "fingerprint is a pure function of meta");
+
+        let versioned = fake_meta().replace(
+            "\"flops_per_token\": 100.0",
+            "\"flops_per_token\": 100.0, \"version\": \"v2-recycled\"",
+        );
+        std::fs::write(tmp.join("meta.json"), versioned).unwrap();
+        let b = Artifact::load(&tmp).unwrap();
+        assert_eq!(b.version, "v2-recycled");
+        assert_ne!(a.fingerprint, b.fingerprint, "any meta change moves the identity");
+        std::fs::remove_dir_all(&tmp).unwrap();
+    }
+
+    #[test]
+    fn checksums_verified_on_load() {
+        use crate::runtime::pages::fnv1a_bytes;
+        let tmp = std::env::temp_dir().join(format!("altup-test6-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        let hlo = b"HloModule train_step\nENTRY main { ROOT r = f32[] constant(0) }\n";
+        std::fs::write(tmp.join("train_step.hlo.txt"), hlo).unwrap();
+        let good = format!("{:016x}", fnv1a_bytes(hlo));
+        let with_sums = |sum: &str| {
+            fake_meta().replace(
+                "\"flops_per_token\": 100.0",
+                &format!("\"flops_per_token\": 100.0, \"checksums\": {{\"train_step\": \"{sum}\"}}"),
+            )
+        };
+
+        // Matching checksum loads fine.
+        std::fs::write(tmp.join("meta.json"), with_sums(&good)).unwrap();
+        Artifact::load(&tmp).expect("intact HLO passes its checksum");
+
+        // Truncated HLO (the classic partial-copy deploy failure) is a
+        // typed load error that names the file, not a later panic.
+        std::fs::write(tmp.join("train_step.hlo.txt"), &hlo[..hlo.len() / 2]).unwrap();
+        let err = format!("{:#}", Artifact::load(&tmp).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "got: {err}");
+        assert!(err.contains("train_step"), "got: {err}");
+
+        // Single flipped byte (corruption) is also caught.
+        let mut corrupt = hlo.to_vec();
+        corrupt[10] ^= 0x40;
+        std::fs::write(tmp.join("train_step.hlo.txt"), &corrupt).unwrap();
+        assert!(Artifact::load(&tmp).is_err(), "bit-flip caught");
+
+        // Restore the file: a checksum naming no artifacts entry and a
+        // malformed (non-hex) checksum are both load errors.
+        std::fs::write(tmp.join("train_step.hlo.txt"), hlo).unwrap();
+        let orphan = fake_meta().replace(
+            "\"flops_per_token\": 100.0",
+            "\"flops_per_token\": 100.0, \"checksums\": {\"decode_step\": \"0123456789abcdef\"}",
+        );
+        std::fs::write(tmp.join("meta.json"), orphan).unwrap();
+        assert!(Artifact::load(&tmp).is_err(), "checksum for unknown HLO rejected");
+        std::fs::write(tmp.join("meta.json"), with_sums("not-hex")).unwrap();
+        assert!(Artifact::load(&tmp).is_err(), "malformed checksum string rejected");
+
+        // Missing HLO file named by a checksum is a load error too.
+        std::fs::remove_file(tmp.join("train_step.hlo.txt")).unwrap();
+        std::fs::write(tmp.join("meta.json"), with_sums(&good)).unwrap();
+        assert!(Artifact::load(&tmp).is_err(), "missing HLO caught at load");
+        std::fs::remove_dir_all(&tmp).unwrap();
+    }
+
+    #[test]
+    fn param_shape_mismatches_rejected() {
+        let tmp = std::env::temp_dir().join(format!("altup-test7-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        // Declared param_count.total disagreeing with the params table
+        // is a load error (the compile path pins them equal).
+        let drift = fake_meta().replace("\"total\": 130", "\"total\": 131");
+        std::fs::write(tmp.join("meta.json"), drift).unwrap();
+        let err = format!("{:#}", Artifact::load(&tmp).unwrap_err());
+        assert!(err.contains("param_count.total"), "got: {err}");
+        // A non-integer dim (parses as 0) is a load error, not an
+        // allocation panic at first execute.
+        let zero = fake_meta().replace("\"shape\":[8,16]", "\"shape\":[8,\"x\"]");
+        std::fs::write(tmp.join("meta.json"), zero).unwrap();
+        let err = format!("{:#}", Artifact::load(&tmp).unwrap_err());
+        assert!(err.contains("malformed shape"), "got: {err}");
         std::fs::remove_dir_all(&tmp).unwrap();
     }
 

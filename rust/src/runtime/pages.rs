@@ -50,6 +50,19 @@ pub fn pages_for(tokens: usize, page_size: usize) -> usize {
     (tokens + ps - 1) / ps
 }
 
+/// Plain FNV-1a over raw bytes — the same constants as `chunk_hashes`,
+/// applied bytewise. Used by `runtime::artifact` to verify optional
+/// per-HLO-file checksums at load time (§L11 artifact hardening), so a
+/// truncated or corrupted HLO is rejected before a replica ever
+/// executes it.
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Chained FNV-1a hashes of `tokens` in full `page_size` chunks:
 /// entry `k` hashes the first `(k+1) * page_size` tokens, so equal
 /// hash `k` means equal *prefix* through page `k` — exactly the

@@ -225,6 +225,8 @@ pub(crate) mod tests {
             paged: None,
             batch_inputs: vec![BatchInputSpec { name: "enc".into(), shape: vec![2, 8] }],
             hlo_files: vec![],
+            version: "unversioned".into(),
+            fingerprint: 0,
             param_count_total: 4 + 128 + 8,
             param_count_embedding: 0,
             flops_per_token: 1.0,

@@ -187,3 +187,161 @@ fn prop_batch_geometry_invariant() {
             && batch.answers.len() == b
     });
 }
+
+/// §L11 satellite: liveness of the full serving stack under composed
+/// adversity. Whatever combination of rolling swap (clean or
+/// bad-version), replica kill, expired-deadline shedding, and
+/// pool-exhaustion pressure a scenario draws, every admitted request
+/// gets EXACTLY one terminal `Response` (tokens or a typed failure —
+/// never zero, never two), and the rollout itself reaches a terminal
+/// `DeployStatus`.
+#[test]
+fn prop_exactly_one_terminal_response_under_swap_chaos() {
+    use altup::coordinator::deploy::DeployOptions;
+    use altup::coordinator::server::{
+        BadVersionMode, EngineSpec, FaultSpec, Request, ServerHandle, ServerOptions, SimPoolSpec,
+        SimSpec, SimSwapSpec,
+    };
+    use std::time::{Duration, Instant};
+
+    #[derive(Debug, Clone, PartialEq)]
+    struct Scenario {
+        replicas: usize,
+        slots: usize,
+        paged: bool,
+        kill: bool,
+        shed: bool,
+        bad: bool,
+        requests: usize,
+    }
+
+    struct ScenarioGen;
+    impl Gen for ScenarioGen {
+        type Value = Scenario;
+        fn draw(&self, rng: &mut Rng) -> Scenario {
+            Scenario {
+                replicas: rng.range(1, 3),
+                slots: rng.range(2, 5),
+                paged: rng.range(0, 2) == 1,
+                kill: rng.range(0, 2) == 1,
+                shed: rng.range(0, 2) == 1,
+                bad: rng.range(0, 2) == 1,
+                requests: rng.range(6, 17),
+            }
+        }
+        fn shrink(&self, v: &Scenario) -> Vec<Scenario> {
+            [
+                Scenario { paged: false, ..v.clone() },
+                Scenario { kill: false, ..v.clone() },
+                Scenario { shed: false, ..v.clone() },
+                Scenario { bad: false, ..v.clone() },
+                Scenario { replicas: 1, ..v.clone() },
+                Scenario { requests: (v.requests / 2).max(2), ..v.clone() },
+            ]
+            .into_iter()
+            .filter(|c| c != v)
+            .collect()
+        }
+    }
+
+    forall(12, 10, &ScenarioGen, |s| {
+        let mut spec = SimSpec::new(2, 32, 8);
+        spec.vocab_size = 97;
+        spec.token_ns = 0;
+        spec.dtoken_ns = 0;
+        spec.dstep_ns = 0;
+        if let Some(d) = spec.draft.as_mut() {
+            d.dtoken_ns = 0;
+            d.dstep_ns = 0;
+        }
+        // A pool small enough that concurrent slots can exhaust it.
+        spec.pool = if s.paged {
+            Some(SimPoolSpec { page_size: 4, pool_pages: 6, prefix_cache: false })
+        } else {
+            None
+        };
+        if s.kill {
+            spec.fault =
+                FaultSpec { kill_replica: Some(0), kill_after_calls: 2, ..FaultSpec::default() };
+        }
+        let options = ServerOptions {
+            batch_window: Duration::from_millis(1),
+            seed: 0,
+            checkpoint: None,
+            replicas: s.replicas,
+            bucketed: true,
+            slots: s.slots,
+            continuous: true,
+            queue_cap: 256,
+            request_timeout_ms: None,
+            max_retries: 3,
+            replica_restarts: 6,
+            spec_gamma: 0,
+            tenants: Vec::new(),
+            autoscale: 0,
+            restart_backoff_ms: 1,
+            // max_err 1.0 / huge lat_factor: only the token-parity
+            // probe can fail a canary, so clean swaps promote
+            // deterministically even while kills and sheds are flying.
+            deploy: DeployOptions {
+                probation: 2,
+                probation_ms: 40,
+                probes: 1,
+                max_err: 1.0,
+                lat_factor: 1e9,
+                hold_ms: 3000,
+            },
+        };
+        let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec.clone()), options);
+
+        let mut rxs = Vec::new();
+        for i in 0..s.requests {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let toks: Vec<i32> = (0..3 + (i % 20)).map(|j| 2 + (j as i32 % 50)).collect();
+            let req = if s.shed && i % 3 == 2 {
+                // Already-expired deadline: must come back as a shed.
+                Request::with_deadline(toks, tx, Instant::now())
+            } else {
+                Request::new(toks, tx)
+            };
+            if server.sender.send(req).is_err() {
+                return false;
+            }
+            rxs.push(rx);
+            if i == s.requests / 2 {
+                let swap = SimSwapSpec {
+                    cost_mult: 0.9,
+                    bad: if s.bad { BadVersionMode::WrongTokens } else { BadVersionMode::None },
+                };
+                server.deploy_start(EngineSpec::Sim(swap.apply(&spec)));
+            }
+        }
+
+        // Exactly one terminal response per request...
+        let deadline = Instant::now() + Duration::from_secs(30);
+        for rx in &rxs {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if rx.recv_timeout(left).is_err() {
+                return false; // a request never got its terminal response
+            }
+        }
+        // ...and the rollout itself terminates (promoted, rolled back,
+        // or aborted — never wedged).
+        while !server.deploy_status().terminal() {
+            if Instant::now() > deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let stats = match server.shutdown() {
+            Ok(st) => st,
+            Err(_) => return false,
+        };
+        // No request may receive a second terminal response.
+        if rxs.iter().any(|rx| rx.try_recv().is_ok()) {
+            return false;
+        }
+        // Completions + typed failures partition the admitted set.
+        stats.requests + stats.failed == s.requests
+    });
+}

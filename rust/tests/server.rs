@@ -7,9 +7,10 @@
 //! and drain are exercised in every build.
 
 use altup::coordinator::admission::parse_tenant_spec;
+use altup::coordinator::deploy::{DeployOptions, DeployStatus};
 use altup::coordinator::server::{
-    EngineSpec, FailReason, Request, Response, ServerHandle, ServerOptions, ServerStats,
-    SimPoolSpec, SimSpec, ROUTER_ID,
+    BadVersionMode, EngineSpec, FailReason, Request, Response, ServerHandle, ServerOptions,
+    ServerStats, SimPoolSpec, SimSpec, SimSwapSpec, ROUTER_ID,
 };
 use altup::data::tokenizer::EOS;
 use altup::runtime::session::{bucket_for, bucket_lengths};
@@ -63,6 +64,23 @@ fn opts(replicas: usize, bucketed: bool) -> ServerOptions {
         // pre-backoff spawn-on-crash behavior; the backoff test below
         // raises it explicitly.
         restart_backoff_ms: 1,
+        // Hermetic §L11 deploy gates (`DeployOptions::default()` reads
+        // ALTUP_DEPLOY_*): a short probation sized for test traffic,
+        // and an idle-promotion clock fast enough that rollouts on an
+        // idle fleet finish in tens of milliseconds.
+        deploy: deploy_opts(),
+    }
+}
+
+/// §L11 deploy gates for tests: explicit (env-free) and fast.
+fn deploy_opts() -> DeployOptions {
+    DeployOptions {
+        probation: 4,
+        probation_ms: 150,
+        probes: 2,
+        max_err: 0.4,
+        lat_factor: 100.0,
+        hold_ms: 4000,
     }
 }
 
@@ -1141,4 +1159,204 @@ fn tenant_rate_limit_sheds_and_per_tenant_meters_account() {
     assert_eq!(stats.tenants[1].slo_hits as usize, gold_resp.len());
     assert!((stats.tenants[1].goodput_ratio() - 1.0).abs() < 1e-12);
     assert_eq!(stats.tenants[0].slo_hits as usize, free_ok);
+}
+
+// ---------------------------------------------------------------- §L11
+
+/// A healthy successor version: identical tokens (salt 0), slightly
+/// different cost. `SimSwapSpec::apply` is the deploy analogue of
+/// `ChaosSpec::apply`.
+fn new_version(base: &SimSpec) -> SimSpec {
+    SimSwapSpec { cost_mult: 0.9, bad: BadVersionMode::None }.apply(base)
+}
+
+/// §L11 tentpole: a rolling swap on a live fleet promotes every
+/// replica through the canary gates, completes, and accounts every
+/// request to exactly one version row.
+#[test]
+fn rolling_swap_completes_with_zero_lost_requests() {
+    let base = sim_spec();
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(base.clone()), copts(2, 4));
+
+    // Concurrent client load riding across the whole rollout.
+    let n_reqs = 96usize;
+    let mut clients = Vec::new();
+    for c in 0..4usize {
+        let sender = server.sender.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut out = Vec::new();
+            for i in (c..n_reqs).step_by(4) {
+                let (tx, rx) = std::sync::mpsc::channel();
+                sender.send(Request::new(prompt(3 + (i % 40)), tx)).expect("router accepts");
+                out.push(rx.recv().expect("terminal response"));
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            out
+        }));
+    }
+    let status = server.deploy(EngineSpec::Sim(new_version(&base)));
+    assert_eq!(
+        status,
+        DeployStatus::Completed { version: 1, swapped: 2 },
+        "both replicas promoted"
+    );
+    assert_eq!(server.deploy_status(), status, "status snapshot agrees with the waiter");
+
+    let responses: Vec<Response> =
+        clients.into_iter().flat_map(|c| c.join().expect("client thread")).collect();
+    assert_eq!(responses.len(), n_reqs, "exactly one terminal response per request");
+    for r in &responses {
+        assert!(r.failure.is_none(), "no request lost to the swap: {:?}", r.failure);
+        assert_eq!(*r.tokens.last().unwrap(), EOS);
+    }
+
+    // Post-swap traffic lands on v1 and emits identical tokens (the
+    // healthy successor differs only in cost).
+    let after = collect(&server, &[5, 9, 17]);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.deploy.canary_pass, 2, "one canary verdict per replica");
+    assert_eq!(stats.deploy.canary_fail, 0);
+    assert_eq!(stats.deploy.rollbacks, 0);
+    assert_eq!(stats.deploy.completed, 1);
+    // Partition-of-global invariant: every completion and failure is
+    // in exactly one version row.
+    let vreq: u64 = stats.deploy.versions.iter().map(|m| m.requests).sum();
+    let vfail: u64 = stats.deploy.versions.iter().map(|m| m.failed).sum();
+    assert_eq!(vreq as usize, stats.requests, "version rows partition completions");
+    assert_eq!(vfail as usize, stats.failed, "version rows partition failures");
+    assert!(stats.deploy.version_requests(1) >= after.len() as u64, "post-swap work is on v1");
+    assert!(stats.summary().contains("deploy:"), "rollout surfaces in the summary");
+}
+
+/// §L11: a wrong-token successor is caught at the token-parity probe
+/// gate — it serves zero requests, the rollout rolls back, and the
+/// fleet keeps emitting old-version tokens.
+#[test]
+fn bad_version_rolls_back_with_token_parity() {
+    let base = sim_spec();
+    let lens = [3usize, 9, 17, 33];
+
+    // Old-version ground truth from a clean server.
+    let clean = ServerHandle::spawn_engine(EngineSpec::Sim(base.clone()), copts(1, 4));
+    let want = collect(&clean, &lens);
+    clean.shutdown().unwrap();
+
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(base.clone()), copts(1, 4));
+    let bad = SimSwapSpec { cost_mult: 0.0, bad: BadVersionMode::WrongTokens }.apply(&base);
+    let status = server.deploy(EngineSpec::Sim(bad));
+    match &status {
+        DeployStatus::RolledBack { version: 2.., .. } => {
+            panic!("version numbering drifted: {status}")
+        }
+        DeployStatus::RolledBack { swapped: 0, reason, .. } => {
+            assert!(reason.contains("token-parity"), "gate named in the reason: {reason}")
+        }
+        other => panic!("expected a parity rollback, got {other}"),
+    }
+
+    // The fleet still answers with old-version tokens.
+    assert_eq!(collect(&server, &lens), want, "token parity with the old version pinned");
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.deploy.rollbacks, 1);
+    assert_eq!(stats.deploy.canary_fail, 1);
+    assert_eq!(stats.deploy.canary_pass, 0);
+    assert_eq!(
+        stats.deploy.version_requests(1),
+        0,
+        "the bad version answered zero client requests"
+    );
+}
+
+/// §L11: a successor broken badly enough to panic on first execute
+/// crashes at its probe decode and rolls back — without spending §L7
+/// restart budget or leaving the fleet smaller.
+#[test]
+fn panicking_version_crash_rolls_back() {
+    let base = sim_spec();
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(base.clone()), copts(1, 2));
+    let bad = SimSwapSpec { cost_mult: 0.0, bad: BadVersionMode::Panic }.apply(&base);
+    let status = server.deploy(EngineSpec::Sim(bad));
+    match &status {
+        DeployStatus::RolledBack { swapped: 0, reason, .. } => {
+            assert!(reason.contains("crashed"), "crash named in the reason: {reason}")
+        }
+        other => panic!("expected a crash rollback, got {other}"),
+    }
+    // The replacement serves old-version traffic normally.
+    let rows = collect(&server, &[5, 12]);
+    for row in &rows {
+        assert_eq!(*row.last().unwrap(), EOS);
+    }
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.deploy.rollbacks, 1);
+    assert_eq!(stats.restarts, 0, "rollout lifecycle exits spend no §L7 restart budget");
+}
+
+/// §L11 satellite: a new version that fails validation (artifact that
+/// cannot load, or a geometry mismatch) is a typed `Failed` — the
+/// serving fleet is never touched.
+#[test]
+fn invalid_new_version_fails_before_any_drain() {
+    let base = sim_spec();
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(base.clone()), copts(1, 2));
+
+    // Artifact that cannot load (no such directory).
+    let status = server.deploy_artifact("no-such-artifact-l11");
+    match &status {
+        DeployStatus::Failed { reason, .. } => {
+            assert!(reason.contains("validation"), "load error surfaced: {reason}")
+        }
+        other => panic!("expected Failed, got {other}"),
+    }
+
+    // Geometry mismatch (different enc_len) is equally typed.
+    let mut wrong = base.clone();
+    wrong.enc_len = base.enc_len * 2;
+    let status = server.deploy(EngineSpec::Sim(wrong));
+    match &status {
+        DeployStatus::Failed { reason, .. } => {
+            assert!(reason.contains("geometry"), "mismatch surfaced: {reason}")
+        }
+        other => panic!("expected Failed, got {other}"),
+    }
+
+    // The fleet served through both rejected rollouts untouched.
+    let rows = collect(&server, &[4, 8]);
+    assert_eq!(rows.len(), 2);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(stats.deploy.rollbacks, 0, "nothing was drained for a rejected version");
+    assert_eq!(stats.requests, 2);
+}
+
+/// §L11 satellite: `shutdown()` during an in-flight rollout aborts it
+/// cleanly — the full §L7 drain still happens, every request gets a
+/// terminal response, and the aborted rollout lands in the shutdown
+/// stats.
+#[test]
+fn shutdown_during_rollout_aborts_cleanly() {
+    let base = sim_spec();
+    // A probation window far longer than the test keeps the rollout
+    // in flight until shutdown interrupts it.
+    let options = ServerOptions {
+        deploy: DeployOptions { probation: 10_000, probation_ms: 60_000, ..deploy_opts() },
+        ..copts(2, 2)
+    };
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(base.clone()), options);
+    let before = collect(&server, &[5, 9]);
+    assert_eq!(before.len(), 2);
+
+    let _seq = server.deploy_start(EngineSpec::Sim(new_version(&base)));
+    // Wait until the rollout is genuinely mid-flight (a canary is up
+    // or a drain is pending) before pulling the plug.
+    let t0 = Instant::now();
+    while !matches!(server.deploy_status(), DeployStatus::InProgress { .. }) {
+        assert!(t0.elapsed() < Duration::from_secs(10), "rollout never started");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    std::thread::sleep(Duration::from_millis(30));
+
+    let stats = server.shutdown().expect("graceful drain despite the rollout");
+    assert_eq!(stats.deploy.aborted, 1, "aborted rollout reported in shutdown stats");
+    assert!(stats.summary().contains("1 aborted"), "surfaced in the summary");
+    assert_eq!(stats.requests, 2, "pre-rollout traffic fully accounted");
 }
