@@ -1,0 +1,1462 @@
+//! Multi-replica inference server: shape-bucketed batching (§Perf L5),
+//! slot-based **continuous batching** (§Perf L6), and a **supervised,
+//! fault-tolerant serving lifecycle** (§L7).
+//!
+//! The PJRT session is !Send (Rc-backed FFI handles), so each replica
+//! owns its client + session on a dedicated model thread. A router
+//! thread admits requests continuously, groups them by sequence-length
+//! bucket (`runtime::session::bucket_for`), and emits full-or-expired
+//! batches onto a shared job queue; the first replica with capacity
+//! picks each job up.
+//!
+//! Replicas run one of two decode disciplines:
+//!
+//! - **Continuous (default, §Perf L6):** the replica owns `S` decode
+//!   slots, each holding a request's device-resident KV-cache buffers
+//!   (`Session::init_decode_slots`). Between decode iterations the slot
+//!   scheduler admits pending requests into free slots (one
+//!   `prefill@<bucket>` per same-bucket admission group), runs one
+//!   fused `decode_token` over every live slot, and retires slots the
+//!   moment they emit EOS or hit `dec_len`.
+//! - **Batch-level (fallback / `ALTUP_NO_CONT_BATCH=1`):** the §Perf
+//!   L5 run-to-completion loop over the monolithic `decode_step`.
+//!
+//! §L8 — on the continuous path, **speculative decoding**
+//! (`ALTUP_SPEC_GAMMA` / `--spec-gamma`, via `coordinator::spec`)
+//! replaces each fused `decode_token` iteration with a draft/verify
+//! round: a cheap draft session proposes γ tokens per live slot, one
+//! fused full-model `verify@γ` accepts the longest greedy-identical
+//! prefix and supplies a correction token, and each slot's stream
+//! advances by 1..=γ+1 tokens per full-model step — token-for-token
+//! identical to plain decode (parity pinned by `tests/server.rs`).
+//! Artifacts opt in by shipping a `draft` entry in meta.json; the sim
+//! engine models the draft with `SimDraftSpec` (per-step cost + a
+//! hash-sampled per-position acceptance coin) so the subsystem tests
+//! and benches without a PJRT backend. Replicas fall back to plain
+//! decode when no draft is available.
+//!
+//! §Perf L9 — replicas with a **paged decode contract** serve KV state
+//! out of a fixed page pool instead of per-slot monoliths: every slot
+//! maps its KV through a page table into refcounted fixed-size pages
+//! (`runtime::pages`), admission is pool-aware (a request is admitted
+//! only when its pages fit — an impossible request is shed with
+//! `FailReason::PoolExhausted`, a transient shortage stalls admission
+//! until live slots retire), and a content-addressed **prefix cache**
+//! pins page-aligned prompt chunks so shared prefixes map one physical
+//! copy and skip their covered prefill work (LRU-evicted under pool
+//! pressure, never while any slot still maps the page). Artifacts opt
+//! in by shipping the `paged` meta entry plus the
+//! `prefill_paged`/`decode_token_paged` HLOs; the sim engine models
+//! the pool with [`SimPoolSpec`] (`ALTUP_POOL_PAGES` /
+//! `ALTUP_PAGE_SIZE` / `ALTUP_PREFIX_CACHE`). Replicas without the
+//! contract keep serving monolithic `DecodeSlots`, token-for-token
+//! identical.
+//!
+//! §L7 — the serving lifecycle is supervised (cf. Pope et al. 2022,
+//! where replica failure and load shedding are scheduler states, not
+//! fatal errors):
+//!
+//! - Every replica runs inside a panic boundary (`catch_unwind`). Each
+//!   request a replica accepts lives in a per-replica in-flight
+//!   [`Ledger`] until its terminal [`Response`] is sent; when a replica
+//!   crashes, the supervisor (the router thread) requeues whatever the
+//!   ledger still held to surviving replicas — bounded by
+//!   `ServerOptions::max_retries` per request, after which the client
+//!   receives an explicit `Response::failed` instead of a dropped
+//!   channel — and respawns a replacement replica from the shared
+//!   `EngineSpec` up to `ServerOptions::replica_restarts`.
+//! - Requests carry an optional deadline (`ServerOptions::
+//!   request_timeout_ms` / `ALTUP_REQUEST_TIMEOUT_MS`). The router
+//!   sheds expired requests before dispatch and the continuous decode
+//!   loop retires expired slots between iterations, so one stuck
+//!   generation cannot hold a slot forever.
+//! - `shutdown()` is a drain, not an abort: admissions stop, partial
+//!   groups flush, replicas retire their in-flight slots naturally,
+//!   and only then are threads joined. Every admitted request gets a
+//!   terminal response — tokens, or an explicit failure.
+//!
+//! Backends: `EngineSpec::Artifact` serves a compiled artifact through
+//! a warmed device cache (§Perf L4); `EngineSpec::Sim` is a
+//! deterministic backend-free decode with a per-token cost model,
+//! hash-sampled EOS lengths, and an injectable [`FaultSpec`]
+//! (deterministic replica kills, hash-sampled panics, stuck
+//! generations), so supervision, retry, shedding, and drain are all
+//! testable and benchable without a PJRT backend.
+
+use crate::coordinator::admission::{self, AdmissionController, QosAction, TenantSpec};
+use crate::coordinator::deploy::{self, DeployControl, DeployOptions, DeployShared, RolloutDriver};
+use crate::coordinator::metrics::{
+    DeployMeter, LatencyHistogram, OccupancyMeter, PoolMeter, SpecMeter, TenantMeter,
+};
+use crate::coordinator::spec::{self, SpecDecoder};
+use crate::data::tokenizer::EOS;
+use crate::runtime::artifact::load_named;
+use crate::runtime::client::Client;
+use crate::runtime::pages::{chunk_hashes, pages_for, PagePool, PageTable, PrefixCache};
+use crate::runtime::session::{bucket_for, DecodeSlots, Session};
+use crate::util::env;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+mod options;
+mod router;
+mod sim;
+mod worker;
+
+pub use options::{EngineSpec, FailReason, Request, Response, ServerOptions};
+pub use sim::{
+    BadVersionMode, ChaosSpec, FaultSpec, SimDraftSpec, SimPoolSpec, SimSpec, SimSwapSpec,
+};
+pub(crate) use router::{route, Supervisor};
+pub(crate) use sim::{
+    sim_accept_len, sim_decode, sim_gen_len, sim_mix, sim_row_hash, sim_sleep, sim_token,
+    SimEngine, SimSlot,
+};
+pub(crate) use worker::{
+    flatten_page_tables, pop_job, resolve_spec_gamma, serve_replica, truncate_at_eos, Engine,
+    Popped, SlotState,
+};
+
+
+/// `Response::replica` value for router-side failures (deadline sheds,
+/// drain aborts, dead-server rejections) that never reached a model
+/// replica.
+pub const ROUTER_ID: usize = usize::MAX;
+
+/// How long the router parks at most between supervision passes, so
+/// replica crash events are noticed promptly even while admission is
+/// idle or mid-batch-window.
+const SUPERVISE_TICK: Duration = Duration::from_millis(25);
+
+/// §L10 scale-down sentinel: a `BatchJob` with this bucket and no
+/// requests asks whichever replica pops it to finish its in-flight
+/// work and exit cleanly (an autoscale retirement, not a crash — no
+/// respawn, no restart-budget spend).
+const SCALE_DOWN_BUCKET: usize = usize::MAX;
+
+fn scale_down_job() -> BatchJob {
+    BatchJob { bucket: SCALE_DOWN_BUCKET, requests: Vec::new() }
+}
+
+fn is_scale_down(job: &BatchJob) -> bool {
+    job.bucket == SCALE_DOWN_BUCKET && job.requests.is_empty()
+}
+
+/// §L10 cross-thread degradation levers, written by the router's
+/// overload controller and read by replicas between decode iterations.
+pub(crate) struct QosShared {
+    /// Ceiling on the speculative draft length γ; `usize::MAX` = no
+    /// cap (the overload controller halves γ under sustained pressure
+    /// and restores the cap when calm).
+    gamma_cap: AtomicUsize,
+    /// §L11 rollout levers (targeted drain, canary probe gate, canary
+    /// health), written by the router's rollout driver.
+    pub(crate) deploy: DeployShared,
+}
+
+impl QosShared {
+    fn new() -> QosShared {
+        QosShared { gamma_cap: AtomicUsize::new(usize::MAX), deploy: DeployShared::new() }
+    }
+}
+
+/// Aggregate serving counters; per-replica stats are merged by the
+/// supervisor as replicas exit (including crashed incarnations — their
+/// partial counters are recovered through the panic boundary).
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    /// Requests answered with tokens (explicit failures count in
+    /// `failed`, not here).
+    pub requests: usize,
+    /// Decode batches (batch-level) or prefill admission groups
+    /// (continuous) — the unit `mean_fill` averages over.
+    pub batches: usize,
+    pub total_fill: usize,
+    /// How many replica stat sets were merged in (crashed incarnations
+    /// and their replacements each count once).
+    pub replicas: usize,
+    /// Real prompt tokens submitted (post-truncation).
+    pub prompt_tokens: usize,
+    /// Prefill tokens actually executed — `batch_size * bucket` per
+    /// monolithic batch, `rows * bucket` per split prefill — the
+    /// denominator of the padded-waste ratio.
+    pub executed_tokens: usize,
+    pub truncated: usize,
+    /// Decoded tokens delivered to clients (EOS-truncated rows).
+    pub tokens_generated: usize,
+    /// Decode tokens the continuous path did NOT run because slots
+    /// retired at EOS (`dec_len - row len`, summed). Zero under
+    /// batch-level decode — the monolithic step always runs `dec_len`.
+    pub tokens_saved: usize,
+    /// Fused full-model decode iterations (continuous path only):
+    /// `decode_token` executes, or §L8 verify rounds when speculating.
+    pub decode_steps: usize,
+    /// Split-prefill executions (continuous path only).
+    pub prefills: usize,
+    /// §L7: requests shed past their deadline (router or replica side).
+    /// Subset of `failed`.
+    pub sheds: usize,
+    /// §L7: requests requeued to another replica after a crash.
+    pub retries: usize,
+    /// §L7: replacement replicas the supervisor spawned.
+    pub restarts: usize,
+    /// §L10: autoscale replicas spawned on sustained queue pressure
+    /// (beyond the configured fleet; bounded by
+    /// `ServerOptions::autoscale`).
+    pub scale_ups: usize,
+    /// §L10: autoscale replicas retired once pressure subsided.
+    pub scale_downs: usize,
+    /// §L7: explicit terminal failures delivered (deadline sheds,
+    /// retry exhaustion, drain aborts, dead-server rejections).
+    pub failed: usize,
+    /// §L7: requests completed after admissions closed (the drain
+    /// window of `shutdown()`). Counted on the continuous path — the
+    /// default discipline; the batch-level loop cannot observe
+    /// admission closure (it only ever sees the job queue end) and
+    /// reports 0 here.
+    pub drained: usize,
+    /// §L8 speculative-decoding counters (drafted/accepted tokens,
+    /// draft/verify steps, tokens delivered per verify). All-zero when
+    /// speculation is off or unsupported.
+    pub spec: SpecMeter,
+    /// §L9 paged decode-state counters (pool occupancy, prefix cache
+    /// hit rate, prefill tokens saved, evictions, admission stalls).
+    /// All-zero when the replica serves monolithic slots.
+    pub pool: PoolMeter,
+    /// Live-slots-per-decode-iteration meter (continuous path only).
+    pub occupancy: OccupancyMeter,
+    /// Per-request queued+executed latency, log-bucketed (O(1) memory
+    /// over a server's lifetime, mergeable across replicas).
+    pub latency: LatencyHistogram,
+    /// Per-token latency (request latency / tokens delivered).
+    pub token_latency: LatencyHistogram,
+    /// §L10 per-tenant QoS accounting, indexed by `Request::tenant`
+    /// (grown on demand; empty when no tenant ever completed or
+    /// failed). Names live in `ServerOptions::tenants` — the stats
+    /// carry only indices so replicas stay config-free.
+    pub tenants: Vec<TenantMeter>,
+    /// §L11 per-version rollout accounting (requests by artifact
+    /// version, canary verdicts, rollbacks). `current` tags which
+    /// version this stat set's completions/failures land on; the
+    /// version rows partition the global counters the same way
+    /// `tenants` does.
+    pub deploy: DeployMeter,
+}
+
+impl ServerStats {
+    pub fn mean_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.total_fill as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of executed tokens that were padding: 1 - prompt/executed.
+    pub fn waste_ratio(&self) -> f64 {
+        if self.executed_tokens == 0 {
+            0.0
+        } else {
+            1.0 - self.prompt_tokens as f64 / self.executed_tokens as f64
+        }
+    }
+
+    /// Fraction of the monolithic decode budget the early exit saved:
+    /// saved / (saved + generated).
+    pub fn early_exit_ratio(&self) -> f64 {
+        let budget = self.tokens_saved + self.tokens_generated;
+        if budget == 0 {
+            0.0
+        } else {
+            self.tokens_saved as f64 / budget as f64
+        }
+    }
+
+    /// Number of latency samples recorded (== requests served).
+    pub fn latency_count(&self) -> u64 {
+        self.latency.count()
+    }
+
+    pub fn latency_percentile_ms(&self, p: f64) -> f64 {
+        self.latency.percentile_ms(p)
+    }
+    pub fn p50_ms(&self) -> f64 {
+        self.latency_percentile_ms(50.0)
+    }
+    pub fn p95_ms(&self) -> f64 {
+        self.latency_percentile_ms(95.0)
+    }
+    pub fn p99_ms(&self) -> f64 {
+        self.latency_percentile_ms(99.0)
+    }
+    /// Mean per-token latency in ms (histogram approximation).
+    pub fn token_ms(&self) -> f64 {
+        self.token_latency.mean_ms()
+    }
+
+    /// Record one finished request's bookkeeping (shared by both
+    /// decode disciplines).
+    fn note_response(
+        &mut self,
+        latency: Duration,
+        generated: usize,
+        saved: usize,
+        prompt: usize,
+        truncated: bool,
+    ) {
+        let ms = latency.as_secs_f64() * 1e3;
+        self.latency.record(ms);
+        self.token_latency.record(ms / generated.max(1) as f64);
+        self.tokens_generated += generated;
+        self.tokens_saved += saved;
+        self.prompt_tokens += prompt;
+        if truncated {
+            self.truncated += 1;
+        }
+    }
+
+    /// Fold another replica's counters into this aggregate.
+    pub fn merge(&mut self, other: &ServerStats) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.total_fill += other.total_fill;
+        self.replicas += other.replicas;
+        self.prompt_tokens += other.prompt_tokens;
+        self.executed_tokens += other.executed_tokens;
+        self.truncated += other.truncated;
+        self.tokens_generated += other.tokens_generated;
+        self.tokens_saved += other.tokens_saved;
+        self.decode_steps += other.decode_steps;
+        self.prefills += other.prefills;
+        self.sheds += other.sheds;
+        self.retries += other.retries;
+        self.restarts += other.restarts;
+        self.scale_ups += other.scale_ups;
+        self.scale_downs += other.scale_downs;
+        self.failed += other.failed;
+        self.drained += other.drained;
+        self.spec.merge(&other.spec);
+        self.pool.merge(&other.pool);
+        self.occupancy.merge(&other.occupancy);
+        self.latency.merge(&other.latency);
+        self.token_latency.merge(&other.token_latency);
+        for (t, m) in other.tenants.iter().enumerate() {
+            self.tenant_mut(t).merge(m);
+        }
+        self.deploy.merge(&other.deploy);
+    }
+
+    /// The meter for tenant `t`, growing the table on first touch so
+    /// replicas need no tenant config to account correctly.
+    pub fn tenant_mut(&mut self, t: usize) -> &mut TenantMeter {
+        if self.tenants.len() <= t {
+            self.tenants.resize_with(t + 1, TenantMeter::default);
+        }
+        &mut self.tenants[t]
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{} requests / {} batches on {} replica(s), mean fill {:.2}, \
+             padded waste {:.1}%, {} tokens out (early exit saved {:.1}%), \
+             mean occupancy {:.2} over {} decode steps, \
+             latency p50 {:.2} / p95 {:.2} / p99 {:.2} ms",
+            self.requests,
+            self.batches,
+            self.replicas.max(1),
+            self.mean_fill(),
+            self.waste_ratio() * 100.0,
+            self.tokens_generated,
+            self.early_exit_ratio() * 100.0,
+            self.occupancy.mean(),
+            self.decode_steps,
+            self.p50_ms(),
+            self.p95_ms(),
+            self.p99_ms()
+        );
+        if self.spec.active() {
+            s.push_str(&format!(
+                " | spec: {:.1}% acceptance ({}/{} drafted), {:.2} tokens/verify \
+                 over {} verify steps",
+                self.spec.acceptance_rate() * 100.0,
+                self.spec.accepted,
+                self.spec.drafted,
+                self.spec.tokens_per_verify(),
+                self.spec.verify_steps
+            ));
+        }
+        if self.pool.active() {
+            s.push_str(&format!(
+                " | pool: {:.1}% occupancy (peak {}/{} pages), prefix hit rate {:.1}%, \
+                 {} prefill tokens saved, {} evictions, {} stalls",
+                self.pool.utilization() * 100.0,
+                self.pool.peak_used,
+                self.pool.capacity,
+                self.pool.hit_rate() * 100.0,
+                self.pool.prefill_tokens_saved,
+                self.pool.evictions,
+                self.pool.alloc_stalls
+            ));
+        }
+        if self.failed + self.retries + self.restarts + self.drained > 0 {
+            s.push_str(&format!(
+                " | faults: {} shed / {} retried / {} restarts / {} failed / {} drained",
+                self.sheds, self.retries, self.restarts, self.failed, self.drained
+            ));
+        }
+        if self.deploy.active() {
+            let versions: Vec<String> = self
+                .deploy
+                .versions
+                .iter()
+                .enumerate()
+                .map(|(v, m)| format!("v{v}:{}", m.requests))
+                .collect();
+            s.push_str(&format!(
+                " | deploy: {} canary pass / {} fail, {} rollback(s), {} completed, \
+                 {} aborted, requests by version [{}]",
+                self.deploy.canary_pass,
+                self.deploy.canary_fail,
+                self.deploy.rollbacks,
+                self.deploy.completed,
+                self.deploy.aborted,
+                versions.join(" ")
+            ));
+        }
+        s
+    }
+}
+
+/// Send an explicit terminal failure for `req` and count it. The send
+/// is best-effort: a client that already gave up dropped its receiver.
+fn fail_request(stats: &mut ServerStats, req: &Request, reason: FailReason, replica: usize) {
+    stats.failed += 1;
+    let shed = matches!(
+        reason,
+        FailReason::DeadlineExceeded | FailReason::QueueFull | FailReason::WouldMissDeadline
+    );
+    if shed {
+        stats.sheds += 1;
+    }
+    let tm = stats.tenant_mut(req.tenant);
+    tm.failed += 1;
+    if shed {
+        tm.sheds += 1;
+    }
+    stats.deploy.note_failed(shed);
+    let _ = req.reply.send(Response::failed(reason, req.t0, replica));
+}
+
+/// A request the router has accepted into a bucket group. Latency is
+/// reported from the client-side `Request::t0`; the batch-window
+/// deadline runs from `admitted`, so a request that sat in the request
+/// channel does not count that wait against its group's window (which
+/// would ship burst arrivals as tiny immediately-due batches).
+struct Admitted {
+    req: Request,
+    admitted: Instant,
+    /// How many times a crashed replica already held this request (the
+    /// supervisor's retry counter).
+    attempts: u32,
+}
+
+/// A bucket-homogeneous batch ready for a replica.
+struct BatchJob {
+    bucket: usize,
+    requests: Vec<Admitted>,
+}
+
+/// §L7: every request a replica has accepted but not yet terminally
+/// answered, keyed by ticket. The ledger lives outside the panic
+/// boundary, so the supervisor can requeue or explicitly fail whatever
+/// a crashed replica was holding — no reply channel is ever silently
+/// dropped with a dying thread.
+struct Ledger {
+    inner: Mutex<LedgerInner>,
+}
+
+struct LedgerInner {
+    next_ticket: u64,
+    held: HashMap<u64, Held>,
+}
+
+/// A ledger entry: the original request plus the routing state needed
+/// to requeue it (bucket) and cap its retries (attempts).
+struct Held {
+    bucket: usize,
+    attempts: u32,
+    req: Request,
+}
+
+impl Ledger {
+    fn new() -> Ledger {
+        Ledger { inner: Mutex::new(LedgerInner { next_ticket: 0, held: HashMap::new() }) }
+    }
+
+    /// Poison-proof lock: the ledger is read after a replica panic by
+    /// design, and entries are plain data — a poisoned guard is safe to
+    /// recover.
+    fn lock(&self) -> std::sync::MutexGuard<'_, LedgerInner> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    fn admit(&self, bucket: usize, attempts: u32, req: Request) -> u64 {
+        let mut inner = self.lock();
+        let ticket = inner.next_ticket;
+        inner.next_ticket += 1;
+        inner.held.insert(ticket, Held { bucket, attempts, req });
+        ticket
+    }
+
+    fn take(&self, ticket: u64) -> Option<Held> {
+        self.lock().held.remove(&ticket)
+    }
+
+    /// Run `f` over a held request's prompt tokens in place (§L9
+    /// prefix-chunk hashing at admission) — no clone, same reasoning
+    /// as `pack_rows`. `None` when the ticket was already taken.
+    fn with_prompt<R>(&self, ticket: u64, f: impl FnOnce(&[i32]) -> R) -> Option<R> {
+        let inner = self.lock();
+        inner.held.get(&ticket).map(|h| f(&h.req.enc_tokens))
+    }
+
+    fn drain(&self) -> Vec<Held> {
+        self.lock().held.drain().map(|(_, h)| h).collect()
+    }
+
+    /// Pack the held requests behind `tickets` into the (batch_size,
+    /// len) geometry, borrowing their prompt rows in place — the hot
+    /// path never clones a prompt just because ownership sits in the
+    /// ledger. Row order follows `tickets`; a ticket already taken
+    /// packs as an empty row (cannot happen on the owning replica).
+    fn pack_rows(
+        &self,
+        tickets: &[u64],
+        batch_size: usize,
+        len: usize,
+        enc: &mut Vec<i32>,
+        truncated: &mut Vec<bool>,
+    ) {
+        let inner = self.lock();
+        let rows: Vec<&[i32]> = tickets
+            .iter()
+            .map(|t| inner.held.get(t).map_or(&[][..], |h| h.req.enc_tokens.as_slice()))
+            .collect();
+        pack_requests_into(&rows, batch_size, len, enc, truncated);
+    }
+}
+
+/// What a replica thread reports to the supervisor as its last act —
+/// its stats (partial if it crashed), the crash cause if any, and every
+/// in-flight request its ledger still held.
+struct ReplicaExit {
+    id: usize,
+    stats: ServerStats,
+    /// `Some` when the replica crashed (panic or error) rather than
+    /// drained cleanly.
+    error: Option<String>,
+    unfinished: Vec<Held>,
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic: <non-string payload>".to_string()
+    }
+}
+
+/// Spawn one replica thread behind the §L7 panic boundary. The thread's
+/// terminal `ReplicaExit` event — stats, crash cause, unfinished
+/// ledger — always reaches the supervisor, panic or not.
+fn spawn_replica(
+    id: usize,
+    spec: &EngineSpec,
+    jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    opts: &ServerOptions,
+    events: &mpsc::Sender<ReplicaExit>,
+    shared: &Arc<QosShared>,
+    version: u32,
+) -> std::thread::JoinHandle<()> {
+    let spec = spec.clone();
+    let jobs = Arc::clone(jobs);
+    let opts = opts.clone();
+    let events = events.clone();
+    let shared = Arc::clone(shared);
+    std::thread::Builder::new()
+        .name(format!("altup-replica-{id}"))
+        .spawn(move || {
+            let ledger = Ledger::new();
+            let mut stats = ServerStats { replicas: 1, ..Default::default() };
+            // §L11: everything this incarnation completes or fails is
+            // accounted to its artifact version.
+            stats.deploy.current = version;
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                serve_replica(id, &spec, &jobs, &opts, &ledger, &mut stats, &shared)
+            }));
+            let error = match outcome {
+                Ok(Ok(())) => None,
+                Ok(Err(e)) => Some(format!("{e:#}")),
+                Err(payload) => Some(panic_message(payload.as_ref())),
+            };
+            let unfinished = ledger.drain();
+            let _ = events.send(ReplicaExit { id, stats, error, unfinished });
+        })
+        .expect("spawn replica")
+}
+
+pub struct ServerHandle {
+    /// Bounded: `send` blocks once `ServerOptions::queue_cap` requests
+    /// are in flight ahead of the router (admission backpressure).
+    pub sender: mpsc::SyncSender<Request>,
+    router: Option<std::thread::JoinHandle<Result<ServerStats>>>,
+    /// Cleared the moment the router thread exits (even by panic), so
+    /// `infer` can reject new work immediately instead of touching a
+    /// channel whose receiver is gone.
+    router_up: Arc<AtomicBool>,
+    /// §L11 rollout mailbox shared with the router's rollout driver.
+    deploy_ctl: Arc<DeployControl>,
+}
+
+/// Clears the router-liveness flag on drop — including on unwind.
+struct RouterGuard(Arc<AtomicBool>);
+
+impl Drop for RouterGuard {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::Release);
+    }
+}
+
+impl ServerHandle {
+    /// Spawn router + replicas serving the named artifact.
+    pub fn spawn(artifact_name: &str, opts: ServerOptions) -> ServerHandle {
+        ServerHandle::spawn_engine(
+            EngineSpec::Artifact { name: artifact_name.to_string() },
+            opts,
+        )
+    }
+
+    /// Spawn supervisor/router + replicas over an explicit decode
+    /// backend.
+    pub fn spawn_engine(engine: EngineSpec, opts: ServerOptions) -> ServerHandle {
+        let n = opts.replicas.max(1);
+        let (req_tx, req_rx) = mpsc::sync_channel::<Request>(opts.queue_cap.max(1));
+        // Bounded job queue = backpressure: when every replica is busy
+        // and the queue is full, the router keeps accumulating instead
+        // of window-flushing tiny partial batches at a wall of busy
+        // replicas (which craters fill and wastes executed tokens).
+        // §L10: the job queue is sized for the autoscaled fleet, so a
+        // scaled-up replica never starves the queue of slots and the
+        // scale-down sentinel always has room.
+        let (job_tx, job_rx) = mpsc::sync_channel::<BatchJob>(n + opts.autoscale);
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (events_tx, events_rx) = mpsc::channel::<ReplicaExit>();
+        let shared = Arc::new(QosShared::new());
+
+        let handles: Vec<_> = (0..n)
+            .map(|i| spawn_replica(i, &engine, &job_rx, &opts, &events_tx, &shared, 0))
+            .collect();
+        let router_up = Arc::new(AtomicBool::new(true));
+        let deploy_ctl = Arc::new(DeployControl::new());
+        let router = {
+            let spec = engine.clone();
+            let ropts = opts.clone();
+            let flag = Arc::clone(&router_up);
+            let ctl = Arc::clone(&deploy_ctl);
+            std::thread::Builder::new()
+                .name("altup-router".into())
+                .spawn(move || {
+                    let _guard = RouterGuard(flag);
+                    route(
+                        &spec, req_rx, job_tx, job_rx, events_rx, events_tx, &ropts, handles,
+                        shared, ctl,
+                    )
+                })
+                .expect("spawn router")
+        };
+        ServerHandle { sender: req_tx, router: Some(router), router_up, deploy_ctl }
+    }
+
+    /// Submit a request and block for the response; explicit failure
+    /// responses are mapped to `Err`. The latency clock starts before
+    /// the (possibly blocking) send into the bounded request channel,
+    /// so backpressured requests report their queueing time.
+    pub fn infer(&self, enc_tokens: Vec<i32>) -> Result<Response> {
+        let resp = self.infer_response(enc_tokens)?;
+        match resp.failure {
+            Some(reason) => Err(anyhow!("request failed: {reason}")),
+            None => Ok(resp),
+        }
+    }
+
+    /// Like `infer`, but returns explicit-failure responses as
+    /// `Ok(Response)` so callers can inspect `Response::failure`.
+    /// Errors only when the server machinery itself is gone (router
+    /// dead before admission, reply channel dropped).
+    pub fn infer_response(&self, enc_tokens: Vec<i32>) -> Result<Response> {
+        if !self.router_up.load(Ordering::Acquire) {
+            bail!("server router is down; request not admitted");
+        }
+        let (tx, rx) = mpsc::channel();
+        self.sender
+            .send(Request::new(enc_tokens, tx))
+            .map_err(|_| anyhow!("server router is down; request not admitted"))?;
+        rx.recv().map_err(|_| {
+            anyhow!("server dropped the reply channel (shutdown() reports the cause)")
+        })
+    }
+
+    /// §L11: roll the fleet onto a new engine version, one replica at a
+    /// time behind the canary health gates. Blocks until the rollout
+    /// reaches a terminal [`DeployStatus`] (completed, rolled back,
+    /// failed validation, or aborted by shutdown). Rollouts queue:
+    /// concurrent calls run strictly one at a time.
+    pub fn deploy(&self, engine: EngineSpec) -> DeployStatus {
+        let seq = self.deploy_start(engine);
+        self.deploy_wait(seq)
+    }
+
+    /// §L11: enqueue a rollout without blocking; returns a ticket for
+    /// `deploy_wait`. Lets a caller overlap a rollout with its own
+    /// work (or shut the server down mid-rollout — the ticket then
+    /// resolves to `Aborted`).
+    pub fn deploy_start(&self, engine: EngineSpec) -> u64 {
+        self.deploy_ctl.submit(engine)
+    }
+
+    /// §L11: block until the rollout behind `seq` reaches a terminal
+    /// [`DeployStatus`].
+    pub fn deploy_wait(&self, seq: u64) -> DeployStatus {
+        self.deploy_ctl.wait(seq, &self.router_up)
+    }
+
+    /// §L11: `deploy` for a compiled artifact by suite name — the
+    /// `Server::deploy(artifact_dir)` entry point (artifact names
+    /// resolve to directories via the suite registry, and
+    /// `Artifact::load` verifies the version fingerprint + checksums
+    /// before the fleet ever sees the new weights).
+    pub fn deploy_artifact(&self, name: &str) -> DeployStatus {
+        self.deploy(EngineSpec::Artifact { name: name.to_string() })
+    }
+
+    /// §L11: live rollout status snapshot (`Idle` before any deploy).
+    pub fn deploy_status(&self) -> DeployStatus {
+        self.deploy_ctl.status()
+    }
+
+    /// Drain and shut down: stop admissions, flush partial groups, let
+    /// replicas retire their in-flight slots naturally, join every
+    /// thread, and return the merged stats. Every admitted request gets
+    /// a terminal response before this returns. An in-flight rollout is
+    /// aborted cleanly (reported as `Aborted` to its waiter and in the
+    /// stats' deploy section).
+    pub fn shutdown(self) -> Result<ServerStats> {
+        let ServerHandle { sender, router, router_up: _, deploy_ctl: _ } = self;
+        let router = router.expect("router handle");
+        drop(sender); // stop admissions; the router begins its drain
+        match router.join() {
+            Ok(result) => result,
+            Err(_) => Err(anyhow!("router thread panicked")),
+        }
+    }
+}
+
+/// (batch_size, enc_len) of the serving geometry. For artifacts this
+/// runs the full `Artifact::load` (including §L11 checksum
+/// verification), so the §L11 prep thread reuses it as the new
+/// version's load-time validation.
+pub(crate) fn engine_dims(spec: &EngineSpec) -> Result<(usize, usize)> {
+    match spec {
+        EngineSpec::Artifact { name } => {
+            let artifact = load_named(name)?;
+            Ok((artifact.config.batch_size, artifact.config.enc_len))
+        }
+        EngineSpec::Sim(s) => Ok((s.batch_size, s.enc_len)),
+    }
+}
+
+
+/// Pack request token rows into a fixed (batch_size, len) geometry:
+/// short rows are zero-padded, long rows are cut to fit. `len` is the
+/// full `enc_len` or any smaller bucket the group was routed to.
+/// Returns the flat batch plus a per-row truncation flag.
+pub fn pack_requests(
+    rows: &[&[i32]],
+    batch_size: usize,
+    len: usize,
+) -> (Vec<i32>, Vec<bool>) {
+    let mut enc = Vec::new();
+    let mut truncated = Vec::new();
+    pack_requests_into(rows, batch_size, len, &mut enc, &mut truncated);
+    (enc, truncated)
+}
+
+/// `pack_requests` into caller-provided scratch buffers, so the
+/// replica hot loop reuses one allocation across every batch instead
+/// of building a fresh padded matrix per job. The scratch is cleared
+/// and zero-filled to the new geometry on every call — no stale tokens
+/// survive a reuse at a different shape.
+pub fn pack_requests_into(
+    rows: &[&[i32]],
+    batch_size: usize,
+    len: usize,
+    enc: &mut Vec<i32>,
+    truncated: &mut Vec<bool>,
+) {
+    enc.clear();
+    enc.resize(batch_size * len, 0);
+    truncated.clear();
+    truncated.resize(rows.len(), false);
+    for (i, row) in rows.iter().take(batch_size).enumerate() {
+        let n = row.len().min(len);
+        enc[i * len..i * len + n].copy_from_slice(&row[..n]);
+        truncated[i] = row.len() > len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_spec() -> SimSpec {
+        SimSpec {
+            batch_size: 2,
+            enc_len: 32,
+            dec_len: 6,
+            vocab_size: 97,
+            token_ns: 0,
+            dtoken_ns: 0,
+            dstep_ns: 0,
+            split_decode: true,
+            draft: Some(SimDraftSpec { dtoken_ns: 0, dstep_ns: 0, accept_rate: 0.75 }),
+            pool: None,
+            fault: FaultSpec::default(),
+            bad_token_salt: 0,
+            bad_panic: false,
+        }
+    }
+
+    /// §L10: a chaos schedule composes onto a sim spec — first kill on
+    /// the legacy single-kill fields, the rest on `extra_kills`, stuck
+    /// class passed through, pool pressure floored at one slot's pages.
+    #[test]
+    fn chaos_spec_composes_onto_sim_spec() {
+        let mut spec = quiet_spec();
+        spec.pool = Some(SimPoolSpec { page_size: 8, pool_pages: 100, prefix_cache: false });
+        let chaos = ChaosSpec {
+            kills: vec![(1, 5), (2, 9)],
+            stuck_every: 7,
+            stuck_step_ns: 11,
+            pool_reserve: 0.25,
+        };
+        chaos.apply(&mut spec);
+        assert_eq!(spec.fault.kill_replica, Some(1));
+        assert_eq!(spec.fault.kill_after_calls, 5);
+        assert_eq!(spec.fault.extra_kills, vec![(2, 9)]);
+        assert_eq!(spec.fault.stuck_every, 7);
+        assert_eq!(spec.fault.stuck_step_ns, 11);
+        assert_eq!(spec.pool.as_ref().unwrap().pool_pages, 75, "25% withheld");
+        // Extreme pressure still leaves one slot's worth of pages.
+        let mut spec = quiet_spec();
+        spec.pool = Some(SimPoolSpec { page_size: 8, pool_pages: 100, prefix_cache: false });
+        ChaosSpec { pool_reserve: 1.0, ..ChaosSpec::default() }.apply(&mut spec);
+        let floor = pages_for(spec.enc_len + spec.dec_len, 8);
+        assert_eq!(spec.pool.as_ref().unwrap().pool_pages, floor);
+        // An empty schedule is the identity.
+        let mut spec = quiet_spec();
+        ChaosSpec::default().apply(&mut spec);
+        assert_eq!(spec.fault.kill_replica, None);
+        assert!(spec.fault.extra_kills.is_empty());
+    }
+
+    /// §L10 satellite: the respawn backoff doubles per consecutive
+    /// crash with jitter bounded to [0.75, 1.25) of nominal, so delay
+    /// ranges for successive crashes never overlap.
+    #[test]
+    fn respawn_backoff_grows_exponentially_with_bounded_jitter() {
+        let (_job_tx, job_rx) = mpsc::sync_channel::<BatchJob>(1);
+        let (events_tx, _events_rx) = mpsc::channel();
+        let mut sup = Supervisor {
+            specs: BTreeMap::from([(0u32, EngineSpec::Sim(quiet_spec()))]),
+            decided: 0,
+            versions: HashMap::from([(0usize, 0u32)]),
+            opts: ServerOptions { restart_backoff_ms: 40, seed: 7, ..ServerOptions::default() },
+            jobs: Arc::new(Mutex::new(job_rx)),
+            events_tx,
+            handles: Vec::new(),
+            live: 1,
+            restarts_left: 3,
+            next_id: 1,
+            last_error: None,
+            died: None,
+            pending_respawns: Vec::new(),
+            crashes: 0,
+            shared: Arc::new(QosShared::new()),
+        };
+        let mut prev = 0u64;
+        for c in 0..4u32 {
+            sup.crashes = c;
+            let d = sup.backoff_delay().as_millis() as u64;
+            let nominal = 40u64 << c;
+            assert!(
+                d >= nominal - nominal / 4 && d <= nominal + nominal / 2,
+                "crash {c}: delay {d} outside jitter band of nominal {nominal}"
+            );
+            assert!(d > prev, "crash {c}: backoff must grow ({d} <= {prev})");
+            prev = d;
+        }
+        // The exponent saturates instead of overflowing the shift.
+        sup.crashes = u32::MAX;
+        assert!(sup.backoff_delay() <= Duration::from_millis(40 * 64 * 2));
+    }
+
+    #[test]
+    fn pack_requests_pads_and_flags_truncation() {
+        let short = vec![1, 2, 3];
+        let exact = vec![5, 6, 7, 8];
+        let long = vec![9, 10, 11, 12, 13, 14];
+        let rows: Vec<&[i32]> = vec![&short, &exact, &long];
+        let (enc, truncated) = pack_requests(&rows, 4, 4);
+        assert_eq!(enc.len(), 16);
+        assert_eq!(&enc[0..4], &[1, 2, 3, 0], "short row zero-padded");
+        assert_eq!(&enc[4..8], &[5, 6, 7, 8], "exact row untouched");
+        assert_eq!(&enc[8..12], &[9, 10, 11, 12], "long row cut to enc_len");
+        assert_eq!(&enc[12..16], &[0, 0, 0, 0], "unfilled slot stays zero");
+        assert_eq!(truncated, vec![false, false, true]);
+    }
+
+    #[test]
+    fn pack_requests_empty_and_full() {
+        let (enc, truncated) = pack_requests(&[], 2, 3);
+        assert_eq!(enc, vec![0; 6]);
+        assert!(truncated.is_empty());
+        let a = vec![1i32; 3];
+        let b = vec![2i32; 4];
+        let rows: Vec<&[i32]> = vec![&a, &b];
+        let (enc, truncated) = pack_requests(&rows, 2, 3);
+        assert_eq!(&enc[3..6], &[2, 2, 2]);
+        assert_eq!(truncated, vec![false, true]);
+    }
+
+    #[test]
+    fn pack_requests_at_smaller_bucket() {
+        let a = vec![1, 2, 3];
+        let rows: Vec<&[i32]> = vec![&a];
+        let (enc, truncated) = pack_requests(&rows, 2, 8);
+        assert_eq!(enc.len(), 16, "bucket stride, not enc_len stride");
+        assert_eq!(&enc[0..4], &[1, 2, 3, 0]);
+        assert_eq!(truncated, vec![false]);
+    }
+
+    /// Reusing one scratch across geometry changes must behave exactly
+    /// like a fresh allocation: no stale tokens from a previous (and
+    /// larger) batch may leak into the next packing.
+    #[test]
+    fn pack_scratch_reuse_leaves_no_stale_data() {
+        let mut enc = Vec::new();
+        let mut trunc = Vec::new();
+        let big = vec![7i32; 8];
+        let rows: Vec<&[i32]> = vec![&big, &big, &big];
+        pack_requests_into(&rows, 3, 8, &mut enc, &mut trunc);
+        assert_eq!(enc.len(), 24);
+        assert!(enc.iter().all(|&t| t == 7));
+
+        let small = vec![1i32, 2];
+        let rows: Vec<&[i32]> = vec![&small];
+        pack_requests_into(&rows, 2, 4, &mut enc, &mut trunc);
+        let (fresh, fresh_trunc) = pack_requests(&rows, 2, 4);
+        assert_eq!(enc, fresh, "reused scratch == fresh allocation");
+        assert_eq!(trunc, fresh_trunc);
+        assert_eq!(&enc[2..8], &[0, 0, 0, 0, 0, 0], "old 7s cleared");
+        // Growing again after shrinking also matches.
+        let rows: Vec<&[i32]> = vec![&big];
+        pack_requests_into(&rows, 2, 8, &mut enc, &mut trunc);
+        assert_eq!(enc, pack_requests(&rows, 2, 8).0);
+    }
+
+    #[test]
+    fn sim_decode_is_bucket_invariant_and_deterministic() {
+        let spec = quiet_spec();
+        let prompt: Vec<i32> = vec![4, 9, 1, 7];
+        let pad_to = |len: usize| {
+            let mut v = prompt.clone();
+            v.resize(len, 0);
+            v
+        };
+        let mut small = pad_to(8);
+        small.extend(pad_to(8));
+        let mut full = pad_to(32);
+        full.extend(pad_to(32));
+        let a = sim_decode(&spec, &small, 8);
+        let b = sim_decode(&spec, &full, 32);
+        assert_eq!(a, b, "output depends only on the unpadded prompt");
+        assert!(!a[0].is_empty() && a[0].len() <= spec.dec_len);
+        assert_eq!(*a[0].last().unwrap(), EOS, "rows end at their sampled EOS");
+        assert!(a[0][..a[0].len() - 1]
+            .iter()
+            .all(|&t| t >= 2 && (t as usize) < 97), "non-final tokens stay off PAD/EOS");
+        // Different prompts decode differently (not a constant).
+        let mut other = vec![5i32, 5, 5, 0, 0, 0, 0, 0];
+        other.extend(pad_to(8));
+        assert_ne!(sim_decode(&spec, &other, 8)[0], a[0]);
+    }
+
+    /// The slot-based stream must equal the monolithic row token for
+    /// token: prefill one row, step `decode_token` to EOS, compare.
+    #[test]
+    fn sim_slot_stream_matches_monolithic_rows() {
+        let spec = quiet_spec();
+        let mut engine = Engine::Sim(SimEngine::new(spec.clone(), 0));
+        let mut state = engine.init_slots(3).unwrap();
+        let prompt = vec![11i32, 3, 5, 0, 0, 0, 0, 0];
+        engine.prefill(&mut state, &prompt, 8, &[1]).unwrap();
+        let mut live = vec![false, true, false];
+        let mut stream = Vec::new();
+        for _ in 0..spec.dec_len {
+            let toks = engine.decode_token(&mut state, &live).unwrap();
+            stream.push(toks[1]);
+            if toks[1] == EOS {
+                live[1] = false;
+                break;
+            }
+        }
+        let mut batch = prompt.clone();
+        batch.extend(vec![0i32; 8]);
+        let rows = sim_decode(&spec, &batch, 8);
+        assert_eq!(stream, rows[0], "per-token stream == monolithic row");
+        assert_eq!(*stream.last().unwrap(), EOS);
+    }
+
+    /// Stuck-generation injection: a stuck row never emits EOS, runs
+    /// the full dec_len on both decode paths, and produces identical
+    /// tokens on both.
+    #[test]
+    fn sim_stuck_rows_never_emit_eos_on_either_path() {
+        let mut spec = quiet_spec();
+        spec.fault.stuck_every = 1; // every prompt is stuck
+        let prompt = vec![11i32, 3, 5, 0, 0, 0, 0, 0];
+        let mut batch = prompt.clone();
+        batch.extend(vec![0i32; 8]);
+        let rows = sim_decode(&spec, &batch, 8);
+        assert_eq!(rows[0].len(), spec.dec_len, "stuck row runs the full dec_len");
+        assert!(!rows[0].contains(&EOS), "stuck row never emits EOS");
+
+        let mut engine = Engine::Sim(SimEngine::new(spec.clone(), 0));
+        let mut state = engine.init_slots(2).unwrap();
+        engine.prefill(&mut state, &prompt, 8, &[0]).unwrap();
+        let live = vec![true, false];
+        let mut stream = Vec::new();
+        for _ in 0..spec.dec_len {
+            stream.push(engine.decode_token(&mut state, &live).unwrap()[0]);
+        }
+        assert_eq!(stream, rows[0], "slot stream == monolithic stuck row");
+    }
+
+    /// §L8 core invariant at the round level: driving the sim engine
+    /// through `SpecDecoder` rounds yields exactly the plain
+    /// `decode_token` stream, at every acceptance rate — reject-all,
+    /// mixed, and accept-all.
+    #[test]
+    fn sim_spec_rounds_match_plain_stream() {
+        let prompt = vec![11i32, 3, 5, 0, 0, 0, 0, 0];
+        let plain = {
+            let spec = quiet_spec();
+            let mut engine = Engine::Sim(SimEngine::new(spec.clone(), 0));
+            let mut state = engine.init_slots(2).unwrap();
+            engine.prefill(&mut state, &prompt, 8, &[0]).unwrap();
+            let live = vec![true, false];
+            let mut stream = Vec::new();
+            for _ in 0..spec.dec_len {
+                let t = engine.decode_token(&mut state, &live).unwrap()[0];
+                stream.push(t);
+                if t == EOS {
+                    break;
+                }
+            }
+            stream
+        };
+        assert_eq!(*plain.last().unwrap(), EOS);
+
+        for rate in [0.0, 0.5, 1.0] {
+            let mut spec = quiet_spec();
+            spec.draft.as_mut().unwrap().accept_rate = rate;
+            let dec_len = spec.dec_len;
+            let mut engine = Engine::Sim(SimEngine::new(spec, 0));
+            let mut state = engine.init_slots(2).unwrap();
+            engine.prefill(&mut state, &prompt, 8, &[0]).unwrap();
+            let mut sd = SpecDecoder::new(3);
+            let mut meter = SpecMeter::default();
+            let live = vec![true, false];
+            let mut stream = Vec::new();
+            'rounds: for _ in 0..dec_len {
+                let em = sd.round(&mut engine, &mut state, &live, None, &mut meter).unwrap();
+                assert!(em[1].is_empty(), "dead slot must emit nothing");
+                assert!(!em[0].is_empty() && em[0].len() <= 3 + 1);
+                for &t in &em[0] {
+                    stream.push(t);
+                    if t == EOS || stream.len() >= dec_len {
+                        break 'rounds;
+                    }
+                }
+            }
+            assert_eq!(stream, plain, "spec stream != plain stream at rate {rate}");
+            assert!(meter.verify_steps > 0 && meter.draft_steps == 3 * meter.verify_steps);
+            assert_eq!(meter.drafted, 3 * meter.verify_steps);
+            if rate == 0.0 {
+                assert_eq!(meter.accepted, 0, "reject-all accepts nothing");
+            }
+            if rate == 1.0 {
+                assert!(
+                    (meter.acceptance_rate() - 1.0).abs() < 1e-12,
+                    "accept-all accepts everything"
+                );
+            }
+        }
+    }
+
+    /// §L8 acceptance sampling: exact at the extremes, bounded and
+    /// deterministic in between, with a mean near the geometric-run
+    /// expectation.
+    #[test]
+    fn sim_accept_len_sampling() {
+        for pos in 0..20 {
+            assert_eq!(sim_accept_len(0x1234, pos, 4, 1.0), 4, "rate 1.0 accepts all");
+            assert_eq!(sim_accept_len(0x1234, pos, 4, 0.0), 0, "rate 0.0 rejects all");
+        }
+        assert_eq!(sim_accept_len(7, 3, 0, 1.0), 0, "gamma 0 accepts nothing");
+        let mut seen = std::collections::BTreeSet::new();
+        for pos in 0..200 {
+            let a = sim_accept_len(0xABCDE, pos, 4, 0.75);
+            assert!(a <= 4);
+            assert_eq!(a, sim_accept_len(0xABCDE, pos, 4, 0.75), "deterministic");
+            seen.insert(a);
+        }
+        assert!(seen.len() >= 3, "acceptance lengths too concentrated: {seen:?}");
+        // Mean near α(1-α^γ)/(1-α) = 0.75(1-0.75^4)/0.25 ≈ 2.05.
+        let total: usize = (0..2000).map(|p| sim_accept_len(0x5EED, p, 4, 0.75)).sum();
+        let mean = total as f64 / 2000.0;
+        assert!((1.6..=2.5).contains(&mean), "mean accept length {mean}");
+    }
+
+    /// §L9 capability detection: the sim opts in through its pool
+    /// spec, and the flattened page-table operand lays out row-major
+    /// with -1 in unmapped entries.
+    #[test]
+    fn paged_geometry_and_flatten_layout() {
+        let mut spec = quiet_spec();
+        spec.pool = Some(SimPoolSpec { page_size: 4, pool_pages: 12, prefix_cache: true });
+        let engine = Engine::Sim(SimEngine::new(spec, 0));
+        assert_eq!(engine.paged_geometry(), Some((4, 12, true)));
+        let none = Engine::Sim(SimEngine::new(quiet_spec(), 0));
+        assert_eq!(none.paged_geometry(), None, "no pool spec: monolithic fallback");
+
+        let mut pool = PagePool::new(4, 8);
+        let mut t0 = PageTable::new();
+        assert!(t0.ensure(&mut pool, 2));
+        let mut t1 = PageTable::new();
+        assert!(t1.ensure(&mut pool, 1));
+        let flat = flatten_page_tables(&[t0, t1], &[0, 1], 3);
+        assert_eq!(flat, vec![0, 1, -1, 2, -1, -1]);
+        let pool_dim = pool.capacity();
+        assert!(flat.iter().all(|&p| p == -1 || (p as usize) < pool_dim));
+    }
+
+    /// §L9 sim parity at the engine level: the paged prefill (with
+    /// prefix-covered tokens skipped) and paged decode steps emit the
+    /// exact stream of the monolithic path — saved work never changes
+    /// tokens.
+    #[test]
+    fn sim_paged_prefill_stream_matches_monolithic() {
+        let spec = quiet_spec();
+        let prompt = vec![11i32, 3, 5, 0, 0, 0, 0, 0];
+        let run = |paged: bool| {
+            let mut engine = Engine::Sim(SimEngine::new(spec.clone(), 0));
+            let mut state = engine.init_slots(2).unwrap();
+            if paged {
+                // 4 of the 8 prompt tokens covered by prefix hits.
+                engine.prefill_paged(&mut state, &prompt, 8, &[0], &[0, 1, 2], 4).unwrap();
+            } else {
+                engine.prefill(&mut state, &prompt, 8, &[0]).unwrap();
+            }
+            let live = vec![true, false];
+            let mut stream = Vec::new();
+            for _ in 0..spec.dec_len {
+                let t = if paged {
+                    engine.decode_token_paged(&mut state, &live, &[0, 1, 2]).unwrap()[0]
+                } else {
+                    engine.decode_token(&mut state, &live).unwrap()[0]
+                };
+                stream.push(t);
+                if t == EOS {
+                    break;
+                }
+            }
+            stream
+        };
+        assert_eq!(run(true), run(false), "paged stream == monolithic stream");
+    }
+
+    /// §L8 capability detection + the no-draft error paths.
+    #[test]
+    fn engine_spec_support_requires_draft() {
+        let with = Engine::Sim(SimEngine::new(quiet_spec(), 0));
+        assert_eq!(with.effective_spec_gamma(4), 4);
+        assert_eq!(with.effective_spec_gamma(0), 0, "gamma 0 never speculates");
+
+        let mut spec = quiet_spec();
+        spec.draft = None;
+        let mut without = Engine::Sim(SimEngine::new(spec, 0));
+        assert_eq!(without.effective_spec_gamma(4), 0);
+        let mut state = without.init_slots(1).unwrap();
+        assert!(without.draft_tokens(&mut state, &[false], 2).is_err());
+        assert!(without.verify(&mut state, &[Vec::new()], &[false], 2).is_err());
+    }
+
+    /// §L8 γ resolution on the real backend: the requested γ when its
+    /// verify HLO exists, the artifact's compiled `DraftSpec::gamma`
+    /// as the fallback, and 0 (plain decode) without a draft session.
+    #[test]
+    fn real_engine_spec_gamma_resolution() {
+        use crate::runtime::artifact::DraftSpec;
+        use crate::runtime::params::tests::toy_artifact;
+        let client = Client::cpu().unwrap();
+        let mut a = toy_artifact();
+        a.hlo_files.push(("verify@4".into(), std::path::PathBuf::from("/nonexistent")));
+        a.draft = Some(DraftSpec { artifact: "toy-lite".into(), gamma: 4 });
+        let session = Session::open_eval(&client, a, 0).unwrap();
+        let dsession = Session::open_eval(&client, toy_artifact(), 0).unwrap();
+        let engine = Engine::Real { client, session, draft: Some(dsession) };
+        assert_eq!(engine.effective_spec_gamma(4), 4, "exact verify@4 HLO wins");
+        assert_eq!(
+            engine.effective_spec_gamma(2),
+            4,
+            "no verify@2: falls back to the artifact's compiled gamma"
+        );
+        assert_eq!(engine.effective_spec_gamma(0), 0, "speculation stays opt-in");
+        let Engine::Real { client, session, .. } = engine else { unreachable!() };
+        let engine = Engine::Real { client, session, draft: None };
+        assert_eq!(engine.effective_spec_gamma(4), 0, "no draft session: plain decode");
+    }
+
+    /// The deterministic kill fault must fire as a panic on exactly the
+    /// configured engine call, and only on the configured replica id.
+    #[test]
+    fn sim_kill_fault_panics_on_configured_call() {
+        let mut spec = quiet_spec();
+        spec.fault.kill_replica = Some(3);
+        spec.fault.kill_after_calls = 2;
+        let run = |replica: usize| {
+            catch_unwind(AssertUnwindSafe(|| {
+                let mut engine = Engine::Sim(SimEngine::new(spec.clone(), replica));
+                let mut state = engine.init_slots(1).unwrap();
+                let prompt = vec![9i32, 2, 4, 0];
+                engine.prefill(&mut state, &prompt, 4, &[0]).unwrap(); // call 1
+                engine.decode_token(&mut state, &[true]).unwrap(); // call 2
+            }))
+        };
+        assert!(run(0).is_ok(), "non-matching replica id serves cleanly");
+        assert!(run(3).is_err(), "matching replica id panics at call 2");
+    }
+
+    /// The in-flight ledger: admit/take/drain, and drain returns
+    /// exactly what was never taken (the crash-recovery contract).
+    #[test]
+    fn ledger_tracks_in_flight_requests() {
+        let ledger = Ledger::new();
+        let (tx, _rx) = mpsc::channel();
+        let t1 = ledger.admit(8, 0, Request::new(vec![1, 2], tx.clone()));
+        let t2 = ledger.admit(16, 1, Request::new(vec![3], tx.clone()));
+        let t3 = ledger.admit(8, 0, Request::new(vec![4, 5, 6], tx));
+        assert_ne!(t1, t2);
+        let held = ledger.take(t2).expect("present");
+        assert_eq!(held.bucket, 16);
+        assert_eq!(held.attempts, 1);
+        assert_eq!(held.req.enc_tokens, vec![3]);
+        assert!(ledger.take(t2).is_none(), "take is exactly-once");
+        let mut rest = ledger.drain();
+        rest.sort_by_key(|h| h.req.enc_tokens.len());
+        assert_eq!(rest.len(), 2);
+        assert_eq!(rest[0].req.enc_tokens, vec![1, 2]);
+        assert_eq!(rest[1].req.enc_tokens, vec![4, 5, 6]);
+        let _ = t3;
+        assert!(ledger.drain().is_empty(), "drain empties the ledger");
+    }
+
+    /// Explicit failure responses: terminal, empty, reasoned, counted.
+    #[test]
+    fn fail_request_sends_terminal_response_and_counts() {
+        let mut stats = ServerStats::default();
+        let (tx, rx) = mpsc::channel();
+        let req = Request::new(vec![1, 2, 3], tx);
+        fail_request(&mut stats, &req, FailReason::DeadlineExceeded, ROUTER_ID);
+        let resp = rx.recv().expect("terminal response delivered");
+        assert!(resp.is_failure());
+        assert_eq!(resp.failure, Some(FailReason::DeadlineExceeded));
+        assert!(resp.tokens.is_empty());
+        assert_eq!(resp.replica, ROUTER_ID);
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.sheds, 1);
+
+        // Non-deadline failures count in failed but not sheds.
+        let (tx, rx) = mpsc::channel();
+        let req = Request::new(vec![7], tx);
+        fail_request(&mut stats, &req, FailReason::RetriesExhausted, ROUTER_ID);
+        assert_eq!(rx.recv().unwrap().failure, Some(FailReason::RetriesExhausted));
+        assert_eq!(stats.failed, 2);
+        assert_eq!(stats.sheds, 1);
+        // §L10 admission rejections are sheds too, and land on the
+        // per-tenant meter of the request's tenant.
+        let (tx, rx) = mpsc::channel();
+        let req = Request::for_tenant(vec![8], tx, 1, 0);
+        fail_request(&mut stats, &req, FailReason::QueueFull, ROUTER_ID);
+        assert_eq!(rx.recv().unwrap().failure, Some(FailReason::QueueFull));
+        assert_eq!(stats.failed, 3);
+        assert_eq!(stats.sheds, 2);
+        assert_eq!(stats.tenants[1].failed, 1);
+        assert_eq!(stats.tenants[1].sheds, 1);
+        // Every reason renders a non-empty human message.
+        for reason in [
+            FailReason::DeadlineExceeded,
+            FailReason::RetriesExhausted,
+            FailReason::NoReplicas,
+            FailReason::AbortedOnDrain,
+            FailReason::PoolExhausted,
+            FailReason::QueueFull,
+            FailReason::WouldMissDeadline,
+        ] {
+            assert!(!reason.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn request_deadline_expiry() {
+        let (tx, _rx) = mpsc::channel();
+        let now = Instant::now();
+        let req = Request::with_deadline(vec![1], tx.clone(), now + Duration::from_secs(60));
+        assert!(!req.expired(now));
+        assert!(req.expired(now + Duration::from_secs(61)));
+        let no_deadline = Request::new(vec![1], tx);
+        assert!(!no_deadline.expired(now + Duration::from_secs(3600)));
+    }
+
+    #[test]
+    fn sim_gen_lengths_cover_the_range() {
+        // EOS-distributed lengths: over many prompts the sampled
+        // generation lengths must span [1, dec_len], not collapse.
+        let dec_len = 8;
+        let mut seen = std::collections::BTreeSet::new();
+        for p in 0..200u64 {
+            let h = sim_row_hash(&[(p as i32) + 1, 7, 9]);
+            let g = sim_gen_len(h, dec_len);
+            assert!((1..=dec_len).contains(&g));
+            seen.insert(g);
+        }
+        assert!(seen.len() >= dec_len / 2, "lengths too concentrated: {seen:?}");
+    }
+
+    #[test]
+    fn truncate_at_eos_is_inclusive_and_idempotent() {
+        let mut row = vec![5, 9, EOS, 7, 8];
+        truncate_at_eos(&mut row);
+        assert_eq!(row, vec![5, 9, EOS]);
+        truncate_at_eos(&mut row);
+        assert_eq!(row, vec![5, 9, EOS]);
+        let mut none = vec![5, 9, 7];
+        truncate_at_eos(&mut none);
+        assert_eq!(none, vec![5, 9, 7], "no EOS: row untouched");
+    }
+
+    #[test]
+    fn server_stats_merge_waste_and_percentiles() {
+        let mut a = ServerStats {
+            requests: 4,
+            batches: 2,
+            total_fill: 4,
+            replicas: 1,
+            prompt_tokens: 40,
+            executed_tokens: 64,
+            truncated: 1,
+            ..Default::default()
+        };
+        for ms in [1.0, 2.0, 3.0, 4.0] {
+            a.latency.record(ms);
+        }
+        let mut b = ServerStats {
+            requests: 2,
+            batches: 1,
+            total_fill: 2,
+            replicas: 1,
+            prompt_tokens: 10,
+            executed_tokens: 36,
+            truncated: 0,
+            tokens_generated: 30,
+            tokens_saved: 10,
+            decode_steps: 5,
+            prefills: 2,
+            sheds: 1,
+            retries: 2,
+            restarts: 1,
+            failed: 3,
+            drained: 4,
+            ..Default::default()
+        };
+        b.latency.record(10.0);
+        b.latency.record(20.0);
+        b.occupancy.record(4);
+        a.merge(&b);
+        assert_eq!(a.requests, 6);
+        assert_eq!(a.batches, 3);
+        assert_eq!(a.replicas, 2);
+        assert_eq!(a.truncated, 1);
+        assert_eq!(a.tokens_generated, 30);
+        assert_eq!(a.tokens_saved, 10);
+        assert_eq!(a.decode_steps, 5);
+        assert_eq!(a.prefills, 2);
+        assert_eq!(a.sheds, 1);
+        assert_eq!(a.retries, 2);
+        assert_eq!(a.restarts, 1);
+        assert_eq!(a.failed, 3);
+        assert_eq!(a.drained, 4);
+        assert!(a.summary().contains("faults:"), "fault counters surface in the summary");
+        assert!((a.early_exit_ratio() - 0.25).abs() < 1e-12);
+        assert_eq!(a.occupancy.steps(), 1);
+        assert_eq!(a.latency_count(), 6);
+        assert!((a.waste_ratio() - 0.5).abs() < 1e-12, "50/100 executed tokens were padding");
+        // Log-bucketed estimates: within the histogram's ~9% error.
+        let p50 = a.p50_ms();
+        assert!((p50 - 3.0).abs() / 3.0 < 0.10, "p50={p50}");
+        let p100 = a.latency_percentile_ms(100.0);
+        assert!((p100 - 20.0).abs() / 20.0 < 0.10, "p100={p100}");
+        assert_eq!(ServerStats::default().waste_ratio(), 0.0);
+        assert_eq!(ServerStats::default().p99_ms(), 0.0);
+        assert_eq!(ServerStats::default().early_exit_ratio(), 0.0);
+        assert!(
+            !ServerStats::default().summary().contains("faults:"),
+            "fault-free summary stays compact"
+        );
+    }
+
+    #[test]
+    fn note_response_accounting() {
+        let mut s = ServerStats::default();
+        s.note_response(Duration::from_millis(10), 5, 3, 7, true);
+        assert_eq!(s.tokens_generated, 5);
+        assert_eq!(s.tokens_saved, 3);
+        assert_eq!(s.prompt_tokens, 7);
+        assert_eq!(s.truncated, 1);
+        assert_eq!(s.latency_count(), 1);
+        assert_eq!(s.token_latency.count(), 1);
+        let per_tok = s.token_ms();
+        assert!((per_tok - 2.0).abs() / 2.0 < 0.10, "10ms/5tok ~ 2ms: {per_tok}");
+        // Zero generated tokens must not divide by zero.
+        s.note_response(Duration::from_millis(1), 0, 0, 0, false);
+        assert_eq!(s.token_latency.count(), 2);
+    }
+}
+

@@ -1,0 +1,259 @@
+//! Client-facing serving types: `Request`/`Response`, typed failure
+//! reasons, the `ServerOptions` knob set, and the `EngineSpec` a
+//! server (or a §L11 rollout) boots an engine from. Split out of the
+//! old monolithic `coordinator/server.rs` — paths are preserved via
+//! re-exports in `server/mod.rs`.
+
+use super::*;
+
+pub struct Request {
+    pub enc_tokens: Vec<i32>,
+    pub reply: mpsc::Sender<Response>,
+    /// When the request was created (client side), so reported latency
+    /// includes time spent blocked in the bounded request channel and
+    /// queued at the router — not just time after admission.
+    /// `Request::new` stamps it; construct requests through it.
+    pub t0: Instant,
+    /// Optional absolute deadline. Left `None` by `Request::new`, the
+    /// router stamps `t0 + ServerOptions::request_timeout_ms` at
+    /// admission; a request past its deadline is shed with an explicit
+    /// `FailReason::DeadlineExceeded` response instead of occupying a
+    /// batch row or decode slot.
+    pub deadline: Option<Instant>,
+    /// §L10: index into `ServerOptions::tenants` for QoS accounting
+    /// (rate limit, priority queue, SLO). Out-of-range indices clamp to
+    /// the last configured tenant; 0 with no tenants configured.
+    pub tenant: usize,
+    /// §L10: scheduling class, clamped to the tenant's configured
+    /// priority at admission (a request can deprioritize itself, never
+    /// escalate past its tenant's class). Higher drains first.
+    pub priority: u8,
+}
+
+impl Request {
+    pub fn new(enc_tokens: Vec<i32>, reply: mpsc::Sender<Response>) -> Request {
+        Request { enc_tokens, reply, t0: Instant::now(), deadline: None, tenant: 0, priority: 1 }
+    }
+
+    /// A request with an explicit client-chosen deadline (overrides the
+    /// server-wide `request_timeout_ms` default).
+    pub fn with_deadline(
+        enc_tokens: Vec<i32>,
+        reply: mpsc::Sender<Response>,
+        deadline: Instant,
+    ) -> Request {
+        Request { deadline: Some(deadline), ..Request::new(enc_tokens, reply) }
+    }
+
+    /// §L10: a request attributed to a tenant/priority for QoS
+    /// admission (token bucket, weighted queue, SLO stamp).
+    pub fn for_tenant(
+        enc_tokens: Vec<i32>,
+        reply: mpsc::Sender<Response>,
+        tenant: usize,
+        priority: u8,
+    ) -> Request {
+        Request { tenant, priority, ..Request::new(enc_tokens, reply) }
+    }
+
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// Why a request received an explicit terminal failure instead of
+/// decoded tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    /// The request sat past its deadline and was shed before or during
+    /// decode.
+    DeadlineExceeded,
+    /// Every permitted retry landed on a dying replica.
+    RetriesExhausted,
+    /// The server has no live replicas (startup failure or restart
+    /// budget exhausted).
+    NoReplicas,
+    /// A replica failed during drain, after the job queue closed, so
+    /// there was no requeue path left.
+    AbortedOnDrain,
+    /// §L9: the request's KV footprint (prompt bucket + decode room)
+    /// exceeds the replica page pool's total capacity — it could never
+    /// be admitted, even with every page free.
+    PoolExhausted,
+    /// §L10: shed at admission by the QoS layer — the tenant is over
+    /// its token-bucket rate, the admission queue is at capacity (or a
+    /// higher class preempted this request's slot), or the overload
+    /// controller is shedding the lowest class early.
+    QueueFull,
+    /// §L10: shed at admission because the estimated queue wait alone
+    /// already overshoots the request's deadline/SLO — rejected before
+    /// spending a queue slot or prefill on doomed work.
+    WouldMissDeadline,
+}
+
+impl std::fmt::Display for FailReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FailReason::DeadlineExceeded => "deadline exceeded before completion",
+            FailReason::RetriesExhausted => "retry budget exhausted after replica failures",
+            FailReason::NoReplicas => "no live replicas (startup failure or restart budget exhausted)",
+            FailReason::AbortedOnDrain => "replica failed during drain with no requeue path left",
+            FailReason::PoolExhausted => {
+                "request needs more KV pages than the replica pool holds"
+            }
+            FailReason::QueueFull => "admission queue full or tenant over its rate limit",
+            FailReason::WouldMissDeadline => {
+                "estimated queue wait already overshoots the deadline"
+            }
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Decoded tokens, truncated at the first EOS (inclusive) — under
+    /// continuous batching the decode actually stopped there (early
+    /// exit); under batch-level decode the full row ran and the tail
+    /// past EOS is dropped for parity. Empty on explicit failures.
+    pub tokens: Vec<i32>,
+    /// Time from `Request::new` (includes channel/router queueing).
+    pub latency: Duration,
+    pub batch_fill: usize,
+    /// True when the request's prompt exceeded the model's `enc_len`
+    /// and was cut to fit (previously a silent truncation).
+    pub truncated: bool,
+    /// Sequence-length bucket the request actually executed at.
+    pub bucket: usize,
+    /// Which model replica served the request (`ROUTER_ID` for
+    /// router-side failures that never reached a replica).
+    pub replica: usize,
+    /// `Some(reason)` marks an explicit terminal failure (deadline
+    /// shed, retry-budget exhaustion, drain abort, dead server). §L7:
+    /// every admitted request gets a terminal response — this, or
+    /// tokens — never a silently dropped reply channel.
+    pub failure: Option<FailReason>,
+}
+
+impl Response {
+    /// An explicit terminal failure (no tokens).
+    pub fn failed(reason: FailReason, t0: Instant, replica: usize) -> Response {
+        Response {
+            tokens: Vec::new(),
+            latency: t0.elapsed(),
+            batch_fill: 0,
+            truncated: false,
+            bucket: 0,
+            replica,
+            failure: Some(reason),
+        }
+    }
+
+    pub fn is_failure(&self) -> bool {
+        self.failure.is_some()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    pub batch_window: Duration,
+    pub seed: u64,
+    /// Optional checkpoint to load weights from.
+    pub checkpoint: Option<std::path::PathBuf>,
+    /// Number of model threads behind the shared router queue.
+    /// `ALTUP_SERVER_REPLICAS` sets the default (else 1); 0 means 1.
+    pub replicas: usize,
+    /// Shape-bucketed batching (default on; `ALTUP_NO_BUCKETS=1` pads
+    /// every batch to the full `enc_len` — the A/B baseline).
+    pub bucketed: bool,
+    /// Decode slots per replica for continuous batching; 0 = auto (the
+    /// engine's `batch_size`). `ALTUP_SERVER_SLOTS` sets the default.
+    pub slots: usize,
+    /// Iteration-level (continuous) scheduling (default on;
+    /// `ALTUP_NO_CONT_BATCH=1` forces run-to-completion batches — the
+    /// A/B baseline). Replicas also fall back per-engine when the
+    /// artifact ships no split HLO.
+    pub continuous: bool,
+    /// Capacity of the bounded request channel (admission
+    /// backpressure); 0 means 1. Senders block once it fills; that
+    /// blocked time still counts toward reported latency because the
+    /// clock starts at `Request::new`.
+    pub queue_cap: usize,
+    /// Per-request deadline in ms from `Request::new`; requests past it
+    /// are shed with an explicit failure instead of occupying a batch
+    /// row or decode slot. `ALTUP_REQUEST_TIMEOUT_MS` sets the default
+    /// (unset or 0 = no deadline).
+    pub request_timeout_ms: Option<u64>,
+    /// How many times a request may be requeued to another replica
+    /// after a crash before it fails explicitly with
+    /// `FailReason::RetriesExhausted`.
+    pub max_retries: u32,
+    /// How many replacement replicas the supervisor may spawn over the
+    /// server's lifetime after crashes. `ALTUP_REPLICA_RESTARTS` sets
+    /// the default (else 2).
+    pub replica_restarts: usize,
+    /// Speculative-decoding draft length γ (§L8): each continuous
+    /// decode iteration drafts γ tokens per live slot and verifies
+    /// them in one fused full-model step. 0 (the default) disables
+    /// speculation; `ALTUP_SPEC_GAMMA` sets the default. An artifact
+    /// without `verify@<γ>` for this exact γ serves at its compiled
+    /// `DraftSpec::gamma` instead (`Engine::effective_spec_gamma`);
+    /// with no draft model or no runnable verify at all, replicas fall
+    /// back to plain decode.
+    pub spec_gamma: usize,
+    /// §L10 multi-tenant QoS contracts (token-bucket rates, weighted
+    /// priority classes, SLOs). Empty (the default) disables the QoS
+    /// layer entirely — admission is a passthrough and serving behaves
+    /// exactly as pre-L10. `ALTUP_TENANT_SPEC` sets the default
+    /// (`name:priority:weight:rate:burst:slo_ms`, `;`-separated).
+    pub tenants: Vec<TenantSpec>,
+    /// §L10: how many *extra* replicas the overload controller may
+    /// spawn beyond `replicas` under sustained queue pressure (retired
+    /// again when calm). 0 disables autoscaling; `ALTUP_AUTOSCALE`
+    /// sets the default.
+    pub autoscale: usize,
+    /// Base delay in ms for the supervisor's exponential respawn
+    /// backoff after a replica crash (doubles per consecutive crash,
+    /// ±25% deterministic jitter). `ALTUP_RESTART_BACKOFF_MS` sets the
+    /// default (else 25); 0 is clamped to 1.
+    pub restart_backoff_ms: u64,
+    /// §L11 rolling-swap knobs (probation window, probe count, canary
+    /// health gates). `ALTUP_DEPLOY_*` set the defaults.
+    pub deploy: DeployOptions,
+}
+
+impl Default for ServerOptions {
+    // All knob defaults resolve through `util::env` (§L8 satellite:
+    // one typed parse-with-default helper instead of a hand-rolled
+    // chain per knob).
+    fn default() -> Self {
+        ServerOptions {
+            batch_window: Duration::from_millis(5),
+            seed: 0,
+            checkpoint: None,
+            replicas: env::usize_at_least("ALTUP_SERVER_REPLICAS", 1, 1),
+            bucketed: !env::flag("ALTUP_NO_BUCKETS"),
+            slots: env::usize_or("ALTUP_SERVER_SLOTS", 0),
+            continuous: !env::flag("ALTUP_NO_CONT_BATCH"),
+            queue_cap: 1024,
+            request_timeout_ms: env::opt_u64_nonzero("ALTUP_REQUEST_TIMEOUT_MS"),
+            max_retries: 2,
+            replica_restarts: env::usize_or("ALTUP_REPLICA_RESTARTS", 2),
+            spec_gamma: spec::gamma_from_env(),
+            tenants: admission::tenants_from_env(),
+            autoscale: env::usize_or("ALTUP_AUTOSCALE", 0),
+            restart_backoff_ms: env::u64_or("ALTUP_RESTART_BACKOFF_MS", 25),
+            deploy: DeployOptions::default(),
+        }
+    }
+}
+
+/// Which decode backend the replicas run.
+#[derive(Debug, Clone)]
+pub enum EngineSpec {
+    /// A compiled artifact by suite name (requires a real PJRT backend).
+    Artifact { name: String },
+    /// Deterministic backend-free decode with a token-proportional cost
+    /// model — for scheduler tests/benches on machines without the
+    /// xla-rs bindings.
+    Sim(SimSpec),
+}

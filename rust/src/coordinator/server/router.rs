@@ -1,0 +1,628 @@
+//! The router/supervisor side of the serving stack: replica
+//! lifecycle bookkeeping (`Supervisor`), deadline shedding, and the
+//! `route` loop that owns admission, QoS, flushing, supervision, and
+//! drain. Split out of the old monolithic `coordinator/server.rs` —
+//! paths are preserved via re-exports in `server/mod.rs`.
+
+use super::*;
+
+/// The supervisor's replica bookkeeping: what it needs to respawn a
+/// replacement (specs by version, options, the shared job queue, the
+/// event channel) plus the live count and restart budget. `pub(crate)`
+/// so the §L11 rollout driver (coordinator/deploy.rs) can drive
+/// targeted drains and version-pinned spawns through it.
+pub(crate) struct Supervisor {
+    /// Engine spec per artifact version; version 0 is the spec the
+    /// server booted on, each §L11 rollout registers the next.
+    pub(crate) specs: BTreeMap<u32, EngineSpec>,
+    /// §L11: the version every *new* spawn (crash respawn, autoscale,
+    /// rollout replacement) lands on. Starts at 0, flips to the new
+    /// version when a rollout's first canary passes, reverts on
+    /// rollback.
+    pub(crate) decided: u32,
+    /// §L11: which version each live replica id is serving (ids are
+    /// never reused; entries are removed on exit).
+    pub(crate) versions: HashMap<usize, u32>,
+    pub(crate) opts: ServerOptions,
+    pub(crate) jobs: Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    pub(crate) events_tx: mpsc::Sender<ReplicaExit>,
+    pub(crate) handles: Vec<std::thread::JoinHandle<()>>,
+    pub(crate) live: usize,
+    pub(crate) restarts_left: usize,
+    pub(crate) next_id: usize,
+    pub(crate) last_error: Option<String>,
+    /// Set when the fleet died while admissions were still open (last
+    /// crash with the job queue open and no restart budget left) —
+    /// recorded at event-processing time, so `shutdown()` reports it
+    /// deterministically no matter how the client disconnect races
+    /// the exit events.
+    pub(crate) died: Option<String>,
+    /// §L10 satellite: respawns scheduled but not yet due. Replacing
+    /// the old spawn-on-crash with a backoff queue means a poison-pill
+    /// artifact burns the restart budget over seconds, not
+    /// milliseconds — `tick_respawns` drains this from the router
+    /// loop. A non-empty queue counts as "fleet coming back" for the
+    /// died/NoReplicas checks.
+    pub(crate) pending_respawns: Vec<Instant>,
+    /// Crashes that consumed restart budget — the backoff exponent.
+    pub(crate) crashes: u32,
+    /// §L10/§L11: the degradation + rollout levers handed to every
+    /// replica this supervisor spawns (respawns and autoscale replicas
+    /// included).
+    pub(crate) shared: Arc<QosShared>,
+}
+
+impl Supervisor {
+    /// Fold a replica exit into the aggregate: merge its stats, requeue
+    /// or explicitly fail its in-flight requests, and respawn a
+    /// replacement when it crashed and the budget allows. `job_open`
+    /// is whether the job queue can still carry requeued work (false
+    /// once the drain has closed it). `allow_respawn` is false when the
+    /// §L11 rollout driver already owns this exit (it spawned the
+    /// replacement itself — no restart budget is spent and a rollout
+    /// lifecycle exit can never be mistaken for fleet death).
+    pub(crate) fn on_exit(
+        &mut self,
+        ev: ReplicaExit,
+        stats: &mut ServerStats,
+        groups: &mut BTreeMap<usize, Vec<Admitted>>,
+        job_open: bool,
+        allow_respawn: bool,
+    ) {
+        self.live = self.live.saturating_sub(1);
+        self.versions.remove(&ev.id);
+        stats.merge(&ev.stats);
+        let crashed = ev.error.is_some();
+        if let Some(err) = ev.error {
+            self.last_error = Some(format!("replica {}: {}", ev.id, err));
+        }
+        for held in ev.unfinished {
+            let attempts = held.attempts + 1;
+            if !job_open {
+                fail_request(stats, &held.req, FailReason::AbortedOnDrain, ROUTER_ID);
+            } else if attempts > self.opts.max_retries {
+                fail_request(stats, &held.req, FailReason::RetriesExhausted, ROUTER_ID);
+            } else {
+                stats.retries += 1;
+                groups.entry(held.bucket).or_default().push(Admitted {
+                    req: held.req,
+                    admitted: Instant::now(),
+                    attempts,
+                });
+            }
+        }
+        if crashed && allow_respawn && job_open && self.restarts_left > 0 {
+            // §L10 satellite: schedule the replacement behind an
+            // exponential backoff instead of spawning it here — a
+            // persistently-failing artifact must not crash-loop
+            // through its whole restart budget in one supervision
+            // pass.
+            self.restarts_left -= 1;
+            let delay = self.backoff_delay();
+            self.crashes += 1;
+            self.pending_respawns.push(Instant::now() + delay);
+        }
+        if crashed
+            && allow_respawn
+            && job_open
+            && self.live == 0
+            && self.pending_respawns.is_empty()
+            && self.died.is_none()
+        {
+            self.died = Some(
+                self.last_error.clone().unwrap_or_else(|| "replica crash".to_string()),
+            );
+        }
+    }
+
+    /// Exponential backoff with deterministic jitter for the next
+    /// respawn: `restart_backoff_ms * 2^crashes` (exponent capped at
+    /// 6), jittered into [0.75, 1.25) of nominal so a fleet of
+    /// supervisors does not thundering-herd its restarts.
+    pub(crate) fn backoff_delay(&self) -> Duration {
+        let base = self.opts.restart_backoff_ms.max(1);
+        let nominal = base.saturating_mul(1u64 << self.crashes.min(6));
+        let h = sim_mix(self.opts.seed ^ 0x51C0_u64.wrapping_add(self.crashes as u64));
+        let jittered = (nominal - nominal / 4).saturating_add(h % (nominal / 2 + 1));
+        Duration::from_millis(jittered)
+    }
+
+    /// Spawn every scheduled respawn whose backoff has elapsed. With
+    /// the job queue closed (drain) pending respawns are dropped — a
+    /// replacement would only pop `Popped::Gone` and exit.
+    pub(crate) fn tick_respawns(&mut self, stats: &mut ServerStats, job_open: bool) {
+        if !job_open {
+            self.pending_respawns.clear();
+            return;
+        }
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.pending_respawns.len() {
+            if self.pending_respawns[i] <= now {
+                self.pending_respawns.swap_remove(i);
+                stats.restarts += 1;
+                self.spawn_one();
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Spawn one replica with a fresh id (respawn or §L10 autoscale) on
+    /// the rollout-decided version.
+    pub(crate) fn spawn_one(&mut self) {
+        let v = self.decided;
+        self.spawn_version(v);
+    }
+
+    /// §L11: spawn one replica with a fresh id pinned to version `v`
+    /// (canaries, rollback replacements, and — via `spawn_one` — every
+    /// respawn and autoscale spawn). Returns the new replica id.
+    pub(crate) fn spawn_version(&mut self, v: u32) -> usize {
+        let id = self.next_id;
+        self.next_id += 1;
+        let spec = self
+            .specs
+            .get(&v)
+            .or_else(|| self.specs.get(&self.decided))
+            .expect("version spec registered")
+            .clone();
+        self.versions.insert(id, v);
+        self.handles.push(spawn_replica(
+            id,
+            &spec,
+            &self.jobs,
+            &self.opts,
+            &self.events_tx,
+            &self.shared,
+            v,
+        ));
+        self.live += 1;
+        id
+    }
+
+    /// §L11: the next replica a rollout to `version` should drain — the
+    /// lowest-id live replica still on a different version.
+    pub(crate) fn next_swap_target(&self, version: u32) -> Option<usize> {
+        self.versions.iter().filter(|&(_, &v)| v != version).map(|(&id, _)| id).min()
+    }
+
+    /// Whether the fleet can still serve or come back: live replicas
+    /// now, or a respawn already scheduled.
+    pub(crate) fn can_serve(&self) -> bool {
+        self.live > 0 || !self.pending_respawns.is_empty()
+    }
+}
+
+/// Shed every request already past its deadline out of the router's
+/// bucket groups, answering each with an explicit failure.
+pub(crate) fn shed_expired(groups: &mut BTreeMap<usize, Vec<Admitted>>, stats: &mut ServerStats) {
+    let now = Instant::now();
+    for group in groups.values_mut() {
+        group.retain(|a| {
+            if a.req.expired(now) {
+                fail_request(stats, &a.req, FailReason::DeadlineExceeded, ROUTER_ID);
+                false
+            } else {
+                true
+            }
+        });
+    }
+    groups.retain(|_, g| !g.is_empty());
+}
+
+/// Router + supervisor loop (§L5 admission/bucketing + §L7 lifecycle).
+///
+/// Admission: group requests by bucket, ship full groups immediately
+/// and window-expired partial groups best-effort, shedding anything
+/// past its deadline before dispatch. Every send is a `try_send` — a
+/// full queue parks the router briefly instead of blocking it, so
+/// supervision (replica exits, requeues, respawns) is never starved.
+///
+/// Supervision: replica exit events are folded in every pass; crashed
+/// replicas' in-flight requests are requeued (bounded per-request
+/// retries) and replacements respawned within the restart budget. With
+/// no live replicas and no budget left the router answers every
+/// request with an explicit failure until clients hang up, then
+/// reports the crash from `shutdown()`.
+///
+/// Drain: once every client sender is gone, remaining groups flush,
+/// the job queue closes (replicas retire in-flight slots and exit),
+/// exit events are collected, and all threads are joined.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn route(
+    spec: &EngineSpec,
+    rx: mpsc::Receiver<Request>,
+    job_tx: mpsc::SyncSender<BatchJob>,
+    job_rx: Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    events_rx: mpsc::Receiver<ReplicaExit>,
+    events_tx: mpsc::Sender<ReplicaExit>,
+    opts: &ServerOptions,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    shared: Arc<QosShared>,
+    deploy_ctl: Arc<DeployControl>,
+) -> Result<ServerStats> {
+    let mut sup = Supervisor {
+        specs: BTreeMap::from([(0u32, spec.clone())]),
+        decided: 0,
+        versions: (0..handles.len()).map(|i| (i, 0u32)).collect(),
+        opts: opts.clone(),
+        jobs: job_rx,
+        events_tx,
+        live: handles.len(),
+        next_id: handles.len(),
+        restarts_left: opts.replica_restarts,
+        last_error: None,
+        died: None,
+        pending_respawns: Vec::new(),
+        crashes: 0,
+        shared: Arc::clone(&shared),
+        handles,
+    };
+    let mut stats = ServerStats::default();
+    let mut fatal: Option<anyhow::Error> = None;
+
+    let (batch_size, enc_len) = match engine_dims(spec) {
+        Ok(dims) => dims,
+        Err(e) => {
+            // Without the serving geometry nothing can be dispatched:
+            // stop restarts and fail every request until clients hang
+            // up. The replicas hit the same load error and exit on
+            // their own.
+            fatal = Some(e);
+            sup.restarts_left = 0;
+            (1, 1)
+        }
+    };
+    let mut job_tx = if fatal.is_none() { Some(job_tx) } else { None };
+    // §L11 rollout driver: advances the swap state machine from the
+    // supervision pass and intercepts rollout-owned replica exits.
+    let mut rollout = RolloutDriver::new(deploy_ctl, (batch_size, enc_len));
+    let timeout = opts.request_timeout_ms.map(Duration::from_millis);
+    let mut groups: BTreeMap<usize, Vec<Admitted>> = BTreeMap::new();
+    let mut disconnected = false;
+    // §L10 QoS admission layer. With no tenants configured it is a
+    // strict passthrough: `offer` hands every request straight back
+    // and the overload controller never engages.
+    let mut qos = AdmissionController::new(
+        opts.tenants.clone(),
+        opts.queue_cap.max(1),
+        opts.spec_gamma,
+        Instant::now(),
+    );
+    // Autoscale replicas currently up (bounded by `opts.autoscale`).
+    let mut extra_live: usize = 0;
+    let mut qos_actions: Vec<QosAction> = Vec::new();
+
+    loop {
+        // Supervision pass: fold in replica exits (requeue/fail their
+        // in-flight work, respawn within budget once each backoff
+        // elapses). §L11 rollout-owned exits (drain target gone ->
+        // spawn canary; canary gone -> rollback) are intercepted first.
+        while let Ok(ev) = events_rx.try_recv() {
+            let respawn =
+                rollout.observe_exit(ev.id, ev.error.is_some(), &mut sup, &mut stats);
+            sup.on_exit(ev, &mut stats, &mut groups, job_tx.is_some(), respawn);
+        }
+        sup.tick_respawns(&mut stats, job_tx.is_some());
+        // §L11: advance the rollout state machine; a server that is
+        // draining or has lost its fleet aborts instead.
+        if disconnected || job_tx.is_none() {
+            let reason = if disconnected {
+                "server shut down during the rollout"
+            } else {
+                "no serving fleet left for the rollout"
+            };
+            rollout.abort_all(&mut sup, &mut stats, reason);
+        } else {
+            rollout.tick(&mut sup, &mut stats);
+        }
+        if !sup.can_serve() {
+            if fatal.is_none() {
+                if let Some(err) = sup.died.take() {
+                    fatal = Some(anyhow!(
+                        "serving stopped: no live replicas and restart budget exhausted ({err})"
+                    ));
+                }
+            }
+            job_tx = None;
+            for (_, group) in std::mem::take(&mut groups) {
+                for a in group {
+                    fail_request(&mut stats, &a.req, FailReason::NoReplicas, ROUTER_ID);
+                }
+            }
+            // §L10: requests still parked in tenant queues have no
+            // fleet left to wait for either.
+            if qos.queued() > 0 {
+                let mut parked = Vec::new();
+                qos.release(qos.queued(), &mut parked);
+                for req in parked {
+                    fail_request(&mut stats, &req, FailReason::NoReplicas, ROUTER_ID);
+                }
+            }
+            // Strand recovery: jobs already sitting in the queue when
+            // the last replica died have no consumer left — fail them
+            // explicitly instead of leaving their clients blocked.
+            while let Ok(Popped::Job(job)) = pop_job(&sup.jobs, false) {
+                for a in job.requests {
+                    fail_request(&mut stats, &a.req, FailReason::NoReplicas, ROUTER_ID);
+                }
+            }
+            if disconnected {
+                break;
+            }
+        }
+
+        // Deadline pass: shed expired requests before dispatch.
+        shed_expired(&mut groups, &mut stats);
+
+        // §L10 QoS pass: expire parked requests, walk the overload
+        // ladder on sustained pressure, execute its degradation
+        // actions, and release parked work into bucket groups in
+        // weighted-priority order. No-op in passthrough mode.
+        if !qos.passthrough() {
+            let now = Instant::now();
+            let mut expired = Vec::new();
+            qos.take_expired(now, &mut expired);
+            for req in &expired {
+                fail_request(&mut stats, req, FailReason::DeadlineExceeded, ROUTER_ID);
+            }
+            let downstream: usize = groups.values().map(|g| g.len()).sum();
+            qos_actions.clear();
+            qos.tick(now, downstream, sup.live.max(1) * batch_size, &mut qos_actions);
+            for action in qos_actions.drain(..) {
+                match action {
+                    QosAction::GammaCap(cap) => {
+                        shared.gamma_cap.store(cap, Ordering::Relaxed);
+                    }
+                    QosAction::ScaleUp => {
+                        if extra_live < opts.autoscale && job_tx.is_some() {
+                            sup.spawn_one();
+                            extra_live += 1;
+                            stats.scale_ups += 1;
+                        }
+                    }
+                    QosAction::ScaleDown => {
+                        if extra_live > 0 {
+                            if let Some(tx) = &job_tx {
+                                if tx.try_send(scale_down_job()).is_ok() {
+                                    extra_live -= 1;
+                                    stats.scale_downs += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // Release bounded to ~two waves of fleet work: the backlog
+            // beyond that stays in the tenant queues, where priority
+            // and SLO decisions still apply, instead of FIFO-frozen in
+            // bucket groups.
+            if job_tx.is_some() && sup.live > 0 {
+                let room = (sup.live * batch_size * 2).saturating_sub(downstream);
+                if room > 0 {
+                    let mut released = Vec::new();
+                    qos.release(room, &mut released);
+                    let admitted = Instant::now();
+                    for req in released {
+                        let bucket = if opts.bucketed {
+                            bucket_for(req.enc_tokens.len(), enc_len)
+                        } else {
+                            enc_len
+                        };
+                        groups
+                            .entry(bucket)
+                            .or_default()
+                            .push(Admitted { req, admitted, attempts: 0 });
+                    }
+                }
+            }
+        }
+
+        // Flush pass. Every ship is a `try_send` (a blocking send here
+        // could deadlock the supervisor against a dead replica set and
+        // would starve crash handling), but the pre-L7 backpressure
+        // semantics are preserved: full groups ship first — fullest
+        // bucket first, in batch_size chunks — and while a full group
+        // cannot ship, admission pauses (below) so clients stack up in
+        // the bounded request channel exactly as the old blocking send
+        // made them, and due partial groups do not steal the next
+        // freed queue slot.
+        let mut full_unsent = false;
+        let mut due_unsent = false;
+        if let Some(tx) = &job_tx {
+            let now = Instant::now();
+            let mut buckets: Vec<usize> = groups.keys().copied().collect();
+            buckets.sort_by_key(|b| std::cmp::Reverse(groups[b].len()));
+            for bucket in buckets {
+                let Some(group) = groups.get(&bucket) else { continue };
+                if group.len() < batch_size && !disconnected {
+                    continue;
+                }
+                let mut requests = groups.remove(&bucket).expect("group present");
+                while !requests.is_empty() {
+                    let take = requests.len().min(batch_size);
+                    let chunk: Vec<Admitted> = requests.drain(..take).collect();
+                    match tx.try_send(BatchJob { bucket, requests: chunk }) {
+                        Ok(()) => {}
+                        Err(mpsc::TrySendError::Full(job))
+                        | Err(mpsc::TrySendError::Disconnected(job)) => {
+                            // Queue full (park and retry) or every
+                            // replica receiver gone (their exit events
+                            // are already on the way — the supervision
+                            // pass above handles them).
+                            let mut back = job.requests;
+                            back.append(&mut requests);
+                            groups.insert(bucket, back);
+                            full_unsent = true;
+                            break;
+                        }
+                    }
+                }
+                if full_unsent {
+                    break; // queue full: no point probing other groups
+                }
+            }
+            // Window-expired partial groups ship best-effort, and only
+            // when no full group is still waiting for capacity.
+            if !full_unsent {
+                let buckets: Vec<usize> = groups.keys().copied().collect();
+                for bucket in buckets {
+                    let Some(group) = groups.get(&bucket) else { continue };
+                    let due = group
+                        .first()
+                        .is_some_and(|a| now >= a.admitted + opts.batch_window);
+                    if !due {
+                        continue;
+                    }
+                    let requests = groups.remove(&bucket).expect("group present");
+                    match tx.try_send(BatchJob { bucket, requests }) {
+                        Ok(()) => {}
+                        Err(mpsc::TrySendError::Full(job))
+                        | Err(mpsc::TrySendError::Disconnected(job)) => {
+                            groups.insert(bucket, job.requests);
+                            due_unsent = true;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Drain: admissions closed and everything flushed — close the
+        // job queue so replicas retire their slots and exit, then wait
+        // for their exit events.
+        if disconnected {
+            // §L10: every parked request must still reach a terminal
+            // response — release the lot into bucket groups while a
+            // fleet exists, fail it explicitly otherwise.
+            if qos.queued() > 0 {
+                let mut parked = Vec::new();
+                qos.release(qos.queued(), &mut parked);
+                if sup.can_serve() && job_tx.is_some() {
+                    let admitted = Instant::now();
+                    for req in parked {
+                        let bucket = if opts.bucketed {
+                            bucket_for(req.enc_tokens.len(), enc_len)
+                        } else {
+                            enc_len
+                        };
+                        groups
+                            .entry(bucket)
+                            .or_default()
+                            .push(Admitted { req, admitted, attempts: 0 });
+                    }
+                } else {
+                    for req in parked {
+                        fail_request(&mut stats, &req, FailReason::NoReplicas, ROUTER_ID);
+                    }
+                }
+                continue; // flush the freshly-released groups first
+            }
+            if groups.is_empty() {
+                job_tx = None;
+            }
+            if sup.live == 0 && groups.is_empty() {
+                break;
+            }
+            if let Ok(ev) = events_rx.recv_timeout(Duration::from_millis(50)) {
+                let respawn =
+                    rollout.observe_exit(ev.id, ev.error.is_some(), &mut sup, &mut stats);
+                sup.on_exit(ev, &mut stats, &mut groups, job_tx.is_some(), respawn);
+            }
+            continue;
+        }
+
+        // Admit pass: park until the next request or group deadline,
+        // capped at the supervision tick so replica exits are noticed
+        // promptly.
+        let wait = if full_unsent || due_unsent {
+            // Floor the park so a zero batch window cannot busy-spin
+            // while replicas are saturated and the job queue is full.
+            opts.batch_window.max(Duration::from_micros(200))
+        } else if groups.is_empty() {
+            SUPERVISE_TICK
+        } else {
+            let oldest = groups
+                .values()
+                .filter_map(|g| g.first())
+                .map(|a| a.admitted)
+                .min()
+                .expect("non-empty groups");
+            (oldest + opts.batch_window).saturating_duration_since(Instant::now())
+        };
+        let message = if wait.is_zero() {
+            None // a group came due during the flush pass
+        } else if full_unsent {
+            // Admission paused: a full group is waiting for queue
+            // capacity. Park without draining the request channel so
+            // clients feel the backpressure, then retry the flush.
+            std::thread::sleep(wait.min(SUPERVISE_TICK));
+            None
+        } else {
+            match rx.recv_timeout(wait.min(SUPERVISE_TICK)) {
+                Ok(r) => Some(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    None
+                }
+            }
+        };
+        if let Some(mut req) = message {
+            if req.deadline.is_none() {
+                req.deadline = timeout.map(|t| req.t0 + t);
+            }
+            // Admission-time shed comes FIRST: a request already past
+            // its deadline (zero timeout, client clock skew, a long
+            // stall in the bounded request channel) must never enter a
+            // bucket group — and the shed is reported as the
+            // deterministic `DeadlineExceeded` even when the fleet is
+            // simultaneously dead.
+            if req.expired(Instant::now()) {
+                fail_request(&mut stats, &req, FailReason::DeadlineExceeded, ROUTER_ID);
+            } else if !sup.can_serve() || job_tx.is_none() {
+                fail_request(&mut stats, &req, FailReason::NoReplicas, ROUTER_ID);
+            } else {
+                // §L10: the admission controller rules first — rate
+                // limit, early SLO shed, queue cap/preemption. In
+                // passthrough mode (no tenants) it hands the request
+                // straight back and admission is exactly pre-L10.
+                let downstream: usize = groups.values().map(|g| g.len()).sum();
+                match qos.offer(req, Instant::now(), downstream) {
+                    Ok(Some(req)) => {
+                        let bucket = if opts.bucketed {
+                            bucket_for(req.enc_tokens.len(), enc_len)
+                        } else {
+                            enc_len
+                        };
+                        groups
+                            .entry(bucket)
+                            .or_default()
+                            .push(Admitted { req, admitted: Instant::now(), attempts: 0 });
+                    }
+                    Ok(None) => {} // parked in a tenant queue
+                    Err((victim, reason)) => {
+                        fail_request(&mut stats, &victim, reason, ROUTER_ID);
+                    }
+                }
+            }
+        }
+    }
+
+    // Join every replica thread (initial + respawned replacements).
+    for handle in sup.handles.drain(..) {
+        let _ = handle.join();
+    }
+    if fatal.is_none() {
+        if let Some(err) = sup.died.take() {
+            fatal = Some(anyhow!(
+                "serving stopped: no live replicas and restart budget exhausted ({err})"
+            ));
+        }
+    }
+    match fatal {
+        Some(e) => Err(e),
+        None => Ok(stats),
+    }
+}

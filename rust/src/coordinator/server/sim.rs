@@ -1,0 +1,484 @@
+//! The deterministic sim engine: cost-model specs (`SimSpec` and
+//! friends), injectable faults (`FaultSpec`/`ChaosSpec`), §L11 swap
+//! specs, the per-replica `SimEngine`/`SimSlot` state, and the pure
+//! sim hash/cost helpers. Split out of the old monolithic
+//! `coordinator/server.rs` — paths are preserved via re-exports in
+//! `server/mod.rs`.
+
+use super::*;
+
+/// Injectable faults for the sim engine (§L7). Everything is
+/// deterministic — keyed by replica id, engine-call index, or prompt
+/// hash — so supervision, retry, shedding, and drain behavior can be
+/// pinned by tests and A/B-benched without a real backend.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSpec {
+    /// Kill this replica id: its serving thread panics on engine call
+    /// number `kill_after_calls`. Respawned replacements get fresh ids
+    /// and therefore serve cleanly.
+    pub kill_replica: Option<usize>,
+    /// Which engine call (prefill / decode_token / monolithic decode,
+    /// 1-based) triggers `kill_replica`; 0 behaves like 1.
+    pub kill_after_calls: u64,
+    /// §L10: additional deterministic kills beyond the single
+    /// `kill_replica` — `(replica id, engine call)` pairs, so a chaos
+    /// schedule can take down several replicas at different points of
+    /// a trace replay. `ChaosSpec::apply` fills this.
+    pub extra_kills: Vec<(usize, u64)>,
+    /// Probability that any engine call panics, hash-sampled from
+    /// (replica id, call index). 0.0 = never.
+    pub panic_rate: f64,
+    /// Stuck-generation injection: prompts whose hash falls in the
+    /// 1-in-`stuck_every` class never emit EOS (decode runs the full
+    /// `dec_len`) — the workload deadlines exist to shed. 0 = off.
+    pub stuck_every: u64,
+    /// Extra simulated ns per decode step per live stuck row (a stuck
+    /// generation is also a slow one).
+    pub stuck_step_ns: u64,
+}
+
+impl FaultSpec {
+    fn stuck(&self, row_hash: u64) -> bool {
+        self.stuck_every > 0 && row_hash % self.stuck_every == 0
+    }
+}
+
+/// §L10: a composable chaos schedule for trace-driven load tests. A
+/// `ChaosSpec` bundles the failure modes the sim engine already knows
+/// how to inject — deterministic replica kills, stuck generations,
+/// page-pool pressure — into one schedule that `apply` composes onto a
+/// `SimSpec`, so the bench/CI chaos harness describes "kill replica 1
+/// mid-burst while 25% of the pool is withheld" as data, not as
+/// hand-edited spec fields.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosSpec {
+    /// Replica kills as `(replica id, engine call ordinal)` — each
+    /// listed replica panics on its Nth engine call.
+    pub kills: Vec<(usize, u64)>,
+    /// Stuck-generation class (`FaultSpec::stuck_every` semantics);
+    /// 0 leaves the spec's existing setting alone.
+    pub stuck_every: u64,
+    /// Extra ns per decode step per stuck row.
+    pub stuck_step_ns: u64,
+    /// Withhold this fraction of the page pool (simulated external
+    /// memory pressure); pool capacity never drops below one slot's
+    /// worth of pages.
+    pub pool_reserve: f64,
+}
+
+impl ChaosSpec {
+    /// Compose this schedule onto a sim spec: the first kill lands on
+    /// `FaultSpec::kill_replica` (keeping single-kill A/Bs bit-compatible
+    /// with the §L7 degraded bench), the rest on `extra_kills`.
+    pub fn apply(&self, spec: &mut SimSpec) {
+        if let Some(&(replica, after)) = self.kills.first() {
+            spec.fault.kill_replica = Some(replica);
+            spec.fault.kill_after_calls = after;
+        }
+        spec.fault.extra_kills.extend(self.kills.iter().skip(1).copied());
+        if self.stuck_every > 0 {
+            spec.fault.stuck_every = self.stuck_every;
+            spec.fault.stuck_step_ns = self.stuck_step_ns;
+        }
+        if self.pool_reserve > 0.0 {
+            if let Some(pool) = spec.pool.as_mut() {
+                let keep = (pool.pool_pages as f64 * (1.0 - self.pool_reserve.clamp(0.0, 1.0)))
+                    .floor() as usize;
+                let floor = pages_for(spec.enc_len + spec.dec_len, pool.page_size);
+                pool.pool_pages = keep.max(floor);
+            }
+        }
+    }
+}
+
+/// §L11: how a *new* sim version differs from the serving one — the
+/// deploy analogue of `ChaosSpec`. `apply` derives the successor
+/// version's `SimSpec` from the old one, so swap benches describe "the
+/// new checkpoint is 10% cheaper" or "the new checkpoint is broken" as
+/// data. Composes with `ChaosSpec`: chaos targets `fault` fields, a
+/// swap targets costs and the bad-version injections.
+#[derive(Debug, Clone, Default)]
+pub struct SimSwapSpec {
+    /// Per-token / per-step cost multiplier for the new version (a
+    /// re-distilled successor is usually cheaper). 0.0 means 1.0.
+    pub cost_mult: f64,
+    /// Deterministic bad-version injection, exercised by the rollback
+    /// arms.
+    pub bad: BadVersionMode,
+}
+
+/// What a deliberately broken successor version does. Both modes are
+/// deterministic so the rollback benches and parity assertions pin
+/// exact behavior.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum BadVersionMode {
+    /// The new version is healthy.
+    #[default]
+    None,
+    /// Every engine call panics — the canary crashes at its very first
+    /// probe decode (exercises the crash-rollback path).
+    Panic,
+    /// Decode emits wrong-but-well-formed tokens: the per-row hash is
+    /// salted so every non-EOS token differs from the old version while
+    /// stream lengths and costs stay identical (exercises the
+    /// token-parity probe gate).
+    WrongTokens,
+}
+
+/// Salt XORed into the sim row hash by `BadVersionMode::WrongTokens`.
+/// Only token *values* change — `sim_gen_len` and EOS placement key off
+/// the unsalted hash, so a wrong-token version is behaviorally
+/// identical except for what it says.
+const BAD_VERSION_SALT: u64 = 0x0BAD_5EED_0BAD_5EED;
+
+impl SimSwapSpec {
+    /// Derive the new version's spec from the serving one.
+    pub fn apply(&self, old: &SimSpec) -> SimSpec {
+        let mut spec = old.clone();
+        let m = if self.cost_mult > 0.0 { self.cost_mult } else { 1.0 };
+        let scale = |ns: u64| -> u64 { ((ns as f64) * m).round().max(0.0) as u64 };
+        spec.token_ns = scale(spec.token_ns);
+        spec.dtoken_ns = scale(spec.dtoken_ns);
+        spec.dstep_ns = scale(spec.dstep_ns);
+        if let Some(draft) = spec.draft.as_mut() {
+            draft.dtoken_ns = scale(draft.dtoken_ns);
+            draft.dstep_ns = scale(draft.dstep_ns);
+        }
+        match self.bad {
+            BadVersionMode::None => {}
+            BadVersionMode::Panic => spec.bad_panic = true,
+            BadVersionMode::WrongTokens => spec.bad_token_salt = BAD_VERSION_SALT,
+        }
+        spec
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimSpec {
+    pub batch_size: usize,
+    pub enc_len: usize,
+    pub dec_len: usize,
+    pub vocab_size: usize,
+    /// Simulated device nanoseconds per prefill token. A monolithic
+    /// `decode_step` batch prefills the full `batch_size x bucket`
+    /// geometry; a split `prefill` runs varlen-style over only the
+    /// admitted `rows x bucket`. `ALTUP_SIM_TOKEN_NS` sets the default
+    /// (else 20000 — ~20 ms per full (8,128) prefill, in the ballpark
+    /// of a micro-model CPU decode — so service time, not
+    /// router/scheduler overhead, dominates benches even on small
+    /// shared machines).
+    pub token_ns: u64,
+    /// Simulated ns per slot-row per fused decode step (the decoder
+    /// reads one token's worth of weights per live row).
+    /// `ALTUP_SIM_DTOKEN_NS` sets the default (else `token_ns`).
+    pub dtoken_ns: u64,
+    /// Fixed dispatch overhead per prefill/decode-step execute.
+    /// `ALTUP_SIM_DSTEP_NS` sets the default (else 50000).
+    pub dstep_ns: u64,
+    /// Pretend the artifact ships the split prefill/decode_token HLO
+    /// pair. `false` exercises the batch-level fallback path.
+    pub split_decode: bool,
+    /// §L8 draft-model cost/acceptance model. `Some` means the sim
+    /// "artifact" ships a draft (speculation still needs
+    /// `ServerOptions::spec_gamma > 0` to switch on); `None` exercises
+    /// the no-draft fallback path.
+    pub draft: Option<SimDraftSpec>,
+    /// §L9 paged decode-state pool. `Some` means the sim "artifact"
+    /// ships the paged contract and replicas serve the continuous path
+    /// out of a page pool with host-side allocation, prefix caching,
+    /// and pool-aware admission; `None` exercises the monolithic
+    /// fallback. `SimSpec::new` reads it from `ALTUP_POOL_PAGES` &
+    /// friends.
+    pub pool: Option<SimPoolSpec>,
+    /// Injected faults (default: none).
+    pub fault: FaultSpec,
+    /// §L11 bad-version injection: XORed into every row hash at token
+    /// emission, so a "wrong weights" version emits different tokens
+    /// with identical stream lengths and costs. 0 = healthy.
+    /// `SimSwapSpec::apply` sets it; never read from env.
+    pub bad_token_salt: u64,
+    /// §L11 bad-version injection: every engine call panics (a version
+    /// broken badly enough to crash on first execute).
+    pub bad_panic: bool,
+}
+
+/// §L9 sim page-pool geometry: mirrors the real backend's
+/// `paged` meta entry (page size) + `ALTUP_POOL_PAGES` capacity knob.
+/// The pool/table/cache machinery itself is host-side and shared with
+/// the real backend — only the per-token cost model is simulated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimPoolSpec {
+    /// Tokens of KV per page. `ALTUP_PAGE_SIZE` sets the default
+    /// (else 16).
+    pub page_size: usize,
+    /// Physical pages in the replica pool (the §L9 memory budget).
+    pub pool_pages: usize,
+    /// Cross-request prefix caching (default on;
+    /// `ALTUP_PREFIX_CACHE=0` disables — the A/B baseline).
+    pub prefix_cache: bool,
+}
+
+impl SimPoolSpec {
+    /// `Some` iff `ALTUP_POOL_PAGES` is set nonzero — the paged sim
+    /// opt-in, mirroring how a real artifact opts in via its `paged`
+    /// meta entry.
+    pub fn from_env() -> Option<SimPoolSpec> {
+        env::opt_u64_nonzero("ALTUP_POOL_PAGES").map(|pages| SimPoolSpec {
+            page_size: env::usize_at_least("ALTUP_PAGE_SIZE", 1, 16),
+            pool_pages: pages as usize,
+            prefix_cache: env::usize_or("ALTUP_PREFIX_CACHE", 1) > 0,
+        })
+    }
+}
+
+/// Sim cost + acceptance model for the §L8 draft model. Defaults
+/// mirror a recycled AltUp-lite draft (fig5): roughly an eighth of the
+/// full model's per-row decode cost.
+#[derive(Debug, Clone)]
+pub struct SimDraftSpec {
+    /// Simulated ns per slot-row per draft decode step.
+    /// `ALTUP_SIM_DRAFT_TOKEN_NS` sets the default (else `dtoken_ns/8`).
+    pub dtoken_ns: u64,
+    /// Fixed dispatch overhead per draft step (the draft executable is
+    /// smaller, so cheaper to launch too). `ALTUP_SIM_DRAFT_STEP_NS`
+    /// sets the default (else `dstep_ns/4`).
+    pub dstep_ns: u64,
+    /// Probability that any single drafted token matches the full
+    /// model's greedy choice, hash-sampled per (row, position) — the
+    /// accepted prefix is the leading run of matches, so the mean
+    /// accepted length is `α(1-α^γ)/(1-α)`. `ALTUP_SIM_ACCEPT_RATE`
+    /// sets the default (else 0.8 — the per-token match rate of a
+    /// well-matched draft per Leviathan et al., which the fig5
+    /// recycled draft is trained to be). 1.0 = accept-all, 0.0 =
+    /// reject-all (the parity-test extremes).
+    pub accept_rate: f64,
+}
+
+impl SimSpec {
+    pub fn new(batch_size: usize, enc_len: usize, dec_len: usize) -> SimSpec {
+        let token_ns = env::u64_or("ALTUP_SIM_TOKEN_NS", 20000);
+        let dtoken_ns = env::u64_or("ALTUP_SIM_DTOKEN_NS", token_ns);
+        let dstep_ns = env::u64_or("ALTUP_SIM_DSTEP_NS", 50000);
+        SimSpec {
+            batch_size,
+            enc_len,
+            dec_len,
+            vocab_size: 512,
+            token_ns,
+            dtoken_ns,
+            dstep_ns,
+            split_decode: true,
+            draft: Some(SimDraftSpec {
+                dtoken_ns: env::u64_or("ALTUP_SIM_DRAFT_TOKEN_NS", dtoken_ns / 8),
+                dstep_ns: env::u64_or("ALTUP_SIM_DRAFT_STEP_NS", dstep_ns / 4),
+                accept_rate: env::f64_or("ALTUP_SIM_ACCEPT_RATE", 0.8).clamp(0.0, 1.0),
+            }),
+            pool: SimPoolSpec::from_env(),
+            fault: FaultSpec::default(),
+            bad_token_salt: 0,
+            bad_panic: false,
+        }
+    }
+}
+
+/// Sim backend instance: the spec plus per-replica fault bookkeeping
+/// (the engine-call counter drives deterministic kill injection).
+pub(crate) struct SimEngine {
+    pub(crate) spec: SimSpec,
+    pub(crate) replica: usize,
+    pub(crate) calls: u64,
+}
+
+impl SimEngine {
+    pub(crate) fn new(spec: SimSpec, replica: usize) -> SimEngine {
+        SimEngine { spec, replica, calls: 0 }
+    }
+
+    /// Count one engine execute and trigger any injected fault due at
+    /// this call. Panics deliberately — exercising the replica panic
+    /// boundary exactly the way a real backend crash would.
+    pub(crate) fn on_call(&mut self) {
+        self.calls += 1;
+        if self.spec.bad_panic {
+            // §L11 bad-version injection: a version broken badly enough
+            // to crash on its very first execute — the canary dies at
+            // its probe decode, before any live traffic.
+            panic!(
+                "injected sim fault: bad version panics on replica {} call {} \
+                 (expected during §L11 rollback tests/benches)",
+                self.replica, self.calls
+            );
+        }
+        let f = &self.spec.fault;
+        let killed_here = (f.kill_replica == Some(self.replica)
+            && self.calls >= f.kill_after_calls.max(1))
+            || f.extra_kills
+                .iter()
+                .any(|&(r, after)| r == self.replica && self.calls >= after.max(1));
+        if killed_here {
+            panic!(
+                "injected sim fault: replica {} killed at engine call {} \
+                 (expected during fault-injection tests/benches)",
+                self.replica, self.calls
+            );
+        }
+        if f.panic_rate > 0.0 {
+            let h = sim_mix(((self.replica as u64) << 32) ^ self.calls);
+            if (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < f.panic_rate {
+                panic!(
+                    "injected sim fault: hash-sampled panic on replica {} call {} \
+                     (expected during fault-injection tests/benches)",
+                    self.replica, self.calls
+                );
+            }
+        }
+    }
+}
+
+/// One live sim request: prompt hash (the whole decode stream derives
+/// from it), next position, the hash-sampled generation length, and
+/// whether fault injection marked it a stuck (never-EOS) generation.
+#[derive(Clone, Copy)]
+pub(crate) struct SimSlot {
+    pub(crate) h: u64,
+    pub(crate) pos: usize,
+    pub(crate) gen_len: usize,
+    pub(crate) stuck: bool,
+}
+
+impl SimSlot {
+    /// The deterministic "true" (greedy full-model) token at absolute
+    /// decode position `j`: EOS exactly at the sampled generation end
+    /// (stuck rows never reach it), `sim_token` everywhere else. The
+    /// single source of truth shared by plain decode, drafting, and
+    /// verify — which is what makes sim spec decoding exact-by-
+    /// construction, mirroring the real greedy-verify guarantee.
+    /// `salt` is the §L11 bad-version salt (0 = healthy): it perturbs
+    /// token values only — EOS placement keys off the unsalted hash,
+    /// so a wrong-token version stays cost-identical.
+    pub(crate) fn token_at(&self, j: usize, vocab: usize, salt: u64) -> i32 {
+        if !self.stuck && j + 1 == self.gen_len {
+            EOS
+        } else {
+            sim_token(self.h ^ salt, j, vocab)
+        }
+    }
+}
+
+
+/// FNV-1a over a row's non-padding prompt tokens only, so decode
+/// streams are identical no matter which bucket executed the prompt
+/// (the parity contract real bucketed decode must also satisfy).
+pub(crate) fn sim_row_hash(row: &[i32]) -> u64 {
+    let used = row.iter().rposition(|&t| t != 0).map_or(0, |i| i + 1);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in &row[..used] {
+        h = (h ^ t as u32 as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// 64-bit finalizer (murmur3-style) shared by the gen-length sampler
+/// and the hash-sampled panic injector.
+pub(crate) fn sim_mix(mut x: u64) -> u64 {
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^ (x >> 29)
+}
+
+/// Hash-sampled generation length in [1, dec_len] — the "EOS
+/// distribution" of the sim workload. The row's final token is EOS.
+pub(crate) fn sim_gen_len(h: u64, dec_len: usize) -> usize {
+    1 + (sim_mix(h) % dec_len.max(1) as u64) as usize
+}
+
+/// §L8 sim acceptance model: drafted token j (absolute decode position
+/// `pos + j`) matches the full model's greedy choice iff a hash coin
+/// keyed on (row hash, position) lands under `rate`; the accepted
+/// prefix is the leading run of matches, so the mean accepted length
+/// is `rate(1-rate^γ)/(1-rate)`. `rate` 1.0 accepts everything, 0.0
+/// rejects everything (the parity-test extremes). Deterministic in
+/// (h, pos): a retried decode accepts identically, preserving §L7
+/// crash-recovery determinism. Mirrored bit-for-bit by
+/// `python/tools/server_throughput_twin.py`.
+pub(crate) fn sim_accept_len(h: u64, pos: usize, gamma: usize, rate: f64) -> usize {
+    let mut n = 0;
+    while n < gamma {
+        let x = sim_mix(h ^ ((pos + n) as u64).wrapping_mul(0xD1B5_4A32_D192_ED03));
+        if (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64) >= rate {
+            break;
+        }
+        n += 1;
+    }
+    n
+}
+
+/// Deterministic non-EOS token for decode position `j`: in
+/// [2, vocab) — ids 0 (PAD) and 1 (EOS) stay reserved.
+pub(crate) fn sim_token(h: u64, j: usize, vocab: usize) -> i32 {
+    let mut x = h.wrapping_mul(j as u64 + 1).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x ^= x >> 29;
+    2 + (x % (vocab.max(3) as u64 - 2)) as i32
+}
+
+/// Precise simulated-device wait. Kernels round `thread::sleep` up to
+/// their timer quantum (~1 ms on some hosts), which would tax the
+/// continuous path's many sub-ms fused decode steps while leaving the
+/// batch path's few ~20 ms sleeps untouched — so coarse-sleep the bulk
+/// and yield-spin the final stretch.
+pub(crate) fn sim_sleep(ns: u64) {
+    if ns == 0 {
+        return;
+    }
+    let end = Instant::now() + Duration::from_nanos(ns);
+    loop {
+        let now = Instant::now();
+        if now >= end {
+            return;
+        }
+        let rem = end - now;
+        if rem > Duration::from_micros(1500) {
+            std::thread::sleep(rem - Duration::from_micros(1200));
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Deterministic stand-in monolithic decode: each output row derives
+/// from the row's non-padding prompt tokens only and ends at its
+/// hash-sampled EOS — except injected stuck generations, which run the
+/// full `dec_len` without ever emitting EOS. Costs the full geometry —
+/// `batch_size x bucket` prefill plus all `dec_len` decode steps for
+/// every row, early exit or not — which is exactly what the split
+/// path's A/B measures against.
+pub(crate) fn sim_decode(spec: &SimSpec, enc: &[i32], bucket: usize) -> Vec<Vec<i32>> {
+    let mut out = Vec::with_capacity(spec.batch_size);
+    let mut stuck_rows = 0u64;
+    for row in enc.chunks(bucket) {
+        let h = sim_row_hash(row);
+        // §L11: the bad-version salt perturbs token values only —
+        // stuck class, generation length, and EOS placement key off
+        // the unsalted hash, so a wrong-token version is
+        // cost-identical to the healthy one.
+        let th = h ^ spec.bad_token_salt;
+        if spec.fault.stuck(h) {
+            stuck_rows += 1;
+            out.push((0..spec.dec_len).map(|j| sim_token(th, j, spec.vocab_size)).collect());
+            continue;
+        }
+        let gen_len = sim_gen_len(h, spec.dec_len);
+        let mut tokens = Vec::with_capacity(gen_len);
+        for j in 0..gen_len {
+            tokens.push(if j + 1 == gen_len { EOS } else { sim_token(th, j, spec.vocab_size) });
+        }
+        out.push(tokens);
+    }
+    let prefill = spec.token_ns.saturating_mul((spec.batch_size * bucket) as u64);
+    let decode = (spec.dec_len as u64)
+        .saturating_mul(spec.dstep_ns + spec.dtoken_ns.saturating_mul(spec.batch_size as u64));
+    let stuck_tax =
+        stuck_rows.saturating_mul(spec.dec_len as u64).saturating_mul(spec.fault.stuck_step_ns);
+    sim_sleep(prefill + decode + stuck_tax);
+    out
+}

@@ -1,0 +1,1297 @@
+//! The per-replica serving loops: the `Engine` decode backend
+//! (real `Session` or sim), slot state, the batch-level and
+//! continuous-batching disciplines, and paged-pool serving. Split out
+//! of the old monolithic `coordinator/server.rs` — paths are
+//! preserved via re-exports in `server/mod.rs`.
+
+use super::*;
+
+/// The per-replica decode backend (built inside the replica thread:
+/// `Session` is !Send). `pub(crate)` so `coordinator::spec` can drive
+/// the §L8 draft/verify round; not part of the public API.
+pub(crate) enum Engine {
+    Real {
+        client: Client,
+        session: Session,
+        /// §L8 draft-model session, loaded from the artifact's
+        /// meta.json `draft` entry when speculation is requested.
+        draft: Option<Session>,
+    },
+    Sim(SimEngine),
+}
+
+/// Per-replica slot state for the continuous path: device-resident KV
+/// buffers for the real backend, per-slot decode cursors for the sim.
+pub(crate) enum SlotState {
+    Real {
+        /// `Option` so the `DecodeSlots` can be moved through the
+        /// donating `Session::prefill`/`decode_token`/`verify` calls
+        /// and put back.
+        main: Option<DecodeSlots>,
+        /// §L8 draft-model slot state, kept prefix-synced with `main`
+        /// by `draft_accept` after every verify. `None` when the
+        /// engine carries no draft session.
+        draft: Option<DecodeSlots>,
+    },
+    Sim(Vec<Option<SimSlot>>),
+}
+
+/// §L8 γ resolution against a (real-backend) session — the single
+/// predicate shared by the draft loader (`Engine::build`) and the
+/// serve-time activation check (`Engine::effective_spec_gamma`): the
+/// requested γ when the artifact ships `verify@<requested>`, else the
+/// artifact's compiled `DraftSpec::gamma`, else 0 (plain decode).
+pub(crate) fn resolve_spec_gamma(session: &Session, requested: usize) -> usize {
+    if requested == 0 {
+        return 0;
+    }
+    let Some(d) = &session.artifact.draft else { return 0 };
+    if session.has_verify(requested) {
+        requested
+    } else if session.has_verify(d.gamma) {
+        d.gamma
+    } else {
+        0
+    }
+}
+
+
+impl Engine {
+    pub(crate) fn build(replica: usize, spec: &EngineSpec, opts: &ServerOptions) -> Result<Engine> {
+        match spec {
+            EngineSpec::Artifact { name } => {
+                let client = Client::cpu()?;
+                let artifact = load_named(name)?;
+                let mut session = Session::open_eval(&client, artifact, opts.seed)?;
+                if let Some(ckpt) = &opts.checkpoint {
+                    session.store =
+                        crate::runtime::params::ParamStore::load(ckpt, &session.artifact)?;
+                    session.invalidate_state();
+                }
+                session.ensure_decode(&client)?;
+                // §Perf L4: upload the weights once; every batch reuses
+                // the device-resident buffers.
+                session.warm_device_cache(&client)?;
+                // §L8: load the draft session only when speculation
+                // will actually engage (`resolve_spec_gamma` — the
+                // same predicate `effective_spec_gamma` applies at
+                // serve time, so "draft loaded" and "speculation runs"
+                // cannot drift apart) — otherwise the replica serves
+                // plain decode and must not pay draft memory/prefill
+                // for nothing. A named draft that fails to load or
+                // mismatches the serving geometry is a real error.
+                let draft = match &session.artifact.draft {
+                    Some(d) if resolve_spec_gamma(&session, opts.spec_gamma) > 0 => {
+                        let dartifact = load_named(&d.artifact)?;
+                        let (mc, dc) = (&session.artifact.config, &dartifact.config);
+                        if dc.enc_len != mc.enc_len
+                            || dc.dec_len != mc.dec_len
+                            || dc.vocab_size != mc.vocab_size
+                        {
+                            bail!(
+                                "draft artifact {} geometry mismatch: enc_len {} vs {}, \
+                                 dec_len {} vs {}, vocab {} vs {} (the draft must share \
+                                 the main artifact's serving geometry)",
+                                d.artifact,
+                                dc.enc_len,
+                                mc.enc_len,
+                                dc.dec_len,
+                                mc.dec_len,
+                                dc.vocab_size,
+                                mc.vocab_size
+                            );
+                        }
+                        let mut dsession =
+                            Session::open_eval(&client, dartifact, opts.seed)?;
+                        if !dsession.has_split_decode() {
+                            bail!(
+                                "draft artifact {} ships no split-decode HLO pair",
+                                d.artifact
+                            );
+                        }
+                        dsession.warm_device_cache(&client)?;
+                        Some(dsession)
+                    }
+                    _ => None,
+                };
+                Ok(Engine::Real { client, session, draft })
+            }
+            EngineSpec::Sim(s) => Ok(Engine::Sim(SimEngine::new(s.clone(), replica))),
+        }
+    }
+
+    /// (batch_size, enc_len) of the serving geometry.
+    pub(crate) fn dims(&self) -> (usize, usize) {
+        match self {
+            Engine::Real { session, .. } => {
+                (session.artifact.config.batch_size, session.artifact.config.enc_len)
+            }
+            Engine::Sim(e) => (e.spec.batch_size, e.spec.enc_len),
+        }
+    }
+
+    /// Maximum tokens a request may generate.
+    pub(crate) fn dec_len(&self) -> usize {
+        match self {
+            Engine::Real { session, .. } => session.artifact.config.dec_len,
+            Engine::Sim(e) => e.spec.dec_len,
+        }
+    }
+
+    /// Whether this engine can run the split prefill/decode_token
+    /// discipline (the artifact ships the HLO pair — monolithic-slot
+    /// or §L9 paged; the sim can opt out to exercise the fallback).
+    pub(crate) fn supports_continuous(&self) -> bool {
+        match self {
+            Engine::Real { session, .. } => {
+                session.has_split_decode() || session.has_paged_decode()
+            }
+            Engine::Sim(e) => e.spec.split_decode,
+        }
+    }
+
+    /// §L9: the paged serving geometry — `(page_size, pool_pages,
+    /// prefix_cache)` — when this engine carries the paged decode
+    /// contract. `None` means the replica serves monolithic
+    /// `DecodeSlots` (the documented fallback). The real backend reads
+    /// pool capacity from `ALTUP_POOL_PAGES` (default: the monolithic
+    /// batch's worth of pages) and the prefix-cache switch from
+    /// `ALTUP_PREFIX_CACHE`; the sim carries both in its spec.
+    pub(crate) fn paged_geometry(&self) -> Option<(usize, usize, bool)> {
+        match self {
+            Engine::Real { session, .. } => {
+                if !session.has_paged_decode() {
+                    return None;
+                }
+                let page_size = session.page_size()?;
+                let max_pages = session.max_pages().ok()?;
+                let pool_pages = env::opt_u64_nonzero("ALTUP_POOL_PAGES")
+                    .map_or(session.artifact.config.batch_size * max_pages, |v| v as usize);
+                Some((page_size, pool_pages, env::usize_or("ALTUP_PREFIX_CACHE", 1) > 0))
+            }
+            Engine::Sim(e) => {
+                e.spec.pool.as_ref().map(|p| (p.page_size, p.pool_pages, p.prefix_cache))
+            }
+        }
+    }
+
+    /// The sequence length a monolithic job at `bucket` actually
+    /// executes at (the real backend falls back to `enc_len` when the
+    /// artifact has no shape-specialized HLO for the bucket).
+    pub(crate) fn effective_bucket(&self, bucket: usize) -> usize {
+        match self {
+            Engine::Real { session, .. } => session.effective_bucket(bucket),
+            Engine::Sim(e) => bucket.min(e.spec.enc_len),
+        }
+    }
+
+    /// Same, for the split prefill family.
+    pub(crate) fn effective_prefill_bucket(&self, bucket: usize) -> usize {
+        match self {
+            Engine::Real { session, .. } => session.effective_prefill_bucket(bucket),
+            Engine::Sim(e) => bucket.min(e.spec.enc_len),
+        }
+    }
+
+    /// Same, for the §L9 `prefill_paged` family.
+    pub(crate) fn effective_paged_prefill_bucket(&self, bucket: usize) -> usize {
+        match self {
+            Engine::Real { session, .. } => session.effective_paged_prefill_bucket(bucket),
+            Engine::Sim(e) => bucket.min(e.spec.enc_len),
+        }
+    }
+
+    /// Monolithic decode of a (batch_size, bucket) packed batch.
+    pub(crate) fn decode(&mut self, enc: &[i32], bucket: usize) -> Result<Vec<Vec<i32>>> {
+        match self {
+            Engine::Real { client, session, .. } => {
+                session.decode_bucketed(client, enc, bucket)
+            }
+            Engine::Sim(e) => {
+                e.on_call();
+                Ok(sim_decode(&e.spec, enc, bucket))
+            }
+        }
+    }
+
+    /// Allocate the per-replica slot state for `n` concurrent requests
+    /// (plus the mirrored draft-model slot state when speculating).
+    pub(crate) fn init_slots(&mut self, n: usize) -> Result<SlotState> {
+        match self {
+            Engine::Real { client, session, draft } => {
+                let main = Some(session.init_decode_slots(client, n)?);
+                let draft = match draft {
+                    Some(ds) => Some(ds.init_decode_slots(client, n)?),
+                    None => None,
+                };
+                Ok(SlotState::Real { main, draft })
+            }
+            Engine::Sim(_) => Ok(SlotState::Sim(vec![None; n])),
+        }
+    }
+
+    /// §L9: allocate the device-resident page pool (`pool_pages`
+    /// physical pages) for `n` concurrent requests. The draft-model
+    /// slot state stays monolithic — prefix reuse applies to the main
+    /// model's KV, not the draft's.
+    pub(crate) fn init_slots_paged(&mut self, n: usize, pool_pages: usize) -> Result<SlotState> {
+        match self {
+            Engine::Real { client, session, draft } => {
+                let main = Some(session.init_paged_slots(client, pool_pages)?);
+                let draft = match draft {
+                    Some(ds) => Some(ds.init_decode_slots(client, n)?),
+                    None => None,
+                };
+                Ok(SlotState::Real { main, draft })
+            }
+            Engine::Sim(_) => Ok(SlotState::Sim(vec![None; n])),
+        }
+    }
+
+    /// Prefill a same-bucket admission group, `enc` packed row-major at
+    /// (slot_ids.len(), bucket), into slot rows `slot_ids`.
+    pub(crate) fn prefill(
+        &mut self,
+        state: &mut SlotState,
+        enc: &[i32],
+        bucket: usize,
+        slot_ids: &[usize],
+    ) -> Result<()> {
+        match (self, state) {
+            (Engine::Real { client, session, draft }, SlotState::Real { main, draft: dslots }) => {
+                let held = main
+                    .take()
+                    .context("slot state lost after an earlier prefill/decode error")?;
+                let ids: Vec<i32> = slot_ids.iter().map(|&s| s as i32).collect();
+                *main = Some(session.prefill(client, held, enc, bucket, &ids)?);
+                // §L8: the draft model prefills the same prompts into
+                // the same slot rows, so both KV caches start from an
+                // identical prefix.
+                if let Some(ds) = draft {
+                    let dheld = dslots
+                        .take()
+                        .context("draft slot state lost after an earlier error")?;
+                    *dslots = Some(ds.prefill(client, dheld, enc, bucket, &ids)?);
+                }
+                Ok(())
+            }
+            (Engine::Sim(e), SlotState::Sim(slots)) => {
+                e.on_call();
+                let spec = &e.spec;
+                for (row, &sid) in enc.chunks(bucket).zip(slot_ids.iter()) {
+                    let h = sim_row_hash(row);
+                    slots[sid] = Some(SimSlot {
+                        h,
+                        pos: 0,
+                        gen_len: sim_gen_len(h, spec.dec_len),
+                        stuck: spec.fault.stuck(h),
+                    });
+                }
+                // Varlen-style split prefill: dispatch overhead + cost
+                // over the admitted rows only (no dead padding rows).
+                sim_sleep(
+                    spec.dstep_ns
+                        + spec.token_ns.saturating_mul((slot_ids.len() * bucket) as u64),
+                );
+                Ok(())
+            }
+            _ => bail!("engine/slot-state backend mismatch"),
+        }
+    }
+
+    /// §L9 paged prefill: like `prefill`, plus the group's flattened
+    /// (rows, max_pages) page-table operand and the prompt tokens the
+    /// prefix cache already covers. On the real backend shared prefix
+    /// pages may be rewritten by the HLO — with bit-identical KV, since
+    /// a prefix's KV depends only on its tokens — so sharing stays
+    /// sound; the sim charges the compute saving (`saved_tokens` of
+    /// per-token work skipped), which is what the twin and benches
+    /// measure.
+    pub(crate) fn prefill_paged(
+        &mut self,
+        state: &mut SlotState,
+        enc: &[i32],
+        bucket: usize,
+        slot_ids: &[usize],
+        page_table: &[i32],
+        saved_tokens: usize,
+    ) -> Result<()> {
+        match (self, state) {
+            (Engine::Real { client, session, draft }, SlotState::Real { main, draft: dslots }) => {
+                let held = main
+                    .take()
+                    .context("slot state lost after an earlier prefill/decode error")?;
+                let ids: Vec<i32> = slot_ids.iter().map(|&s| s as i32).collect();
+                *main = Some(session.prefill_paged(client, held, enc, bucket, &ids, page_table)?);
+                // §L8: the draft model's KV stays monolithic — same
+                // prompts, same slot rows, no prefix sharing.
+                if let Some(ds) = draft {
+                    let dheld = dslots
+                        .take()
+                        .context("draft slot state lost after an earlier error")?;
+                    *dslots = Some(ds.prefill(client, dheld, enc, bucket, &ids)?);
+                }
+                Ok(())
+            }
+            (Engine::Sim(e), SlotState::Sim(slots)) => {
+                e.on_call();
+                let spec = &e.spec;
+                for (row, &sid) in enc.chunks(bucket).zip(slot_ids.iter()) {
+                    let h = sim_row_hash(row);
+                    slots[sid] = Some(SimSlot {
+                        h,
+                        pos: 0,
+                        gen_len: sim_gen_len(h, spec.dec_len),
+                        stuck: spec.fault.stuck(h),
+                    });
+                }
+                // Prefix hits skip their covered prompt tokens: the
+                // varlen prefill runs `rows*bucket - saved` tokens'
+                // worth of work. Tokens still derive from the full row
+                // hash — output parity with the unpaged path is by
+                // construction.
+                sim_sleep(
+                    spec.dstep_ns
+                        + spec.token_ns.saturating_mul(
+                            (slot_ids.len() * bucket).saturating_sub(saved_tokens) as u64,
+                        ),
+                );
+                Ok(())
+            }
+            _ => bail!("engine/slot-state backend mismatch"),
+        }
+    }
+
+    /// One fused decode iteration over the whole slot geometry:
+    /// advances every slot with `live[s] == true` by one token and
+    /// returns the (slots,) token row (dead rows carry garbage).
+    pub(crate) fn decode_token(&mut self, state: &mut SlotState, live: &[bool]) -> Result<Vec<i32>> {
+        match (self, state) {
+            (Engine::Real { client, session, .. }, SlotState::Real { main, .. }) => {
+                let held = main
+                    .take()
+                    .context("slot state lost after an earlier prefill/decode error")?;
+                let (held, tokens) = session.decode_token(client, held, live)?;
+                *main = Some(held);
+                Ok(tokens)
+            }
+            (Engine::Sim(e), SlotState::Sim(slots)) => {
+                e.on_call();
+                let spec = &e.spec;
+                let mut out = vec![0i32; slots.len()];
+                let mut stuck_live = 0u64;
+                for (s, slot) in slots.iter_mut().enumerate() {
+                    if !live[s] {
+                        continue;
+                    }
+                    let sl = slot.as_mut().context("live mask set on an empty sim slot")?;
+                    out[s] = sl.token_at(sl.pos, spec.vocab_size, spec.bad_token_salt);
+                    sl.pos += 1;
+                    if sl.stuck {
+                        stuck_live += 1;
+                    }
+                }
+                // Fused step over the full static slot geometry; stuck
+                // rows are also slow rows.
+                sim_sleep(
+                    spec.dstep_ns
+                        + spec.dtoken_ns.saturating_mul(slots.len() as u64)
+                        + spec.fault.stuck_step_ns.saturating_mul(stuck_live),
+                );
+                Ok(out)
+            }
+            _ => bail!("engine/slot-state backend mismatch"),
+        }
+    }
+
+    /// §L9 paged decode iteration: `decode_token` with the flattened
+    /// (slots, max_pages) page-table operand. The sim delegates to the
+    /// monolithic step — the slot-to-page mapping is host-side
+    /// bookkeeping there, and decode cost is per live row either way.
+    pub(crate) fn decode_token_paged(
+        &mut self,
+        state: &mut SlotState,
+        live: &[bool],
+        page_table: &[i32],
+    ) -> Result<Vec<i32>> {
+        if let Engine::Real { client, session, .. } = self {
+            let SlotState::Real { main, .. } = state else {
+                bail!("engine/slot-state backend mismatch");
+            };
+            let held = main
+                .take()
+                .context("slot state lost after an earlier prefill/decode error")?;
+            let (held, tokens) = session.decode_token_paged(client, held, live, page_table)?;
+            *main = Some(held);
+            return Ok(tokens);
+        }
+        self.decode_token(state, live)
+    }
+
+    /// §L8: the draft length this engine will actually speculate at
+    /// for a requested `--spec-gamma` (`resolve_spec_gamma` on the
+    /// real backend — requested γ, or the artifact's compiled
+    /// fallback). 0 means speculation is unavailable (no draft
+    /// session, no runnable verify, or not requested) and the replica
+    /// silently runs plain decode — the documented fallback.
+    pub(crate) fn effective_spec_gamma(&self, requested: usize) -> usize {
+        match self {
+            Engine::Real { session, draft, .. } => {
+                if draft.is_none() {
+                    0
+                } else {
+                    resolve_spec_gamma(session, requested)
+                }
+            }
+            Engine::Sim(e) => {
+                // The sim has no compiled-γ constraint: any requested
+                // length runs, given a draft cost model.
+                if requested > 0 && e.spec.draft.is_some() {
+                    requested
+                } else {
+                    0
+                }
+            }
+        }
+    }
+
+    /// §L8: draft `gamma` tokens per live slot — γ cheap draft-model
+    /// decode steps. Returns one row per slot; dead slots get empty
+    /// rows. The draft state runs ahead speculatively; `verify`
+    /// re-syncs it to what the full model accepts.
+    pub(crate) fn draft_tokens(
+        &mut self,
+        state: &mut SlotState,
+        live: &[bool],
+        gamma: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        match (self, state) {
+            (
+                Engine::Real { client, draft: Some(ds), .. },
+                SlotState::Real { draft: dslots, .. },
+            ) => {
+                let mut out: Vec<Vec<i32>> = vec![Vec::new(); live.len()];
+                for _ in 0..gamma {
+                    let held = dslots
+                        .take()
+                        .context("draft slot state lost after an earlier error")?;
+                    let (held, toks) = ds.decode_token(client, held, live)?;
+                    *dslots = Some(held);
+                    for (s, row) in out.iter_mut().enumerate() {
+                        if live[s] {
+                            row.push(toks[s]);
+                        }
+                    }
+                }
+                Ok(out)
+            }
+            (Engine::Sim(e), SlotState::Sim(slots)) => {
+                e.on_call();
+                let Some(d) = e.spec.draft.as_ref() else {
+                    bail!("sim spec ships no draft model");
+                };
+                let mut out: Vec<Vec<i32>> = vec![Vec::new(); slots.len()];
+                for (s, slot) in slots.iter().enumerate() {
+                    if !live[s] {
+                        continue;
+                    }
+                    let sl = slot.as_ref().context("live mask set on an empty sim slot")?;
+                    out[s] = (0..gamma)
+                        .map(|j| sl.token_at(sl.pos + j, e.spec.vocab_size, e.spec.bad_token_salt))
+                        .collect();
+                }
+                // γ draft steps over the static slot geometry, charged
+                // as one wait. The sim drafts the TRUE greedy tokens;
+                // draft fallibility is modeled in `verify`'s acceptance
+                // sampling instead, which mirrors the real guarantee
+                // that accepted tokens are exactly the full model's.
+                sim_sleep((gamma as u64).saturating_mul(
+                    d.dstep_ns + d.dtoken_ns.saturating_mul(slots.len() as u64),
+                ));
+                Ok(out)
+            }
+            (Engine::Real { draft: None, .. }, _) => bail!("engine has no draft session"),
+            _ => bail!("engine/slot-state backend mismatch"),
+        }
+    }
+
+    /// §L8: one fused verify across all live slots — the full model
+    /// scores the drafted tokens in a single step, each live slot
+    /// advances by its accepted prefix + 1 correction token, and (real
+    /// backend) the draft state re-syncs via `draft_accept`. Returns
+    /// per-slot `(accept_len, correction)` rows.
+    pub(crate) fn verify(
+        &mut self,
+        state: &mut SlotState,
+        drafted: &[Vec<i32>],
+        live: &[bool],
+        gamma: usize,
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        match (self, state) {
+            (
+                Engine::Real { client, session, draft: Some(ds) },
+                SlotState::Real { main, draft: dslots },
+            ) => {
+                // Flatten to the (S, γ) geometry the HLO expects; dead
+                // rows pad with zeros (ignored under the live mask).
+                let mut flat = vec![0i32; live.len() * gamma];
+                for (s, row) in drafted.iter().enumerate() {
+                    let n = row.len().min(gamma);
+                    flat[s * gamma..s * gamma + n].copy_from_slice(&row[..n]);
+                }
+                let held = main
+                    .take()
+                    .context("slot state lost after an earlier prefill/decode error")?;
+                let (held, accept, correction) =
+                    session.verify(client, held, &flat, live, gamma)?;
+                *main = Some(held);
+                let dheld = dslots
+                    .take()
+                    .context("draft slot state lost after an earlier error")?;
+                *dslots = Some(ds.spec_accept(client, dheld, &accept, &correction, live)?);
+                Ok((accept, correction))
+            }
+            (Engine::Sim(e), SlotState::Sim(slots)) => {
+                e.on_call();
+                let spec = &e.spec;
+                let Some(d) = spec.draft.as_ref() else {
+                    bail!("sim spec ships no draft model");
+                };
+                let mut accept = vec![0i32; slots.len()];
+                let mut correction = vec![0i32; slots.len()];
+                let mut stuck_live = 0u64;
+                for (s, slot) in slots.iter_mut().enumerate() {
+                    if !live[s] {
+                        continue;
+                    }
+                    let sl = slot.as_mut().context("live mask set on an empty sim slot")?;
+                    let a = sim_accept_len(sl.h, sl.pos, gamma, d.accept_rate);
+                    accept[s] = a as i32;
+                    correction[s] = sl.token_at(sl.pos + a, spec.vocab_size, spec.bad_token_salt);
+                    sl.pos += a + 1;
+                    if sl.stuck {
+                        stuck_live += 1;
+                    }
+                }
+                // One fused full-model step over the static slot
+                // geometry: decode is weight-bound, so scoring γ+1
+                // positions costs ~one `decode_token` step (and stuck
+                // rows stay slow rows).
+                sim_sleep(
+                    spec.dstep_ns
+                        + spec.dtoken_ns.saturating_mul(slots.len() as u64)
+                        + spec.fault.stuck_step_ns.saturating_mul(stuck_live),
+                );
+                Ok((accept, correction))
+            }
+            (Engine::Real { draft: None, .. }, _) => bail!("engine has no draft session"),
+            _ => bail!("engine/slot-state backend mismatch"),
+        }
+    }
+
+    /// §L9 paged verify (§L8 speculation on the paged path): `verify`
+    /// with the flattened page-table operand. The sim delegates to the
+    /// monolithic verify — acceptance sampling and cost are
+    /// page-layout-independent.
+    pub(crate) fn verify_paged(
+        &mut self,
+        state: &mut SlotState,
+        drafted: &[Vec<i32>],
+        live: &[bool],
+        gamma: usize,
+        page_table: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        if let Engine::Real { client, session, draft } = self {
+            let Some(ds) = draft else { bail!("engine has no draft session") };
+            let SlotState::Real { main, draft: dslots } = state else {
+                bail!("engine/slot-state backend mismatch");
+            };
+            let mut flat = vec![0i32; live.len() * gamma];
+            for (s, row) in drafted.iter().enumerate() {
+                let n = row.len().min(gamma);
+                flat[s * gamma..s * gamma + n].copy_from_slice(&row[..n]);
+            }
+            let held = main
+                .take()
+                .context("slot state lost after an earlier prefill/decode error")?;
+            let (held, accept, correction) =
+                session.verify_paged(client, held, &flat, live, gamma, page_table)?;
+            *main = Some(held);
+            let dheld = dslots
+                .take()
+                .context("draft slot state lost after an earlier error")?;
+            *dslots = Some(ds.spec_accept(client, dheld, &accept, &correction, live)?);
+            return Ok((accept, correction));
+        }
+        self.verify(state, drafted, live, gamma)
+    }
+}
+
+/// §L9 host-side paged-serving state: the replica's page pool, one
+/// page table per decode slot, and (when enabled) the cross-request
+/// prefix cache. Backend-agnostic — the sim and real engines share
+/// this allocator; only the device calls differ.
+struct PoolServing {
+    pool: PagePool,
+    tables: Vec<PageTable>,
+    cache: Option<PrefixCache>,
+    /// Page-table width of every paged entry point:
+    /// `ceil((enc_len + dec_len) / page_size)`.
+    max_pages: usize,
+}
+
+/// Flatten per-slot page tables (rows picked by `slot_ids`, in order)
+/// into the row-major (rows, max_pages) i32 operand the paged HLOs
+/// take; unmapped entries are -1.
+pub(crate) fn flatten_page_tables(tables: &[PageTable], slot_ids: &[usize], max_pages: usize) -> Vec<i32> {
+    let mut flat = vec![-1i32; slot_ids.len() * max_pages];
+    for (i, &sid) in slot_ids.iter().enumerate() {
+        for (k, &page) in tables[sid].pages().iter().enumerate().take(max_pages) {
+            flat[i * max_pages + k] = page as i32;
+        }
+    }
+    flat
+}
+
+/// Truncate a decoded row at its first EOS (inclusive), aligning the
+/// monolithic path's output with what the continuous path actually
+/// generated before retiring the slot.
+pub(crate) fn truncate_at_eos(tokens: &mut Vec<i32>) {
+    if let Some(p) = tokens.iter().position(|&t| t == EOS) {
+        tokens.truncate(p + 1);
+    }
+}
+
+/// Replica entry: build the engine, then run whichever decode
+/// discipline it supports (continuous wants the split HLO pair; the
+/// batch-level loop works against every artifact). Runs inside the
+/// panic boundary of `spawn_replica`; in-flight requests live in
+/// `ledger` until terminally answered.
+pub(crate) fn serve_replica(
+    id: usize,
+    spec: &EngineSpec,
+    jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    opts: &ServerOptions,
+    ledger: &Ledger,
+    stats: &mut ServerStats,
+    shared: &Arc<QosShared>,
+) -> Result<()> {
+    let mut engine = Engine::build(id, spec, opts)?;
+    // §L11 canary gate: a rollout canary decodes the pinned probe set
+    // and holds for the router's token-parity verdict before serving
+    // any live traffic. Abandoned at the gate -> clean exit, zero
+    // requests served (a bad version never answers a client).
+    if shared.deploy.canary_id.load(Ordering::Acquire) == id
+        && !deploy::canary_gate(&mut engine, opts, &shared.deploy)?
+    {
+        return Ok(());
+    }
+    if opts.continuous && engine.supports_continuous() {
+        // §L8: speculation is strictly opt-in (spec_gamma > 0) and
+        // runs at the engine's effective draft length (the requested γ
+        // or the artifact's compiled fallback); anything missing falls
+        // back to plain per-token decode.
+        let gamma = engine.effective_spec_gamma(opts.spec_gamma);
+        let spec_dec = (gamma > 0).then(|| SpecDecoder::new(gamma));
+        serve_continuous(id, &mut engine, jobs, opts, ledger, stats, spec_dec, shared)
+    } else {
+        serve_batches(id, &mut engine, jobs, ledger, stats, &opts.tenants, shared)
+    }
+}
+
+/// Non-blocking / blocking pop off the shared job queue.
+pub(crate) enum Popped {
+    Job(BatchJob),
+    Empty,
+    Gone,
+}
+
+pub(crate) fn pop_job(jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>, block: bool) -> Result<Popped> {
+    // Hold the queue lock only for the pop; decode runs unlocked so
+    // other replicas pull the next job meanwhile. (A blocking pop only
+    // happens when this replica is idle.) A poisoned lock is recovered:
+    // replicas panic inside engine calls, never while holding this
+    // guard, and the receiver itself stays sound either way.
+    if block {
+        let queue = match jobs.lock() {
+            Ok(q) => q,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        // Bounded wait, not `recv()`: an idle replica must resurface at
+        // the supervision cadence to notice cross-thread levers (the
+        // §L11 targeted drain), so a timed-out wait is `Empty`, not
+        // `Gone`.
+        match queue.recv_timeout(SUPERVISE_TICK) {
+            Ok(job) => Ok(Popped::Job(job)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(Popped::Empty),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Ok(Popped::Gone),
+        }
+    } else {
+        // try_lock, not lock: an idle replica parks inside `recv`
+        // holding the mutex, and a replica with live slots must keep
+        // decoding rather than stall on that hold until the next job
+        // arrives.
+        let queue = match jobs.try_lock() {
+            Ok(q) => q,
+            Err(std::sync::TryLockError::WouldBlock) => return Ok(Popped::Empty),
+            Err(std::sync::TryLockError::Poisoned(poisoned)) => poisoned.into_inner(),
+        };
+        match queue.try_recv() {
+            Ok(job) => Ok(Popped::Job(job)),
+            Err(mpsc::TryRecvError::Empty) => Ok(Popped::Empty),
+            Err(mpsc::TryRecvError::Disconnected) => Ok(Popped::Gone),
+        }
+    }
+}
+
+/// Run-to-completion batch loop (§Perf L5, and the fallback when the
+/// artifact ships no split HLO): pop bucket-homogeneous jobs, shed
+/// expired requests, admit the rest into the in-flight ledger, pack at
+/// the (effective) bucket geometry into a reused scratch buffer,
+/// decode to full `dec_len`, and move each output row into its reply.
+fn serve_batches(
+    id: usize,
+    engine: &mut Engine,
+    jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    ledger: &Ledger,
+    stats: &mut ServerStats,
+    tenants: &[TenantSpec],
+    shared: &Arc<QosShared>,
+) -> Result<()> {
+    let (batch_size, _enc_len) = engine.dims();
+    // Packing scratch reused across every batch on this hot path: the
+    // fresh-allocation-per-batch version showed up in router/replica
+    // profiles once decode itself got cheap.
+    let mut enc_scratch: Vec<i32> = Vec::new();
+    let mut trunc_scratch: Vec<bool> = Vec::new();
+    loop {
+        // §L11: a targeted rollout drain retires this replica between
+        // batches (run-to-completion means no slots to let retire);
+        // a probation canary publishes its health each pass.
+        if shared.deploy.take_drain(id) {
+            return Ok(());
+        }
+        if shared.deploy.canary_id.load(Ordering::Relaxed) == id {
+            shared.deploy.publish_canary_health(stats);
+        }
+        let job = match pop_job(jobs, true)? {
+            Popped::Job(job) => job,
+            Popped::Empty => continue, // timed pop: re-check the levers
+            Popped::Gone => break,     // router gone and queue drained
+        };
+        if is_scale_down(&job) {
+            return Ok(()); // §L10 autoscale retirement: a clean exit
+        }
+        let bucket = engine.effective_bucket(job.bucket);
+        let routed_bucket = job.bucket;
+        // Admission: ledger entries survive a decode panic so the
+        // supervisor can requeue them; expired requests are shed now
+        // rather than padded into the batch.
+        let now = Instant::now();
+        let mut batch: Vec<(u64, Instant, usize)> = Vec::with_capacity(job.requests.len());
+        for admitted in job.requests {
+            let Admitted { req, attempts, .. } = admitted;
+            if req.expired(now) {
+                fail_request(stats, &req, FailReason::DeadlineExceeded, id);
+                continue;
+            }
+            let t0 = req.t0;
+            let enc_len = req.enc_tokens.len();
+            let ticket = ledger.admit(routed_bucket, attempts, req);
+            batch.push((ticket, t0, enc_len));
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        let fill = batch.len();
+        {
+            let tickets: Vec<u64> = batch.iter().map(|(t, _, _)| *t).collect();
+            ledger.pack_rows(&tickets, batch_size, bucket, &mut enc_scratch, &mut trunc_scratch);
+        }
+        let decoded = engine.decode(&enc_scratch, bucket)?;
+        let mut decoded = decoded.into_iter();
+        for (i, (ticket, t0, enc_len)) in batch.into_iter().enumerate() {
+            let Some(held) = ledger.take(ticket) else { continue };
+            let latency = t0.elapsed();
+            let mut tokens = decoded.next().unwrap_or_default();
+            truncate_at_eos(&mut tokens);
+            stats.note_response(
+                latency,
+                tokens.len(),
+                0, // monolithic decode ran the full dec_len regardless
+                enc_len.min(bucket),
+                trunc_scratch[i],
+            );
+            stats.requests += 1;
+            let slo_ms = tenants.get(held.req.tenant).map_or(0, |t| t.slo_ms);
+            stats
+                .tenant_mut(held.req.tenant)
+                .note_done(latency.as_secs_f64() * 1e3, tokens.len(), slo_ms);
+            stats.deploy.note_done(latency.as_secs_f64() * 1e3, tokens.len());
+            let _ = held.req.reply.send(Response {
+                tokens,
+                latency,
+                batch_fill: fill,
+                truncated: trunc_scratch[i],
+                bucket,
+                replica: id,
+                failure: None,
+            });
+        }
+        stats.batches += 1;
+        stats.total_fill += fill;
+        stats.executed_tokens += batch_size * bucket;
+    }
+    Ok(())
+}
+
+/// A request waiting for a free decode slot (already in the ledger —
+/// which also owns the prompt tokens; see `Ledger::pack_rows`).
+struct Pend {
+    ticket: u64,
+    t0: Instant,
+    deadline: Option<Instant>,
+    enc_len: usize,
+}
+
+/// A request occupying a decode slot (already in the ledger).
+struct Active {
+    ticket: u64,
+    t0: Instant,
+    deadline: Option<Instant>,
+    tokens: Vec<i32>,
+    bucket: usize,
+    fill: usize,
+    truncated: bool,
+    prompt_len: usize,
+}
+
+/// Unpack a router job into the replica's pending queue via the
+/// in-flight ledger, shedding anything already past its deadline.
+fn stash(
+    ledger: &Ledger,
+    pending: &mut VecDeque<(usize, Pend)>,
+    job: BatchJob,
+    stats: &mut ServerStats,
+    id: usize,
+) {
+    let BatchJob { bucket, requests } = job;
+    let now = Instant::now();
+    for admitted in requests {
+        let Admitted { req, attempts, .. } = admitted;
+        if req.expired(now) {
+            fail_request(stats, &req, FailReason::DeadlineExceeded, id);
+            continue;
+        }
+        let t0 = req.t0;
+        let deadline = req.deadline;
+        let enc_len = req.enc_tokens.len();
+        let ticket = ledger.admit(bucket, attempts, req);
+        pending.push_back((bucket, Pend { ticket, t0, deadline, enc_len }));
+    }
+}
+
+/// Slot-based continuous batching (§Perf L6): between fused
+/// `decode_token` iterations the scheduler admits pending requests
+/// into free slots (one batched prefill per same-bucket group),
+/// retires slots the moment they emit EOS or hit `dec_len`, and —
+/// §L7 — sheds expired pending requests and retires expired slots so
+/// one stuck generation cannot hold a slot forever. With a
+/// `SpecDecoder` (§L8) each decode iteration becomes a draft/verify
+/// round delivering 1..=γ+1 tokens per live slot; admission,
+/// deadlines, retirement, and drain are identical.
+#[allow(clippy::too_many_arguments)]
+fn serve_continuous(
+    id: usize,
+    engine: &mut Engine,
+    jobs: &Arc<Mutex<mpsc::Receiver<BatchJob>>>,
+    opts: &ServerOptions,
+    ledger: &Ledger,
+    stats: &mut ServerStats,
+    mut spec_dec: Option<SpecDecoder>,
+    shared: &Arc<QosShared>,
+) -> Result<()> {
+    let (batch_size, enc_len) = engine.dims();
+    let dec_len = engine.dec_len();
+    let slots_n = if opts.slots > 0 { opts.slots } else { batch_size };
+    // §L9: serve out of a page pool when the engine carries the paged
+    // contract; otherwise monolithic per-slot state (the fallback —
+    // token-for-token identical, pinned by tests/server.rs).
+    let mut paged: Option<PoolServing> = engine.paged_geometry().map(
+        |(page_size, pool_pages, prefix_cache)| PoolServing {
+            pool: PagePool::new(page_size, pool_pages),
+            tables: (0..slots_n).map(|_| PageTable::new()).collect(),
+            cache: prefix_cache.then(PrefixCache::new),
+            max_pages: pages_for(enc_len + dec_len, page_size),
+        },
+    );
+    let mut state = match &paged {
+        Some(ps) => {
+            stats.pool.capacity = ps.pool.capacity();
+            engine.init_slots_paged(slots_n, ps.pool.capacity())?
+        }
+        None => engine.init_slots(slots_n)?,
+    };
+    let all_slots: Vec<usize> = (0..slots_n).collect();
+    let mut active: Vec<Option<Active>> = (0..slots_n).map(|_| None).collect();
+    let mut pending: VecDeque<(usize, Pend)> = VecDeque::new();
+    let mut router_gone = false;
+    // §L10 autoscale retirement: once this replica pops the
+    // scale-down sentinel it stops pulling work, finishes what it
+    // holds, and exits cleanly.
+    let mut retiring = false;
+    // §L8 base draft length; the §L10 γ-cap lever can only shrink it.
+    let base_gamma = spec_dec.as_ref().map_or(0, |sd| sd.gamma());
+    let mut enc_scratch: Vec<i32> = Vec::new();
+    let mut trunc_scratch: Vec<bool> = Vec::new();
+    loop {
+        let n_live = active.iter().filter(|s| s.is_some()).count();
+
+        // §L11: a targeted rollout drain retires this replica exactly
+        // like an autoscale retirement — stop pulling work, let the
+        // in-flight slots finish naturally (releasing their §L9 pages),
+        // exit cleanly. A probation canary publishes its live health
+        // each iteration for the router's gates.
+        if !retiring && shared.deploy.take_drain(id) {
+            retiring = true;
+        }
+        if shared.deploy.canary_id.load(Ordering::Relaxed) == id {
+            shared.deploy.publish_canary_health(stats);
+        }
+
+        // Pull new work: block when fully idle (nothing to decode),
+        // poll otherwise so in-flight slots keep stepping.
+        if !router_gone && !retiring {
+            if n_live == 0 && pending.is_empty() {
+                match pop_job(jobs, true)? {
+                    Popped::Job(job) if is_scale_down(&job) => retiring = true,
+                    Popped::Job(job) => stash(ledger, &mut pending, job, stats, id),
+                    Popped::Empty => {} // timed pop: re-check the levers
+                    Popped::Gone => router_gone = true,
+                }
+            }
+            while pending.len() < slots_n && !router_gone && !retiring {
+                match pop_job(jobs, false)? {
+                    Popped::Job(job) if is_scale_down(&job) => retiring = true,
+                    Popped::Job(job) => stash(ledger, &mut pending, job, stats, id),
+                    Popped::Empty => break,
+                    Popped::Gone => router_gone = true,
+                }
+            }
+        }
+
+        // §L10: apply the overload controller's current γ cap before
+        // this iteration's draft/verify round.
+        if let Some(sd) = spec_dec.as_mut() {
+            let eff = base_gamma.min(shared.gamma_cap.load(Ordering::Relaxed)).max(1);
+            if sd.gamma() != eff {
+                sd.set_gamma(eff);
+            }
+        }
+
+        // §L7 deadline pass, run between decode iterations (so a shed
+        // costs at most one fused step of extra latency): drop expired
+        // pending requests and retire expired slots with explicit
+        // failures.
+        let now = Instant::now();
+        pending.retain(|(_, p)| {
+            if p.deadline.is_some_and(|d| now >= d) {
+                if let Some(held) = ledger.take(p.ticket) {
+                    fail_request(stats, &held.req, FailReason::DeadlineExceeded, id);
+                }
+                false
+            } else {
+                true
+            }
+        });
+        for slot in active.iter_mut() {
+            let expired =
+                slot.as_ref().is_some_and(|a| a.deadline.is_some_and(|d| now >= d));
+            if expired {
+                let act = slot.take().expect("expired slot");
+                if let Some(held) = ledger.take(act.ticket) {
+                    fail_request(stats, &held.req, FailReason::DeadlineExceeded, id);
+                }
+            }
+        }
+
+        // §L9: release retired slots' page tables before admission, so
+        // pages freed by EOS/deadline retirement are allocatable this
+        // pass. A released page drops to refcount 1 while the prefix
+        // cache still holds it (evictable, reusable) and to 0 (free)
+        // otherwise.
+        if let Some(ps) = paged.as_mut() {
+            for (s, slot) in active.iter().enumerate() {
+                if slot.is_none() && !ps.tables[s].is_empty() {
+                    ps.tables[s].release(&mut ps.pool)?;
+                }
+            }
+        }
+
+        // Admit pending requests into free slots, one batched prefill
+        // per same-bucket run (bounded by the prefill geometry and —
+        // §L9 — by page-pool capacity).
+        let mut free: VecDeque<usize> = active
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| i)
+            .collect();
+        let mut stalled = false;
+        while !free.is_empty() && !pending.is_empty() && !stalled {
+            let bucket = pending.front().expect("non-empty pending").0;
+            let eff = if paged.is_some() {
+                engine.effective_paged_prefill_bucket(bucket)
+            } else {
+                engine.effective_prefill_bucket(bucket)
+            };
+            let mut group: Vec<Pend> = Vec::new();
+            let mut slot_ids: Vec<usize> = Vec::new();
+            let mut group_saved = 0usize;
+            while group.len() < batch_size.min(free.len() + group.len()) {
+                let (ticket, cand_deadline) = match pending.front() {
+                    Some((b, p)) if *b == bucket => (p.ticket, p.deadline),
+                    _ => break,
+                };
+                // §L10 satellite (pre-expiry audit): a candidate can
+                // expire *during this admission pass* — an earlier
+                // group's prefill slept — so re-check against a fresh
+                // clock before the §L9 pool gate spends prefix-cache
+                // probes or page reservations on doomed work. The
+                // monolithic arm shares the check for parity.
+                if cand_deadline.is_some_and(|d| Instant::now() >= d) {
+                    let (_, p) = pending.pop_front().expect("front present");
+                    if let Some(held) = ledger.take(p.ticket) {
+                        fail_request(stats, &held.req, FailReason::DeadlineExceeded, id);
+                    }
+                    continue;
+                }
+                if let Some(ps) = paged.as_mut() {
+                    // §L9 pool gate: reserve this request's pages —
+                    // shared prefix pages first, fresh pages for the
+                    // uncovered prompt tail + decode room — before
+                    // taking a slot.
+                    let page_size = ps.pool.page_size();
+                    let total = pages_for(eff + dec_len, page_size);
+                    if total > ps.pool.capacity() {
+                        // Can never fit, even with every page free:
+                        // an explicit terminal failure, not an
+                        // eternal stall.
+                        let (_, p) = pending.pop_front().expect("front present");
+                        if let Some(held) = ledger.take(p.ticket) {
+                            fail_request(stats, &held.req, FailReason::PoolExhausted, id);
+                        }
+                        continue;
+                    }
+                    let hashes = match ps.cache.as_ref() {
+                        Some(_) => ledger
+                            .with_prompt(ticket, |toks| {
+                                chunk_hashes(&toks[..toks.len().min(eff)], page_size)
+                            })
+                            .unwrap_or_default(),
+                        None => Vec::new(),
+                    };
+                    let hits = ps.cache.as_ref().map_or(0, |c| c.match_len(&hashes));
+                    let need = total - hits;
+                    if let Some(cache) = ps.cache.as_mut() {
+                        while ps.pool.free_pages() < need && cache.evict_lru(&mut ps.pool)? {
+                            stats.pool.evictions += 1;
+                        }
+                    }
+                    if ps.pool.free_pages() < need {
+                        // Pool pressure with every unpinned cache page
+                        // already evicted: wait for live slots to
+                        // retire. The request stays pending (a stall,
+                        // not a failure) — with zero live slots every
+                        // cached page is evictable, so `total <=
+                        // capacity` always unblocks eventually.
+                        stats.pool.alloc_stalls += 1;
+                        stalled = true;
+                        break;
+                    }
+                    let (_, p) = pending.pop_front().expect("front present");
+                    let sid = free.pop_front().expect("free slot");
+                    let table = &mut ps.tables[sid];
+                    for &h in &hashes[..hits] {
+                        let page = ps
+                            .cache
+                            .as_mut()
+                            .and_then(|c| c.hit(h))
+                            .context("matched prefix chunk vanished")?;
+                        table.push_shared(&mut ps.pool, page)?;
+                    }
+                    if !table.ensure(&mut ps.pool, total) {
+                        bail!("page pool exhausted after its reservation check");
+                    }
+                    if let Some(cache) = ps.cache.as_mut() {
+                        stats.pool.prefix_lookups += hashes.len() as u64;
+                        stats.pool.prefix_hits += hits as u64;
+                        // Publish this prompt's fresh chunks so later
+                        // requests share them.
+                        for k in hits..hashes.len() {
+                            cache.insert(&mut ps.pool, hashes[k], table.pages()[k])?;
+                        }
+                    }
+                    group_saved += hits * page_size;
+                    slot_ids.push(sid);
+                    group.push(p);
+                } else {
+                    let (_, p) = pending.pop_front().expect("front present");
+                    slot_ids.push(free.pop_front().expect("free slot"));
+                    group.push(p);
+                }
+            }
+            if group.is_empty() {
+                break; // no free capacity for this bucket run
+            }
+            {
+                let tickets: Vec<u64> = group.iter().map(|p| p.ticket).collect();
+                ledger.pack_rows(&tickets, group.len(), eff, &mut enc_scratch, &mut trunc_scratch);
+            }
+            match paged.as_ref() {
+                Some(ps) => {
+                    let flat = flatten_page_tables(&ps.tables, &slot_ids, ps.max_pages);
+                    engine.prefill_paged(
+                        &mut state,
+                        &enc_scratch,
+                        eff,
+                        &slot_ids,
+                        &flat,
+                        group_saved,
+                    )?;
+                    stats.executed_tokens += group.len() * eff - group_saved;
+                    stats.pool.prefill_tokens_saved += group_saved as u64;
+                }
+                None => {
+                    engine.prefill(&mut state, &enc_scratch, eff, &slot_ids)?;
+                    stats.executed_tokens += group.len() * eff;
+                }
+            }
+            stats.prefills += 1;
+            stats.batches += 1;
+            stats.total_fill += group.len();
+            for (i, p) in group.into_iter().enumerate() {
+                let prompt_len = p.enc_len.min(eff);
+                active[slot_ids[i]] = Some(Active {
+                    ticket: p.ticket,
+                    t0: p.t0,
+                    deadline: p.deadline,
+                    tokens: Vec::with_capacity(dec_len),
+                    bucket: eff,
+                    fill: slot_ids.len(),
+                    truncated: trunc_scratch[i],
+                    prompt_len,
+                });
+            }
+        }
+
+        let n_live = active.iter().filter(|s| s.is_some()).count();
+        if n_live == 0 {
+            if (router_gone || retiring) && pending.is_empty() {
+                break; // drained (or §L10 autoscale retirement)
+            }
+            continue;
+        }
+
+        // One full-model decode iteration over the whole slot
+        // geometry: a §L8 draft/verify round (1..=γ+1 tokens per live
+        // slot) when speculating, else one fused `decode_token`. On
+        // the §L9 paged path the step takes the flattened
+        // (slots, max_pages) table and the pool meter samples
+        // occupancy once per iteration.
+        let live: Vec<bool> = active.iter().map(|s| s.is_some()).collect();
+        let flat_table = paged.as_ref().map(|ps| {
+            stats.pool.record(ps.pool.used_pages(), n_live);
+            flatten_page_tables(&ps.tables, &all_slots, ps.max_pages)
+        });
+        if let Some(sd) = spec_dec.as_mut() {
+            let emissions =
+                sd.round(engine, &mut state, &live, flat_table.as_deref(), &mut stats.spec)?;
+            stats.decode_steps += 1;
+            stats.occupancy.record(n_live);
+            for (s, slot) in active.iter_mut().enumerate() {
+                let Some(act) = slot.as_mut() else { continue };
+                // Push the round's tokens in stream order, truncating
+                // at EOS / dec_len exactly like plain decode — tokens
+                // the verify accepted past a retirement point are
+                // discarded, never delivered.
+                let mut pushed = 0u64;
+                let mut done = false;
+                for &tok in &emissions[s] {
+                    act.tokens.push(tok);
+                    pushed += 1;
+                    if tok == EOS || act.tokens.len() >= dec_len {
+                        done = true;
+                        break;
+                    }
+                }
+                // The meter's delivered-tokens half is the serving
+                // loop's to report: only it knows the truncation.
+                stats.spec.note_delivered(pushed);
+                if done {
+                    finish_slot(slot, ledger, stats, dec_len, id, router_gone, &opts.tenants);
+                }
+            }
+        } else {
+            let tokens = match flat_table.as_deref() {
+                Some(flat) => engine.decode_token_paged(&mut state, &live, flat)?,
+                None => engine.decode_token(&mut state, &live)?,
+            };
+            stats.decode_steps += 1;
+            stats.occupancy.record(n_live);
+            for (s, slot) in active.iter_mut().enumerate() {
+                let Some(act) = slot.as_mut() else { continue };
+                act.tokens.push(tokens[s]);
+                if tokens[s] == EOS || act.tokens.len() >= dec_len {
+                    finish_slot(slot, ledger, stats, dec_len, id, router_gone, &opts.tenants);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Retire a finished slot: move its request out of the ledger, record
+/// the response bookkeeping, and send the terminal token response.
+/// Shared by the plain and §L8 speculative decode paths — retirement
+/// semantics (early-exit accounting, drain counting, ledger removal)
+/// must not depend on which path generated the tokens.
+#[allow(clippy::too_many_arguments)]
+fn finish_slot(
+    slot: &mut Option<Active>,
+    ledger: &Ledger,
+    stats: &mut ServerStats,
+    dec_len: usize,
+    id: usize,
+    router_gone: bool,
+    tenants: &[TenantSpec],
+) {
+    let Some(act) = slot.take() else { return };
+    let Some(held) = ledger.take(act.ticket) else { return };
+    let latency = act.t0.elapsed();
+    stats.note_response(
+        latency,
+        act.tokens.len(),
+        dec_len - act.tokens.len(), // early-exit savings
+        act.prompt_len,
+        act.truncated,
+    );
+    stats.requests += 1;
+    let slo_ms = tenants.get(held.req.tenant).map_or(0, |t| t.slo_ms);
+    stats
+        .tenant_mut(held.req.tenant)
+        .note_done(latency.as_secs_f64() * 1e3, act.tokens.len(), slo_ms);
+    stats.deploy.note_done(latency.as_secs_f64() * 1e3, act.tokens.len());
+    if router_gone {
+        stats.drained += 1;
+    }
+    let _ = held.req.reply.send(Response {
+        tokens: act.tokens,
+        latency,
+        batch_fill: act.fill,
+        truncated: act.truncated,
+        bucket: act.bucket,
+        replica: id,
+        failure: None,
+    });
+}
