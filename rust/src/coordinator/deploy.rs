@@ -435,7 +435,10 @@ fn prepare_rollout(
     if let EngineSpec::Sim(s) = &mut base_spec {
         s.fault = FaultSpec::default();
     }
-    let mut engine = Engine::build(PROBE_REPLICA_ID, &base_spec, opts)
+    // tp=1: the probe baseline is a whole-model engine — sharding
+    // changes timing, never tokens, so a single replica is the
+    // canonical parity reference for any fleet shape.
+    let mut engine = Engine::build(PROBE_REPLICA_ID, &base_spec, opts, 1)
         .context("old-version baseline engine failed to build")?;
     probe_decode(&mut engine, probes).context("old-version probe baseline failed")
 }
@@ -467,6 +470,11 @@ struct Rollout {
     /// (after the first canary passes).
     promoted: bool,
     phase: Phase,
+    /// §L12: TP shape of the slot currently being swapped, captured
+    /// when the drain target exits (before the supervisor forgets it).
+    /// The canary comes up with the same footprint, and a rollback
+    /// respawn restores it.
+    unit_tp: usize,
     baseline: Option<Vec<Vec<i32>>>,
     /// EWMA of the fleet's old-version p95 (the latency-gate
     /// reference), fed from the router's merged stats each tick.
@@ -634,7 +642,12 @@ impl RolloutDriver {
                 // own gate check.
                 sup.shared.deploy.drain_target.store(usize::MAX, Ordering::Release);
                 sup.shared.deploy.begin_probe(sup.next_id);
-                let canary = sup.spawn_version(r.version);
+                // §L12: the canary inherits the drained unit's TP
+                // shape — `observe_exit` runs before `Supervisor::
+                // on_exit`, so the shape map still has the target.
+                r.unit_tp = sup.shape_of(id);
+                let (version, unit_tp) = (r.version, r.unit_tp);
+                let canary = sup.spawn_shaped(version, unit_tp);
                 r.phase = Phase::Probing { canary };
                 false
             }
@@ -669,7 +682,9 @@ impl RolloutDriver {
             sup.decided = r.old;
             stats.deploy.current = r.old;
         }
-        sup.spawn_version(r.old);
+        // §L12: the rollback replacement restores the swapped slot's
+        // original footprint (captured when its drain target exited).
+        sup.spawn_shaped(r.old, r.unit_tp.max(1));
         stats.deploy.rollbacks += 1;
         self.finish(
             r.seq,
@@ -731,6 +746,7 @@ impl RolloutDriver {
             fleet,
             promoted: false,
             phase: Phase::Preparing { rx },
+            unit_tp: 1,
             baseline: None,
             fleet_p95_ewma: 0.0,
         });

@@ -109,7 +109,8 @@ mod worker;
 
 pub use options::{EngineSpec, FailReason, Request, Response, ServerOptions};
 pub use sim::{
-    BadVersionMode, ChaosSpec, FaultSpec, SimDraftSpec, SimPoolSpec, SimSpec, SimSwapSpec,
+    BadVersionMode, ChaosSpec, CollectiveSpec, FaultSpec, SimDraftSpec, SimPoolSpec, SimSpec,
+    SimSwapSpec,
 };
 pub(crate) use router::{route, Supervisor};
 pub(crate) use sim::{
@@ -245,6 +246,17 @@ pub struct ServerStats {
     /// version rows partition the global counters the same way
     /// `tenants` does.
     pub deploy: DeployMeter,
+    /// §L12: device-incarnations merged in — `tp` per execution-group
+    /// incarnation, 1 per single. `replicas` counts fleet units; this
+    /// counts the devices they occupied (the equal-device-budget
+    /// denominator of the TP-vs-DP A/B).
+    pub devices: usize,
+    /// §L12: all-reduce rounds executed by execution groups (0 for a
+    /// whole-model fleet). Flushed when a serving loop exits cleanly;
+    /// crashed incarnations under-report.
+    pub collectives: u64,
+    /// §L12: simulated ns spent in those collective rounds.
+    pub collective_ns: u64,
 }
 
 impl ServerStats {
@@ -348,6 +360,9 @@ impl ServerStats {
             self.tenant_mut(t).merge(m);
         }
         self.deploy.merge(&other.deploy);
+        self.devices += other.devices;
+        self.collectives += other.collectives;
+        self.collective_ns += other.collective_ns;
     }
 
     /// The meter for tenant `t`, growing the table on first touch so
@@ -583,6 +598,7 @@ fn spawn_replica(
     events: &mpsc::Sender<ReplicaExit>,
     shared: &Arc<QosShared>,
     version: u32,
+    tp: usize,
 ) -> std::thread::JoinHandle<()> {
     let spec = spec.clone();
     let jobs = Arc::clone(jobs);
@@ -598,7 +614,7 @@ fn spawn_replica(
             // accounted to its artifact version.
             stats.deploy.current = version;
             let outcome = catch_unwind(AssertUnwindSafe(|| {
-                serve_replica(id, &spec, &jobs, &opts, &ledger, &mut stats, &shared)
+                serve_replica(id, &spec, &jobs, &opts, &ledger, &mut stats, &shared, tp)
             }));
             let error = match outcome {
                 Ok(Ok(())) => None,
@@ -659,8 +675,12 @@ impl ServerHandle {
         let (events_tx, events_rx) = mpsc::channel::<ReplicaExit>();
         let shared = Arc::new(QosShared::new());
 
+        // §L12: the first `tp_groups` fleet units come up as TP groups
+        // of `opts.tp` shards; the rest are whole-model DP replicas.
         let handles: Vec<_> = (0..n)
-            .map(|i| spawn_replica(i, &engine, &job_rx, &opts, &events_tx, &shared, 0))
+            .map(|i| {
+                spawn_replica(i, &engine, &job_rx, &opts, &events_tx, &shared, 0, opts.unit_tp(i))
+            })
             .collect();
         let router_up = Arc::new(AtomicBool::new(true));
         let deploy_ctl = Arc::new(DeployControl::new());
@@ -836,6 +856,15 @@ mod tests {
             split_decode: true,
             draft: Some(SimDraftSpec { dtoken_ns: 0, dstep_ns: 0, accept_rate: 0.75 }),
             pool: None,
+            collective: CollectiveSpec {
+                d_model: 1024,
+                active_width: 256,
+                elem_bytes: 2,
+                link_bps: 25.0e9,
+                latency_ns: 1500,
+                syncs_per_step: 12,
+                partitioned_frac: 0.85,
+            },
             fault: FaultSpec::default(),
             bad_token_salt: 0,
             bad_panic: false,
@@ -886,6 +915,7 @@ mod tests {
             specs: BTreeMap::from([(0u32, EngineSpec::Sim(quiet_spec()))]),
             decided: 0,
             versions: HashMap::from([(0usize, 0u32)]),
+            shapes: HashMap::new(),
             opts: ServerOptions { restart_backoff_ms: 40, seed: 7, ..ServerOptions::default() },
             jobs: Arc::new(Mutex::new(job_rx)),
             events_tx,

@@ -219,6 +219,18 @@ pub struct ServerOptions {
     /// §L11 rolling-swap knobs (probation window, probe count, canary
     /// health gates). `ALTUP_DEPLOY_*` set the defaults.
     pub deploy: DeployOptions,
+    /// §L12: tensor-parallel group width. 0 or 1 (the default) serves
+    /// every fleet unit as a whole-model single engine; `tp >= 2`
+    /// builds the first `tp_groups` units as `tp`-way `ShardGroup`s
+    /// (one sharded model in lockstep across `tp` devices). A real
+    /// artifact without a matching §L12 sharded contract silently
+    /// degrades that unit to whole-model. `ALTUP_TP` sets the default.
+    pub tp: usize,
+    /// §L12: how many of the `replicas` fleet units are TP groups; the
+    /// rest stay whole-model DP singles, giving a heterogeneous fleet
+    /// behind one router. Clamped to `replicas` at spawn. The default
+    /// (`usize::MAX`, or `ALTUP_TP_GROUPS`) shards every unit.
+    pub tp_groups: usize,
 }
 
 impl Default for ServerOptions {
@@ -243,6 +255,23 @@ impl Default for ServerOptions {
             autoscale: env::usize_or("ALTUP_AUTOSCALE", 0),
             restart_backoff_ms: env::u64_or("ALTUP_RESTART_BACKOFF_MS", 25),
             deploy: DeployOptions::default(),
+            tp: env::usize_or("ALTUP_TP", 0),
+            tp_groups: env::usize_or("ALTUP_TP_GROUPS", usize::MAX),
+        }
+    }
+}
+
+impl ServerOptions {
+    /// §L12: the group width fleet unit `i` of the INITIAL fleet gets —
+    /// the first `tp_groups` units are `tp`-way groups, the rest
+    /// whole-model singles. 1 = unsharded. Respawns/autoscale spawns
+    /// don't call this; the supervisor tracks live unit shapes itself
+    /// (`Supervisor::shapes`).
+    pub fn unit_tp(&self, unit: usize) -> usize {
+        if self.tp >= 2 && unit < self.tp_groups {
+            self.tp
+        } else {
+            1
         }
     }
 }

@@ -23,6 +23,12 @@ pub(crate) struct Supervisor {
     /// §L11: which version each live replica id is serving (ids are
     /// never reused; entries are removed on exit).
     pub(crate) versions: HashMap<usize, u32>,
+    /// §L12: tensor-parallel width of each live fleet unit (1 = plain
+    /// whole-model replica, >=2 = ShardGroup of that many shards).
+    /// Tracked here so respawns, rollout replacements, and device
+    /// accounting preserve the fleet's heterogeneous shape — a crashed
+    /// TP group must come back as a TP group, not a lone replica.
+    pub(crate) shapes: HashMap<usize, usize>,
     pub(crate) opts: ServerOptions,
     pub(crate) jobs: Arc<Mutex<mpsc::Receiver<BatchJob>>>,
     pub(crate) events_tx: mpsc::Sender<ReplicaExit>,
@@ -42,8 +48,9 @@ pub(crate) struct Supervisor {
     /// artifact burns the restart budget over seconds, not
     /// milliseconds — `tick_respawns` drains this from the router
     /// loop. A non-empty queue counts as "fleet coming back" for the
-    /// died/NoReplicas checks.
-    pub(crate) pending_respawns: Vec<Instant>,
+    /// died/NoReplicas checks. §L12: each entry carries the exited
+    /// unit's TP shape so the replacement has the same footprint.
+    pub(crate) pending_respawns: Vec<(Instant, usize)>,
     /// Crashes that consumed restart budget — the backoff exponent.
     pub(crate) crashes: u32,
     /// §L10/§L11: the degradation + rollout levers handed to every
@@ -71,6 +78,9 @@ impl Supervisor {
     ) {
         self.live = self.live.saturating_sub(1);
         self.versions.remove(&ev.id);
+        // §L12: remember the exited unit's shape — a crash respawn
+        // must bring back the same footprint (group stays a group).
+        let shape = self.shapes.remove(&ev.id).unwrap_or(1);
         stats.merge(&ev.stats);
         let crashed = ev.error.is_some();
         if let Some(err) = ev.error {
@@ -100,7 +110,7 @@ impl Supervisor {
             self.restarts_left -= 1;
             let delay = self.backoff_delay();
             self.crashes += 1;
-            self.pending_respawns.push(Instant::now() + delay);
+            self.pending_respawns.push((Instant::now() + delay, shape));
         }
         if crashed
             && allow_respawn
@@ -138,27 +148,46 @@ impl Supervisor {
         let now = Instant::now();
         let mut i = 0;
         while i < self.pending_respawns.len() {
-            if self.pending_respawns[i] <= now {
-                self.pending_respawns.swap_remove(i);
+            if self.pending_respawns[i].0 <= now {
+                let (_, shape) = self.pending_respawns.swap_remove(i);
                 stats.restarts += 1;
-                self.spawn_one();
+                self.spawn_shaped(self.decided, shape);
             } else {
                 i += 1;
             }
         }
     }
 
-    /// Spawn one replica with a fresh id (respawn or §L10 autoscale) on
-    /// the rollout-decided version.
-    pub(crate) fn spawn_one(&mut self) {
-        let v = self.decided;
-        self.spawn_version(v);
+    /// §L12: the shape a *new* fleet unit (autoscale) comes up with.
+    /// Homogeneous TP fleets scale with more groups; mixed fleets add
+    /// cheap whole-model replicas (a group costs `tp` devices).
+    pub(crate) fn default_shape(&self) -> usize {
+        if self.opts.tp >= 2 && self.opts.tp_groups >= self.opts.replicas.max(1) {
+            self.opts.tp
+        } else {
+            1
+        }
     }
 
-    /// §L11: spawn one replica with a fresh id pinned to version `v`
-    /// (canaries, rollback replacements, and — via `spawn_one` — every
-    /// respawn and autoscale spawn). Returns the new replica id.
-    pub(crate) fn spawn_version(&mut self, v: u32) -> usize {
+    /// §L12: tensor-parallel width of a live fleet unit (1 if unknown —
+    /// every non-group spawn path leaves the map untouched).
+    pub(crate) fn shape_of(&self, id: usize) -> usize {
+        self.shapes.get(&id).copied().unwrap_or(1)
+    }
+
+    /// Spawn one fleet unit with a fresh id (respawn or §L10
+    /// autoscale) on the rollout-decided version.
+    pub(crate) fn spawn_one(&mut self) {
+        let v = self.decided;
+        let shape = self.default_shape();
+        self.spawn_shaped(v, shape);
+    }
+
+    /// §L11/§L12: spawn one fleet unit with a fresh id pinned to
+    /// version `v` and TP shape `tp` (canaries and rollback
+    /// replacements inherit the drained unit's shape; respawns carry
+    /// the crashed unit's). Returns the new unit id.
+    pub(crate) fn spawn_shaped(&mut self, v: u32, tp: usize) -> usize {
         let id = self.next_id;
         self.next_id += 1;
         let spec = self
@@ -168,6 +197,9 @@ impl Supervisor {
             .expect("version spec registered")
             .clone();
         self.versions.insert(id, v);
+        if tp >= 2 {
+            self.shapes.insert(id, tp);
+        }
         self.handles.push(spawn_replica(
             id,
             &spec,
@@ -176,6 +208,7 @@ impl Supervisor {
             &self.events_tx,
             &self.shared,
             v,
+            tp,
         ));
         self.live += 1;
         id
@@ -246,6 +279,12 @@ pub(crate) fn route(
         specs: BTreeMap::from([(0u32, spec.clone())]),
         decided: 0,
         versions: (0..handles.len()).map(|i| (i, 0u32)).collect(),
+        // §L12: the initial fleet's shape map mirrors spawn_engine's
+        // unit_tp split (ids 0..n in spawn order).
+        shapes: (0..handles.len())
+            .filter(|&i| opts.unit_tp(i) >= 2)
+            .map(|i| (i, opts.unit_tp(i)))
+            .collect(),
         opts: opts.clone(),
         jobs: job_rx,
         events_tx,

@@ -35,11 +35,35 @@ pub struct FaultSpec {
     /// Extra simulated ns per decode step per live stuck row (a stuck
     /// generation is also a slow one).
     pub stuck_step_ns: u64,
+    /// §L12: when the killed unit is a `tp`-way execution group, which
+    /// shard the panic lands on (clamped to `tp-1`). 0 = the leader.
+    /// Any shard dying must take the whole group down atomically —
+    /// that invariant is what the shard-kill chaos tests pin.
+    pub kill_shard: usize,
 }
 
 impl FaultSpec {
     fn stuck(&self, row_hash: u64) -> bool {
         self.stuck_every > 0 && row_hash % self.stuck_every == 0
+    }
+
+    /// §L12: the slice of this fault schedule that shard `shard` of a
+    /// `tp`-way group observes. Kill triggers land on exactly one
+    /// shard (`kill_shard`, clamped); cost/stuck/panic-rate injection
+    /// rides the leader (shard 0), which owns the group's cost model.
+    pub(crate) fn for_shard(&self, shard: usize, tp: usize) -> FaultSpec {
+        let target = self.kill_shard.min(tp.saturating_sub(1));
+        let mut f = if shard == 0 { self.clone() } else { FaultSpec::default() };
+        if shard == target {
+            f.kill_replica = self.kill_replica;
+            f.kill_after_calls = self.kill_after_calls;
+            f.extra_kills = self.extra_kills.clone();
+        } else {
+            f.kill_replica = None;
+            f.kill_after_calls = 0;
+            f.extra_kills = Vec::new();
+        }
+        f
     }
 }
 
@@ -132,24 +156,114 @@ pub enum BadVersionMode {
 const BAD_VERSION_SALT: u64 = 0x0BAD_5EED_0BAD_5EED;
 
 impl SimSwapSpec {
-    /// Derive the new version's spec from the serving one.
+    /// Derive the new version's spec from the serving one. All cost
+    /// scaling goes through `SimSpec::scaled` — the one audited place
+    /// a uniform multiplier is applied.
     pub fn apply(&self, old: &SimSpec) -> SimSpec {
-        let mut spec = old.clone();
-        let m = if self.cost_mult > 0.0 { self.cost_mult } else { 1.0 };
-        let scale = |ns: u64| -> u64 { ((ns as f64) * m).round().max(0.0) as u64 };
-        spec.token_ns = scale(spec.token_ns);
-        spec.dtoken_ns = scale(spec.dtoken_ns);
-        spec.dstep_ns = scale(spec.dstep_ns);
-        if let Some(draft) = spec.draft.as_mut() {
-            draft.dtoken_ns = scale(draft.dtoken_ns);
-            draft.dstep_ns = scale(draft.dstep_ns);
-        }
+        let mut spec = old.scaled(self.cost_mult);
         match self.bad {
             BadVersionMode::None => {}
             BadVersionMode::Panic => spec.bad_panic = true,
             BadVersionMode::WrongTokens => spec.bad_token_salt = BAD_VERSION_SALT,
         }
         spec
+    }
+}
+
+/// §L12 collective cost model: the simulated price of the all-reduce
+/// sync points a `tp`-way sharded step executes. The model is a
+/// standard ring all-reduce over `tp` links — per sync point each rank
+/// sends `2(tp-1)/tp` of the payload across its link and pays a
+/// per-hop latency floor — with the payload
+///
+///   bytes = fused_tokens x active_width x elem_bytes
+///
+/// i.e. only the *active* AltUp subblock crosses the wire. The
+/// predict/correct updates of the inactive blocks are cheap elementwise
+/// maps replicated per shard (the paper's core asymmetry), so a K-way
+/// widened AltUp model syncs a `d_model/K` slice where a dense-widened
+/// baseline syncs all of `d_model` — set `active_width = d_model` to
+/// model that baseline arm.
+#[derive(Debug, Clone)]
+pub struct CollectiveSpec {
+    /// Widened model width (K·d_sub) the cost model describes. Only
+    /// documentation + the dense-baseline arm read it directly; the
+    /// wire payload keys off `active_width`. `ALTUP_TP_DMODEL` sets
+    /// the default (else 1024).
+    pub d_model: usize,
+    /// Width of the representation slice that is actually partitioned
+    /// and synced per token — the AltUp active subblock (`d_model/K`);
+    /// equal to `d_model` for a dense-widened baseline.
+    /// `ALTUP_TP_ACTIVE_WIDTH` sets the default (else `d_model/4`,
+    /// the paper's K=4 operating point).
+    pub active_width: usize,
+    /// Bytes per activation element on the wire (bf16 = 2).
+    /// `ALTUP_TP_ELEM_BYTES` sets the default (else 2).
+    pub elem_bytes: usize,
+    /// Per-link bandwidth in bytes/second. `ALTUP_TP_LINK_GBPS` sets
+    /// the default in GB/s (else 25.0 — one NVLink3-class sublink).
+    pub link_bps: f64,
+    /// Latency floor per ring hop, ns — dominates small-payload syncs,
+    /// which is exactly where AltUp's narrow active block lives.
+    /// `ALTUP_TP_LINK_LATENCY_NS` sets the default (else 1500).
+    pub latency_ns: u64,
+    /// All-reduce rounds per sharded step: one post-attention + one
+    /// post-FFN per partitioned layer (Pope et al.).
+    /// `ALTUP_TP_SYNCS_PER_STEP` sets the default (else 12 — the
+    /// 6-layer micro geometry).
+    pub syncs_per_step: usize,
+    /// Fraction of per-token compute that partitions `tp` ways
+    /// (attention + FFN of the active block); the remainder —
+    /// AltUp predict/correct, embeddings, norms — is replicated.
+    /// `ALTUP_TP_PARTITIONED_FRAC` sets the default (else 0.85).
+    pub partitioned_frac: f64,
+}
+
+impl CollectiveSpec {
+    /// Read the §L12 link/width knobs (`ALTUP_TP_*`, see field docs).
+    pub fn from_env() -> CollectiveSpec {
+        let d_model = env::usize_at_least("ALTUP_TP_DMODEL", 1, 1024);
+        CollectiveSpec {
+            d_model,
+            active_width: env::usize_at_least("ALTUP_TP_ACTIVE_WIDTH", 1, (d_model / 4).max(1)),
+            elem_bytes: env::usize_at_least("ALTUP_TP_ELEM_BYTES", 1, 2),
+            link_bps: env::f64_or("ALTUP_TP_LINK_GBPS", 25.0).max(0.001) * 1e9,
+            latency_ns: env::u64_or("ALTUP_TP_LINK_LATENCY_NS", 1500),
+            syncs_per_step: env::usize_at_least("ALTUP_TP_SYNCS_PER_STEP", 1, 12),
+            partitioned_frac: env::f64_or("ALTUP_TP_PARTITIONED_FRAC", 0.85).clamp(0.0, 1.0),
+        }
+    }
+
+    /// Ring all-reduce cost of one sync point over `tokens` fused
+    /// token positions: `2(tp-1)` latency hops plus `2(tp-1)/tp` of
+    /// the payload across one link. 0 when unsharded.
+    pub fn allreduce_ns(&self, tp: usize, tokens: usize) -> u64 {
+        if tp < 2 {
+            return 0;
+        }
+        let bytes = (tokens * self.active_width * self.elem_bytes) as f64;
+        let hops = 2 * (tp - 1) as u64;
+        let wire = bytes * (hops as f64 / tp as f64) / self.link_bps * 1e9;
+        self.latency_ns * hops + wire.round() as u64
+    }
+
+    /// Collective time of one full sharded step over `tokens` fused
+    /// token positions: `syncs_per_step` all-reduce rounds.
+    pub fn step_collective_ns(&self, tp: usize, tokens: usize) -> u64 {
+        if tp < 2 {
+            return 0;
+        }
+        self.syncs_per_step as u64 * self.allreduce_ns(tp, tokens)
+    }
+
+    /// Per-token compute multiplier of one shard in a `tp`-way group:
+    /// the partitioned fraction splits `tp` ways, the replicated
+    /// remainder (predict/correct etc.) is paid in full on every shard.
+    pub fn compute_scale(&self, tp: usize) -> f64 {
+        if tp < 2 {
+            return 1.0;
+        }
+        (1.0 - self.partitioned_frac) + self.partitioned_frac / tp as f64
     }
 }
 
@@ -190,6 +304,11 @@ pub struct SimSpec {
     /// fallback. `SimSpec::new` reads it from `ALTUP_POOL_PAGES` &
     /// friends.
     pub pool: Option<SimPoolSpec>,
+    /// §L12 collective link/width cost model. Only consulted when a
+    /// fleet unit is built as a `tp >= 2` execution group (the leader
+    /// spec comes from `sharded_leader`); single-engine units never
+    /// read it. `SimSpec::new` fills it from the `ALTUP_TP_*` knobs.
+    pub collective: CollectiveSpec,
     /// Injected faults (default: none).
     pub fault: FaultSpec,
     /// §L11 bad-version injection: XORed into every row hash at token
@@ -274,10 +393,79 @@ impl SimSpec {
                 accept_rate: env::f64_or("ALTUP_SIM_ACCEPT_RATE", 0.8).clamp(0.0, 1.0),
             }),
             pool: SimPoolSpec::from_env(),
+            collective: CollectiveSpec::from_env(),
             fault: FaultSpec::default(),
             bad_token_salt: 0,
             bad_panic: false,
         }
+    }
+
+    /// Uniformly scale the per-token / per-step compute costs by
+    /// `mult` (0.0 means 1.0 — the "unset" convention the swap knob
+    /// uses). This is the ONE place a cost multiplier is applied: the
+    /// exhaustive destructure (no `..`) makes adding a `SimSpec` field
+    /// a compile error here, so a new cost knob must explicitly decide
+    /// whether it scales — it can no longer silently miss one of the
+    /// derivation sites (§L11 swap, §L12 sharded leader).
+    pub fn scaled(&self, mult: f64) -> SimSpec {
+        let m = if mult > 0.0 { mult } else { 1.0 };
+        let scale = |ns: u64| -> u64 { ((ns as f64) * m).round().max(0.0) as u64 };
+        let SimSpec {
+            batch_size,
+            enc_len,
+            dec_len,
+            vocab_size,
+            token_ns,
+            dtoken_ns,
+            dstep_ns,
+            split_decode,
+            draft,
+            pool,
+            collective,
+            fault,
+            bad_token_salt,
+            bad_panic,
+        } = self.clone();
+        SimSpec {
+            batch_size,
+            enc_len,
+            dec_len,
+            vocab_size,
+            token_ns: scale(token_ns),
+            dtoken_ns: scale(dtoken_ns),
+            dstep_ns: scale(dstep_ns),
+            split_decode,
+            draft: draft.map(|d| SimDraftSpec {
+                dtoken_ns: scale(d.dtoken_ns),
+                dstep_ns: scale(d.dstep_ns),
+                accept_rate: d.accept_rate,
+            }),
+            // Geometry, not cost.
+            pool,
+            // Link hardware + model widths are version-invariant; the
+            // collective *time* is charged per sync from these, never
+            // pre-multiplied into the spec.
+            collective,
+            // Chaos composes onto faults separately (ChaosSpec::apply).
+            fault,
+            bad_token_salt,
+            bad_panic,
+        }
+    }
+
+    /// §L12: derive the leader spec of a `tp`-way execution group from
+    /// a whole-model spec. Per-token compute drops to one shard's
+    /// share (`CollectiveSpec::compute_scale`: partitioned layers
+    /// split `tp` ways, AltUp predict/correct replicated), while
+    /// dispatch overhead — one execute per step regardless of width —
+    /// and the per-shard-replicated §L8 draft keep whole-model costs.
+    /// Collective time is NOT in the spec: the group charges it per
+    /// sync point from `collective` at call time.
+    pub fn sharded_leader(&self, tp: usize) -> SimSpec {
+        let mut lead = self.scaled(self.collective.compute_scale(tp));
+        lead.dstep_ns = self.dstep_ns;
+        lead.draft = self.draft.clone();
+        lead
     }
 }
 
@@ -287,11 +475,23 @@ pub(crate) struct SimEngine {
     pub(crate) spec: SimSpec,
     pub(crate) replica: usize,
     pub(crate) calls: u64,
+    /// §L12: which shard of an execution group this engine models
+    /// (0 for the leader and for ordinary unsharded replicas). Only
+    /// used to label injected-fault panics — the fault *routing* is
+    /// `FaultSpec::for_shard`'s job at group build time.
+    pub(crate) shard: usize,
 }
 
 impl SimEngine {
     pub(crate) fn new(spec: SimSpec, replica: usize) -> SimEngine {
-        SimEngine { spec, replica, calls: 0 }
+        SimEngine { spec, replica, calls: 0, shard: 0 }
+    }
+
+    /// §L12: a group member — `replica` is the GROUP's fleet unit id
+    /// (all shards share it; supervision is per unit), `shard` the
+    /// member's rank within the group.
+    pub(crate) fn new_shard(spec: SimSpec, replica: usize, shard: usize) -> SimEngine {
+        SimEngine { spec, replica, calls: 0, shard }
     }
 
     /// Count one engine execute and trigger any injected fault due at
@@ -317,9 +517,9 @@ impl SimEngine {
                 .any(|&(r, after)| r == self.replica && self.calls >= after.max(1));
         if killed_here {
             panic!(
-                "injected sim fault: replica {} killed at engine call {} \
+                "injected sim fault: replica {} shard {} killed at engine call {} \
                  (expected during fault-injection tests/benches)",
-                self.replica, self.calls
+                self.replica, self.shard, self.calls
             );
         }
         if f.panic_rate > 0.0 {

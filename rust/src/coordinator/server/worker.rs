@@ -18,6 +18,83 @@ pub(crate) enum Engine {
         draft: Option<Session>,
     },
     Sim(SimEngine),
+    /// §L12: a `tp`-way tensor-parallel execution group — one fleet
+    /// unit whose shards run one sharded model in lockstep. Boxed:
+    /// the group embeds a leader `Engine`, and the unsharded variants
+    /// should not pay its size.
+    Group(Box<ShardGroup>),
+}
+
+/// §L12 execution group: shard 0 (the leader) plus `tp - 1` follower
+/// shards, driven in lockstep by ONE replica thread. The leader owns
+/// the group's cost model and produces the tokens (identical on every
+/// shard by the sharding contract); followers exist to model/execute
+/// their shard's half of each step — in the sim, that means advancing
+/// their fault clocks so an injected shard kill panics the whole
+/// thread, which is exactly how the §L7 supervisor comes to treat the
+/// group as one atomic crash/requeue/respawn unit.
+pub(crate) struct ShardGroup {
+    /// Shard 0: a whole `Engine` (never itself a `Group`) whose spec
+    /// carries the sharded per-shard costs (`SimSpec::sharded_leader`)
+    /// or whose session is bound to shard 0 of the artifact.
+    pub(crate) leader: Engine,
+    pub(crate) followers: Vec<ShardFollower>,
+    /// Group width; `followers.len() + 1`.
+    pub(crate) tp: usize,
+    /// The link/width cost model collective time is charged from.
+    pub(crate) coll: CollectiveSpec,
+    /// All-reduce rounds this group has executed (exported into
+    /// `ServerStats::collectives` when the serving loop exits).
+    pub(crate) collectives: u64,
+    /// Simulated ns spent in those rounds (`ServerStats::collective_ns`).
+    pub(crate) collective_ns: u64,
+}
+
+/// One non-leader shard of an execution group.
+pub(crate) enum ShardFollower {
+    /// Sim shard: ticks its engine-call clock in lockstep with the
+    /// leader so deterministic fault schedules can target any shard.
+    Sim(SimEngine),
+    /// Real shard: a session bound (`Session::bind_shard`) to this
+    /// shard's executables. Held for the group's lifetime; the shard
+    /// executables' own collectives synchronize it with the leader.
+    #[allow(dead_code)]
+    Real { client: Client, session: Session },
+}
+
+impl ShardGroup {
+    /// Advance every sim follower's engine-call clock in lockstep with
+    /// the leader call about to execute. A follower whose fault
+    /// schedule fires here panics the whole replica thread — one shard
+    /// dying takes the group down atomically, so its ledger requeues
+    /// as one unit and no half-group response can escape.
+    fn tick_followers(&mut self) {
+        for f in self.followers.iter_mut() {
+            if let ShardFollower::Sim(e) = f {
+                e.on_call();
+            }
+        }
+    }
+
+    /// Charge one sharded step's collective time over `tokens` fused
+    /// token positions: counters always; simulated wall-clock only on
+    /// the sim backend (a real backend pays its collectives inside the
+    /// shard executables themselves).
+    fn sync(&mut self, tokens: usize) {
+        self.sync_steps(1, tokens);
+    }
+
+    /// `steps` sharded steps of `tokens` fused positions each, charged
+    /// as one wait (the monolithic-decode fallback runs its whole
+    /// token loop inside a single engine call).
+    fn sync_steps(&mut self, steps: u64, tokens: usize) {
+        let ns = self.coll.step_collective_ns(self.tp, tokens).saturating_mul(steps);
+        self.collectives += (self.coll.syncs_per_step as u64).saturating_mul(steps);
+        self.collective_ns += ns;
+        if matches!(self.leader, Engine::Sim(_)) {
+            sim_sleep(ns);
+        }
+    }
 }
 
 /// Per-replica slot state for the continuous path: device-resident KV
@@ -57,66 +134,188 @@ pub(crate) fn resolve_spec_gamma(session: &Session, requested: usize) -> usize {
 
 
 impl Engine {
-    pub(crate) fn build(replica: usize, spec: &EngineSpec, opts: &ServerOptions) -> Result<Engine> {
-        match spec {
-            EngineSpec::Artifact { name } => {
-                let client = Client::cpu()?;
-                let artifact = load_named(name)?;
-                let mut session = Session::open_eval(&client, artifact, opts.seed)?;
-                if let Some(ckpt) = &opts.checkpoint {
-                    session.store =
-                        crate::runtime::params::ParamStore::load(ckpt, &session.artifact)?;
-                    session.invalidate_state();
-                }
-                session.ensure_decode(&client)?;
-                // §Perf L4: upload the weights once; every batch reuses
-                // the device-resident buffers.
-                session.warm_device_cache(&client)?;
-                // §L8: load the draft session only when speculation
-                // will actually engage (`resolve_spec_gamma` — the
-                // same predicate `effective_spec_gamma` applies at
-                // serve time, so "draft loaded" and "speculation runs"
-                // cannot drift apart) — otherwise the replica serves
-                // plain decode and must not pay draft memory/prefill
-                // for nothing. A named draft that fails to load or
-                // mismatches the serving geometry is a real error.
-                let draft = match &session.artifact.draft {
-                    Some(d) if resolve_spec_gamma(&session, opts.spec_gamma) > 0 => {
-                        let dartifact = load_named(&d.artifact)?;
-                        let (mc, dc) = (&session.artifact.config, &dartifact.config);
-                        if dc.enc_len != mc.enc_len
-                            || dc.dec_len != mc.dec_len
-                            || dc.vocab_size != mc.vocab_size
-                        {
-                            bail!(
-                                "draft artifact {} geometry mismatch: enc_len {} vs {}, \
-                                 dec_len {} vs {}, vocab {} vs {} (the draft must share \
-                                 the main artifact's serving geometry)",
-                                d.artifact,
-                                dc.enc_len,
-                                mc.enc_len,
-                                dc.dec_len,
-                                mc.dec_len,
-                                dc.vocab_size,
-                                mc.vocab_size
-                            );
-                        }
-                        let mut dsession =
-                            Session::open_eval(&client, dartifact, opts.seed)?;
-                        if !dsession.has_split_decode() {
-                            bail!(
-                                "draft artifact {} ships no split-decode HLO pair",
-                                d.artifact
-                            );
-                        }
-                        dsession.warm_device_cache(&client)?;
-                        Some(dsession)
-                    }
-                    _ => None,
-                };
-                Ok(Engine::Real { client, session, draft })
+    /// Build the decode backend for one fleet unit. `tp >= 2` asks for
+    /// a §L12 execution group of that width; when the spec cannot
+    /// honor it (a real artifact without a matching sharded contract),
+    /// the unit silently degrades to a whole-model single engine —
+    /// sharding changes timing, never outputs.
+    pub(crate) fn build(
+        replica: usize,
+        spec: &EngineSpec,
+        opts: &ServerOptions,
+        tp: usize,
+    ) -> Result<Engine> {
+        if tp >= 2 {
+            if let Some(group) = Engine::build_group(replica, spec, opts, tp)? {
+                return Ok(group);
             }
+        }
+        match spec {
+            EngineSpec::Artifact { name } => Engine::build_real(name, opts, None),
             EngineSpec::Sim(s) => Ok(Engine::Sim(SimEngine::new(s.clone(), replica))),
+        }
+    }
+
+    /// §L12 group construction. `None` means the spec ships no
+    /// matching `tp`-way contract and the caller should fall back to a
+    /// whole-model single engine. The sim always honors the request —
+    /// the leader gets the sharded per-shard cost spec
+    /// (`SimSpec::sharded_leader`) and each shard sees its slice of
+    /// the fault schedule (`FaultSpec::for_shard`); the real backend
+    /// honors it only when the artifact declares `sharding.tp == tp`
+    /// and ships every shard's split-decode executables.
+    fn build_group(
+        replica: usize,
+        spec: &EngineSpec,
+        opts: &ServerOptions,
+        tp: usize,
+    ) -> Result<Option<Engine>> {
+        match spec {
+            EngineSpec::Sim(s) => {
+                let mut lead = s.sharded_leader(tp);
+                lead.fault = s.fault.for_shard(0, tp);
+                let leader = Engine::Sim(SimEngine::new_shard(lead, replica, 0));
+                let followers = (1..tp)
+                    .map(|i| {
+                        let mut fs = s.clone();
+                        fs.fault = s.fault.for_shard(i, tp);
+                        ShardFollower::Sim(SimEngine::new_shard(fs, replica, i))
+                    })
+                    .collect();
+                Ok(Some(Engine::Group(Box::new(ShardGroup {
+                    leader,
+                    followers,
+                    tp,
+                    coll: s.collective.clone(),
+                    collectives: 0,
+                    collective_ns: 0,
+                }))))
+            }
+            EngineSpec::Artifact { name } => {
+                let artifact = load_named(name)?;
+                if artifact.sharding.as_ref().map(|s| s.tp) != Some(tp) {
+                    return Ok(None);
+                }
+                let leader = Engine::build_real(name, opts, Some(0))?;
+                let sharded_ok = match &leader {
+                    Engine::Real { session, .. } => session.has_sharded_decode(tp),
+                    _ => false,
+                };
+                if !sharded_ok {
+                    // Declared but incomplete shard manifest: degrade
+                    // to whole-model rather than erroring (the leader
+                    // built above compiled only fallback executables,
+                    // so it is exactly a whole-model engine — reuse it).
+                    return Ok(None);
+                }
+                let mut followers = Vec::with_capacity(tp - 1);
+                for i in 1..tp {
+                    let fclient = Client::cpu()?;
+                    let fartifact = load_named(name)?;
+                    let mut fsession = Session::open_eval(&fclient, fartifact, opts.seed)?;
+                    fsession.bind_shard(i);
+                    if let Some(ckpt) = &opts.checkpoint {
+                        fsession.store =
+                            crate::runtime::params::ParamStore::load(ckpt, &fsession.artifact)?;
+                        fsession.invalidate_state();
+                    }
+                    fsession.ensure_decode(&fclient)?;
+                    fsession.warm_device_cache(&fclient)?;
+                    followers.push(ShardFollower::Real { client: fclient, session: fsession });
+                }
+                Ok(Some(Engine::Group(Box::new(ShardGroup {
+                    leader,
+                    followers,
+                    tp,
+                    coll: CollectiveSpec::from_env(),
+                    collectives: 0,
+                    collective_ns: 0,
+                }))))
+            }
+        }
+    }
+
+    /// Build a real-backend engine. `shard` binds the session (and its
+    /// draft) to one shard of the §L12 contract before any serving
+    /// executable is compiled; `None` is the ordinary whole-model path.
+    fn build_real(name: &str, opts: &ServerOptions, shard: Option<usize>) -> Result<Engine> {
+        let client = Client::cpu()?;
+        let artifact = load_named(name)?;
+        let mut session = Session::open_eval(&client, artifact, opts.seed)?;
+        if let Some(s) = shard {
+            session.bind_shard(s);
+        }
+        if let Some(ckpt) = &opts.checkpoint {
+            session.store = crate::runtime::params::ParamStore::load(ckpt, &session.artifact)?;
+            session.invalidate_state();
+        }
+        session.ensure_decode(&client)?;
+        // §Perf L4: upload the weights once; every batch reuses
+        // the device-resident buffers.
+        session.warm_device_cache(&client)?;
+        // §L8: load the draft session only when speculation
+        // will actually engage (`resolve_spec_gamma` — the
+        // same predicate `effective_spec_gamma` applies at
+        // serve time, so "draft loaded" and "speculation runs"
+        // cannot drift apart) — otherwise the replica serves
+        // plain decode and must not pay draft memory/prefill
+        // for nothing. A named draft that fails to load or
+        // mismatches the serving geometry is a real error.
+        let draft = match &session.artifact.draft {
+            Some(d) if resolve_spec_gamma(&session, opts.spec_gamma) > 0 => {
+                let dartifact = load_named(&d.artifact)?;
+                let (mc, dc) = (&session.artifact.config, &dartifact.config);
+                if dc.enc_len != mc.enc_len
+                    || dc.dec_len != mc.dec_len
+                    || dc.vocab_size != mc.vocab_size
+                {
+                    bail!(
+                        "draft artifact {} geometry mismatch: enc_len {} vs {}, \
+                         dec_len {} vs {}, vocab {} vs {} (the draft must share \
+                         the main artifact's serving geometry)",
+                        d.artifact,
+                        dc.enc_len,
+                        mc.enc_len,
+                        dc.dec_len,
+                        mc.dec_len,
+                        dc.vocab_size,
+                        mc.vocab_size
+                    );
+                }
+                let mut dsession = Session::open_eval(&client, dartifact, opts.seed)?;
+                if let Some(s) = shard {
+                    // §L12: the replicated draft still binds, so a
+                    // draft that DOES ship shard variants routes to
+                    // them; absent variants fall back whole-model.
+                    dsession.bind_shard(s);
+                }
+                if !dsession.has_split_decode() {
+                    bail!("draft artifact {} ships no split-decode HLO pair", d.artifact);
+                }
+                dsession.warm_device_cache(&client)?;
+                Some(dsession)
+            }
+            _ => None,
+        };
+        Ok(Engine::Real { client, session, draft })
+    }
+
+    /// §L12: this unit's group width (1 for ordinary single engines)
+    /// — the number of devices it occupies.
+    pub(crate) fn group_tp(&self) -> usize {
+        match self {
+            Engine::Group(g) => g.tp,
+            _ => 1,
+        }
+    }
+
+    /// §L12: (all-reduce rounds, simulated collective ns) this engine
+    /// has accumulated; (0, 0) for single engines. Exported into
+    /// `ServerStats` when a serving loop exits cleanly.
+    pub(crate) fn collective_totals(&self) -> (u64, u64) {
+        match self {
+            Engine::Group(g) => (g.collectives, g.collective_ns),
+            _ => (0, 0),
         }
     }
 
@@ -127,6 +326,7 @@ impl Engine {
                 (session.artifact.config.batch_size, session.artifact.config.enc_len)
             }
             Engine::Sim(e) => (e.spec.batch_size, e.spec.enc_len),
+            Engine::Group(g) => g.leader.dims(),
         }
     }
 
@@ -135,6 +335,7 @@ impl Engine {
         match self {
             Engine::Real { session, .. } => session.artifact.config.dec_len,
             Engine::Sim(e) => e.spec.dec_len,
+            Engine::Group(g) => g.leader.dec_len(),
         }
     }
 
@@ -147,6 +348,7 @@ impl Engine {
                 session.has_split_decode() || session.has_paged_decode()
             }
             Engine::Sim(e) => e.spec.split_decode,
+            Engine::Group(g) => g.leader.supports_continuous(),
         }
     }
 
@@ -172,6 +374,7 @@ impl Engine {
             Engine::Sim(e) => {
                 e.spec.pool.as_ref().map(|p| (p.page_size, p.pool_pages, p.prefix_cache))
             }
+            Engine::Group(g) => g.leader.paged_geometry(),
         }
     }
 
@@ -182,6 +385,7 @@ impl Engine {
         match self {
             Engine::Real { session, .. } => session.effective_bucket(bucket),
             Engine::Sim(e) => bucket.min(e.spec.enc_len),
+            Engine::Group(g) => g.leader.effective_bucket(bucket),
         }
     }
 
@@ -190,6 +394,7 @@ impl Engine {
         match self {
             Engine::Real { session, .. } => session.effective_prefill_bucket(bucket),
             Engine::Sim(e) => bucket.min(e.spec.enc_len),
+            Engine::Group(g) => g.leader.effective_prefill_bucket(bucket),
         }
     }
 
@@ -198,11 +403,23 @@ impl Engine {
         match self {
             Engine::Real { session, .. } => session.effective_paged_prefill_bucket(bucket),
             Engine::Sim(e) => bucket.min(e.spec.enc_len),
+            Engine::Group(g) => g.leader.effective_paged_prefill_bucket(bucket),
         }
     }
 
     /// Monolithic decode of a (batch_size, bucket) packed batch.
     pub(crate) fn decode(&mut self, enc: &[i32], bucket: usize) -> Result<Vec<Vec<i32>>> {
+        if let Engine::Group(g) = self {
+            g.tick_followers();
+            let out = g.leader.decode(enc, bucket)?;
+            // One sharded prefill over the packed batch, then one
+            // sharded step per generated token over the batch rows —
+            // the whole monolithic loop runs inside this single call.
+            let (batch_size, _) = g.leader.dims();
+            g.sync(batch_size * bucket);
+            g.sync_steps(g.leader.dec_len() as u64, batch_size);
+            return Ok(out);
+        }
         match self {
             Engine::Real { client, session, .. } => {
                 session.decode_bucketed(client, enc, bucket)
@@ -211,6 +428,7 @@ impl Engine {
                 e.on_call();
                 Ok(sim_decode(&e.spec, enc, bucket))
             }
+            Engine::Group(_) => unreachable!("handled above"),
         }
     }
 
@@ -227,6 +445,10 @@ impl Engine {
                 Ok(SlotState::Real { main, draft })
             }
             Engine::Sim(_) => Ok(SlotState::Sim(vec![None; n])),
+            // §L12: the slot state lives with the leader (followers
+            // hold their shard of the KV inside their own sessions on
+            // the real backend; the sim followers hold no state).
+            Engine::Group(g) => g.leader.init_slots(n),
         }
     }
 
@@ -245,6 +467,7 @@ impl Engine {
                 Ok(SlotState::Real { main, draft })
             }
             Engine::Sim(_) => Ok(SlotState::Sim(vec![None; n])),
+            Engine::Group(g) => g.leader.init_slots_paged(n, pool_pages),
         }
     }
 
@@ -257,6 +480,16 @@ impl Engine {
         bucket: usize,
         slot_ids: &[usize],
     ) -> Result<()> {
+        if let Engine::Group(g) = self {
+            // Lockstep: every shard executes this prefill; the leader
+            // produces the state/tokens, followers advance their fault
+            // clocks, and the group pays one sharded step's collectives
+            // over the admitted rows' token positions.
+            g.tick_followers();
+            g.leader.prefill(state, enc, bucket, slot_ids)?;
+            g.sync(slot_ids.len() * bucket);
+            return Ok(());
+        }
         match (self, state) {
             (Engine::Real { client, session, draft }, SlotState::Real { main, draft: dslots }) => {
                 let held = main
@@ -316,6 +549,14 @@ impl Engine {
         page_table: &[i32],
         saved_tokens: usize,
     ) -> Result<()> {
+        if let Engine::Group(g) = self {
+            g.tick_followers();
+            g.leader.prefill_paged(state, enc, bucket, slot_ids, page_table, saved_tokens)?;
+            // Prefix-cache hits shrink the sharded step — and with it
+            // the collective payload — exactly like the compute.
+            g.sync((slot_ids.len() * bucket).saturating_sub(saved_tokens));
+            return Ok(());
+        }
         match (self, state) {
             (Engine::Real { client, session, draft }, SlotState::Real { main, draft: dslots }) => {
                 let held = main
@@ -366,6 +607,16 @@ impl Engine {
     /// advances every slot with `live[s] == true` by one token and
     /// returns the (slots,) token row (dead rows carry garbage).
     pub(crate) fn decode_token(&mut self, state: &mut SlotState, live: &[bool]) -> Result<Vec<i32>> {
+        if let Engine::Group(g) = self {
+            g.tick_followers();
+            let out = g.leader.decode_token(state, live)?;
+            // The fused step runs the full static slot geometry, so
+            // the activation payload crossing the links does too. This
+            // is where AltUp's narrow active block pays off: per-token
+            // bytes are `active_width`, not `d_model`.
+            g.sync(live.len());
+            return Ok(out);
+        }
         match (self, state) {
             (Engine::Real { client, session, .. }, SlotState::Real { main, .. }) => {
                 let held = main
@@ -414,6 +665,12 @@ impl Engine {
         live: &[bool],
         page_table: &[i32],
     ) -> Result<Vec<i32>> {
+        if let Engine::Group(g) = self {
+            g.tick_followers();
+            let out = g.leader.decode_token_paged(state, live, page_table)?;
+            g.sync(live.len());
+            return Ok(out);
+        }
         if let Engine::Real { client, session, .. } = self {
             let SlotState::Real { main, .. } = state else {
                 bail!("engine/slot-state backend mismatch");
@@ -452,6 +709,7 @@ impl Engine {
                     0
                 }
             }
+            Engine::Group(g) => g.leader.effective_spec_gamma(requested),
         }
     }
 
@@ -465,6 +723,15 @@ impl Engine {
         live: &[bool],
         gamma: usize,
     ) -> Result<Vec<Vec<i32>>> {
+        if let Engine::Group(g) = self {
+            // §L12: the draft is replicated per shard (recycled AltUp
+            // drafts are predict/correct-cheap — the paper's
+            // asymmetry), so drafting needs NO collective: every shard
+            // drafts the same γ tokens locally. Followers still tick —
+            // their devices run the draft steps too.
+            g.tick_followers();
+            return g.leader.draft_tokens(state, live, gamma);
+        }
         match (self, state) {
             (
                 Engine::Real { client, draft: Some(ds), .. },
@@ -527,6 +794,14 @@ impl Engine {
         live: &[bool],
         gamma: usize,
     ) -> Result<(Vec<i32>, Vec<i32>)> {
+        if let Engine::Group(g) = self {
+            // One fused sharded verify step — scoring γ+1 positions is
+            // one weight-bound pass, so one step's collectives.
+            g.tick_followers();
+            let out = g.leader.verify(state, drafted, live, gamma)?;
+            g.sync(live.len());
+            return Ok(out);
+        }
         match (self, state) {
             (
                 Engine::Real { client, session, draft: Some(ds) },
@@ -601,6 +876,12 @@ impl Engine {
         gamma: usize,
         page_table: &[i32],
     ) -> Result<(Vec<i32>, Vec<i32>)> {
+        if let Engine::Group(g) = self {
+            g.tick_followers();
+            let out = g.leader.verify_paged(state, drafted, live, gamma, page_table)?;
+            g.sync(live.len());
+            return Ok(out);
+        }
         if let Engine::Real { client, session, draft } = self {
             let Some(ds) = draft else { bail!("engine has no draft session") };
             let SlotState::Real { main, draft: dslots } = state else {
@@ -675,8 +956,9 @@ pub(crate) fn serve_replica(
     ledger: &Ledger,
     stats: &mut ServerStats,
     shared: &Arc<QosShared>,
+    tp: usize,
 ) -> Result<()> {
-    let mut engine = Engine::build(id, spec, opts)?;
+    let mut engine = Engine::build(id, spec, opts, tp)?;
     // §L11 canary gate: a rollout canary decodes the pinned probe set
     // and holds for the router's token-parity verdict before serving
     // any live traffic. Abandoned at the gate -> clean exit, zero
@@ -686,7 +968,8 @@ pub(crate) fn serve_replica(
     {
         return Ok(());
     }
-    if opts.continuous && engine.supports_continuous() {
+    stats.devices += engine.group_tp();
+    let out = if opts.continuous && engine.supports_continuous() {
         // §L8: speculation is strictly opt-in (spec_gamma > 0) and
         // runs at the engine's effective draft length (the requested γ
         // or the artifact's compiled fallback); anything missing falls
@@ -696,7 +979,15 @@ pub(crate) fn serve_replica(
         serve_continuous(id, &mut engine, jobs, opts, ledger, stats, spec_dec, shared)
     } else {
         serve_batches(id, &mut engine, jobs, ledger, stats, &opts.tenants, shared)
-    }
+    };
+    // §L12: export the group's collective counters on exit. A panicked
+    // incarnation loses its engine mid-loop (along with the rest of
+    // its in-flight engine state), so crashed groups under-report —
+    // the counters are a cost-model metric, not an audit log.
+    let (collectives, collective_ns) = engine.collective_totals();
+    stats.collectives += collectives;
+    stats.collective_ns += collective_ns;
+    out
 }
 
 /// Non-blocking / blocking pop off the shared job queue.

@@ -216,8 +216,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // §L8: draft length for speculative decoding (0 = off; falls
         // back to plain decode when the artifact ships no draft).
         spec_gamma: args.usize_or("spec-gamma", defaults.spec_gamma),
-        // Tenancy (§L10) and deploy gates (§L11) keep their
-        // ALTUP_*-derived defaults.
+        // §L12: tensor-parallel group width (0/1 = whole-model units).
+        tp: args.usize_or("tp", defaults.tp),
+        // Tenancy (§L10), deploy gates (§L11), and the §L12 group
+        // count keep their ALTUP_*-derived defaults.
         ..defaults
     };
     let n = args.usize_or("requests", 64);

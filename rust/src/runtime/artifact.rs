@@ -96,6 +96,27 @@ pub struct PagedSpec {
     pub page_size: usize,
 }
 
+/// Optional tensor-parallel sharding contract (§L12): the artifact
+/// additionally ships per-shard executables for a `tp`-way split of
+/// the model (head-sharded attention, column/row-split FFN, AltUp
+/// predict/correct replicated per shard). Shipped as an optional
+/// `sharding` object in meta.json:
+///
+///   "sharding": {"tp": 2}
+///
+/// An artifact declaring this must ship, for every shard `i` in
+/// `0..tp`, shard-suffixed variants of the split-serving entry points
+/// (`prefill@<bucket>/shard<i>`, `decode_token/shard<i>`, and the
+/// paged/verify families where present) — see the `runtime::session`
+/// §L12 contract. The whole-model executables stay in the manifest;
+/// serving falls back to them automatically when the requested group
+/// width does not match `tp` or a shard executable is missing.
+#[derive(Debug, Clone)]
+pub struct ShardingSpec {
+    /// Number of shards the per-shard executables were compiled for.
+    pub tp: usize,
+}
+
 /// Parsed meta.json + paths of the HLO files.
 #[derive(Debug, Clone)]
 pub struct Artifact {
@@ -119,6 +140,10 @@ pub struct Artifact {
     /// artifacts whose decode state is per-slot monolithic; serving
     /// then falls back to monolithic `DecodeSlots`.
     pub paged: Option<PagedSpec>,
+    /// Optional tensor-parallel sharding contract (§L12). Absent from
+    /// artifacts that ship only whole-model executables; serving then
+    /// runs every fleet unit unsharded.
+    pub sharding: Option<ShardingSpec>,
     pub batch_inputs: Vec<BatchInputSpec>,
     pub hlo_files: Vec<(String, PathBuf)>,
     /// Human-readable version label from the optional meta.json
@@ -260,6 +285,25 @@ impl Artifact {
             }
         };
 
+        let sharding = match meta.get("sharding") {
+            Json::Null => None,
+            s => {
+                // Absent tp defaults to 2; a PRESENT but malformed tp
+                // (string, negative, < 2) is a hard error — a group
+                // built against the wrong shard count would bind shard
+                // executables that do not exist or partition the wrong
+                // dimension.
+                let tp = match s.get("tp") {
+                    Json::Null => 2,
+                    v => v
+                        .as_usize()
+                        .filter(|&v| v >= 2)
+                        .context("meta.json sharding.tp must be an integer >= 2")?,
+                };
+                Some(ShardingSpec { tp })
+            }
+        };
+
         let mut batch_inputs = Vec::new();
         for b in meta.get("batch_inputs").as_arr().context("meta.batch_inputs")? {
             batch_inputs.push(BatchInputSpec {
@@ -331,6 +375,7 @@ impl Artifact {
             decode_state,
             draft,
             paged,
+            sharding,
             batch_inputs,
             hlo_files,
             version: meta.get("version").as_str().unwrap_or("unversioned").to_string(),
@@ -456,6 +501,39 @@ mod tests {
             );
             std::fs::write(tmp.join("meta.json"), meta).unwrap();
             assert!(Artifact::load(&tmp).is_err(), "paged.page_size {bad} rejected");
+        }
+        std::fs::remove_dir_all(&tmp).unwrap();
+    }
+
+    #[test]
+    fn parses_optional_sharding_spec() {
+        let tmp = std::env::temp_dir().join(format!("altup-test6-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        let with_sharding = fake_meta().replace(
+            "\"flops_per_token\": 100.0",
+            "\"flops_per_token\": 100.0, \"sharding\": {\"tp\": 4}",
+        );
+        std::fs::write(tmp.join("meta.json"), with_sharding).unwrap();
+        assert_eq!(Artifact::load(&tmp).unwrap().sharding.unwrap().tp, 4);
+
+        // Absent entry means unsharded; bare object defaults to tp=2.
+        std::fs::write(tmp.join("meta.json"), fake_meta()).unwrap();
+        assert!(Artifact::load(&tmp).unwrap().sharding.is_none());
+        let bare = fake_meta().replace(
+            "\"flops_per_token\": 100.0",
+            "\"flops_per_token\": 100.0, \"sharding\": {}",
+        );
+        std::fs::write(tmp.join("meta.json"), bare).unwrap();
+        assert_eq!(Artifact::load(&tmp).unwrap().sharding.unwrap().tp, 2);
+        // Present-but-malformed tp is a hard error, not a silent 2:
+        // tp=1 would claim a sharded contract with no shard files.
+        for bad in ["0", "1", "-2", "\"2\""] {
+            let meta = fake_meta().replace(
+                "\"flops_per_token\": 100.0",
+                &format!("\"flops_per_token\": 100.0, \"sharding\": {{\"tp\": {bad}}}"),
+            );
+            std::fs::write(tmp.join("meta.json"), meta).unwrap();
+            assert!(Artifact::load(&tmp).is_err(), "sharding.tp {bad} rejected");
         }
         std::fs::remove_dir_all(&tmp).unwrap();
     }

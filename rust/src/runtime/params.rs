@@ -223,6 +223,7 @@ pub(crate) mod tests {
             decode_state: vec![],
             draft: None,
             paged: None,
+            sharding: None,
             batch_inputs: vec![BatchInputSpec { name: "enc".into(), shape: vec![2, 8] }],
             hlo_files: vec![],
             version: "unversioned".into(),

@@ -86,6 +86,23 @@
 //! `Session::has_paged_decode` is false and serving falls back to the
 //! monolithic per-slot `DecodeSlots` path with identical outputs.
 //!
+//! §Perf L12 tensor-parallel sharding contract: an artifact may
+//! declare `"sharding": {"tp": N}` in meta.json and ship, for every
+//! shard `i` in `0..N`, shard-suffixed variants of the split-serving
+//! entry points — `prefill@<b>/shard<i>`, `decode_token/shard<i>`,
+//! and the paged/verify families where present — compiled for a
+//! head-sharded attention + column/row-split FFN partition with AltUp
+//! predict/correct replicated per shard. Each shard executable keeps
+//! the whole-model calling convention (same operands, same outputs;
+//! the shard's partial activations are resolved by the compiled-in
+//! collectives), so a `Session` bound to shard `i` via `bind_shard`
+//! transparently routes every compile through the `/shard<i>` variant
+//! when the manifest ships it and falls back to the whole-model
+//! executable otherwise. `has_sharded_decode(tp)` gates the group
+//! path: the coordinator only builds a `tp`-wide execution group when
+//! the declared `sharding.tp` matches and every shard's split-decode
+//! pair is present; anything else serves whole-model, unsharded.
+//!
 //! §Perf L4 (EXPERIMENTS.md): parameter/optimizer state is kept
 //! device-resident as `PjRtBuffer`s across steps. Per train step, only
 //! the batch + three scalars cross the host boundary on the way in and
@@ -254,6 +271,10 @@ pub struct Session {
     /// Wall-clock spent moving data across the host<->device boundary
     /// (literal uploads, buffer downloads). §Perf L4 metric.
     pub transfer_seconds: f64,
+    /// §L12: when bound, every compile resolves `<kind>` to
+    /// `<kind>/shard<i>` where the manifest ships that variant (see
+    /// the module header sharding contract). None = whole-model.
+    shard: Option<usize>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -298,6 +319,7 @@ impl Session {
             exec_seconds: 0.0,
             marshal_seconds: 0.0,
             transfer_seconds: 0.0,
+            shard: None,
         }
     }
 
@@ -430,9 +452,32 @@ impl Session {
         Ok(())
     }
 
+    /// Bind this session to shard `shard` of a §L12 execution group:
+    /// subsequent compiles prefer the `<kind>/shard<i>` manifest
+    /// entries. Call before any serving executable is compiled so the
+    /// whole split-decode family resolves shard-side.
+    pub fn bind_shard(&mut self, shard: usize) {
+        self.shard = Some(shard);
+    }
+
+    /// §L12 shard routing: the `<kind>/shard<i>` variant when this
+    /// session is bound to a shard and the manifest ships it; the
+    /// whole-model `kind` otherwise (automatic fallback — identical
+    /// outputs by the sharding contract).
+    fn shard_kind(&self, kind: &str) -> String {
+        if let Some(s) = self.shard {
+            let sharded = format!("{kind}/shard{s}");
+            if self.artifact.has(&sharded) {
+                return sharded;
+            }
+        }
+        kind.to_string()
+    }
+
     fn compile(&self, client: &Client, kind: &str) -> Result<Rc<Executable>> {
+        let kind = self.shard_kind(kind);
         let key = format!("{}:{}", self.artifact.name, kind);
-        client.compile_hlo(&key, self.artifact.hlo_path(kind)?)
+        client.compile_hlo(&key, self.artifact.hlo_path(&kind)?)
     }
 
     pub fn ensure_eval(&mut self, client: &Client) -> Result<()> {
@@ -746,7 +791,8 @@ impl Session {
         }
         let exe = self.compile(client, &format!("decode_step@{bucket}"))?;
         for (evicted, _) in self.decode_buckets.insert(bucket, Rc::clone(&exe)) {
-            client.evict(&format!("{}:decode_step@{evicted}", self.artifact.name));
+            let kind = self.shard_kind(&format!("decode_step@{evicted}"));
+            client.evict(&format!("{}:{}", self.artifact.name, kind));
         }
         Ok(exe)
     }
@@ -758,7 +804,8 @@ impl Session {
         }
         let exe = self.compile(client, &format!("prefill@{bucket}"))?;
         for (evicted, _) in self.prefill_buckets.insert(bucket, Rc::clone(&exe)) {
-            client.evict(&format!("{}:prefill@{evicted}", self.artifact.name));
+            let kind = self.shard_kind(&format!("prefill@{evicted}"));
+            client.evict(&format!("{}:{}", self.artifact.name, kind));
         }
         Ok(exe)
     }
@@ -828,6 +875,29 @@ impl Session {
         }
         self.artifact.has("prefill")
             || self.artifact.has(&format!("prefill@{}", self.artifact.config.enc_len))
+    }
+
+    /// True when this artifact can serve as a `tp`-wide §L12 execution
+    /// group: the meta.json `sharding.tp` matches the requested width,
+    /// the whole-model split-decode pair is present (the fallback path
+    /// and the source of `decode_state` geometry), and every shard in
+    /// `0..tp` ships its own `decode_token/shard<i>` plus a full-length
+    /// prefill variant. Any mismatch degrades to whole-model serving
+    /// rather than erroring — sharding is an optimization, not a new
+    /// output contract.
+    pub fn has_sharded_decode(&self, tp: usize) -> bool {
+        if tp < 2 || self.artifact.sharding.as_ref().map(|s| s.tp) != Some(tp) {
+            return false;
+        }
+        if !self.has_split_decode() {
+            return false;
+        }
+        let enc_len = self.artifact.config.enc_len;
+        (0..tp).all(|i| {
+            self.artifact.has(&format!("decode_token/shard{i}"))
+                && (self.artifact.has(&format!("prefill/shard{i}"))
+                    || self.artifact.has(&format!("prefill@{enc_len}/shard{i}")))
+        })
     }
 
     /// The sequence length a `prefill(bucket)` call actually executes
@@ -1229,7 +1299,8 @@ impl Session {
         }
         let exe = self.compile(client, &format!("prefill_paged@{bucket}"))?;
         for (evicted, _) in self.prefill_paged_buckets.insert(bucket, Rc::clone(&exe)) {
-            client.evict(&format!("{}:prefill_paged@{evicted}", self.artifact.name));
+            let kind = self.shard_kind(&format!("prefill_paged@{evicted}"));
+            client.evict(&format!("{}:{}", self.artifact.name, kind));
         }
         Ok(exe)
     }
@@ -1562,6 +1633,52 @@ mod tests {
             s.set_cache_mode(m).unwrap();
             assert_eq!(s.cache_mode(), m);
         }
+    }
+
+    /// §L12: the sharded-decode gate requires a declared matching tp
+    /// AND every shard's split-decode pair; shard binding then routes
+    /// compiles to `/shard<i>` manifest names only where the artifact
+    /// ships them, falling back to the whole-model name otherwise.
+    #[test]
+    fn sharded_decode_gate_and_shard_routing() {
+        use crate::runtime::artifact::{DecodeStateSpec, ShardingSpec};
+        use crate::runtime::tensor::DType;
+        let fake = |k: &str| (k.to_string(), std::path::PathBuf::from("/dev/null"));
+        let mut a = toy_artifact();
+        // Whole-model split-decode contract (the fallback path).
+        a.decode_state.push(DecodeStateSpec {
+            name: "kv".into(),
+            shape: vec![8, 8],
+            dtype: DType::F32,
+        });
+        a.hlo_files.push(fake("decode_token"));
+        a.hlo_files.push(fake("prefill"));
+        let s = Session::new(a.clone(), 0);
+        assert!(s.has_split_decode());
+        assert!(!s.has_sharded_decode(2), "no sharding entry declared");
+
+        a.sharding = Some(ShardingSpec { tp: 2 });
+        let s = Session::new(a.clone(), 0);
+        assert!(!s.has_sharded_decode(2), "declared but shard executables missing");
+
+        for i in 0..2 {
+            a.hlo_files.push(fake(&format!("decode_token/shard{i}")));
+            a.hlo_files.push(fake(&format!("prefill/shard{i}")));
+        }
+        let mut s = Session::new(a, 0);
+        assert!(s.has_sharded_decode(2));
+        assert!(!s.has_sharded_decode(4), "width mismatch degrades to whole-model");
+        assert!(!s.has_sharded_decode(1), "tp<2 is never a group");
+
+        assert_eq!(s.shard_kind("decode_token"), "decode_token", "unbound: plain names");
+        s.bind_shard(1);
+        assert_eq!(s.shard_kind("decode_token"), "decode_token/shard1");
+        assert_eq!(s.shard_kind("prefill"), "prefill/shard1");
+        assert_eq!(
+            s.shard_kind("train_step"),
+            "train_step",
+            "no shard variant shipped: whole-model fallback"
+        );
     }
 
     #[test]
