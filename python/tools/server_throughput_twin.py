@@ -150,6 +150,16 @@ SWAP_MAX_ERR = 0.25            # DeployOptions::max_err
 SWAP_LAT_FACTOR = 8.0          # DeployOptions::lat_factor
 SWAP_HOLD_S = 15.0             # DeployOptions::hold_ms
 BAD_VERSION_SALT = 0x0BAD5EED0BAD5EED  # coordinator::server constant
+# §L12 TP-vs-DP crossover A/B shape (bench --tp / --tp-kill-call
+# defaults plus the CollectiveSpec knobs the bench pins per point).
+TP = 2
+TP_KILL_CALL = 40
+TP_DMODEL = 1024
+TP_ELEM_BYTES = 2
+TP_LATENCY_NS = 500
+TP_SYNCS_PER_STEP = 12
+TP_PARTITIONED_FRAC = 0.85
+TP_LIGHT_CLIENTS = 1
 
 
 class Rng:
@@ -590,6 +600,13 @@ class Stats:
         self.retries = 0
         self.restarts = 0
         self.failed = 0
+        # §L12 execution-group telemetry: devices counts every worker
+        # incarnation's group width (a whole-model replica is 1);
+        # collectives/collective_ns count all-reduce rounds and their
+        # modeled wire+latency time.
+        self.devices = 0
+        self.collectives = 0
+        self.collective_ns = 0
         # §L8 SpecMeter mirror.
         self.drafted = 0
         self.accepted = 0
@@ -675,7 +692,8 @@ class Stats:
 
 def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                dec_len=DEC_LEN, gamma=0, paged=None, trace_mode=False,
-               tenants=None, autoscale=0, queue_cap=0):
+               tenants=None, autoscale=0, queue_cap=0, clients=0, tp=0,
+               collective=None, sleepy=False):
     """One serving configuration. Request record (mirrors the Rust
     Admitted/ledger entry): (t0, admitted, reply, length, gen_len,
     attempts, row_hash, chunk_hashes, tenant, deadline). ``fault``
@@ -689,6 +707,29 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
     SimPoolSpec: {"page_size": p, "pool_pages": n, "prefix_cache":
     bool} switches the continuous replicas onto the §L9 paged path
     (per-replica page pool, pool-aware admission, prefix reuse).
+
+    §L12: ``tp`` >= 2 with a ``collective`` dict (CollectiveSpec-shaped:
+    d_model/active_width/elem_bytes/link_gbps/latency_ns/syncs_per_step/
+    partitioned_frac) turns each worker into a tp-way execution group —
+    one thread standing in for tp lockstep shards, exactly like the
+    Rust sim group: the partitioned share of per-token compute divides
+    by tp (``CollectiveSpec::compute_scale``), every prefill/decode
+    step pays ``syncs_per_step`` ring all-reduce rounds over the full
+    static geometry (``step_collective_ns``: bytes = tokens *
+    active_width * elem_bytes, time = latency * 2(tp-1) + bytes *
+    (2(tp-1)/tp) / link), and a fault kill takes the whole group down
+    atomically (the twin's worker IS the group). ``clients`` overrides
+    the closed-loop client count (0 = the CLIENTS default).
+
+    ``sleepy`` replaces the spin-precise ``nsleep`` on replica cost
+    sleeps with a plain ``time.sleep``. Spin loops hold the GIL, so
+    two replicas decoding concurrently serialize each other — which
+    would erase the DP arm's real 2x-slot capacity advantage in the
+    §L12 peak A/B. A plain sleep releases the GIL (true replica
+    parallelism) at the price of per-step wakeup jitter; the
+    saturated peak arms amortize that jitter, the latency-sensitive
+    single-client light arms keep the spin (only one replica thread
+    is ever hot there, so the GIL never bites).
 
     §L10: ``trace_mode`` treats ``workload`` as `load_trace` output and
     replays it open-loop (a feeder thread paces arrivals to the trace
@@ -709,8 +750,43 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
     stats = Stats()
     if paged is not None and continuous:
         stats.pool_capacity = paged["pool_pages"]
-    n_clients = 1 if trace_mode else CLIENTS
+    n_clients = clients if clients > 0 else (1 if trace_mode else CLIENTS)
     slots_n = slots if slots > 0 else BATCH_SIZE
+    # §L12 execution-group cost model (SimSpec::sharded_leader +
+    # ShardGroup::sync): partitioned per-token compute divides by tp,
+    # dispatch/draft costs stay whole, and each engine step charges
+    # syncs_per_step all-reduce rounds.
+    group_tp = tp if tp >= 2 and collective is not None else 1
+    cscale = 1.0
+    if group_tp >= 2:
+        pf = collective["partitioned_frac"]
+        cscale = (1.0 - pf) + pf / group_tp
+    t_ns = int(TOKEN_NS * cscale)
+    dt_ns = int(DTOKEN_NS * cscale)
+
+    def sync_ns(tokens, steps=1):
+        """CollectiveSpec::step_collective_ns x steps, with the round
+        counters accrued on the shared stats (the Rust group flushes
+        the same totals at worker exit)."""
+        if group_tp < 2:
+            return 0
+        hops = 2 * (group_tp - 1)
+        byts = tokens * collective["active_width"] * collective["elem_bytes"]
+        wire = byts * (hops / group_tp) / (collective["link_gbps"] * 1e9) * 1e9
+        rounds = collective["syncs_per_step"] * steps
+        ns = int(rounds * (collective["latency_ns"] * hops + wire))
+        with stats.lock:
+            stats.collectives += rounds
+            stats.collective_ns += ns
+        return ns
+
+    def csleep(ns):
+        # Replica cost sleep: spin-precise by default; GIL-releasing
+        # plain sleep under ``sleepy`` (see the docstring above).
+        if sleepy:
+            time.sleep(ns / 1e9)
+        else:
+            nsleep(ns)
     state = {
         "live": set(range(max(replicas, 1))),
         "restarts_left": RESTARTS,
@@ -742,6 +818,8 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
         # every decode step for every row, early exit or not.
         calls = [0]
         bump = make_bump(rid, calls)
+        with stats.lock:
+            stats.devices += group_tp
         while True:
             job = job_q.get()
             if job is None:
@@ -753,9 +831,9 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
             except InjectedKill:
                 exit_q.put(("crash", rid, [(bucket, r) for r in group]))
                 return
-            nsleep(TOKEN_NS * BATCH_SIZE * bucket + dec_len * (
-                DSTEP_NS + DTOKEN_NS * BATCH_SIZE
-            ))
+            csleep(t_ns * BATCH_SIZE * bucket + dec_len * (
+                DSTEP_NS + dt_ns * BATCH_SIZE
+            ) + sync_ns(BATCH_SIZE * bucket) + sync_ns(BATCH_SIZE, dec_len))
             now = time.monotonic()
             with stats.lock:
                 stats.batches += 1
@@ -775,6 +853,8 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
         # mid-prefill + active slots) is reported back for requeue.
         calls = [0]
         bump = make_bump(rid, calls)
+        with stats.lock:
+            stats.devices += group_tp
         pending = deque()          # (bucket, req)
         active = [None] * slots_n  # [req, emitted, bucket]
         admitting = []             # (bucket, req) group mid-prefill
@@ -896,7 +976,8 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                     if not admitting:
                         continue
                     bump()
-                    nsleep(DSTEP_NS + TOKEN_NS * (len(admitting) * bucket - group_saved))
+                    csleep(DSTEP_NS + t_ns * (len(admitting) * bucket - group_saved)
+                           + sync_ns(len(admitting) * bucket - group_saved))
                     with stats.lock:
                         stats.batches += 1
                         stats.total_fill += len(admitting)
@@ -941,9 +1022,9 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                     # token, truncated at EOS (gen_len) / dec_len
                     # exactly like plain decode.
                     bump()
-                    nsleep(gamma * (DRAFT_STEP_NS + DRAFT_TOKEN_NS * slots_n))
+                    csleep(gamma * (DRAFT_STEP_NS + DRAFT_TOKEN_NS * slots_n))
                     bump()
-                    nsleep(DSTEP_NS + DTOKEN_NS * slots_n)
+                    csleep(DSTEP_NS + dt_ns * slots_n + sync_ns(slots_n))
                     now = time.monotonic()
                     with stats.lock:
                         stats.decode_steps += 1
@@ -973,7 +1054,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                 else:
                     # One fused decode iteration over the slot geometry.
                     bump()
-                    nsleep(DSTEP_NS + DTOKEN_NS * slots_n)
+                    csleep(DSTEP_NS + dt_ns * slots_n + sync_ns(slots_n))
                     now = time.monotonic()
                     with stats.lock:
                         stats.decode_steps += 1
@@ -1898,7 +1979,14 @@ def row(mode, replicas, qps, stats):
         "p50_ms": round(percentile(stats.latency_ms, 50), 2),
         "p95_ms": round(percentile(stats.latency_ms, 95), 2),
         "p99_ms": round(percentile(stats.latency_ms, 99), 2),
+        "devices": stats.devices,
     }
+    if stats.collectives:
+        r.update({
+            "collectives": stats.collectives,
+            "collective_ns": stats.collective_ns,
+            "mean_allreduce_ns": round(stats.collective_ns / stats.collectives, 1),
+        })
     if stats.pool_capacity:
         r.update({
             "pool_capacity": stats.pool_capacity,
@@ -2235,6 +2323,175 @@ def main():
             "version_failed": [dep["versions"][v]["failed"] for v in vs],
         }
 
+    # §L12 equal-device TP-vs-DP crossover A/B (mirrors the bench's tp
+    # section). One TP-way execution group (replicas=1, tp=TP → TP
+    # devices) against TP whole-model DP replicas (replicas=TP, tp=0 →
+    # TP devices) at two load levels: the full client pool (peak —
+    # DP's independent step streams win QPS) and a single closed-loop
+    # client (light — one request in flight at a time, so the arms
+    # compare pure per-request service time; the fused step runs the
+    # full static slot geometry, so per-step speed is all that matters
+    # and the group's sharded compute wins p95 while collectives stay
+    # cheaper than the compute they shave). A single light client also
+    # keeps exactly one cost-spinning replica thread alive at a time —
+    # with concurrent spinners the GIL serializes the DP arm's two
+    # replicas into a latency tax the one-thread TP group never pays,
+    # which would hand TP the light arm for the wrong reason.
+    # The 2x2 grid crosses AltUp's narrow active block
+    # (payload d_model/4 per token) against a dense-widened baseline
+    # (payload d_model) on a fast and a constrained link.
+    def tp_coll(active_width, link_gbps):
+        return {
+            "active_width": active_width,
+            "elem_bytes": TP_ELEM_BYTES,
+            "link_gbps": link_gbps,
+            "latency_ns": TP_LATENCY_NS,
+            "syncs_per_step": TP_SYNCS_PER_STEP,
+            "partitioned_frac": TP_PARTITIONED_FRAC,
+        }
+
+    tp_full = REQUESTS >= 256
+    lat_n = min(max(REQUESTS // 2, TP_LIGHT_CLIENTS), len(workload))
+    lworkload = workload[:lat_n]
+    # Whole-model single-device references: the token-parity oracle
+    # for every arm (sharding changes timing, never tokens) and the
+    # 1-device latency baseline.
+    rq, rstats = run_config(workload, 1, bucketed=True, continuous=True,
+                            sleepy=True)
+    lrq, lrstats = run_config(lworkload, 1, bucketed=True, continuous=True,
+                              clients=TP_LIGHT_CLIENTS)
+
+    tp_points = []
+    tp_by = {}
+    for pname, active_width, link_gbps in (
+        ("altup-25g", TP_DMODEL // 4, 25.0),
+        ("dense-25g", TP_DMODEL, 25.0),
+        ("altup-2g", TP_DMODEL // 4, 2.0),
+        ("dense-2g", TP_DMODEL, 2.0),
+    ):
+        coll = tp_coll(active_width, link_gbps)
+        tpq, tps = run_config(workload, 1, bucketed=True, continuous=True,
+                              tp=TP, collective=coll, sleepy=True)
+        dpq, dps = run_config(workload, TP, bucketed=True, continuous=True,
+                              sleepy=True)
+        tlq, tls = run_config(lworkload, 1, bucketed=True, continuous=True,
+                              clients=TP_LIGHT_CLIENTS, tp=TP, collective=coll)
+        dlq, dls = run_config(lworkload, TP, bucketed=True, continuous=True,
+                              clients=TP_LIGHT_CLIENTS)
+        assert tps.tokens_generated == rstats.tokens_generated, (
+            pname, tps.tokens_generated, rstats.tokens_generated)
+        assert dps.tokens_generated == rstats.tokens_generated, (
+            pname, dps.tokens_generated, rstats.tokens_generated)
+        assert tls.tokens_generated == lrstats.tokens_generated, (
+            pname, tls.tokens_generated, lrstats.tokens_generated)
+        assert dls.tokens_generated == lrstats.tokens_generated, (
+            pname, dls.tokens_generated, lrstats.tokens_generated)
+        assert tps.devices == dps.devices, (pname, tps.devices, dps.devices)
+        assert tps.collectives > 0 and dps.collectives == 0, (
+            pname, tps.collectives, dps.collectives)
+        mean_ar = tps.collective_ns / max(tps.collectives, 1)
+        tp_p95 = percentile(tls.latency_ms, 95)
+        dp_p95 = percentile(dls.latency_ms, 95)
+        print(
+            f"tp{TP}-{pname}: peak {tpq:.1f} vs dp {dpq:.1f} qps | light p95 "
+            f"{tp_p95:.2f} vs dp {dp_p95:.2f} ms | allreduce {mean_ar / 1e3:.1f} us"
+        )
+        tp_by[pname] = (tpq, dpq, tp_p95, dp_p95, mean_ar)
+        tp_points.append({
+            "point": pname,
+            "active_width": active_width,
+            "link_gbps": link_gbps,
+            "tp_peak": row("cont-tp", 1, tpq, tps),
+            "dp_peak": row("cont-dp", TP, dpq, dps),
+            "tp_light": row("cont-tp", 1, tlq, tls),
+            "dp_light": row("cont-dp", TP, dlq, dls),
+            "peak_qps_dp_over_tp": round(dpq / tpq if tpq else 0.0, 3),
+            "light_p95_tp_over_dp": round(tp_p95 / dp_p95 if dp_p95 else 0.0, 3),
+            "mean_allreduce_ns": round(mean_ar, 1),
+        })
+
+    cross = tp_by["altup-25g"]
+    altup_slow = tp_by["altup-2g"]
+    dense_slow = tp_by["dense-2g"]
+    print(
+        f"tp{TP} crossover @altup-25g: light p95 dp {cross[3]:.2f} -> tp "
+        f"{cross[2]:.2f} ms | peak tp {cross[0]:.1f} vs dp {cross[1]:.1f} qps | "
+        f"slow-link p95 ratio altup {altup_slow[2] / max(altup_slow[3], 1e-9):.2f} "
+        f"dense {dense_slow[2] / max(dense_slow[3], 1e-9):.2f} | allreduce "
+        f"{altup_slow[4] / 1e3:.1f} vs {dense_slow[4] / 1e3:.1f} us"
+    )
+    if tp_full:
+        # §L12 acceptance bars (mirror the bench's ensure! block).
+        assert cross[1] > cross[0], ("dp peak qps", cross[1], cross[0])
+        assert cross[2] < cross[3], ("tp light p95", cross[2], cross[3])
+        assert altup_slow[2] < altup_slow[3], (
+            "altup slow link", altup_slow[2], altup_slow[3])
+        assert dense_slow[2] > dense_slow[3], (
+            "dense slow link", dense_slow[2], dense_slow[3])
+        assert altup_slow[4] < 0.7 * dense_slow[4], (
+            "allreduce payload", altup_slow[4], dense_slow[4])
+
+    # Shard-kill chaos arm: one shard of the only group dies mid-run
+    # (the group thread IS the tp-way lockstep unit, so a shard kill
+    # is a group kill); §L7 requeues the in-flight work once, respawns
+    # a full group, and token parity holds through the restart.
+    tcq, tcs = run_config(
+        workload, 1, bucketed=True, continuous=True, tp=TP,
+        collective=tp_coll(TP_DMODEL // 4, 25.0), sleepy=True,
+        fault={"kill_replica": 0, "kill_after_calls": TP_KILL_CALL})
+    print(
+        f"tp{TP} shard-kill@{TP_KILL_CALL}: {tcs.retries} requeued, "
+        f"{tcs.restarts} restarts, {tcs.failed} failed, devices {tcs.devices} "
+        f"(respawn re-counts the group), parity "
+        f"{tcs.tokens_generated == rstats.tokens_generated}"
+    )
+    assert tcs.restarts >= 1, tcs.restarts
+    assert tcs.retries >= 1, tcs.retries
+    if tp_full:
+        assert tcs.failed == 0, tcs.failed
+        assert tcs.tokens_generated == rstats.tokens_generated, (
+            tcs.tokens_generated, rstats.tokens_generated)
+
+    tp_doc = {
+        "tp": TP,
+        "d_model": TP_DMODEL,
+        "elem_bytes": TP_ELEM_BYTES,
+        "latency_ns": TP_LATENCY_NS,
+        "syncs_per_step": TP_SYNCS_PER_STEP,
+        "partitioned_frac": TP_PARTITIONED_FRAC,
+        "clients_peak": CLIENTS,
+        "clients_light": TP_LIGHT_CLIENTS,
+        "requests_light": lat_n,
+        "bars_enforced": tp_full,
+        "single_reference_peak": row("cont-single", 1, rq, rstats),
+        "single_reference_light": row("cont-single", 1, lrq, lrstats),
+        "points": tp_points,
+        "crossover": {
+            "point": "altup-25g",
+            "dp_wins_peak_qps": cross[1] > cross[0],
+            "tp_wins_light_p95": cross[2] < cross[3],
+        },
+        "slow_link": {
+            "altup_point": "altup-2g",
+            "dense_point": "dense-2g",
+            "tp_still_ahead_on_altup": altup_slow[2] < altup_slow[3],
+            "tp_behind_on_dense": dense_slow[2] > dense_slow[3],
+            "mean_allreduce_ratio_altup_over_dense": round(
+                altup_slow[4] / max(dense_slow[4], 1e-9), 3),
+        },
+        "chaos": {
+            "kill_shard": 1,
+            "kill_at_call": TP_KILL_CALL,
+            "qps": round(tcq, 1),
+            "requests": tcs.requests,
+            "failed": tcs.failed,
+            "retries": tcs.retries,
+            "restarts": tcs.restarts,
+            "devices": tcs.devices,
+            "token_parity": tcs.tokens_generated == rstats.tokens_generated,
+        },
+    }
+
     doc = {
         "bench": "server_throughput",
         "engine": "sim",
@@ -2328,6 +2585,7 @@ def main():
             "gold_p95_ms_qos": round(gold_p95, 2),
             "gold_p95_ms_qos_off": round(o_gold_p95, 2),
         },
+        "tp": tp_doc,
         "deploy": {
             "trace": QOS_TRACE,
             "trace_requests": len(trace),

@@ -35,6 +35,11 @@
 //!                      burst trace (default 1; 0 skips)
 //!   --swap-kill-call <c> §L11 chaos arm: engine call at which replica
 //!                      1 is killed mid-rollout (default 220)
+//!   --tp <n>           §L12 group width for the equal-device TP-vs-DP
+//!                      crossover A/B (default 2; 0 skips)
+//!   --tp-kill-call <c> §L12 shard-kill chaos arm: engine call at
+//!                      which shard 1 of the TP group is killed
+//!                      (default 40)
 //!
 //! Besides the L5/L6 grid, the bench runs a §L7 **degraded-mode A/B**
 //! (sim engine only): `cont x4` healthy vs `cont x4` with one replica
@@ -93,8 +98,8 @@
 use altup::coordinator::admission::{parse_tenant_spec, TenantSpec};
 use altup::coordinator::deploy::{DeployOptions, DeployStatus};
 use altup::coordinator::server::{
-    BadVersionMode, ChaosSpec, EngineSpec, Request, ServerHandle, ServerOptions, ServerStats,
-    SimPoolSpec, SimSpec, SimSwapSpec,
+    BadVersionMode, ChaosSpec, CollectiveSpec, EngineSpec, Request, ServerHandle, ServerOptions,
+    ServerStats, SimPoolSpec, SimSpec, SimSwapSpec,
 };
 use altup::runtime::artifact::load_named;
 use altup::runtime::pages::pages_for;
@@ -470,6 +475,19 @@ fn row_json(mode: &str, replicas: usize, qps: f64, stats: &ServerStats) -> Json 
         ("p95_ms", Json::num(stats.p95_ms())),
         ("p99_ms", Json::num(stats.p99_ms())),
     ];
+    // §L12: device accounting plus collective telemetry whenever the
+    // fleet ran sharded execution groups.
+    fields.push(("devices", Json::num(stats.devices as f64)));
+    if stats.collectives > 0 {
+        fields.extend([
+            ("collectives", Json::num(stats.collectives as f64)),
+            ("collective_ns", Json::num(stats.collective_ns as f64)),
+            (
+                "mean_allreduce_ns",
+                Json::num(stats.collective_ns as f64 / stats.collectives as f64),
+            ),
+        ]);
+    }
     // §L9: pool telemetry rides along whenever the run served paged.
     if stats.pool.active() {
         fields.extend([
@@ -509,6 +527,8 @@ fn main() -> anyhow::Result<()> {
     let qos_kill_call = args.u64_or("qos-kill-call", 600);
     let swap_ab = args.usize_or("swap", 1) != 0;
     let swap_kill_call = args.u64_or("swap-kill-call", 220);
+    let tp = args.usize_or("tp", 2);
+    let tp_kill_call = args.u64_or("tp-kill-call", 40);
     let json_out = args.has("json") || args.has("json-path");
 
     // Pick the backend: real artifact when present and executable,
@@ -552,6 +572,10 @@ fn main() -> anyhow::Result<()> {
         // turn speculation on in the plain grid/degraded rows; only
         // the dedicated spec A/B (below) overrides this.
         spec_gamma: 0,
+        // §L12: likewise pinned so an exported ALTUP_TP cannot shard
+        // the legacy rows; only the TP A/B (below) overrides this.
+        tp: 0,
+        tp_groups: usize::MAX,
         ..Default::default()
     };
 
@@ -1232,6 +1256,306 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // §L12 equal-device TP-vs-DP crossover A/B (sim engine only — the
+    // collective cost model rides on SimSpec). One tp-way execution
+    // group (`replicas=1, tp` → tp devices) against tp whole-model DP
+    // replicas (`replicas=tp, tp=0` → tp devices) on identical
+    // workloads at two load levels:
+    //   peak  — the full closed-loop client pool saturates the fleet.
+    //           DP wins: tp independent step streams beat one faster
+    //           stream on capacity.
+    //   light — a single closed-loop client: one request in flight at
+    //           a time, so the arms compare pure per-request service
+    //           time. The fused step runs the full static
+    //           slot geometry, so per-step cost is occupancy-
+    //           independent and per-step speed is all that matters:
+    //           the group's sharded compute wins p95 — as long as the
+    //           collectives stay cheaper than the compute they shave.
+    // The 2x2 cost-model grid crosses AltUp's narrow active block
+    // (all-reduce payload `d_model/4` per token) against a
+    // dense-widened baseline (payload `d_model`) on a fast and a
+    // constrained link: on the slow link the dense baseline's
+    // collectives eat the sharding win (group p95 falls behind DP)
+    // while the AltUp payload keeps the group ahead — the paper's
+    // activation-width asymmetry, measured on the wire.
+    // Bars (full runs): token parity everywhere, the crossover at the
+    // altup/fast point (DP peak QPS wins, group light-load p95 wins),
+    // group still ahead on the slow link under the AltUp payload but
+    // behind under the dense payload, and per-round all-reduce cost
+    // under 0.7x of dense at the same link. A shard-kill chaos arm
+    // pins the §L7 contract at group granularity: one follower dies,
+    // the whole group requeues and respawns as a group, and token
+    // parity holds through the restart.
+    let mut tp_row: Option<Json> = None;
+    if let (EngineSpec::Sim(base), true) = (&engine, tp >= 2) {
+        let full = requests >= 256;
+        const TP_DMODEL: usize = 1024;
+        // Hermetic: pin every collective knob per point and keep the
+        // pool off, so an exported ALTUP_TP_* / ALTUP_POOL_PAGES
+        // cannot skew the A/B.
+        let mk_spec = |active_width: usize, link_gbps: f64| {
+            let mut s = base.clone();
+            s.pool = None;
+            s.collective = CollectiveSpec {
+                d_model: TP_DMODEL,
+                active_width,
+                elem_bytes: 2,
+                link_bps: link_gbps * 1e9,
+                latency_ns: 500,
+                syncs_per_step: 12,
+                partitioned_frac: 0.85,
+            };
+            s
+        };
+        let mk_opts = |replicas: usize, tpv: usize| {
+            let mut o = opts(replicas, true, true);
+            o.tp = tpv;
+            o.tp_groups = usize::MAX;
+            o
+        };
+        let lat_clients = 1usize;
+        let lat_n = (requests / 2).max(lat_clients).min(prompts.len());
+        let lprompts = &prompts[..lat_n];
+
+        // Whole-model single-device references: the token-parity
+        // oracle for every arm (sharding changes timing, never
+        // tokens) and the 1-device latency baseline.
+        let ref_spec = EngineSpec::Sim(mk_spec(TP_DMODEL / 4, 25.0));
+        let (ref_q, ref_stats) = drive(&ref_spec, mk_opts(1, 0), &prompts, clients)?;
+        report("single-ref (peak)", ref_q, &ref_stats);
+        let (lref_q, lref_stats) = drive(&ref_spec, mk_opts(1, 0), lprompts, lat_clients)?;
+        report("single-ref (light)", lref_q, &lref_stats);
+
+        struct TpPoint {
+            name: &'static str,
+            tp_peak_qps: f64,
+            dp_peak_qps: f64,
+            tp_light_p95: f64,
+            dp_light_p95: f64,
+            mean_allreduce_ns: f64,
+            json: Json,
+        }
+        let mut pts: Vec<TpPoint> = Vec::new();
+        for (name, active_width, link_gbps) in [
+            ("altup-25g", TP_DMODEL / 4, 25.0),
+            ("dense-25g", TP_DMODEL, 25.0),
+            ("altup-2g", TP_DMODEL / 4, 2.0),
+            ("dense-2g", TP_DMODEL, 2.0),
+        ] {
+            let spec = EngineSpec::Sim(mk_spec(active_width, link_gbps));
+            let (tq, ts) = drive(&spec, mk_opts(1, tp), &prompts, clients)?;
+            let (dq, ds) = drive(&spec, mk_opts(tp, 0), &prompts, clients)?;
+            let (tlq, tls) = drive(&spec, mk_opts(1, tp), lprompts, lat_clients)?;
+            let (dlq, dls) = drive(&spec, mk_opts(tp, 0), lprompts, lat_clients)?;
+            report(&format!("tp{tp}-{name} (peak)"), tq, &ts);
+            report(&format!("dp{tp}-{name} (peak)"), dq, &ds);
+            report(&format!("tp{tp}-{name} (light)"), tlq, &tls);
+            report(&format!("dp{tp}-{name} (light)"), dlq, &dls);
+            anyhow::ensure!(
+                ts.tokens_generated == ref_stats.tokens_generated
+                    && ds.tokens_generated == ref_stats.tokens_generated,
+                "{name}: sharding changed tokens at peak (tp {} / dp {} vs single {})",
+                ts.tokens_generated,
+                ds.tokens_generated,
+                ref_stats.tokens_generated
+            );
+            anyhow::ensure!(
+                tls.tokens_generated == lref_stats.tokens_generated
+                    && dls.tokens_generated == lref_stats.tokens_generated,
+                "{name}: sharding changed tokens at light load (tp {} / dp {} vs single {})",
+                tls.tokens_generated,
+                dls.tokens_generated,
+                lref_stats.tokens_generated
+            );
+            anyhow::ensure!(
+                ts.devices == ds.devices,
+                "{name}: arms are not equal-device (tp {} vs dp {})",
+                ts.devices,
+                ds.devices
+            );
+            anyhow::ensure!(
+                ts.collectives > 0 && ds.collectives == 0,
+                "{name}: collective accounting sits on the wrong arm \
+                 (tp {} rounds, dp {} rounds)",
+                ts.collectives,
+                ds.collectives
+            );
+            let mean_ar = ts.collective_ns as f64 / ts.collectives.max(1) as f64;
+            let json = Json::obj(vec![
+                ("point", Json::str(name)),
+                ("active_width", Json::num(active_width as f64)),
+                ("link_gbps", Json::num(link_gbps)),
+                ("tp_peak", row_json("cont-tp", 1, tq, &ts)),
+                ("dp_peak", row_json("cont-dp", tp, dq, &ds)),
+                ("tp_light", row_json("cont-tp", 1, tlq, &tls)),
+                ("dp_light", row_json("cont-dp", tp, dlq, &dls)),
+                ("peak_qps_dp_over_tp", Json::num(if tq > 0.0 { dq / tq } else { 0.0 })),
+                (
+                    "light_p95_tp_over_dp",
+                    Json::num(if dls.p95_ms() > 0.0 { tls.p95_ms() / dls.p95_ms() } else { 0.0 }),
+                ),
+                ("mean_allreduce_ns", Json::num(mean_ar)),
+            ]);
+            pts.push(TpPoint {
+                name,
+                tp_peak_qps: tq,
+                dp_peak_qps: dq,
+                tp_light_p95: tls.p95_ms(),
+                dp_light_p95: dls.p95_ms(),
+                mean_allreduce_ns: mean_ar,
+                json,
+            });
+        }
+        let pt = |n: &str| pts.iter().find(|p| p.name == n).expect("tp point recorded");
+        let (cross, altup_slow, dense_slow) = (pt("altup-25g"), pt("altup-2g"), pt("dense-2g"));
+        println!(
+            "tp{tp} crossover @altup-25g: light p95 dp {:.2} -> tp {:.2} ms | peak \
+             tp {:.1} vs dp {:.1} qps | slow-link p95 ratio altup {:.2} dense {:.2} | \
+             allreduce {:.1} vs {:.1} us",
+            cross.dp_light_p95,
+            cross.tp_light_p95,
+            cross.tp_peak_qps,
+            cross.dp_peak_qps,
+            altup_slow.tp_light_p95 / altup_slow.dp_light_p95.max(1e-9),
+            dense_slow.tp_light_p95 / dense_slow.dp_light_p95.max(1e-9),
+            altup_slow.mean_allreduce_ns / 1e3,
+            dense_slow.mean_allreduce_ns / 1e3,
+        );
+        if full {
+            anyhow::ensure!(
+                cross.dp_peak_qps > cross.tp_peak_qps,
+                "crossover broke: dp{tp} peak {:.1} qps did not beat tp{tp} {:.1}",
+                cross.dp_peak_qps,
+                cross.tp_peak_qps
+            );
+            anyhow::ensure!(
+                cross.tp_light_p95 < cross.dp_light_p95,
+                "crossover broke: tp{tp} light p95 {:.2} ms did not beat dp{tp} {:.2}",
+                cross.tp_light_p95,
+                cross.dp_light_p95
+            );
+            anyhow::ensure!(
+                altup_slow.tp_light_p95 < altup_slow.dp_light_p95,
+                "altup payload no longer keeps tp{tp} ahead on the slow link \
+                 ({:.2} vs {:.2} ms p95)",
+                altup_slow.tp_light_p95,
+                altup_slow.dp_light_p95
+            );
+            anyhow::ensure!(
+                dense_slow.tp_light_p95 > dense_slow.dp_light_p95,
+                "dense payload unexpectedly survives the slow link \
+                 ({:.2} vs {:.2} ms p95)",
+                dense_slow.tp_light_p95,
+                dense_slow.dp_light_p95
+            );
+            anyhow::ensure!(
+                altup_slow.mean_allreduce_ns < 0.7 * dense_slow.mean_allreduce_ns,
+                "narrow active block stopped shrinking the wire: {:.0} vs {:.0} ns/round",
+                altup_slow.mean_allreduce_ns,
+                dense_slow.mean_allreduce_ns
+            );
+        }
+
+        // Shard-kill chaos arm: follower shard 1 of the only group
+        // dies mid-run; §L7 must treat the whole group as the failure
+        // unit — requeue everything in flight once, respawn a full
+        // group (shape carried by the supervisor), finish with token
+        // parity intact.
+        let mut cspec = mk_spec(TP_DMODEL / 4, 25.0);
+        cspec.fault.kill_replica = Some(0);
+        cspec.fault.kill_after_calls = tp_kill_call;
+        cspec.fault.kill_shard = 1;
+        let (cq, cs) = drive(&EngineSpec::Sim(cspec), mk_opts(1, tp), &prompts, clients)?;
+        report(&format!("tp{tp}-shard-kill"), cq, &cs);
+        println!(
+            "tp{tp} shard-kill@{tp_kill_call}: {} requeued, {} restarts, {} failed, \
+             devices {} (respawn re-counts the group), parity {}",
+            cs.retries,
+            cs.restarts,
+            cs.failed,
+            cs.devices,
+            cs.tokens_generated == ref_stats.tokens_generated,
+        );
+        anyhow::ensure!(
+            cs.restarts >= 1,
+            "shard kill did not respawn the execution group"
+        );
+        anyhow::ensure!(cs.retries >= 1, "group kill requeued nothing");
+        if full {
+            anyhow::ensure!(
+                cs.failed == 0,
+                "{} requests lost to the shard-kill chaos arm",
+                cs.failed
+            );
+            anyhow::ensure!(
+                cs.tokens_generated == ref_stats.tokens_generated,
+                "shard-kill respawn broke token parity ({} vs {})",
+                cs.tokens_generated,
+                ref_stats.tokens_generated
+            );
+        }
+
+        let dp_wins_peak = cross.dp_peak_qps > cross.tp_peak_qps;
+        let tp_wins_light = cross.tp_light_p95 < cross.dp_light_p95;
+        let slow_altup_ahead = altup_slow.tp_light_p95 < altup_slow.dp_light_p95;
+        let slow_dense_behind = dense_slow.tp_light_p95 > dense_slow.dp_light_p95;
+        let allreduce_ratio =
+            altup_slow.mean_allreduce_ns / dense_slow.mean_allreduce_ns.max(1e-9);
+        tp_row = Some(Json::obj(vec![
+            ("tp", Json::num(tp as f64)),
+            ("d_model", Json::num(TP_DMODEL as f64)),
+            ("elem_bytes", Json::num(2.0)),
+            ("latency_ns", Json::num(500.0)),
+            ("syncs_per_step", Json::num(12.0)),
+            ("partitioned_frac", Json::num(0.85)),
+            ("clients_peak", Json::num(clients as f64)),
+            ("clients_light", Json::num(lat_clients as f64)),
+            ("requests_light", Json::num(lat_n as f64)),
+            ("bars_enforced", Json::Bool(full)),
+            ("single_reference_peak", row_json("cont-single", 1, ref_q, &ref_stats)),
+            ("single_reference_light", row_json("cont-single", 1, lref_q, &lref_stats)),
+            ("points", Json::Arr(pts.into_iter().map(|p| p.json).collect())),
+            (
+                "crossover",
+                Json::obj(vec![
+                    ("point", Json::str("altup-25g")),
+                    ("dp_wins_peak_qps", Json::Bool(dp_wins_peak)),
+                    ("tp_wins_light_p95", Json::Bool(tp_wins_light)),
+                ]),
+            ),
+            (
+                "slow_link",
+                Json::obj(vec![
+                    ("altup_point", Json::str("altup-2g")),
+                    ("dense_point", Json::str("dense-2g")),
+                    ("tp_still_ahead_on_altup", Json::Bool(slow_altup_ahead)),
+                    ("tp_behind_on_dense", Json::Bool(slow_dense_behind)),
+                    (
+                        "mean_allreduce_ratio_altup_over_dense",
+                        Json::num(allreduce_ratio),
+                    ),
+                ]),
+            ),
+            (
+                "chaos",
+                Json::obj(vec![
+                    ("kill_shard", Json::num(1.0)),
+                    ("kill_at_call", Json::num(tp_kill_call as f64)),
+                    ("qps", Json::num(cq)),
+                    ("requests", Json::num(cs.requests as f64)),
+                    ("failed", Json::num(cs.failed as f64)),
+                    ("retries", Json::num(cs.retries as f64)),
+                    ("restarts", Json::num(cs.restarts as f64)),
+                    ("devices", Json::num(cs.devices as f64)),
+                    (
+                        "token_parity",
+                        Json::Bool(cs.tokens_generated == ref_stats.tokens_generated),
+                    ),
+                ]),
+            ),
+        ]));
+    }
+
     let (bq1, bp1) = find("batch", 1);
     let (cq1, cp1) = find("cont", 1);
     let (cq4, _) = find("cont", 4);
@@ -1301,6 +1625,9 @@ fn main() -> anyhow::Result<()> {
         }
         if let Some(q) = qos_row {
             top.push(("qos", q));
+        }
+        if let Some(t) = tp_row {
+            top.push(("tp", t));
         }
         if let Some(s) = swap_row {
             top.push(("deploy", s));

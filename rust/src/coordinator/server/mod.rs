@@ -904,6 +904,77 @@ mod tests {
         assert!(spec.fault.extra_kills.is_empty());
     }
 
+    /// §L12: the collective cost model stays bit-stable — the bench
+    /// and the python twin mirror these exact formulas, so any drift
+    /// here silently desynchronizes the two producers.
+    #[test]
+    fn collective_cost_model_pins() {
+        let c = quiet_spec().collective;
+        // Unsharded is free.
+        assert_eq!(c.allreduce_ns(1, 64), 0);
+        assert_eq!(c.step_collective_ns(0, 64), 0);
+        assert_eq!(c.compute_scale(1), 1.0);
+        // tp=2 over 8 fused tokens: 2 ring hops of latency plus
+        // 2(tp-1)/tp = 1.0 of the active-block payload across one link.
+        let bytes = (8 * 256 * 2) as f64;
+        let wire = (bytes * 1.0 / 25.0e9 * 1e9).round() as u64;
+        assert_eq!(c.allreduce_ns(2, 8), 1500 * 2 + wire);
+        assert_eq!(c.step_collective_ns(2, 8), 12 * c.allreduce_ns(2, 8));
+        // The AltUp asymmetry: a dense-widened baseline syncs all of
+        // d_model, 4x the active subblock's wire bytes (ratio-checked
+        // to stay clear of per-call rounding).
+        let dense = CollectiveSpec { active_width: c.d_model, ..c.clone() };
+        let dense_wire = (dense.allreduce_ns(2, 8) - 1500 * 2) as f64;
+        assert!(
+            (dense_wire / wire as f64 - 4.0).abs() < 0.01,
+            "payload scales with the synced width ({dense_wire} vs {wire})"
+        );
+        // Per-shard compute: partitioned fraction splits, the
+        // replicated predict/correct remainder is paid in full.
+        assert!((c.compute_scale(2) - 0.575).abs() < 1e-12);
+        assert!((c.compute_scale(4) - (0.15 + 0.85 / 4.0)).abs() < 1e-12);
+    }
+
+    /// §L12: kill triggers route to exactly one shard of a group while
+    /// cost/stuck injection rides the cost-carrying leader, and
+    /// `unit_tp` shapes a heterogeneous TP/DP fleet.
+    #[test]
+    fn fault_shard_routing_and_fleet_shape() {
+        let fault = FaultSpec {
+            kill_replica: Some(3),
+            kill_after_calls: 9,
+            extra_kills: vec![(4, 2)],
+            stuck_every: 5,
+            stuck_step_ns: 7,
+            kill_shard: 1,
+            ..FaultSpec::default()
+        };
+        let leader = fault.for_shard(0, 2);
+        assert_eq!(leader.kill_replica, None, "kill routed away from the leader");
+        assert_eq!(leader.stuck_every, 5, "stuck injection rides the leader");
+        assert_eq!(leader.stuck_step_ns, 7);
+        let follower = fault.for_shard(1, 2);
+        assert_eq!(follower.kill_replica, Some(3));
+        assert_eq!(follower.kill_after_calls, 9);
+        assert_eq!(follower.extra_kills, vec![(4, 2)]);
+        assert_eq!(follower.stuck_every, 0, "followers carry no cost model");
+        // An out-of-range shard target clamps to the last shard.
+        let clamped = FaultSpec { kill_shard: 9, ..fault.clone() };
+        assert_eq!(clamped.for_shard(1, 2).kill_replica, Some(3));
+        assert_eq!(clamped.for_shard(0, 2).kill_replica, None);
+
+        let opts = ServerOptions {
+            tp: 2,
+            tp_groups: 2,
+            replicas: 4,
+            ..ServerOptions::default()
+        };
+        let shape: Vec<usize> = (0..4).map(|i| opts.unit_tp(i)).collect();
+        assert_eq!(shape, vec![2, 2, 1, 1], "first tp_groups units shard, the rest stay DP");
+        let unsharded = ServerOptions { tp: 1, ..opts };
+        assert_eq!(unsharded.unit_tp(0), 1, "tp<2 never shards");
+    }
+
     /// §L10 satellite: the respawn backoff doubles per consecutive
     /// crash with jitter bounded to [0.75, 1.25) of nominal, so delay
     /// ranges for successive crashes never overlap.

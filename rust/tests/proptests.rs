@@ -212,6 +212,11 @@ fn prop_exactly_one_terminal_response_under_swap_chaos() {
         kill: bool,
         shed: bool,
         bad: bool,
+        /// §L12: serve the fleet as 2-way execution groups instead of
+        /// whole-model singles — swaps, kills (landed on a follower
+        /// shard), sheds, and pool pressure must all compose with
+        /// group-granular supervision.
+        tp: bool,
         requests: usize,
     }
 
@@ -226,6 +231,7 @@ fn prop_exactly_one_terminal_response_under_swap_chaos() {
                 kill: rng.range(0, 2) == 1,
                 shed: rng.range(0, 2) == 1,
                 bad: rng.range(0, 2) == 1,
+                tp: rng.range(0, 2) == 1,
                 requests: rng.range(6, 17),
             }
         }
@@ -235,6 +241,7 @@ fn prop_exactly_one_terminal_response_under_swap_chaos() {
                 Scenario { kill: false, ..v.clone() },
                 Scenario { shed: false, ..v.clone() },
                 Scenario { bad: false, ..v.clone() },
+                Scenario { tp: false, ..v.clone() },
                 Scenario { replicas: 1, ..v.clone() },
                 Scenario { requests: (v.requests / 2).max(2), ..v.clone() },
             ]
@@ -263,6 +270,11 @@ fn prop_exactly_one_terminal_response_under_swap_chaos() {
         if s.kill {
             spec.fault =
                 FaultSpec { kill_replica: Some(0), kill_after_calls: 2, ..FaultSpec::default() };
+            if s.tp {
+                // Land the kill on the follower shard: the whole group
+                // must still die (and respawn) atomically.
+                spec.fault.kill_shard = 1;
+            }
         }
         let options = ServerOptions {
             batch_window: Duration::from_millis(1),
@@ -291,6 +303,8 @@ fn prop_exactly_one_terminal_response_under_swap_chaos() {
                 lat_factor: 1e9,
                 hold_ms: 3000,
             },
+            tp: if s.tp { 2 } else { 0 },
+            tp_groups: usize::MAX,
         };
         let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec.clone()), options);
 

@@ -9,8 +9,8 @@
 use altup::coordinator::admission::parse_tenant_spec;
 use altup::coordinator::deploy::{DeployOptions, DeployStatus};
 use altup::coordinator::server::{
-    BadVersionMode, EngineSpec, FailReason, Request, Response, ServerHandle, ServerOptions,
-    ServerStats, SimPoolSpec, SimSpec, SimSwapSpec, ROUTER_ID,
+    BadVersionMode, CollectiveSpec, EngineSpec, FailReason, Request, Response, ServerHandle,
+    ServerOptions, ServerStats, SimPoolSpec, SimSpec, SimSwapSpec, ROUTER_ID,
 };
 use altup::data::tokenizer::EOS;
 use altup::runtime::session::{bucket_for, bucket_lengths};
@@ -69,6 +69,11 @@ fn opts(replicas: usize, bucketed: bool) -> ServerOptions {
         // and an idle-promotion clock fast enough that rollouts on an
         // idle fleet finish in tens of milliseconds.
         deploy: deploy_opts(),
+        // §L12: whole-model fleet by default (env-free so an exported
+        // ALTUP_TP cannot shard these tests); the TP tests below opt
+        // in through `topts`.
+        tp: 0,
+        tp_groups: usize::MAX,
     }
 }
 
@@ -1359,4 +1364,130 @@ fn shutdown_during_rollout_aborts_cleanly() {
     assert_eq!(stats.deploy.aborted, 1, "aborted rollout reported in shutdown stats");
     assert!(stats.summary().contains("1 aborted"), "surfaced in the summary");
     assert_eq!(stats.requests, 2, "pre-rollout traffic fully accounted");
+}
+
+// ---------------------------------------------------------------------------
+// §L12: tensor-parallel execution groups.
+// ---------------------------------------------------------------------------
+
+/// §L12 pinned link model (env-free so an exported `ALTUP_TP_*` knob
+/// cannot skew these tests): the bench's altup-25g operating point.
+fn pinned_collective() -> CollectiveSpec {
+    CollectiveSpec {
+        d_model: 1024,
+        active_width: 256,
+        elem_bytes: 2,
+        link_bps: 25.0e9,
+        latency_ns: 500,
+        syncs_per_step: 12,
+        partitioned_frac: 0.85,
+    }
+}
+
+/// `sim_spec` with the pinned collective model attached.
+fn tp_spec() -> SimSpec {
+    SimSpec { collective: pinned_collective(), ..sim_spec() }
+}
+
+/// One 2-way TP group serving the whole fleet.
+fn topts(slots: usize) -> ServerOptions {
+    ServerOptions { tp: 2, ..copts(1, slots) }
+}
+
+/// §L12 acceptance pin: sharding a continuous-batching unit into a
+/// 2-way group must not change a single sampled token vs the same
+/// model served whole, while the collective/device ledgers diverge
+/// exactly as the topology says they should.
+#[test]
+fn tp_group_matches_single_replica_tokens_and_accounts_collectives() {
+    let lens = [1usize, 5, 8, 17, 33, 64, 80];
+
+    let single = ServerHandle::spawn_engine(EngineSpec::Sim(tp_spec()), copts(1, 4));
+    let want = collect(&single, &lens);
+    let sstats = single.shutdown().unwrap();
+    assert_eq!(sstats.devices, 1, "a whole-model unit is one device");
+    assert_eq!(sstats.collectives, 0, "an unsharded model never syncs");
+    assert_eq!(sstats.collective_ns, 0);
+
+    let group = ServerHandle::spawn_engine(EngineSpec::Sim(tp_spec()), topts(4));
+    let got = collect(&group, &lens);
+    let gstats = group.shutdown().unwrap();
+    assert_eq!(got, want, "sharding must not change sampled tokens");
+    assert_eq!(gstats.devices, 2, "one 2-way group occupies two devices");
+    assert!(gstats.collectives > 0, "every sharded step pays its all-reduce rounds");
+    assert!(gstats.collective_ns > 0, "pinned nonzero link latency accrues sim time");
+    assert_eq!(gstats.requests, lens.len());
+    assert_eq!(gstats.failed, 0);
+}
+
+/// §L12 x §L8/§L9: TP parity holds on the paged-pool and speculative
+/// decode paths too — the sharded leader carries the same slot
+/// geometry, draft schedule, and page ledger as a whole-model unit.
+#[test]
+fn tp_parity_holds_on_paged_and_speculative_paths() {
+    let lens = [2usize, 9, 16, 31, 40, 64];
+
+    let plain = ServerHandle::spawn_engine(EngineSpec::Sim(tp_spec()), copts(1, 4));
+    let want = collect(&plain, &lens);
+    plain.shutdown().unwrap();
+
+    // Paged decode state behind a 2-way group.
+    let paged = SimSpec { collective: pinned_collective(), ..paged_spec(16, 64, false) };
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(paged), topts(4));
+    let got = collect(&server, &lens);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(got, want, "paged TP decode is token-identical to whole-model");
+    assert_eq!(stats.devices, 2);
+    assert!(stats.collectives > 0);
+
+    // Speculative decode (γ=4) behind a 2-way group.
+    let server = ServerHandle::spawn_engine(
+        EngineSpec::Sim(tp_spec()),
+        ServerOptions { tp: 2, ..sopts(1, 4, 4) },
+    );
+    let got = collect(&server, &lens);
+    let stats = server.shutdown().unwrap();
+    assert_eq!(got, want, "speculative TP decode is token-identical to whole-model");
+    assert_eq!(stats.devices, 2);
+    assert!(stats.collectives > 0, "draft/verify rounds still pay the verify collectives");
+}
+
+/// §L12 x §L7: killing a FOLLOWER shard takes the whole group down
+/// atomically — the supervisor respawns a full 2-way group, requeues
+/// the in-flight work, and every request completes with the healthy
+/// run's exact tokens.
+#[test]
+fn tp_follower_shard_kill_respawns_the_whole_group() {
+    let prompts: Vec<Vec<i32>> = (0..24).map(|i| prompt(1 + (i * 7) % 64)).collect();
+
+    let healthy = {
+        let server = ServerHandle::spawn_engine(EngineSpec::Sim(tp_spec()), topts(4));
+        let out = drive_concurrent(&server, &prompts, 4);
+        server.shutdown().unwrap();
+        out
+    };
+
+    let mut spec = tp_spec();
+    // The kill schedule routes to shard 1 (`FaultSpec::for_shard`), so
+    // the panic fires on a follower, not the cost-carrying leader —
+    // the group must still die and respawn as one unit.
+    spec.fault.kill_replica = Some(0);
+    spec.fault.kill_after_calls = 2;
+    spec.fault.kill_shard = 1;
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), topts(4));
+    let responses = drive_concurrent(&server, &prompts, 4);
+    let stats = server.shutdown().expect("group crash recovers cleanly");
+
+    for (resp, h) in responses.iter().zip(healthy.iter()) {
+        assert!(
+            resp.failure.is_none(),
+            "one group crash within the retry budget must not fail requests: {:?}",
+            resp.failure
+        );
+        assert_eq!(&resp.tokens, &h.tokens, "post-respawn decode is deterministic");
+    }
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.restarts, 1, "exactly one replacement group spawned");
+    assert!(stats.retries >= 1, "the dead group's in-flight work was requeued");
+    assert_eq!(stats.devices, 4, "crashed + replacement incarnations: two devices each");
 }
