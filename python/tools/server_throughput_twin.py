@@ -67,6 +67,16 @@ budget, terminal responses for every request):
   zero canary passes, and every arm's response-token hash matches the
   no-swap arm (rollback pins old-version outputs).
 
+- §L13 span tracing: the twin mirrors ``coordinator::trace``'s
+  attribution protocol — per-request phase boundaries (router pop,
+  QoS release, prefill start/end, retirement) telescope over
+  [t0, retirement], so the five top-level phase durations sum to each
+  request's e2e latency exactly. Three A/Bs mirror the bench's trace
+  section: mark-recording overhead (tracing-on >= 0.97x untraced QPS),
+  burst-replay phase attribution QoS-on vs QoS-off (all requests and
+  the slowest-5% tail), and a tp2 slow-link pair where AltUp's narrow
+  sync is a smaller allreduce share of engine time than dense.
+
 This lets the serving-policy numbers (continuous vs batch QPS, p95,
 early-exit savings, occupancy, degraded-mode QPS) be measured on
 machines without a cargo toolchain or a PJRT backend. The Rust bench is
@@ -585,6 +595,108 @@ class InjectedKill(Exception):
     injected panic)."""
 
 
+# §L13 phase taxonomy (mirrors coordinator::trace::Phase). The first
+# five are top-level: for one request they tile [t0, retirement] with
+# no gaps or overlap, so per-request shares sum to 1.0 exactly. The
+# rest are nested aggregates / events; the twin's per-request ledger
+# only records the top-level five (like the Rust span ring), with
+# prefill/decode-iteration/allreduce also kept as fleet aggregates.
+PHASE_NAMES = [
+    "admission-queue", "qos-queue", "router-dispatch", "prefill", "decode",
+    "decode-iteration", "spec-draft", "spec-verify", "allreduce",
+    "deploy-drain", "ladder-level",
+]
+TOP_PHASES = PHASE_NAMES[:5]
+
+
+def new_tracer():
+    """Collector handed to ``run_config(tracer=...)``: per-request
+    timestamp marks (keyed by the reply queue's id), fleet-aggregate
+    modeled phase ns, and ladder level transitions."""
+    return {
+        "req": {},
+        "phase_ns": {"prefill": 0, "decode-iteration": 0},
+        "ladder": [],
+    }
+
+
+def trace_attrs(tracer):
+    """Per-request phase ledgers from the collector's marks (mirrors
+    ``trace::per_request``). Missing marks telescope: a request shed at
+    admission contributes only admission-queue time."""
+    out = []
+    for e in tracer["req"].values():
+        popped = e.get("popped")
+        if popped is None:
+            continue
+        released = e.get("released", popped)
+        p0 = e.get("prefill0", released)
+        p1 = e.get("prefill1", p0)
+        # A request that never reached prefill has no decode span; its
+        # ledger ends at the last recorded queue boundary, exactly like
+        # the Rust span ring (a shed leaves only its queue spans).
+        if "prefill1" in e:
+            end = e.get("done", p1)
+        elif "released" in e:
+            end = e["released"]
+        else:
+            end = popped
+        out.append({
+            "tenant": e.get("tenant", 0),
+            "e2e_s": max(end - e["t0"], 0.0),
+            "phases": {
+                "admission-queue": max(popped - e["t0"], 0.0),
+                "qos-queue": max(released - popped, 0.0),
+                "router-dispatch": max(p0 - released, 0.0),
+                "prefill": max(p1 - p0, 0.0),
+                "decode": max(end - p1, 0.0),
+            },
+        })
+    return out
+
+
+def trace_attribute(attrs, top_frac):
+    """Summed phase ledger over the slowest ``top_frac`` of requests
+    by e2e (mirrors ``trace::attribute``; 1.0 = every request)."""
+    if not attrs:
+        return {"requests": 0, "e2e_s": 0.0,
+                "phases": {k: 0.0 for k in TOP_PHASES}}
+    s = sorted(attrs, key=lambda a: -a["e2e_s"])
+    frac = min(max(top_frac, 0.0), 1.0)
+    take = max(1, min(len(s), int(len(s) * frac + 0.999999)))
+    sel = s[:take]
+    return {
+        "requests": take,
+        "e2e_s": sum(a["e2e_s"] for a in sel),
+        "phases": {k: sum(a["phases"][k] for a in sel) for k in TOP_PHASES},
+    }
+
+
+def trace_shares(attr):
+    """Top-level phase shares (mirrors ``Attribution::shares``): every
+    phase name keyed, nested phases 0 in the per-request ledger."""
+    total = sum(attr["phases"].values())
+    sh = {k: 0.0 for k in PHASE_NAMES}
+    if total <= 0:
+        return sh
+    for k, v in attr["phases"].items():
+        sh[k] = round(v / total, 4)
+    return sh
+
+
+def trace_span_count(tracer):
+    """Recorded interval count (mirrors ``TraceStats::span_count``:
+    one span per closed top-level interval plus ladder events)."""
+    n = len(tracer["ladder"])
+    for e in tracer["req"].values():
+        for k in ("popped", "released", "prefill0", "prefill1"):
+            if k in e:
+                n += 1
+        if "done" in e and "prefill1" in e:
+            n += 1
+    return n
+
+
 class Stats:
     def __init__(self):
         self.requests = 0
@@ -693,7 +805,7 @@ class Stats:
 def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                dec_len=DEC_LEN, gamma=0, paged=None, trace_mode=False,
                tenants=None, autoscale=0, queue_cap=0, clients=0, tp=0,
-               collective=None, sleepy=False):
+               collective=None, sleepy=False, tracer=None):
     """One serving configuration. Request record (mirrors the Rust
     Admitted/ledger entry): (t0, admitted, reply, length, gen_len,
     attempts, row_hash, chunk_hashes, tenant, deadline). ``fault``
@@ -813,6 +925,16 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
     def slo_of(t):
         return tenants[t]["slo_ms"] if tenants and t < len(tenants) else 0
 
+    def tmark(req, key, t=None):
+        # §L13: stamp one phase boundary on the request's trace entry
+        # (entries are created at router pop; the GIL makes per-key
+        # dict writes safe across the router/replica threads).
+        if tracer is None:
+            return
+        e = tracer["req"].get(id(req[2]))
+        if e is not None:
+            e[key] = time.monotonic() if t is None else t
+
     def replica_batch(rid):
         # Run-to-completion decode_step loop: full-geometry prefill plus
         # every decode step for every row, early exit or not.
@@ -927,6 +1049,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                             pending.popleft()
                             with stats.lock:
                                 stats.note_failure(req[8], shed=True)
+                            tmark(req, "done")
                             req[2].put(False)
                             continue
                         if pool is None:
@@ -940,6 +1063,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                             pending.popleft()
                             with stats.lock:
                                 stats.note_failure(req[8])
+                            tmark(req, "done")
                             req[2].put(False)
                             continue
                         chunks = req[7] if cache is not None else []
@@ -976,8 +1100,20 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                     if not admitting:
                         continue
                     bump()
-                    csleep(DSTEP_NS + t_ns * (len(admitting) * bucket - group_saved)
-                           + sync_ns(len(admitting) * bucket - group_saved))
+                    pre_ns = (DSTEP_NS
+                              + t_ns * (len(admitting) * bucket - group_saved)
+                              + sync_ns(len(admitting) * bucket - group_saved))
+                    pre0 = time.monotonic()
+                    csleep(pre_ns)
+                    if tracer is not None:
+                        # §L13: router-dispatch closes / prefill opens at
+                        # pre0 for every rider; the aggregate takes the
+                        # modeled cost (the Rust breakdown's engine time).
+                        pre1 = time.monotonic()
+                        tracer["phase_ns"]["prefill"] += pre_ns
+                        for _b, rq_ in admitting:
+                            tmark(rq_, "prefill0", pre0)
+                            tmark(rq_, "prefill1", pre1)
                     with stats.lock:
                         stats.batches += 1
                         stats.total_fill += len(admitting)
@@ -999,6 +1135,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                             active[s] = None
                             with stats.lock:
                                 stats.note_failure(req[8], shed=True)
+                            tmark(req, "done", now)
                             req[2].put(False)
                 n_live = sum(1 for a in active if a is not None)
                 if n_live == 0:
@@ -1054,7 +1191,10 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                 else:
                     # One fused decode iteration over the slot geometry.
                     bump()
-                    csleep(DSTEP_NS + dt_ns * slots_n + sync_ns(slots_n))
+                    it_ns = DSTEP_NS + dt_ns * slots_n + sync_ns(slots_n)
+                    csleep(it_ns)
+                    if tracer is not None:
+                        tracer["phase_ns"]["decode-iteration"] += it_ns
                     now = time.monotonic()
                     with stats.lock:
                         stats.decode_steps += 1
@@ -1071,6 +1211,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                                     now - req[0], emitted, dec_len - emitted,
                                     min(req[3], bucket), req[8], slo_of(req[8]),
                                 )
+                            tmark(req, "done", now)
                             req[2].put(True)
         except InjectedKill:
             unfinished = list(pending) + list(admitting)
@@ -1120,6 +1261,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
         # §L10: admission front-end + the ladder's replica budget.
         qos = Admission(tenants, queue_cap, time.monotonic()) if tenants else None
         autoscale_left = [autoscale]
+        qos_level = [0]  # §L13: last observed ladder level
         while True:
             # Supervision pass.
             while True:
@@ -1165,6 +1307,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                 for rec in qos.take_expired(nowq):
                     with stats.lock:
                         stats.note_failure(rec[8], shed=True)
+                    tmark(rec, "done", nowq)
                     rec[2].put(False)
                 for bucket in list(groups):
                     kept = []
@@ -1172,6 +1315,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                         if req[9] is not None and nowq > req[9]:
                             with stats.lock:
                                 stats.note_failure(req[8], shed=True)
+                            tmark(req, "done", nowq)
                             req[2].put(False)
                         else:
                             kept.append(req)
@@ -1199,11 +1343,17 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                     # scale_down is a no-op here: ladder replicas simply
                     # exit at drain (the Rust router parks one with a
                     # SCALE_DOWN sentinel job instead).
+                if tracer is not None and qos.level != qos_level[0]:
+                    # §L13: one event per ladder transition (the Rust
+                    # router records a LadderLevel span per ±1 step).
+                    tracer["ladder"].append((time.monotonic(), qos.level))
+                    qos_level[0] = qos.level
                 room = max(len(state["live"]) * BATCH_SIZE * 2 - downstream, 0)
                 if disconnected:
                     room = qos.queued  # drain: flush everything parked
                 for rec in qos.release(room):
                     rec = rec[:1] + (time.monotonic(),) + rec[2:]
+                    tmark(rec, "released", rec[1])
                     bucket = bucket_for(rec[3], ENC_LEN) if bucketed else ENC_LEN
                     groups.setdefault(bucket, []).append(rec)
             # Flush pass (mirrors the Rust router): every ship is a
@@ -1284,6 +1434,13 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                 t0, reply, length, gen_len, h, chunks, tenant = msg
                 rec = (t0, time.monotonic(), reply, length, gen_len, 0, h,
                        chunks, tenant, None)
+                if tracer is not None:
+                    # §L13: admission-queue closes at the router pop;
+                    # without a QoS front-end the release is the pop.
+                    e = {"t0": t0, "popped": rec[1], "tenant": tenant}
+                    if qos is None:
+                        e["released"] = rec[1]
+                    tracer["req"][id(reply)] = e
                 if qos is None:
                     bucket = bucket_for(length, ENC_LEN) if bucketed else ENC_LEN
                     groups.setdefault(bucket, []).append(rec)
@@ -1295,6 +1452,7 @@ def run_config(workload, replicas, bucketed, continuous, slots=0, fault=None,
                     if verdict == "shed":
                         with stats.lock:
                             stats.note_failure(out[8], shed=True)
+                        tmark(out, "done")
                         out[2].put(False)
 
     def client(c):
@@ -2452,6 +2610,131 @@ def main():
         assert tcs.tokens_generated == rstats.tokens_generated, (
             tcs.tokens_generated, rstats.tokens_generated)
 
+    # §L13 span-trace A/Bs (mirror of the bench's trace section): (a)
+    # tracing-on vs tracing-off QPS on the closed-loop cont x2 workload
+    # (best-of-2 per arm — mark recording must be ~free); (b) the burst
+    # trace replayed healthy QoS-on vs QoS-off at full tracing, every
+    # request's e2e attributed to the five top-level phases (the shares
+    # sum to 1.0 by the tiling invariant); (c) a tp2 slow-link pair
+    # where the narrow AltUp payload puts a smaller allreduce share of
+    # engine time on the wire than the dense payload.
+    def best_traced(with_tracer):
+        best = None
+        for _ in range(2):
+            tr = new_tracer() if with_tracer else None
+            q, s = run_config(workload, 2, bucketed=True, continuous=True,
+                              tracer=tr)
+            if best is None or q > best[0]:
+                best = (q, s, tr)
+        return best
+
+    toff_q, _, _ = best_traced(False)
+    ton_q, _, ton_tr = best_traced(True)
+    overhead_ratio = ton_q / toff_q if toff_q else 0.0
+    print(f"trace overhead: off {toff_q:.1f} qps, on {ton_q:.1f} qps "
+          f"({overhead_ratio:.3f}x, {trace_span_count(ton_tr)} spans)")
+    assert overhead_ratio >= 0.97, overhead_ratio
+
+    qtr_on = new_tracer()
+    qtr_off = new_tracer()
+    tq_on, _ = run_config(trace, 2, bucketed=True, continuous=True,
+                          paged=qos_paged, trace_mode=True,
+                          tenants=QOS_TENANTS, autoscale=QOS_AUTOSCALE,
+                          queue_cap=QOS_QUEUE_CAP, tracer=qtr_on)
+    tq_off, _ = run_config(trace, 2, bucketed=True, continuous=True,
+                           paged=qos_paged, trace_mode=True, tracer=qtr_off)
+
+    def trace_arm(label, qps_, tr):
+        attrs = trace_attrs(tr)
+        assert attrs, label
+        all_a = trace_attribute(attrs, 1.0)
+        tail = trace_attribute(attrs, 0.05)
+        # Top-level shares sum to 1.0 by construction (the phase
+        # boundaries telescope); a zero total would mean no request
+        # ever closed a phase.
+        assert sum(all_a["phases"].values()) > 0.0, label
+        lad = tr["ladder"]
+        esc = sum(1 for i, (_, lv) in enumerate(lad)
+                  if lv > (lad[i - 1][1] if i else 0))
+        mean_ms = all_a["e2e_s"] / max(all_a["requests"], 1) * 1e3
+        tail_ms = tail["e2e_s"] / max(tail["requests"], 1) * 1e3
+        print(f"trace {label}: {qps_:.1f} qps, {all_a['requests']} attributed, "
+              f"mean e2e {mean_ms:.1f} ms, slowest-5% {tail_ms:.1f} ms, "
+              f"{esc} ladder escalations")
+        return {
+            "qps": round(qps_, 1),
+            "requests_attributed": all_a["requests"],
+            "dropped_spans": 0,
+            "ladder_escalations": esc,
+            "mean_e2e_ms": round(mean_ms, 2),
+            "tail_e2e_ms": round(tail_ms, 2),
+            "shares_all": trace_shares(all_a),
+            "shares_tail_p95": trace_shares(tail),
+        }, tail
+
+    ta_on, tail_on = trace_arm("qos-on", tq_on, qtr_on)
+    ta_off, tail_off = trace_arm("qos-off", tq_off, qtr_off)
+
+    def queue_share(tail):
+        sh = trace_shares(tail)
+        return (sh["admission-queue"] + sh["qos-queue"]
+                + sh["router-dispatch"])
+
+    print(f"trace tail queue-wait share (admission+qos+dispatch): "
+          f"qos-on {queue_share(tail_on) * 100:.0f}%, "
+          f"qos-off {queue_share(tail_off) * 100:.0f}%")
+
+    trn = new_tracer()
+    trd = new_tracer()
+    tnq, tns = run_config(workload, 1, bucketed=True, continuous=True, tp=TP,
+                          collective=tp_coll(TP_DMODEL // 4, 2.0), sleepy=True,
+                          tracer=trn)
+    tdq, tds = run_config(workload, 1, bucketed=True, continuous=True, tp=TP,
+                          collective=tp_coll(TP_DMODEL, 2.0), sleepy=True,
+                          tracer=trd)
+
+    def ar_share(stats_, tr):
+        eng = tr["phase_ns"]["prefill"] + tr["phase_ns"]["decode-iteration"]
+        return stats_.collective_ns / max(eng, 1)
+
+    share_n = ar_share(tns, trn)
+    share_d = ar_share(tds, trd)
+    assert tns.collectives > 0 and tds.collectives > 0
+    # §L13 acceptance bar (mirrors the bench's ensure!): the narrow
+    # active block's sync is a smaller share of engine time.
+    assert share_n < share_d, (share_n, share_d)
+    print(f"trace tp{TP}@2g allreduce share of engine time: "
+          f"altup {share_n * 100:.1f}% vs dense {share_d * 100:.1f}% "
+          f"({tnq:.1f} vs {tdq:.1f} qps)")
+
+    trace_doc = {
+        "sample": 1.0,
+        "bars_enforced": True,
+        "overhead": {
+            "qps_off": round(toff_q, 1),
+            "qps_on": round(ton_q, 1),
+            "ratio_on_over_off": round(overhead_ratio, 3),
+            "spans_recorded": trace_span_count(ton_tr),
+            "dropped_spans": 0,
+        },
+        "qos_on": ta_on,
+        "qos_off": ta_off,
+        "tail_queue_wait_share": {
+            "qos_on": round(queue_share(tail_on), 4),
+            "qos_off": round(queue_share(tail_off), 4),
+        },
+        "tp_slow_link": {
+            "tp": TP,
+            "d_model": TP_DMODEL,
+            "narrow_active_width": TP_DMODEL // 4,
+            "link_gbps": 2.0,
+            "qps_narrow": round(tnq, 1),
+            "qps_dense": round(tdq, 1),
+            "allreduce_share_narrow": round(share_n, 4),
+            "allreduce_share_dense": round(share_d, 4),
+        },
+    }
+
     tp_doc = {
         "tp": TP,
         "d_model": TP_DMODEL,
@@ -2609,6 +2892,7 @@ def main():
                 "bad_version_rollback": sw_bad[4] == sw_clean[4],
             },
         },
+        "trace": trace_doc,
         "producer": "python/tools/server_throughput_twin.py "
                     "(threaded twin; re-run `cargo bench --bench server_throughput -- --json` "
                     "on a cargo-enabled machine to overwrite with the Rust measurement)",

@@ -40,6 +40,15 @@
 //!   --tp-kill-call <c> §L12 shard-kill chaos arm: engine call at
 //!                      which shard 1 of the TP group is killed
 //!                      (default 40)
+//!   --trace-ab <0|1>   run the §L13 span-trace A/Bs: tracing-on vs
+//!                      tracing-off overhead, burst-replay phase
+//!                      attribution QoS-on vs QoS-off, and the
+//!                      slow-link allreduce-share pair (default 1;
+//!                      0 skips)
+//!   --trace-jsonl <p>  write the QoS-on attribution arm's spans +
+//!                      timeline windows as JSONL to <p> (the §L13
+//!                      trace contract the CI smoke validates and
+//!                      `main trace-report` renders)
 //!
 //! Besides the L5/L6 grid, the bench runs a §L7 **degraded-mode A/B**
 //! (sim engine only): `cont x4` healthy vs `cont x4` with one replica
@@ -82,6 +91,16 @@
 //! sheds absorbed by the lowest class, chaos goodput >= 0.8x of the
 //! clean QoS run — while the QoS-off arm shows gold collapsing.
 //!
+//! §L13 adds the **span-trace A/Bs** (sim engine only): tracing at
+//! sample 1.0 must keep >= 0.97x of the untraced QPS on the cont x2
+//! workload; the burst trace is replayed healthy QoS-on vs QoS-off
+//! with full tracing and every request's e2e latency attributed to
+//! the five top-level phases (the shares sum to 1.0 by the tiling
+//! invariant — see `coordinator::trace`); and a tp2 slow-link pair
+//! shows the narrow AltUp sync as a smaller aggregate allreduce
+//! share of engine time than the dense payload. `--trace-jsonl`
+//! exports the QoS-on arm's spans for `main trace-report`.
+//!
 //! Backend: when `make artifacts` has run AND a real PJRT backend is
 //! linked, the bench serves the micro-altup artifact; otherwise it
 //! falls back to the deterministic sim engine (prefill cost
@@ -101,6 +120,7 @@ use altup::coordinator::server::{
     BadVersionMode, ChaosSpec, CollectiveSpec, EngineSpec, Request, ServerHandle, ServerOptions,
     ServerStats, SimPoolSpec, SimSpec, SimSwapSpec,
 };
+use altup::coordinator::trace as trc;
 use altup::runtime::artifact::load_named;
 use altup::runtime::pages::pages_for;
 use altup::runtime::client::Client;
@@ -529,6 +549,7 @@ fn main() -> anyhow::Result<()> {
     let swap_kill_call = args.u64_or("swap-kill-call", 220);
     let tp = args.usize_or("tp", 2);
     let tp_kill_call = args.u64_or("tp-kill-call", 40);
+    let trace_ab = args.usize_or("trace-ab", 1) != 0;
     let json_out = args.has("json") || args.has("json-path");
 
     // Pick the backend: real artifact when present and executable,
@@ -1556,6 +1577,246 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // §L13 span-trace attribution + overhead A/B (sim engine only).
+    // Three sub-arms: (a) tracing-on vs tracing-off QPS on the
+    // closed-loop cont x2 workload — observability must be ~free;
+    // (b) the §L10 burst trace replayed healthy through the paged
+    // cont x2 fleet QoS-on vs QoS-off at sample 1.0, attributing the
+    // all-request mean and the slowest-5% tail to the five top-level
+    // phases (QoS moves tail queueing out of the FIFO dispatch path
+    // and into the visible qos-queue phase, shedding the rest);
+    // (c) a §L12 slow-link TP pair where the narrow AltUp sync shows
+    // up as a smaller allreduce share of engine time than dense.
+    let mut trace_row: Option<Json> = None;
+    if let (EngineSpec::Sim(base), true) = (&engine, trace_ab) {
+        let full_load = requests >= 256;
+        let full_trace = trace_limit == 0;
+
+        // (a) Overhead: identical workload, sample 0.0 vs 1.0; two
+        // runs per arm, best-of, to damp scheduler noise.
+        let traced_opts = |sample: f64| {
+            let mut o = opts(2, true, true);
+            o.trace_sample = sample;
+            o.trace_ring = 1 << 15;
+            o.trace_window_ms = 100;
+            o
+        };
+        let best = |sample: f64| -> anyhow::Result<(f64, ServerStats)> {
+            let (q1, s1) = drive(&engine, traced_opts(sample), &prompts, clients)?;
+            let (q2, s2) = drive(&engine, traced_opts(sample), &prompts, clients)?;
+            Ok(if q2 > q1 { (q2, s2) } else { (q1, s1) })
+        };
+        let (off_q, _) = best(0.0)?;
+        let (on_q, on_stats) = best(1.0)?;
+        let overhead_ratio = if off_q > 0.0 { on_q / off_q } else { 0.0 };
+        println!(
+            "trace overhead: off {off_q:.1} qps, on {on_q:.1} qps \
+             ({overhead_ratio:.3}x, {} spans, {} dropped)",
+            on_stats.trace.span_count(),
+            on_stats.trace.dropped_spans,
+        );
+        if full_load {
+            anyhow::ensure!(
+                overhead_ratio >= 0.97,
+                "full tracing cost more than 3% of throughput ({overhead_ratio:.3}x)"
+            );
+        }
+
+        // (b) Burst-replay attribution. Same fleet/pool/tenant shape
+        // as the §L10 clean arm, no chaos (a requeue would double-
+        // count a request's spans and muddy the phase ledger).
+        let trace_reqs = load_trace(&trace_path, vocab, trace_limit)?;
+        anyhow::ensure!(!trace_reqs.is_empty(), "empty trace {trace_path}");
+        let tenant_spec = "free:0:1:250:40:0;silver:1:2:0:0:4000;gold:2:4:0:0:1500";
+        let tenants = parse_tenant_spec(tenant_spec);
+        let mut qspec = base.clone();
+        qspec.pool =
+            Some(SimPoolSpec { page_size: 16, pool_pages: 96, prefix_cache: false });
+        let attr_opts = |with_tenants: bool| {
+            let mut o = opts(2, true, true);
+            o.queue_cap = 1024;
+            o.trace_sample = 1.0;
+            o.trace_ring = 1 << 17;
+            o.trace_window_ms = 100;
+            if with_tenants {
+                o.tenants = tenants.clone();
+            }
+            o
+        };
+        let (on_qps, qon) =
+            drive_trace(&EngineSpec::Sim(qspec.clone()), attr_opts(true), &trace_reqs, &tenants)?;
+        let (off_qps, qoff) =
+            drive_trace(&EngineSpec::Sim(qspec.clone()), attr_opts(false), &trace_reqs, &tenants)?;
+
+        let phase_shares = |a: &trc::Attribution| {
+            let sh = a.shares();
+            Json::obj(
+                trc::Phase::ALL
+                    .iter()
+                    .map(|p| (p.as_str(), Json::num(sh[p.index()])))
+                    .collect(),
+            )
+        };
+        let analyze = |label: &str,
+                       qps: f64,
+                       s: &ServerStats|
+         -> anyhow::Result<(Json, trc::Attribution)> {
+            let attrs = trc::per_request(s.trace.spans());
+            anyhow::ensure!(!attrs.is_empty(), "{label}: no traced requests");
+            let all = trc::attribute(&attrs, 1.0);
+            let tail = trc::attribute(&attrs, 0.05);
+            let top_sum: f64 = {
+                let sh = all.shares();
+                trc::Phase::TOP_LEVEL.iter().map(|p| sh[p.index()]).sum()
+            };
+            anyhow::ensure!(
+                (top_sum - 1.0).abs() < 1e-6,
+                "{label}: top-level phase shares sum to {top_sum:.6}, not 1.0"
+            );
+            let escalations = s
+                .trace
+                .spans()
+                .filter(|sp| sp.phase == trc::Phase::LadderLevel && sp.value > 0)
+                .count();
+            let mean_e2e_ms = all.e2e_ns as f64 / all.requests.max(1) as f64 / 1e6;
+            let tail_e2e_ms = tail.e2e_ns as f64 / tail.requests.max(1) as f64 / 1e6;
+            println!(
+                "trace {label}: {qps:.1} qps, {} attributed reqs, mean e2e \
+                 {mean_e2e_ms:.1} ms, slowest-5% e2e {tail_e2e_ms:.1} ms, \
+                 {escalations} ladder escalations, {} dropped spans",
+                all.requests,
+                s.trace.dropped_spans,
+            );
+            let row = Json::obj(vec![
+                ("qps", Json::num(qps)),
+                ("requests_attributed", Json::num(all.requests as f64)),
+                ("dropped_spans", Json::num(s.trace.dropped_spans as f64)),
+                ("ladder_escalations", Json::num(escalations as f64)),
+                ("mean_e2e_ms", Json::num(mean_e2e_ms)),
+                ("tail_e2e_ms", Json::num(tail_e2e_ms)),
+                ("shares_all", phase_shares(&all)),
+                ("shares_tail_p95", phase_shares(&tail)),
+            ]);
+            Ok((row, tail))
+        };
+        let (on_json, on_tail) = analyze("qos-on", on_qps, &qon)?;
+        let (off_json, off_tail) = analyze("qos-off", off_qps, &qoff)?;
+        let queue_share = |a: &trc::Attribution| {
+            let sh = a.shares();
+            sh[trc::Phase::AdmissionQueue.index()]
+                + sh[trc::Phase::QosQueue.index()]
+                + sh[trc::Phase::RouterDispatch.index()]
+        };
+        println!(
+            "trace tail queue-wait share (admission+qos+dispatch): qos-on {:.0}%, \
+             qos-off {:.0}%",
+            queue_share(&on_tail) * 100.0,
+            queue_share(&off_tail) * 100.0,
+        );
+        if let Some(p) = args.get("trace-jsonl") {
+            trc::write_jsonl(std::path::Path::new(p), &qon.trace, 1.0)?;
+            println!(
+                "trace: wrote {} spans + {} windows to {p}",
+                qon.trace.span_count(),
+                qon.trace.timeline.windows.len(),
+            );
+        }
+
+        // (c) Slow-link TP pair (§L12 geometry, 2 Gb/s link): the
+        // breakdown's aggregate allreduce wall-ns against traced
+        // engine time (prefill + decode iterations). The narrow
+        // active block must put a smaller share on the wire.
+        const TP_DMODEL: usize = 1024;
+        let mk_tp_spec = |active_width: usize| {
+            let mut s = base.clone();
+            s.pool = None;
+            s.collective = CollectiveSpec {
+                d_model: TP_DMODEL,
+                active_width,
+                elem_bytes: 2,
+                link_bps: 2e9,
+                latency_ns: 500,
+                syncs_per_step: 12,
+                partitioned_frac: 0.85,
+            };
+            s
+        };
+        let tp_opts = || {
+            let mut o = opts(1, true, true);
+            o.tp = 2;
+            o.tp_groups = usize::MAX;
+            o.trace_sample = 1.0;
+            o.trace_ring = 1 << 15;
+            o.trace_window_ms = 100;
+            o
+        };
+        let ar_share = |s: &ServerStats| {
+            let (ar, _) = s.trace.phases.get(trc::Phase::Allreduce);
+            let (pf, _) = s.trace.phases.get(trc::Phase::Prefill);
+            let (di, _) = s.trace.phases.get(trc::Phase::DecodeIter);
+            ar as f64 / (pf + di).max(1) as f64
+        };
+        let (nq, nstats) =
+            drive(&EngineSpec::Sim(mk_tp_spec(TP_DMODEL / 4)), tp_opts(), &prompts, clients)?;
+        let (dq, dstats) =
+            drive(&EngineSpec::Sim(mk_tp_spec(TP_DMODEL)), tp_opts(), &prompts, clients)?;
+        anyhow::ensure!(
+            nstats.collectives > 0 && dstats.collectives > 0,
+            "trace tp arms recorded no collective rounds"
+        );
+        let (narrow_share, dense_share) = (ar_share(&nstats), ar_share(&dstats));
+        println!(
+            "trace tp2@2g allreduce share of engine time: altup {:.1}% vs dense {:.1}% \
+             ({nq:.1} vs {dq:.1} qps)",
+            narrow_share * 100.0,
+            dense_share * 100.0,
+        );
+        if full_load {
+            anyhow::ensure!(
+                narrow_share < dense_share,
+                "narrow AltUp sync no longer shrinks the traced allreduce share \
+                 ({narrow_share:.3} vs {dense_share:.3})"
+            );
+        }
+
+        trace_row = Some(Json::obj(vec![
+            ("sample", Json::num(1.0)),
+            ("bars_enforced", Json::Bool(full_load && full_trace)),
+            (
+                "overhead",
+                Json::obj(vec![
+                    ("qps_off", Json::num(off_q)),
+                    ("qps_on", Json::num(on_q)),
+                    ("ratio_on_over_off", Json::num(overhead_ratio)),
+                    ("spans_recorded", Json::num(on_stats.trace.span_count() as f64)),
+                    ("dropped_spans", Json::num(on_stats.trace.dropped_spans as f64)),
+                ]),
+            ),
+            ("qos_on", on_json),
+            ("qos_off", off_json),
+            (
+                "tail_queue_wait_share",
+                Json::obj(vec![
+                    ("qos_on", Json::num(queue_share(&on_tail))),
+                    ("qos_off", Json::num(queue_share(&off_tail))),
+                ]),
+            ),
+            (
+                "tp_slow_link",
+                Json::obj(vec![
+                    ("tp", Json::num(2.0)),
+                    ("d_model", Json::num(TP_DMODEL as f64)),
+                    ("narrow_active_width", Json::num((TP_DMODEL / 4) as f64)),
+                    ("link_gbps", Json::num(2.0)),
+                    ("qps_narrow", Json::num(nq)),
+                    ("qps_dense", Json::num(dq)),
+                    ("allreduce_share_narrow", Json::num(narrow_share)),
+                    ("allreduce_share_dense", Json::num(dense_share)),
+                ]),
+            ),
+        ]));
+    }
+
     let (bq1, bp1) = find("batch", 1);
     let (cq1, cp1) = find("cont", 1);
     let (cq4, _) = find("cont", 4);
@@ -1631,6 +1892,9 @@ fn main() -> anyhow::Result<()> {
         }
         if let Some(s) = swap_row {
             top.push(("deploy", s));
+        }
+        if let Some(t) = trace_row {
+            top.push(("trace", t));
         }
         let doc = Json::obj(top);
         std::fs::write(&path, format!("{doc}\n"))?;

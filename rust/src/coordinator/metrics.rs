@@ -14,16 +14,32 @@ pub struct Record {
     pub values: BTreeMap<String, f64>,
 }
 
+/// How many records `MetricsLog` buffers before forcing the JSONL
+/// writer to disk (`ALTUP_METRICS_FLUSH_EVERY`). Flushing every record
+/// showed up in step-loop profiles once the steps themselves got cheap;
+/// the tail is never lost — `Drop` flushes whatever is pending.
+pub const DEFAULT_METRICS_FLUSH_EVERY: usize = 64;
+
 /// Accumulates records, keeps moving averages, writes JSONL.
 pub struct MetricsLog {
     pub records: Vec<Record>,
     file: Option<std::io::BufWriter<std::fs::File>>,
     started: Instant,
+    /// Records written since the last explicit flush.
+    pending: usize,
+    /// Flush cadence in records (≥ 1).
+    flush_every: usize,
 }
 
 impl MetricsLog {
     pub fn in_memory() -> MetricsLog {
-        MetricsLog { records: Vec::new(), file: None, started: Instant::now() }
+        MetricsLog {
+            records: Vec::new(),
+            file: None,
+            started: Instant::now(),
+            pending: 0,
+            flush_every: DEFAULT_METRICS_FLUSH_EVERY,
+        }
     }
 
     pub fn to_file(path: impl AsRef<Path>) -> anyhow::Result<MetricsLog> {
@@ -35,7 +51,28 @@ impl MetricsLog {
             records: Vec::new(),
             file: Some(std::io::BufWriter::new(file)),
             started: Instant::now(),
+            pending: 0,
+            flush_every: crate::util::env::usize_at_least(
+                "ALTUP_METRICS_FLUSH_EVERY",
+                1,
+                DEFAULT_METRICS_FLUSH_EVERY,
+            ),
         })
+    }
+
+    /// Override the flush cadence (tests use this instead of env vars;
+    /// clamped to ≥ 1).
+    pub fn set_flush_every(&mut self, every: usize) {
+        self.flush_every = every.max(1);
+    }
+
+    /// Force pending JSONL records to the OS. Called automatically
+    /// every `flush_every` records and on drop.
+    pub fn flush(&mut self) {
+        if let Some(f) = &mut self.file {
+            let _ = f.flush();
+        }
+        self.pending = 0;
     }
 
     pub fn log(&mut self, step: u64, pairs: &[(&str, f64)]) {
@@ -52,7 +89,10 @@ impl MetricsLog {
                 obj.insert(k.clone(), Json::Num(*v));
             }
             let _ = writeln!(f, "{}", Json::Obj(obj));
-            let _ = f.flush();
+            self.pending += 1;
+            if self.pending >= self.flush_every {
+                self.flush();
+            }
         }
         self.records.push(rec);
     }
@@ -83,6 +123,14 @@ impl MetricsLog {
             .iter()
             .filter_map(|r| r.values.get(key).map(|v| (r.step, *v)))
             .collect()
+    }
+}
+
+impl Drop for MetricsLog {
+    fn drop(&mut self) {
+        // Batched flushing must not cost the tail of a run: whatever
+        // the cadence left buffered goes out with the log.
+        self.flush();
     }
 }
 
@@ -197,6 +245,53 @@ impl LatencyHistogram {
         }
         Self::value(LAT_BUCKETS - 1)
     }
+
+    /// §L13 satellite: export the non-empty buckets as (upper edge,
+    /// count) pairs — the fixed-bucket wire format external dashboards
+    /// consume. Upper edges are the exact bucket boundaries
+    /// (`LAT_MIN_MS · 2^((i+1)/8)`), so any consumer can reconstruct
+    /// percentiles to within one bucket width of this histogram's own
+    /// estimate (pinned by a property test below).
+    pub fn to_buckets(&self) -> Vec<LatencyBucket> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| LatencyBucket {
+                upper_ms: LAT_MIN_MS * 2f64.powf((i as f64 + 1.0) / LAT_SUB as f64),
+                count: c,
+            })
+            .collect()
+    }
+
+    /// Nearest-rank percentile recomputed from an exported bucket list
+    /// (the consumer-side half of the `to_buckets` contract). Each
+    /// bucket contributes at its upper edge; an empty export reports
+    /// 0.0 like the histogram itself.
+    pub fn percentile_from_buckets(buckets: &[LatencyBucket], p: f64) -> f64 {
+        let total: u64 = buckets.iter().map(|b| b.count).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let p = if p.is_finite() { p } else { 0.0 };
+        let rank = ((p / 100.0).clamp(0.0, 1.0) * (total as f64 - 1.0)).round() as u64;
+        let mut seen = 0u64;
+        for b in buckets {
+            seen += b.count;
+            if seen > rank {
+                return b.upper_ms;
+            }
+        }
+        buckets.last().map_or(0.0, |b| b.upper_ms)
+    }
+}
+
+/// One exported histogram bucket: everything counted here measured
+/// `<= upper_ms` (and above the previous bucket's edge).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyBucket {
+    pub upper_ms: f64,
+    pub count: u64,
 }
 
 impl Default for LatencyHistogram {
@@ -599,6 +694,99 @@ mod tests {
         assert_eq!(rec.get("loss").as_f64(), Some(3.5));
         assert_eq!(rec.get("step").as_i64(), Some(1));
         std::fs::remove_file(path).unwrap();
+    }
+
+    /// §L13 satellite: batched flushing must never lose the tail —
+    /// records buffered past the last cadence boundary hit the disk
+    /// when the log drops, and an explicit `flush()` makes them
+    /// readable mid-run.
+    #[test]
+    fn metrics_log_batched_flush_persists_tail_on_drop() {
+        let path =
+            std::env::temp_dir().join(format!("altup-metrics-flush-{}.jsonl", std::process::id()));
+        {
+            let mut m = MetricsLog::to_file(&path).unwrap();
+            // Cadence far above the record count: nothing below forces
+            // a flush on its own.
+            m.set_flush_every(1000);
+            for s in 1..=5 {
+                m.log(s, &[("loss", 1.0 / s as f64)]);
+            }
+            // Mid-run visibility: an explicit flush surfaces what the
+            // cadence is still holding.
+            m.flush();
+            let mid = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(mid.lines().count(), 5, "explicit flush must persist pending records");
+            // Three more buffered records ride on Drop alone.
+            for s in 6..=8 {
+                m.log(s, &[("loss", 1.0 / s as f64)]);
+            }
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 8, "drop must persist the buffered tail");
+        let last = Json::parse(lines[7]).unwrap();
+        assert_eq!(last.get("step").as_i64(), Some(8));
+        std::fs::remove_file(path).unwrap();
+    }
+
+    /// §L13 satellite: the cadence itself flushes without help — once
+    /// `flush_every` records accumulate they are readable while the
+    /// log is still live.
+    #[test]
+    fn metrics_log_flush_cadence_triggers() {
+        let path =
+            std::env::temp_dir().join(format!("altup-metrics-cad-{}.jsonl", std::process::id()));
+        let mut m = MetricsLog::to_file(&path).unwrap();
+        m.set_flush_every(2);
+        m.log(1, &[("a", 1.0)]);
+        m.log(2, &[("a", 2.0)]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2, "cadence boundary must flush");
+        drop(m);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    /// §L13 satellite property test: percentiles reconstructed from the
+    /// `to_buckets` export stay within one bucket width (a factor of
+    /// 2^(1/8)) of the exact nearest-rank percentile over the raw
+    /// samples, across several deterministic LCG workloads.
+    #[test]
+    fn percentile_from_buckets_within_one_bucket_width_of_exact() {
+        for seed in [1u64, 7, 42, 1234] {
+            let mut x = seed;
+            let mut samples: Vec<f64> = Vec::new();
+            let mut h = LatencyHistogram::new();
+            for _ in 0..500 {
+                // LCG over ~4 decades of latency: 0.01ms .. ~100ms.
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let u = ((x >> 11) as f64) / ((1u64 << 53) as f64);
+                let ms = 0.01 * 10f64.powf(4.0 * u);
+                samples.push(ms);
+                h.record(ms);
+            }
+            let buckets = h.to_buckets();
+            assert_eq!(buckets.iter().map(|b| b.count).sum::<u64>(), h.count());
+            assert!(
+                buckets.windows(2).all(|w| w[0].upper_ms < w[1].upper_ms),
+                "bucket edges must ascend"
+            );
+            samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let width = 2f64.powf(1.0 / 8.0); // one 2^(1/8) bucket
+            for p in [10.0, 50.0, 90.0, 95.0, 99.0] {
+                let rank =
+                    ((p / 100.0) * (samples.len() as f64 - 1.0)).round() as usize;
+                let exact = samples[rank];
+                let est = LatencyHistogram::percentile_from_buckets(&buckets, p);
+                let ratio = est / exact;
+                assert!(
+                    (1.0 / width) * 0.999 <= ratio && ratio <= width * 1.001,
+                    "seed {seed} p{p}: est {est} vs exact {exact} (ratio {ratio})"
+                );
+            }
+        }
+        // Empty export degrades like the histogram: 0.0, never NaN.
+        assert_eq!(LatencyHistogram::percentile_from_buckets(&[], 50.0), 0.0);
     }
 
     #[test]

@@ -7,4 +7,5 @@ pub mod metrics;
 pub mod pipeline;
 pub mod server;
 pub mod spec;
+pub mod trace;
 pub mod trainer;

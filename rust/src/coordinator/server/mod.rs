@@ -89,6 +89,7 @@ use crate::coordinator::metrics::{
     DeployMeter, LatencyHistogram, OccupancyMeter, PoolMeter, SpecMeter, TenantMeter,
 };
 use crate::coordinator::spec::{self, SpecDecoder};
+use crate::coordinator::trace::{self, TraceStats};
 use crate::data::tokenizer::EOS;
 use crate::runtime::artifact::load_named;
 use crate::runtime::client::Client;
@@ -157,11 +158,20 @@ pub(crate) struct QosShared {
     /// §L11 rollout levers (targeted drain, canary probe gate, canary
     /// health), written by the router's rollout driver.
     pub(crate) deploy: DeployShared,
+    /// §L13 trace epoch: the server's spawn instant. Router and worker
+    /// threads stamp spans as ns-since-epoch, so intervals recorded on
+    /// different threads compose on one clock (and bin into the same
+    /// timeline windows).
+    pub(crate) epoch: Instant,
 }
 
 impl QosShared {
     fn new() -> QosShared {
-        QosShared { gamma_cap: AtomicUsize::new(usize::MAX), deploy: DeployShared::new() }
+        QosShared {
+            gamma_cap: AtomicUsize::new(usize::MAX),
+            deploy: DeployShared::new(),
+            epoch: Instant::now(),
+        }
     }
 }
 
@@ -257,6 +267,10 @@ pub struct ServerStats {
     pub collectives: u64,
     /// §L12: simulated ns spent in those collective rounds.
     pub collective_ns: u64,
+    /// §L13: per-request phase spans (ring-buffered at the worker),
+    /// aggregate phase-time ledger, and the gauge timeline. Inactive
+    /// (and overhead-free) unless `ServerOptions::trace_sample > 0`.
+    pub trace: TraceStats,
 }
 
 impl ServerStats {
@@ -363,6 +377,7 @@ impl ServerStats {
         self.devices += other.devices;
         self.collectives += other.collectives;
         self.collective_ns += other.collective_ns;
+        self.trace.merge(&other.trace);
     }
 
     /// The meter for tenant `t`, growing the table on first touch so
@@ -440,6 +455,23 @@ impl ServerStats {
                 self.deploy.completed,
                 self.deploy.aborted,
                 versions.join(" ")
+            ));
+        }
+        if self.trace.active() {
+            use trace::Phase;
+            let attrs = trace::per_request(self.trace.spans());
+            let at = trace::attribute(&attrs, 1.0);
+            let shares = at.shares();
+            let pct: Vec<String> = Phase::TOP_LEVEL
+                .iter()
+                .map(|p| format!("{} {:.1}%", p.as_str(), 100.0 * shares[p.index()]))
+                .collect();
+            s.push_str(&format!(
+                " | trace: {} spans over {} requests ({} dropped), phase share [{}]",
+                self.trace.span_count(),
+                at.requests,
+                self.trace.dropped_spans,
+                pct.join(" ")
             ));
         }
         s
@@ -1196,7 +1228,8 @@ mod tests {
             let live = vec![true, false];
             let mut stream = Vec::new();
             'rounds: for _ in 0..dec_len {
-                let em = sd.round(&mut engine, &mut state, &live, None, &mut meter).unwrap();
+                let em =
+                    sd.round(&mut engine, &mut state, &live, None, &mut meter, None).unwrap();
                 assert!(em[1].is_empty(), "dead slot must emit nothing");
                 assert!(!em[0].is_empty() && em[0].len() <= 3 + 1);
                 for &t in &em[0] {

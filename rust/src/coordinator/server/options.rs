@@ -5,6 +5,12 @@
 //! re-exports in `server/mod.rs`.
 
 use super::*;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic request-id source (§L13): correlates every span a request
+/// leaves across router and worker threads. Id 0 is reserved for
+/// request-less trace events.
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
 
 pub struct Request {
     pub enc_tokens: Vec<i32>,
@@ -28,11 +34,32 @@ pub struct Request {
     /// priority at admission (a request can deprioritize itself, never
     /// escalate past its tenant's class). Higher drains first.
     pub priority: u8,
+    /// §L13: process-unique request id stamped by `Request::new`,
+    /// correlating the request's trace spans across threads.
+    pub id: u64,
+    /// §L13: true once the router's deterministic sampler
+    /// (`ALTUP_TRACE_SAMPLE` × content hash) selects this request for
+    /// span collection. Stamped at router pop; `false` before that.
+    pub traced: bool,
+    /// §L13: when the router popped this request off the request
+    /// channel — the admission-queue → qos-queue phase boundary.
+    /// Stamped by the router only when tracing is enabled.
+    pub routed: Option<Instant>,
 }
 
 impl Request {
     pub fn new(enc_tokens: Vec<i32>, reply: mpsc::Sender<Response>) -> Request {
-        Request { enc_tokens, reply, t0: Instant::now(), deadline: None, tenant: 0, priority: 1 }
+        Request {
+            enc_tokens,
+            reply,
+            t0: Instant::now(),
+            deadline: None,
+            tenant: 0,
+            priority: 1,
+            id: NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed),
+            traced: false,
+            routed: None,
+        }
     }
 
     /// A request with an explicit client-chosen deadline (overrides the
@@ -231,6 +258,19 @@ pub struct ServerOptions {
     /// behind one router. Clamped to `replicas` at spawn. The default
     /// (`usize::MAX`, or `ALTUP_TP_GROUPS`) shards every unit.
     pub tp_groups: usize,
+    /// §L13: fraction of requests span-traced, chosen deterministically
+    /// by prompt-content hash (same workload ⇒ same sampled set). 0.0
+    /// (the default) disables the tracing subsystem entirely — no
+    /// timestamps are taken on the per-token path. `ALTUP_TRACE_SAMPLE`
+    /// sets the default; values clamp to [0, 1].
+    pub trace_sample: f64,
+    /// §L13: per-worker span ring capacity. When a worker's ring fills,
+    /// the oldest span is dropped and `TraceStats::dropped_spans`
+    /// counts it. `ALTUP_TRACE_RING` sets the default (else 4096).
+    pub trace_ring: usize,
+    /// §L13: timeline window width in ms for the gauge time series.
+    /// `ALTUP_TRACE_WINDOW_MS` sets the default (else 100).
+    pub trace_window_ms: u64,
 }
 
 impl Default for ServerOptions {
@@ -257,6 +297,9 @@ impl Default for ServerOptions {
             deploy: DeployOptions::default(),
             tp: env::usize_or("ALTUP_TP", 0),
             tp_groups: env::usize_or("ALTUP_TP_GROUPS", usize::MAX),
+            trace_sample: env::f64_or("ALTUP_TRACE_SAMPLE", 0.0).clamp(0.0, 1.0),
+            trace_ring: env::usize_at_least("ALTUP_TRACE_RING", 1, trace::DEFAULT_RING),
+            trace_window_ms: env::u64_or("ALTUP_TRACE_WINDOW_MS", trace::DEFAULT_WINDOW_MS),
         }
     }
 }

@@ -227,6 +227,25 @@ impl Supervisor {
     }
 }
 
+/// §L13: record the qos-queue phase span when a traced request leaves
+/// the admission layer (immediately in passthrough, or after parking in
+/// a tenant queue) — the span runs router-pop → release.
+fn note_qos_release(stats: &mut ServerStats, epoch: Instant, req: &Request, released: Instant) {
+    if !req.traced {
+        return;
+    }
+    let start = req.routed.unwrap_or(released);
+    stats.trace.record(trace::Span {
+        req: req.id,
+        tenant: req.tenant as u32,
+        group: u32::MAX,
+        phase: trace::Phase::QosQueue,
+        start_ns: trace::ns_since(epoch, start),
+        end_ns: trace::ns_since(epoch, released),
+        value: 0,
+    });
+}
+
 /// Shed every request already past its deadline out of the router's
 /// bucket groups, answering each with an explicit failure.
 pub(crate) fn shed_expired(groups: &mut BTreeMap<usize, Vec<Admitted>>, stats: &mut ServerStats) {
@@ -332,6 +351,14 @@ pub(crate) fn route(
     // Autoscale replicas currently up (bounded by `opts.autoscale`).
     let mut extra_live: usize = 0;
     let mut qos_actions: Vec<QosAction> = Vec::new();
+    // §L13 tracing: deterministic request sampler + the shared epoch
+    // clock. With sampling off every hook below is skipped entirely.
+    let tcfg = trace::TraceConfig::new(opts.trace_sample, opts.seed);
+    let trace_on = tcfg.enabled();
+    let epoch = shared.epoch;
+    if trace_on {
+        stats.trace.set_limits(opts.trace_ring, opts.trace_window_ms);
+    }
 
     loop {
         // Supervision pass: fold in replica exits (requeue/fail their
@@ -395,6 +422,15 @@ pub(crate) fn route(
         // Deadline pass: shed expired requests before dispatch.
         shed_expired(&mut groups, &mut stats);
 
+        // §L13 timeline: router-side gauges, binned into fixed windows
+        // (each pass is at most one SUPERVISE_TICK apart).
+        if trace_on {
+            let at = trace::ns_since(epoch, Instant::now());
+            let depth = qos.queued() + groups.values().map(|g| g.len()).sum::<usize>();
+            stats.trace.timeline.gauge(trace::Gauge::QueueDepth, depth as f64, at);
+            stats.trace.timeline.gauge(trace::Gauge::LadderLevel, qos.level() as f64, at);
+        }
+
         // §L10 QoS pass: expire parked requests, walk the overload
         // ladder on sustained pressure, execute its degradation
         // actions, and release parked work into bucket groups in
@@ -408,7 +444,24 @@ pub(crate) fn route(
             }
             let downstream: usize = groups.values().map(|g| g.len()).sum();
             qos_actions.clear();
+            let level_before = qos.level();
             qos.tick(now, downstream, sup.live.max(1) * batch_size, &mut qos_actions);
+            // §L13 satellite: ladder escalations/de-escalations leave a
+            // timestamped trace event (`value` = the new level) — the
+            // ladder moves at most one rung per tick.
+            let level_after = qos.level();
+            if trace_on && level_after != level_before {
+                let at = trace::ns_since(epoch, now);
+                stats.trace.record(trace::Span {
+                    req: 0,
+                    tenant: 0,
+                    group: u32::MAX,
+                    phase: trace::Phase::LadderLevel,
+                    start_ns: at,
+                    end_ns: at,
+                    value: level_after as i64,
+                });
+            }
             for action in qos_actions.drain(..) {
                 match action {
                     QosAction::GammaCap(cap) => {
@@ -444,6 +497,7 @@ pub(crate) fn route(
                     qos.release(room, &mut released);
                     let admitted = Instant::now();
                     for req in released {
+                        note_qos_release(&mut stats, epoch, &req, admitted);
                         let bucket = if opts.bucketed {
                             bucket_for(req.enc_tokens.len(), enc_len)
                         } else {
@@ -541,6 +595,7 @@ pub(crate) fn route(
                 if sup.can_serve() && job_tx.is_some() {
                     let admitted = Instant::now();
                     for req in parked {
+                        note_qos_release(&mut stats, epoch, &req, admitted);
                         let bucket = if opts.bucketed {
                             bucket_for(req.enc_tokens.len(), enc_len)
                         } else {
@@ -612,6 +667,25 @@ pub(crate) fn route(
             if req.deadline.is_none() {
                 req.deadline = timeout.map(|t| req.t0 + t);
             }
+            // §L13: sampling decision at router pop, keyed on prompt
+            // content (deterministic across runs/replays), and the
+            // admission-queue span — client send → this pop.
+            if trace_on {
+                req.traced = tcfg.sampled(trace::trace_hash(&req.enc_tokens));
+                let popped = Instant::now();
+                req.routed = Some(popped);
+                if req.traced {
+                    stats.trace.record(trace::Span {
+                        req: req.id,
+                        tenant: req.tenant as u32,
+                        group: u32::MAX,
+                        phase: trace::Phase::AdmissionQueue,
+                        start_ns: trace::ns_since(epoch, req.t0),
+                        end_ns: trace::ns_since(epoch, popped),
+                        value: 0,
+                    });
+                }
+            }
             // Admission-time shed comes FIRST: a request already past
             // its deadline (zero timeout, client clock skew, a long
             // stall in the bounded request channel) must never enter a
@@ -630,6 +704,8 @@ pub(crate) fn route(
                 let downstream: usize = groups.values().map(|g| g.len()).sum();
                 match qos.offer(req, Instant::now(), downstream) {
                     Ok(Some(req)) => {
+                        let admitted = Instant::now();
+                        note_qos_release(&mut stats, epoch, &req, admitted);
                         let bucket = if opts.bucketed {
                             bucket_for(req.enc_tokens.len(), enc_len)
                         } else {
@@ -638,7 +714,7 @@ pub(crate) fn route(
                         groups
                             .entry(bucket)
                             .or_default()
-                            .push(Admitted { req, admitted: Instant::now(), attempts: 0 });
+                            .push(Admitted { req, admitted, attempts: 0 });
                     }
                     Ok(None) => {} // parked in a tenant queue
                     Err((victim, reason)) => {

@@ -969,6 +969,17 @@ pub(crate) fn serve_replica(
         return Ok(());
     }
     stats.devices += engine.group_tp();
+    // §L13 per-replica trace context: tracing rides the sampler switch
+    // (`trace_sample > 0`); when off, no span, gauge, or phase-meter
+    // code touches a clock.
+    let tctx = TraceCtx {
+        on: opts.trace_sample > 0.0,
+        epoch: shared.epoch,
+        group: id as u32,
+    };
+    if tctx.on {
+        stats.trace.set_limits(opts.trace_ring, opts.trace_window_ms);
+    }
     let out = if opts.continuous && engine.supports_continuous() {
         // §L8: speculation is strictly opt-in (spec_gamma > 0) and
         // runs at the engine's effective draft length (the requested γ
@@ -976,9 +987,9 @@ pub(crate) fn serve_replica(
         // back to plain per-token decode.
         let gamma = engine.effective_spec_gamma(opts.spec_gamma);
         let spec_dec = (gamma > 0).then(|| SpecDecoder::new(gamma));
-        serve_continuous(id, &mut engine, jobs, opts, ledger, stats, spec_dec, shared)
+        serve_continuous(id, &mut engine, jobs, opts, ledger, stats, spec_dec, shared, tctx)
     } else {
-        serve_batches(id, &mut engine, jobs, ledger, stats, &opts.tenants, shared)
+        serve_batches(id, &mut engine, jobs, ledger, stats, &opts.tenants, shared, tctx)
     };
     // §L12: export the group's collective counters on exit. A panicked
     // incarnation loses its engine mid-loop (along with the rest of
@@ -987,6 +998,12 @@ pub(crate) fn serve_replica(
     let (collectives, collective_ns) = engine.collective_totals();
     stats.collectives += collectives;
     stats.collective_ns += collective_ns;
+    if tctx.on && collectives > 0 {
+        // §L13: collective time is a *nested* phase — it elapsed inside
+        // prefill/decode wall time — attributed once at exit from the
+        // group's own counters rather than timed per ring round.
+        stats.trace.phases.add_n(trace::Phase::Allreduce, collective_ns, collectives);
+    }
     out
 }
 
@@ -1048,6 +1065,7 @@ fn serve_batches(
     stats: &mut ServerStats,
     tenants: &[TenantSpec],
     shared: &Arc<QosShared>,
+    tctx: TraceCtx,
 ) -> Result<()> {
     let (batch_size, _enc_len) = engine.dims();
     // Packing scratch reused across every batch on this hot path: the
@@ -1060,6 +1078,20 @@ fn serve_batches(
         // batches (run-to-completion means no slots to let retire);
         // a probation canary publishes its health each pass.
         if shared.deploy.take_drain(id) {
+            if tctx.on {
+                // Run-to-completion means the drain is instantaneous
+                // (nothing in flight between batches) — an event span.
+                let at = tctx.ns(Instant::now());
+                stats.trace.record(trace::Span {
+                    req: 0,
+                    tenant: 0,
+                    group: tctx.group,
+                    phase: trace::Phase::DeployDrain,
+                    start_ns: at,
+                    end_ns: at,
+                    value: 0,
+                });
+            }
             return Ok(());
         }
         if shared.deploy.canary_id.load(Ordering::Relaxed) == id {
@@ -1079,41 +1111,80 @@ fn serve_batches(
         // supervisor can requeue them; expired requests are shed now
         // rather than padded into the batch.
         let now = Instant::now();
-        let mut batch: Vec<(u64, Instant, usize)> = Vec::with_capacity(job.requests.len());
-        for admitted in job.requests {
-            let Admitted { req, attempts, .. } = admitted;
+        let mut batch: Vec<Pend> = Vec::with_capacity(job.requests.len());
+        for entry in job.requests {
+            let Admitted { req, attempts, admitted } = entry;
             if req.expired(now) {
                 fail_request(stats, &req, FailReason::DeadlineExceeded, id);
                 continue;
             }
             let t0 = req.t0;
+            let deadline = req.deadline;
             let enc_len = req.enc_tokens.len();
+            let req_id = req.id;
+            let tenant = req.tenant as u32;
+            let traced = req.traced;
             let ticket = ledger.admit(routed_bucket, attempts, req);
-            batch.push((ticket, t0, enc_len));
+            batch.push(Pend { ticket, t0, deadline, enc_len, admitted, req_id, tenant, traced });
         }
         if batch.is_empty() {
             continue;
         }
         let fill = batch.len();
         {
-            let tickets: Vec<u64> = batch.iter().map(|(t, _, _)| *t).collect();
+            let tickets: Vec<u64> = batch.iter().map(|p| p.ticket).collect();
             ledger.pack_rows(&tickets, batch_size, bucket, &mut enc_scratch, &mut trunc_scratch);
         }
+        // §L13: the monolithic path has no separate prefill step, so a
+        // traced request's timeline here is router-dispatch -> decode —
+        // still a contiguous tiling of [t0, retirement].
+        let t_dec0 = Instant::now();
         let decoded = engine.decode(&enc_scratch, bucket)?;
+        if tctx.on {
+            stats.trace.phases.add(trace::Phase::DecodeIter, t_dec0.elapsed().as_nanos() as u64);
+        }
         let mut decoded = decoded.into_iter();
-        for (i, (ticket, t0, enc_len)) in batch.into_iter().enumerate() {
-            let Some(held) = ledger.take(ticket) else { continue };
-            let latency = t0.elapsed();
+        for (i, p) in batch.into_iter().enumerate() {
+            let Some(held) = ledger.take(p.ticket) else { continue };
+            let latency = p.t0.elapsed();
             let mut tokens = decoded.next().unwrap_or_default();
             truncate_at_eos(&mut tokens);
             stats.note_response(
                 latency,
                 tokens.len(),
                 0, // monolithic decode ran the full dec_len regardless
-                enc_len.min(bucket),
+                p.enc_len.min(bucket),
                 trunc_scratch[i],
             );
             stats.requests += 1;
+            if tctx.on {
+                let done = Instant::now();
+                stats.trace.timeline.note_done(
+                    held.req.tenant,
+                    latency.as_secs_f64() * 1e3,
+                    tctx.ns(done),
+                );
+                if p.traced {
+                    stats.trace.record(trace::Span {
+                        req: p.req_id,
+                        tenant: p.tenant,
+                        group: tctx.group,
+                        phase: trace::Phase::RouterDispatch,
+                        start_ns: tctx.ns(p.admitted),
+                        end_ns: tctx.ns(t_dec0),
+                        value: 0,
+                    });
+                    stats.trace.record(trace::Span {
+                        req: p.req_id,
+                        tenant: p.tenant,
+                        group: tctx.group,
+                        phase: trace::Phase::Decode,
+                        start_ns: tctx.ns(t_dec0),
+                        end_ns: tctx.ns(done),
+                        value: tokens.len() as i64,
+                    });
+                }
+            }
             let slo_ms = tenants.get(held.req.tenant).map_or(0, |t| t.slo_ms);
             stats
                 .tenant_mut(held.req.tenant)
@@ -1136,6 +1207,26 @@ fn serve_batches(
     Ok(())
 }
 
+/// §L13 per-replica trace context: the on/off switch, the server-wide
+/// epoch all span timestamps are relative to, and the worker's group
+/// id stamped on every span it records. Copy-cheap by design — it
+/// threads through the serving loops by value.
+#[derive(Clone, Copy)]
+pub(crate) struct TraceCtx {
+    pub(crate) on: bool,
+    pub(crate) epoch: Instant,
+    pub(crate) group: u32,
+}
+
+impl TraceCtx {
+    /// Nanoseconds since the server epoch (saturating at 0 for
+    /// instants stamped before the epoch, e.g. request arrival on a
+    /// handle built before serve started).
+    fn ns(&self, t: Instant) -> u64 {
+        trace::ns_since(self.epoch, t)
+    }
+}
+
 /// A request waiting for a free decode slot (already in the ledger —
 /// which also owns the prompt tokens; see `Ledger::pack_rows`).
 struct Pend {
@@ -1143,6 +1234,14 @@ struct Pend {
     t0: Instant,
     deadline: Option<Instant>,
     enc_len: usize,
+    /// When the router handed this request to the replica queue (the
+    /// §L13 `router-dispatch` span opens here).
+    admitted: Instant,
+    /// §L13 trace identity, carried past the point the ledger owns the
+    /// `Request` itself.
+    req_id: u64,
+    tenant: u32,
+    traced: bool,
 }
 
 /// A request occupying a decode slot (already in the ledger).
@@ -1155,6 +1254,12 @@ struct Active {
     fill: usize,
     truncated: bool,
     prompt_len: usize,
+    /// §L13: when this slot's prefill group finished — the `decode`
+    /// span runs from here to retirement.
+    prefill_end: Instant,
+    req_id: u64,
+    tenant: u32,
+    traced: bool,
 }
 
 /// Unpack a router job into the replica's pending queue via the
@@ -1168,8 +1273,8 @@ fn stash(
 ) {
     let BatchJob { bucket, requests } = job;
     let now = Instant::now();
-    for admitted in requests {
-        let Admitted { req, attempts, .. } = admitted;
+    for entry in requests {
+        let Admitted { req, attempts, admitted } = entry;
         if req.expired(now) {
             fail_request(stats, &req, FailReason::DeadlineExceeded, id);
             continue;
@@ -1177,8 +1282,14 @@ fn stash(
         let t0 = req.t0;
         let deadline = req.deadline;
         let enc_len = req.enc_tokens.len();
+        let req_id = req.id;
+        let tenant = req.tenant as u32;
+        let traced = req.traced;
         let ticket = ledger.admit(bucket, attempts, req);
-        pending.push_back((bucket, Pend { ticket, t0, deadline, enc_len }));
+        pending.push_back((
+            bucket,
+            Pend { ticket, t0, deadline, enc_len, admitted, req_id, tenant, traced },
+        ));
     }
 }
 
@@ -1201,6 +1312,7 @@ fn serve_continuous(
     stats: &mut ServerStats,
     mut spec_dec: Option<SpecDecoder>,
     shared: &Arc<QosShared>,
+    tctx: TraceCtx,
 ) -> Result<()> {
     let (batch_size, enc_len) = engine.dims();
     let dec_len = engine.dec_len();
@@ -1231,6 +1343,10 @@ fn serve_continuous(
     // scale-down sentinel it stops pulling work, finishes what it
     // holds, and exits cleanly.
     let mut retiring = false;
+    // §L13: set only by a *deploy* drain (not autoscale retirement) so
+    // the trace can show how long the rolling swap held this replica
+    // in its drain-the-slots phase.
+    let mut drain_started: Option<Instant> = None;
     // §L8 base draft length; the §L10 γ-cap lever can only shrink it.
     let base_gamma = spec_dec.as_ref().map_or(0, |sd| sd.gamma());
     let mut enc_scratch: Vec<i32> = Vec::new();
@@ -1245,6 +1361,7 @@ fn serve_continuous(
         // each iteration for the router's gates.
         if !retiring && shared.deploy.take_drain(id) {
             retiring = true;
+            drain_started = Some(Instant::now());
         }
         if shared.deploy.canary_id.load(Ordering::Relaxed) == id {
             shared.deploy.publish_canary_health(stats);
@@ -1439,6 +1556,10 @@ fn serve_continuous(
                 let tickets: Vec<u64> = group.iter().map(|p| p.ticket).collect();
                 ledger.pack_rows(&tickets, group.len(), eff, &mut enc_scratch, &mut trunc_scratch);
             }
+            // §L13: bracket the group's prefill. One `Instant` pair per
+            // *group* (never per token), so the tracing tax on this hot
+            // path is two clock reads ahead of a fused engine call.
+            let t_pre0 = Instant::now();
             match paged.as_ref() {
                 Some(ps) => {
                     let flat = flatten_page_tables(&ps.tables, &slot_ids, ps.max_pages);
@@ -1458,11 +1579,39 @@ fn serve_continuous(
                     stats.executed_tokens += group.len() * eff;
                 }
             }
+            let t_pre1 = Instant::now();
+            if tctx.on {
+                stats.trace.phases.add(trace::Phase::Prefill, (t_pre1 - t_pre0).as_nanos() as u64);
+            }
             stats.prefills += 1;
             stats.batches += 1;
             stats.total_fill += group.len();
             for (i, p) in group.into_iter().enumerate() {
                 let prompt_len = p.enc_len.min(eff);
+                if tctx.on && p.traced {
+                    // The sampled request's top-level timeline stays
+                    // contiguous: router-dispatch runs from the router
+                    // handoff to the moment its prefill group launched,
+                    // prefill covers the fused call itself.
+                    stats.trace.record(trace::Span {
+                        req: p.req_id,
+                        tenant: p.tenant,
+                        group: tctx.group,
+                        phase: trace::Phase::RouterDispatch,
+                        start_ns: tctx.ns(p.admitted),
+                        end_ns: tctx.ns(t_pre0),
+                        value: 0,
+                    });
+                    stats.trace.record(trace::Span {
+                        req: p.req_id,
+                        tenant: p.tenant,
+                        group: tctx.group,
+                        phase: trace::Phase::Prefill,
+                        start_ns: tctx.ns(t_pre0),
+                        end_ns: tctx.ns(t_pre1),
+                        value: prompt_len as i64,
+                    });
+                }
                 active[slot_ids[i]] = Some(Active {
                     ticket: p.ticket,
                     t0: p.t0,
@@ -1472,6 +1621,10 @@ fn serve_continuous(
                     fill: slot_ids.len(),
                     truncated: trunc_scratch[i],
                     prompt_len,
+                    prefill_end: t_pre1,
+                    req_id: p.req_id,
+                    tenant: p.tenant,
+                    traced: p.traced,
                 });
             }
         }
@@ -1482,6 +1635,21 @@ fn serve_continuous(
                 break; // drained (or §L10 autoscale retirement)
             }
             continue;
+        }
+
+        // §L13 worker gauges, sampled once per decode iteration (the
+        // timeline bins by 100ms window, so per-iteration sampling is
+        // already far denser than the bin width).
+        if tctx.on {
+            let at = tctx.ns(Instant::now());
+            stats.trace.timeline.gauge(trace::Gauge::SlotOccupancy, n_live as f64, at);
+            if let Some(ps) = paged.as_ref() {
+                stats.trace.timeline.gauge(
+                    trace::Gauge::PoolPages,
+                    ps.pool.used_pages() as f64,
+                    at,
+                );
+            }
         }
 
         // One full-model decode iteration over the whole slot
@@ -1495,9 +1663,20 @@ fn serve_continuous(
             stats.pool.record(ps.pool.used_pages(), n_live);
             flatten_page_tables(&ps.tables, &all_slots, ps.max_pages)
         });
+        let t_iter = if tctx.on { Some(Instant::now()) } else { None };
         if let Some(sd) = spec_dec.as_mut() {
-            let emissions =
-                sd.round(engine, &mut state, &live, flat_table.as_deref(), &mut stats.spec)?;
+            let spec_trace = if tctx.on { Some(&mut stats.trace.phases) } else { None };
+            let emissions = sd.round(
+                engine,
+                &mut state,
+                &live,
+                flat_table.as_deref(),
+                &mut stats.spec,
+                spec_trace,
+            )?;
+            if let Some(t0i) = t_iter {
+                stats.trace.phases.add(trace::Phase::DecodeIter, t0i.elapsed().as_nanos() as u64);
+            }
             stats.decode_steps += 1;
             stats.occupancy.record(n_live);
             for (s, slot) in active.iter_mut().enumerate() {
@@ -1520,7 +1699,7 @@ fn serve_continuous(
                 // loop's to report: only it knows the truncation.
                 stats.spec.note_delivered(pushed);
                 if done {
-                    finish_slot(slot, ledger, stats, dec_len, id, router_gone, &opts.tenants);
+                    finish_slot(slot, ledger, stats, dec_len, id, router_gone, &opts.tenants, tctx);
                 }
             }
         } else {
@@ -1528,15 +1707,35 @@ fn serve_continuous(
                 Some(flat) => engine.decode_token_paged(&mut state, &live, flat)?,
                 None => engine.decode_token(&mut state, &live)?,
             };
+            if let Some(t0i) = t_iter {
+                stats.trace.phases.add(trace::Phase::DecodeIter, t0i.elapsed().as_nanos() as u64);
+            }
             stats.decode_steps += 1;
             stats.occupancy.record(n_live);
             for (s, slot) in active.iter_mut().enumerate() {
                 let Some(act) = slot.as_mut() else { continue };
                 act.tokens.push(tokens[s]);
                 if tokens[s] == EOS || act.tokens.len() >= dec_len {
-                    finish_slot(slot, ledger, stats, dec_len, id, router_gone, &opts.tenants);
+                    finish_slot(slot, ledger, stats, dec_len, id, router_gone, &opts.tenants, tctx);
                 }
             }
+        }
+    }
+    if tctx.on {
+        if let Some(t0d) = drain_started {
+            // §L13 deploy-drain interval: how long the §L11 rolling
+            // swap held this replica draining its live slots.
+            let now = Instant::now();
+            stats.trace.record(trace::Span {
+                req: 0,
+                tenant: 0,
+                group: tctx.group,
+                phase: trace::Phase::DeployDrain,
+                start_ns: tctx.ns(t0d),
+                end_ns: tctx.ns(now),
+                value: 0,
+            });
+            stats.trace.phases.add(trace::Phase::DeployDrain, (now - t0d).as_nanos() as u64);
         }
     }
     Ok(())
@@ -1556,10 +1755,35 @@ fn finish_slot(
     id: usize,
     router_gone: bool,
     tenants: &[TenantSpec],
+    tctx: TraceCtx,
 ) {
     let Some(act) = slot.take() else { return };
     let Some(held) = ledger.take(act.ticket) else { return };
     let latency = act.t0.elapsed();
+    if tctx.on {
+        let now = Instant::now();
+        stats.trace.timeline.note_done(
+            held.req.tenant,
+            latency.as_secs_f64() * 1e3,
+            tctx.ns(now),
+        );
+        if act.traced {
+            // Decode span: prefill end -> retirement. Together with
+            // admission-queue/qos-queue/router-dispatch/prefill this
+            // tiles the request's whole [t0, retirement] interval, so
+            // the per-request phase sum reproduces e2e latency (pinned
+            // by tests/server.rs).
+            stats.trace.record(trace::Span {
+                req: act.req_id,
+                tenant: act.tenant,
+                group: tctx.group,
+                phase: trace::Phase::Decode,
+                start_ns: tctx.ns(act.prefill_end),
+                end_ns: tctx.ns(now),
+                value: act.tokens.len() as i64,
+            });
+        }
+    }
     stats.note_response(
         latency,
         act.tokens.len(),

@@ -32,8 +32,10 @@
 
 use crate::coordinator::metrics::SpecMeter;
 use crate::coordinator::server::{Engine, SlotState};
+use crate::coordinator::trace::{Phase, PhaseBreakdown};
 use crate::util::env;
 use anyhow::Result;
+use std::time::Instant;
 
 /// The serving-default draft length: `ALTUP_SPEC_GAMMA` (0 or unset =
 /// speculative decoding off).
@@ -79,6 +81,10 @@ impl SpecDecoder {
     /// `verify_paged`, while the draft keeps its own monolithic slot
     /// state either way — prefix reuse applies to the main model's KV,
     /// not the draft's.
+    ///
+    /// `trace` (§L13) splits the round's wall time into the nested
+    /// `spec-draft` / `spec-verify` phases when the replica serves
+    /// with tracing on; `None` keeps the round timestamp-free.
     pub(crate) fn round(
         &mut self,
         engine: &mut Engine,
@@ -86,12 +92,19 @@ impl SpecDecoder {
         live: &[bool],
         page_table: Option<&[i32]>,
         meter: &mut SpecMeter,
+        trace: Option<&mut PhaseBreakdown>,
     ) -> Result<Vec<Vec<i32>>> {
+        let t_draft = trace.is_some().then(Instant::now);
         let drafted = engine.draft_tokens(state, live, self.gamma)?;
+        let t_verify = trace.is_some().then(Instant::now);
         let (accept, correction) = match page_table {
             Some(table) => engine.verify_paged(state, &drafted, live, self.gamma, table)?,
             None => engine.verify(state, &drafted, live, self.gamma)?,
         };
+        if let (Some(phases), Some(t0), Some(t1)) = (trace, t_draft, t_verify) {
+            phases.add(Phase::SpecDraft, (t1 - t0).as_nanos() as u64);
+            phases.add(Phase::SpecVerify, t1.elapsed().as_nanos() as u64);
+        }
         meter.draft_steps += self.gamma as u64;
         meter.verify_steps += 1;
         let mut out: Vec<Vec<i32>> = vec![Vec::new(); live.len()];

@@ -1,0 +1,978 @@
+//! §L13 request-lifecycle tracing + time-series telemetry.
+//!
+//! Two complementary views of a serving run:
+//!
+//! 1. **Spans** — per-request phase intervals (admission-queue, qos-queue,
+//!    router-dispatch, prefill, decode) collected into per-worker ring
+//!    buffers. Each worker thread records into the [`TraceStats`] embedded
+//!    in its own `ServerStats` (no shared locks on the hot path); the
+//!    supervisor's existing merge-at-exit path folds worker rings into the
+//!    aggregate. The five *top-level* phases partition `[t0, done]`
+//!    contiguously, so per request: `sum(phase spans) == e2e latency` by
+//!    construction — the invariant the tests pin within 5%.
+//! 2. **Timeline** — gauges (queue depth, ladder level, slot occupancy,
+//!    pool pages) and per-tenant completions/latency sampled into fixed
+//!    100 ms windows ([`TimelineRegistry`]), merged across workers by
+//!    window index.
+//!
+//! Nested phases (decode-iteration, spec-draft/verify, allreduce,
+//! deploy-drain) are *attributed* aggregate time inside the top-level
+//! phases — they live in the [`PhaseBreakdown`] and as event spans, and
+//! are excluded from the per-request top-level sum.
+//!
+//! Sampling is deterministic by request content hash (`ALTUP_TRACE_SAMPLE`
+//! × [`trace_hash`]): the same workload replayed samples the same request
+//! set, and an unsampled run records nothing on the per-token path.
+//!
+//! Export: JSONL (`meta` / `span` / `window` lines) via [`write_jsonl`],
+//! rendered by `altup trace-report` ([`render_report`]).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Write as IoWrite;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::util::json::Json;
+
+/// Default per-worker span ring capacity (`ALTUP_TRACE_RING`).
+pub const DEFAULT_RING: usize = 4096;
+/// Default timeline window width in ms (`ALTUP_TRACE_WINDOW_MS`).
+pub const DEFAULT_WINDOW_MS: u64 = 100;
+
+// ---------------------------------------------------------------------------
+// Phases
+// ---------------------------------------------------------------------------
+
+/// Lifecycle phases. The first five are **top-level**: for one request
+/// they tile `[t0, retirement]` with no gaps or overlap. The rest are
+/// nested attributions or instantaneous events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    /// Client `infer()` send → router pops the request channel.
+    AdmissionQueue = 0,
+    /// Router pop → §L10 admission release (≈0 in passthrough mode).
+    QosQueue = 1,
+    /// Admission release → worker starts prefill (job queue + slot wait).
+    RouterDispatch = 2,
+    /// The `prefill@bucket` call the request rode in on.
+    Prefill = 3,
+    /// Prefill end → slot retirement (all decode iterations).
+    Decode = 4,
+    /// Nested: one fused decode/spec-round step (aggregate).
+    DecodeIter = 5,
+    /// Nested: §L8 draft-model step inside a spec round.
+    SpecDraft = 6,
+    /// Nested: §L8 fused verify step inside a spec round.
+    SpecVerify = 7,
+    /// Nested: §L12 ring all-reduce wait inside prefill/decode.
+    Allreduce = 8,
+    /// Event: §L11 drain lever taken → worker exit.
+    DeployDrain = 9,
+    /// Event: §L10 overload-ladder level change (`value` = new level).
+    LadderLevel = 10,
+}
+
+/// Number of distinct phases (array sizing for [`PhaseBreakdown`]).
+pub const N_PHASES: usize = 11;
+
+impl Phase {
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::AdmissionQueue,
+        Phase::QosQueue,
+        Phase::RouterDispatch,
+        Phase::Prefill,
+        Phase::Decode,
+        Phase::DecodeIter,
+        Phase::SpecDraft,
+        Phase::SpecVerify,
+        Phase::Allreduce,
+        Phase::DeployDrain,
+        Phase::LadderLevel,
+    ];
+
+    /// The contiguous per-request partition of e2e latency.
+    pub const TOP_LEVEL: [Phase; 5] = [
+        Phase::AdmissionQueue,
+        Phase::QosQueue,
+        Phase::RouterDispatch,
+        Phase::Prefill,
+        Phase::Decode,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::AdmissionQueue => "admission-queue",
+            Phase::QosQueue => "qos-queue",
+            Phase::RouterDispatch => "router-dispatch",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::DecodeIter => "decode-iteration",
+            Phase::SpecDraft => "spec-draft",
+            Phase::SpecVerify => "spec-verify",
+            Phase::Allreduce => "allreduce",
+            Phase::DeployDrain => "deploy-drain",
+            Phase::LadderLevel => "ladder-level",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Phase> {
+        Phase::ALL.iter().copied().find(|p| p.as_str() == s)
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn is_top_level(self) -> bool {
+        Phase::TOP_LEVEL.contains(&self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spans + sampling
+// ---------------------------------------------------------------------------
+
+/// One phase interval. Timestamps are ns since the server's shared epoch
+/// (the `QosShared` spawn instant), so router- and worker-recorded spans
+/// of one request compose on a single clock. `req == 0` marks
+/// request-less events (ladder level changes, drains); `value` carries
+/// phase-specific payload (new ladder level, tokens moved, ...).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub req: u64,
+    pub tenant: u32,
+    pub group: u32,
+    pub phase: Phase,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub value: i64,
+}
+
+impl Span {
+    pub fn dur_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+/// ns since the shared epoch (saturating: pre-epoch instants clamp to 0).
+pub fn ns_since(epoch: Instant, t: Instant) -> u64 {
+    t.saturating_duration_since(epoch).as_nanos() as u64
+}
+
+/// FNV-1a over a token sequence — the deterministic sampling key. Same
+/// prompt ⇒ same hash ⇒ same sampling decision across runs and replays.
+pub fn trace_hash(tokens: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in tokens {
+        for b in (t as u32).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+/// Sampling decision: `sample` fraction of requests, chosen by content
+/// hash mixed with a salt (the server seed) — not by arrival order.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    pub sample: f64,
+    pub salt: u64,
+}
+
+impl TraceConfig {
+    pub fn new(sample: f64, salt: u64) -> Self {
+        Self { sample: sample.clamp(0.0, 1.0), salt }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sample > 0.0
+    }
+
+    pub fn sampled(&self, hash: u64) -> bool {
+        if self.sample <= 0.0 {
+            return false;
+        }
+        if self.sample >= 1.0 {
+            return true;
+        }
+        let u = mix64(hash ^ self.salt.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        ((u >> 11) as f64 / (1u64 << 53) as f64) < self.sample
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase breakdown (aggregate ns ledger)
+// ---------------------------------------------------------------------------
+
+/// Aggregate per-phase time + event counts. Mergeable like every other
+/// meter in `ServerStats`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    pub ns: [u64; N_PHASES],
+    pub count: [u64; N_PHASES],
+}
+
+impl PhaseBreakdown {
+    pub fn add(&mut self, phase: Phase, ns: u64) {
+        self.add_n(phase, ns, 1);
+    }
+
+    pub fn add_n(&mut self, phase: Phase, ns: u64, n: u64) {
+        self.ns[phase.index()] += ns;
+        self.count[phase.index()] += n;
+    }
+
+    pub fn merge(&mut self, other: &PhaseBreakdown) {
+        for i in 0..N_PHASES {
+            self.ns[i] += other.ns[i];
+            self.count[i] += other.count[i];
+        }
+    }
+
+    pub fn get(&self, phase: Phase) -> (u64, u64) {
+        (self.ns[phase.index()], self.count[phase.index()])
+    }
+
+    pub fn total_ns(&self, phases: &[Phase]) -> u64 {
+        phases.iter().map(|p| self.ns[p.index()]).sum()
+    }
+
+    pub fn active(&self) -> bool {
+        self.count.iter().any(|&c| c > 0)
+    }
+
+    /// Share of `phase` within the given denominator phase set.
+    pub fn share(&self, phase: Phase, denom: &[Phase]) -> f64 {
+        let d = self.total_ns(denom);
+        if d == 0 {
+            return 0.0;
+        }
+        self.ns[phase.index()] as f64 / d as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Timeline
+// ---------------------------------------------------------------------------
+
+/// Sampled run-state gauges (issue §L13 taxonomy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    QueueDepth = 0,
+    LadderLevel = 1,
+    SlotOccupancy = 2,
+    PoolPages = 3,
+}
+
+/// Number of distinct gauges (array sizing for [`WindowAgg`]).
+pub const N_GAUGES: usize = 4;
+
+impl Gauge {
+    pub const ALL: [Gauge; N_GAUGES] =
+        [Gauge::QueueDepth, Gauge::LadderLevel, Gauge::SlotOccupancy, Gauge::PoolPages];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Gauge::QueueDepth => "queue_depth",
+            Gauge::LadderLevel => "ladder",
+            Gauge::SlotOccupancy => "occupancy",
+            Gauge::PoolPages => "pool_pages",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// One fixed-width window: mean/max per gauge plus per-tenant
+/// completions and a latency histogram (p95 without raw samples —
+/// satellite: `LatencyHistogram::to_buckets`).
+#[derive(Debug, Clone, Default)]
+pub struct WindowAgg {
+    pub sum: [f64; N_GAUGES],
+    pub n: [u64; N_GAUGES],
+    pub max: [f64; N_GAUGES],
+    pub done: u64,
+    pub lat: LatencyHistogram,
+    pub tenant_done: Vec<u64>,
+}
+
+impl WindowAgg {
+    pub fn mean(&self, g: Gauge) -> f64 {
+        let i = g.index();
+        if self.n[i] == 0 {
+            0.0
+        } else {
+            self.sum[i] / self.n[i] as f64
+        }
+    }
+
+    fn merge(&mut self, other: &WindowAgg) {
+        for i in 0..N_GAUGES {
+            self.sum[i] += other.sum[i];
+            self.n[i] += other.n[i];
+            self.max[i] = self.max[i].max(other.max[i]);
+        }
+        self.done += other.done;
+        self.lat.merge(&other.lat);
+        if self.tenant_done.len() < other.tenant_done.len() {
+            self.tenant_done.resize(other.tenant_done.len(), 0);
+        }
+        for (i, &d) in other.tenant_done.iter().enumerate() {
+            self.tenant_done[i] += d;
+        }
+    }
+}
+
+/// Fixed-window time series keyed by `ns / window_ns`. Each worker owns
+/// one (inside its `TraceStats`); merge is by window index, so the
+/// aggregate view lines up across threads sharing the epoch clock.
+#[derive(Debug, Clone)]
+pub struct TimelineRegistry {
+    pub window_ns: u64,
+    pub windows: BTreeMap<u64, WindowAgg>,
+}
+
+impl Default for TimelineRegistry {
+    fn default() -> Self {
+        Self::new(DEFAULT_WINDOW_MS)
+    }
+}
+
+impl TimelineRegistry {
+    pub fn new(window_ms: u64) -> Self {
+        Self { window_ns: window_ms.max(1) * 1_000_000, windows: BTreeMap::new() }
+    }
+
+    fn agg(&mut self, at_ns: u64) -> &mut WindowAgg {
+        let idx = at_ns / self.window_ns;
+        self.windows.entry(idx).or_default()
+    }
+
+    pub fn gauge(&mut self, g: Gauge, v: f64, at_ns: u64) {
+        let w = self.agg(at_ns);
+        let i = g.index();
+        w.sum[i] += v;
+        w.n[i] += 1;
+        w.max[i] = w.max[i].max(v);
+    }
+
+    pub fn note_done(&mut self, tenant: usize, latency_ms: f64, at_ns: u64) {
+        let w = self.agg(at_ns);
+        w.done += 1;
+        w.lat.record(latency_ms);
+        if w.tenant_done.len() <= tenant {
+            w.tenant_done.resize(tenant + 1, 0);
+        }
+        w.tenant_done[tenant] += 1;
+    }
+
+    pub fn merge(&mut self, other: &TimelineRegistry) {
+        for (idx, agg) in &other.windows {
+            self.windows.entry(*idx).or_default().merge(agg);
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TraceStats: the per-worker collector + mergeable aggregate
+// ---------------------------------------------------------------------------
+
+/// Span ring + phase ledger + timeline for one worker thread (embedded
+/// in its `ServerStats`), and — after the supervisor's merge-at-exit —
+/// the fleet aggregate. `record` drops the *oldest* span when the ring
+/// is full and counts the drop; `merge` concatenates without dropping
+/// (per-worker rings already bounded collection at the source).
+#[derive(Debug, Clone)]
+pub struct TraceStats {
+    pub phases: PhaseBreakdown,
+    ring: VecDeque<Span>,
+    cap: usize,
+    pub dropped_spans: u64,
+    pub timeline: TimelineRegistry,
+}
+
+impl Default for TraceStats {
+    fn default() -> Self {
+        Self {
+            phases: PhaseBreakdown::default(),
+            ring: VecDeque::new(),
+            cap: DEFAULT_RING,
+            dropped_spans: 0,
+            timeline: TimelineRegistry::default(),
+        }
+    }
+}
+
+impl TraceStats {
+    pub fn set_limits(&mut self, ring_cap: usize, window_ms: u64) {
+        self.cap = ring_cap.max(1);
+        if self.timeline.is_empty() {
+            self.timeline = TimelineRegistry::new(window_ms);
+        }
+    }
+
+    pub fn record(&mut self, span: Span) {
+        if self.ring.len() >= self.cap {
+            self.ring.pop_front();
+            self.dropped_spans += 1;
+        }
+        self.ring.push_back(span);
+    }
+
+    pub fn spans(&self) -> impl Iterator<Item = &Span> {
+        self.ring.iter()
+    }
+
+    pub fn span_count(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn merge(&mut self, other: &TraceStats) {
+        self.phases.merge(&other.phases);
+        self.ring.extend(other.ring.iter().copied());
+        self.dropped_spans += other.dropped_spans;
+        self.timeline.merge(&other.timeline);
+    }
+
+    pub fn active(&self) -> bool {
+        !self.ring.is_empty() || self.phases.active() || !self.timeline.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-request attribution
+// ---------------------------------------------------------------------------
+
+/// One request's phase ledger rebuilt from its spans. `e2e_ns` spans
+/// first top-level start → last top-level end.
+#[derive(Debug, Clone)]
+pub struct ReqAttr {
+    pub req: u64,
+    pub tenant: u32,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub phase_ns: [u64; N_PHASES],
+}
+
+impl ReqAttr {
+    pub fn e2e_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+
+    pub fn top_level_ns(&self) -> u64 {
+        Phase::TOP_LEVEL.iter().map(|p| self.phase_ns[p.index()]).sum()
+    }
+}
+
+/// Group spans by request id (skipping request-less events). Returned
+/// sorted by request id.
+pub fn per_request<'a>(spans: impl Iterator<Item = &'a Span>) -> Vec<ReqAttr> {
+    let mut by_req: BTreeMap<u64, ReqAttr> = BTreeMap::new();
+    for s in spans {
+        if s.req == 0 {
+            continue;
+        }
+        let a = by_req.entry(s.req).or_insert_with(|| ReqAttr {
+            req: s.req,
+            tenant: s.tenant,
+            start_ns: u64::MAX,
+            end_ns: 0,
+            phase_ns: [0; N_PHASES],
+        });
+        a.phase_ns[s.phase.index()] += s.dur_ns();
+        if s.phase.is_top_level() {
+            a.start_ns = a.start_ns.min(s.start_ns);
+            a.end_ns = a.end_ns.max(s.end_ns);
+        }
+    }
+    by_req.into_values().filter(|a| a.end_ns > 0 && a.start_ns < u64::MAX).collect()
+}
+
+/// Summed phase ledger over a request subset (e.g. the slowest 5% — the
+/// "where does p95 go" question).
+#[derive(Debug, Clone, Default)]
+pub struct Attribution {
+    pub requests: usize,
+    pub e2e_ns: u64,
+    pub phase_ns: [u64; N_PHASES],
+}
+
+impl Attribution {
+    /// Top-level phase shares; sums to ~1.0 whenever any time was
+    /// recorded (the top-level phases partition each request's e2e).
+    pub fn shares(&self) -> [f64; N_PHASES] {
+        let total: u64 = Phase::TOP_LEVEL.iter().map(|p| self.phase_ns[p.index()]).sum();
+        let mut out = [0.0; N_PHASES];
+        if total == 0 {
+            return out;
+        }
+        for (i, ns) in self.phase_ns.iter().enumerate() {
+            out[i] = *ns as f64 / total as f64;
+        }
+        out
+    }
+}
+
+/// Attribute the slowest `top_frac` of requests (by e2e), e.g. 0.05 for
+/// "the p95 tail". `top_frac >= 1.0` attributes every request.
+pub fn attribute(attrs: &[ReqAttr], top_frac: f64) -> Attribution {
+    if attrs.is_empty() {
+        return Attribution::default();
+    }
+    let mut sorted: Vec<&ReqAttr> = attrs.iter().collect();
+    sorted.sort_by(|a, b| b.e2e_ns().cmp(&a.e2e_ns()).then(a.req.cmp(&b.req)));
+    let take = ((attrs.len() as f64 * top_frac.clamp(0.0, 1.0)).ceil() as usize)
+        .clamp(1, attrs.len());
+    let mut out = Attribution::default();
+    for a in sorted.into_iter().take(take) {
+        out.requests += 1;
+        out.e2e_ns += a.e2e_ns();
+        for i in 0..N_PHASES {
+            out.phase_ns[i] += a.phase_ns[i];
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// JSONL export + report
+// ---------------------------------------------------------------------------
+
+fn window_row(idx: u64, window_ns: u64, w: &WindowAgg) -> Json {
+    let tenant_done =
+        Json::Arr(w.tenant_done.iter().map(|&d| Json::num(d as f64)).collect());
+    Json::obj(vec![
+        ("kind", Json::str("window")),
+        ("index", Json::num(idx as f64)),
+        ("start_ms", Json::num((idx * window_ns) as f64 / 1e6)),
+        ("queue_depth", Json::num(w.mean(Gauge::QueueDepth))),
+        ("ladder", Json::num(w.max[Gauge::LadderLevel.index()])),
+        ("occupancy", Json::num(w.mean(Gauge::SlotOccupancy))),
+        ("pool_pages", Json::num(w.mean(Gauge::PoolPages))),
+        ("done", Json::num(w.done as f64)),
+        ("p95_ms", Json::num(w.lat.percentile_ms(95.0))),
+        ("tenant_done", tenant_done),
+    ])
+}
+
+fn span_row(s: &Span) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("span")),
+        ("req", Json::num(s.req as f64)),
+        ("tenant", Json::num(s.tenant as f64)),
+        ("group", Json::num(s.group as f64)),
+        ("phase", Json::str(s.phase.as_str())),
+        ("start_ns", Json::num(s.start_ns as f64)),
+        ("end_ns", Json::num(s.end_ns as f64)),
+        ("value", Json::num(s.value as f64)),
+    ])
+}
+
+/// JSONL contract: one `meta` line, then `span` lines, then `window`
+/// lines. Everything the CI smoke and `trace-report` consume.
+pub fn write_jsonl(path: &Path, trace: &TraceStats, sample: f64) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let phases = Json::Arr(Phase::ALL.iter().map(|p| Json::str(p.as_str())).collect());
+    let meta = Json::obj(vec![
+        ("kind", Json::str("meta")),
+        ("version", Json::num(1.0)),
+        ("sample", Json::num(sample)),
+        ("window_ms", Json::num(trace.timeline.window_ns as f64 / 1e6)),
+        ("dropped_spans", Json::num(trace.dropped_spans as f64)),
+        ("spans", Json::num(trace.span_count() as f64)),
+        ("phases", phases),
+    ]);
+    writeln!(f, "{meta}")?;
+    for s in trace.spans() {
+        writeln!(f, "{}", span_row(s))?;
+    }
+    for (idx, w) in &trace.timeline.windows {
+        writeln!(f, "{}", window_row(*idx, trace.timeline.window_ns, w))?;
+    }
+    f.flush()
+}
+
+/// A parsed `window` line (reader-side view of [`WindowAgg`]).
+#[derive(Debug, Clone)]
+pub struct WindowRow {
+    pub index: u64,
+    pub start_ms: f64,
+    pub queue_depth: f64,
+    pub ladder: f64,
+    pub occupancy: f64,
+    pub pool_pages: f64,
+    pub done: u64,
+    pub p95_ms: f64,
+}
+
+/// A parsed trace file.
+#[derive(Debug, Clone, Default)]
+pub struct TraceFile {
+    pub sample: f64,
+    pub window_ms: f64,
+    pub dropped_spans: u64,
+    pub spans: Vec<Span>,
+    pub windows: Vec<WindowRow>,
+}
+
+pub fn read_jsonl(path: &Path) -> Result<TraceFile> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    let mut out = TraceFile::default();
+    let mut saw_meta = false;
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("trace line {}: {}", lineno + 1, e))?;
+        match v.get("kind").as_str() {
+            Some("meta") => {
+                saw_meta = true;
+                out.sample = v.get("sample").as_f64().unwrap_or(0.0);
+                out.window_ms = v.get("window_ms").as_f64().unwrap_or(0.0);
+                out.dropped_spans = v.get("dropped_spans").as_f64().unwrap_or(0.0) as u64;
+            }
+            Some("span") => {
+                let name = v.get("phase").as_str().unwrap_or("");
+                let phase = Phase::from_name(name)
+                    .with_context(|| format!("trace line {}: unknown phase {name:?}", lineno + 1))?;
+                out.spans.push(Span {
+                    req: v.get("req").as_f64().unwrap_or(0.0) as u64,
+                    tenant: v.get("tenant").as_f64().unwrap_or(0.0) as u32,
+                    group: v.get("group").as_f64().unwrap_or(0.0) as u32,
+                    phase,
+                    start_ns: v.get("start_ns").as_f64().unwrap_or(0.0) as u64,
+                    end_ns: v.get("end_ns").as_f64().unwrap_or(0.0) as u64,
+                    value: v.get("value").as_i64().unwrap_or(0),
+                });
+            }
+            Some("window") => out.windows.push(WindowRow {
+                index: v.get("index").as_f64().unwrap_or(0.0) as u64,
+                start_ms: v.get("start_ms").as_f64().unwrap_or(0.0),
+                queue_depth: v.get("queue_depth").as_f64().unwrap_or(0.0),
+                ladder: v.get("ladder").as_f64().unwrap_or(0.0),
+                occupancy: v.get("occupancy").as_f64().unwrap_or(0.0),
+                pool_pages: v.get("pool_pages").as_f64().unwrap_or(0.0),
+                done: v.get("done").as_f64().unwrap_or(0.0) as u64,
+                p95_ms: v.get("p95_ms").as_f64().unwrap_or(0.0),
+            }),
+            other => bail!("trace line {}: unknown kind {other:?}", lineno + 1),
+        }
+    }
+    if !saw_meta {
+        bail!("{}: no meta line — not a trace file", path.display());
+    }
+    Ok(out)
+}
+
+const BAR_WIDTH: usize = 48;
+const PHASE_GLYPH: [char; 5] = ['a', 'q', 'r', 'P', 'D'];
+
+fn waterfall_bar(a: &ReqAttr) -> String {
+    let total = a.top_level_ns().max(1);
+    let mut bar = String::new();
+    for (pi, p) in Phase::TOP_LEVEL.iter().enumerate() {
+        let cells =
+            ((a.phase_ns[p.index()] as f64 / total as f64) * BAR_WIDTH as f64).round() as usize;
+        for _ in 0..cells {
+            bar.push(PHASE_GLYPH[pi]);
+        }
+    }
+    bar
+}
+
+/// Text waterfall + phase attribution + timeline summary.
+pub fn render_report(tf: &TraceFile, top: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace: {} spans ({} dropped at source), sample {:.2}, window {:.0} ms\n\n",
+        tf.spans.len(),
+        tf.dropped_spans,
+        tf.sample,
+        tf.window_ms,
+    ));
+
+    let attrs = per_request(tf.spans.iter());
+    let all = attribute(&attrs, 1.0);
+    let tail = attribute(&attrs, 0.05);
+    out.push_str(&format!("phase attribution ({} requests; tail = slowest 5%)\n", all.requests));
+    out.push_str("  phase              total ms    share   tail share\n");
+    let shares = all.shares();
+    let tail_shares = tail.shares();
+    for p in Phase::TOP_LEVEL {
+        out.push_str(&format!(
+            "  {:<18} {:>9.2}  {:>6.1}%    {:>6.1}%\n",
+            p.as_str(),
+            all.phase_ns[p.index()] as f64 / 1e6,
+            100.0 * shares[p.index()],
+            100.0 * tail_shares[p.index()],
+        ));
+    }
+    let nested: Vec<Phase> =
+        vec![Phase::DecodeIter, Phase::SpecDraft, Phase::SpecVerify, Phase::Allreduce];
+    let mut breakdown = PhaseBreakdown::default();
+    for s in &tf.spans {
+        breakdown.add(s.phase, s.dur_ns());
+    }
+    if nested.iter().any(|p| breakdown.ns[p.index()] > 0) {
+        out.push_str("  nested (attributed inside prefill/decode):\n");
+        for p in nested {
+            let (ns, count) = breakdown.get(p);
+            if count > 0 {
+                out.push_str(&format!(
+                    "    {:<16} {:>9.2} ms over {count} spans\n",
+                    p.as_str(),
+                    ns as f64 / 1e6,
+                ));
+            }
+        }
+    }
+
+    if !attrs.is_empty() && top > 0 {
+        let mut slow: Vec<&ReqAttr> = attrs.iter().collect();
+        slow.sort_by(|a, b| b.e2e_ns().cmp(&a.e2e_ns()).then(a.req.cmp(&b.req)));
+        out.push_str(&format!("\nslowest requests (top {})\n", top.min(slow.len())));
+        out.push_str("  [a]dmission [q]os [r]outer-dispatch [P]refill [D]ecode\n");
+        for a in slow.into_iter().take(top) {
+            out.push_str(&format!(
+                "  req {:>6} tenant {} e2e {:>8.2} ms |{}|\n",
+                a.req,
+                a.tenant,
+                a.e2e_ns() as f64 / 1e6,
+                waterfall_bar(a),
+            ));
+        }
+    }
+
+    let ladder: Vec<&Span> =
+        tf.spans.iter().filter(|s| s.phase == Phase::LadderLevel).collect();
+    if !ladder.is_empty() {
+        out.push_str("\noverload-ladder transitions\n");
+        for s in ladder {
+            out.push_str(&format!(
+                "  t={:>9.2} ms -> level {}\n",
+                s.start_ns as f64 / 1e6,
+                s.value,
+            ));
+        }
+    }
+
+    if !tf.windows.is_empty() {
+        out.push_str("\ntimeline\n");
+        out.push_str("  start_ms   depth  ladder   occ  pool   done  p95_ms\n");
+        for w in &tf.windows {
+            out.push_str(&format!(
+                "  {:>8.0} {:>7.1} {:>7.0} {:>5.1} {:>5.0} {:>6} {:>7.2}\n",
+                w.start_ms, w.queue_depth, w.ladder, w.occupancy, w.pool_pages, w.done, w.p95_ms,
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(req: u64, phase: Phase, start_ns: u64, end_ns: u64) -> Span {
+        Span { req, tenant: 0, group: 0, phase, start_ns, end_ns, value: 0 }
+    }
+
+    #[test]
+    fn phase_names_roundtrip() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::from_name(p.as_str()), Some(p));
+        }
+        assert_eq!(Phase::from_name("nope"), None);
+        assert!(Phase::Prefill.is_top_level());
+        assert!(!Phase::Allreduce.is_top_level());
+    }
+
+    /// Ring overflow drops the *oldest* span and surfaces the count.
+    #[test]
+    fn ring_overflow_drops_oldest() {
+        let mut t = TraceStats::default();
+        t.set_limits(3, 100);
+        for i in 1..=5u64 {
+            t.record(span(i, Phase::Decode, i * 10, i * 10 + 5));
+        }
+        assert_eq!(t.dropped_spans, 2);
+        let reqs: Vec<u64> = t.spans().map(|s| s.req).collect();
+        assert_eq!(reqs, vec![3, 4, 5], "oldest (1, 2) dropped first");
+    }
+
+    /// Same (sample, salt) ⇒ same sampled set; salt changes the set;
+    /// rate lands near the target on a large population.
+    #[test]
+    fn sampling_is_deterministic_and_calibrated() {
+        let cfg = TraceConfig::new(0.25, 42);
+        let again = TraceConfig::new(0.25, 42);
+        let other_salt = TraceConfig::new(0.25, 43);
+        let mut hits = 0usize;
+        let mut diff = 0usize;
+        let n = 20_000u64;
+        for i in 0..n {
+            let h = trace_hash(&[i as i32, (i >> 8) as i32, 7]);
+            assert_eq!(cfg.sampled(h), again.sampled(h), "deterministic per hash");
+            hits += cfg.sampled(h) as usize;
+            diff += (cfg.sampled(h) != other_salt.sampled(h)) as usize;
+        }
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "sampling rate {rate} far from 0.25");
+        assert!(diff > 0, "salt must perturb the sampled set");
+        assert!(TraceConfig::new(1.0, 0).sampled(123));
+        assert!(!TraceConfig::new(0.0, 0).sampled(123));
+    }
+
+    #[test]
+    fn trace_hash_is_content_keyed() {
+        assert_eq!(trace_hash(&[1, 2, 3]), trace_hash(&[1, 2, 3]));
+        assert_ne!(trace_hash(&[1, 2, 3]), trace_hash(&[3, 2, 1]));
+        assert_ne!(trace_hash(&[]), trace_hash(&[0]));
+    }
+
+    /// Top-level spans tile e2e; per_request + attribute rebuild it.
+    #[test]
+    fn per_request_attribution_partitions_e2e() {
+        let spans = vec![
+            span(7, Phase::AdmissionQueue, 100, 200),
+            span(7, Phase::QosQueue, 200, 250),
+            span(7, Phase::RouterDispatch, 250, 400),
+            span(7, Phase::Prefill, 400, 900),
+            span(7, Phase::Decode, 900, 2100),
+            // Nested attribution must not perturb the top-level sum.
+            span(7, Phase::DecodeIter, 900, 2000),
+            span(0, Phase::LadderLevel, 500, 500),
+        ];
+        let attrs = per_request(spans.iter());
+        assert_eq!(attrs.len(), 1, "event spans (req=0) excluded");
+        let a = &attrs[0];
+        assert_eq!(a.e2e_ns(), 2000);
+        assert_eq!(a.top_level_ns(), 2000, "phases partition e2e exactly");
+        let at = attribute(&attrs, 1.0);
+        let shares = at.shares();
+        let total: f64 = Phase::TOP_LEVEL.iter().map(|p| shares[p.index()]).sum();
+        assert!((total - 1.0).abs() < 1e-9, "top-level shares sum to 1.0");
+        assert!((shares[Phase::Decode.index()] - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attribute_tail_takes_slowest() {
+        let mut spans = Vec::new();
+        for r in 1..=20u64 {
+            // Request r has e2e = r*100 ns, all in decode.
+            spans.push(span(r, Phase::Decode, 0, r * 100));
+        }
+        let attrs = per_request(spans.iter());
+        let tail = attribute(&attrs, 0.05);
+        assert_eq!(tail.requests, 1);
+        assert_eq!(tail.e2e_ns, 2000, "slowest request only");
+        let all = attribute(&attrs, 1.0);
+        assert_eq!(all.requests, 20);
+    }
+
+    #[test]
+    fn timeline_bins_and_merges_by_window() {
+        let mut a = TimelineRegistry::new(100);
+        a.gauge(Gauge::QueueDepth, 4.0, 50_000_000); // window 0
+        a.gauge(Gauge::QueueDepth, 8.0, 150_000_000); // window 1
+        a.note_done(1, 12.0, 150_000_000);
+        let mut b = TimelineRegistry::new(100);
+        b.gauge(Gauge::QueueDepth, 2.0, 160_000_000); // window 1
+        b.note_done(0, 20.0, 10_000_000); // window 0
+        a.merge(&b);
+        assert_eq!(a.windows.len(), 2);
+        let w1 = &a.windows[&1];
+        assert!((w1.mean(Gauge::QueueDepth) - 5.0).abs() < 1e-9);
+        assert_eq!(w1.max[Gauge::QueueDepth.index()], 8.0);
+        assert_eq!(w1.tenant_done, vec![0, 1]);
+        assert_eq!(a.windows[&0].done, 1);
+    }
+
+    #[test]
+    fn merge_concatenates_without_dropping() {
+        let mut a = TraceStats::default();
+        a.set_limits(2, 100);
+        a.record(span(1, Phase::Decode, 0, 10));
+        let mut b = TraceStats::default();
+        b.set_limits(2, 100);
+        for i in 2..=4u64 {
+            b.record(span(i, Phase::Decode, 0, 10));
+        }
+        assert_eq!(b.dropped_spans, 1);
+        a.merge(&b);
+        assert_eq!(a.span_count(), 3, "merge keeps all surviving spans");
+        assert_eq!(a.dropped_spans, 1, "source drops carried through");
+        assert_eq!(a.phases.count[Phase::Decode.index()], 0, "breakdown separate from ring");
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let mut t = TraceStats::default();
+        t.set_limits(16, 100);
+        t.record(span(3, Phase::Prefill, 1_000, 2_000));
+        t.record(Span {
+            req: 0,
+            tenant: 0,
+            group: 9,
+            phase: Phase::LadderLevel,
+            start_ns: 5_000,
+            end_ns: 5_000,
+            value: 2,
+        });
+        t.timeline.gauge(Gauge::QueueDepth, 3.0, 50_000_000);
+        t.timeline.note_done(0, 7.5, 50_000_000);
+        let dir = std::env::temp_dir().join("altup_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("roundtrip_{}.jsonl", std::process::id()));
+        write_jsonl(&path, &t, 0.5).unwrap();
+        let tf = read_jsonl(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(tf.spans.len(), 2);
+        assert_eq!(tf.sample, 0.5);
+        assert_eq!(tf.dropped_spans, 0);
+        assert_eq!(tf.spans[0].phase, Phase::Prefill);
+        assert_eq!(tf.spans[1].value, 2);
+        assert_eq!(tf.windows.len(), 1);
+        assert_eq!(tf.windows[0].done, 1);
+        assert!(tf.windows[0].p95_ms > 0.0);
+        let report = render_report(&tf, 4);
+        assert!(report.contains("phase attribution"), "{report}");
+        assert!(report.contains("ladder"), "{report}");
+    }
+
+    #[test]
+    fn breakdown_shares() {
+        let mut b = PhaseBreakdown::default();
+        b.add(Phase::Prefill, 250);
+        b.add(Phase::Decode, 750);
+        b.add_n(Phase::Allreduce, 100, 12);
+        assert_eq!(b.total_ns(&Phase::TOP_LEVEL), 1000);
+        assert!((b.share(Phase::Decode, &Phase::TOP_LEVEL) - 0.75).abs() < 1e-9);
+        assert!((b.share(Phase::Allreduce, &Phase::TOP_LEVEL) - 0.1).abs() < 1e-9);
+        let mut c = PhaseBreakdown::default();
+        c.merge(&b);
+        assert_eq!(c, b);
+        assert_eq!(c.get(Phase::Allreduce), (100, 12));
+    }
+}

@@ -7,14 +7,18 @@
 //!   eval        --artifact <name> [--ckpt path] --batches N [--task t]
 //!   serve       --artifact <name> [--ckpt path] [--slots S] [--no-cont]
 //!               [--queue-cap N] [--timeout-ms T] [--retries R]
-//!               [--restarts N] [--spec-gamma G] --requests N
+//!               [--restarts N] [--spec-gamma G] [--trace-sample F]
+//!               [--trace-out path.jsonl] --requests N
 //!   params      [--size S|B|L|XL] — analytic parameter table
 //!   latency     --artifact <name> [--kind forward|train_step]
 //!   bench-table <fig4|tab1|tab2|tab3|tab4|tab6|tab7|fig5|bert> [--quick]
+//!   trace-report --in trace.jsonl [--top N] — §L13 waterfall + phase
+//!               attribution from a serve/bench trace export
 
 use altup::coordinator::metrics::MetricsLog;
 use altup::coordinator::pipeline::{self, PipelineOptions};
 use altup::coordinator::server::{ServerHandle, ServerOptions};
+use altup::coordinator::trace;
 use altup::coordinator::trainer::{DataSource, TrainOptions, Trainer};
 use altup::data::batcher::{PretrainBatcher, TaskBatcher};
 use altup::data::tasks::{Task, TaskKind};
@@ -38,10 +42,12 @@ fn main() -> Result<()> {
         "params" => cmd_params(&args),
         "latency" => cmd_latency(&args),
         "bench-table" => cmd_bench_table(&args),
+        "trace-report" => cmd_trace_report(&args),
         "help" | _ => {
             println!(
                 "altup — Alternating Updates for Efficient Transformers (NeurIPS 2023)\n\
-                 commands: pretrain finetune eval serve params latency bench-table\n\
+                 commands: pretrain finetune eval serve params latency bench-table \
+                 trace-report\n\
                  see README.md for usage"
             );
             Ok(())
@@ -218,6 +224,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         spec_gamma: args.usize_or("spec-gamma", defaults.spec_gamma),
         // §L12: tensor-parallel group width (0/1 = whole-model units).
         tp: args.usize_or("tp", defaults.tp),
+        // §L13: per-request span tracing (0 = off; 1 = trace all).
+        trace_sample: args.f64_or("trace-sample", defaults.trace_sample).clamp(0.0, 1.0),
         // Tenancy (§L10), deploy gates (§L11), and the §L12 group
         // count keep their ALTUP_*-derived defaults.
         ..defaults
@@ -254,6 +262,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.mean_ms(),
     );
     println!("{}", stats.summary());
+    // §L13: export the merged trace for `altup trace-report`.
+    if let Some(out) = args.get("trace-out") {
+        let sample = args.f64_or("trace-sample", 0.0);
+        trace::write_jsonl(std::path::Path::new(out), &stats.trace, sample)?;
+        println!(
+            "trace: wrote {} spans + {} windows to {out}",
+            stats.trace.span_count(),
+            stats.trace.timeline.windows.len()
+        );
+    }
+    Ok(())
+}
+
+/// §L13: render the per-request waterfall and phase-attribution tables
+/// from a `--trace-out` / `--trace-jsonl` export.
+fn cmd_trace_report(args: &Args) -> Result<()> {
+    let path = args.get("in").context("--in <trace.jsonl> required")?;
+    let tf = trace::read_jsonl(std::path::Path::new(path))?;
+    print!("{}", trace::render_report(&tf, args.usize_or("top", 8)));
     Ok(())
 }
 

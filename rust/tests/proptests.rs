@@ -305,6 +305,12 @@ fn prop_exactly_one_terminal_response_under_swap_chaos() {
             },
             tp: if s.tp { 2 } else { 0 },
             tp_groups: usize::MAX,
+            // §L13: trace a deterministic half of the property-test
+            // workload so the span plumbing rides every swap/kill/shed
+            // combination without asserting on timings.
+            trace_sample: 0.5,
+            trace_ring: 512,
+            trace_window_ms: 100,
         };
         let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec.clone()), options);
 

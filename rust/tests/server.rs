@@ -12,6 +12,7 @@ use altup::coordinator::server::{
     BadVersionMode, CollectiveSpec, EngineSpec, FailReason, Request, Response, ServerHandle,
     ServerOptions, ServerStats, SimPoolSpec, SimSpec, SimSwapSpec, ROUTER_ID,
 };
+use altup::coordinator::trace::{self, Phase};
 use altup::data::tokenizer::EOS;
 use altup::runtime::session::{bucket_for, bucket_lengths};
 use std::time::{Duration, Instant};
@@ -74,7 +75,19 @@ fn opts(replicas: usize, bucketed: bool) -> ServerOptions {
         // in through `topts`.
         tp: 0,
         tp_groups: usize::MAX,
+        // §L13: tracing off by default (env-free so an exported
+        // ALTUP_TRACE_SAMPLE cannot perturb scheduler tests); the
+        // trace tests below opt in through `tropts`.
+        trace_sample: 0.0,
+        trace_ring: 4096,
+        trace_window_ms: 100,
     }
+}
+
+/// §L13 tracing options: continuous batching with every request traced
+/// (sample 1.0) unless a test overrides the sampler.
+fn tropts(replicas: usize, slots: usize, sample: f64) -> ServerOptions {
+    ServerOptions { trace_sample: sample, ..copts(replicas, slots) }
 }
 
 /// §L11 deploy gates for tests: explicit (env-free) and fast.
@@ -1490,4 +1503,201 @@ fn tp_follower_shard_kill_respawns_the_whole_group() {
     assert_eq!(stats.restarts, 1, "exactly one replacement group spawned");
     assert!(stats.retries >= 1, "the dead group's in-flight work was requeued");
     assert_eq!(stats.devices, 4, "crashed + replacement incarnations: two devices each");
+}
+
+// ---------------------------------------------------------------- §L13
+
+/// §L13 sim spec with nonzero per-token/per-step costs so every phase
+/// span has measurable duration (the zero-cost `sim_spec` would make
+/// the phase-sum invariant trivially true at 0 ns).
+fn traced_spec() -> SimSpec {
+    let mut spec = sim_spec();
+    spec.token_ns = 2_000;
+    spec.dtoken_ns = 20_000;
+    spec.dstep_ns = 100_000;
+    spec
+}
+
+/// §L13 tentpole invariant: for every traced request, the five
+/// top-level phase spans (admission-queue, qos-queue, router-dispatch,
+/// prefill, decode) tile the request's [arrival, retirement] interval —
+/// the sum of their durations reproduces the end-to-end latency within
+/// 5%, and consecutive phases never overlap or leave gaps beyond that
+/// bound. This is what makes the attribution trustworthy: phase shares
+/// are shares *of the latency the client saw*.
+#[test]
+fn traced_request_phase_spans_sum_to_e2e_latency() {
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(traced_spec()), tropts(2, 4, 1.0));
+    let prompts: Vec<Vec<i32>> = (0..32).map(|i| prompt(1 + (i * 5) % 64)).collect();
+    let responses = drive_concurrent(&server, &prompts, 4);
+    for r in &responses {
+        assert!(r.failure.is_none(), "healthy run: {:?}", r.failure);
+    }
+    let stats = server.shutdown().unwrap();
+
+    let attrs = trace::per_request(stats.trace.spans());
+    assert_eq!(attrs.len(), prompts.len(), "sample 1.0 traces every request");
+    assert_eq!(stats.trace.dropped_spans, 0, "default ring holds this workload");
+    for a in &attrs {
+        let e2e = a.e2e_ns();
+        let sum = a.top_level_ns();
+        assert!(e2e > 0, "req {} recorded no time", a.req);
+        for p in Phase::TOP_LEVEL {
+            assert!(
+                a.phase_ns[p.index()] > 0 || matches!(p, Phase::QosQueue),
+                "req {} missing top-level phase {}",
+                a.req,
+                p.as_str()
+            );
+        }
+        let gap = (sum as f64 - e2e as f64).abs() / e2e as f64;
+        assert!(
+            gap <= 0.05,
+            "req {}: phase sum {sum} ns vs e2e {e2e} ns diverges {:.1}%",
+            a.req,
+            gap * 100.0
+        );
+    }
+    // Span ordering within a request: phases close in pipeline order.
+    let order = [
+        Phase::AdmissionQueue,
+        Phase::QosQueue,
+        Phase::RouterDispatch,
+        Phase::Prefill,
+        Phase::Decode,
+    ];
+    for a in &attrs {
+        let mut ends: Vec<(usize, u64)> = Vec::new();
+        for s in stats.trace.spans().filter(|s| s.req == a.req) {
+            if let Some(pos) = order.iter().position(|p| *p == s.phase) {
+                ends.push((pos, s.end_ns));
+            }
+        }
+        ends.sort();
+        for w in ends.windows(2) {
+            assert!(
+                w[0].1 <= w[1].1,
+                "req {}: phase {} ends after {}",
+                a.req,
+                order[w[0].0].as_str(),
+                order[w[1].0].as_str()
+            );
+        }
+    }
+    // The nested meters saw the same serving work the spans did.
+    assert!(stats.trace.phases.get(Phase::DecodeIter).0 > 0, "decode iterations metered");
+    assert!(stats.trace.phases.get(Phase::Prefill).0 > 0, "prefill groups metered");
+    assert!(stats.summary().contains("trace:"), "trace section surfaces in the summary");
+    // And the timeline binned completions for the same requests.
+    let done: u64 = stats.trace.timeline.windows.values().map(|w| w.done).sum();
+    assert_eq!(done as usize, prompts.len(), "timeline completions match served requests");
+}
+
+/// §L13: deterministic sampling — the sampled set is a pure function of
+/// prompt content and seed, so two identical runs trace the same
+/// requests (pinned via the prefill spans' prompt-length payloads), and
+/// a mid fraction traces a strict subset.
+#[test]
+fn trace_sampling_is_deterministic_across_runs() {
+    let run = || {
+        let server =
+            ServerHandle::spawn_engine(EngineSpec::Sim(traced_spec()), tropts(1, 4, 0.5));
+        // Distinct prompt lengths => distinct content hashes.
+        let responses = drive_concurrent(
+            &server,
+            &(0..24).map(|i| prompt(1 + i * 2)).collect::<Vec<_>>(),
+            2,
+        );
+        assert!(responses.iter().all(|r| r.failure.is_none()));
+        let stats = server.shutdown().unwrap();
+        let mut traced: Vec<i64> = stats
+            .trace
+            .spans()
+            .filter(|s| s.phase == Phase::Prefill && s.req != 0)
+            .map(|s| s.value)
+            .collect();
+        traced.sort_unstable();
+        traced
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same workload + seed must sample the same request set");
+    assert!(!a.is_empty(), "sample 0.5 over 24 distinct prompts traces some");
+    assert!(a.len() < 24, "...but not all");
+}
+
+/// §L13: a ring past capacity drops the *oldest* spans and says so —
+/// `dropped_spans` surfaces through the stats merge instead of lying
+/// by omission.
+#[test]
+fn trace_ring_overflow_drops_oldest_and_surfaces_count() {
+    let options = ServerOptions { trace_ring: 8, ..tropts(1, 4, 1.0) };
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(traced_spec()), options);
+    let responses =
+        drive_concurrent(&server, &(0..24).map(|i| prompt(1 + i * 2)).collect::<Vec<_>>(), 2);
+    assert!(responses.iter().all(|r| r.failure.is_none()));
+    let stats = server.shutdown().unwrap();
+    assert!(
+        stats.trace.dropped_spans > 0,
+        "24 requests x >=4 spans each cannot fit 8-deep rings silently"
+    );
+    // What remains is the newest tail: every retained worker span ends
+    // no earlier than the oldest drop horizon — cheap proxy: retained
+    // count respects the per-collector cap (router ring + one ring per
+    // replica incarnation).
+    assert!(stats.trace.span_count() <= 8 * 2, "retention bounded by the ring caps");
+    let max_end = stats.trace.spans().map(|s| s.end_ns).max().unwrap();
+    assert!(
+        stats.trace.spans().any(|s| s.end_ns == max_end),
+        "the newest span survives an overflow"
+    );
+}
+
+/// §L13 satellite: the §L10 overload ladder leaves timestamped trace
+/// events — a burst well past capacity escalates at least one rung,
+/// and sustained calm walks it back to level 0 before shutdown.
+#[test]
+fn overload_ladder_escalations_leave_trace_events_and_calm_returns_to_zero() {
+    let mut spec = sim_spec();
+    // Slow enough that a 60-request burst sustains queue depth far past
+    // 2x the slot hint for the 300 ms escalation hold.
+    spec.dstep_ns = 4_000_000;
+    let tenants = parse_tenant_spec("free:0:1:0:0:0;gold:2:4:0:0:0");
+    let options = ServerOptions { tenants, ..tropts(1, 2, 1.0) };
+    let server = ServerHandle::spawn_engine(EngineSpec::Sim(spec), options);
+
+    let mut rxs = Vec::new();
+    for i in 0..60 {
+        let (tx, rx) = std::sync::mpsc::channel();
+        server.sender.send(Request::for_tenant(prompt(1 + (i % 40)), tx, i % 2, 0)).unwrap();
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        let _ = rx.recv().expect("terminal response");
+    }
+    // Calm: hold the server idle past the 500 ms de-escalation window
+    // (ladder moves one rung per window — allow a few).
+    std::thread::sleep(Duration::from_millis(1800));
+    let stats = server.shutdown().unwrap();
+
+    let ladder: Vec<(u64, i64)> = stats
+        .trace
+        .spans()
+        .filter(|s| s.phase == Phase::LadderLevel)
+        .map(|s| (s.start_ns, s.value))
+        .collect();
+    assert!(!ladder.is_empty(), "the burst must move the ladder");
+    let peak = ladder.iter().map(|(_, l)| *l).max().unwrap();
+    assert!(peak >= 1, "burst escalates at least one rung (peak {peak})");
+    let last = ladder.iter().max_by_key(|(at, _)| *at).unwrap();
+    assert_eq!(last.1, 0, "calm de-escalates back to level 0 (events: {ladder:?})");
+    // Every transition is timestamped and the sequence moves one rung
+    // at a time in event order.
+    let mut seq = ladder.clone();
+    seq.sort();
+    let mut prev = 0i64;
+    for (_, l) in &seq {
+        assert_eq!((l - prev).abs(), 1, "ladder moves one rung per event: {seq:?}");
+        prev = *l;
+    }
 }
